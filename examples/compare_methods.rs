@@ -1,0 +1,68 @@
+//! Side-by-side comparison of vanilla / DualCache / ES-dLLM (+PD, +Sparse)
+//! on one benchmark — a small interactive version of the paper's Table 1.
+//!
+//! Run: `cargo run --release --example compare_methods -- \
+//!        [--bench arith] [--n 16] [--arch llada-nano]`
+
+use esdllm::bench::Table;
+use esdllm::cli::Args;
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::flops;
+use esdllm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let arch = args.str("arch", "llada-nano");
+    let n = args.usize("n", 16);
+    let bench: &'static str = match args.str("bench", "arith").as_str() {
+        "chain" => "chain",
+        "logic" => "logic",
+        "codegen" => "codegen",
+        "listops" => "listops",
+        _ => "arith",
+    };
+
+    let rt = Runtime::load_default()?;
+    let dims = rt.arch(&arch)?.dims.clone();
+
+    let mut table = Table::new(
+        &format!("compare_methods: {arch} / {bench} / {n} samples"),
+        &["Method", "TPS", "Speedup", "Score", "iters (p/d/e)", "run GFLOPs"],
+    );
+
+    let cells: Vec<(Method, EvalOpts)> = vec![
+        (Method::Vanilla, EvalOpts::default()),
+        (Method::DualCache, EvalOpts::default()),
+        (Method::EsDllm, EvalOpts::default()),
+        (
+            Method::EsDllm,
+            EvalOpts { parallel_threshold: Some(0.9), ..Default::default() },
+        ),
+        (Method::EsDllm, EvalOpts { sparse: true, ..Default::default() }),
+    ];
+
+    let mut baseline_tps = None;
+    for (method, opts) in cells {
+        let r = evaluate(&rt, &arch, method, bench, n, &opts)?;
+        let base = *baseline_tps.get_or_insert(r.tps);
+        let block = esdllm::eval::bench_cfg(bench).block;
+        let skip = [(1usize, 0.5f64), (2, 0.5)];
+        let gflops = flops::run_flops(
+            &dims, block,
+            if method == Method::EsDllm { &skip } else { &[] },
+            r.n_prefill, r.n_dual, r.n_es,
+        ) / 1e9;
+        table.row(&[
+            r.method.clone(),
+            format!("{:.2}", r.tps),
+            format!("{:.2}x", r.tps / base),
+            format!("{:.1}%", r.score),
+            format!("{} ({}/{}/{})", r.iterations, r.n_prefill, r.n_dual, r.n_es),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

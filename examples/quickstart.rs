@@ -1,0 +1,50 @@
+//! Quickstart: load the artifacts, generate a few completions with each
+//! method, print the outputs and timing.
+//!
+//! Run: `cargo run --release --example quickstart -- [--arch llada-nano]`
+
+use esdllm::cli::Args;
+use esdllm::engine::{Engine, EngineCfg, Method};
+use esdllm::runtime::Runtime;
+use esdllm::workload;
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let arch = args.str("arch", "llada-nano");
+    let rt = Runtime::load_default()?;
+
+    let items = workload::eval_set("arith", 4);
+    let prompts: Vec<String> = items.iter().map(|i| i.prompt.clone()).collect();
+    println!("prompts:");
+    for it in &items {
+        println!("  {:>28}  (expected {})", it.prompt, it.answer);
+    }
+
+    for method in [Method::Vanilla, Method::DualCache, Method::EsDllm] {
+        let cfg = EngineCfg::new(&arch, method);
+        let mut engine = Engine::new(&rt, cfg);
+        let res = engine.generate(&prompts)?;
+        let correct = items
+            .iter()
+            .zip(&res.texts)
+            .filter(|(it, txt)| workload::score(&it.answer, txt))
+            .count();
+        println!(
+            "\n[{:9}] {} iters ({}p/{}d/{}e) in {:.2}s — {:.1} tok/s — {}/{} correct",
+            method.label(),
+            res.iterations,
+            res.n_prefill,
+            res.n_dual,
+            res.n_es,
+            res.wall_s,
+            res.tokens_generated as f64 / res.wall_s,
+            correct,
+            items.len(),
+        );
+        for (it, txt) in items.iter().zip(&res.texts) {
+            println!("  {:>28} -> {}", it.prompt, txt);
+        }
+    }
+    Ok(())
+}

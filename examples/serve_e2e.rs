@@ -1,0 +1,131 @@
+//! End-to-end serving driver (the required full-system validation run):
+//! starts the router + HTTP server in-process, replays a Poisson request
+//! trace over real HTTP connections, and reports latency percentiles and
+//! throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example serve_e2e -- \
+//!        [--n 64] [--rate 4] [--clients 8] [--method es]`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use esdllm::batcher::BatcherCfg;
+use esdllm::cli::Args;
+use esdllm::engine::{EngineCfg, Method};
+use esdllm::httpd::Client;
+use esdllm::json::{self, Json};
+use esdllm::router::{Router, RouterCfg};
+use esdllm::runtime::default_artifacts_dir;
+use esdllm::server::{serve, ServeCfg};
+use esdllm::workload;
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let n = args.usize("n", 64);
+    let rate = args.f64("rate", 4.0);
+    let n_clients = args.usize("clients", 8);
+    let arch = args.str("arch", "llada-nano");
+    let method = match args.str("method", "es").as_str() {
+        "vanilla" => Method::Vanilla,
+        "dual" => Method::DualCache,
+        _ => Method::EsDllm,
+    };
+
+    println!("== serve_e2e: {arch} / {} / {} requests @ {rate}/s over {n_clients} clients ==",
+             method.label(), n);
+
+    let router = Router::start(RouterCfg {
+        engine: EngineCfg::new(&arch, method),
+        batcher: BatcherCfg { max_batch: 8, flush_ms: 30 },
+        queue_cap: 512,
+        workers: 1,
+        artifacts_dir: default_artifacts_dir(),
+    });
+    let server = serve(&ServeCfg::default(), router.clone())?;
+    let addr = server.addr;
+    println!("server on http://{addr}");
+
+    // build the trace, partitioned over client threads
+    let trace = workload::poisson_trace(rate, n, 0xC11E);
+    let trace = Arc::new(trace);
+    let t0 = std::time::Instant::now();
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(vec![]));
+    let correct = Arc::new(AtomicUsize::new(0));
+    let errors = Arc::new(AtomicUsize::new(0));
+
+    let threads: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let trace = trace.clone();
+            let latencies = latencies.clone();
+            let correct = correct.clone();
+            let errors = errors.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::new(addr);
+                for (i, req) in trace.iter().enumerate() {
+                    if i % n_clients != c {
+                        continue;
+                    }
+                    // open-loop arrivals: wait until the trace timestamp
+                    let now = t0.elapsed().as_secs_f64();
+                    if req.at_s > now {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            req.at_s - now,
+                        ));
+                    }
+                    let sent = std::time::Instant::now();
+                    let body = json::obj(vec![(
+                        "prompt",
+                        json::s(req.item.prompt.clone()),
+                    )])
+                    .to_string();
+                    match client.post("/generate", body.as_bytes()) {
+                        Ok((200, resp)) => {
+                            let lat = sent.elapsed().as_secs_f64();
+                            latencies.lock().unwrap().push(lat);
+                            let j = Json::parse(
+                                std::str::from_utf8(&resp).unwrap_or("{}"),
+                            )
+                            .unwrap_or(Json::Null);
+                            if let Some(text) = j.get("text").as_str() {
+                                if workload::score(&req.item.answer, text) {
+                                    correct.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lats = latencies.lock().unwrap().clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p).round() as usize];
+    let ok = lats.len();
+    let gen_len = 32;
+    println!("\n== results ==");
+    println!("completed      {ok}/{n} (errors {})", errors.load(Ordering::Relaxed));
+    println!("wall clock     {wall:.2}s");
+    println!("throughput     {:.2} req/s, {:.1} tok/s", ok as f64 / wall,
+             (ok * gen_len) as f64 / wall);
+    if ok > 0 {
+        println!("latency p50    {:.3}s", pct(0.5));
+        println!("latency p90    {:.3}s", pct(0.9));
+        println!("latency p99    {:.3}s", pct(0.99));
+    }
+    println!("exact match    {}/{ok}", correct.load(Ordering::Relaxed));
+    println!("\n== /metrics ==");
+    let mut c = Client::new(addr);
+    let (_, m) = c.get("/metrics")?;
+    println!("{}", String::from_utf8_lossy(&m));
+    router.shutdown();
+    Ok(())
+}

@@ -1,0 +1,282 @@
+"""AOT compilation: lower every executable variant to HLO text and write
+the artifact manifest the Rust runtime consumes.
+
+Run via `make artifacts` (after training has produced the checkpoints; the
+lowering itself is weight-free — parameters are runtime inputs in the
+canonical `modelcfg.param_specs` order).
+
+Artifact layout:
+
+    artifacts/
+      manifest.json            executable + parameter signatures
+      vocab.json               tokenizer table
+      weights-<arch>-<ckpt>.bin
+      <arch>/<exe>.hlo.txt     HLO text per executable variant
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import tasks
+from .modelcfg import (ARCHS, SKIP_CONFIGS, ModelCfg, cfg_to_json,
+                       final_keep, param_specs)
+from . import model as M
+from .xlc import lower_to_hlo_text
+
+CACHE_DT = "bf16"
+OBSERVE_PROBES = [2, 5, 7]   # paper layers 10/20/30 of 32 → nano 8-layer map
+SPARSE_KEEP_PROMPT = 24     # retention ratio 0.5 over the prompt region
+
+
+def sds(shape, dt):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def param_structs(cfg):
+    return [sds(shape, jnp.float32) for _, shape in param_specs(cfg)]
+
+
+def io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _dt(dtype):
+    return {
+        jnp.float32.dtype: "f32",
+        jnp.int32.dtype: "i32",
+        jnp.bfloat16.dtype: "bf16",
+    }[jnp.dtype(dtype)]
+
+
+class Builder:
+    def __init__(self, cfg: ModelCfg, out_dir: str, force: bool):
+        self.cfg = cfg
+        self.dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.force = force
+        self.executables = {}
+        self.params = param_structs(cfg)
+        self.param_io = [
+            io_entry(name, shape, "f32") for name, shape in param_specs(cfg)
+        ]
+
+    def lower(self, exe_name, fn, extra_args, meta):
+        """Lower fn(params..., *extra_args) and record the manifest entry."""
+        cfg = self.cfg
+        path = os.path.join(self.dir, f"{exe_name}.hlo.txt")
+        rel = os.path.join(cfg.name, f"{exe_name}.hlo.txt")
+
+        def wrapper(*flat):
+            params = M.params_from_flat(cfg, flat[: len(self.params)])
+            return fn(params, *flat[len(self.params):])
+
+        t0 = time.time()
+        if self.force or not os.path.exists(path):
+            text = lower_to_hlo_text(wrapper, *self.params, *extra_args)
+            with open(path, "w") as f:
+                f.write(text)
+            status = f"lowered in {time.time() - t0:.1f}s ({len(text)} chars)"
+        else:
+            status = "cached"
+
+        # record output signature by abstract evaluation
+        out = jax.eval_shape(wrapper, *self.params, *extra_args)
+        outputs = [
+            io_entry(f"out{i}", o.shape, _dt(o.dtype))
+            for i, o in enumerate(jax.tree.leaves(out))
+        ]
+        inputs = list(self.param_io) + [
+            io_entry(n, a.shape, _dt(a.dtype))
+            for n, a in zip(meta["input_names"], extra_args)
+        ]
+        entry = dict(meta)
+        entry.pop("input_names")
+        entry.update({"file": rel, "inputs": inputs, "outputs": outputs})
+        self.executables[exe_name] = entry
+        print(f"  [{cfg.name}] {exe_name}: {status}", flush=True)
+
+
+def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
+    b = Builder(cfg, out_dir, force)
+    ctx, gen, blk_cfgs = cfg.ctx, cfg.gen_len, (8, 32)
+    L, Hkv, hd, d, V = (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim,
+                        cfg.d_model, cfg.vocab)
+
+    def kv_s(batch, t):
+        return sds((L, 2, batch, Hkv, t, hd), jnp.bfloat16)
+
+    def ind_s(batch, n_ind):
+        return sds((n_ind, batch, gen, d), jnp.bfloat16)
+
+    # ---- prefill (vanilla step / cache init / every refresh) ----
+    for batch in (1, 8):
+        b.lower(
+            f"prefill_b{batch}",
+            functools.partial(M.prefill, cfg),
+            [sds((batch, ctx), jnp.int32)],
+            {
+                "kind": "prefill", "batch": batch, "block": None,
+                "skip": [], "indicator": None, "kv_len": ctx,
+                "input_names": ["tokens"],
+                "output_names": ["logits", "kv", "ind_h", "ind_q",
+                                 "ind_k", "ind_v", "attn_mass"],
+            },
+        )
+
+    # ---- vanilla step: full forward, logits only (the baseline never
+    # reads caches, so don't make it pay for cache downloads) ----
+    def vanilla_fn(params, tokens):
+        logits, _, _, _ = M.prefill(cfg, params, tokens)
+        return (logits,)
+
+    for batch in (1, 8):
+        b.lower(
+            f"vanilla_b{batch}",
+            vanilla_fn,
+            [sds((batch, ctx), jnp.int32)],
+            {
+                "kind": "prefill", "batch": batch, "block": None,
+                "skip": [], "indicator": None, "kv_len": ctx,
+                "input_names": ["tokens"],
+                "output_names": ["logits"],
+            },
+        )
+
+    # ---- observation forward (figures) ----
+    b.lower(
+        "observe_b8",
+        functools.partial(M.observe, cfg, probe_layers=OBSERVE_PROBES),
+        [sds((8, ctx), jnp.int32)],
+        {
+            "kind": "observe", "batch": 8, "block": None, "skip": [],
+            "indicator": None, "kv_len": ctx, "probe_layers": OBSERVE_PROBES,
+            "input_names": ["tokens"],
+            "output_names": ["logits", "probes"],
+        },
+    )
+
+    # ---- decode steps ----
+    def step_variant(name, batch, block, skip, indicator, kv_len,
+                     ind_layers=None):
+        skip_layers = sorted(l for l, _ in skip)
+        # DualCache/refresh variants (skip=[]) maintain the indicator cache
+        # for ALL layers so any ES config sees fresh indicators after a
+        # block refresh; ES variants maintain only their own skip layers.
+        if ind_layers is None:
+            ind_layers = skip_layers if skip else list(range(cfg.n_layers))
+        n_ind = max(1, len(ind_layers))
+        fn = functools.partial(
+            M.step, cfg, block=block, skip=skip,
+            indicator=indicator or "h", ind_layers=ind_layers, kv_len=kv_len)
+        b.lower(
+            name, fn,
+            [
+                sds((batch, block), jnp.int32),        # x_tok
+                sds((), jnp.int32),                    # block_start
+                kv_s(batch, kv_len),                   # kv cache
+                ind_s(batch, n_ind),                   # indicator cache
+                sds((batch, gen), jnp.float32),        # conf
+                sds((), jnp.float32),                  # alpha
+            ],
+            {
+                "kind": "step", "batch": batch, "block": block,
+                "skip": [[l, r] for l, r in skip],
+                "skip_layers": skip_layers,
+                "ind_layers": ind_layers,
+                "final_keep": final_keep(block, skip),
+                "indicator": indicator or "h", "kv_len": kv_len,
+                "input_names": ["x_tok", "block_start", "kv", "ind",
+                                "conf", "alpha"],
+                "output_names": ["logits", "pos", "kv_block", "ind_block"],
+            },
+        )
+
+    default_skip = SKIP_CONFIGS["default"]
+    sparse_len = SPARSE_KEEP_PROMPT + gen
+
+    # DualCache baseline + ES default, dense
+    for blk in blk_cfgs:
+        for batch in ((1, 8) if blk == 8 else (8,)):
+            step_variant(f"dual_blk{blk}_b{batch}", batch, blk, [], None, ctx)
+            step_variant(f"es_blk{blk}_b{batch}", batch, blk,
+                         default_skip, "h", ctx)
+
+    # sparse-attention variants (pruned prompt KV)
+    for blk in blk_cfgs:
+        step_variant(f"dual_sp_blk{blk}_b8", 8, blk, [], None, sparse_len)
+        step_variant(f"es_sp_blk{blk}_b8", 8, blk, default_skip, "h",
+                     sparse_len)
+
+    if full:
+        # skip ratio / position ablations (Tables 9 & 10) — llada only
+        for name in ("r2_only_25", "r2_only_50", "r2_only_75", "r0_only_50",
+                     "r1_only_50", "r4_only_50", "r1_only_70", "triple_405"):
+            step_variant(f"es_{name}_blk32_b8", 8, 32,
+                         SKIP_CONFIGS[name], "h", ctx)
+        for name in ("r1_only_70", "triple_405"):
+            step_variant(f"es_{name}_blk8_b8", 8, 8,
+                         SKIP_CONFIGS[name], "h", ctx)
+        # variation-indicator ablation (Figure 4b): ES variants plus the
+        # matching block-refresh (dual) variants keeping that indicator's
+        # cache fresh
+        for ind in ("q", "k", "v"):
+            step_variant(f"es_ind_{ind}_blk8_b8", 8, 8,
+                         default_skip, ind, ctx)
+            step_variant(f"dual_ind_{ind}_blk8_b8", 8, 8, [], ind, ctx)
+
+    return {
+        "dims": cfg_to_json(cfg),
+        "checkpoints": {
+            ck: f"weights-{cfg.name}-{ck}.bin" for ck in ("instruct", "base")
+        },
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in param_specs(cfg)
+        ],
+        "executables": b.executables,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--arch", choices=list(ARCHS) + ["all"], default="all")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    tasks.write_vocab_json(os.path.join(args.out, "vocab.json"))
+
+    manifest = {
+        "version": 1,
+        "generation": {
+            "prompt_len": 48, "gen_len": 32, "ctx": 80,
+            "vocab": tasks.VOCAB,
+            "pad": tasks.PAD, "mask": tasks.MASK,
+            "eos": tasks.EOS, "bos": tasks.BOS,
+            "sparse_keep_prompt": SPARSE_KEEP_PROMPT,
+            "observe_probe_layers": OBSERVE_PROBES,
+        },
+        "archs": {},
+    }
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    for name in archs:
+        cfg = ARCHS[name]
+        # the ablation grid only exists for the llada arch (paper §6.3)
+        manifest["archs"][name] = build_arch(
+            cfg, args.out, args.force, full=(name == "llada-nano"))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with "
+          f"{sum(len(a['executables']) for a in manifest['archs'].values())} "
+          f"executables", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Layer-1 Pallas kernel: cached-KV block attention with online softmax.
+
+This is the compute hot-spot of every decode iteration: the (possibly
+early-skipped) active query set attends to the *full* cached K/V of the
+sequence (Algorithm 1, line 5).
+
+Hardware adaptation (paper targets an H200; see DESIGN.md §7): the CUDA
+implementation's threadblock-per-(batch,head) tiling with shared-memory
+staging becomes a Pallas grid over (batch·head, kv-tiles) whose BlockSpecs
+express the HBM→VMEM schedule.  The softmax is computed online
+(flash-style running max/denominator in the revisited output blocks) so
+VMEM holds O(S·hd + T_tile·hd) instead of O(T·hd):
+
+    grid = (B·Hq, ceil(T / kv_tile))
+    per step VMEM:  q    [S, hd]        (revisited, read-only)
+                    k,v  [kv_tile, hd]  (streamed)
+                    acc  [S, hd] + m,l [S]  (revisited accumulators)
+
+GQA is handled in the *index map* — query head h reads kv head
+h // group — so grouped K/V are never materialized.
+
+`interpret=True` is mandatory here: real-TPU lowering emits a Mosaic
+custom-call which the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO that runs everywhere (numerics are identical).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_KV_TILE = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale,
+                 kv_tiles, group):
+    """One grid step: fold one KV tile into the online-softmax state, for
+    ALL (batch, head) rows at once.
+
+    §Perf iteration 1 (see EXPERIMENTS.md): the first kernel used
+    grid=(B·Hq, kv_tiles) — the direct analog of CUDA's
+    threadblock-per-(batch,head). Interpret-mode lowering serializes grid
+    steps into an HLO while loop whose per-step overhead dominated at
+    B·H=64 (≈0.4 ms/step ⇒ ~50 ms/layer-stack). The grid is now only the
+    *streaming* dimension (KV tiles — the HBM→VMEM schedule, which is the
+    paper-relevant part) and the batch/head dimension became a batched dot
+    inside the block; on a real TPU this corresponds to assigning whole
+    q-row batches to one core's MXU queue.
+
+    Block shapes:
+      q_ref [BHq, S, hd]        — revisited for every kv tile
+      k_ref/v_ref [BHkv, T_t, hd] — the streamed tile
+      o_ref [BHq, S, hd], m_ref/l_ref [BHq, S] — accumulators (same block
+        across all kv tiles, so values persist between grid steps)
+    """
+    t = pl.program_id(0)
+
+    q = q_ref[...]                    # [BHq, S, hd]
+    k = k_ref[...]                    # [BHkv, T_t, hd]
+    v = v_ref[...]
+    if group > 1:                     # GQA: expand kv heads to q heads
+        bhkv, tt, hd = k.shape
+        # [B·Hkv, T, hd] -> [B·Hkv, group, T, hd] -> [B·Hq, T, hd]
+        k = jnp.repeat(k.reshape(bhkv, 1, tt, hd), group, axis=1)
+        k = k.reshape(bhkv * group, tt, hd)
+        v = jnp.repeat(v.reshape(bhkv, 1, tt, hd), group, axis=1)
+        v = v.reshape(bhkv * group, tt, hd)
+
+    s = jnp.einsum("bsd,btd->bst", q, k) * scale   # [BHq, S, T_t]
+    m_tile = jnp.max(s, axis=-1)                   # [BHq, S]
+
+    @pl.when(t == 0)
+    def _init():
+        p = jnp.exp(s - m_tile[..., None])
+        m_ref[...] = m_tile
+        l_ref[...] = jnp.sum(p, axis=-1)
+        o_ref[...] = jnp.einsum("bst,btd->bsd", p, v)
+
+    @pl.when(t > 0)
+    def _fold():
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, m_tile)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        o_ref[...] = o_ref[...] * corr[..., None] + jnp.einsum(
+            "bst,btd->bsd", p, v)
+
+    @pl.when(t == kv_tiles - 1)
+    def _finalize():
+        o_ref[...] = o_ref[...] / l_ref[...][..., None]
+
+
+def attention(q, k, v, *, kv_tile=DEFAULT_KV_TILE, interpret=True):
+    """Cached-KV attention via the Pallas kernel.
+
+    q: [B, Hq, S, hd]; k, v: [B, Hkv, T, hd] -> [B, Hq, S, hd]
+    """
+    b, hq, s, hd = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    # largest divisor of t not exceeding the requested tile, so any cache
+    # length (80 dense, 56 pruned, ...) tiles cleanly
+    kv_tile = min(kv_tile, t)
+    while t % kv_tile != 0:
+        kv_tile -= 1
+    kv_tiles = t // kv_tile
+    scale = 1.0 / (hd**0.5)
+
+    # GQA note: kv heads are repeated inside the kernel body; the reshape
+    # here keeps the batch dim adjacent to heads so the in-kernel repeat
+    # aligns query row b*Hq+h with kv row b*Hkv+h//group.
+    qf = q.reshape(b * hq, s, hd)
+    kf = k.reshape(b * hkv, t, hd)
+    vf = v.reshape(b * hkv, t, hd)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, kv_tiles=kv_tiles, group=group)
+    out, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(kv_tiles,),
+        in_specs=[
+            pl.BlockSpec((b * hq, s, hd), lambda tt: (0, 0, 0)),
+            pl.BlockSpec((b * hkv, kv_tile, hd), lambda tt: (0, tt, 0)),
+            pl.BlockSpec((b * hkv, kv_tile, hd), lambda tt: (0, tt, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b * hq, s, hd), lambda tt: (0, 0, 0)),
+            pl.BlockSpec((b * hq, s), lambda tt: (0, 0)),
+            pl.BlockSpec((b * hq, s), lambda tt: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hq, s, hd), q.dtype),
+            jax.ShapeDtypeStruct((b * hq, s), q.dtype),
+            jax.ShapeDtypeStruct((b * hq, s), q.dtype),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, hd)
+
+
+def vmem_bytes(s, hd, kv_tile, dtype_bytes=2):
+    """Estimated VMEM residency per grid step (for §Perf reporting):
+    q + acc [S, hd] ×2, k + v [kv_tile, hd] ×2, m + l [S] ×2."""
+    return dtype_bytes * (2 * s * hd + 2 * kv_tile * hd + 2 * s)

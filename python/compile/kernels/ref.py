@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness signal used by
+pytest and by training, which needs differentiable ops)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Bidirectional cached-KV attention.
+
+    q: [B, Hq, S, hd]  (S = active query set, e.g. a block or subset)
+    k: [B, Hkv, T, hd] (T = full cached context)
+    v: [B, Hkv, T, hd]
+    returns [B, Hq, S, hd]
+
+    GQA: query head h attends to kv head h // (Hq // Hkv).
+    """
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s_qk = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    p = jax.nn.softmax(s_qk, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+
+def varnorm_ref(h, h_prev, eps=1e-6):
+    """Normalized L1 variation (Eq. 1, second term).
+
+    h, h_prev: [..., d] -> [...]:
+        ||h - h_prev||_1 / (sqrt(d) * ||h_prev||_2)
+    """
+    d = h.shape[-1]
+    l1 = jnp.sum(jnp.abs(h - h_prev), axis=-1)
+    l2 = jnp.sqrt(jnp.sum(h_prev * h_prev, axis=-1))
+    return l1 / (jnp.sqrt(jnp.asarray(d, h.dtype)) * l2 + eps)

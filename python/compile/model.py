@@ -1,0 +1,427 @@
+"""Layer-2 JAX model: masked-diffusion transformer forward functions.
+
+Implements the paper's inference procedures as pure, AOT-lowerable
+functions over an explicit parameter list + explicit caches:
+
+  * ``prefill``        — full forward over all ctx positions; initializes
+                         KV caches, indicator caches (hidden/Q/K/V at the
+                         skip layers) and the sparse-attention mass (also
+                         serves as the *vanilla* per-iteration step and as
+                         the prompt-refresh pass).
+  * ``step``           — one decode iteration over the current block with
+                         optional early-skipping (Algorithm 1): QKV for the
+                         active set, scatter partial KV update, attention
+                         against full cached KV (Pallas kernel), FFN,
+                         importance score I = α·conf + (1−α)·varnorm at the
+                         skip layers, argsort-top-k selection, partial
+                         indicator-cache update.  skip=[] gives the
+                         DualCache baseline step.
+  * ``observe``        — full forward that additionally returns hidden and
+                         Q/K/V states at probe layers (Figures 1/2/5–8).
+
+Cache-interchange convention (performance-critical, see DESIGN.md):
+caches cross the Rust↔executable boundary in **bf16** and are upcast to
+f32 in-graph; the step returns only the *block slice* of the updated KV so
+per-iteration downloads stay small.  All shapes are static; top-k is
+argsort-based because xla_extension 0.5.1 cannot parse the `topk` HLO op.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .modelcfg import ModelCfg, param_specs
+from .kernels.attention import attention
+from .kernels.varnorm import varnorm
+from .kernels.ref import attention_ref, varnorm_ref
+
+CACHE_DT = jnp.bfloat16
+
+INDICATORS = ("h", "q", "k", "v")
+
+
+class Layer(NamedTuple):
+    attn_norm: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ffn_norm: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    layers: tuple  # tuple[Layer]
+    out_norm: jax.Array
+    head: jax.Array
+
+
+def params_from_flat(cfg: ModelCfg, flat):
+    """Rebuild the Params pytree from the canonical flat ordering
+    (see modelcfg.param_specs)."""
+    assert len(flat) == len(param_specs(cfg))
+    it = iter(flat)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(Layer(*(next(it) for _ in range(9))))
+    out_norm = next(it)
+    head = next(it)
+    return Params(embed, tuple(layers), out_norm, head)
+
+
+def params_to_flat(p: Params):
+    flat = [p.embed]
+    for l in p.layers:
+        flat.extend(l)
+    flat += [p.out_norm, p.head]
+    return flat
+
+
+def init_params(cfg: ModelCfg, key):
+    flat = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            flat.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = fan_in**-0.5
+            flat.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params_from_flat(cfg, flat)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope(x, pos, base):
+    """x: [B, S, H, hd]; pos: [B, S] int32 absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]                     # [B, S, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def swiglu(x, l: Layer):
+    return (jax.nn.silu(x @ l.w_gate) * (x @ l.w_up)) @ l.w_down
+
+
+def _qkv(cfg: ModelCfg, l: Layer, xn, pos):
+    """Project + RoPE. Returns q [B,S,Hq,hd], k/v [B,S,Hkv,hd]."""
+    b, s, _ = xn.shape
+    hd = cfg.head_dim
+    q = (xn @ l.wq).reshape(b, s, cfg.n_heads, hd)
+    k = (xn @ l.wk).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (xn @ l.wv).reshape(b, s, cfg.n_kv_heads, hd)
+    q = rope(q, pos, cfg.rope_base)
+    k = rope(k, pos, cfg.rope_base)
+    return q, k, v
+
+
+def argsort_topk(scores, k):
+    """Top-k indices by score, descending, stable. argsort-based: lowers
+    to an HLO `sort`, which xla_extension 0.5.1 parses ( `topk` is not)."""
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    return order[..., :k]
+
+
+def _scatter_rows(cache, idx, rows):
+    """cache [B, N, ...], idx [B, S], rows [B, S, ...] -> per-batch scatter."""
+    return jax.vmap(lambda c, i, r: c.at[i].set(r))(cache, idx, rows)
+
+
+def _gather_rows(cache, idx):
+    return jax.vmap(lambda c, i: c[i])(cache, idx)
+
+
+# ---------------------------------------------------------------------------
+# prefill / vanilla forward
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelCfg, params: Params, tokens, *, skip_layers=None,
+            use_pallas=True, kv_tile=64):
+    """Full forward over [B, ctx] tokens.
+
+    Serves as cache initialization, the *vanilla* per-iteration step, and
+    every refresh pass (prompt and block refreshes recompute the full
+    sequence — see DESIGN.md §4).
+
+    Returns (logits, kv_cache, ind_caches, attn_mass):
+      logits     f32 [B, ctx, V]
+      kv_cache   bf16 [L, 2, B, Hkv, ctx, hd]
+      ind_caches dict ind -> bf16 [n_layers', B, gen, d]  (gen region only;
+                 all layers by default so any skip config can slice)
+      attn_mass  f32 [B, ctx] — mean last-layer attention mass received by
+                 each position from gen-region queries (sparse selection).
+    """
+    if skip_layers is None:
+        skip_layers = list(range(cfg.n_layers))
+    b, ctx = tokens.shape
+    gen0 = cfg.prompt_len
+    attn = attention if use_pallas else attention_ref
+
+    x = params.embed[tokens]
+    pos = jnp.broadcast_to(jnp.arange(ctx, dtype=jnp.int32)[None], (b, ctx))
+    kv_all = []
+    ind = {i: [] for i in INDICATORS}
+    attn_mass = None
+    for li, l in enumerate(cfg_layers(cfg, params)):
+        xn = rmsnorm(x, l.attn_norm)
+        q, k, v = _qkv(cfg, l, xn, pos)
+        qh = q.transpose(0, 2, 1, 3)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        kv_all.append(jnp.stack([kh, vh]))        # [2, B, Hkv, ctx, hd]
+        if use_pallas:
+            o = attn(qh, kh, vh, kv_tile=kv_tile)
+        else:
+            o = attn(qh, kh, vh)
+        if li == cfg.n_layers - 1:
+            # attention mass for sparse-KV selection: probs of gen-region
+            # queries over all positions, averaged (ref path: cheap, once).
+            p = _attn_probs(cfg, qh[:, :, gen0:], kh)
+            attn_mass = jnp.mean(p, axis=(1, 2))  # [B, ctx]
+        o = o.transpose(0, 2, 1, 3).reshape(b, ctx, cfg.d_model)
+        x = x + o @ l.wo
+        h = x + swiglu(rmsnorm(x, l.ffn_norm), l)
+        if li in skip_layers:
+            ind["h"].append(h[:, gen0:])
+            ind["q"].append(q.reshape(b, ctx, -1)[:, gen0:])
+            ind["k"].append(_expand_kv(cfg, k).reshape(b, ctx, -1)[:, gen0:])
+            ind["v"].append(_expand_kv(cfg, v).reshape(b, ctx, -1)[:, gen0:])
+        x = h
+    logits = rmsnorm(x, params.out_norm) @ params.head
+    kv_cache = jnp.stack(kv_all).astype(CACHE_DT)
+    ind_caches = {
+        key: jnp.stack(vals).astype(CACHE_DT) for key, vals in ind.items()
+    }
+    return logits, kv_cache, ind_caches, attn_mass
+
+
+def _expand_kv(cfg, t):
+    """[B, S, Hkv, hd] -> [B, S, d] by repeating kv heads to Hq (so K/V
+    indicator tensors have the same [.., d] shape as hidden/Q)."""
+    group = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(t, group, axis=2)
+
+
+def _attn_probs(cfg, qh, kh):
+    """softmax probs [B, Hq, S, T] (ref path, used for attention mass)."""
+    group = cfg.n_heads // cfg.n_kv_heads
+    kfull = jnp.repeat(kh, group, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", qh, kfull) / (cfg.head_dim**0.5)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def cfg_layers(cfg, params):
+    return params.layers
+
+
+# ---------------------------------------------------------------------------
+# decode step (DualCache when skip=[], ES-dLLM otherwise — Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
+         ind_cache, conf, alpha, *, block, skip, indicator="h",
+         ind_layers=None, kv_len=None, use_pallas=True, kv_tile=64):
+    """One decode iteration over the current block.
+
+    x_tok       i32 [B, block]       current block tokens (incl. masks)
+    block_start i32 scalar           absolute position of the block start
+    kv_cache    bf16 [L, 2, B, Hkv, T, hd]   T = kv_len (ctx, or pruned)
+    ind_cache   bf16 [n_ind, B, gen, d]      indicator tensor cache
+    conf        f32 [B, gen]         confidence from previous iterations
+    alpha       f32 scalar           Eq. 1 mixing weight
+    skip        [(layer, ratio)]     static skip spec; [] = DualCache
+    ind_layers  layers whose indicator cache rows are maintained; defaults
+                to the skip layers. The DualCache/refresh variant passes
+                all layers (so any ES config sees fresh indicators after a
+                block refresh); skip layers must be a subset.
+    kv_len      cache length; when < ctx the cache is prompt-pruned
+                (sparse attention): retained prompt rows first, then the
+                full gen region, so cache row of absolute gen position p is
+                (kv_len - gen) + (p - prompt_len).
+
+    Returns (logits_sel f32 [B, k_final, V], pos_sel i32 [B, k_final],
+             kv_block bf16 [L, 2, B, Hkv, block, hd],
+             ind_block bf16 [n_ind, B, block, d]).
+    """
+    b = x_tok.shape[0]
+    gen0 = cfg.prompt_len
+    kv_len = kv_len or cfg.ctx
+    skip_map = dict(skip)
+    if ind_layers is None:
+        ind_layers = sorted(skip_map)
+    assert all(l in ind_layers for l in skip_map), (skip_map, ind_layers)
+    assert len(ind_layers) == ind_cache.shape[0] or not ind_layers
+    attn = attention if use_pallas else attention_ref
+    vnorm = varnorm if use_pallas else varnorm_ref
+
+    # cache row offset of the block inside the (possibly pruned) KV cache
+    cache_off = (kv_len - cfg.gen_len) - gen0 + block_start
+
+    x = params.embed[x_tok]                                  # [B, blk, d]
+    pos = block_start + jnp.arange(block, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos[None], (b, block))            # absolute
+    # index of each active row within the block (for slice-free scatters)
+    rel = jnp.broadcast_to(jnp.arange(block, dtype=jnp.int32)[None],
+                           (b, block))
+
+    # Performance note: the cache tensors are treated as read-only; per
+    # layer we materialize only that layer's updated K/V (one layer-sized
+    # scatter) and collect the *block slices* for the outputs. Functional
+    # whole-cache updates (kv.at[li].set) would make XLA copy the full
+    # multi-MB cache once per layer per iteration.
+    kv_blocks = []   # per layer: [2, B, Hkv, block, hd]
+    ind_blocks = []  # per ind layer: [B, block, d]
+    si = 0
+    for li, l in enumerate(params.layers):
+        s_act = x.shape[1]
+        xn = rmsnorm(x, l.attn_norm)
+        q, k, v = _qkv(cfg, l, xn, pos)
+        kh = k.transpose(0, 2, 1, 3)                         # [B,Hkv,s,hd]
+        vh = v.transpose(0, 2, 1, 3)
+
+        # partial KV update: scatter active rows into this layer's K/V
+        cache_idx = cache_off + rel
+        k_cache = kv_cache[li, 0].astype(jnp.float32)        # [B,Hkv,T,hd]
+        v_cache = kv_cache[li, 1].astype(jnp.float32)
+        k_l = _scatter_rows(k_cache.transpose(0, 2, 1, 3), cache_idx,
+                            kh.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+        v_l = _scatter_rows(v_cache.transpose(0, 2, 1, 3), cache_idx,
+                            vh.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+        kv_blocks.append(jnp.stack([
+            jax.lax.dynamic_slice_in_dim(k_l, cache_off, block, axis=2),
+            jax.lax.dynamic_slice_in_dim(v_l, cache_off, block, axis=2),
+        ]))
+
+        qh = q.transpose(0, 2, 1, 3)
+        if use_pallas:
+            o = attn(qh, k_l, v_l, kv_tile=min(kv_tile, kv_len))
+        else:
+            o = attn(qh, k_l, v_l)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s_act, cfg.d_model)
+        x = x + o @ l.wo
+        h = x + swiglu(rmsnorm(x, l.ffn_norm), l)
+
+        if li in ind_layers:
+            # indicator tensor for this layer
+            if indicator == "h":
+                t_now = h
+            elif indicator == "q":
+                t_now = q.reshape(b, s_act, -1)
+            elif indicator == "k":
+                t_now = _expand_kv(cfg, k).reshape(b, s_act, -1)
+            else:
+                t_now = _expand_kv(cfg, v).reshape(b, s_act, -1)
+
+            gen_idx = pos - gen0                              # rows in gen
+            ind_l = ind_cache[si].astype(jnp.float32)         # [B,gen,d]
+            t_prev = _gather_rows(ind_l, gen_idx)
+
+            # partial indicator-cache update for ALL active rows (line 8),
+            # materialized as the block slice only
+            blk_prev = jax.lax.dynamic_slice_in_dim(
+                ind_l, block_start - gen0, block, axis=1)
+            ind_blocks.append(_scatter_rows(blk_prev, rel, t_now))
+
+            if li in skip_map:
+                var = vnorm(t_now, t_prev)                    # [B, s_act]
+                c_prev = _gather_rows(conf[:, :, None], gen_idx)[..., 0]
+                imp = alpha * c_prev + (1.0 - alpha) * var    # Eq. 1
+
+                # early skip: keep top-(1-r)|S| rows (lines 13–14)
+                k_keep = max(1, int(round(s_act * (1.0 - skip_map[li]))))
+                sel = argsort_topk(imp, k_keep)               # [B, k_keep]
+                h = _gather_rows(h, sel)
+                pos = jnp.take_along_axis(pos, sel, axis=1)
+                rel = jnp.take_along_axis(rel, sel, axis=1)
+            si += 1
+        x = h
+
+    logits = rmsnorm(x, params.out_norm) @ params.head        # [B,k_f,V]
+
+    # outputs: block slices only (keeps the per-iteration download small)
+    kv_block = jnp.stack(kv_blocks)              # [L,2,B,Hkv,block,hd]
+    if ind_blocks:
+        ind_block = jnp.stack(ind_blocks)        # [n_ind,B,block,d]
+    else:
+        ind_block = jnp.zeros((1, b, block, cfg.d_model), jnp.float32)
+    return (logits, pos.astype(jnp.int32),
+            kv_block.astype(CACHE_DT), ind_block.astype(CACHE_DT))
+
+
+# ---------------------------------------------------------------------------
+# observation forward (Figures 1, 2, 5–8): full forward + probe tensors
+# ---------------------------------------------------------------------------
+
+
+def observe(cfg: ModelCfg, params: Params, tokens, *, probe_layers,
+            use_pallas=True):
+    """Full forward returning logits + per-probe-layer hidden/Q/K/V of the
+    gen region (f32 — these go to the analysis pipeline, not the cache)."""
+    b, ctx = tokens.shape
+    gen0 = cfg.prompt_len
+    attn = attention if use_pallas else attention_ref
+
+    x = params.embed[tokens]
+    pos = jnp.broadcast_to(jnp.arange(ctx, dtype=jnp.int32)[None], (b, ctx))
+    probes = []
+    for li, l in enumerate(params.layers):
+        xn = rmsnorm(x, l.attn_norm)
+        q, k, v = _qkv(cfg, l, xn, pos)
+        qh, kh, vh = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = attn(qh, kh, vh)
+        o = o.transpose(0, 2, 1, 3).reshape(b, ctx, cfg.d_model)
+        x = x + o @ l.wo
+        h = x + swiglu(rmsnorm(x, l.ffn_norm), l)
+        if li in probe_layers:
+            probes.append(jnp.stack([
+                h[:, gen0:],
+                q.reshape(b, ctx, -1)[:, gen0:],
+                _expand_kv(cfg, k).reshape(b, ctx, -1)[:, gen0:],
+                _expand_kv(cfg, v).reshape(b, ctx, -1)[:, gen0:],
+            ]))                                   # [4, B, gen, d]
+        x = h
+    logits = rmsnorm(x, params.out_norm) @ params.head
+    return logits, jnp.stack(probes)              # [n_probe, 4, B, gen, d]
+
+
+# ---------------------------------------------------------------------------
+# training forward (differentiable; ref kernels)
+# ---------------------------------------------------------------------------
+
+
+def train_logits(cfg: ModelCfg, params: Params, tokens):
+    """Differentiable full forward -> logits [B, ctx, V] (ref attention —
+    the Pallas interpret kernel has no registered VJP)."""
+    b, ctx = tokens.shape
+    x = params.embed[tokens]
+    pos = jnp.broadcast_to(jnp.arange(ctx, dtype=jnp.int32)[None], (b, ctx))
+    for l in params.layers:
+        xn = rmsnorm(x, l.attn_norm)
+        q, k, v = _qkv(cfg, l, xn, pos)
+        qh, kh, vh = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        o = attention_ref(qh, kh, vh)
+        o = o.transpose(0, 2, 1, 3).reshape(b, ctx, cfg.d_model)
+        x = x + o @ l.wo
+        x = x + swiglu(rmsnorm(x, l.ffn_norm), l)
+    return rmsnorm(x, params.out_norm) @ params.head

@@ -1,0 +1,122 @@
+"""Model / generation configuration shared by training, AOT lowering and
+(via the manifest) the Rust coordinator.
+
+Two nano-scale diffusion-LM architectures mirror the paper's two subjects:
+
+* ``llada-nano`` — MHA (like LLaDA-8B's 32-head attention), 8 layers so the
+  paper's skip positions r4/r8 (depth 1/8 and 1/4 of 32 layers) map to
+  r1/r2 here.
+* ``dream-nano``  — GQA with 2 KV heads (like Dream-7B), otherwise equal.
+
+Both are masked-diffusion transformers: RMSNorm, SwiGLU FFN, RoPE,
+bidirectional attention, trained with the LLaDA SFT objective (mask the
+answer region with a uniformly sampled ratio, CE on masked positions).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int = 64
+    d_model: int = 128
+    n_layers: int = 8
+    n_heads: int = 8
+    n_kv_heads: int = 8          # GQA when < n_heads
+    d_ff: int = 384              # SwiGLU hidden width
+    rope_base: float = 10000.0
+    prompt_len: int = 48
+    gen_len: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def ctx(self) -> int:
+        return self.prompt_len + self.gen_len
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+LLADA_NANO = ModelCfg(name="llada-nano", n_kv_heads=8)
+DREAM_NANO = ModelCfg(name="dream-nano", n_kv_heads=2)
+
+ARCHS = {c.name: c for c in (LLADA_NANO, DREAM_NANO)}
+
+# ---------------------------------------------------------------------------
+# Parameter inventory.  The order returned here is THE canonical order: the
+# flat argument order of every lowered executable, the record order in
+# weights-*.bin, and the order the Rust runtime feeds parameter buffers.
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelCfg):
+    """[(name, shape)] in canonical order."""
+    d, dkv, f, v = cfg.d_model, cfg.d_kv, cfg.d_ff, cfg.vocab
+    specs = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        specs += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, dkv)),
+            (p + "wv", (d, dkv)),
+            (p + "wo", (d, d)),
+            (p + "ffn_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    specs += [("out_norm", (d,)), ("head", (d, v))]
+    return specs
+
+
+def cfg_to_json(cfg: ModelCfg) -> dict:
+    j = asdict(cfg)
+    j["head_dim"] = cfg.head_dim
+    j["ctx"] = cfg.ctx
+    j["d_kv"] = cfg.d_kv
+    return j
+
+
+# ---------------------------------------------------------------------------
+# Skip configurations (paper §6.1, Appendix C.2).  Depth mapping 32→8 layers:
+# paper r0/r4/r8/r16 correspond to nano layers 0/1/2/4.
+# ---------------------------------------------------------------------------
+
+# name -> list of (layer_index, skip_ratio)
+SKIP_CONFIGS = {
+    "default": [(1, 0.5), (2, 0.5)],          # paper r4 = r8 = 0.5
+    "r2_only_75": [(2, 0.75)],
+    "r2_only_50": [(2, 0.5)],
+    "r2_only_25": [(2, 0.25)],
+    "r0_only_50": [(0, 0.5)],
+    "r1_only_50": [(1, 0.5)],
+    "r4_only_50": [(4, 0.5)],
+    "r1_only_70": [(1, 0.7)],                 # table 10: single skip, iso-FLOPs
+    "triple_405": [(1, 0.405), (2, 0.405), (3, 0.405)],
+}
+
+
+def keep_sizes(block: int, skips):
+    """Active-set size entering each layer given a skip spec."""
+    sizes = []
+    s = block
+    spec = dict(skips)
+    for layer in range(64):
+        sizes.append(s)
+        if layer in spec:
+            s = max(1, int(round(s * (1.0 - spec[layer]))))
+    return sizes
+
+
+def final_keep(block: int, skips) -> int:
+    s = block
+    for _, r in sorted(skips):
+        s = max(1, int(round(s * (1.0 - r))))
+    return s

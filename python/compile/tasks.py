@@ -1,0 +1,224 @@
+"""Synthetic benchmark task families + the character tokenizer.
+
+These stand in for the paper's five evaluation suites (see DESIGN.md §1):
+
+    arith    ~ GSM8K      few-shot multi-digit arithmetic
+    chain    ~ MATH       nested bracketed expression evaluation
+    logic    ~ BBH        boolean expression evaluation
+    codegen  ~ HumanEval  apply a stated function rule to a new input
+    listops  ~ MBPP       sort / reverse / max over digit lists
+
+Every sample is (prompt, answer); quality is exact match on the answer
+span, so generation degradation from over-aggressive skipping is directly
+measurable.  The same generators are re-implemented in Rust
+(`rust/src/workload/`) with the same PRNG so both sides agree; *this* file
+is only used at build time (training corpus + vocab artifact).
+"""
+
+import json
+
+# ---------------------------------------------------------------------------
+# Tokenizer: fixed char-level vocabulary. Order is frozen — the Rust
+# tokenizer loads vocab.json and must agree with training.
+# ---------------------------------------------------------------------------
+
+PAD, MASK, EOS, BOS = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<mask>", "<eos>", "<bos>"]
+CHARS = (
+    [str(i) for i in range(10)]
+    + [chr(c) for c in range(ord("a"), ord("z") + 1)]
+    + list("+-*/=()[],.:?><|&! ")
+)
+TOKENS = SPECIALS + CHARS
+assert len(TOKENS) <= 64, len(TOKENS)
+VOCAB = 64  # padded with unused slots to a power of two
+
+_STOI = {s: i for i, s in enumerate(TOKENS)}
+
+
+def encode(s: str):
+    return [_STOI[c] for c in s]
+
+
+def decode(ids):
+    out = []
+    for i in ids:
+        if i == EOS:
+            break
+        if i < len(TOKENS) and i >= len(SPECIALS):
+            out.append(TOKENS[i])
+    return "".join(out)
+
+
+def write_vocab_json(path):
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "tokens": TOKENS,
+                "vocab_size": VOCAB,
+                "pad": PAD,
+                "mask": MASK,
+                "eos": EOS,
+                "bos": BOS,
+            },
+            f,
+            indent=1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# splitmix64 — identical generator on the Rust side, so the eval sets match.
+# ---------------------------------------------------------------------------
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix:
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next64() % n
+
+    def range(self, lo: int, hi: int) -> int:  # inclusive
+        return lo + self.below(hi - lo + 1)
+
+
+# ---------------------------------------------------------------------------
+# Task families
+# ---------------------------------------------------------------------------
+
+
+def _arith_pair(rng):
+    a, b = rng.range(1, 99), rng.range(1, 99)
+    if rng.below(3) == 0 and a >= b:
+        return f"{a}-{b}=", str(a - b)
+    if rng.below(4) == 0:
+        a, b = rng.range(2, 9), rng.range(2, 9)
+        return f"{a}*{b}=", str(a * b)
+    return f"{a}+{b}=", str(a + b)
+
+
+def gen_arith(rng):
+    """Few-shot arithmetic: two solved examples, one open."""
+    shots = []
+    for _ in range(2):
+        q, a = _arith_pair(rng)
+        shots.append(q + a)
+    q, a = _arith_pair(rng)
+    return "|".join(shots + [q]), a
+
+
+def _expr(rng, depth):
+    if depth == 0:
+        v = rng.range(1, 9)
+        return str(v), v
+    ls, lv = _expr(rng, depth - 1)
+    rv = rng.range(1, 9)
+    op = "+-*"[rng.below(3)]
+    if op == "+":
+        val = lv + rv
+    elif op == "-":
+        val = lv - rv
+    else:
+        val = lv * rv
+    if abs(val) > 99:  # keep answers short
+        op, val = "+", lv + rv
+    return f"({ls}{op}{rv})", val
+
+
+def gen_chain(rng):
+    s, v = _expr(rng, rng.range(2, 3))
+    return f"{s}=", str(v)
+
+
+def _bexpr(rng, depth):
+    if depth == 0:
+        v = rng.below(2) == 1
+        return ("t" if v else "f"), v
+    if rng.below(4) == 0:
+        ls, lv = _bexpr(rng, depth - 1)
+        return f"!{ls}", not lv
+    ls, lv = _bexpr(rng, depth - 1)
+    rs, rv = _bexpr(rng, 0)
+    if rng.below(2) == 0:
+        return f"({ls}&{rs})", lv and rv
+    return f"({ls}|{rs})", lv or rv
+
+
+def gen_logic(rng):
+    s, v = _bexpr(rng, rng.range(2, 3))
+    return f"{s}=", "t" if v else "f"
+
+
+def gen_codegen(rng):
+    k = rng.range(2, 9)
+    op = "+-*"[rng.below(3)]
+    x1, x2 = rng.range(1, 9), rng.range(1, 9)
+
+    def apply(x):
+        if op == "+":
+            return x + k
+        if op == "-":
+            return x - k
+        return x * k
+
+    rule = f"f(x)=x{op}{k}"
+    return f"{rule}|f({x1})={apply(x1)}|f({x2})=", str(apply(x2))
+
+
+def gen_listops(rng):
+    n = rng.range(3, 5)
+    xs = [rng.below(10) for _ in range(n)]
+    kind = rng.below(3)
+    body = ",".join(map(str, xs))
+    if kind == 0:
+        return f"sort({body})=", ",".join(map(str, sorted(xs)))
+    if kind == 1:
+        return f"rev({body})=", ",".join(map(str, xs[::-1]))
+    return f"max({body})=", str(max(xs))
+
+
+BENCHMARKS = {
+    "arith": gen_arith,
+    "chain": gen_chain,
+    "logic": gen_logic,
+    "codegen": gen_codegen,
+    "listops": gen_listops,
+}
+
+# Benchmark seeds: train / eval draws come from disjoint seed spaces.
+TRAIN_SEED_BASE = 0x5EED_0000
+EVAL_SEED_BASE = 0xE7A1_0000
+
+
+def sample(bench: str, seed: int):
+    """Deterministic (prompt, answer) for (bench, seed)."""
+    rng = SplitMix((hash_bench(bench) << 32) ^ seed)
+    return BENCHMARKS[bench](rng)
+
+
+def hash_bench(bench: str) -> int:
+    h = 2166136261
+    for c in bench.encode():
+        h = ((h ^ c) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def make_example(bench: str, seed: int, prompt_len: int, gen_len: int):
+    """Tokenized training example: prompt right-padded with PAD to
+    prompt_len; answer + EOS-fill to gen_len (LLaDA pads responses with
+    EOS so the model learns to emit an EOS tail)."""
+    prompt, answer = sample(bench, seed)
+    p = encode(prompt)[:prompt_len]
+    a = encode(answer)[: gen_len - 1]
+    p = p + [PAD] * (prompt_len - len(p))
+    a = a + [EOS] * (gen_len - len(a))
+    return p, a, prompt, answer

@@ -1,0 +1,200 @@
+"""Build-time pretraining of the nano diffusion-LM checkpoints.
+
+LLaDA-style SFT objective: the prompt region is kept clean, each answer
+token is masked i.i.d. with a ratio t ~ U(eps, 1) sampled per sequence,
+and the cross-entropy on masked positions is weighted 1/t (the ELBO
+weighting from Nie et al. 2025).
+
+Two snapshots are written per architecture, mirroring the paper's
+Instruct/Base pairs (Tables 1–2 vs 7–8):
+  * ``base``     — an early, less-converged snapshot
+  * ``instruct`` — the final checkpoint
+
+Checkpoints are flat little-endian f32 records in the canonical parameter
+order of `modelcfg.param_specs` (the Rust loader mmaps them by offset).
+"""
+
+import argparse
+import os
+import struct
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import tasks
+from .modelcfg import ARCHS, ModelCfg, param_specs
+from .model import Params, init_params, params_from_flat, params_to_flat, train_logits
+
+BENCH_MIX = list(tasks.BENCHMARKS)
+
+
+BLOCK_FOR_TRAIN = 8  # matches the default inference block
+
+
+def make_batch(cfg: ModelCfg, rng: np.random.RandomState, batch):
+    """Returns (tokens [B, ctx] with masks applied, targets [B, ctx],
+    loss_w [B, ctx]).
+
+    Two masking curricula, mixed 50/50:
+      * uniform   — LLaDA's i.i.d. masking with ratio t ~ U (the standard
+                    diffusion SFT objective; matches refresh passes where
+                    arbitrary subsets are masked);
+      * block     — the semi-autoregressive inference distribution: blocks
+                    left of a pivot are clean, the pivot block is masked
+                    with ratio t, everything right of it is fully masked.
+                    This is exactly what block-wise decoding feeds the
+                    model, which plain uniform masking under-trains.
+    """
+    toks = np.zeros((batch, cfg.ctx), np.int32)
+    tgt = np.zeros((batch, cfg.ctx), np.int32)
+    w = np.zeros((batch, cfg.ctx), np.float32)
+    n_blocks = cfg.gen_len // BLOCK_FOR_TRAIN
+    for i in range(batch):
+        bench = BENCH_MIX[rng.randint(len(BENCH_MIX))]
+        seed = tasks.TRAIN_SEED_BASE + rng.randint(1 << 30)
+        p, a, _, _ = tasks.make_example(bench, seed, cfg.prompt_len, cfg.gen_len)
+        seq = np.array(p + a, np.int32)
+        t = rng.uniform(0.05, 1.0)
+        m = np.zeros(cfg.gen_len, bool)
+        if rng.randint(2) == 0:
+            m = rng.uniform(size=cfg.gen_len) < t
+        else:
+            k = rng.randint(n_blocks)
+            lo, hi = k * BLOCK_FOR_TRAIN, (k + 1) * BLOCK_FOR_TRAIN
+            m[lo:hi] = rng.uniform(size=hi - lo) < t
+            m[hi:] = True
+        if not m.any():
+            m[rng.randint(cfg.gen_len)] = True
+        row = seq.copy()
+        row[cfg.prompt_len:][m] = tasks.MASK
+        toks[i] = row
+        tgt[i] = seq
+        # ELBO-style 1/ratio weighting using the realized mask ratio
+        ratio = max(m.mean(), 1.0 / cfg.gen_len)
+        wi = m.astype(np.float32) / ratio
+        # EOS-fill targets dominate the region (~70% of positions) and are
+        # trivial; down-weight them so content tokens carry the gradient
+        # (without this, digit accuracy plateaus near chance while the
+        # overall masked accuracy looks excellent)
+        wi[np.array(a) == tasks.EOS] *= 0.1
+        w[i, cfg.prompt_len:] = wi
+    return toks, tgt, w
+
+
+def loss_fn(cfg, params, toks, tgt, w):
+    logits = train_logits(cfg, params, toks)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return z, z
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.98, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1**step
+    bc2 = 1 - b2**step
+    params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params, m, v)
+    return params, m, v
+
+
+def write_checkpoint(path, cfg: ModelCfg, params: Params):
+    flat = [np.asarray(t, np.float32) for t in params_to_flat(params)]
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs)
+    with open(path, "wb") as f:
+        f.write(b"ESDW")                    # magic
+        f.write(struct.pack("<I", 1))       # version
+        f.write(struct.pack("<I", len(flat)))
+        for t, (name, shape) in zip(flat, specs):
+            assert t.shape == tuple(shape), (name, t.shape, shape)
+            f.write(t.astype("<f4").tobytes())
+
+
+def read_checkpoint(path, cfg: ModelCfg) -> Params:
+    specs = param_specs(cfg)
+    with open(path, "rb") as f:
+        assert f.read(4) == b"ESDW"
+        (ver,) = struct.unpack("<I", f.read(4))
+        (n,) = struct.unpack("<I", f.read(4))
+        assert ver == 1 and n == len(specs), (ver, n)
+        flat = []
+        for _, shape in specs:
+            count = int(np.prod(shape)) if shape else 1
+            t = np.frombuffer(f.read(4 * count), "<f4").reshape(shape)
+            flat.append(jnp.asarray(t))
+    return params_from_flat(cfg, flat)
+
+
+def train(cfg: ModelCfg, out_dir, steps, base_step, batch, lr, seed=0,
+          log_every=50, warm_start=None):
+    rng = np.random.RandomState(seed)
+    if warm_start and os.path.exists(warm_start):
+        params = read_checkpoint(warm_start, cfg)
+        print(f"[{cfg.name}] warm start from {warm_start}", flush=True)
+    else:
+        params = init_params(cfg, jax.random.PRNGKey(seed))
+    m, v = adam_init(params)
+
+    @jax.jit
+    def train_step(params, m, v, toks, tgt, w, step, cur_lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, toks, tgt, w))(params)
+        params, m, v = adam_update(params, grads, m, v, step, cur_lr)
+        return params, m, v, loss
+
+    warmup = max(1, steps // 10)
+    t0 = time.time()
+    for s in range(1, steps + 1):
+        toks, tgt, w = make_batch(cfg, rng, batch)
+        cur_lr = lr * min(1.0, s / warmup) * (0.1 ** (s / steps))
+        params, m, v, loss = train_step(
+            params, m, v, toks, tgt, w, jnp.asarray(s, jnp.float32),
+            jnp.asarray(cur_lr, jnp.float32))
+        if s % log_every == 0 or s == 1:
+            print(f"[{cfg.name}] step {s}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+        if s == base_step:
+            path = os.path.join(out_dir, f"weights-{cfg.name}-base.bin")
+            write_checkpoint(path, cfg, params)
+            print(f"[{cfg.name}] wrote base snapshot -> {path}", flush=True)
+        if s % 200 == 0:
+            # rolling instruct checkpoint so downstream work is never
+            # blocked on a full run
+            path = os.path.join(out_dir, f"weights-{cfg.name}-instruct.bin")
+            write_checkpoint(path, cfg, params)
+    path = os.path.join(out_dir, f"weights-{cfg.name}-instruct.bin")
+    write_checkpoint(path, cfg, params)
+    print(f"[{cfg.name}] wrote instruct checkpoint -> {path}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--arch", choices=list(ARCHS) + ["all"], default="all")
+    ap.add_argument("--steps", type=int, default=2200)
+    ap.add_argument("--base-step", type=int, default=450)
+    ap.add_argument("--batch", type=int, default=24)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--warm-start", action="store_true",
+                    help="continue from the existing instruct checkpoint")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCHS.values()) if args.arch == "all" else [ARCHS[args.arch]]
+    for cfg in archs:
+        ws = (os.path.join(args.out, f"weights-{cfg.name}-instruct.bin")
+              if args.warm_start else None)
+        train(cfg, args.out, args.steps, args.base_step, args.batch, args.lr,
+              warm_start=ws)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""stablehlo → HLO-text conversion helpers.
+
+HLO *text* is the interchange format between the build path (jax) and the
+request path (the Rust `xla` crate on xla_extension 0.5.1):
+
+  * jax ≥ 0.5 serialized HloModuleProtos carry 64-bit instruction ids the
+    0.5.1 runtime rejects (`proto.id() <= INT_MAX`); the text parser
+    reassigns ids and round-trips cleanly.
+  * `jax.lax.top_k` lowers to a `topk(...), largest=true` op the 0.5.1
+    text parser cannot parse — the model uses argsort-based top-k instead
+    (see model.argsort_topk).  This module asserts no `topk(` leaks in.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """Lower a jax-jittable fn at the example argument shapes to HLO text
+    (root tupled — the Rust side decomposes the result tuple)."""
+    # keep_unused: the manifest promises a fixed input signature; variants
+    # that ignore an input (e.g. DualCache ignores conf/alpha) must still
+    # accept it
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    if " topk(" in text:
+        raise RuntimeError(
+            "lowered HLO contains a `topk` op which xla_extension 0.5.1 "
+            "cannot parse; use model.argsort_topk instead of jax.lax.top_k"
+        )
+    return text

@@ -1,0 +1,109 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept over shapes and
+dtypes with hypothesis (the core correctness signal for the kernels)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, vmem_bytes
+from compile.kernels.varnorm import varnorm
+from compile.kernels import ref
+
+
+def rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hq=st.sampled_from([2, 4, 8]),
+    group=st.sampled_from([1, 2, 4]),
+    s=st.integers(1, 9),
+    t=st.sampled_from([8, 40, 56, 80]),
+    kv_tile=st.sampled_from([8, 28, 40, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, hq, group, s, t, kv_tile, seed):
+    if hq % group != 0:
+        group = 1
+    hkv = hq // group
+    hd = 16
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, hq, s, hd))
+    k = rand(rng, (b, hkv, t, hd))
+    v = rand(rng, (b, hkv, t, hd))
+    got = attention(q, k, v, kv_tile=kv_tile)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    s=st.integers(1, 16),
+    d=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_varnorm_matches_ref(b, s, d, seed):
+    rng = np.random.default_rng(seed)
+    h = rand(rng, (b, s, d))
+    p = rand(rng, (b, s, d))
+    got = varnorm(h, p)
+    want = ref.varnorm_ref(h, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_attention_bf16_inputs_close_to_f32():
+    rng = np.random.default_rng(0)
+    q = rand(rng, (2, 4, 8, 16))
+    k = rand(rng, (2, 4, 80, 16))
+    v = rand(rng, (2, 4, 80, 16))
+    f32 = attention(q, k, v)
+    bf = attention(q.astype(jnp.bfloat16).astype(jnp.float32),
+                   k.astype(jnp.bfloat16).astype(jnp.float32),
+                   v.astype(jnp.bfloat16).astype(jnp.float32))
+    # bf16 round-trip of inputs shifts outputs only slightly
+    assert float(jnp.max(jnp.abs(f32 - bf))) < 0.05
+
+
+def test_attention_softmax_rows_sum_to_one_property():
+    # identical V rows ⇒ output equals that row regardless of scores
+    rng = np.random.default_rng(1)
+    q = rand(rng, (1, 2, 4, 16))
+    k = rand(rng, (1, 2, 40, 16))
+    row = rng.standard_normal(16).astype(np.float32)
+    v = jnp.broadcast_to(jnp.asarray(row), (1, 2, 40, 16))
+    out = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(row, out.shape), rtol=1e-5)
+
+
+def test_varnorm_zero_when_unchanged():
+    rng = np.random.default_rng(2)
+    h = rand(rng, (2, 8, 64))
+    out = varnorm(h, h)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+def test_vmem_estimate_monotone_in_tile():
+    assert vmem_bytes(8, 16, 80) > vmem_bytes(8, 16, 40)
+    # nano default comfortably under a TPU core's ~16 MiB VMEM
+    assert vmem_bytes(8, 16, 64) < 1 << 20
+
+
+def test_attention_odd_kv_lengths_tile_cleanly():
+    # 56 = pruned sparse length; 80 = dense ctx; both must tile
+    rng = np.random.default_rng(3)
+    for t in (56, 80):
+        q = rand(rng, (1, 4, 8, 16))
+        k = rand(rng, (1, 4, t, 16))
+        v = rand(rng, (1, 4, t, 16))
+        got = attention(q, k, v, kv_tile=64)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,90 @@
+"""Task generators + tokenizer: determinism, correctness of reference
+answers, and layout constraints (prompt/answer fit the fixed regions)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+
+
+def test_tokenizer_roundtrip():
+    s = "sort(5,2,9)=2,5,9"
+    assert tasks.decode(tasks.encode(s)) == s
+
+
+def test_decode_stops_at_eos():
+    ids = tasks.encode("42") + [tasks.EOS] + tasks.encode("junk")
+    assert tasks.decode(ids) == "42"
+
+
+def test_vocab_is_frozen():
+    # the Rust tokenizer and the training data depend on this exact table
+    assert tasks.TOKENS[:4] == ["<pad>", "<mask>", "<eos>", "<bos>"]
+    assert tasks.TOKENS[4] == "0"
+    assert len(tasks.TOKENS) <= tasks.VOCAB == 64
+
+
+@settings(max_examples=50, deadline=None)
+@given(bench=st.sampled_from(sorted(tasks.BENCHMARKS)),
+       seed=st.integers(0, 2**30))
+def test_samples_fit_fixed_regions(bench, seed):
+    prompt, answer = tasks.sample(bench, seed)
+    assert 0 < len(prompt) <= 48
+    assert 0 < len(answer) <= 31
+    # round-trip through the tokenizer must be lossless
+    assert tasks.decode(tasks.encode(prompt)) == prompt
+    assert tasks.decode(tasks.encode(answer)) == answer
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_sampling_is_deterministic(seed):
+    for bench in tasks.BENCHMARKS:
+        assert tasks.sample(bench, seed) == tasks.sample(bench, seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_listops_reference_answers(seed):
+    prompt, answer = tasks.sample("listops", seed)
+    if prompt.startswith("sort("):
+        xs = sorted(int(x) for x in prompt[5:-2].split(","))
+        assert answer == ",".join(map(str, xs))
+    elif prompt.startswith("rev("):
+        xs = [x for x in prompt[4:-2].split(",")][::-1]
+        assert answer == ",".join(xs)
+    elif prompt.startswith("max("):
+        xs = [int(x) for x in prompt[4:-2].split(",")]
+        assert answer == str(max(xs))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_arith_reference_answers(seed):
+    prompt, answer = tasks.sample("arith", seed)
+    q = prompt.rsplit("|", 1)[-1].rstrip("=")
+    for op in "+-*":
+        if op in q[1:]:
+            i = q.rindex(op)
+            a, b = int(q[:i]), int(q[i + 1:])
+            val = {"+": a + b, "-": a - b, "*": a * b}[op]
+            assert answer == str(val)
+            return
+    pytest.fail(f"unparsable arith prompt {prompt!r}")
+
+
+def test_make_example_layout():
+    p, a, prompt, answer = tasks.make_example("logic", 7, 48, 32)
+    assert len(p) == 48 and len(a) == 32
+    # prompt right-padded with PAD; answer EOS-filled
+    assert p[-1] == tasks.PAD or len(prompt) == 48
+    assert a[-1] == tasks.EOS
+    assert tasks.decode(a) == answer
+
+
+def test_splitmix_reference_values():
+    # frozen reference shared with rust/src/rng (tests there use the same)
+    r = tasks.SplitMix(42)
+    assert [r.next64() for _ in range(2)] == [
+        13679457532755275413, 2949826092126892291]

@@ -1,0 +1,118 @@
+"""Training + AOT pipeline tests: the loss decreases, checkpoints
+round-trip, and lowered HLO text obeys the interchange constraints."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import tasks
+from compile.modelcfg import ModelCfg, param_specs, SKIP_CONFIGS, final_keep
+from compile import model as M
+from compile import train as T
+from compile.xlc import lower_to_hlo_text
+
+TINY = ModelCfg(name="tiny", d_model=32, n_layers=2, n_heads=2,
+                n_kv_heads=2, d_ff=64, prompt_len=16, gen_len=8)
+
+
+def test_loss_decreases_on_tiny_model():
+    rng = np.random.RandomState(0)
+    params = M.init_params(TINY, jax.random.PRNGKey(0))
+    m, v = T.adam_init(params)
+
+    @jax.jit
+    def step(params, m, v, toks, tgt, w, s):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(TINY, p, toks, tgt, w))(params)
+        params, m, v = T.adam_update(params, grads, m, v, s, 3e-3)
+        return params, m, v, loss
+
+    losses = []
+    for s in range(1, 41):
+        toks, tgt, w = T.make_batch(TINY, rng, 16)
+        params, m, v, loss = step(params, m, v, jnp.asarray(toks),
+                                  jnp.asarray(tgt), jnp.asarray(w),
+                                  jnp.float32(s))
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.7, losses[::8]
+
+
+def test_make_batch_masks_only_answers():
+    rng = np.random.RandomState(1)
+    toks, tgt, w = T.make_batch(TINY, rng, 8)
+    # prompt region never masked, never weighted
+    assert (toks[:, :TINY.prompt_len] != tasks.MASK).all()
+    assert (w[:, :TINY.prompt_len] == 0).all()
+    # every weighted position is masked in the input and recoverable
+    m = w > 0
+    assert (toks[:, TINY.prompt_len:][m[:, TINY.prompt_len:]]
+            == tasks.MASK).all()
+    assert m.any(axis=1).all()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = M.init_params(TINY, jax.random.PRNGKey(2))
+    path = str(tmp_path / "w.bin")
+    T.write_checkpoint(path, TINY, params)
+    loaded = T.read_checkpoint(path, TINY)
+    for a, b in zip(M.params_to_flat(params), M.params_to_flat(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lowered_hlo_has_no_topk_and_keeps_unused():
+    def fn(x, unused):
+        return (jnp.argsort(-x, axis=-1)[..., :2],)
+
+    text = lower_to_hlo_text(
+        fn,
+        jax.ShapeDtypeStruct((2, 8), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    )
+    assert " topk(" not in text
+    assert "sort(" in text
+    # keep_unused: both parameters present
+    assert "parameter(0)" in text and "parameter(1)" in text
+
+
+def test_final_keep_matches_skip_chain():
+    assert final_keep(8, SKIP_CONFIGS["default"]) == 2
+    assert final_keep(32, SKIP_CONFIGS["default"]) == 8
+    assert final_keep(8, SKIP_CONFIGS["r1_only_70"]) == 2
+    assert final_keep(32, SKIP_CONFIGS["triple_405"]) == 7
+
+
+def test_param_specs_order_is_stable():
+    names = [n for n, _ in param_specs(TINY)]
+    assert names[0] == "embed"
+    assert names[-2:] == ["out_norm", "head"]
+    assert names[1:10] == [
+        "layer00.attn_norm", "layer00.wq", "layer00.wk", "layer00.wv",
+        "layer00.wo", "layer00.ffn_norm", "layer00.w_gate", "layer00.w_up",
+        "layer00.w_down"]
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built")
+def test_manifest_consistency():
+    import json
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["generation"]["ctx"] == 80
+    for arch_name, arch in man["archs"].items():
+        n_params = len(arch["params"])
+        for exe_name, exe in arch["executables"].items():
+            path = os.path.join(ARTIFACTS, exe["file"])
+            assert os.path.exists(path), exe["file"]
+            assert len(exe["inputs"]) > n_params, exe_name
+            assert len(exe["outputs"]) == len(exe["output_names"]), exe_name
+            if exe["kind"] == "step":
+                k = exe["final_keep"]
+                logits = exe["outputs"][0]
+                assert logits["shape"][1] == k, exe_name

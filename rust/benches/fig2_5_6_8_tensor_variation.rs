@@ -1,0 +1,91 @@
+//! Figures 2, 5, 6 (llada) & 8 (dream) + Table 3: intermediate-tensor
+//! variation statistics — normalized-L1 variation distributions for
+//! hidden/Q/K/V at the probe layers (2/5/7 ≙ paper layers 10/20/30), the
+//! per-layer distribution sweep, and the Pearson correlation between
+//! tensor variation and |Δconfidence| by layer.
+
+use esdllm::analysis::{histogram, observe_generation, pearson, PROBE_TENSORS};
+use esdllm::bench::{bench_archs, bench_n, Table};
+use esdllm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let groups = (bench_n(24) / 8).max(1);
+
+    for arch in bench_archs() {
+        let figs = if arch.starts_with("llada") { "fig2_5_6" } else { "fig8" };
+        let stats = observe_generation(&rt, &arch, groups)?;
+        let bins = [0.001f32, 0.005, 0.01, 0.05, 0.1, 0.3, 0.6, 1.0];
+
+        // variation distribution per probe layer × tensor
+        let mut dist = Table::new(
+            &format!("{figs} analog: tensor-variation distributions ({arch})"),
+            &["layer", "tensor", "frac<0.05", "frac<0.1", "mean", "p90"],
+        );
+        for (pi, layer) in stats.probe_layers.iter().enumerate() {
+            for (ti, tensor) in PROBE_TENSORS.iter().enumerate() {
+                let mut vals: Vec<f32> = stats
+                    .records
+                    .iter()
+                    .flat_map(|r| r.var[pi][ti].iter().cloned())
+                    .collect();
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = vals.len().max(1);
+                let below = |t: f32| {
+                    vals.partition_point(|v| *v < t) as f64 / n as f64
+                };
+                let mean: f64 =
+                    vals.iter().map(|v| *v as f64).sum::<f64>() / n as f64;
+                let p90 = vals[((n - 1) as f64 * 0.9) as usize];
+                dist.row(&[
+                    format!("{layer}"),
+                    tensor.to_string(),
+                    format!("{:.3}", below(0.05)),
+                    format!("{:.3}", below(0.1)),
+                    format!("{mean:.4}"),
+                    format!("{p90:.4}"),
+                ]);
+                // full histogram CSV for the figure pipeline
+                let h = histogram(vals.iter().cloned(), &bins);
+                let mut ht = Table::new("hist", &["bin_lo", "count"]);
+                let mut lo = 0.0f32;
+                for (i, c) in h.iter().enumerate() {
+                    ht.row(&[format!("{lo:.3}"), format!("{c}")]);
+                    lo = bins.get(i).copied().unwrap_or(f32::INFINITY);
+                }
+                ht.write_csv(&format!(
+                    "artifacts/figures/{figs}_var_{arch}_l{layer}_{tensor}.csv"
+                ))?;
+            }
+        }
+        dist.print();
+        dist.write_csv(&format!("artifacts/figures/{figs}_var_summary_{arch}.csv"))?;
+
+        // Table 3 analog: correlation between variation and |Δconf|
+        let mut corr = Table::new(
+            &format!("Table 3 analog: Pearson(variation, |Δconf|) by layer ({arch})"),
+            &["tensor", "layer2", "layer5", "layer7"],
+        );
+        for (ti, tensor) in PROBE_TENSORS.iter().enumerate() {
+            let mut row = vec![tensor.to_string()];
+            for pi in 0..stats.probe_layers.len() {
+                let xs: Vec<f32> = stats
+                    .records
+                    .iter()
+                    .flat_map(|r| r.var[pi][ti].iter().cloned())
+                    .collect();
+                let ys: Vec<f32> = stats
+                    .records
+                    .iter()
+                    .flat_map(|r| r.conf_delta.iter().cloned())
+                    .collect();
+                row.push(format!("{:.3}", pearson(&xs, &ys)));
+            }
+            corr.row(&row);
+        }
+        corr.print();
+        corr.write_csv(&format!("artifacts/figures/table3_corr_{arch}.csv"))?;
+    }
+    Ok(())
+}

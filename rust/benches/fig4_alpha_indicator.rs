@@ -1,0 +1,70 @@
+//! Figure 4: importance-estimation ablations on llada-nano —
+//! (a) the α mixing weight in Eq. 1 (α passed as a runtime scalar, no
+//!     recompile), and
+//! (b) the variation-indicator tensor (hidden vs Q/K/V executable
+//!     variants).
+
+use esdllm::bench::{bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::runtime::Runtime;
+use esdllm::workload::paper_name;
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+    let arch = "llada-nano";
+    let benches: [&'static str; 3] = ["arith", "chain", "logic"];
+
+    // (a) alpha sweep
+    let mut ta = Table::new(
+        &format!("Fig 4a analog: α ablation on {arch}, {n} samples"),
+        &["alpha", "GSM8K~arith", "MATH~chain", "BBH~logic"],
+    );
+    for alpha in [0.0f32, 0.25, 0.5, 0.75, 1.0] {
+        let mut row = vec![format!("{alpha:.2}")];
+        for bench in benches {
+            let opts = EvalOpts { alpha: Some(alpha), ..Default::default() };
+            let r = evaluate(&rt, arch, Method::EsDllm, bench, n, &opts)?;
+            row.push(format!("{:.2}", r.score));
+        }
+        ta.row(&row);
+    }
+    ta.print();
+    ta.write_csv("artifacts/figures/fig4a_alpha.csv")?;
+
+    // (b) indicator sweep
+    let mut tb = Table::new(
+        &format!("Fig 4b analog: variation-indicator ablation on {arch}, {n} samples"),
+        &["indicator", "GSM8K~arith", "MATH~chain", "BBH~logic"],
+    );
+    for ind in ["h", "q", "k", "v"] {
+        let mut row = vec![ind.to_string()];
+        for bench in benches {
+            // indicator executables exist for blk8 only; the chain
+            // benchmark (blk32) reuses the hidden-state variant there
+            let opts = if bench == "chain" && ind != "h" {
+                EvalOpts {
+                    indicator: Some("h".into()),
+                    es_exe_override: Some("es_blk32_b8".into()),
+                    ..Default::default()
+                }
+            } else {
+                EvalOpts { indicator: Some(ind.to_string()), ..Default::default() }
+            };
+            let r = evaluate(&rt, arch, Method::EsDllm, bench, n, &opts)?;
+            row.push(if bench == "chain" && ind != "h" {
+                format!("({:.2})", r.score)
+            } else {
+                format!("{:.2}", r.score)
+            });
+        }
+        tb.row(&row);
+    }
+    tb.print();
+    println!("(parenthesised chain cells reuse the hidden-state variant: indicator \
+              executables are compiled for block 8 only)");
+    tb.write_csv("artifacts/figures/fig4b_indicator.csv")?;
+    Ok(())
+}

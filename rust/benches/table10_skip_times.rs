@@ -1,0 +1,58 @@
+//! Table 10: number-of-skips ablation at roughly iso-FLOPs (~40% in the
+//! paper; the nano FLOPs proportions are printed alongside) across all
+//! five benchmarks using llada-nano: one aggressive early skip (r1=0.7),
+//! the default two skips (r1=r2=0.5), and three skips (r=0.405 ×3).
+
+use esdllm::bench::{bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::flops;
+use esdllm::runtime::Runtime;
+use esdllm::workload::{paper_name, BENCHMARKS};
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+    let arch = "llada-nano";
+    let dims = rt.arch(arch)?.dims.clone();
+
+    let variants: Vec<(&str, &str, Vec<(usize, f64)>)> = vec![
+        ("r1=0.7", "es_r1_only_70", vec![(1, 0.7)]),
+        ("r1=r2=0.5", "es", vec![(1, 0.5), (2, 0.5)]),
+        ("r1=r2=r3=0.405", "es_triple_405", vec![(1, 0.405), (2, 0.405), (3, 0.405)]),
+    ];
+
+    let mut headers: Vec<&str> = vec!["Skip Ratio & Position", "FLOPs Prop."];
+    let names: Vec<String> =
+        BENCHMARKS.iter().map(|b| paper_name(b).to_string()).collect();
+    headers.extend(names.iter().map(|s| s.as_str()));
+    let mut table = Table::new(
+        &format!("Table 10 analog: skipping times at iso-FLOPs, {n} samples"),
+        &headers,
+    );
+
+    for (label, exe_base, skip) in variants {
+        let prop = flops::flops_proportion(&dims, 8, &skip);
+        let mut row = vec![label.to_string(), format!("{:.0}%", prop * 100.0)];
+        for bench in BENCHMARKS {
+            let block = esdllm::eval::bench_cfg(bench).block;
+            let exe = if exe_base == "es" {
+                format!("es_blk{block}_b8")
+            } else {
+                format!("{exe_base}_blk{block}_b8")
+            };
+            // triple/r1-70 variants exist only for blk8 and blk32
+            let opts = EvalOpts {
+                es_exe_override: Some(exe),
+                ..Default::default()
+            };
+            let r = evaluate(&rt, arch, Method::EsDllm, bench, n, &opts)?;
+            row.push(format!("{:.2}", r.score));
+        }
+        table.row(&row);
+    }
+    table.print();
+    table.write_csv("artifacts/results/table10.csv")?;
+    Ok(())
+}

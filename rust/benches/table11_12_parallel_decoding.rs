@@ -1,0 +1,44 @@
+//! Tables 11 & 12: integration with confidence-aware parallel decoding
+//! (threshold 0.9) — DualCache+PD vs ES-dLLM+PD on both architectures.
+//! Speedups are reported against DualCache *without* PD, as in the paper.
+
+use esdllm::bench::{bench_archs, bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::runtime::Runtime;
+use esdllm::workload::{paper_name, BENCHMARKS};
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+
+    for arch in bench_archs() {
+        let table_no = if arch.starts_with("llada") { 11 } else { 12 };
+        let mut table = Table::new(
+            &format!("Table {table_no} analog: parallel decoding on {arch}, {n} samples"),
+            &["Benchmark", "Method", "TPS", "Speedup vs DualCache", "Score"],
+        );
+        for bench in BENCHMARKS {
+            let base =
+                evaluate(&rt, &arch, Method::DualCache, bench, n, &EvalOpts::default())?;
+            for method in [Method::DualCache, Method::EsDllm] {
+                let opts = EvalOpts {
+                    parallel_threshold: Some(0.9),
+                    ..Default::default()
+                };
+                let r = evaluate(&rt, &arch, method, bench, n, &opts)?;
+                table.row(&[
+                    paper_name(bench).to_string(),
+                    r.method.clone(),
+                    format!("{:.2}", r.tps),
+                    format!("{:.2}x", r.speedup_vs(&base)),
+                    format!("{:.2}", r.score),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("artifacts/results/table{table_no}.csv"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Tables 13 & 14: integration with sparse attention (prompt-KV pruning,
+//! retention 0.5, smoothing kernel 3) — the Sparse-dLLM baseline is
+//! DualCache+Sparse; ES-dLLM+Sparse adds early-skipping on top. Speedup
+//! is vs DualCache without sparse attention, as in the paper.
+
+use esdllm::bench::{bench_archs, bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::runtime::Runtime;
+use esdllm::workload::{paper_name, BENCHMARKS};
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+
+    for arch in bench_archs() {
+        let table_no = if arch.starts_with("llada") { 13 } else { 14 };
+        let mut table = Table::new(
+            &format!("Table {table_no} analog: sparse attention on {arch}, {n} samples"),
+            &["Benchmark", "Method", "TPS", "Speedup vs DualCache", "Score"],
+        );
+        for bench in BENCHMARKS {
+            let base =
+                evaluate(&rt, &arch, Method::DualCache, bench, n, &EvalOpts::default())?;
+            // Sparse-dLLM analog: cached pruning without early-skip
+            let sparse_opts = EvalOpts { sparse: true, ..Default::default() };
+            for (label, method) in
+                [("Sparse-dLLM", Method::DualCache), ("ES-dLLM+Sparse", Method::EsDllm)]
+            {
+                let r = evaluate(&rt, &arch, method, bench, n, &sparse_opts)?;
+                table.row(&[
+                    paper_name(bench).to_string(),
+                    label.to_string(),
+                    format!("{:.2}", r.tps),
+                    format!("{:.2}x", r.speedup_vs(&base)),
+                    format!("{:.2}", r.score),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("artifacts/results/table{table_no}.csv"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table 15: ES-dLLM combined with BOTH parallel decoding and sparse
+//! attention, vs the DualCache baseline, on both architectures.
+
+use esdllm::bench::{bench_archs, bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::runtime::Runtime;
+use esdllm::workload::{paper_name, BENCHMARKS};
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+
+    for arch in bench_archs() {
+        let mut table = Table::new(
+            &format!("Table 15 analog: ES-dLLM+PD+Sparse on {arch}, {n} samples"),
+            &["Benchmark", "TPS", "Speedup vs DualCache", "Score", "Δscore vs DualCache"],
+        );
+        for bench in BENCHMARKS {
+            let base =
+                evaluate(&rt, &arch, Method::DualCache, bench, n, &EvalOpts::default())?;
+            let opts = EvalOpts {
+                parallel_threshold: Some(0.9),
+                sparse: true,
+                ..Default::default()
+            };
+            let r = evaluate(&rt, &arch, Method::EsDllm, bench, n, &opts)?;
+            table.row(&[
+                paper_name(bench).to_string(),
+                format!("{:.2}", r.tps),
+                format!("{:.2}x", r.speedup_vs(&base)),
+                format!("{:.2}", r.score),
+                format!("{:+.2}", r.score - base.score),
+            ]);
+        }
+        table.print();
+        let suffix = if arch.starts_with("llada") { "llada" } else { "dream" };
+        table.write_csv(&format!("artifacts/results/table15_{suffix}.csv"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Table 2: main results on dream-nano (Instruct) — GQA architecture with
+//! maskgit-plus sampling; same columns as Table 1 (ES-dLLM* on the
+//! BBH~logic and MBPP~listops analogs, as in the paper).
+
+use esdllm::bench::{bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::runtime::Runtime;
+use esdllm::workload::{paper_name, BENCHMARKS};
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+    let arch = "dream-nano";
+
+    let mut table = Table::new(
+        &format!("Table 2 analog: {arch}-Instruct, {n} samples/cell"),
+        &["Benchmark", "Method", "TPS", "Speedup", "Score"],
+    );
+    for bench in BENCHMARKS {
+        let mut cells: Vec<(Method, EvalOpts)> = vec![
+            (Method::Vanilla, EvalOpts::default()),
+            (Method::DualCache, EvalOpts::default()),
+            (Method::EsDllm, EvalOpts::default()),
+        ];
+        if bench == "logic" || bench == "listops" {
+            cells.push((
+                Method::EsDllm,
+                EvalOpts { refresh_star: true, ..Default::default() },
+            ));
+        }
+        let mut base_tps = None;
+        for (method, opts) in cells {
+            let r = evaluate(&rt, arch, method, bench, n, &opts)?;
+            let base = *base_tps.get_or_insert(r.tps);
+            table.row(&[
+                paper_name(bench).to_string(),
+                r.method.clone(),
+                format!("{:.2}", r.tps),
+                format!("{:.1}x", r.tps / base),
+                format!("{:.2}", r.score),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("artifacts/results/table2.csv")?;
+    Ok(())
+}

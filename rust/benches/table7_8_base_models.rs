@@ -1,0 +1,45 @@
+//! Tables 7 & 8: main results on the Base checkpoints (early-training
+//! snapshots standing in for LLaDA-8B-Base / Dream-7B-Base; see
+//! DESIGN.md §1) — the method must stay effective on a less-converged
+//! model with flatter confidence.
+
+use esdllm::bench::{bench_archs, bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::runtime::Runtime;
+use esdllm::workload::{paper_name, BENCHMARKS};
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+
+    for arch in bench_archs() {
+        let table_no = if arch.starts_with("llada") { 7 } else { 8 };
+        let mut table = Table::new(
+            &format!("Table {table_no} analog: {arch}-Base, {n} samples/cell"),
+            &["Benchmark", "Method", "TPS", "Speedup", "Score"],
+        );
+        for bench in BENCHMARKS {
+            let mut base_tps = None;
+            for method in [Method::Vanilla, Method::DualCache, Method::EsDllm] {
+                let opts = EvalOpts {
+                    checkpoint: Some("base".to_string()),
+                    ..Default::default()
+                };
+                let r = evaluate(&rt, &arch, method, bench, n, &opts)?;
+                let base = *base_tps.get_or_insert(r.tps);
+                table.row(&[
+                    paper_name(bench).to_string(),
+                    method.label().to_string(),
+                    format!("{:.2}", r.tps),
+                    format!("{:.1}x", r.tps / base),
+                    format!("{:.2}", r.score),
+                ]);
+            }
+        }
+        table.print();
+        table.write_csv(&format!("artifacts/results/table{table_no}.csv"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Table 9: skip-ratio and skip-position ablation on the MATH analog
+//! (chain, block = gen = 32) using llada-nano. Rows mirror the paper:
+//! no skipping (DualCache), the default r1=r2=0.5, single-position ratio
+//! sweep at layer 2, and position sweep at ratio 0.5. FLOPs proportion
+//! comes from the analytic model (rust/src/flops).
+
+use esdllm::bench::{bench_n, Table};
+use esdllm::engine::Method;
+use esdllm::eval::{evaluate, EvalOpts};
+use esdllm::flops;
+use esdllm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let rt = Runtime::load_default()?;
+    let n = bench_n(16);
+    let arch = "llada-nano";
+    let dims = rt.arch(arch)?.dims.clone();
+    let bench = "chain";
+    let block = 32;
+
+    // (label, exe override, skip spec) — nano layer mapping of the paper's
+    // r0/r4/r8/r16 rows is r0/r1/r2/r4 (32→8 layers)
+    let variants: Vec<(&str, Option<&str>, Vec<(usize, f64)>)> = vec![
+        ("No skipping (DualCache)", None, vec![]),
+        ("r1=r2=0.5 (default)", Some("es_blk32_b8"), vec![(1, 0.5), (2, 0.5)]),
+        ("r2=0.75", Some("es_r2_only_75_blk32_b8"), vec![(2, 0.75)]),
+        ("r2=0.5", Some("es_r2_only_50_blk32_b8"), vec![(2, 0.5)]),
+        ("r2=0.25", Some("es_r2_only_25_blk32_b8"), vec![(2, 0.25)]),
+        ("r0=0.5", Some("es_r0_only_50_blk32_b8"), vec![(0, 0.5)]),
+        ("r1=0.5", Some("es_r1_only_50_blk32_b8"), vec![(1, 0.5)]),
+        ("r4=0.5", Some("es_r4_only_50_blk32_b8"), vec![(4, 0.5)]),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 9 analog: skip ratio/position on MATH~chain, {n} samples"),
+        &["Skip Ratio & Position", "FLOPs Prop.", "TPS", "Speedup", "Score"],
+    );
+    let mut base_tps = None;
+    for (label, exe, skip) in variants {
+        let method = if exe.is_some() { Method::EsDllm } else { Method::DualCache };
+        let opts = EvalOpts {
+            es_exe_override: exe.map(|s| s.to_string()),
+            ..Default::default()
+        };
+        let r = evaluate(&rt, arch, method, bench, n, &opts)?;
+        let base = *base_tps.get_or_insert(r.tps);
+        let prop = flops::flops_proportion(&dims, block, &skip);
+        table.row(&[
+            label.to_string(),
+            format!("{:.0}%", prop * 100.0),
+            format!("{:.2}", r.tps),
+            format!("{:.2}x", r.tps / base),
+            format!("{:.2}", r.score),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/results/table9.csv")?;
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! Observation experiments (paper §4, Figures 1, 2, 5–8, Table 3):
+//! per-iteration confidence variation and intermediate-tensor variation
+//! statistics, collected by replaying vanilla generation through the
+//! `observe` executable (full forward + probe tensors at layers 2/5/7).
+
+use anyhow::Result;
+
+use crate::cache::softmax_max;
+use crate::rng::SplitMix;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::Runtime;
+use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
+
+pub const PROBE_TENSORS: [&str; 4] = ["hidden", "query", "key", "value"];
+
+/// Per-iteration record for one batch of sequences.
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    /// |Δconfidence| per (seq, gen position)
+    pub conf_delta: Vec<f32>,
+    /// normalized L1 variation per probe layer × tensor × (seq, pos)
+    pub var: Vec<Vec<Vec<f32>>>, // [probe][tensor][seq*pos]
+}
+
+#[derive(Debug, Clone)]
+pub struct ObservationStats {
+    pub probe_layers: Vec<usize>,
+    pub records: Vec<IterRecord>,
+    pub gen_len: usize,
+    pub batch: usize,
+}
+
+/// Replay vanilla generation for `groups` batches of 8 sequences drawn
+/// from all benchmarks, recording confidence deltas and tensor variation
+/// between successive iterations (the paper's 100-sample methodology).
+pub fn observe_generation(rt: &Runtime, arch_name: &str, groups: usize) -> Result<ObservationStats> {
+    let arch = rt.arch(arch_name)?.clone();
+    let d = &arch.dims;
+    let probe_layers = rt.manifest.generation.observe_probe_layers.clone();
+    let exe = arch.exe("observe_b8")?;
+    let tok = &rt.tokenizer;
+    let gen = d.gen_len;
+    let sampler = SamplerCfg::llada();
+    let mut rng = SplitMix::new(0x0B5E);
+
+    let mut stats = ObservationStats {
+        probe_layers: probe_layers.clone(),
+        records: vec![],
+        gen_len: gen,
+        batch: 8,
+    };
+
+    for g in 0..groups {
+        // mixed-benchmark batch (the paper samples across datasets)
+        let mut tokens = vec![0i32; 8 * d.ctx];
+        for b in 0..8 {
+            let bench = crate::workload::BENCHMARKS[(g * 8 + b) % 5];
+            let item = &crate::workload::eval_set(bench, g * 8 + b + 1)[g * 8 + b];
+            let ids = tok.encode_prompt(&item.prompt, d.prompt_len)?;
+            tokens[b * d.ctx..b * d.ctx + d.prompt_len].copy_from_slice(&ids);
+            for i in 0..gen {
+                tokens[b * d.ctx + d.prompt_len + i] = tok.mask;
+            }
+        }
+
+        let mut prev_conf: Option<Vec<f32>> = None;
+        let mut prev_probes: Option<Vec<f32>> = None;
+        for _iter in 0..gen {
+            let toks_t = HostTensor::I32 { shape: vec![8, d.ctx], data: tokens.clone() };
+            let out = rt.run(&arch, exe, "instruct", &[toks_t])?;
+            let logits = out[0].as_f32()?;
+            let probes = out[1].as_f32()?; // [n_probe, 4, 8, gen, d]
+
+            // confidence per gen position
+            let mut conf = vec![0f32; 8 * gen];
+            for b in 0..8 {
+                for i in 0..gen {
+                    let off = (b * d.ctx + d.prompt_len + i) * d.vocab;
+                    conf[b * gen + i] = softmax_max(&logits[off..off + d.vocab]);
+                }
+            }
+
+            if let (Some(pc), Some(pp)) = (&prev_conf, &prev_probes) {
+                let conf_delta: Vec<f32> =
+                    conf.iter().zip(pc.iter()).map(|(a, b)| (a - b).abs()).collect();
+                let mut var = vec![vec![vec![]; 4]; probe_layers.len()];
+                let row = d.d_model;
+                let per_tensor = 8 * gen * row;
+                for (pi, v_p) in var.iter_mut().enumerate() {
+                    for (ti, v_t) in v_p.iter_mut().enumerate() {
+                        let base = (pi * 4 + ti) * per_tensor;
+                        for r in 0..8 * gen {
+                            let cur = &probes[base + r * row..base + (r + 1) * row];
+                            let prev = &pp[base + r * row..base + (r + 1) * row];
+                            v_t.push(varnorm_row(cur, prev));
+                        }
+                    }
+                }
+                stats.records.push(IterRecord { conf_delta, var });
+            }
+            prev_conf = Some(conf.clone());
+            prev_probes = Some(probes.to_vec());
+
+            // unmask one token per sequence (vanilla low-confidence order,
+            // whole gen region — matches the paper's observation setup)
+            for b in 0..8 {
+                let gen_tokens = &tokens[b * d.ctx + d.prompt_len..b * d.ctx + d.ctx];
+                let inp = UnmaskInput {
+                    logits: &logits_rows(logits, b, d.ctx, d.prompt_len, gen, d.vocab),
+                    conf: &conf[b * gen..(b + 1) * gen],
+                    gen_tokens,
+                    block_lo: 0,
+                    block_hi: gen,
+                    vocab: d.vocab,
+                    mask_id: tok.mask,
+                    eos_id: tok.eos,
+                };
+                let dec = decide_unmask(&sampler, &inp, &mut rng);
+                for (p, t) in dec.positions.iter().zip(&dec.tokens) {
+                    tokens[b * d.ctx + d.prompt_len + p] = *t;
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
+fn logits_rows(
+    logits: &[f32],
+    b: usize,
+    ctx: usize,
+    prompt_len: usize,
+    gen: usize,
+    vocab: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; gen * vocab];
+    for i in 0..gen {
+        let src = (b * ctx + prompt_len + i) * vocab;
+        out[i * vocab..(i + 1) * vocab].copy_from_slice(&logits[src..src + vocab]);
+    }
+    out
+}
+
+fn varnorm_row(cur: &[f32], prev: &[f32]) -> f32 {
+    let d = cur.len() as f32;
+    let l1: f32 = cur.iter().zip(prev).map(|(a, b)| (a - b).abs()).sum();
+    let l2: f32 = prev.iter().map(|x| x * x).sum::<f32>().sqrt();
+    l1 / (d.sqrt() * l2 + 1e-6)
+}
+
+// ---------------------------------------------------------------------------
+// summaries for the figure benches
+// ---------------------------------------------------------------------------
+
+/// Histogram of values over log-spaced bins (figures 1b, 2b, 5, 6, 8).
+pub fn histogram(values: impl Iterator<Item = f32>, bins: &[f32]) -> Vec<usize> {
+    let mut counts = vec![0usize; bins.len() + 1];
+    for v in values {
+        let idx = bins.partition_point(|b| *b < v);
+        counts[idx] += 1;
+    }
+    counts
+}
+
+/// Fraction of positions with confidence variation > threshold, per
+/// iteration (figure 1c).
+pub fn frac_above(stats: &ObservationStats, threshold: f32) -> Vec<f64> {
+    stats
+        .records
+        .iter()
+        .map(|r| {
+            let n = r.conf_delta.len().max(1);
+            r.conf_delta.iter().filter(|v| **v > threshold).count() as f64 / n as f64
+        })
+        .collect()
+}
+
+/// Pearson correlation between tensor variation and |Δconfidence|
+/// (Table 3 analog).
+pub fn pearson(xs: &[f32], ys: &[f32]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let my = ys.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = *x as f64 - mx;
+        let dy = *y as f64 - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        let ys = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+        let neg = [4.0f32, 3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let bins = [0.1f32, 1.0];
+        let h = histogram([0.05f32, 0.5, 5.0, 0.09].into_iter(), &bins);
+        assert_eq!(h, vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn varnorm_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert_eq!(varnorm_row(&a, &a), 0.0);
+        assert!(varnorm_row(&[2.0, -2.0, 3.0], &a) > 0.0);
+    }
+}

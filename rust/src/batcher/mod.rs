@@ -1,0 +1,96 @@
+//! Dynamic batcher: groups queued requests into executable-sized batches.
+//!
+//! The compiled step executables exist for batch sizes {1, 8}; the batcher
+//! drains the queue into groups of up to 8, waiting at most `flush_ms`
+//! after the first request before dispatching a partial batch (classic
+//! deadline-based dynamic batching, vLLM-style). A single waiting request
+//! takes the latency-optimal b=1 executables.
+
+use std::time::{Duration, Instant};
+
+use crate::threadpool::Channel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatcherCfg {
+    pub max_batch: usize,
+    pub flush_ms: u64,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 8, flush_ms: 20 }
+    }
+}
+
+/// Drain the next batch from `queue`. Blocks until at least one item is
+/// available (or the channel closes → None), then collects up to
+/// `cfg.max_batch` items within the flush window.
+pub fn next_batch<T>(queue: &Channel<T>, cfg: &BatcherCfg) -> Option<Vec<T>> {
+    let first = queue.recv()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + Duration::from_millis(cfg.flush_ms);
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match queue.recv_timeout(deadline - now) {
+            Some(item) => batch.push(item),
+            None => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_up_to_max_batch() {
+        let ch = Channel::bounded(32);
+        for i in 0..12 {
+            ch.try_send(i).unwrap();
+        }
+        let cfg = BatcherCfg { max_batch: 8, flush_ms: 5 };
+        let b1 = next_batch(&ch, &cfg).unwrap();
+        assert_eq!(b1, (0..8).collect::<Vec<_>>());
+        let b2 = next_batch(&ch, &cfg).unwrap();
+        assert_eq!(b2, (8..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flush_deadline_dispatches_partial_batch() {
+        let ch = Channel::bounded(8);
+        ch.try_send(1).unwrap();
+        let cfg = BatcherCfg { max_batch: 8, flush_ms: 15 };
+        let t0 = Instant::now();
+        let b = next_batch(&ch, &cfg).unwrap();
+        assert_eq!(b, vec![1]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(10), "{waited:?}");
+        assert!(waited < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_queue_returns_none() {
+        let ch: Channel<u32> = Channel::bounded(2);
+        ch.close();
+        assert!(next_batch(&ch, &BatcherCfg::default()).is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let ch = Channel::bounded(8);
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            ch2.send(2).unwrap();
+        });
+        ch.try_send(1).unwrap();
+        let cfg = BatcherCfg { max_batch: 8, flush_ms: 60 };
+        let b = next_batch(&ch, &cfg).unwrap();
+        t.join().unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with robust statistics, and a
+//! table printer that renders the paper-style rows the `rust/benches/*`
+//! binaries emit. `cargo bench` runs these via `harness = false`.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(2) as f64;
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        Stats {
+            n,
+            mean_s: mean,
+            median_s: pct(0.5),
+            p10_s: pct(0.1),
+            p90_s: pct(0.9),
+            min_s: samples[0],
+            max_s: samples[n - 1],
+            std_s: var.sqrt(),
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time a single run of `f`, returning (result, seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+// ---------------------------------------------------------------------------
+// paper-style table printer
+// ---------------------------------------------------------------------------
+
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Also write a CSV next to stdout output for figure pipelines.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 10.0);
+        assert!(s.p10_s <= s.median_s && s.median_s <= s.p90_s);
+        assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut calls = 0;
+        let s = bench(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("333"));
+        assert!(r.contains("== T =="));
+    }
+}
+
+/// Per-cell sample count for table benches: `ESDLLM_BENCH_N` overrides
+/// (the default keeps full `cargo bench` under the single-core budget).
+pub fn bench_n(default: usize) -> usize {
+    std::env::var("ESDLLM_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Arch list filter: `ESDLLM_BENCH_ARCH=llada-nano` restricts multi-arch
+/// benches.
+pub fn bench_archs() -> Vec<String> {
+    match std::env::var("ESDLLM_BENCH_ARCH") {
+        Ok(a) if !a.is_empty() => vec![a],
+        _ => vec!["llada-nano".to_string(), "dream-nano".to_string()],
+    }
+}

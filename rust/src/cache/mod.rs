@@ -1,0 +1,497 @@
+//! Decode-state caches for one batched sequence group, plus the refresh
+//! scheduler (paper §5.2, Table 5).
+//!
+//! Host-owned state (bf16 raw bits for KV/indicator, f32 for
+//! logits/confidence) that streams through the stateless step executables:
+//!
+//!   * KV cache            [L, 2, B, Hkv, T, hd]  (T = ctx, or pruned)
+//!   * indicator caches    per indicator: [L, B, gen, d] — all layers so
+//!                         any skip config can be served from one prefill
+//!   * latest logits       [B, gen, V] and confidence [B, gen]
+//!
+//! The step executable returns only the *block slice* of updated KV and
+//! indicator rows; [`GroupCaches::scatter_kv_block`] folds those back in.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::Dims;
+use crate::runtime::tensor::HostTensor;
+
+#[derive(Debug, Clone)]
+pub struct GroupCaches {
+    pub dims: Dims,
+    pub batch: usize,
+    /// dense KV cache [L, 2, B, Hkv, ctx, hd] (bf16 bits)
+    pub kv: Vec<u16>,
+    /// pruned KV cache for sparse attention [L, 2, B, Hkv, keep_len, hd]
+    pub kv_sparse: Option<SparseKv>,
+    /// indicator caches by name ("h", "q", "k", "v"): [L, B, gen, d]
+    pub ind: std::collections::BTreeMap<&'static str, Vec<u16>>,
+    /// latest logits per gen position [B, gen, V]
+    pub logits: Vec<f32>,
+    /// latest confidence per gen position [B, gen]
+    pub conf: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SparseKv {
+    /// [L, 2, B, Hkv, keep_len, hd] bf16 bits
+    pub kv: Vec<u16>,
+    /// retained prompt rows per batch element [B, keep_prompt] (sorted)
+    pub keep_idx: Vec<Vec<usize>>,
+    pub keep_prompt: usize,
+}
+
+pub const INDICATORS: [&str; 4] = ["h", "q", "k", "v"];
+
+impl GroupCaches {
+    pub fn new(dims: &Dims, batch: usize) -> GroupCaches {
+        let d = dims;
+        let kv_len = d.n_layers * 2 * batch * d.n_kv_heads * d.ctx * d.head_dim;
+        let ind_len = d.n_layers * batch * d.gen_len * d.d_model;
+        GroupCaches {
+            dims: d.clone(),
+            batch,
+            kv: vec![0; kv_len],
+            kv_sparse: None,
+            ind: INDICATORS.iter().map(|i| (*i, vec![0u16; ind_len])).collect(),
+            logits: vec![0.0; batch * d.gen_len * d.vocab],
+            conf: vec![0.0; batch * d.gen_len],
+        }
+    }
+
+    // -- index helpers ----------------------------------------------------
+
+    /// offset into the dense KV cache at (layer, k_or_v, b, h, t, 0)
+    fn kv_off(&self, t_len: usize, l: usize, s: usize, b: usize, h: usize, t: usize) -> usize {
+        let d = &self.dims;
+        ((((l * 2 + s) * self.batch + b) * d.n_kv_heads + h) * t_len + t) * d.head_dim
+    }
+
+    // -- refresh from a prefill pass ---------------------------------------
+
+    /// Overwrite all caches from prefill outputs
+    /// (logits, kv, ind_h, ind_q, ind_k, ind_v, attn_mass).
+    pub fn refresh_from_prefill(&mut self, outputs: &[HostTensor]) -> Result<()> {
+        let d = &self.dims;
+        let logits_full = outputs[0].as_f32()?;
+        let v = d.vocab;
+        // keep only the gen region of logits
+        for b in 0..self.batch {
+            for g in 0..d.gen_len {
+                let src = (b * d.ctx + d.prompt_len + g) * v;
+                let dst = (b * d.gen_len + g) * v;
+                self.logits[dst..dst + v].copy_from_slice(&logits_full[src..src + v]);
+            }
+        }
+        self.kv.copy_from_slice(outputs[1].as_bf16()?);
+        for (i, name) in INDICATORS.iter().enumerate() {
+            self.ind.get_mut(name).unwrap().copy_from_slice(outputs[2 + i].as_bf16()?);
+        }
+        self.recompute_conf();
+        Ok(())
+    }
+
+    /// Confidence = max softmax probability per gen position.
+    pub fn recompute_conf(&mut self) {
+        let v = self.dims.vocab;
+        for i in 0..self.batch * self.dims.gen_len {
+            let row = &self.logits[i * v..(i + 1) * v];
+            self.conf[i] = softmax_max(row);
+        }
+    }
+
+    // -- step-executable I/O ------------------------------------------------
+
+    /// Gather the indicator-cache rows for `layers` into the step input
+    /// tensor [n_ind, B, gen, d].
+    pub fn gather_ind(&self, indicator: &str, layers: &[usize]) -> Result<HostTensor> {
+        let d = &self.dims;
+        let src = self
+            .ind
+            .get(indicator)
+            .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
+        let row = self.batch * d.gen_len * d.d_model;
+        let mut data = Vec::with_capacity(layers.len().max(1) * row);
+        if layers.is_empty() {
+            data.resize(row, 0); // n_ind >= 1 dummy slot
+        }
+        for &l in layers {
+            data.extend_from_slice(&src[l * row..(l + 1) * row]);
+        }
+        Ok(HostTensor::Bf16 {
+            shape: vec![layers.len().max(1), self.batch, d.gen_len, d.d_model],
+            data,
+        })
+    }
+
+    /// Scatter a returned indicator block [n_ind, B, block, d] at
+    /// `block_start` (absolute) back into the per-layer cache rows.
+    pub fn scatter_ind_block(
+        &mut self,
+        indicator: &str,
+        layers: &[usize],
+        block_start: usize,
+        block: usize,
+        t: &HostTensor,
+    ) -> Result<()> {
+        let d_model = self.dims.d_model;
+        let gen_len = self.dims.gen_len;
+        let batch = self.batch;
+        let g0 = block_start - self.dims.prompt_len;
+        let data = t.as_bf16()?;
+        let dst = self
+            .ind
+            .get_mut(indicator)
+            .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
+        for (i, &l) in layers.iter().enumerate() {
+            for b in 0..batch {
+                for j in 0..block {
+                    let src = (((i * batch) + b) * block + j) * d_model;
+                    let dstoff = ((l * batch + b) * gen_len + g0 + j) * d_model;
+                    dst[dstoff..dstoff + d_model]
+                        .copy_from_slice(&data[src..src + d_model]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter a returned KV block [L, 2, B, Hkv, block, hd] into the dense
+    /// cache at absolute position `block_start`.
+    pub fn scatter_kv_block(
+        &mut self,
+        block_start: usize,
+        block: usize,
+        t: &HostTensor,
+    ) -> Result<()> {
+        let d = self.dims.clone();
+        let hd = d.head_dim;
+        let data = t.as_bf16()?;
+        let mut src = 0;
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for b in 0..self.batch {
+                    for h in 0..d.n_kv_heads {
+                        let dst = self.kv_off(d.ctx, l, s, b, h, block_start);
+                        self.kv[dst..dst + block * hd]
+                            .copy_from_slice(&data[src..src + block * hd]);
+                        src += block * hd;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Same, into the pruned sparse cache (block rows live at
+    /// `keep_prompt + (block_start - prompt_len)`).
+    pub fn scatter_kv_block_sparse(
+        &mut self,
+        block_start: usize,
+        block: usize,
+        t: &HostTensor,
+    ) -> Result<()> {
+        let d = self.dims.clone();
+        let batch = self.batch;
+        let hd = d.head_dim;
+        let data = t.as_bf16()?;
+        let sp = self.kv_sparse.as_mut().ok_or_else(|| anyhow!("no sparse cache"))?;
+        let keep_len = sp.keep_prompt + d.gen_len;
+        let row0 = sp.keep_prompt + (block_start - d.prompt_len);
+        let mut src = 0;
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for b in 0..batch {
+                    for h in 0..d.n_kv_heads {
+                        let dst = ((((l * 2 + s) * batch + b) * d.n_kv_heads + h)
+                            * keep_len
+                            + row0)
+                            * hd;
+                        sp.kv[dst..dst + block * hd]
+                            .copy_from_slice(&data[src..src + block * hd]);
+                        src += block * hd;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge computed logits (`logits` [B, k, V] at absolute positions
+    /// `pos` [B, k]) into the latest-logits state and refresh confidences
+    /// for those positions. Skipped positions keep their stale
+    /// logits/confidence — exactly the paper's reuse semantics.
+    pub fn merge_step_logits(&mut self, logits: &HostTensor, pos: &HostTensor) -> Result<()> {
+        let d = &self.dims;
+        let v = d.vocab;
+        let lg = logits.as_f32()?;
+        let ps = pos.as_i32()?;
+        let k = logits.shape()[1];
+        for b in 0..self.batch {
+            for j in 0..k {
+                let p = ps[b * k + j] as usize;
+                let g = p - d.prompt_len;
+                let dst = (b * d.gen_len + g) * v;
+                let src = (b * k + j) * v;
+                self.logits[dst..dst + v].copy_from_slice(&lg[src..src + v]);
+                self.conf[b * d.gen_len + g] = softmax_max(&lg[src..src + v]);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn kv_tensor(&self) -> HostTensor {
+        let d = &self.dims;
+        HostTensor::Bf16 {
+            shape: vec![d.n_layers, 2, self.batch, d.n_kv_heads, d.ctx, d.head_dim],
+            data: self.kv.clone(),
+        }
+    }
+
+    pub fn kv_sparse_tensor(&self) -> Result<HostTensor> {
+        let d = &self.dims;
+        let sp = self.kv_sparse.as_ref().ok_or_else(|| anyhow!("no sparse cache"))?;
+        Ok(HostTensor::Bf16 {
+            shape: vec![
+                d.n_layers,
+                2,
+                self.batch,
+                d.n_kv_heads,
+                sp.keep_prompt + d.gen_len,
+                d.head_dim,
+            ],
+            data: sp.kv.clone(),
+        })
+    }
+
+    pub fn conf_tensor(&self) -> HostTensor {
+        HostTensor::F32 {
+            shape: vec![self.batch, self.dims.gen_len],
+            data: self.conf.clone(),
+        }
+    }
+
+    // -- sparse-attention selection (Sparse-dLLM analog) --------------------
+
+    /// Rebuild the pruned KV cache from the dense one: per batch element,
+    /// retain the `keep_prompt` prompt rows with the highest
+    /// kernel-smoothed attention mass, then all gen rows.
+    pub fn rebuild_sparse(
+        &mut self,
+        attn_mass: &HostTensor,
+        keep_prompt: usize,
+        smooth_kernel: usize,
+    ) -> Result<()> {
+        let d = self.dims.clone();
+        let mass = attn_mass.as_f32()?;
+        let mut keep_idx = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let row = &mass[b * d.ctx..b * d.ctx + d.prompt_len];
+            let smoothed = smooth(row, smooth_kernel);
+            let mut order: Vec<usize> = (0..d.prompt_len).collect();
+            order.sort_by(|&i, &j| smoothed[j].partial_cmp(&smoothed[i]).unwrap());
+            let mut keep: Vec<usize> = order[..keep_prompt].to_vec();
+            keep.sort();
+            keep_idx.push(keep);
+        }
+        let keep_len = keep_prompt + d.gen_len;
+        let hd = d.head_dim;
+        let mut kv =
+            vec![0u16; d.n_layers * 2 * self.batch * d.n_kv_heads * keep_len * hd];
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for b in 0..self.batch {
+                    for h in 0..d.n_kv_heads {
+                        let base_dst =
+                            (((l * 2 + s) * self.batch + b) * d.n_kv_heads + h) * keep_len;
+                        // retained prompt rows
+                        for (r, &src_t) in keep_idx[b].iter().enumerate() {
+                            let srco = self.kv_off(d.ctx, l, s, b, h, src_t);
+                            let dsto = (base_dst + r) * hd;
+                            kv[dsto..dsto + hd]
+                                .copy_from_slice(&self.kv[srco..srco + hd]);
+                        }
+                        // full gen region
+                        let srco = self.kv_off(d.ctx, l, s, b, h, d.prompt_len);
+                        let dsto = (base_dst + keep_prompt) * hd;
+                        kv[dsto..dsto + d.gen_len * hd]
+                            .copy_from_slice(&self.kv[srco..srco + d.gen_len * hd]);
+                    }
+                }
+            }
+        }
+        self.kv_sparse = Some(SparseKv { kv, keep_idx, keep_prompt });
+        Ok(())
+    }
+}
+
+fn smooth(xs: &[f32], kernel: usize) -> Vec<f32> {
+    if kernel <= 1 {
+        return xs.to_vec();
+    }
+    let half = kernel / 2;
+    (0..xs.len())
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(xs.len());
+            xs[lo..hi].iter().sum::<f32>() / (hi - lo) as f32
+        })
+        .collect()
+}
+
+pub fn softmax_max(row: &[f32]) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = row.iter().map(|x| (x - m).exp()).sum();
+    1.0 / denom // exp(m - m) / sum = 1/denom
+}
+
+// ---------------------------------------------------------------------------
+// refresh scheduling (paper Table 5 / 6)
+// ---------------------------------------------------------------------------
+
+/// Per-benchmark refresh policy: prompt refresh every `prompt_period`
+/// iterations (global), block refresh every `block_period` iterations
+/// within a block. A prefill at every block start grounds the new block
+/// (DualCache does this implicitly; the periods add the ES cadence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RefreshPolicy {
+    pub prompt_period: usize,
+    pub block_period: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPlan {
+    /// full forward (prompt refresh / vanilla / block-start grounding)
+    Prefill,
+    /// full-block step, no skipping (block refresh / DualCache step)
+    DualStep,
+    /// early-skip step
+    EsStep,
+}
+
+impl RefreshPolicy {
+    /// Decide the compute for (global iteration g, iteration-within-block
+    /// i_b) of an ES-dLLM run.
+    pub fn plan_es(&self, g: usize, i_b: usize) -> StepPlan {
+        if i_b == 0 || (self.prompt_period > 0 && g % self.prompt_period == 0) {
+            StepPlan::Prefill
+        } else if self.block_period > 0 && i_b % self.block_period == 0 {
+            StepPlan::DualStep
+        } else {
+            StepPlan::EsStep
+        }
+    }
+
+    /// DualCache baseline: prefill at block start, dual step otherwise.
+    pub fn plan_dual(i_b: usize) -> StepPlan {
+        if i_b == 0 {
+            StepPlan::Prefill
+        } else {
+            StepPlan::DualStep
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims {
+            vocab: 8, d_model: 4, n_layers: 2, n_heads: 2, n_kv_heads: 1,
+            d_ff: 8, head_dim: 2, prompt_len: 4, gen_len: 4, ctx: 8,
+        }
+    }
+
+    #[test]
+    fn softmax_max_uniform_row() {
+        let c = softmax_max(&[0.0, 0.0, 0.0, 0.0]);
+        assert!((c - 0.25).abs() < 1e-6);
+        let c2 = softmax_max(&[10.0, 0.0, 0.0, 0.0]);
+        assert!(c2 > 0.99);
+    }
+
+    #[test]
+    fn merge_step_logits_updates_only_computed_positions() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 1);
+        c.logits.fill(1.0);
+        c.recompute_conf();
+        let before = c.conf.clone();
+        let logits = HostTensor::F32 {
+            shape: vec![1, 1, 8],
+            data: vec![9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        };
+        let pos = HostTensor::I32 { shape: vec![1, 1], data: vec![5] };
+        c.merge_step_logits(&logits, &pos).unwrap();
+        assert!(c.conf[1] > 0.9); // gen idx 1 (pos 5 - prompt 4) updated
+        assert_eq!(c.conf[0], before[0]);
+        assert_eq!(c.logits[(1 * 8) as usize], 9.0);
+    }
+
+    #[test]
+    fn kv_scatter_block_roundtrip() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 1);
+        // block = gen region rows 0..2 at absolute pos 4..6
+        let block = 2;
+        let n = d.n_layers * 2 * 1 * d.n_kv_heads * block * d.head_dim;
+        let data: Vec<u16> = (0..n as u16).collect();
+        let t = HostTensor::Bf16 {
+            shape: vec![d.n_layers, 2, 1, d.n_kv_heads, block, d.head_dim],
+            data: data.clone(),
+        };
+        c.scatter_kv_block(4, block, &t).unwrap();
+        // layer 0, k, b0, h0, t=4..6 should hold rows 0..block
+        let off = c.kv_off(d.ctx, 0, 0, 0, 0, 4);
+        assert_eq!(&c.kv[off..off + block * d.head_dim], &data[..block * d.head_dim]);
+        // untouched region stays zero
+        let off2 = c.kv_off(d.ctx, 0, 0, 0, 0, 0);
+        assert!(c.kv[off2..off2 + 4 * d.head_dim].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn sparse_rebuild_retains_top_mass_rows() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 1);
+        for (i, v) in c.kv.iter_mut().enumerate() {
+            *v = i as u16;
+        }
+        let mass = HostTensor::F32 {
+            shape: vec![1, d.ctx],
+            data: vec![0.1, 0.9, 0.8, 0.05, 0.0, 0.0, 0.0, 0.0],
+        };
+        c.rebuild_sparse(&mass, 2, 1).unwrap();
+        let sp = c.kv_sparse.as_ref().unwrap();
+        assert_eq!(sp.keep_idx[0], vec![1, 2]);
+        let keep_len = 2 + d.gen_len;
+        assert_eq!(
+            sp.kv.len(),
+            d.n_layers * 2 * d.n_kv_heads * keep_len * d.head_dim
+        );
+        // first retained row equals dense row t=1 of layer0/k/h0
+        let src = c.kv_off(d.ctx, 0, 0, 0, 0, 1);
+        assert_eq!(&sp.kv[..d.head_dim], &c.kv[src..src + d.head_dim]);
+    }
+
+    #[test]
+    fn refresh_plan_cadence() {
+        let p = RefreshPolicy { prompt_period: 8, block_period: 2 };
+        // block of 4: i_b 0 → prefill; odd iters es; even (non-0) dual
+        assert_eq!(p.plan_es(0, 0), StepPlan::Prefill);
+        assert_eq!(p.plan_es(1, 1), StepPlan::EsStep);
+        assert_eq!(p.plan_es(2, 2), StepPlan::DualStep);
+        assert_eq!(p.plan_es(3, 3), StepPlan::EsStep);
+        assert_eq!(p.plan_es(8, 4), StepPlan::Prefill); // global prompt period
+        assert_eq!(RefreshPolicy::plan_dual(0), StepPlan::Prefill);
+        assert_eq!(RefreshPolicy::plan_dual(3), StepPlan::DualStep);
+    }
+
+    #[test]
+    fn smooth_is_mean_filter() {
+        let s = smooth(&[0.0, 3.0, 0.0], 3);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+        assert_eq!(smooth(&[1.0, 2.0], 1), vec![1.0, 2.0]);
+    }
+}

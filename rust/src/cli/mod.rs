@@ -1,0 +1,117 @@
+//! CLI argument-parsing substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    spec: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    /// Parse from an explicit arg list (first element = argv[1]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse() -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Declare an option for usage output (returns self for chaining).
+    pub fn declare(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.spec.push((name.into(), default.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut u = format!("usage: {prog} [options]\n");
+        for (n, d, h) in &self.spec {
+            u.push_str(&format!("  --{n:<24} {h} (default: {d})\n"));
+        }
+        u
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn kv_forms() {
+        // note: a bare `--flag` consumes a following non-flag token as its
+        // value; boolean flags go last or use `--flag=true`
+        let a = parse(&["--x", "1", "--y=2", "pos", "--flag"]);
+        assert_eq!(a.usize("x", 0), 1);
+        assert_eq!(a.usize("y", 0), 2);
+        assert!(a.bool("flag"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str("model", "llada"), "llada");
+        assert_eq!(a.f64("alpha", 0.5), 0.5);
+        assert!(!a.bool("nothing"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

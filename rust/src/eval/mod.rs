@@ -1,0 +1,233 @@
+//! Benchmark evaluation: per-benchmark generation settings (the paper's
+//! Tables 4–6 analogs) and the runner that produces (TPS, score) rows for
+//! every method — the machinery behind all table benches.
+
+use anyhow::Result;
+
+use crate::cache::RefreshPolicy;
+use crate::engine::{Engine, EngineCfg, Method};
+use crate::runtime::Runtime;
+use crate::sampler::SamplerCfg;
+use crate::workload::{self, EvalItem};
+
+/// Per-benchmark generation configuration (Table 4 analog: gen/block
+/// lengths scaled 256→32; the chain/MATH benchmark decodes its whole
+/// output as a single block).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchCfg {
+    pub bench: &'static str,
+    pub block: usize,
+    /// ES-dLLM refresh periods (Table 5 analog)
+    pub refresh: RefreshPolicy,
+    /// ES-dLLM* refresh periods (Table 6 analog)
+    pub refresh_star: RefreshPolicy,
+}
+
+pub const BENCH_CFGS: [BenchCfg; 5] = [
+    BenchCfg {
+        bench: "arith",
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 4 },
+        refresh_star: RefreshPolicy { prompt_period: 8, block_period: 2 },
+    },
+    BenchCfg {
+        bench: "chain",
+        block: 32,
+        refresh: RefreshPolicy { prompt_period: 33, block_period: 8 },
+        refresh_star: RefreshPolicy { prompt_period: 16, block_period: 4 },
+    },
+    BenchCfg {
+        bench: "logic",
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 4 },
+        refresh_star: RefreshPolicy { prompt_period: 8, block_period: 2 },
+    },
+    BenchCfg {
+        bench: "codegen",
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+        refresh_star: RefreshPolicy { prompt_period: 8, block_period: 2 },
+    },
+    BenchCfg {
+        bench: "listops",
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+        refresh_star: RefreshPolicy { prompt_period: 8, block_period: 2 },
+    },
+];
+
+pub fn bench_cfg(bench: &str) -> BenchCfg {
+    BENCH_CFGS
+        .iter()
+        .find(|c| c.bench == bench)
+        .copied()
+        .unwrap_or(BENCH_CFGS[0])
+}
+
+/// Result of evaluating one (benchmark, method) cell.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub bench: &'static str,
+    pub method: String,
+    pub tps: f64,
+    pub score: f64,
+    pub n_samples: usize,
+    pub iterations: usize,
+    pub n_prefill: usize,
+    pub n_dual: usize,
+    pub n_es: usize,
+    pub wall_s: f64,
+}
+
+impl EvalResult {
+    pub fn speedup_vs(&self, baseline: &EvalResult) -> f64 {
+        self.tps / baseline.tps
+    }
+}
+
+/// Options modifying a base engine config for a table variant.
+#[derive(Debug, Clone, Default)]
+pub struct EvalOpts {
+    pub checkpoint: Option<String>,
+    pub parallel_threshold: Option<f32>,
+    pub sparse: bool,
+    pub alpha: Option<f32>,
+    pub indicator: Option<String>,
+    pub es_exe_override: Option<String>,
+    pub refresh_star: bool,
+    pub sampler: Option<SamplerCfg>,
+}
+
+/// Build the engine config for (arch, method, benchmark, opts).
+pub fn engine_cfg(arch: &str, method: Method, bc: &BenchCfg, opts: &EvalOpts) -> EngineCfg {
+    let mut cfg = EngineCfg::new(arch, method);
+    cfg.block = bc.block;
+    cfg.refresh = if opts.refresh_star { bc.refresh_star } else { bc.refresh };
+    if let Some(ck) = &opts.checkpoint {
+        cfg.checkpoint = ck.clone();
+    }
+    if let Some(t) = opts.parallel_threshold {
+        cfg.sampler = cfg.sampler.with_parallel(t);
+    }
+    if let Some(s) = opts.sampler {
+        cfg.sampler = s;
+    }
+    cfg.sparse = opts.sparse;
+    if let Some(a) = opts.alpha {
+        cfg.alpha = a;
+    }
+    if let Some(i) = &opts.indicator {
+        cfg.indicator = i.clone();
+    }
+    cfg.es_exe_override = opts.es_exe_override.clone();
+    cfg
+}
+
+/// Evaluate one (arch, method, benchmark) cell over `n` samples in batched
+/// groups of 8 (the paper's batch size).
+pub fn evaluate(
+    rt: &Runtime,
+    arch: &str,
+    method: Method,
+    bench: &'static str,
+    n: usize,
+    opts: &EvalOpts,
+) -> Result<EvalResult> {
+    let bc = bench_cfg(bench);
+    let items: Vec<EvalItem> = workload::eval_set(bench, n);
+    let cfg = engine_cfg(arch, method, &bc, opts);
+    let mut engine = Engine::new(rt, cfg);
+    // compile outside the measurement window (PJRT compiles cost seconds;
+    // leaving them inside would understate the first cells' TPS)
+    engine.precompile(if n <= 1 { 1 } else { 8 })?;
+
+    let mut correct = 0usize;
+    let mut res = EvalResult {
+        bench,
+        method: method_label(method, opts),
+        tps: 0.0,
+        score: 0.0,
+        n_samples: n,
+        iterations: 0,
+        n_prefill: 0,
+        n_dual: 0,
+        n_es: 0,
+        wall_s: 0.0,
+    };
+    for group in items.chunks(8) {
+        let prompts: Vec<String> = group.iter().map(|i| i.prompt.clone()).collect();
+        let g = engine.generate(&prompts)?;
+        for (item, text) in group.iter().zip(&g.texts) {
+            if workload::score(&item.answer, text) {
+                correct += 1;
+            }
+        }
+        res.iterations += g.iterations;
+        res.n_prefill += g.n_prefill;
+        res.n_dual += g.n_dual;
+        res.n_es += g.n_es;
+        res.wall_s += g.wall_s;
+    }
+    let gen_len = rt.manifest.generation.gen_len;
+    res.tps = (n * gen_len) as f64 / res.wall_s;
+    res.score = 100.0 * correct as f64 / n as f64;
+    Ok(res)
+}
+
+pub fn method_label(method: Method, opts: &EvalOpts) -> String {
+    let mut label = method.label().to_string();
+    if opts.refresh_star {
+        label.push('*');
+    }
+    if opts.parallel_threshold.is_some() {
+        label.push_str("+PD");
+    }
+    if opts.sparse {
+        label.push_str("+Sparse");
+    }
+    if let Some(ck) = &opts.checkpoint {
+        if ck == "base" {
+            label.push_str(" (base)");
+        }
+    }
+    label
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_cfg_lookup() {
+        assert_eq!(bench_cfg("chain").block, 32);
+        assert_eq!(bench_cfg("arith").block, 8);
+        // unknown falls back to the first config
+        assert_eq!(bench_cfg("nope").bench, "arith");
+    }
+
+    #[test]
+    fn labels_compose() {
+        let mut o = EvalOpts::default();
+        o.parallel_threshold = Some(0.9);
+        o.sparse = true;
+        assert_eq!(method_label(Method::EsDllm, &o), "ES-dLLM+PD+Sparse");
+        o = EvalOpts { refresh_star: true, ..Default::default() };
+        assert_eq!(method_label(Method::EsDllm, &o), "ES-dLLM*");
+    }
+
+    #[test]
+    fn engine_cfg_applies_opts() {
+        let bc = bench_cfg("arith");
+        let opts = EvalOpts {
+            alpha: Some(0.25),
+            indicator: Some("q".into()),
+            checkpoint: Some("base".into()),
+            ..Default::default()
+        };
+        let cfg = engine_cfg("llada-nano", Method::EsDllm, &bc, &opts);
+        assert_eq!(cfg.alpha, 0.25);
+        assert_eq!(cfg.indicator, "q");
+        assert_eq!(cfg.checkpoint, "base");
+        assert_eq!(cfg.block, 8);
+    }
+}

@@ -1,0 +1,167 @@
+//! Analytic FLOPs model + roofline estimates (paper §7 and Tables 9–10's
+//! "FLOPs Prop." column).
+//!
+//! Counts matmul FLOPs (2·m·n·k) of the transformer forward per
+//! plan kind, accounting for the early-skip active-set sizes per layer.
+//! Also models the per-iteration byte traffic of the stateless-executable
+//! design, which is this testbed's analog of the paper's memory-bandwidth
+//! wall (§7: ES reduces FLOPs but not weight/cache traffic).
+
+use crate::manifest::Dims;
+
+/// FLOPs of one transformer layer over `s` active tokens against a KV
+/// context of `t` rows.
+fn layer_flops(d: &Dims, s: usize, t: usize) -> f64 {
+    let dm = d.d_model as f64;
+    let dkv = (d.n_kv_heads * d.head_dim) as f64;
+    let ff = d.d_ff as f64;
+    let s = s as f64;
+    let t = t as f64;
+    let qo = 2.0 * s * dm * dm * 2.0;           // Q proj + O proj
+    let kv = 2.0 * s * dm * dkv * 2.0;          // K + V proj
+    let attn = 2.0 * s * t * dm * 2.0;          // QK^T + PV (all heads)
+    let ffn = 2.0 * s * dm * ff * 3.0;          // SwiGLU: gate, up, down
+    qo + kv + attn + ffn
+}
+
+fn head_flops(d: &Dims, s: usize) -> f64 {
+    2.0 * s as f64 * d.d_model as f64 * d.vocab as f64
+}
+
+/// Active-set size entering each layer for a skip spec.
+pub fn active_sizes(d: &Dims, block: usize, skip: &[(usize, f64)]) -> Vec<usize> {
+    let map: std::collections::BTreeMap<usize, f64> = skip.iter().cloned().collect();
+    let mut s = block;
+    (0..d.n_layers)
+        .map(|l| {
+            let cur = s;
+            if let Some(r) = map.get(&l) {
+                s = ((s as f64 * (1.0 - r)).round() as usize).max(1);
+            }
+            cur
+        })
+        .collect()
+}
+
+/// FLOPs of one full forward over the whole context (prefill / vanilla).
+pub fn prefill_flops(d: &Dims) -> f64 {
+    let per_layer = layer_flops(d, d.ctx, d.ctx);
+    per_layer * d.n_layers as f64 + head_flops(d, d.ctx)
+}
+
+/// FLOPs of one block step with the given skip spec and KV length.
+pub fn step_flops(d: &Dims, block: usize, skip: &[(usize, f64)], kv_len: usize) -> f64 {
+    let sizes = active_sizes(d, block, skip);
+    let mut total = 0.0;
+    for s in &sizes {
+        total += layer_flops(d, *s, kv_len);
+    }
+    let final_s = {
+        let map: std::collections::BTreeMap<usize, f64> = skip.iter().cloned().collect();
+        let mut s = block;
+        for l in 0..d.n_layers {
+            if let Some(r) = map.get(&l) {
+                s = ((s as f64 * (1.0 - r)).round() as usize).max(1);
+            }
+        }
+        s
+    };
+    total + head_flops(d, final_s)
+}
+
+/// FLOPs proportion of an ES config vs the DualCache baseline at the same
+/// block size — the paper's Table 9 "FLOPs Prop." column.
+pub fn flops_proportion(d: &Dims, block: usize, skip: &[(usize, f64)]) -> f64 {
+    step_flops(d, block, skip, d.ctx) / step_flops(d, block, &[], d.ctx)
+}
+
+/// Whole-run FLOPs given iteration counts by plan kind.
+pub fn run_flops(
+    d: &Dims,
+    block: usize,
+    skip: &[(usize, f64)],
+    n_prefill: usize,
+    n_dual: usize,
+    n_es: usize,
+) -> f64 {
+    n_prefill as f64 * prefill_flops(d)
+        + n_dual as f64 * step_flops(d, block, &[], d.ctx)
+        + n_es as f64 * step_flops(d, block, skip, d.ctx)
+}
+
+// ---------------------------------------------------------------------------
+// traffic model (the stateless-executable analog of the paper's §7
+// memory-bandwidth analysis)
+// ---------------------------------------------------------------------------
+
+/// Bytes streamed per step iteration: params are resident, but the KV and
+/// indicator caches are uploaded each call and block slices come back.
+pub fn step_traffic_bytes(d: &Dims, block: usize, n_ind: usize, kv_len: usize) -> u64 {
+    let kv_up = d.n_layers * 2 * 8 * d.n_kv_heads * kv_len * d.head_dim * 2;
+    let ind_up = n_ind * 8 * d.gen_len * d.d_model * 2;
+    let conf_up = 8 * d.gen_len * 4;
+    let kv_down = d.n_layers * 2 * 8 * d.n_kv_heads * block * d.head_dim * 2;
+    let ind_down = n_ind * 8 * block * d.d_model * 2;
+    let logits_down = 8 * block * d.vocab * 4;
+    (kv_up + ind_up + conf_up + kv_down + ind_down + logits_down) as u64
+}
+
+/// Paper §7 memory-overhead analog: bytes of cache state per sequence.
+pub fn cache_bytes_per_seq(d: &Dims, n_ind: usize) -> u64 {
+    let kv = d.n_layers * 2 * d.n_kv_heads * d.ctx * d.head_dim * 2;
+    let ind = n_ind * d.gen_len * d.d_model * 2;
+    let logits = d.gen_len * d.vocab * 4;
+    (kv + ind + logits) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims {
+            vocab: 64, d_model: 128, n_layers: 8, n_heads: 8, n_kv_heads: 8,
+            d_ff: 384, head_dim: 16, prompt_len: 48, gen_len: 32, ctx: 80,
+        }
+    }
+
+    #[test]
+    fn skip_reduces_flops_monotonically() {
+        let d = dims();
+        let none = step_flops(&d, 8, &[], 80);
+        let half = step_flops(&d, 8, &[(1, 0.5), (2, 0.5)], 80);
+        let more = step_flops(&d, 8, &[(0, 0.9)], 80);
+        assert!(half < none);
+        assert!(more < half);
+    }
+
+    #[test]
+    fn default_skip_proportion_in_paper_ballpark() {
+        // paper: r4=r8=0.5 at 32 layers → ~40% of DualCache FLOPs.
+        // nano (8 layers, skips at 1,2) leaves slightly more early compute,
+        // so expect ~40-60%.
+        let p = flops_proportion(&dims(), 8, &[(1, 0.5), (2, 0.5)]);
+        assert!(p > 0.3 && p < 0.7, "proportion {p}");
+    }
+
+    #[test]
+    fn active_sizes_follow_spec() {
+        let d = dims();
+        let sizes = active_sizes(&d, 8, &[(1, 0.5), (2, 0.5)]);
+        assert_eq!(sizes, vec![8, 8, 4, 2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn vanilla_dominates_dual() {
+        let d = dims();
+        assert!(prefill_flops(&d) > 5.0 * step_flops(&d, 8, &[], 80));
+    }
+
+    #[test]
+    fn sparse_kv_cuts_traffic() {
+        let d = dims();
+        let dense = step_traffic_bytes(&d, 8, 2, 80);
+        let sparse = step_traffic_bytes(&d, 8, 2, 56);
+        assert!(sparse < dense);
+    }
+}

@@ -1,0 +1,364 @@
+//! HTTP/1.1 substrate: a small threaded server and a blocking client
+//! (hyper/axum/reqwest are unavailable offline).
+//!
+//! Supports the subset the serving front end needs: GET/POST, fixed
+//! `Content-Length` bodies, keep-alive, JSON payloads. One handler
+//! function serves all routes; connections are dispatched on a
+//! [`crate::threadpool::ThreadPool`].
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::threadpool::ThreadPool;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Response {
+            status,
+            content_type: "application/json".into(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Response {
+            status,
+            content_type: "text/plain".into(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn not_found() -> Self {
+        Self::text(404, "not found")
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
+
+pub struct Server {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind (port 0 = ephemeral) and serve on `threads` pooled workers.
+    pub fn start(bind: &str, threads: usize, handler: Handler) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("httpd-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(threads, "httpd");
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = handler.clone();
+                            pool.execute(move || {
+                                let _ = serve_conn(stream, h);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_conn(stream: TcpStream, handler: Handler) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    loop {
+        let req = match read_request(&mut reader)? {
+            Some(r) => r,
+            None => return Ok(()), // client closed
+        };
+        let keep_alive = !matches!(
+            req.header("connection").map(|s| s.to_ascii_lowercase()),
+            Some(ref c) if c == "close"
+        );
+        let resp = handler(&req);
+        write_response(&mut stream, &resp, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn read_request<R: BufRead>(r: &mut R) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    if method.is_empty() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad request line"));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Ok(None);
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        r.read_exact(&mut body)?;
+    }
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+fn write_response(w: &mut impl Write, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    };
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        reason,
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// blocking client (used by examples / integration tests / load generator)
+// ---------------------------------------------------------------------------
+
+pub struct Client {
+    addr: SocketAddr,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Client {
+    pub fn new(addr: SocketAddr) -> Client {
+        Client { addr, conn: None }
+    }
+
+    fn ensure_conn(&mut self) -> std::io::Result<()> {
+        if self.conn.is_none() {
+            let s = TcpStream::connect(self.addr)?;
+            s.set_nodelay(true).ok();
+            self.conn = Some(BufReader::new(s));
+        }
+        Ok(())
+    }
+
+    pub fn get(&mut self, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+        self.request("GET", path, b"")
+    }
+
+    pub fn post(&mut self, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+        self.request("POST", path, body)
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        self.ensure_conn()?;
+        let result = self.request_inner(method, path, body);
+        if result.is_err() {
+            // retry once on a fresh connection (server may have dropped a
+            // kept-alive socket)
+            self.conn = None;
+            self.ensure_conn()?;
+            return self.request_inner(method, path, body);
+        }
+        result
+    }
+
+    fn request_inner(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let reader = self.conn.as_mut().unwrap();
+        {
+            let stream = reader.get_mut();
+            write!(
+                stream,
+                "{method} {path} HTTP/1.1\r\nHost: esdllm\r\nContent-Length: {}\r\n\r\n",
+                body.len()
+            )?;
+            stream.write_all(body)?;
+            stream.flush()?;
+        }
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status"))?;
+        let mut len = 0usize;
+        let mut close = false;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+            if lower.starts_with("connection:") && lower.contains("close") {
+                close = true;
+            }
+        }
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        if close {
+            self.conn = None;
+        }
+        Ok((status, buf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        let handler: Handler = Arc::new(|req: &Request| match req.path.as_str() {
+            "/healthz" => Response::text(200, "ok"),
+            "/echo" => Response::json(200, req.body_str().to_string()),
+            _ => Response::not_found(),
+        });
+        Server::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn get_and_post_roundtrip() {
+        let server = echo_server();
+        let mut c = Client::new(server.addr);
+        let (st, body) = c.get("/healthz").unwrap();
+        assert_eq!((st, body.as_slice()), (200, b"ok".as_slice()));
+        let (st, body) = c.post("/echo", br#"{"x":1}"#).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body, br#"{"x":1}"#);
+    }
+
+    #[test]
+    fn keep_alive_multiple_requests() {
+        let server = echo_server();
+        let mut c = Client::new(server.addr);
+        for i in 0..10 {
+            let payload = format!("req{i}");
+            let (st, body) = c.post("/echo", payload.as_bytes()).unwrap();
+            assert_eq!(st, 200);
+            assert_eq!(body, payload.as_bytes());
+        }
+    }
+
+    #[test]
+    fn unknown_route_404() {
+        let server = echo_server();
+        let mut c = Client::new(server.addr);
+        let (st, _) = c.get("/nope").unwrap();
+        assert_eq!(st, 404);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = echo_server();
+        let addr = server.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = Client::new(addr);
+                    for i in 0..20 {
+                        let p = format!("t{t}-{i}");
+                        let (st, body) = c.post("/echo", p.as_bytes()).unwrap();
+                        assert_eq!(st, 200);
+                        assert_eq!(body, p.as_bytes());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

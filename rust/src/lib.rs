@@ -1,0 +1,40 @@
+//! ES-dLLM: Efficient Inference for Diffusion Large Language Models by
+//! Early-Skipping — a production-style reproduction.
+//!
+//! Three-layer architecture:
+//!   * Layer 1 (build time): Pallas kernels under `python/compile/kernels/`.
+//!   * Layer 2 (build time): JAX diffusion-transformer step functions under
+//!     `python/compile/model.py`, AOT-lowered to HLO text in `artifacts/`.
+//!   * Layer 3 (this crate): the serving coordinator — request routing,
+//!     dynamic batching, KV/hidden/confidence cache management, the
+//!     early-skip decode engine, refresh policies, sampling, metrics and an
+//!     HTTP front end. Python never runs on the request path.
+
+pub mod analysis;
+pub mod batcher;
+pub mod bench;
+pub mod cache;
+pub mod cli;
+pub mod engine;
+pub mod eval;
+pub mod flops;
+pub mod manifest;
+pub mod metrics;
+pub mod router;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod weights;
+pub mod httpd;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,47 @@
+//! `log` facade backend: timestamped stderr logger with env-controlled
+//! level (`ESDLLM_LOG=debug|info|warn|error`, default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+        eprintln!(
+            "[{:>10.3} {:5} {}] {}",
+            t.as_secs_f64() % 100_000.0,
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent: returns false if one is already set).
+pub fn init() -> bool {
+    let level = match std::env::var("ESDLLM_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let ok = log::set_boxed_logger(Box::new(StderrLogger { level })).is_ok();
+    if ok {
+        log::set_max_level(LevelFilter::Trace);
+    }
+    ok
+}

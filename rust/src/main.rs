@@ -1,0 +1,148 @@
+//! `esdllm` CLI — leader entrypoint for the ES-dLLM serving stack.
+//!
+//! Subcommands:
+//!   serve     start the HTTP serving front end
+//!   generate  one-shot generation from a prompt
+//!   eval      run a benchmark cell (method × benchmark) and print TPS/score
+//!   info      print manifest / artifact summary
+
+use anyhow::{anyhow, Result};
+
+use esdllm::batcher::BatcherCfg;
+use esdllm::cli::Args;
+use esdllm::engine::{Engine, EngineCfg, Method};
+use esdllm::eval::{self, EvalOpts};
+use esdllm::router::{Router, RouterCfg};
+use esdllm::runtime::{default_artifacts_dir, Runtime};
+use esdllm::server::{serve, ServeCfg};
+
+fn method_from_str(s: &str) -> Result<Method> {
+    Ok(match s {
+        "vanilla" => Method::Vanilla,
+        "dual" | "dualcache" => Method::DualCache,
+        "es" | "es-dllm" => Method::EsDllm,
+        other => return Err(anyhow!("unknown method {other} (vanilla|dual|es)")),
+    })
+}
+
+fn usage() -> String {
+    "usage: esdllm <serve|generate|eval|info> [options]\n\
+     \n\
+     common options:\n\
+       --arch <llada-nano|dream-nano>   model architecture (default llada-nano)\n\
+       --checkpoint <instruct|base>     weights (default instruct)\n\
+       --method <vanilla|dual|es>       decode method (default es)\n\
+       --artifacts <dir>                artifacts dir (default ./artifacts)\n\
+     serve:\n\
+       --bind <addr:port>               listen address (default 127.0.0.1:8311)\n\
+       --flush-ms <n>                   batcher flush window (default 20)\n\
+     generate:\n\
+       --prompt <text>                  prompt to complete\n\
+     eval:\n\
+       --bench <arith|chain|logic|codegen|listops>\n\
+       --n <samples>                    eval set size (default 32)\n\
+       --parallel <threshold>           enable parallel decoding\n\
+       --sparse                         enable sparse attention\n"
+        .to_string()
+}
+
+fn main() -> Result<()> {
+    esdllm::logging::init();
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let arch = args.str("arch", "llada-nano");
+    let artifacts = std::path::PathBuf::from(
+        args.str("artifacts", &default_artifacts_dir().display().to_string()),
+    );
+    let method = method_from_str(&args.str("method", "es"))?;
+
+    let mut engine_cfg = EngineCfg::new(&arch, method);
+    engine_cfg.checkpoint = args.str("checkpoint", "instruct");
+    if let Some(t) = args.opt("parallel") {
+        engine_cfg.sampler = engine_cfg
+            .sampler
+            .with_parallel(t.parse().map_err(|_| anyhow!("bad --parallel"))?);
+    }
+    engine_cfg.sparse = args.bool("sparse");
+
+    match cmd.as_str() {
+        "serve" => {
+            let router = Router::start(RouterCfg {
+                engine: engine_cfg,
+                batcher: BatcherCfg {
+                    max_batch: 8,
+                    flush_ms: args.u64("flush-ms", 20),
+                },
+                queue_cap: args.usize("queue-cap", 256),
+                workers: args.usize("workers", 1),
+                artifacts_dir: artifacts,
+            });
+            let cfg = ServeCfg {
+                bind: args.str("bind", "127.0.0.1:8311"),
+                http_threads: args.usize("http-threads", 4),
+            };
+            let server = serve(&cfg, router.clone())?;
+            println!("esdllm serving on http://{} (arch={arch})", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "generate" => {
+            let prompt = args.str("prompt", "sort(5,2,9)=");
+            let rt = Runtime::load(&artifacts)?;
+            let mut engine = Engine::new(&rt, engine_cfg);
+            let res = engine.generate(&[prompt.clone()])?;
+            println!("{prompt} -> {}", res.texts[0]);
+            println!(
+                "{} iterations ({}p/{}d/{}e) in {:.3}s",
+                res.iterations, res.n_prefill, res.n_dual, res.n_es, res.wall_s
+            );
+        }
+        "eval" => {
+            let bench: &'static str = match args.str("bench", "arith").as_str() {
+                "arith" => "arith",
+                "chain" => "chain",
+                "logic" => "logic",
+                "codegen" => "codegen",
+                "listops" => "listops",
+                other => return Err(anyhow!("unknown bench {other}")),
+            };
+            let rt = Runtime::load(&artifacts)?;
+            let opts = EvalOpts {
+                checkpoint: Some(args.str("checkpoint", "instruct")),
+                parallel_threshold: args
+                    .opt("parallel")
+                    .and_then(|t| t.parse().ok()),
+                sparse: args.bool("sparse"),
+                ..Default::default()
+            };
+            let n = args.usize("n", 32);
+            let res = eval::evaluate(&rt, &arch, method, bench, n, &opts)?;
+            println!(
+                "{} / {} / {}: TPS {:.2}  score {:.2}%  ({} iters: {}p/{}d/{}e)",
+                arch, res.method, bench, res.tps, res.score, res.iterations,
+                res.n_prefill, res.n_dual, res.n_es
+            );
+        }
+        "info" => {
+            let rt = Runtime::load(&artifacts)?;
+            let g = &rt.manifest.generation;
+            println!(
+                "artifacts: {} (ctx {} = prompt {} + gen {}, vocab {})",
+                artifacts.display(), g.ctx, g.prompt_len, g.gen_len, g.vocab
+            );
+            for (name, a) in &rt.manifest.archs {
+                println!(
+                    "  {name}: {} layers, d={}, heads {}/{}kv, {} executables, checkpoints {:?}",
+                    a.dims.n_layers, a.dims.d_model, a.dims.n_heads,
+                    a.dims.n_kv_heads, a.executables.len(),
+                    a.checkpoints.keys().collect::<Vec<_>>()
+                );
+            }
+        }
+        _ => {
+            print!("{}", usage());
+        }
+    }
+    Ok(())
+}

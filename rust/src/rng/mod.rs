@@ -1,0 +1,128 @@
+//! PRNG substrate: SplitMix64 (matching `python/compile/tasks.py` exactly so
+//! both sides generate identical eval sets) plus the sampling distributions
+//! the coordinator needs (uniform, categorical, Poisson/exponential
+//! arrivals).
+
+#[derive(Debug, Clone)]
+pub struct SplitMix {
+    state: u64,
+}
+
+impl SplitMix {
+    pub fn new(seed: u64) -> Self {
+        SplitMix { state: seed }
+    }
+
+    pub fn next64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in [0, n). Matches the python `below` (mod-based —
+    /// the tiny modulo bias is irrelevant and determinism matters more).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next64() % n
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponential inter-arrival time with the given rate (per second).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = self.f64().max(1e-12);
+        -u.ln() / rate
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|w| *w as f64).sum();
+        if total <= 0.0 {
+            return self.below(weights.len() as u64) as usize;
+        }
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= *w as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_splitmix() {
+        // reference values produced by python/compile/tasks.py SplitMix(42)
+        let mut r = SplitMix::new(42);
+        let got: Vec<u64> = (0..4).map(|_| r.next64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                13679457532755275413,
+                2949826092126892291,
+                5139283748462763858,
+                6349198060258255764,
+            ]
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix::new(7);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn categorical_respects_zero_weights() {
+        let mut r = SplitMix::new(3);
+        for _ in 0..100 {
+            let i = r.categorical(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+
+    #[test]
+    fn range_is_inclusive() {
+        let mut r = SplitMix::new(1);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[(r.range(5, 7) - 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix::new(9);
+        let mut v: Vec<u32> = (0..20).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,213 @@
+//! Request router: the leader loop connecting the HTTP front end to
+//! engine worker threads.
+//!
+//! PJRT objects are not `Send`, so each worker thread constructs its own
+//! [`Runtime`] + [`Engine`] and pulls request batches from a shared
+//! bounded queue (backpressure: `try_submit` fails when the queue is
+//! full → HTTP 429/503). Responses travel back through per-request
+//! oneshot slots.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::batcher::{next_batch, BatcherCfg};
+use crate::engine::{Engine, EngineCfg};
+use crate::metrics::Metrics;
+use crate::runtime::Runtime;
+use crate::threadpool::Channel;
+
+pub struct GenRequest {
+    pub prompt: String,
+    pub submitted: std::time::Instant,
+    reply: OneShot<Result<GenReply, String>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenReply {
+    pub text: String,
+    pub iterations: usize,
+    pub wall_s: f64,
+}
+
+/// Minimal oneshot built on Mutex + Condvar.
+pub struct OneShot<T>(Arc<(Mutex<Option<T>>, Condvar)>);
+
+impl<T> Clone for OneShot<T> {
+    fn clone(&self) -> Self {
+        OneShot(self.0.clone())
+    }
+}
+
+impl<T> OneShot<T> {
+    pub fn new() -> Self {
+        OneShot(Arc::new((Mutex::new(None), Condvar::new())))
+    }
+
+    pub fn put(&self, v: T) {
+        *self.0 .0.lock().unwrap() = Some(v);
+        self.0 .1.notify_all();
+    }
+
+    pub fn wait(&self) -> T {
+        let mut g = self.0 .0.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = self.0 .1.wait(g).unwrap();
+        }
+    }
+}
+
+impl<T> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Clone)]
+pub struct Router {
+    queue: Channel<GenRequest>,
+    pub metrics: Arc<Metrics>,
+}
+
+pub struct RouterCfg {
+    pub engine: EngineCfg,
+    pub batcher: BatcherCfg,
+    pub queue_cap: usize,
+    pub workers: usize,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Router {
+    /// Spawn worker threads and return the router handle. Each worker owns
+    /// a full Runtime (PJRT client + compiled executables + params).
+    pub fn start(cfg: RouterCfg) -> Router {
+        let queue: Channel<GenRequest> = Channel::bounded(cfg.queue_cap.max(1));
+        let metrics = Arc::new(Metrics::default());
+        metrics.start_clock();
+        for w in 0..cfg.workers.max(1) {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let engine_cfg = cfg.engine.clone();
+            let batcher = cfg.batcher;
+            let dir = cfg.artifacts_dir.clone();
+            std::thread::Builder::new()
+                .name(format!("engine-{w}"))
+                .spawn(move || worker_loop(queue, metrics, engine_cfg, batcher, dir))
+                .expect("spawn engine worker");
+        }
+        Router { queue, metrics }
+    }
+
+    /// Enqueue a request; returns a oneshot to wait on, or Err when the
+    /// queue is full (backpressure).
+    pub fn try_submit(&self, prompt: String) -> Result<OneShot<Result<GenReply, String>>, ()> {
+        let reply = OneShot::new();
+        let req = GenRequest {
+            prompt,
+            submitted: std::time::Instant::now(),
+            reply: reply.clone(),
+        };
+        match self.queue.try_send(req) {
+            Ok(()) => {
+                self.metrics.requests_total.inc();
+                Ok(reply)
+            }
+            Err(_) => {
+                self.metrics.requests_rejected.inc();
+                Err(())
+            }
+        }
+    }
+
+    /// Blocking submit (used by the load generator / tests).
+    pub fn submit(&self, prompt: String) -> Result<OneShot<Result<GenReply, String>>, ()> {
+        let reply = OneShot::new();
+        let req = GenRequest {
+            prompt,
+            submitted: std::time::Instant::now(),
+            reply: reply.clone(),
+        };
+        self.queue.send(req).map_err(|_| ())?;
+        self.metrics.requests_total.inc();
+        Ok(reply)
+    }
+
+    pub fn shutdown(&self) {
+        self.queue.close();
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+fn worker_loop(
+    queue: Channel<GenRequest>,
+    metrics: Arc<Metrics>,
+    engine_cfg: EngineCfg,
+    batcher: BatcherCfg,
+    artifacts_dir: std::path::PathBuf,
+) {
+    let rt = match Runtime::load(&artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            log::error!("engine worker failed to load runtime: {e:#}");
+            // drain queue with errors so clients aren't stuck
+            while let Some(req) = queue.recv() {
+                req.reply.put(Err(format!("runtime unavailable: {e}")));
+            }
+            return;
+        }
+    };
+    let mut engine = Engine::new(&rt, engine_cfg);
+    while let Some(batch) = next_batch(&queue, &batcher) {
+        metrics.batches_total.inc();
+        metrics.batch_occupancy_sum.add(batch.len() as u64);
+        for req in &batch {
+            metrics
+                .queue_latency
+                .observe_secs(req.submitted.elapsed().as_secs_f64());
+        }
+        let prompts: Vec<String> = batch.iter().map(|r| r.prompt.clone()).collect();
+        match engine.generate(&prompts) {
+            Ok(res) => {
+                metrics.tokens_generated.add(res.tokens_generated as u64);
+                metrics.iterations_total.add(res.iterations as u64);
+                metrics.prefill_steps.add(res.n_prefill as u64);
+                metrics.dual_steps.add(res.n_dual as u64);
+                metrics.es_steps.add(res.n_es as u64);
+                for (req, text) in batch.iter().zip(res.texts.iter()) {
+                    let lat = req.submitted.elapsed().as_secs_f64();
+                    metrics.request_latency.observe_secs(lat);
+                    req.reply.put(Ok(GenReply {
+                        text: text.clone(),
+                        iterations: res.iterations,
+                        wall_s: res.wall_s,
+                    }));
+                }
+            }
+            Err(e) => {
+                log::error!("generate failed: {e:#}");
+                for req in &batch {
+                    req.reply.put(Err(format!("{e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oneshot_roundtrip() {
+        let s: OneShot<u32> = OneShot::new();
+        let s2 = s.clone();
+        std::thread::spawn(move || s2.put(7));
+        assert_eq!(s.wait(), 7);
+    }
+}

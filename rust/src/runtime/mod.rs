@@ -1,0 +1,306 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them on the CPU PJRT
+//! client, keeps model parameters resident as device buffers, and runs
+//! decode-step executables with [`HostTensor`] I/O.
+//!
+//! Threading model: PJRT wrapper types hold raw pointers and are not
+//! `Send`/`Sync`; each engine worker thread owns its own `Runtime`
+//! (the CPU client is cheap). The coordinator communicates with workers
+//! over channels, never sharing runtime objects.
+
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::{ArchSpec, DType, ExeSpec, Manifest};
+use crate::tokenizer::Tokenizer;
+use crate::weights::Checkpoint;
+use tensor::HostTensor;
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub tokenizer: Tokenizer,
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    params: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    /// cumulative counters for §Perf accounting
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub exec_seconds: f64,
+    pub transfer_seconds: f64,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir: PathBuf = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let tokenizer = Tokenizer::load(&dir.join("vocab.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        Ok(Runtime {
+            manifest,
+            tokenizer,
+            client,
+            exes: RefCell::new(HashMap::new()),
+            params: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.manifest.arch(name)
+    }
+
+    /// Compile (and cache) an executable by `(arch, exe)` name.
+    pub fn executable(
+        &self,
+        arch: &ArchSpec,
+        exe: &ExeSpec,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}/{}", arch.name, exe.name);
+        if let Some(e) = self.exes.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.root.join(&exe.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let compiled = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", exe.name))?;
+        log::info!(
+            "compiled {key} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let rc = Rc::new(compiled);
+        self.exes.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Load (and cache) a checkpoint's parameters as resident device
+    /// buffers, keyed by `(arch, checkpoint)`.
+    pub fn checkpoint_params(
+        &self,
+        arch: &ArchSpec,
+        checkpoint: &str,
+    ) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        let key = format!("{}/{checkpoint}", arch.name);
+        if let Some(p) = self.params.borrow().get(&key) {
+            return Ok(p.clone());
+        }
+        let file = arch
+            .checkpoints
+            .get(checkpoint)
+            .ok_or_else(|| anyhow!("arch {} has no checkpoint {checkpoint}", arch.name))?;
+        let ck = Checkpoint::load(&self.manifest.root.join(file), arch)?;
+        let mut buffers = Vec::with_capacity(ck.tensors.len());
+        for (name, shape, data) in &ck.tensors {
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .map_err(|e| anyhow!("uploading param {name}: {e}"))?;
+            buffers.push(buf);
+        }
+        log::info!(
+            "loaded checkpoint {key}: {} tensors, {} params",
+            ck.tensors.len(),
+            ck.total_params()
+        );
+        let rc = Rc::new(buffers);
+        self.params.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host tensor. For bf16 the returned [`xla::Literal`] MUST be
+    /// kept alive until the buffer has been consumed: PJRT's
+    /// `BufferFromHostLiteral` copies asynchronously, so dropping the
+    /// literal early is a use-after-free (manifests as nondeterministic
+    /// `shape_util.cc` CHECK failures / segfaults).
+    ///
+    /// (The direct raw-bytes route is unusable here: the xla crate's
+    /// `buffer_from_host_raw_bytes` passes `ElementType as i32` where the C
+    /// API expects a `PrimitiveType`, mapping Bf16 → F32.)
+    pub fn upload_tensor(
+        &self,
+        t: &HostTensor,
+    ) -> Result<(xla::PjRtBuffer, Option<xla::Literal>)> {
+        let dims = t.shape().to_vec();
+        match t {
+            HostTensor::F32 { data, .. } => self
+                .client
+                .buffer_from_host_buffer::<f32>(data, &dims, None)
+                .map(|b| (b, None))
+                .map_err(|e| anyhow!("upload: {e}")),
+            HostTensor::I32 { data, .. } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, &dims, None)
+                .map(|b| (b, None))
+                .map_err(|e| anyhow!("upload: {e}")),
+            HostTensor::Bf16 { data, .. } => {
+                let mut bytes = Vec::with_capacity(data.len() * 2);
+                for v in data {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                let lit = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::Bf16,
+                    &dims,
+                    &bytes,
+                )
+                .map_err(|e| anyhow!("bf16 literal: {e}"))?;
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload: {e}"))?;
+                Ok((buf, Some(lit)))
+            }
+        }
+    }
+
+    fn literal_to_host(&self, lit: &xla::Literal, sig_dtype: DType) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("output shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        Ok(match sig_dtype {
+            DType::F32 => HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+            },
+            DType::I32 => HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+            },
+            DType::Bf16 => {
+                // no typed bf16 host access in the xla crate: convert to f32
+                // on the literal then re-narrow (exact — values are bf16)
+                let as_f32 = lit
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("bf16->f32: {e}"))?;
+                let data = as_f32.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+                HostTensor::Bf16 { shape: dims, data: tensor::f32s_to_bf16(&data) }
+            }
+        })
+    }
+
+    /// Execute `(arch, exe, checkpoint)` with non-parameter inputs
+    /// `inputs` (order per the manifest). Returns host tensors for every
+    /// output in manifest order.
+    pub fn run(
+        &self,
+        arch: &ArchSpec,
+        exe: &ExeSpec,
+        checkpoint: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        if inputs.len() != exe.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                exe.name,
+                exe.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (t, sig) in inputs.iter().zip(&exe.inputs) {
+            if t.shape() != sig.shape.as_slice() || t.dtype() != sig.dtype {
+                return Err(anyhow!(
+                    "{}: input {} shape/dtype mismatch: got {:?} {:?}, want {:?} {:?}",
+                    exe.name, sig.name, t.shape(), t.dtype(), sig.shape, sig.dtype
+                ));
+            }
+        }
+        let compiled = self.executable(arch, exe)?;
+        let params = self.checkpoint_params(arch, checkpoint)?;
+
+        let t_up = std::time::Instant::now();
+        // keep bf16 literals alive until after execution (async H2D copy)
+        let uploads: Vec<(xla::PjRtBuffer, Option<xla::Literal>)> =
+            inputs.iter().map(|t| self.upload_tensor(t)).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(params.len() + inputs.len());
+        args.extend(params.iter());
+        args.extend(uploads.iter().map(|(b, _)| b));
+        let upload_s = t_up.elapsed().as_secs_f64();
+
+        let t_exec = std::time::Instant::now();
+        let out = compiled
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", exe.name))?;
+        let exec_s = t_exec.elapsed().as_secs_f64();
+
+        let t_down = std::time::Instant::now();
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download {}: {e}", exe.name))?;
+        let literals = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if literals.len() != exe.outputs.len() {
+            return Err(anyhow!(
+                "{}: got {} outputs, manifest says {}",
+                exe.name,
+                literals.len(),
+                exe.outputs.len()
+            ));
+        }
+        let outputs: Vec<HostTensor> = literals
+            .iter()
+            .zip(&exe.outputs)
+            .map(|(l, sig)| self.literal_to_host(l, sig.dtype))
+            .collect::<Result<_>>()?;
+        let download_s = t_down.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.upload_bytes +=
+            inputs.iter().map(|t| (t.elements() * t.dtype().bytes()) as u64).sum::<u64>();
+        st.download_bytes +=
+            outputs.iter().map(|t| (t.elements() * t.dtype().bytes()) as u64).sum::<u64>();
+        st.exec_seconds += exec_s;
+        st.transfer_seconds += upload_s + download_s;
+        Ok(outputs)
+    }
+
+    pub fn take_stats(&self) -> RuntimeStats {
+        std::mem::take(&mut *self.stats.borrow_mut())
+    }
+}
+
+/// Locate the artifacts directory: $ESDLLM_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("ESDLLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl Runtime {
+    /// Context for error messages when artifacts are missing.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = default_artifacts_dir();
+        Self::load(&dir).with_context(|| {
+            format!(
+                "loading artifacts from {} (run `make artifacts` first, or set \
+                 ESDLLM_ARTIFACTS)",
+                dir.display()
+            )
+        })
+    }
+}
+
+impl Runtime {
+    /// Debug helper: compile without the Rc cache.
+    pub fn client_compile(&self, exe: &ExeSpec) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.root.join(&exe.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling: {e}"))
+    }
+}

@@ -1,0 +1,148 @@
+//! Host-side tensor type crossing the Rust ↔ PJRT boundary.
+//!
+//! Caches travel as bf16 (half the upload bandwidth of f32 — the
+//! interchange analog of the paper's BF16 KV caches); bf16 payloads are
+//! stored as raw u16 bit patterns since no host math is ever done on them.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::DType;
+
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    Bf16 { shape: Vec<usize>, data: Vec<u16> },
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] },
+            DType::I32 => HostTensor::I32 { shape: shape.to_vec(), data: vec![0; n] },
+            DType::Bf16 => HostTensor::Bf16 { shape: shape.to_vec(), data: vec![0; n] },
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::I32 { shape, .. }
+            | HostTensor::Bf16 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+            HostTensor::Bf16 { .. } => DType::Bf16,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn as_bf16(&self) -> Result<&[u16]> {
+        match self {
+            HostTensor::Bf16 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not bf16")),
+        }
+    }
+
+    pub fn as_bf16_mut(&mut self) -> Result<&mut [u16]> {
+        match self {
+            HostTensor::Bf16 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not bf16")),
+        }
+    }
+}
+
+/// f32 → bf16 bits, round-to-nearest-even (exact for values that were
+/// bf16 upstream, which is the cache round-trip case).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return 0x7FC0;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+pub fn f32s_to_bf16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|x| f32_to_bf16(*x)).collect()
+}
+
+pub fn bf16s_to_f32(xs: &[u16]) -> Vec<f32> {
+    xs.iter().map(|b| bf16_to_f32(*b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_roundtrip_exact_for_bf16_values() {
+        for bits in [0u16, 0x3F80, 0xBF80, 0x4000, 0x7F7F, 0x0080] {
+            let f = bf16_to_f32(bits);
+            assert_eq!(f32_to_bf16(f), bits, "bits {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-8 rounds down to 1.0; 1.0 + 3*2^-9 rounds up
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 1.0 / 512.0)), 1.0);
+        let up = bf16_to_f32(f32_to_bf16(1.0 + 3.0 / 512.0));
+        assert!(up > 1.0);
+    }
+
+    #[test]
+    fn nan_maps_to_quiet_nan() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn zeros_matches_dtype() {
+        let t = HostTensor::zeros(DType::Bf16, &[2, 3]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.dtype(), DType::Bf16);
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,355 @@
+//! Remasking / unmasking policies (paper §2, §B.2 and Fast-dLLM's
+//! confidence-aware parallel decoding).
+//!
+//! Two families mirror the paper's subjects:
+//!   * `LowConfidence` — LLaDA's low-confidence remasking: unmask the
+//!     single highest-confidence masked position per iteration.
+//!   * `MaskgitPlus`   — Dream's maskgit-plus: same position selection,
+//!     token drawn with top-k/top-p/temperature sampling.
+//!
+//! Parallel decoding additionally unmasks *every* masked position whose
+//! confidence exceeds a threshold (≥1 position per iteration).
+//! The EOS guard (paper §B.2) suppresses EOS at a position while the last
+//! gen position is still masked.
+
+use crate::rng::SplitMix;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// LLaDA: argmax token at the highest-confidence masked position
+    LowConfidence,
+    /// Dream: top-k/top-p sampled token (equals argmax at temperature 0)
+    MaskgitPlus { top_k: usize, top_p: f32 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerCfg {
+    pub strategy: Strategy,
+    pub temperature: f32,
+    /// confidence-aware parallel decoding threshold (None = one token/iter)
+    pub parallel_threshold: Option<f32>,
+    /// suppress EOS while the final gen position is masked (paper §B.2)
+    pub eos_guard: bool,
+}
+
+impl SamplerCfg {
+    pub fn llada() -> SamplerCfg {
+        SamplerCfg {
+            strategy: Strategy::LowConfidence,
+            temperature: 0.0,
+            parallel_threshold: None,
+            eos_guard: true,
+        }
+    }
+
+    pub fn dream() -> SamplerCfg {
+        SamplerCfg {
+            // vocab is 64; the paper's k=50 top-k maps to 20 here
+            strategy: Strategy::MaskgitPlus { top_k: 20, top_p: 0.95 },
+            temperature: 0.0,
+            parallel_threshold: None,
+            eos_guard: true,
+        }
+    }
+
+    pub fn with_parallel(mut self, threshold: f32) -> SamplerCfg {
+        self.parallel_threshold = Some(threshold);
+        self
+    }
+}
+
+/// One sequence's view for an unmask decision over the current block.
+pub struct UnmaskInput<'a> {
+    /// latest logits rows for gen positions [gen, V]
+    pub logits: &'a [f32],
+    /// latest confidence per gen position [gen]
+    pub conf: &'a [f32],
+    /// current gen-region tokens [gen] (mask id where still masked)
+    pub gen_tokens: &'a [i32],
+    /// block bounds within the gen region
+    pub block_lo: usize,
+    pub block_hi: usize,
+    pub vocab: usize,
+    pub mask_id: i32,
+    pub eos_id: i32,
+}
+
+/// Positions (gen-region indices) + tokens chosen to unmask this iteration.
+#[derive(Debug, Clone, Default)]
+pub struct UnmaskDecision {
+    pub positions: Vec<usize>,
+    pub tokens: Vec<i32>,
+}
+
+pub fn decide_unmask(
+    cfg: &SamplerCfg,
+    inp: &UnmaskInput,
+    rng: &mut SplitMix,
+) -> UnmaskDecision {
+    let masked: Vec<usize> = (inp.block_lo..inp.block_hi)
+        .filter(|&g| inp.gen_tokens[g] == inp.mask_id)
+        .collect();
+    if masked.is_empty() {
+        return UnmaskDecision::default();
+    }
+    let best = masked
+        .iter()
+        .cloned()
+        .max_by(|&a, &b| inp.conf[a].partial_cmp(&inp.conf[b]).unwrap())
+        .unwrap();
+
+    let mut positions = vec![best];
+    if let Some(th) = cfg.parallel_threshold {
+        for &g in &masked {
+            if g != best && inp.conf[g] > th {
+                positions.push(g);
+            }
+        }
+        positions.sort();
+    }
+
+    // EOS guard (§B.2): an EOS at position g would truncate any content to
+    // its right, so suppress EOS while a *later* position already holds a
+    // non-EOS token (with EOS-fill training the tail legitimately wants
+    // EOS, so a blanket "last token masked" rule would corrupt it).
+    let non_eos_after = |g: usize| {
+        inp.gen_tokens[g + 1..]
+            .iter()
+            .any(|&t| t != inp.mask_id && t != inp.eos_id)
+    };
+
+    let tokens = positions
+        .iter()
+        .map(|&g| {
+            let row = &inp.logits[g * inp.vocab..(g + 1) * inp.vocab];
+            sample_token(
+                cfg,
+                row,
+                rng,
+                (cfg.eos_guard && non_eos_after(g)).then_some(inp.eos_id),
+                inp.mask_id,
+            )
+        })
+        .collect();
+    UnmaskDecision { positions, tokens }
+}
+
+/// Sample a token from a logits row, excluding `suppress` (EOS guard) and
+/// the mask id (never emit the mask token).
+pub fn sample_token(
+    cfg: &SamplerCfg,
+    logits: &[f32],
+    rng: &mut SplitMix,
+    suppress: Option<i32>,
+    mask_id: i32,
+) -> i32 {
+    let mut row: Vec<f32> = logits.to_vec();
+    row[mask_id as usize] = f32::NEG_INFINITY;
+    if let Some(sup) = suppress {
+        row[sup as usize] = f32::NEG_INFINITY;
+    }
+
+    if cfg.temperature <= 0.0 {
+        return argmax(&row) as i32;
+    }
+
+    // temperature scaling
+    for x in row.iter_mut() {
+        *x /= cfg.temperature;
+    }
+    // top-k / top-p filtering for maskgit-plus
+    if let Strategy::MaskgitPlus { top_k, top_p } = cfg.strategy {
+        let mut order: Vec<usize> = (0..row.len()).collect();
+        order.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        if top_k > 0 {
+            for &i in order.iter().skip(top_k) {
+                row[i] = f32::NEG_INFINITY;
+            }
+        }
+        if top_p < 1.0 {
+            let probs = softmax(&row);
+            let mut cum = 0.0;
+            let mut cut = row.len();
+            for (rank, &i) in order.iter().enumerate() {
+                cum += probs[i];
+                if cum >= top_p {
+                    cut = rank + 1;
+                    break;
+                }
+            }
+            for &i in order.iter().skip(cut) {
+                row[i] = f32::NEG_INFINITY;
+            }
+        }
+    }
+    let probs = softmax(&row);
+    rng.categorical(&probs) as i32
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        return vec![0.0; xs.len()];
+    }
+    let exps: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_with_peak(v: usize, peak: usize, val: f32) -> Vec<f32> {
+        let mut row = vec![0.0; v];
+        row[peak] = val;
+        row
+    }
+
+    #[test]
+    fn greedy_unmasks_highest_confidence_position() {
+        let v = 8;
+        let mut logits = vec![0.0; 4 * v];
+        logits[(1 * v)..(1 * v + v)].copy_from_slice(&logits_with_peak(v, 5, 9.0));
+        let conf = vec![0.3, 0.99, 0.2, 0.1];
+        let gen_tokens = vec![1, 1, 1, 7]; // mask=1; last not masked
+        let inp = UnmaskInput {
+            logits: &logits,
+            conf: &conf,
+            gen_tokens: &gen_tokens,
+            block_lo: 0,
+            block_hi: 4,
+            vocab: v,
+            mask_id: 1,
+            eos_id: 2,
+        };
+        let mut rng = SplitMix::new(1);
+        let d = decide_unmask(&SamplerCfg::llada(), &inp, &mut rng);
+        assert_eq!(d.positions, vec![1]);
+        assert_eq!(d.tokens, vec![5]);
+    }
+
+    #[test]
+    fn parallel_decoding_unmasks_above_threshold() {
+        let v = 8;
+        let logits = vec![0.0; 4 * v];
+        let conf = vec![0.95, 0.99, 0.2, 0.96];
+        let gen_tokens = vec![1, 1, 1, 1];
+        let inp = UnmaskInput {
+            logits: &logits,
+            conf: &conf,
+            gen_tokens: &gen_tokens,
+            block_lo: 0,
+            block_hi: 4,
+            vocab: v,
+            mask_id: 1,
+            eos_id: 2,
+        };
+        let mut rng = SplitMix::new(1);
+        let cfg = SamplerCfg::llada().with_parallel(0.9);
+        let d = decide_unmask(&cfg, &inp, &mut rng);
+        assert_eq!(d.positions, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn eos_guard_suppresses_eos_before_existing_content() {
+        let v = 8;
+        // EOS (id 2) is the argmax; token 4 is second
+        let mut logits = vec![0.0; 2 * v];
+        logits[0..v].copy_from_slice(&{
+            let mut r = logits_with_peak(v, 2, 9.0);
+            r[4] = 5.0;
+            r
+        });
+        let conf = vec![0.9, 0.1];
+        let gen_tokens = vec![1, 5]; // later position holds content (id 5)
+        let inp = UnmaskInput {
+            logits: &logits,
+            conf: &conf,
+            gen_tokens: &gen_tokens,
+            block_lo: 0,
+            block_hi: 2,
+            vocab: v,
+            mask_id: 1,
+            eos_id: 2,
+        };
+        let mut rng = SplitMix::new(1);
+        let d = decide_unmask(&SamplerCfg::llada(), &inp, &mut rng);
+        assert_eq!(d.positions, vec![0]);
+        assert_eq!(d.tokens, vec![4], "EOS must be suppressed before content");
+
+        // without guard it picks EOS
+        let mut cfg = SamplerCfg::llada();
+        cfg.eos_guard = false;
+        let d2 = decide_unmask(&cfg, &inp, &mut rng);
+        assert_eq!(d2.tokens, vec![2]);
+    }
+
+    #[test]
+    fn eos_guard_allows_tail_eos_fill() {
+        let v = 8;
+        let logits = logits_with_peak(v, 2, 9.0); // EOS is argmax
+        let conf = vec![0.9];
+        let gen_tokens = vec![1]; // single masked tail position
+        let inp = UnmaskInput {
+            logits: &logits,
+            conf: &conf,
+            gen_tokens: &gen_tokens,
+            block_lo: 0,
+            block_hi: 1,
+            vocab: v,
+            mask_id: 1,
+            eos_id: 2,
+        };
+        let mut rng = SplitMix::new(1);
+        let d = decide_unmask(&SamplerCfg::llada(), &inp, &mut rng);
+        assert_eq!(d.tokens, vec![2], "tail EOS must be allowed");
+    }
+
+    #[test]
+    fn mask_token_never_sampled() {
+        let v = 4;
+        let row = logits_with_peak(v, 1, 99.0); // mask id has huge logit
+        let mut rng = SplitMix::new(1);
+        let t = sample_token(&SamplerCfg::llada(), &row, &mut rng, None, 1);
+        assert_ne!(t, 1);
+    }
+
+    #[test]
+    fn temperature_zero_is_greedy_for_maskgit() {
+        let v = 8;
+        let row = logits_with_peak(v, 6, 3.0);
+        let mut rng = SplitMix::new(1);
+        let t = sample_token(&SamplerCfg::dream(), &row, &mut rng, None, 1);
+        assert_eq!(t, 6);
+    }
+
+    #[test]
+    fn top_k_filters_tail() {
+        let v = 8;
+        let mut row = vec![0.0; v];
+        row[3] = 5.0;
+        row[4] = 4.9;
+        let cfg = SamplerCfg {
+            strategy: Strategy::MaskgitPlus { top_k: 2, top_p: 1.0 },
+            temperature: 1.0,
+            parallel_threshold: None,
+            eos_guard: false,
+        };
+        let mut rng = SplitMix::new(1);
+        for _ in 0..50 {
+            let t = sample_token(&cfg, &row, &mut rng, None, 1);
+            assert!(t == 3 || t == 4, "got {t}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! HTTP serving front end: /generate, /healthz, /metrics on the in-tree
+//! HTTP substrate, dispatching to the router.
+
+use std::sync::Arc;
+
+use crate::httpd::{Handler, Request, Response, Server};
+use crate::json::{self, Json};
+use crate::router::Router;
+
+pub struct ServeCfg {
+    pub bind: String,
+    pub http_threads: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { bind: "127.0.0.1:0".into(), http_threads: 4 }
+    }
+}
+
+/// Start the HTTP server over an already-running router.
+pub fn serve(cfg: &ServeCfg, router: Router) -> std::io::Result<Server> {
+    let handler: Handler = Arc::new(move |req: &Request| route(req, &router));
+    Server::start(&cfg.bind, cfg.http_threads, handler)
+}
+
+fn route(req: &Request, router: &Router) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::text(200, "ok"),
+        ("GET", "/metrics") => Response::text(200, router.metrics.render()),
+        ("POST", "/generate") => generate(req, router),
+        _ => Response::not_found(),
+    }
+}
+
+fn generate(req: &Request, router: &Router) -> Response {
+    let body = match Json::parse(req.body_str()) {
+        Ok(b) => b,
+        Err(e) => {
+            return Response::json(
+                400,
+                json::obj(vec![("error", json::s(format!("bad json: {e}")))]).to_string(),
+            )
+        }
+    };
+    let prompt = match body.get("prompt").as_str() {
+        Some(p) => p.to_string(),
+        None => {
+            return Response::json(
+                400,
+                json::obj(vec![("error", json::s("missing 'prompt'"))]).to_string(),
+            )
+        }
+    };
+    let slot = match router.try_submit(prompt) {
+        Ok(s) => s,
+        Err(()) => {
+            return Response::json(
+                429,
+                json::obj(vec![("error", json::s("queue full"))]).to_string(),
+            )
+        }
+    };
+    match slot.wait() {
+        Ok(reply) => Response::json(
+            200,
+            json::obj(vec![
+                ("text", json::s(reply.text)),
+                ("iterations", json::num(reply.iterations as f64)),
+                ("wall_s", json::num(reply.wall_s)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => Response::json(
+            500,
+            json::obj(vec![("error", json::s(e))]).to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bad_json_is_400() {
+        // route() without a live worker: only /generate parse errors and
+        // static endpoints are testable here (full-stack test lives in
+        // rust/tests/integration_server.rs)
+        let router = Router::start(crate::router::RouterCfg {
+            engine: crate::engine::EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            batcher: Default::default(),
+            queue_cap: 2,
+            workers: 1,
+            artifacts_dir: std::path::PathBuf::from("/nonexistent"),
+        });
+        let req = Request {
+            method: "POST".into(),
+            path: "/generate".into(),
+            headers: vec![],
+            body: b"not-json".to_vec(),
+        };
+        assert_eq!(route(&req, &router).status, 400);
+        let req2 = Request {
+            method: "GET".into(),
+            path: "/healthz".into(),
+            headers: vec![],
+            body: vec![],
+        };
+        assert_eq!(route(&req2, &router).status, 200);
+        router.shutdown();
+    }
+}

@@ -1,0 +1,327 @@
+//! Thread-pool + channel substrate (tokio is unavailable offline).
+//!
+//! A fixed pool of workers pulling boxed jobs from an MPMC queue built on
+//! `Mutex<VecDeque>` + `Condvar`, plus a tiny oneshot-style `JoinHandle`.
+//! The serving front end uses this for connection handling; the router
+//! uses a dedicated pool for engine workers.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+        });
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Enqueue a job returning a value retrievable via the handle.
+    pub fn submit<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(
+        &self,
+        f: F,
+    ) -> JoinHandle<T> {
+        let slot = Arc::new((Mutex::new(None), Condvar::new()));
+        let slot2 = slot.clone();
+        self.execute(move || {
+            let v = f();
+            *slot2.0.lock().unwrap() = Some(v);
+            slot2.1.notify_all();
+        });
+        JoinHandle { slot }
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.is_empty() || self.shared.in_flight.load(Ordering::SeqCst) > 0 {
+            q = self.shared.done.wait(q).unwrap();
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _q = sh.queue.lock().unwrap();
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+pub struct JoinHandle<T> {
+    slot: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> T {
+        let mut guard = self.slot.0.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = self.slot.1.wait(guard).unwrap();
+        }
+    }
+
+    pub fn try_join(&self) -> Option<T> {
+        self.slot.0.lock().unwrap().take()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simple bounded MPSC channel for request queues (backpressure-aware)
+// ---------------------------------------------------------------------------
+
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    queue: Mutex<VecDeque<T>>,
+    cap: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+    closed: AtomicBool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Channel { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        Channel {
+            inner: Arc::new(ChannelInner {
+                queue: Mutex::new(VecDeque::new()),
+                cap: cap.max(1),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(item) if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        while q.len() >= self.inner.cap {
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return Err(item);
+            }
+            q = self.inner.not_full.wait(q).unwrap();
+        }
+        if self.inner.closed.load(Ordering::SeqCst) {
+            return Err(item);
+        }
+        q.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send (backpressure signal for the router).
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.len() >= self.inner.cap || self.inner.closed.load(Ordering::SeqCst) {
+            return Err(item);
+        }
+        q.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; None when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(v) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.inner.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Receive with a timeout; Ok(None) on timeout.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(v) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) =
+                self.inner.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if res.timed_out() && q.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_value() {
+        let pool = ThreadPool::new(2, "t");
+        let h = pool.submit(|| 21 * 2);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn channel_backpressure() {
+        let ch = Channel::bounded(2);
+        ch.try_send(1).unwrap();
+        ch.try_send(2).unwrap();
+        assert!(ch.try_send(3).is_err());
+        assert_eq!(ch.recv(), Some(1));
+        ch.try_send(3).unwrap();
+    }
+
+    #[test]
+    fn channel_close_drains() {
+        let ch = Channel::bounded(8);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        ch.close();
+        assert!(ch.send(3).is_err());
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn channel_recv_timeout() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(ch.recv_timeout(std::time::Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+
+    #[test]
+    fn cross_thread_channel() {
+        let ch = Channel::bounded(4);
+        let ch2 = ch.clone();
+        let t = thread::spawn(move || {
+            for i in 0..50u32 {
+                ch2.send(i).unwrap();
+            }
+            ch2.close();
+        });
+        let mut got = vec![];
+        while let Some(v) = ch.recv() {
+            got.push(v);
+        }
+        t.join().unwrap();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+}

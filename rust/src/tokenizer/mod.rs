@@ -1,0 +1,141 @@
+//! Char-level tokenizer mirroring `python/compile/tasks.py`.
+//!
+//! The table is loaded from `artifacts/vocab.json` (the build-time source
+//! of truth) so Rust and the trained model can never disagree.
+
+use crate::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    tokens: Vec<String>,
+    stoi: std::collections::HashMap<char, i32>,
+    pub vocab_size: usize,
+    pub pad: i32,
+    pub mask: i32,
+    pub eos: i32,
+    pub bos: i32,
+}
+
+impl Tokenizer {
+    pub fn from_json(j: &Json) -> Result<Tokenizer> {
+        let tokens: Vec<String> = j
+            .get("tokens")
+            .as_arr()
+            .ok_or_else(|| anyhow!("vocab.json: missing tokens"))?
+            .iter()
+            .map(|t| t.as_str().unwrap_or("").to_string())
+            .collect();
+        let specials = 4;
+        let mut stoi = std::collections::HashMap::new();
+        for (i, t) in tokens.iter().enumerate().skip(specials) {
+            let mut chars = t.chars();
+            let c = chars.next().ok_or_else(|| anyhow!("empty token"))?;
+            if chars.next().is_some() {
+                return Err(anyhow!("multi-char token {t:?}"));
+            }
+            stoi.insert(c, i as i32);
+        }
+        Ok(Tokenizer {
+            stoi,
+            vocab_size: j.get("vocab_size").as_usize().unwrap_or(tokens.len()),
+            pad: j.get("pad").as_i64().unwrap_or(0) as i32,
+            mask: j.get("mask").as_i64().unwrap_or(1) as i32,
+            eos: j.get("eos").as_i64().unwrap_or(2) as i32,
+            bos: j.get("bos").as_i64().unwrap_or(3) as i32,
+            tokens,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Tokenizer> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&src).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    pub fn encode(&self, s: &str) -> Result<Vec<i32>> {
+        s.chars()
+            .map(|c| self.stoi.get(&c).copied().ok_or_else(|| anyhow!("unknown char {c:?}")))
+            .collect()
+    }
+
+    /// Decode, stopping at the first EOS and skipping specials.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &i in ids {
+            if i == self.eos {
+                break;
+            }
+            if i >= 4 && (i as usize) < self.tokens.len() {
+                out.push_str(&self.tokens[i as usize]);
+            }
+        }
+        out
+    }
+
+    /// Prompt right-padded with PAD to `prompt_len` (build-time layout).
+    pub fn encode_prompt(&self, s: &str, prompt_len: usize) -> Result<Vec<i32>> {
+        let mut ids = self.encode(s)?;
+        if ids.len() > prompt_len {
+            return Err(anyhow!("prompt too long: {} > {prompt_len}", ids.len()));
+        }
+        ids.resize(prompt_len, self.pad);
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        // inline copy of the build-time table (kept in sync by the
+        // integration test that loads the real artifacts/vocab.json)
+        let mut tokens: Vec<String> =
+            vec!["<pad>".into(), "<mask>".into(), "<eos>".into(), "<bos>".into()];
+        for c in ('0'..='9').chain('a'..='z').chain("+-*/=()[],.:?><|&! ".chars()) {
+            tokens.push(c.to_string());
+        }
+        let arr = Json::Arr(tokens.into_iter().map(Json::Str).collect());
+        let j = crate::json::obj(vec![
+            ("tokens", arr),
+            ("vocab_size", Json::Num(64.0)),
+            ("pad", Json::Num(0.0)),
+            ("mask", Json::Num(1.0)),
+            ("eos", Json::Num(2.0)),
+            ("bos", Json::Num(3.0)),
+        ]);
+        Tokenizer::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tok();
+        let ids = t.encode("sort(3,1)=1,3").unwrap();
+        assert_eq!(t.decode(&ids), "sort(3,1)=1,3");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = tok();
+        let mut ids = t.encode("42").unwrap();
+        ids.push(t.eos);
+        ids.extend(t.encode("junk").unwrap());
+        assert_eq!(t.decode(&ids), "42");
+    }
+
+    #[test]
+    fn prompt_padding() {
+        let t = tok();
+        let ids = t.encode_prompt("1+1=", 10).unwrap();
+        assert_eq!(ids.len(), 10);
+        assert_eq!(&ids[4..], &[t.pad; 6]);
+        assert!(t.encode_prompt("123456789012", 4).is_err());
+    }
+
+    #[test]
+    fn unknown_char_rejected() {
+        let t = tok();
+        assert!(t.encode("Ü").is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Checkpoint loader: flat little-endian f32 records in the canonical
+//! parameter order (`ESDW` format written by `python/compile/train.py`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::ArchSpec;
+
+#[derive(Debug)]
+pub struct Checkpoint {
+    /// tensors in canonical parameter order
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn load(path: &Path, arch: &ArchSpec) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        if bytes.len() < 12 || &bytes[0..4] != b"ESDW" {
+            return Err(anyhow!("{}: bad magic", path.display()));
+        }
+        let ver = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        if ver != 1 {
+            return Err(anyhow!("unsupported checkpoint version {ver}"));
+        }
+        if count != arch.params.len() {
+            return Err(anyhow!(
+                "checkpoint has {count} tensors, manifest expects {}",
+                arch.params.len()
+            ));
+        }
+        let mut off = 12usize;
+        let mut tensors = Vec::with_capacity(count);
+        for (name, shape) in &arch.params {
+            let n: usize = shape.iter().product();
+            let end = off + 4 * n;
+            if end > bytes.len() {
+                return Err(anyhow!("checkpoint truncated at {name}"));
+            }
+            let data: Vec<f32> = bytes[off..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push((name.clone(), shape.clone(), data));
+            off = end;
+        }
+        if off != bytes.len() {
+            return Err(anyhow!("checkpoint has {} trailing bytes", bytes.len() - off));
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|(_, _, d)| d.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Dims;
+    use std::collections::BTreeMap;
+
+    fn tiny_arch() -> ArchSpec {
+        ArchSpec {
+            name: "t".into(),
+            dims: Dims {
+                vocab: 4, d_model: 2, n_layers: 1, n_heads: 1, n_kv_heads: 1,
+                d_ff: 4, head_dim: 2, prompt_len: 4, gen_len: 4, ctx: 8,
+            },
+            checkpoints: BTreeMap::new(),
+            params: vec![("a".into(), vec![2, 2]), ("b".into(), vec![3])],
+            executables: BTreeMap::new(),
+        }
+    }
+
+    fn write_ckpt(path: &Path, tensors: &[Vec<f32>]) {
+        let mut bytes = b"ESDW".to_vec();
+        bytes.extend(1u32.to_le_bytes());
+        bytes.extend((tensors.len() as u32).to_le_bytes());
+        for t in tensors {
+            for v in t {
+                bytes.extend(v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("esdllm-weights-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_ckpt(&p, &[vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0]]);
+        let ck = Checkpoint::load(&p, &tiny_arch()).unwrap();
+        assert_eq!(ck.tensors[0].2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ck.tensors[1].2, vec![5.0, 6.0, 7.0]);
+        assert_eq!(ck.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("esdllm-weights-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_ckpt(&p, &[vec![1.0, 2.0, 3.0, 4.0]]); // only one tensor
+        assert!(Checkpoint::load(&p, &tiny_arch()).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! Benchmark workload generators — an exact Rust port of
+//! `python/compile/tasks.py` (same SplitMix64 stream, same FNV bench
+//! hash), so evaluation sets are identical across the build and request
+//! paths. Also provides request traces (Poisson arrivals) for the serving
+//! benchmarks.
+
+use crate::rng::SplitMix;
+
+pub const BENCHMARKS: [&str; 5] = ["arith", "chain", "logic", "codegen", "listops"];
+
+/// Paper-benchmark analog names (DESIGN.md §1) for table rendering.
+pub fn paper_name(bench: &str) -> &'static str {
+    match bench {
+        "arith" => "GSM8K~arith",
+        "chain" => "MATH~chain",
+        "logic" => "BBH~logic",
+        "codegen" => "HumanEval~codegen",
+        "listops" => "MBPP~listops",
+        _ => "?",
+    }
+}
+
+pub const TRAIN_SEED_BASE: u64 = 0x5EED_0000;
+pub const EVAL_SEED_BASE: u64 = 0xE7A1_0000;
+
+fn hash_bench(bench: &str) -> u64 {
+    let mut h: u32 = 2166136261;
+    for c in bench.bytes() {
+        h = (h ^ c as u32).wrapping_mul(16777619);
+    }
+    h as u64
+}
+
+/// Deterministic (prompt, answer) for (bench, seed) — matches
+/// `tasks.sample` in python exactly.
+pub fn sample(bench: &str, seed: u64) -> (String, String) {
+    let mut rng = SplitMix::new((hash_bench(bench) << 32) ^ seed);
+    match bench {
+        "arith" => gen_arith(&mut rng),
+        "chain" => gen_chain(&mut rng),
+        "logic" => gen_logic(&mut rng),
+        "codegen" => gen_codegen(&mut rng),
+        "listops" => gen_listops(&mut rng),
+        other => panic!("unknown benchmark {other}"),
+    }
+}
+
+fn arith_pair(rng: &mut SplitMix) -> (String, String) {
+    let a = rng.range(1, 99);
+    let b = rng.range(1, 99);
+    if rng.below(3) == 0 && a >= b {
+        return (format!("{a}-{b}="), format!("{}", a - b));
+    }
+    if rng.below(4) == 0 {
+        let a = rng.range(2, 9);
+        let b = rng.range(2, 9);
+        return (format!("{a}*{b}="), format!("{}", a * b));
+    }
+    (format!("{a}+{b}="), format!("{}", a + b))
+}
+
+fn gen_arith(rng: &mut SplitMix) -> (String, String) {
+    let mut shots = Vec::new();
+    for _ in 0..2 {
+        let (q, a) = arith_pair(rng);
+        shots.push(format!("{q}{a}"));
+    }
+    let (q, a) = arith_pair(rng);
+    shots.push(q);
+    (shots.join("|"), a)
+}
+
+fn expr(rng: &mut SplitMix, depth: u32) -> (String, i64) {
+    if depth == 0 {
+        let v = rng.range(1, 9);
+        return (v.to_string(), v);
+    }
+    let (ls, lv) = expr(rng, depth - 1);
+    let rv = rng.range(1, 9);
+    let op = [b'+', b'-', b'*'][rng.below(3) as usize];
+    let val = match op {
+        b'+' => lv + rv,
+        b'-' => lv - rv,
+        _ => lv * rv,
+    };
+    if val.abs() > 99 {
+        return (format!("({ls}+{rv})"), lv + rv);
+    }
+    (format!("({ls}{}{rv})", op as char), val)
+}
+
+fn gen_chain(rng: &mut SplitMix) -> (String, String) {
+    let depth = rng.range(2, 3) as u32;
+    let (s, v) = expr(rng, depth);
+    (format!("{s}="), v.to_string())
+}
+
+fn bexpr(rng: &mut SplitMix, depth: u32) -> (String, bool) {
+    if depth == 0 {
+        let v = rng.below(2) == 1;
+        return ((if v { "t" } else { "f" }).to_string(), v);
+    }
+    if rng.below(4) == 0 {
+        let (ls, lv) = bexpr(rng, depth - 1);
+        return (format!("!{ls}"), !lv);
+    }
+    let (ls, lv) = bexpr(rng, depth - 1);
+    let (rs, rv) = bexpr(rng, 0);
+    if rng.below(2) == 0 {
+        (format!("({ls}&{rs})"), lv && rv)
+    } else {
+        (format!("({ls}|{rs})"), lv || rv)
+    }
+}
+
+fn gen_logic(rng: &mut SplitMix) -> (String, String) {
+    let depth = rng.range(2, 3) as u32;
+    let (s, v) = bexpr(rng, depth);
+    (format!("{s}="), (if v { "t" } else { "f" }).to_string())
+}
+
+fn gen_codegen(rng: &mut SplitMix) -> (String, String) {
+    let k = rng.range(2, 9);
+    let op = [b'+', b'-', b'*'][rng.below(3) as usize];
+    let x1 = rng.range(1, 9);
+    let x2 = rng.range(1, 9);
+    let apply = |x: i64| match op {
+        b'+' => x + k,
+        b'-' => x - k,
+        _ => x * k,
+    };
+    (
+        format!("f(x)=x{}{k}|f({x1})={}|f({x2})=", op as char, apply(x1)),
+        apply(x2).to_string(),
+    )
+}
+
+fn gen_listops(rng: &mut SplitMix) -> (String, String) {
+    let n = rng.range(3, 5);
+    let xs: Vec<i64> = (0..n).map(|_| rng.below(10) as i64).collect();
+    let kind = rng.below(3);
+    let body = xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+    match kind {
+        0 => {
+            let mut s = xs.clone();
+            s.sort();
+            (
+                format!("sort({body})="),
+                s.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","),
+            )
+        }
+        1 => {
+            let r: Vec<String> = xs.iter().rev().map(|x| x.to_string()).collect();
+            (format!("rev({body})="), r.join(","))
+        }
+        _ => (format!("max({body})="), xs.iter().max().unwrap().to_string()),
+    }
+}
+
+/// A scored evaluation item.
+#[derive(Debug, Clone)]
+pub struct EvalItem {
+    pub bench: &'static str,
+    pub seed: u64,
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Deterministic eval set for a benchmark (disjoint from training seeds).
+pub fn eval_set(bench: &'static str, n: usize) -> Vec<EvalItem> {
+    (0..n)
+        .map(|i| {
+            let seed = EVAL_SEED_BASE + i as u64;
+            let (prompt, answer) = sample(bench, seed);
+            EvalItem { bench, seed, prompt, answer }
+        })
+        .collect()
+}
+
+/// Exact-match scoring on the decoded answer span (the paper's
+/// exact_match / pass@1 analog).
+pub fn score(expected: &str, generated: &str) -> bool {
+    expected.trim() == generated.trim()
+}
+
+// ---------------------------------------------------------------------------
+// request traces for the serving benchmarks
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// arrival offset from trace start, seconds
+    pub at_s: f64,
+    pub item: EvalItem,
+}
+
+/// Poisson arrival trace mixing all benchmarks (serving-style load).
+pub fn poisson_trace(rate_per_s: f64, n: usize, seed: u64) -> Vec<TraceRequest> {
+    let mut rng = SplitMix::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.exp(rate_per_s);
+            let bench = BENCHMARKS[rng.below(BENCHMARKS.len() as u64) as usize];
+            let seed = EVAL_SEED_BASE + 50_000 + i as u64;
+            let (prompt, answer) = sample(bench, seed);
+            TraceRequest { at_s: t, item: EvalItem { bench, seed, prompt, answer } }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sampling() {
+        let (p1, a1) = sample("arith", 123);
+        let (p2, a2) = sample("arith", 123);
+        assert_eq!((p1, a1), (p2, a2));
+        let (p3, _) = sample("arith", 124);
+        assert_ne!(sample("arith", 123).0, p3);
+    }
+
+    #[test]
+    fn all_benchmarks_generate() {
+        for b in BENCHMARKS {
+            for s in 0..50 {
+                let (p, a) = sample(b, s);
+                assert!(!p.is_empty() && !a.is_empty(), "{b}/{s}");
+                assert!(p.len() <= 48, "prompt too long: {b}/{s}: {p}");
+                assert!(a.len() <= 31, "answer too long: {b}/{s}: {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn listops_answers_are_correct() {
+        for s in 0..200 {
+            let (p, a) = sample("listops", s);
+            if let Some(body) = p.strip_prefix("sort(").and_then(|r| r.strip_suffix(")=")) {
+                let mut xs: Vec<i64> =
+                    body.split(',').map(|x| x.parse().unwrap()).collect();
+                xs.sort();
+                let want =
+                    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+                assert_eq!(a, want);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_is_sorted_in_time() {
+        let t = poisson_trace(100.0, 50, 7);
+        assert_eq!(t.len(), 50);
+        for w in t.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+    }
+
+    #[test]
+    fn score_trims() {
+        assert!(score("42", " 42 "));
+        assert!(!score("42", "43"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration tests over the real artifacts: runtime → engine → router →
+//! HTTP server. These need `make artifacts` to have run; they are skipped
+//! (with a message) when artifacts are missing so `cargo test` stays green
+//! on a fresh checkout.
+
+use esdllm::batcher::BatcherCfg;
+use esdllm::engine::{Engine, EngineCfg, Method};
+use esdllm::httpd::Client;
+use esdllm::json::{self, Json};
+use esdllm::router::{Router, RouterCfg};
+use esdllm::runtime::{default_artifacts_dir, Runtime};
+use esdllm::server::{serve, ServeCfg};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists()
+        || !dir.join("weights-llada-nano-instruct.bin").exists()
+    {
+        eprintln!("skipping integration test: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn engine_generates_all_methods_deterministically() {
+    let Some(rt) = runtime() else { return };
+    let prompts = vec!["1+2=".to_string()];
+    let mut texts = vec![];
+    for method in [Method::Vanilla, Method::DualCache, Method::EsDllm] {
+        let mut engine = Engine::new(&rt, EngineCfg::new("llada-nano", method));
+        let r1 = engine.generate(&prompts).unwrap();
+        let mut engine2 = Engine::new(&rt, EngineCfg::new("llada-nano", method));
+        let r2 = engine2.generate(&prompts).unwrap();
+        assert_eq!(r1.texts, r2.texts, "{method:?} must be deterministic");
+        assert_eq!(r1.iterations, 32);
+        texts.push(r1.texts[0].clone());
+    }
+    // all methods produce non-empty text
+    for t in &texts {
+        assert!(!t.is_empty());
+    }
+}
+
+#[test]
+fn es_step_counts_follow_refresh_policy() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = EngineCfg::new("llada-nano", Method::EsDllm);
+    cfg.refresh = esdllm::cache::RefreshPolicy { prompt_period: 16, block_period: 4 };
+    cfg.block = 8;
+    let mut engine = Engine::new(&rt, cfg);
+    let r = engine.generate(&["2*3=".to_string()]).unwrap();
+    // 4 blocks × 8 iters: i_b=0 prefill (4), i_b=4 dual (4), rest es (24)
+    assert_eq!(r.n_prefill, 4);
+    assert_eq!(r.n_dual, 4);
+    assert_eq!(r.n_es, 24);
+}
+
+#[test]
+fn parallel_decoding_reduces_iterations() {
+    let Some(rt) = runtime() else { return };
+    let prompts = vec!["sort(3,1,2)=".to_string()];
+    let mut base = Engine::new(&rt, EngineCfg::new("llada-nano", Method::EsDllm));
+    let rb = base.generate(&prompts).unwrap();
+    let mut cfg = EngineCfg::new("llada-nano", Method::EsDllm);
+    cfg.sampler = cfg.sampler.with_parallel(0.9);
+    let mut pd = Engine::new(&rt, cfg);
+    let rp = pd.generate(&prompts).unwrap();
+    assert!(
+        rp.iterations < rb.iterations,
+        "PD {} !< greedy {}",
+        rp.iterations,
+        rb.iterations
+    );
+}
+
+#[test]
+fn sparse_attention_runs_and_prunes() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = EngineCfg::new("llada-nano", Method::EsDllm);
+    cfg.sparse = true;
+    let mut engine = Engine::new(&rt, cfg);
+    let r = engine.generate(&["max(4,9,2)=".to_string()]).unwrap();
+    assert_eq!(r.iterations, 32);
+    assert!(!r.texts[0].is_empty());
+}
+
+#[test]
+fn dream_arch_and_base_checkpoint_load() {
+    let Some(rt) = runtime() else { return };
+    if !default_artifacts_dir()
+        .join("weights-dream-nano-instruct.bin")
+        .exists()
+    {
+        eprintln!("skipping: dream weights not built yet");
+        return;
+    }
+    for (arch, ck) in [("dream-nano", "instruct"), ("llada-nano", "base")] {
+        let mut cfg = EngineCfg::new(arch, Method::EsDllm);
+        cfg.checkpoint = ck.into();
+        let mut engine = Engine::new(&rt, cfg);
+        let r = engine.generate(&["7-4=".to_string()]).unwrap();
+        assert_eq!(r.iterations, 32, "{arch}/{ck}");
+    }
+}
+
+#[test]
+fn http_server_end_to_end() {
+    let Some(_rt) = runtime() else { return };
+    let router = Router::start(RouterCfg {
+        engine: EngineCfg::new("llada-nano", Method::EsDllm),
+        batcher: BatcherCfg { max_batch: 8, flush_ms: 10 },
+        queue_cap: 16,
+        workers: 1,
+        artifacts_dir: default_artifacts_dir(),
+    });
+    let server = serve(&ServeCfg::default(), router.clone()).unwrap();
+    let mut client = Client::new(server.addr);
+
+    let (st, body) = client.get("/healthz").unwrap();
+    assert_eq!((st, body.as_slice()), (200, b"ok".as_slice()));
+
+    let (st, body) = client
+        .post("/generate", br#"{"prompt": "1+1="}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("text").as_str().is_some());
+    assert!(j.get("iterations").as_usize().unwrap() > 0);
+
+    let (st, _) = client
+        .post("/generate", br#"{"nope": 1}"#)
+        .unwrap();
+    assert_eq!(st, 400);
+
+    let (st, m) = client.get("/metrics").unwrap();
+    assert_eq!(st, 200);
+    let m = String::from_utf8_lossy(&m);
+    // the malformed request is rejected before reaching the router, so
+    // only the successful generate counts
+    assert!(m.contains("esdllm_requests_total 1"), "{m}");
+    router.shutdown();
+    let _ = json::num(0.0);
+}
+
+#[test]
+fn vocab_json_matches_builtin_tokenizer_expectations() {
+    let Some(rt) = runtime() else { return };
+    let t = &rt.tokenizer;
+    assert_eq!(t.pad, 0);
+    assert_eq!(t.mask, 1);
+    assert_eq!(t.eos, 2);
+    let ids = t.encode("f(x)=x*3|f(2)=6").unwrap();
+    assert_eq!(t.decode(&ids), "f(x)=x*3|f(2)=6");
+}

@@ -1,0 +1,291 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! sampling, cache state) using the in-tree prop framework.
+
+use esdllm::cache::{GroupCaches, RefreshPolicy, StepPlan};
+use esdllm::manifest::Dims;
+use esdllm::prop::{check, Gen};
+use esdllm::rng::SplitMix;
+use esdllm::runtime::tensor::{bf16_to_f32, f32_to_bf16, HostTensor};
+use esdllm::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
+use esdllm::{json::Json, prop_assert};
+
+fn dims(g: &mut Gen) -> Dims {
+    let head_dim = 8;
+    let n_heads = *g.pick(&[2usize, 4]);
+    Dims {
+        vocab: 16,
+        d_model: n_heads * head_dim,
+        n_layers: *g.pick(&[2usize, 4]),
+        n_heads,
+        n_kv_heads: *g.pick(&[1usize, 2]),
+        d_ff: 32,
+        head_dim,
+        prompt_len: 8,
+        gen_len: 8,
+        ctx: 16,
+    }
+}
+
+#[test]
+fn prop_sampler_unmasks_only_masked_block_positions() {
+    check("sampler-unmask-valid", 200, |g| {
+        let gen = 8;
+        let v = 16;
+        let block_lo = g.usize_in(0, 4);
+        let block_hi = block_lo + g.usize_in(1, gen - block_lo);
+        let logits = g.vec_f32(gen * v, -5.0, 5.0);
+        let conf = g.vec_f32(gen, 0.0, 1.0);
+        let gen_tokens: Vec<i32> =
+            (0..gen).map(|_| if g.bool() { 1 } else { 5 }).collect();
+        let cfg = if g.bool() {
+            SamplerCfg::llada()
+        } else {
+            SamplerCfg::llada().with_parallel(g.f32_in(0.1, 0.99))
+        };
+        let inp = UnmaskInput {
+            logits: &logits,
+            conf: &conf,
+            gen_tokens: &gen_tokens,
+            block_lo,
+            block_hi,
+            vocab: v,
+            mask_id: 1,
+            eos_id: 2,
+        };
+        let mut rng = SplitMix::new(g.rng.next64());
+        let d = decide_unmask(&cfg, &inp, &mut rng);
+        let any_masked =
+            gen_tokens[block_lo..block_hi].iter().any(|&t| t == 1);
+        prop_assert!(
+            d.positions.is_empty() == !any_masked,
+            "unmasked exactly when nothing masked"
+        );
+        for (p, t) in d.positions.iter().zip(&d.tokens) {
+            prop_assert!(*p >= block_lo && *p < block_hi, "position in block");
+            prop_assert!(gen_tokens[*p] == 1, "position was masked");
+            prop_assert!(*t != 1, "never emits the mask token");
+        }
+        // positions unique
+        let mut ps = d.positions.clone();
+        ps.dedup();
+        prop_assert!(ps.len() == d.positions.len(), "duplicate positions");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_decoding_superset_of_greedy() {
+    check("pd-superset", 100, |g| {
+        let gen = 8;
+        let v = 8;
+        let logits = g.vec_f32(gen * v, -3.0, 3.0);
+        let conf = g.vec_f32(gen, 0.0, 1.0);
+        let gen_tokens = vec![1i32; gen];
+        let inp = UnmaskInput {
+            logits: &logits,
+            conf: &conf,
+            gen_tokens: &gen_tokens,
+            block_lo: 0,
+            block_hi: gen,
+            vocab: v,
+            mask_id: 1,
+            eos_id: 2,
+        };
+        let mut r1 = SplitMix::new(7);
+        let mut r2 = SplitMix::new(7);
+        let greedy = decide_unmask(&SamplerCfg::llada(), &inp, &mut r1);
+        let pd = decide_unmask(
+            &SamplerCfg::llada().with_parallel(g.f32_in(0.0, 1.0)),
+            &inp,
+            &mut r2,
+        );
+        prop_assert!(
+            greedy.positions.iter().all(|p| pd.positions.contains(p)),
+            "PD must include the greedy position"
+        );
+        prop_assert!(pd.positions.len() >= 1, "PD unmasks at least one");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_scatter_roundtrip_random_blocks() {
+    check("kv-scatter-roundtrip", 60, |g| {
+        let d = dims(g);
+        let batch = g.usize_in(1, 2);
+        let mut c = GroupCaches::new(&d, batch);
+        let block = *g.pick(&[2usize, 4]);
+        let block_start = d.prompt_len + g.usize_in(0, d.gen_len - block);
+        let n = d.n_layers * 2 * batch * d.n_kv_heads * block * d.head_dim;
+        let data: Vec<u16> = (0..n).map(|_| g.rng.next64() as u16).collect();
+        let t = HostTensor::Bf16 {
+            shape: vec![d.n_layers, 2, batch, d.n_kv_heads, block, d.head_dim],
+            data: data.clone(),
+        };
+        c.scatter_kv_block(block_start, block, &t).map_err(|e| e.to_string())?;
+        // kv_tensor must contain exactly those rows at the block offset
+        let full = c.kv_tensor();
+        let full_data = full.as_bf16().map_err(|e| e.to_string())?;
+        let mut src = 0;
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for b in 0..batch {
+                    for h in 0..d.n_kv_heads {
+                        let off = ((((l * 2 + s) * batch + b) * d.n_kv_heads
+                            + h)
+                            * d.ctx
+                            + block_start)
+                            * d.head_dim;
+                        let rows = block * d.head_dim;
+                        prop_assert!(
+                            full_data[off..off + rows] == data[src..src + rows],
+                            "block rows mismatch at l{l} s{s} b{b} h{h}"
+                        );
+                        src += rows;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ind_gather_scatter_consistent() {
+    check("ind-gather-scatter", 60, |g| {
+        let d = dims(g);
+        let batch = 1;
+        let mut c = GroupCaches::new(&d, batch);
+        let layers: Vec<usize> = (0..d.n_layers).filter(|_| g.bool()).collect();
+        let layers = if layers.is_empty() { vec![0] } else { layers };
+        let block = 4;
+        let block_start = d.prompt_len + if g.bool() { 0 } else { 4 };
+        let n = layers.len() * batch * block * d.d_model;
+        let data: Vec<u16> = (0..n).map(|_| g.rng.next64() as u16).collect();
+        let t = HostTensor::Bf16 {
+            shape: vec![layers.len(), batch, block, d.d_model],
+            data: data.clone(),
+        };
+        c.scatter_ind_block("h", &layers, block_start, block, &t)
+            .map_err(|e| e.to_string())?;
+        let gathered = c.gather_ind("h", &layers).map_err(|e| e.to_string())?;
+        let gd = gathered.as_bf16().map_err(|e| e.to_string())?;
+        let g0 = block_start - d.prompt_len;
+        for (i, _l) in layers.iter().enumerate() {
+            for j in 0..block {
+                let src = (i * block + j) * d.d_model;
+                let dst = (i * d.gen_len + g0 + j) * d.d_model;
+                prop_assert!(
+                    gd[dst..dst + d.d_model] == data[src..src + d.d_model],
+                    "row {i}/{j} mismatch"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refresh_policy_prefill_at_block_start() {
+    check("refresh-plan", 200, |g| {
+        let p = RefreshPolicy {
+            prompt_period: g.usize_in(1, 64),
+            block_period: g.usize_in(1, 16),
+        };
+        let g_iter = g.usize_in(0, 200);
+        let i_b = g.usize_in(0, 31);
+        let plan = p.plan_es(g_iter, i_b);
+        if i_b == 0 {
+            prop_assert!(plan == StepPlan::Prefill, "block start must prefill");
+        }
+        if plan == StepPlan::EsStep {
+            prop_assert!(i_b % p.block_period != 0 || p.block_period == 0,
+                "es step only off the block-refresh cadence");
+            prop_assert!(g_iter % p.prompt_period != 0,
+                "es step only off the prompt-refresh cadence");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_roundtrip_via_f32_is_identity() {
+    check("bf16-roundtrip", 300, |g| {
+        let bits = g.rng.next64() as u16;
+        let f = bf16_to_f32(bits);
+        if f.is_nan() {
+            return Ok(());
+        }
+        prop_assert!(f32_to_bf16(f) == bits, "bits {bits:#06x} -> {f} -> back");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    check("json-roundtrip", 150, |g| {
+        fn value(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.rng.range(-1_000_000, 1_000_000)) as f64),
+                3 => Json::Str(
+                    (0..g.usize_in(0, 12))
+                        .map(|_| *g.pick(&['a', 'Ω', '"', '\\', '\n', '7']))
+                        .collect(),
+                ),
+                4 => Json::Arr((0..g.usize_in(0, 4))
+                    .map(|_| value(g, depth - 1))
+                    .collect()),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), value(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = value(g, 3);
+        let text = v.to_string();
+        let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(parsed == v, "roundtrip failed for {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_step_logits_only_touches_given_positions() {
+    check("merge-logits", 80, |g| {
+        let d = dims(g);
+        let batch = 1;
+        let mut c = GroupCaches::new(&d, batch);
+        for x in c.logits.iter_mut() {
+            *x = 1.0;
+        }
+        c.recompute_conf();
+        let before_logits = c.logits.clone();
+        let k = g.usize_in(1, 4);
+        let mut pos: Vec<i32> = (0..d.gen_len as i32).collect();
+        // random distinct positions
+        for i in (1..pos.len()).rev() {
+            let j = (g.rng.below(i as u64 + 1)) as usize;
+            pos.swap(i, j);
+        }
+        let pos: Vec<i32> =
+            pos[..k].iter().map(|p| p + d.prompt_len as i32).collect();
+        let logits = HostTensor::F32 {
+            shape: vec![1, k, d.vocab],
+            data: g.vec_f32(k * d.vocab, -4.0, 4.0),
+        };
+        let pos_t = HostTensor::I32 { shape: vec![1, k], data: pos.clone() };
+        c.merge_step_logits(&logits, &pos_t).map_err(|e| e.to_string())?;
+        for gpos in 0..d.gen_len {
+            let touched = pos.contains(&((gpos + d.prompt_len) as i32));
+            let row = &c.logits[gpos * d.vocab..(gpos + 1) * d.vocab];
+            let brow = &before_logits[gpos * d.vocab..(gpos + 1) * d.vocab];
+            if !touched {
+                prop_assert!(row == brow, "untouched row {gpos} changed");
+            }
+        }
+        Ok(())
+    });
+}
