@@ -35,44 +35,45 @@ fn main() -> anyhow::Result<()> {
     println!("== serve_e2e: {arch} / {} / {} requests @ {rate}/s over {n_clients} clients ==",
              method.label(), n);
 
-    let router = Router::start(RouterCfg {
-        engine: EngineCfg::new(&arch, method),
-        batcher: BatcherCfg { max_batch: 8, flush_ms: 30 },
-        queue_cap: 512,
-        workers: 1,
-        artifacts_dir: default_artifacts_dir(),
-    });
+    let mut router_cfg = RouterCfg::new(EngineCfg::new(&arch, method), default_artifacts_dir());
+    router_cfg.batcher = BatcherCfg { max_batch: 8, flush_ms: 30 };
+    router_cfg.queue_cap = 512;
+    let router = Router::start(router_cfg);
     let server = serve(&ServeCfg::default(), router.clone())?;
     let addr = server.addr;
     println!("server on http://{addr}");
 
-    // build the trace, partitioned over client threads
+    // build the trace, partitioned round-robin over client threads; each
+    // thread replays its share via workload::replay_trace, with a barrier
+    // aligning every thread's replay baseline to one instant. Each client
+    // blocks on its in-flight request (HTTP is synchronous here), so the
+    // offered load is open-loop only up to per-thread head-of-line
+    // blocking — raise --clients to approach the generated trace.
     let trace = workload::poisson_trace(rate, n, 0xC11E);
-    let trace = Arc::new(trace);
     let t0 = std::time::Instant::now();
     let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(vec![]));
     let correct = Arc::new(AtomicUsize::new(0));
     let errors = Arc::new(AtomicUsize::new(0));
+    let tokens = Arc::new(AtomicUsize::new(0));
+    let start = Arc::new(std::sync::Barrier::new(n_clients));
 
     let threads: Vec<_> = (0..n_clients)
         .map(|c| {
-            let trace = trace.clone();
+            let share: Vec<workload::TraceRequest> = trace
+                .iter()
+                .skip(c)
+                .step_by(n_clients)
+                .cloned()
+                .collect();
             let latencies = latencies.clone();
             let correct = correct.clone();
             let errors = errors.clone();
+            let tokens = tokens.clone();
+            let start = start.clone();
             std::thread::spawn(move || {
                 let mut client = Client::new(addr);
-                for (i, req) in trace.iter().enumerate() {
-                    if i % n_clients != c {
-                        continue;
-                    }
-                    // open-loop arrivals: wait until the trace timestamp
-                    let now = t0.elapsed().as_secs_f64();
-                    if req.at_s > now {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(
-                            req.at_s - now,
-                        ));
-                    }
+                start.wait();
+                workload::replay_trace(&share, |req| {
                     let sent = std::time::Instant::now();
                     let body = json::obj(vec![(
                         "prompt",
@@ -92,12 +93,17 @@ fn main() -> anyhow::Result<()> {
                                     correct.fetch_add(1, Ordering::Relaxed);
                                 }
                             }
+                            // per-request emitted tokens: the EOS guard
+                            // retires early, so crediting gen_len per
+                            // request would inflate tok/s
+                            tokens
+                                .fetch_add(j.get("tokens").as_usize().unwrap_or(0), Ordering::Relaxed);
                         }
                         _ => {
                             errors.fetch_add(1, Ordering::Relaxed);
                         }
                     }
-                }
+                });
             })
         })
         .collect();
@@ -110,12 +116,11 @@ fn main() -> anyhow::Result<()> {
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p).round() as usize];
     let ok = lats.len();
-    let gen_len = 32;
     println!("\n== results ==");
     println!("completed      {ok}/{n} (errors {})", errors.load(Ordering::Relaxed));
     println!("wall clock     {wall:.2}s");
     println!("throughput     {:.2} req/s, {:.1} tok/s", ok as f64 / wall,
-             (ok * gen_len) as f64 / wall);
+             tokens.load(Ordering::Relaxed) as f64 / wall);
     if ok > 0 {
         println!("latency p50    {:.3}s", pct(0.5));
         println!("latency p90    {:.3}s", pct(0.9));

@@ -1,0 +1,174 @@
+//! Continuous batching vs run-to-completion on the same Poisson trace.
+//!
+//! Both modes run the identical router → slot-scheduler stack over the
+//! deterministic simulation backend (per-plan sleeps model the measured
+//! executable cost ordering: prefill ≫ dual step > es step), so this
+//! bench runs on any machine — no artifacts, no PJRT.
+//!
+//! The workload is the serving-motivated skewed mix: mostly short
+//! requests (one block) with a rare long pole (every 8th request needs
+//! all 8 blocks). Run-to-completion drains a batch before admitting the
+//! queue, so the long pole holds seven finished slots hostage for ~7/8
+//! of its lifetime; the continuous scheduler retires the shorts at their
+//! block boundaries and admits queued requests into the freed slots
+//! mid-flight. Expected outcome (reported below): continuous batching
+//! sustains higher slot occupancy and higher token throughput, with far
+//! lower tail latency, on the same arrival trace.
+//!
+//! Run: `cargo bench --bench serve_continuous` (ESDLLM_BENCH_N overrides
+//! the request count).
+
+use std::time::Instant;
+
+use esdllm::batcher::BatcherCfg;
+use esdllm::bench::{bench_n, Table};
+use esdllm::cache::RefreshPolicy;
+use esdllm::engine::{EngineCfg, Method};
+use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend};
+use esdllm::scheduler::sim::SimCfg;
+use esdllm::scheduler::SeqParams;
+use esdllm::workload;
+
+const SLOTS: usize = 8;
+/// arrivals per second: above the run-to-completion capacity, below the
+/// continuous capacity, so head-of-line blocking becomes visible
+const RATE: f64 = 110.0;
+
+fn engine_cfg() -> EngineCfg {
+    let mut cfg = EngineCfg::new("llada-nano", Method::EsDllm);
+    // small blocks amplify the grounding-prefill cadence the continuous
+    // scheduler shares across slots
+    cfg.block = 4;
+    cfg.refresh = RefreshPolicy { prompt_period: 16, block_period: 2 };
+    cfg
+}
+
+/// Skewed echo workload: the sim completion length equals the prompt
+/// length, so every 8th request is an 8-block pole and the rest finish
+/// after one block.
+fn prompt_for(i: usize) -> String {
+    const SHORT: [&str; 7] = ["1+2", "9*8", "0-1", "a|b", "x&y", "7*7", "3,4"];
+    if i % 8 == 0 {
+        "sort(9,8,7,6,5,4,3,2,1,0)=0123".to_string() // 30 chars → 8 blocks
+    } else {
+        SHORT[i % SHORT.len()].to_string() // 3 chars → 1 block
+    }
+}
+
+struct ModeResult {
+    label: &'static str,
+    completed: usize,
+    failed: usize,
+    wall_s: f64,
+    tokens: u64,
+    tps: f64,
+    occupancy: f64,
+    tps_busy_slot: f64,
+    p50_s: f64,
+    p90_s: f64,
+}
+
+fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
+    let mut cfg = RouterCfg::new(engine_cfg(), std::path::PathBuf::from("/nonexistent"));
+    cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(8000, 1500, 1000));
+    cfg.batcher = BatcherCfg { max_batch: SLOTS, flush_ms: 5 };
+    cfg.queue_cap = 1024;
+    cfg.mode = mode;
+    let router = Router::start(cfg);
+
+    // identical arrival process for both modes
+    let trace = workload::poisson_trace(RATE, n, 0xC0117);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    let mut i = 0usize;
+    workload::replay_trace(&trace, |_req| {
+        if let Ok(h) = router.submit(prompt_for(i), SeqParams::default()) {
+            handles.push(h);
+        }
+        i += 1;
+    });
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        match h.wait() {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = &router.metrics;
+    let tokens = m.tokens_generated.get();
+    let busy = m.slot_busy_seconds.get_secs();
+    let result = ModeResult {
+        label,
+        completed,
+        failed,
+        wall_s,
+        tokens,
+        tps: tokens as f64 / wall_s,
+        occupancy: (busy / (wall_s * SLOTS as f64)).min(1.0),
+        tps_busy_slot: m.tps_per_busy_slot(),
+        p50_s: m.request_latency.quantile(0.5),
+        p90_s: m.request_latency.quantile(0.9),
+    };
+    router.shutdown();
+    result
+}
+
+fn main() -> anyhow::Result<()> {
+    esdllm::logging::init();
+    let n = bench_n(330);
+    println!(
+        "== serve_continuous: {n} requests @ {RATE}/s over {SLOTS} slots \
+         (skewed mix: 1 in 8 is an 8-block pole) =="
+    );
+
+    let rtc = run_mode(SchedMode::RunToCompletion, "run-to-completion", n);
+    let cont = run_mode(SchedMode::Continuous, "continuous", n);
+
+    let mut table = Table::new(
+        "serve_continuous: run-to-completion vs continuous batching",
+        &[
+            "mode", "done", "fail", "wall s", "tokens", "TPS", "occupancy",
+            "TPS/busy-slot", "p50 s", "p90 s",
+        ],
+    );
+    for r in [&rtc, &cont] {
+        table.row(&[
+            r.label.to_string(),
+            format!("{}", r.completed),
+            format!("{}", r.failed),
+            format!("{:.2}", r.wall_s),
+            format!("{}", r.tokens),
+            format!("{:.1}", r.tps),
+            format!("{:.3}", r.occupancy),
+            format!("{:.1}", r.tps_busy_slot),
+            format!("{:.3}", r.p50_s),
+            format!("{:.3}", r.p90_s),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/results/serve_continuous.csv")?;
+
+    println!(
+        "\ncontinuous vs run-to-completion: TPS ×{:.2}, occupancy ×{:.2}, \
+         p90 latency ×{:.2}",
+        cont.tps / rtc.tps.max(1e-9),
+        cont.occupancy / rtc.occupancy.max(1e-9),
+        rtc.p90_s / cont.p90_s.max(1e-9),
+    );
+    let ok = cont.tps > rtc.tps && cont.occupancy > rtc.occupancy;
+    println!(
+        "acceptance (continuous > rtc on TPS and occupancy): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "cost model: one flat sleep per executable RUN (static shapes — a \
+         full-batch run costs the same however many rows are useful), so \
+         continuous batching IS charged for fragmenting ticks into \
+         per-(block, plan) groups; the prefill ≫ step ratio mirrors \
+         perf_hotpath. Re-validate against the PJRT backend with real \
+         artifacts before trusting absolute numbers."
+    );
+    Ok(())
+}

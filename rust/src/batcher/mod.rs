@@ -3,8 +3,13 @@
 //! The compiled step executables exist for batch sizes {1, 8}; the batcher
 //! drains the queue into groups of up to 8, waiting at most `flush_ms`
 //! after the first request before dispatching a partial batch (classic
-//! deadline-based dynamic batching, vLLM-style). A single waiting request
-//! takes the latency-optimal b=1 executables.
+//! deadline-based dynamic batching, vLLM-style).
+//!
+//! Since the continuous-batching refactor this drain-a-whole-batch path
+//! backs only [`crate::router::SchedMode::RunToCompletion`] (the
+//! baseline the serving benches compare against); the default continuous
+//! mode admits requests into free scheduler slots one at a time.
+//! `BatcherCfg::max_batch` doubles as the scheduler's slot count.
 
 use std::time::{Duration, Instant};
 

@@ -68,36 +68,128 @@ impl GroupCaches {
         ((((l * 2 + s) * self.batch + b) * d.n_kv_heads + h) * t_len + t) * d.head_dim
     }
 
+    fn all_slots(&self) -> Vec<usize> {
+        (0..self.batch).collect()
+    }
+
     // -- refresh from a prefill pass ---------------------------------------
 
     /// Overwrite all caches from prefill outputs
     /// (logits, kv, ind_h, ind_q, ind_k, ind_v, attn_mass).
     pub fn refresh_from_prefill(&mut self, outputs: &[HostTensor]) -> Result<()> {
-        let d = &self.dims;
-        let logits_full = outputs[0].as_f32()?;
+        let slots = self.all_slots();
+        self.refresh_slots_from_prefill(outputs, &slots)
+    }
+
+    /// Slot-lifecycle variant: merge prefill outputs into the given batch
+    /// rows only. The continuous-batching scheduler uses this so that a
+    /// grounding prefill for newly admitted sequences (or a per-slot
+    /// prompt refresh) never perturbs the decode trajectory of the other
+    /// occupants — batch rows are independent sequences, so a row-filtered
+    /// merge is exact.
+    pub fn refresh_slots_from_prefill(
+        &mut self,
+        outputs: &[HostTensor],
+        slots: &[usize],
+    ) -> Result<()> {
+        let d = self.dims.clone();
+        self.merge_full_logits_slots(&outputs[0], slots)?;
+        let kv_src = outputs[1].as_bf16()?;
+        let row = d.n_kv_heads * d.ctx * d.head_dim;
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for &b in slots {
+                    let off = ((l * 2 + s) * self.batch + b) * row;
+                    self.kv[off..off + row].copy_from_slice(&kv_src[off..off + row]);
+                }
+            }
+        }
+        let ind_row = d.gen_len * d.d_model;
+        for (i, name) in INDICATORS.iter().enumerate() {
+            let src = outputs[2 + i].as_bf16()?;
+            let dst = self.ind.get_mut(name).unwrap();
+            for l in 0..d.n_layers {
+                for &b in slots {
+                    let off = (l * self.batch + b) * ind_row;
+                    dst[off..off + ind_row].copy_from_slice(&src[off..off + ind_row]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge full-context logits [B, ctx, V] into the gen-region
+    /// latest-logits state for the given slots and refresh their
+    /// confidences (the vanilla method's whole cache interaction).
+    pub fn merge_full_logits_slots(
+        &mut self,
+        logits_full: &HostTensor,
+        slots: &[usize],
+    ) -> Result<()> {
+        let d = self.dims.clone();
         let v = d.vocab;
-        // keep only the gen region of logits
-        for b in 0..self.batch {
+        let src_all = logits_full.as_f32()?;
+        for &b in slots {
             for g in 0..d.gen_len {
                 let src = (b * d.ctx + d.prompt_len + g) * v;
                 let dst = (b * d.gen_len + g) * v;
-                self.logits[dst..dst + v].copy_from_slice(&logits_full[src..src + v]);
+                self.logits[dst..dst + v].copy_from_slice(&src_all[src..src + v]);
             }
         }
-        self.kv.copy_from_slice(outputs[1].as_bf16()?);
-        for (i, name) in INDICATORS.iter().enumerate() {
-            self.ind.get_mut(name).unwrap().copy_from_slice(outputs[2 + i].as_bf16()?);
-        }
-        self.recompute_conf();
+        self.recompute_conf_slots(slots);
         Ok(())
     }
 
     /// Confidence = max softmax probability per gen position.
     pub fn recompute_conf(&mut self) {
+        let slots = self.all_slots();
+        self.recompute_conf_slots(&slots);
+    }
+
+    pub fn recompute_conf_slots(&mut self, slots: &[usize]) {
         let v = self.dims.vocab;
-        for i in 0..self.batch * self.dims.gen_len {
-            let row = &self.logits[i * v..(i + 1) * v];
-            self.conf[i] = softmax_max(row);
+        let gen = self.dims.gen_len;
+        for &b in slots {
+            for g in 0..gen {
+                let i = b * gen + g;
+                let row = &self.logits[i * v..(i + 1) * v];
+                self.conf[i] = softmax_max(row);
+            }
+        }
+    }
+
+    // -- slot lifecycle ------------------------------------------------------
+
+    /// Zero every cache row of one slot so a retiring sequence leaves no
+    /// state behind for the next occupant.
+    pub fn reset_slot(&mut self, b: usize) {
+        let d = self.dims.clone();
+        let kv_row = d.n_kv_heads * d.ctx * d.head_dim;
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                let off = ((l * 2 + s) * self.batch + b) * kv_row;
+                self.kv[off..off + kv_row].fill(0);
+            }
+        }
+        let ind_row = d.gen_len * d.d_model;
+        for cache in self.ind.values_mut() {
+            for l in 0..d.n_layers {
+                let off = (l * self.batch + b) * ind_row;
+                cache[off..off + ind_row].fill(0);
+            }
+        }
+        self.logits[b * d.gen_len * d.vocab..(b + 1) * d.gen_len * d.vocab].fill(0.0);
+        self.conf[b * d.gen_len..(b + 1) * d.gen_len].fill(0.0);
+        if let Some(sp) = self.kv_sparse.as_mut() {
+            let keep_len = sp.keep_prompt + d.gen_len;
+            let sp_row = d.n_kv_heads * keep_len * d.head_dim;
+            for l in 0..d.n_layers {
+                for s in 0..2 {
+                    let off = ((l * 2 + s) * self.batch + b) * sp_row;
+                    sp.kv[off..off + sp_row].fill(0);
+                }
+            }
+            sp.keep_idx[b].clear();
         }
     }
 
@@ -135,6 +227,22 @@ impl GroupCaches {
         block: usize,
         t: &HostTensor,
     ) -> Result<()> {
+        let slots = self.all_slots();
+        self.scatter_ind_block_slots(indicator, layers, block_start, block, t, &slots)
+    }
+
+    /// Row-filtered scatter: only the given slots' indicator rows are
+    /// updated; spectator rows (slots working a different block, or
+    /// vacant) keep their state.
+    pub fn scatter_ind_block_slots(
+        &mut self,
+        indicator: &str,
+        layers: &[usize],
+        block_start: usize,
+        block: usize,
+        t: &HostTensor,
+        slots: &[usize],
+    ) -> Result<()> {
         let d_model = self.dims.d_model;
         let gen_len = self.dims.gen_len;
         let batch = self.batch;
@@ -145,7 +253,7 @@ impl GroupCaches {
             .get_mut(indicator)
             .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
         for (i, &l) in layers.iter().enumerate() {
-            for b in 0..batch {
+            for &b in slots {
                 for j in 0..block {
                     let src = (((i * batch) + b) * block + j) * d_model;
                     let dstoff = ((l * batch + b) * gen_len + g0 + j) * d_model;
@@ -165,18 +273,30 @@ impl GroupCaches {
         block: usize,
         t: &HostTensor,
     ) -> Result<()> {
+        let slots = self.all_slots();
+        self.scatter_kv_block_slots(block_start, block, t, &slots)
+    }
+
+    /// Row-filtered variant of [`GroupCaches::scatter_kv_block`].
+    pub fn scatter_kv_block_slots(
+        &mut self,
+        block_start: usize,
+        block: usize,
+        t: &HostTensor,
+        slots: &[usize],
+    ) -> Result<()> {
         let d = self.dims.clone();
         let hd = d.head_dim;
         let data = t.as_bf16()?;
-        let mut src = 0;
         for l in 0..d.n_layers {
             for s in 0..2 {
-                for b in 0..self.batch {
+                for &b in slots {
                     for h in 0..d.n_kv_heads {
+                        let src =
+                            ((((l * 2 + s) * self.batch + b) * d.n_kv_heads + h) * block) * hd;
                         let dst = self.kv_off(d.ctx, l, s, b, h, block_start);
                         self.kv[dst..dst + block * hd]
                             .copy_from_slice(&data[src..src + block * hd]);
-                        src += block * hd;
                     }
                 }
             }
@@ -192,6 +312,18 @@ impl GroupCaches {
         block: usize,
         t: &HostTensor,
     ) -> Result<()> {
+        let slots = self.all_slots();
+        self.scatter_kv_block_sparse_slots(block_start, block, t, &slots)
+    }
+
+    /// Row-filtered variant of [`GroupCaches::scatter_kv_block_sparse`].
+    pub fn scatter_kv_block_sparse_slots(
+        &mut self,
+        block_start: usize,
+        block: usize,
+        t: &HostTensor,
+        slots: &[usize],
+    ) -> Result<()> {
         let d = self.dims.clone();
         let batch = self.batch;
         let hd = d.head_dim;
@@ -199,18 +331,18 @@ impl GroupCaches {
         let sp = self.kv_sparse.as_mut().ok_or_else(|| anyhow!("no sparse cache"))?;
         let keep_len = sp.keep_prompt + d.gen_len;
         let row0 = sp.keep_prompt + (block_start - d.prompt_len);
-        let mut src = 0;
         for l in 0..d.n_layers {
             for s in 0..2 {
-                for b in 0..batch {
+                for &b in slots {
                     for h in 0..d.n_kv_heads {
+                        let src =
+                            ((((l * 2 + s) * batch + b) * d.n_kv_heads + h) * block) * hd;
                         let dst = ((((l * 2 + s) * batch + b) * d.n_kv_heads + h)
                             * keep_len
                             + row0)
                             * hd;
                         sp.kv[dst..dst + block * hd]
                             .copy_from_slice(&data[src..src + block * hd]);
-                        src += block * hd;
                     }
                 }
             }
@@ -223,12 +355,25 @@ impl GroupCaches {
     /// for those positions. Skipped positions keep their stale
     /// logits/confidence — exactly the paper's reuse semantics.
     pub fn merge_step_logits(&mut self, logits: &HostTensor, pos: &HostTensor) -> Result<()> {
+        let slots = self.all_slots();
+        self.merge_step_logits_slots(logits, pos, &slots)
+    }
+
+    /// Row-filtered variant of [`GroupCaches::merge_step_logits`]: the
+    /// scheduler applies a step's logits only to the slots that were
+    /// actually working the stepped block.
+    pub fn merge_step_logits_slots(
+        &mut self,
+        logits: &HostTensor,
+        pos: &HostTensor,
+        slots: &[usize],
+    ) -> Result<()> {
         let d = &self.dims;
         let v = d.vocab;
         let lg = logits.as_f32()?;
         let ps = pos.as_i32()?;
         let k = logits.shape()[1];
-        for b in 0..self.batch {
+        for &b in slots {
             for j in 0..k {
                 let p = ps[b * k + j] as usize;
                 let g = p - d.prompt_len;
@@ -272,6 +417,21 @@ impl GroupCaches {
         }
     }
 
+    /// Confidence input with an occupancy mask applied: rows NOT in
+    /// `slots` (vacant slots, or slots working a different block) are
+    /// pinned to -1.0, below any real confidence in [0, 1], so they can
+    /// never win the in-graph importance selection (I = α·conf +
+    /// (1−α)·var, Eq. 1) and the executable's compute budget goes to the
+    /// occupants. -1.0 rather than -inf keeps α·conf finite for α = 0.
+    pub fn conf_tensor_masked(&self, slots: &[usize]) -> HostTensor {
+        let gen = self.dims.gen_len;
+        let mut data = vec![-1.0f32; self.batch * gen];
+        for &b in slots {
+            data[b * gen..(b + 1) * gen].copy_from_slice(&self.conf[b * gen..(b + 1) * gen]);
+        }
+        HostTensor::F32 { shape: vec![self.batch, gen], data }
+    }
+
     // -- sparse-attention selection (Sparse-dLLM analog) --------------------
 
     /// Rebuild the pruned KV cache from the dense one: per batch element,
@@ -283,45 +443,76 @@ impl GroupCaches {
         keep_prompt: usize,
         smooth_kernel: usize,
     ) -> Result<()> {
+        let slots = self.all_slots();
+        self.rebuild_sparse_slots(attn_mass, keep_prompt, smooth_kernel, &slots)
+    }
+
+    /// Row-filtered sparse rebuild: refresh the pruned rows of the given
+    /// slots only, leaving the other occupants' pruned cache untouched
+    /// (slot admission under sparse attention).
+    pub fn rebuild_sparse_slots(
+        &mut self,
+        attn_mass: &HostTensor,
+        keep_prompt: usize,
+        smooth_kernel: usize,
+        slots: &[usize],
+    ) -> Result<()> {
         let d = self.dims.clone();
         let mass = attn_mass.as_f32()?;
-        let mut keep_idx = Vec::with_capacity(self.batch);
-        for b in 0..self.batch {
+        let keep_len = keep_prompt + d.gen_len;
+        let hd = d.head_dim;
+        if self
+            .kv_sparse
+            .as_ref()
+            .map(|sp| sp.keep_prompt != keep_prompt)
+            .unwrap_or(true)
+        {
+            self.kv_sparse = Some(SparseKv {
+                kv: vec![0u16; d.n_layers * 2 * self.batch * d.n_kv_heads * keep_len * hd],
+                keep_idx: vec![Vec::new(); self.batch],
+                keep_prompt,
+            });
+        }
+        let mut keep_by_slot: Vec<(usize, Vec<usize>)> = Vec::with_capacity(slots.len());
+        for &b in slots {
             let row = &mass[b * d.ctx..b * d.ctx + d.prompt_len];
             let smoothed = smooth(row, smooth_kernel);
             let mut order: Vec<usize> = (0..d.prompt_len).collect();
-            order.sort_by(|&i, &j| smoothed[j].partial_cmp(&smoothed[i]).unwrap());
+            order.sort_by(|&i, &j| smoothed[j].total_cmp(&smoothed[i]));
             let mut keep: Vec<usize> = order[..keep_prompt].to_vec();
             keep.sort();
-            keep_idx.push(keep);
+            keep_by_slot.push((b, keep));
         }
-        let keep_len = keep_prompt + d.gen_len;
-        let hd = d.head_dim;
-        let mut kv =
-            vec![0u16; d.n_layers * 2 * self.batch * d.n_kv_heads * keep_len * hd];
+        // split borrow: the dense cache is read while the sparse one is
+        // written
+        let mut sp = self.kv_sparse.take().unwrap();
         for l in 0..d.n_layers {
             for s in 0..2 {
-                for b in 0..self.batch {
+                for (b, keep) in &keep_by_slot {
+                    let b = *b;
                     for h in 0..d.n_kv_heads {
                         let base_dst =
                             (((l * 2 + s) * self.batch + b) * d.n_kv_heads + h) * keep_len;
                         // retained prompt rows
-                        for (r, &src_t) in keep_idx[b].iter().enumerate() {
+                        for (r, &src_t) in keep.iter().enumerate() {
                             let srco = self.kv_off(d.ctx, l, s, b, h, src_t);
                             let dsto = (base_dst + r) * hd;
-                            kv[dsto..dsto + hd]
+                            sp.kv[dsto..dsto + hd]
                                 .copy_from_slice(&self.kv[srco..srco + hd]);
                         }
                         // full gen region
                         let srco = self.kv_off(d.ctx, l, s, b, h, d.prompt_len);
                         let dsto = (base_dst + keep_prompt) * hd;
-                        kv[dsto..dsto + d.gen_len * hd]
+                        sp.kv[dsto..dsto + d.gen_len * hd]
                             .copy_from_slice(&self.kv[srco..srco + d.gen_len * hd]);
                     }
                 }
             }
         }
-        self.kv_sparse = Some(SparseKv { kv, keep_idx, keep_prompt });
+        for (b, keep) in keep_by_slot {
+            sp.keep_idx[b] = keep;
+        }
+        self.kv_sparse = Some(sp);
         Ok(())
     }
 }
@@ -473,6 +664,93 @@ mod tests {
         // first retained row equals dense row t=1 of layer0/k/h0
         let src = c.kv_off(d.ctx, 0, 0, 0, 0, 1);
         assert_eq!(&sp.kv[..d.head_dim], &c.kv[src..src + d.head_dim]);
+    }
+
+    #[test]
+    fn slot_filtered_kv_scatter_leaves_spectators_untouched() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let block = 2;
+        let n = d.n_layers * 2 * 2 * d.n_kv_heads * block * d.head_dim;
+        let data: Vec<u16> = (1..=n as u16).collect();
+        let t = HostTensor::Bf16 {
+            shape: vec![d.n_layers, 2, 2, d.n_kv_heads, block, d.head_dim],
+            data,
+        };
+        c.scatter_kv_block_slots(4, block, &t, &[1]).unwrap();
+        // slot 0 untouched, slot 1 written
+        let off0 = c.kv_off(d.ctx, 0, 0, 0, 0, 4);
+        assert!(c.kv[off0..off0 + block * d.head_dim].iter().all(|&x| x == 0));
+        let off1 = c.kv_off(d.ctx, 0, 0, 1, 0, 4);
+        assert!(c.kv[off1..off1 + block * d.head_dim].iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn slot_filtered_logit_merge_and_reset() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let logits = HostTensor::F32 {
+            shape: vec![2, 1, 8],
+            data: vec![
+                9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // slot 0 row
+                7.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // slot 1 row
+            ],
+        };
+        let pos = HostTensor::I32 { shape: vec![2, 1], data: vec![4, 4] };
+        c.merge_step_logits_slots(&logits, &pos, &[1]).unwrap();
+        assert_eq!(c.logits[0], 0.0, "slot 0 must be untouched");
+        assert_eq!(c.logits[d.gen_len * d.vocab], 7.0, "slot 1 gen row 0");
+        c.reset_slot(1);
+        assert_eq!(c.logits[d.gen_len * d.vocab], 0.0);
+        assert_eq!(c.conf[d.gen_len], 0.0);
+    }
+
+    #[test]
+    fn conf_tensor_masked_pins_vacant_rows() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        c.conf.fill(0.5);
+        let t = c.conf_tensor_masked(&[0]);
+        let data = t.as_f32().unwrap();
+        assert!(data[..d.gen_len].iter().all(|&x| x == 0.5));
+        assert!(data[d.gen_len..].iter().all(|&x| x == -1.0));
+    }
+
+    #[test]
+    fn slot_filtered_prefill_refresh() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let v = d.vocab;
+        let mut logits_full = vec![0.0f32; 2 * d.ctx * v];
+        // peak token 3 for every gen position of both rows
+        for b in 0..2 {
+            for g in 0..d.gen_len {
+                logits_full[(b * d.ctx + d.prompt_len + g) * v + 3] = 5.0;
+            }
+        }
+        let kv_len = d.n_layers * 2 * 2 * d.n_kv_heads * d.ctx * d.head_dim;
+        let ind_len = d.n_layers * 2 * d.gen_len * d.d_model;
+        let outputs = vec![
+            HostTensor::F32 { shape: vec![2, d.ctx, v], data: logits_full },
+            HostTensor::Bf16 {
+                shape: vec![d.n_layers, 2, 2, d.n_kv_heads, d.ctx, d.head_dim],
+                data: vec![7u16; kv_len],
+            },
+            HostTensor::Bf16 { shape: vec![d.n_layers, 2, d.gen_len, d.d_model], data: vec![1u16; ind_len] },
+            HostTensor::Bf16 { shape: vec![d.n_layers, 2, d.gen_len, d.d_model], data: vec![2u16; ind_len] },
+            HostTensor::Bf16 { shape: vec![d.n_layers, 2, d.gen_len, d.d_model], data: vec![3u16; ind_len] },
+            HostTensor::Bf16 { shape: vec![d.n_layers, 2, d.gen_len, d.d_model], data: vec![4u16; ind_len] },
+            HostTensor::F32 { shape: vec![2, d.ctx], data: vec![0.0; 2 * d.ctx] },
+        ];
+        c.refresh_slots_from_prefill(&outputs, &[1]).unwrap();
+        // slot 1 refreshed: confident logits + kv filled
+        assert!(c.conf[d.gen_len] > 0.9);
+        let off1 = c.kv_off(d.ctx, 0, 0, 1, 0, 0);
+        assert_eq!(c.kv[off1], 7);
+        // slot 0 untouched
+        assert_eq!(c.conf[0], 0.0);
+        let off0 = c.kv_off(d.ctx, 0, 0, 0, 0, 0);
+        assert_eq!(c.kv[off0], 0);
     }
 
     #[test]

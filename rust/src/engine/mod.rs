@@ -1,30 +1,38 @@
-//! The decode engine: per-iteration orchestration of the paper's methods.
+//! The decode engine: the run-to-completion façade over the slot
+//! scheduler.
 //!
 //! One [`Engine`] drives one batched sequence group through the masked-
-//! diffusion denoising loop, choosing per iteration between:
+//! diffusion denoising loop. Since the continuous-batching refactor the
+//! per-iteration machinery lives in [`crate::scheduler`]: the engine
+//! builds a [`crate::scheduler::PjrtBackend`] over the compiled
+//! executables, admits every prompt into a
+//! [`crate::scheduler::GroupScheduler`], and ticks the group until all
+//! sequences retire. Each iteration the scheduler chooses per sequence
+//! between:
 //!
 //!   * `Prefill`  — full forward (vanilla step / prompt refresh / block
-//!                  grounding); refreshes every cache,
+//!                  grounding); refreshes the requesting slots' caches,
 //!   * `DualStep` — full-block step against cached outside-KV (DualCache's
 //!                  per-iteration op; ES-dLLM's block refresh),
 //!   * `EsStep`   — the early-skip step (Algorithm 1): the executable
 //!                  computes importance scores in-graph, returns logits
-//!                  only for the surviving positions, and the engine
+//!                  only for the surviving positions, and the backend
 //!                  merges them into the latest-logits state (skipped
 //!                  positions keep their previous logits/confidence).
 //!
-//! The engine owns sampling (low-confidence remask / maskgit-plus),
-//! parallel decoding, the EOS guard, sparse-KV selection, and all cache
-//! plumbing. Python is never on this path.
+//! Sampling (low-confidence remask / maskgit-plus), parallel decoding,
+//! the EOS guard, sparse-KV selection, and all cache plumbing sit behind
+//! the scheduler. Unlike the pre-refactor engine, a sequence whose
+//! output is fully determined (EOS guard) retires at the next block
+//! boundary instead of riding along until the whole group drains.
+//! Python is never on this path.
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::{GroupCaches, RefreshPolicy, StepPlan};
-use crate::manifest::{ArchSpec, ExeKind, ExeSpec};
-use crate::rng::SplitMix;
-use crate::runtime::tensor::HostTensor;
+use crate::cache::{RefreshPolicy, StepPlan};
 use crate::runtime::Runtime;
-use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
+use crate::sampler::SamplerCfg;
+use crate::scheduler::{FinishedSeq, GroupScheduler, PjrtBackend, SchedCfg, SeqInput, SeqParams};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
@@ -112,103 +120,96 @@ pub fn adaptive_es_exe(block: usize, batch: usize, mean_conf_delta: f32) -> Stri
 #[derive(Debug, Clone)]
 pub struct GroupResult {
     pub texts: Vec<String>,
+    /// scheduler ticks (group iterations) this generation took
     pub iterations: usize,
     pub tokens_generated: usize,
     pub wall_s: f64,
-    /// iteration counts by plan, for FLOPs accounting
+    /// executable-run counts by plan, for FLOPs accounting
     pub n_prefill: usize,
     pub n_dual: usize,
     pub n_es: usize,
 }
 
+/// Name of the step executable for `cfg` and the given plan at batch
+/// `batch`. `conf_drift` selects the adaptive skip-ratio variant (pass
+/// anything when `cfg.adaptive` is off).
+pub fn step_exe_name(cfg: &EngineCfg, plan: StepPlan, batch: usize, conf_drift: f32) -> String {
+    let blk = cfg.block;
+    let ind = cfg.indicator.as_str();
+    match plan {
+        StepPlan::Prefill => unreachable!("prefill executables are not step plans"),
+        StepPlan::DualStep => {
+            if cfg.sparse {
+                format!("dual_sp_blk{blk}_b{batch}")
+            } else if ind != "h" {
+                format!("dual_ind_{ind}_blk{blk}_b{batch}")
+            } else {
+                format!("dual_blk{blk}_b{batch}")
+            }
+        }
+        StepPlan::EsStep => {
+            if let Some(name) = &cfg.es_exe_override {
+                name.clone()
+            } else if cfg.adaptive {
+                adaptive_es_exe(blk, batch, conf_drift)
+            } else if cfg.sparse {
+                format!("es_sp_blk{blk}_b{batch}")
+            } else if ind != "h" {
+                format!("es_ind_{ind}_blk{blk}_b{batch}")
+            } else {
+                format!("es_blk{blk}_b{batch}")
+            }
+        }
+    }
+}
+
 pub struct Engine<'rt> {
     rt: &'rt Runtime,
     pub cfg: EngineCfg,
-    rng: SplitMix,
-    /// mean |Δconfidence| at the last iteration (adaptive-ratio signal)
-    conf_drift: f32,
 }
 
 impl<'rt> Engine<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: EngineCfg) -> Engine<'rt> {
-        let seed = cfg.seed ^ 0xE5D1;
-        Engine { rt, cfg, rng: SplitMix::new(seed), conf_drift: 1.0 }
-    }
-
-    fn arch(&self) -> Result<&ArchSpec> {
-        self.rt.arch(&self.cfg.arch)
-    }
-
-    fn exe<'a>(&self, arch: &'a ArchSpec, name: &str) -> Result<&'a ExeSpec> {
-        arch.exe(name)
-    }
-
-    /// Name of the step executable for the given plan at batch `b`.
-    fn step_exe_name(&self, plan: StepPlan, batch: usize) -> String {
-        let blk = self.cfg.block;
-        let ind = self.cfg.indicator.as_str();
-        match plan {
-            StepPlan::Prefill => unreachable!(),
-            StepPlan::DualStep => {
-                if self.cfg.sparse {
-                    format!("dual_sp_blk{blk}_b{batch}")
-                } else if ind != "h" {
-                    format!("dual_ind_{ind}_blk{blk}_b{batch}")
-                } else {
-                    format!("dual_blk{blk}_b{batch}")
-                }
-            }
-            StepPlan::EsStep => {
-                if let Some(name) = &self.cfg.es_exe_override {
-                    name.clone()
-                } else if self.cfg.adaptive {
-                    adaptive_es_exe(blk, batch, self.conf_drift)
-                } else if self.cfg.sparse {
-                    format!("es_sp_blk{blk}_b{batch}")
-                } else if ind != "h" {
-                    format!("es_ind_{ind}_blk{blk}_b{batch}")
-                } else {
-                    format!("es_blk{blk}_b{batch}")
-                }
-            }
-        }
+        Engine { rt, cfg }
     }
 
     /// Compile every executable this configuration can touch at batch
     /// size `batch`, so the first timed generation doesn't pay PJRT
     /// compilation (5–7 s per module) inside the measurement window.
     pub fn precompile(&mut self, batch: usize) -> Result<()> {
-        let arch = self.arch()?.clone();
+        let arch = self.rt.arch(&self.cfg.arch)?.clone();
         let mut names = vec![format!("prefill_b{batch}")];
         if self.cfg.method == Method::Vanilla {
             names = vec![format!("vanilla_b{batch}")];
         } else {
-            names.push(self.step_exe_name(StepPlan::DualStep, batch));
+            names.push(step_exe_name(&self.cfg, StepPlan::DualStep, batch, 1.0));
             if self.cfg.method == Method::EsDllm {
                 if self.cfg.adaptive {
                     for drift in [0.001f32, 0.02, 0.2] {
                         names.push(adaptive_es_exe(self.cfg.block, batch, drift));
                     }
                 } else {
-                    names.push(self.step_exe_name(StepPlan::EsStep, batch));
+                    names.push(step_exe_name(&self.cfg, StepPlan::EsStep, batch, 1.0));
                 }
             }
         }
         for name in names {
-            let exe = self.exe(&arch, &name)?;
+            let exe = arch.exe(&name)?;
             self.rt.executable(&arch, exe)?;
         }
         self.rt.checkpoint_params(&arch, &self.cfg.checkpoint)?;
         Ok(())
     }
 
-    /// Generate completions for up to `batch` prompts (padded internally).
+    /// Generate completions for up to `batch` prompts: admit every
+    /// prompt into a slot scheduler and tick the group until all
+    /// sequences retire. Sequences that finish early (EOS guard) retire
+    /// at their block boundary instead of riding until the group drains.
     pub fn generate(&mut self, prompts: &[String]) -> Result<GroupResult> {
-        let arch = self.arch()?.clone();
-        let d = &arch.dims;
-        let gen = d.gen_len;
+        let arch = self.rt.arch(&self.cfg.arch)?.clone();
+        let gen = arch.dims.gen_len;
         let block = self.cfg.block;
-        if gen % block != 0 {
+        if block == 0 || gen % block != 0 {
             return Err(anyhow!("gen_len {gen} not divisible by block {block}"));
         }
         // batch-size class: the core executables exist for b in {1, 8};
@@ -220,211 +221,40 @@ impl<'rt> Engine<'rt> {
         if prompts.len() > batch {
             return Err(anyhow!("group of {} exceeds max batch {batch}", prompts.len()));
         }
-        let tok = &self.rt.tokenizer;
-        let mask = tok.mask;
 
-        // layout: [prompt (PAD-padded) | gen (MASK)]
-        let mut tokens = vec![0i32; batch * d.ctx];
-        for b in 0..batch {
-            let prompt = prompts.get(b).unwrap_or(&prompts[prompts.len() - 1]);
-            let ids = tok.encode_prompt(prompt, d.prompt_len)?;
-            tokens[b * d.ctx..b * d.ctx + d.prompt_len].copy_from_slice(&ids);
-            for g in 0..gen {
-                tokens[b * d.ctx + d.prompt_len + g] = mask;
-            }
-        }
-
-        let mut caches = GroupCaches::new(d, batch);
-        let mut result = GroupResult {
-            texts: vec![],
-            iterations: 0,
-            tokens_generated: prompts.len() * gen,
-            wall_s: 0.0,
-            n_prefill: 0,
-            n_dual: 0,
-            n_es: 0,
-        };
+        let backend = PjrtBackend::new(self.rt, self.cfg.clone(), batch)?;
+        let mut sched =
+            GroupScheduler::new(Box::new(backend), batch, SchedCfg::from_engine(&self.cfg))?;
         let t0 = std::time::Instant::now();
-
-        let n_blocks = gen / block;
-        let mut g_iter = 0usize; // global iteration counter
-        for blk_i in 0..n_blocks {
-            let block_lo = blk_i * block; // gen-region offset
-            let block_start = d.prompt_len + block_lo; // absolute
-            let mut i_b = 0usize;
-            // iterate until every sequence's block region is unmasked
-            while (0..batch).any(|b| {
-                tokens[b * d.ctx + block_start..b * d.ctx + block_start + block]
-                    .iter()
-                    .any(|&t| t == mask)
-            }) {
-                let plan = match self.cfg.method {
-                    Method::Vanilla => StepPlan::Prefill,
-                    Method::DualCache => RefreshPolicy::plan_dual(i_b),
-                    Method::EsDllm => self.cfg.refresh.plan_es(g_iter, i_b),
-                };
-                let conf_before = caches.conf.clone();
-                match plan {
-                    StepPlan::Prefill => {
-                        self.run_prefill(&arch, batch, &tokens, &mut caches)?;
-                        result.n_prefill += 1;
-                    }
-                    StepPlan::DualStep | StepPlan::EsStep => {
-                        self.run_step(
-                            &arch, plan, batch, &tokens, block_start, &mut caches,
-                        )?;
-                        if plan == StepPlan::DualStep {
-                            result.n_dual += 1;
-                        } else {
-                            result.n_es += 1;
-                        }
-                    }
-                }
-                // adaptive-ratio signal: mean |Δconf| over the block
-                if self.cfg.adaptive {
-                    let mut sum = 0f32;
-                    let mut cnt = 0usize;
-                    for b in 0..batch {
-                        for j in block_lo..block_lo + block {
-                            let i = b * gen + j;
-                            sum += (caches.conf[i] - conf_before[i]).abs();
-                            cnt += 1;
-                        }
-                    }
-                    self.conf_drift = sum / cnt.max(1) as f32;
-                }
-
-                // unmask decisions per sequence
-                for b in 0..batch {
-                    let gen_tokens =
-                        &tokens[b * d.ctx + d.prompt_len..b * d.ctx + d.ctx];
-                    let inp = UnmaskInput {
-                        logits: &caches.logits
-                            [b * gen * d.vocab..(b + 1) * gen * d.vocab],
-                        conf: &caches.conf[b * gen..(b + 1) * gen],
-                        gen_tokens,
-                        block_lo,
-                        block_hi: block_lo + block,
-                        vocab: d.vocab,
-                        mask_id: mask,
-                        eos_id: tok.eos,
-                    };
-                    let decision = decide_unmask(&self.cfg.sampler, &inp, &mut self.rng);
-                    for (p, t) in decision.positions.iter().zip(&decision.tokens) {
-                        tokens[b * d.ctx + d.prompt_len + p] = *t;
-                    }
-                }
-                g_iter += 1;
-                i_b += 1;
-                result.iterations += 1;
+        for (i, prompt) in prompts.iter().enumerate() {
+            sched.admit(SeqInput {
+                id: i as u64,
+                prompt: prompt.clone(),
+                params: SeqParams::default(),
+                submitted: t0,
+            })?;
+        }
+        let mut done: Vec<Option<FinishedSeq>> = vec![None; prompts.len()];
+        while sched.active() > 0 {
+            for f in sched.tick()? {
+                done[f.id as usize] = Some(f);
             }
         }
-
-        result.wall_s = t0.elapsed().as_secs_f64();
-        result.texts = (0..prompts.len())
-            .map(|b| {
-                tok.decode(&tokens[b * d.ctx + d.prompt_len..b * d.ctx + d.ctx])
-            })
-            .collect();
+        let mut result = GroupResult {
+            texts: Vec::with_capacity(prompts.len()),
+            iterations: sched.ticks,
+            tokens_generated: 0,
+            wall_s: t0.elapsed().as_secs_f64(),
+            n_prefill: sched.n_prefill,
+            n_dual: sched.n_dual,
+            n_es: sched.n_es,
+        };
+        for f in done {
+            let f = f.expect("every admitted sequence retires");
+            result.tokens_generated += f.tokens;
+            result.texts.push(f.text);
+        }
         Ok(result)
-    }
-
-    fn run_prefill(
-        &mut self,
-        arch: &ArchSpec,
-        batch: usize,
-        tokens: &[i32],
-        caches: &mut GroupCaches,
-    ) -> Result<()> {
-        let d = &arch.dims;
-        // the vanilla baseline never reads caches: use the logits-only
-        // executable and skip all cache maintenance
-        if self.cfg.method == Method::Vanilla {
-            let exe = self.exe(arch, &format!("vanilla_b{batch}"))?;
-            let toks = HostTensor::I32 {
-                shape: vec![batch, d.ctx],
-                data: tokens.to_vec(),
-            };
-            let out = self.rt.run(arch, exe, &self.cfg.checkpoint, &[toks])?;
-            // slice gen-region logits into the state
-            let logits_full = out[0].as_f32()?;
-            for b in 0..batch {
-                for g in 0..d.gen_len {
-                    let src = (b * d.ctx + d.prompt_len + g) * d.vocab;
-                    let dst = (b * d.gen_len + g) * d.vocab;
-                    caches.logits[dst..dst + d.vocab]
-                        .copy_from_slice(&logits_full[src..src + d.vocab]);
-                }
-            }
-            caches.recompute_conf();
-            return Ok(());
-        }
-        let exe = self.exe(arch, &format!("prefill_b{batch}"))?;
-        let toks = HostTensor::I32 { shape: vec![batch, d.ctx], data: tokens.to_vec() };
-        let out = self.rt.run(arch, exe, &self.cfg.checkpoint, &[toks])?;
-        debug_assert_eq!(exe.kind, ExeKind::Prefill);
-        caches.refresh_from_prefill(&out)?;
-        if self.cfg.sparse {
-            let keep = self.rt.manifest.generation.sparse_keep_prompt;
-            caches.rebuild_sparse(&out[6], keep, 3)?;
-        }
-        Ok(())
-    }
-
-    fn run_step(
-        &mut self,
-        arch: &ArchSpec,
-        plan: StepPlan,
-        batch: usize,
-        tokens: &[i32],
-        block_start: usize,
-        caches: &mut GroupCaches,
-    ) -> Result<()> {
-        let d = &arch.dims;
-        let block = self.cfg.block;
-        let exe_name = self.step_exe_name(plan, batch);
-        let exe = self.exe(arch, &exe_name)?;
-
-        // current block tokens
-        let mut x_tok = Vec::with_capacity(batch * block);
-        for b in 0..batch {
-            x_tok.extend_from_slice(
-                &tokens[b * d.ctx + block_start..b * d.ctx + block_start + block],
-            );
-        }
-
-        let ind_layers: &[usize] = &exe.skip_layers;
-        let all_layers: Vec<usize> = (0..d.n_layers).collect();
-        let ind_for_exe: Vec<usize> = if exe.skip.is_empty() {
-            all_layers
-        } else {
-            ind_layers.to_vec()
-        };
-        let indicator = exe.indicator.clone().unwrap_or_else(|| "h".into());
-
-        let kv = if self.cfg.sparse {
-            caches.kv_sparse_tensor()?
-        } else {
-            caches.kv_tensor()
-        };
-        let inputs = vec![
-            HostTensor::I32 { shape: vec![batch, block], data: x_tok },
-            HostTensor::scalar_i32(block_start as i32),
-            kv,
-            caches.gather_ind(&indicator, &ind_for_exe)?,
-            caches.conf_tensor(),
-            HostTensor::scalar_f32(self.cfg.alpha),
-        ];
-        let out = self.rt.run(arch, exe, &self.cfg.checkpoint, &inputs)?;
-        // outputs: logits [B,k,V], pos [B,k], kv_block, ind_block
-        caches.merge_step_logits(&out[0], &out[1])?;
-        if self.cfg.sparse {
-            caches.scatter_kv_block_sparse(block_start, block, &out[2])?;
-        } else {
-            caches.scatter_kv_block(block_start, block, &out[2])?;
-        }
-        caches.scatter_ind_block(&indicator, &ind_for_exe, block_start, block, &out[3])?;
-        Ok(())
     }
 }
 
@@ -453,6 +283,24 @@ mod tests {
         ));
         assert_eq!(l.alpha, 0.5);
         assert_eq!(l.block, 8);
+    }
+
+    #[test]
+    fn step_exe_names_cover_variants() {
+        let mut cfg = EngineCfg::new("llada-nano", Method::EsDllm);
+        assert_eq!(step_exe_name(&cfg, StepPlan::EsStep, 8, 1.0), "es_blk8_b8");
+        assert_eq!(step_exe_name(&cfg, StepPlan::DualStep, 1, 1.0), "dual_blk8_b1");
+        cfg.sparse = true;
+        assert_eq!(step_exe_name(&cfg, StepPlan::EsStep, 8, 1.0), "es_sp_blk8_b8");
+        cfg.sparse = false;
+        cfg.indicator = "q".into();
+        assert_eq!(step_exe_name(&cfg, StepPlan::EsStep, 8, 1.0), "es_ind_q_blk8_b8");
+        cfg.indicator = "h".into();
+        cfg.es_exe_override = Some("es_r1_only_50_blk8_b8".into());
+        assert_eq!(
+            step_exe_name(&cfg, StepPlan::EsStep, 8, 1.0),
+            "es_r1_only_50_blk8_b8"
+        );
     }
 
     #[test]

@@ -154,6 +154,7 @@ pub fn evaluate(
         n_es: 0,
         wall_s: 0.0,
     };
+    let mut tokens = 0usize;
     for group in items.chunks(8) {
         let prompts: Vec<String> = group.iter().map(|i| i.prompt.clone()).collect();
         let g = engine.generate(&prompts)?;
@@ -167,9 +168,12 @@ pub fn evaluate(
         res.n_dual += g.n_dual;
         res.n_es += g.n_es;
         res.wall_s += g.wall_s;
+        tokens += g.tokens_generated;
     }
-    let gen_len = rt.manifest.generation.gen_len;
-    res.tps = (n * gen_len) as f64 / res.wall_s;
+    // TPS over tokens actually emitted: the EOS guard retires sequences
+    // at block boundaries before the full gen region is decoded, so
+    // crediting n * gen_len would inflate throughput purely by accounting
+    res.tps = tokens as f64 / res.wall_s;
     res.score = 100.0 * correct as f64 / n as f64;
     Ok(res)
 }

@@ -6,9 +6,25 @@
 //!   * Layer 2 (build time): JAX diffusion-transformer step functions under
 //!     `python/compile/model.py`, AOT-lowered to HLO text in `artifacts/`.
 //!   * Layer 3 (this crate): the serving coordinator — request routing,
-//!     dynamic batching, KV/hidden/confidence cache management, the
+//!     continuous batching, KV/hidden/confidence cache management, the
 //!     early-skip decode engine, refresh policies, sampling, metrics and an
 //!     HTTP front end. Python never runs on the request path.
+//!
+//! Serving data path (one worker thread per PJRT runtime):
+//!
+//! ```text
+//! httpd → server (/generate: prompt + per-request params)
+//!       → router (bounded queue; backpressure → 503)
+//!       → scheduler::GroupScheduler  ← the continuous-batching core
+//!           fixed batch slots; per-sequence SeqState machines;
+//!           retire/admit at block boundaries; row-filtered cache merges
+//!       → scheduler::StepBackend (PjrtBackend over compiled
+//!         executables, or scheduler::sim::SimBackend for tests/benches)
+//! ```
+//!
+//! [`engine::Engine`] remains the run-to-completion façade for the eval
+//! and bench paths: it admits a whole prompt group into a scheduler and
+//! ticks it until every sequence retires.
 
 pub mod analysis;
 pub mod batcher;
@@ -23,6 +39,7 @@ pub mod metrics;
 pub mod router;
 pub mod runtime;
 pub mod sampler;
+pub mod scheduler;
 pub mod server;
 pub mod weights;
 pub mod httpd;

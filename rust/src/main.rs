@@ -12,7 +12,7 @@ use esdllm::batcher::BatcherCfg;
 use esdllm::cli::Args;
 use esdllm::engine::{Engine, EngineCfg, Method};
 use esdllm::eval::{self, EvalOpts};
-use esdllm::router::{Router, RouterCfg};
+use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend};
 use esdllm::runtime::{default_artifacts_dir, Runtime};
 use esdllm::server::{serve, ServeCfg};
 
@@ -36,6 +36,7 @@ fn usage() -> String {
      serve:\n\
        --bind <addr:port>               listen address (default 127.0.0.1:8311)\n\
        --flush-ms <n>                   batcher flush window (default 20)\n\
+       --sched <continuous|rtc>         scheduling mode (default continuous)\n\
      generate:\n\
        --prompt <text>                  prompt to complete\n\
      eval:\n\
@@ -67,6 +68,13 @@ fn main() -> Result<()> {
 
     match cmd.as_str() {
         "serve" => {
+            let mode = match args.str("sched", "continuous").as_str() {
+                "rtc" | "run-to-completion" => SchedMode::RunToCompletion,
+                "continuous" => SchedMode::Continuous,
+                other => {
+                    return Err(anyhow!("unknown --sched {other} (continuous|rtc)"))
+                }
+            };
             let router = Router::start(RouterCfg {
                 engine: engine_cfg,
                 batcher: BatcherCfg {
@@ -76,6 +84,8 @@ fn main() -> Result<()> {
                 queue_cap: args.usize("queue-cap", 256),
                 workers: args.usize("workers", 1),
                 artifacts_dir: artifacts,
+                mode,
+                backend: WorkerBackend::Pjrt,
             });
             let cfg = ServeCfg {
                 bind: args.str("bind", "127.0.0.1:8311"),

@@ -86,8 +86,55 @@ impl Histogram {
         if r.is_empty() {
             return 0.0;
         }
-        r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: partial_cmp().unwrap() panics on NaN samples, and a
+        // single poisoned observation must not take down /metrics
+        r.sort_by(f64::total_cmp);
         r[((r.len() as f64 - 1.0) * q).round() as usize]
+    }
+}
+
+/// A settable instantaneous value (e.g. currently occupied slots).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Delta updates so several workers can share one gauge without
+    /// stomping each other's contribution.
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, v: u64) {
+        // saturating: a racing read must never observe a wrapped value
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(v))
+            });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Accumulated seconds stored as integer nanoseconds (atomic f64 sums
+/// without a mutex on the scheduler hot path; nanosecond resolution so
+/// sub-microsecond per-tick observations don't truncate to zero).
+#[derive(Default)]
+pub struct SecondsCounter(AtomicU64);
+
+impl SecondsCounter {
+    pub fn add_secs(&self, s: f64) {
+        self.0.fetch_add((s * 1e9).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn get_secs(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e9
     }
 }
 
@@ -103,6 +150,18 @@ pub struct Metrics {
     pub es_steps: Counter,
     pub batches_total: Counter,
     pub batch_occupancy_sum: Counter,
+    // -- continuous-batching scheduler --
+    /// sequences admitted into a slot / retired from one
+    pub admissions_total: Counter,
+    pub retirements_total: Counter,
+    /// scheduler iterations executed
+    pub ticks_total: Counter,
+    /// currently occupied slots / configured slot count
+    pub active_slots: Gauge,
+    pub slots_total: Gauge,
+    /// ∑ over ticks of (occupied slots × tick wall time): the denominator
+    /// of the occupancy-weighted throughput
+    pub slot_busy_seconds: SecondsCounter,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -129,6 +188,26 @@ impl Metrics {
         self.tokens_generated.get() as f64 / up
     }
 
+    /// Mean fraction of slots occupied while the server has been up.
+    pub fn slot_occupancy(&self) -> f64 {
+        let denom = self.uptime_secs() * self.slots_total.get().max(1) as f64;
+        if denom <= 0.0 {
+            return 0.0;
+        }
+        (self.slot_busy_seconds.get_secs() / denom).min(1.0)
+    }
+
+    /// Occupancy-weighted throughput: tokens per second of *busy* slot
+    /// time. Unlike `tps` this is insensitive to idle stretches, so it
+    /// isolates how well the scheduler keeps admitted work dense.
+    pub fn tps_per_busy_slot(&self) -> f64 {
+        let busy = self.slot_busy_seconds.get_secs();
+        if busy <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated.get() as f64 / busy
+    }
+
     /// Prometheus-style exposition.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -141,6 +220,11 @@ impl Metrics {
             ("esdllm_dual_steps", self.dual_steps.get()),
             ("esdllm_es_steps", self.es_steps.get()),
             ("esdllm_batches_total", self.batches_total.get()),
+            ("esdllm_admissions_total", self.admissions_total.get()),
+            ("esdllm_retirements_total", self.retirements_total.get()),
+            ("esdllm_ticks_total", self.ticks_total.get()),
+            ("esdllm_active_slots", self.active_slots.get()),
+            ("esdllm_slots_total", self.slots_total.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -161,6 +245,15 @@ impl Metrics {
         out.push_str(&format!(
             "esdllm_batch_occupancy_mean {:.3}\n",
             self.batch_occupancy_sum.get() as f64 / batches as f64
+        ));
+        out.push_str(&format!(
+            "esdllm_slot_busy_seconds {:.3}\n",
+            self.slot_busy_seconds.get_secs()
+        ));
+        out.push_str(&format!("esdllm_slot_occupancy {:.4}\n", self.slot_occupancy()));
+        out.push_str(&format!(
+            "esdllm_tps_per_busy_slot {:.3}\n",
+            self.tps_per_busy_slot()
         ));
         out
     }
@@ -192,5 +285,29 @@ mod tests {
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
+        assert!(text.contains("esdllm_active_slots 0"));
+        assert!(text.contains("esdllm_slot_occupancy"));
+    }
+
+    #[test]
+    fn quantile_survives_nan_observation() {
+        let h = Histogram::default();
+        h.observe_secs(0.5);
+        h.observe_secs(f64::NAN);
+        h.observe_secs(0.1);
+        // must not panic; NaN sorts last under total_cmp
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 0.1);
+    }
+
+    #[test]
+    fn occupancy_weighted_tps() {
+        let m = Metrics::default();
+        m.start_clock();
+        m.slots_total.set(8);
+        m.slot_busy_seconds.add_secs(2.0);
+        m.tokens_generated.add(64);
+        assert!((m.tps_per_busy_slot() - 32.0).abs() < 1e-9);
+        assert!(m.slot_occupancy() <= 1.0);
     }
 }

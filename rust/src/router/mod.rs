@@ -2,32 +2,68 @@
 //! engine worker threads.
 //!
 //! PJRT objects are not `Send`, so each worker thread constructs its own
-//! [`Runtime`] + [`Engine`] and pulls request batches from a shared
-//! bounded queue (backpressure: `try_submit` fails when the queue is
-//! full → HTTP 429/503). Responses travel back through per-request
+//! backend ([`Runtime`] + `PjrtBackend`, or the simulation backend) and
+//! owns one [`GroupScheduler`]. Two scheduling modes:
+//!
+//!   * [`SchedMode::Continuous`] (default) — the worker keeps a fixed
+//!     set of batch slots hot: finished sequences retire at block
+//!     boundaries and queued requests are admitted into the freed slots
+//!     mid-flight, so one slow sequence never holds finished slots
+//!     hostage and arrivals don't wait for the group to drain;
+//!   * [`SchedMode::RunToCompletion`] — the pre-refactor behavior
+//!     (drain a batch, run it to completion), kept as the baseline the
+//!     `serve_continuous` bench compares against.
+//!
+//! The scheduler's slot count is `batcher.max_batch`, fixed for the
+//! worker's lifetime because the group caches and compiled executables
+//! are shaped for one batch class ({1, 8}). That trades the old
+//! lone-request b=1 fast path for always-hot slots; serve with
+//! `max_batch = 1` to get the latency-optimal executables back on a
+//! strictly sequential workload.
+//!
+//! Requests carry per-request parameters ([`SeqParams`]: `gen_len`,
+//! temperature, parallel threshold) and replies carry true per-request
+//! statistics ([`GenReply`]), not group-level aggregates. The shared
+//! bounded queue provides backpressure: `try_submit` fails when the
+//! queue is full → HTTP 503. Responses travel back through per-request
 //! oneshot slots.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::batcher::{next_batch, BatcherCfg};
-use crate::engine::{Engine, EngineCfg};
+use crate::engine::EngineCfg;
 use crate::metrics::Metrics;
 use crate::runtime::Runtime;
+use crate::scheduler::sim::{SimBackend, SimCfg};
+use crate::scheduler::{
+    GroupScheduler, PjrtBackend, SchedCfg, SeqInput, SeqParams, StepBackend,
+};
 use crate::threadpool::Channel;
 
 pub struct GenRequest {
     pub prompt: String,
-    pub submitted: std::time::Instant,
+    pub params: SeqParams,
+    pub submitted: Instant,
     reply: OneShot<Result<GenReply, String>>,
 }
 
+/// Per-request generation outcome (replaces the old group-level reply).
 #[derive(Debug, Clone)]
 pub struct GenReply {
     pub text: String,
+    /// iterations THIS sequence was stepped
     pub iterations: usize,
+    /// admission → completion
     pub wall_s: f64,
+    /// submit → admission (time spent queued)
+    pub queue_s: f64,
+    /// positions decoded — content plus EOS fill (≤ requested gen_len
+    /// on EOS-guard early exit)
+    pub tokens: usize,
 }
 
 /// Minimal oneshot built on Mutex + Condvar.
@@ -66,6 +102,23 @@ impl<T> Default for OneShot<T> {
     }
 }
 
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// slot scheduler with mid-flight admission at block boundaries
+    Continuous,
+    /// legacy drain-batch → run-to-completion (baseline for benches)
+    RunToCompletion,
+}
+
+/// How a worker obtains its [`StepBackend`].
+#[derive(Clone)]
+pub enum WorkerBackend {
+    /// load the PJRT runtime + compiled artifacts from `artifacts_dir`
+    Pjrt,
+    /// deterministic simulation backend (tests, scheduler benches)
+    Sim(SimCfg),
+}
+
 #[derive(Clone)]
 pub struct Router {
     queue: Channel<GenRequest>,
@@ -78,11 +131,30 @@ pub struct RouterCfg {
     pub queue_cap: usize,
     pub workers: usize,
     pub artifacts_dir: std::path::PathBuf,
+    pub mode: SchedMode,
+    pub backend: WorkerBackend,
+}
+
+impl RouterCfg {
+    /// Continuous scheduling over the PJRT runtime with default batcher
+    /// and queue settings; override fields as needed.
+    pub fn new(engine: EngineCfg, artifacts_dir: std::path::PathBuf) -> RouterCfg {
+        RouterCfg {
+            engine,
+            batcher: BatcherCfg::default(),
+            queue_cap: 256,
+            workers: 1,
+            artifacts_dir,
+            mode: SchedMode::Continuous,
+            backend: WorkerBackend::Pjrt,
+        }
+    }
 }
 
 impl Router {
     /// Spawn worker threads and return the router handle. Each worker owns
-    /// a full Runtime (PJRT client + compiled executables + params).
+    /// a full backend (PJRT client + compiled executables + params, or the
+    /// simulation model) plus one slot scheduler.
     pub fn start(cfg: RouterCfg) -> Router {
         let queue: Channel<GenRequest> = Channel::bounded(cfg.queue_cap.max(1));
         let metrics = Arc::new(Metrics::default());
@@ -93,46 +165,67 @@ impl Router {
             let engine_cfg = cfg.engine.clone();
             let batcher = cfg.batcher;
             let dir = cfg.artifacts_dir.clone();
+            let mode = cfg.mode;
+            let backend = cfg.backend.clone();
             std::thread::Builder::new()
                 .name(format!("engine-{w}"))
-                .spawn(move || worker_loop(queue, metrics, engine_cfg, batcher, dir))
+                .spawn(move || worker_loop(queue, metrics, engine_cfg, batcher, dir, mode, backend))
                 .expect("spawn engine worker");
         }
         Router { queue, metrics }
     }
 
-    /// Enqueue a request; returns a oneshot to wait on, or Err when the
-    /// queue is full (backpressure).
-    pub fn try_submit(&self, prompt: String) -> Result<OneShot<Result<GenReply, String>>, ()> {
+    fn enqueue(
+        &self,
+        prompt: String,
+        params: SeqParams,
+        blocking: bool,
+    ) -> Result<OneShot<Result<GenReply, String>>, ()> {
         let reply = OneShot::new();
         let req = GenRequest {
             prompt,
-            submitted: std::time::Instant::now(),
+            params,
+            submitted: Instant::now(),
             reply: reply.clone(),
         };
-        match self.queue.try_send(req) {
+        let sent = if blocking {
+            self.queue.send(req).map_err(|_| ())
+        } else {
+            self.queue.try_send(req).map_err(|_| ())
+        };
+        match sent {
             Ok(()) => {
                 self.metrics.requests_total.inc();
                 Ok(reply)
             }
-            Err(_) => {
-                self.metrics.requests_rejected.inc();
+            Err(()) => {
+                if !blocking {
+                    self.metrics.requests_rejected.inc();
+                }
                 Err(())
             }
         }
     }
 
+    /// Enqueue a request; returns a oneshot to wait on, or Err when the
+    /// queue is full (backpressure → HTTP 503).
+    #[allow(clippy::result_unit_err)]
+    pub fn try_submit(
+        &self,
+        prompt: String,
+        params: SeqParams,
+    ) -> Result<OneShot<Result<GenReply, String>>, ()> {
+        self.enqueue(prompt, params, false)
+    }
+
     /// Blocking submit (used by the load generator / tests).
-    pub fn submit(&self, prompt: String) -> Result<OneShot<Result<GenReply, String>>, ()> {
-        let reply = OneShot::new();
-        let req = GenRequest {
-            prompt,
-            submitted: std::time::Instant::now(),
-            reply: reply.clone(),
-        };
-        self.queue.send(req).map_err(|_| ())?;
-        self.metrics.requests_total.inc();
-        Ok(reply)
+    #[allow(clippy::result_unit_err)]
+    pub fn submit(
+        &self,
+        prompt: String,
+        params: SeqParams,
+    ) -> Result<OneShot<Result<GenReply, String>>, ()> {
+        self.enqueue(prompt, params, true)
     }
 
     pub fn shutdown(&self) {
@@ -144,56 +237,223 @@ impl Router {
     }
 }
 
+fn drain_with_error(queue: &Channel<GenRequest>, msg: &str) {
+    while let Some(req) = queue.recv() {
+        req.reply.put(Err(msg.to_string()));
+    }
+}
+
 fn worker_loop(
     queue: Channel<GenRequest>,
     metrics: Arc<Metrics>,
     engine_cfg: EngineCfg,
     batcher: BatcherCfg,
     artifacts_dir: std::path::PathBuf,
+    mode: SchedMode,
+    backend_kind: WorkerBackend,
 ) {
-    let rt = match Runtime::load(&artifacts_dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            log::error!("engine worker failed to load runtime: {e:#}");
-            // drain queue with errors so clients aren't stuck
-            while let Some(req) = queue.recv() {
-                req.reply.put(Err(format!("runtime unavailable: {e}")));
+    let slots = batcher.max_batch.max(1);
+    // the runtime (when used) must outlive the backend borrowing it
+    let mut rt_holder: Option<Runtime> = None;
+    let backend: Box<dyn StepBackend + '_> = match backend_kind {
+        WorkerBackend::Pjrt => {
+            // the compiled artifacts exist only for batch classes {1, 8};
+            // fail fast with a clear message instead of answering every
+            // request with a confusing missing-executable error
+            if slots != 1 && slots != 8 {
+                let msg = format!(
+                    "batcher.max_batch {slots} unsupported by the compiled \
+                     executables (batch classes 1 and 8 only)"
+                );
+                log::error!("engine worker misconfigured: {msg}");
+                drain_with_error(&queue, &msg);
+                return;
             }
+            let rt = match Runtime::load(&artifacts_dir) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    log::error!("engine worker failed to load runtime: {e:#}");
+                    drain_with_error(&queue, &format!("runtime unavailable: {e}"));
+                    return;
+                }
+            };
+            let rt = rt_holder.insert(rt);
+            match PjrtBackend::new(rt, engine_cfg.clone(), slots) {
+                Ok(b) => Box::new(b),
+                Err(e) => {
+                    log::error!("engine worker failed to build backend: {e:#}");
+                    drain_with_error(&queue, &format!("backend unavailable: {e}"));
+                    return;
+                }
+            }
+        }
+        WorkerBackend::Sim(sim_cfg) => Box::new(SimBackend::new(sim_cfg)),
+    };
+    let sched = match GroupScheduler::new(backend, slots, SchedCfg::from_engine(&engine_cfg)) {
+        Ok(s) => s,
+        Err(e) => {
+            log::error!("engine worker failed to build scheduler: {e:#}");
+            drain_with_error(&queue, &format!("scheduler unavailable: {e}"));
             return;
         }
     };
-    let mut engine = Engine::new(&rt, engine_cfg);
-    while let Some(batch) = next_batch(&queue, &batcher) {
-        metrics.batches_total.inc();
-        metrics.batch_occupancy_sum.add(batch.len() as u64);
-        for req in &batch {
-            metrics
-                .queue_latency
-                .observe_secs(req.submitted.elapsed().as_secs_f64());
-        }
-        let prompts: Vec<String> = batch.iter().map(|r| r.prompt.clone()).collect();
-        match engine.generate(&prompts) {
-            Ok(res) => {
-                metrics.tokens_generated.add(res.tokens_generated as u64);
-                metrics.iterations_total.add(res.iterations as u64);
-                metrics.prefill_steps.add(res.n_prefill as u64);
-                metrics.dual_steps.add(res.n_dual as u64);
-                metrics.es_steps.add(res.n_es as u64);
-                for (req, text) in batch.iter().zip(res.texts.iter()) {
-                    let lat = req.submitted.elapsed().as_secs_f64();
-                    metrics.request_latency.observe_secs(lat);
-                    req.reply.put(Ok(GenReply {
-                        text: text.clone(),
-                        iterations: res.iterations,
-                        wall_s: res.wall_s,
+    // additive: several workers contribute to one capacity gauge
+    metrics.slots_total.add(slots as u64);
+    match mode {
+        SchedMode::Continuous => run_continuous(sched, queue, metrics),
+        SchedMode::RunToCompletion => run_to_completion(sched, queue, metrics, batcher),
+    }
+}
+
+/// Publish this worker's occupied-slot count as a delta against its
+/// previous contribution, so workers sharing the `active_slots` gauge
+/// never stomp each other.
+fn sync_active_slots(metrics: &Metrics, last: &mut usize, now: usize) {
+    if now > *last {
+        metrics.active_slots.add((now - *last) as u64);
+    } else {
+        metrics.active_slots.sub((*last - now) as u64);
+    }
+    *last = now;
+}
+
+/// Shared per-tick bookkeeping: run one tick, update metrics, and answer
+/// the retired sequences. Returns false after a backend error (all
+/// resident sequences were failed and evicted).
+fn tick_once(
+    sched: &mut GroupScheduler<'_>,
+    metrics: &Metrics,
+    pending: &mut HashMap<u64, OneShot<Result<GenReply, String>>>,
+    last_active: &mut usize,
+) -> bool {
+    let busy = sched.active();
+    let before = (sched.n_prefill, sched.n_dual, sched.n_es);
+    let t0 = Instant::now();
+    match sched.tick() {
+        Ok(finished) => {
+            metrics.ticks_total.inc();
+            metrics.slot_busy_seconds.add_secs(t0.elapsed().as_secs_f64() * busy as f64);
+            metrics.prefill_steps.add((sched.n_prefill - before.0) as u64);
+            metrics.dual_steps.add((sched.n_dual - before.1) as u64);
+            metrics.es_steps.add((sched.n_es - before.2) as u64);
+            // publish the gauge before answering clients: a client that
+            // just received its reply must not observe its own sequence
+            // still counted as active (retirement already freed the slot,
+            // so sched.active() is final here)
+            sync_active_slots(metrics, last_active, sched.active());
+            for f in finished {
+                metrics.retirements_total.inc();
+                metrics.tokens_generated.add(f.tokens as u64);
+                metrics.iterations_total.add(f.iterations as u64);
+                metrics.request_latency.observe_secs(f.queue_s + f.gen_s);
+                if let Some(reply) = pending.remove(&f.id) {
+                    reply.put(Ok(GenReply {
+                        text: f.text,
+                        iterations: f.iterations,
+                        wall_s: f.gen_s,
+                        queue_s: f.queue_s,
+                        tokens: f.tokens,
                     }));
                 }
             }
-            Err(e) => {
-                log::error!("generate failed: {e:#}");
-                for req in &batch {
-                    req.reply.put(Err(format!("{e}")));
+            true
+        }
+        Err(e) => {
+            log::error!("scheduler tick failed: {e:#}");
+            for id in sched.active_ids() {
+                if let Some(reply) = pending.remove(&id) {
+                    reply.put(Err(format!("{e}")));
                 }
+            }
+            sched.evict_all();
+            sync_active_slots(metrics, last_active, 0);
+            false
+        }
+    }
+}
+
+fn admit_request(
+    sched: &mut GroupScheduler<'_>,
+    metrics: &Metrics,
+    pending: &mut HashMap<u64, OneShot<Result<GenReply, String>>>,
+    id: u64,
+    req: GenRequest,
+) {
+    metrics.queue_latency.observe_secs(req.submitted.elapsed().as_secs_f64());
+    let input = SeqInput {
+        id,
+        prompt: req.prompt,
+        params: req.params,
+        submitted: req.submitted,
+    };
+    match sched.admit(input) {
+        Ok(_) => {
+            metrics.admissions_total.inc();
+            pending.insert(id, req.reply);
+        }
+        Err(e) => req.reply.put(Err(format!("{e}"))),
+    }
+}
+
+/// Continuous batching: keep the slots hot — admit from the queue into
+/// any free slot (newly admitted sequences get their grounding prefill
+/// on the next tick), retire at block boundaries, repeat.
+fn run_continuous(
+    mut sched: GroupScheduler<'_>,
+    queue: Channel<GenRequest>,
+    metrics: Arc<Metrics>,
+) {
+    let mut pending: HashMap<u64, OneShot<Result<GenReply, String>>> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut last_active = 0usize;
+    loop {
+        // admission: fill free slots; block for work only when idle.
+        // (a failed admission — bad request — loops back into the
+        // blocking recv, so the loop below always exits with work)
+        while sched.free_slots() > 0 {
+            let req = if sched.active() == 0 {
+                match queue.recv() {
+                    Some(r) => r,
+                    None => return, // closed and drained
+                }
+            } else {
+                match queue.try_recv() {
+                    Some(r) => r,
+                    None => break,
+                }
+            };
+            let id = next_id;
+            next_id += 1;
+            admit_request(&mut sched, &metrics, &mut pending, id, req);
+        }
+        sync_active_slots(&metrics, &mut last_active, sched.active());
+        tick_once(&mut sched, &metrics, &mut pending, &mut last_active);
+    }
+}
+
+/// Legacy baseline: drain a batch from the queue, run the whole group to
+/// completion with no mid-flight admission, reply, repeat.
+fn run_to_completion(
+    mut sched: GroupScheduler<'_>,
+    queue: Channel<GenRequest>,
+    metrics: Arc<Metrics>,
+    batcher: BatcherCfg,
+) {
+    let mut next_id: u64 = 0;
+    let mut last_active = 0usize;
+    while let Some(batch) = next_batch(&queue, &batcher) {
+        metrics.batches_total.inc();
+        metrics.batch_occupancy_sum.add(batch.len() as u64);
+        let mut pending: HashMap<u64, OneShot<Result<GenReply, String>>> = HashMap::new();
+        for req in batch {
+            let id = next_id;
+            next_id += 1;
+            admit_request(&mut sched, &metrics, &mut pending, id, req);
+        }
+        sync_active_slots(&metrics, &mut last_active, sched.active());
+        while sched.active() > 0 {
+            if !tick_once(&mut sched, &metrics, &mut pending, &mut last_active) {
+                break;
             }
         }
     }
@@ -209,5 +469,50 @@ mod tests {
         let s2 = s.clone();
         std::thread::spawn(move || s2.put(7));
         assert_eq!(s.wait(), 7);
+    }
+
+    fn sim_router(mode: SchedMode, slots: usize, queue_cap: usize) -> Router {
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default());
+        cfg.batcher = BatcherCfg { max_batch: slots, flush_ms: 2 };
+        cfg.queue_cap = queue_cap;
+        cfg.mode = mode;
+        Router::start(cfg)
+    }
+
+    #[test]
+    fn continuous_router_serves_requests_end_to_end() {
+        let router = sim_router(SchedMode::Continuous, 2, 16);
+        let slot = router.submit("1+2=".into(), SeqParams::default()).unwrap();
+        let reply = slot.wait().expect("sim generation succeeds");
+        assert_eq!(reply.text, "1+2=", "sim echoes the prompt");
+        assert!(reply.iterations > 0);
+        assert!(reply.tokens > 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn run_to_completion_router_still_works() {
+        let router = sim_router(SchedMode::RunToCompletion, 2, 16);
+        let a = router.submit("ab".into(), SeqParams::default()).unwrap();
+        let b = router.submit("cdef".into(), SeqParams::default()).unwrap();
+        assert_eq!(a.wait().unwrap().text, "ab");
+        assert_eq!(b.wait().unwrap().text, "cdef");
+        router.shutdown();
+    }
+
+    #[test]
+    fn invalid_params_fail_the_request_not_the_worker() {
+        let router = sim_router(SchedMode::Continuous, 1, 8);
+        let bad = SeqParams { gen_len: Some(3), ..Default::default() };
+        let err = router.submit("ab".into(), bad).unwrap().wait().unwrap_err();
+        assert!(err.starts_with("bad request:"), "{err}");
+        // the worker must still be alive for the next request
+        let ok = router.submit("ok".into(), SeqParams::default()).unwrap();
+        assert_eq!(ok.wait().unwrap().text, "ok");
+        router.shutdown();
     }
 }

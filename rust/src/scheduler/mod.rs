@@ -1,0 +1,814 @@
+//! Continuous batching: a slot-based group scheduler that admits and
+//! retires sequences at block boundaries.
+//!
+//! The old engine ran every batch group in lockstep to completion: one
+//! slow sequence held seven finished slots hostage, and arrivals waited
+//! for the whole group to drain. This module decomposes that loop into
+//!
+//!   * [`SeqState`] — one sequence's decode state machine: its token
+//!     row, current block index, iteration counters, per-request sampler
+//!     and generation-length parameters, and completion bookkeeping;
+//!   * [`GroupScheduler`] — owner of a fixed set of batch slots. Each
+//!     [`GroupScheduler::tick`] steps every occupied slot one iteration:
+//!     slots wanting a `Prefill` (block grounding / prompt refresh /
+//!     vanilla) share one full forward whose outputs are merged into
+//!     their rows only, and the remaining slots are grouped by
+//!     (block index, step plan) so sequences at different blocks each
+//!     get a step at their own window. After unmasking, slots whose
+//!     block completed advance; sequences that are finished — every
+//!     position unmasked, or an EOS with nothing masked before it (the
+//!     EOS-guard early exit) — retire at that block boundary, freeing
+//!     the slot for the next admission;
+//!   * [`StepBackend`] — the executable plumbing behind a tick.
+//!     [`PjrtBackend`] drives the real compiled artifacts;
+//!     [`sim::SimBackend`] is a deterministic model-free substitute for
+//!     tests and scheduler benchmarks.
+//!
+//! Correctness of mid-flight admission rests on two facts: batch rows
+//! are independent sequences end to end (attention never crosses rows),
+//! and every cache merge here is row-filtered (`*_slots` operations in
+//! [`crate::cache`]), so a grounding prefill for a newly admitted slot —
+//! or a step applied at another slot's block window — never perturbs the
+//! other occupants' trajectories. Vacant rows are additionally pinned to
+//! confidence -1 on the step executables' confidence input (occupancy
+//! mask) so they never win the in-graph importance selection.
+//!
+//! One documented exception: the experimental adaptive skip-ratio mode
+//! (`EngineCfg::adaptive`) keeps a single group-scoped confidence-drift
+//! signal — as the pre-refactor engine did for its lockstep batch — so
+//! under adaptive decoding the executable-variant choice, and therefore
+//! a sequence's exact trajectory, can depend on co-resident traffic.
+//! All production configurations (adaptive off) are fully isolated.
+
+pub mod sim;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{GroupCaches, RefreshPolicy, StepPlan};
+use crate::engine::{step_exe_name, EngineCfg, Method};
+use crate::manifest::{ArchSpec, Dims, ExeKind};
+use crate::rng::SplitMix;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::Runtime;
+use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
+use crate::tokenizer::Tokenizer;
+
+/// Per-request generation parameters carried from the `/generate` JSON
+/// body into the sequence state machine. `None` means "use the server
+/// default".
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeqParams {
+    /// requested generation length (multiple of the block length,
+    /// at most the compiled gen region)
+    pub gen_len: Option<usize>,
+    /// sampling temperature override
+    pub temperature: Option<f32>,
+    /// confidence-aware parallel-decoding threshold override
+    pub parallel_threshold: Option<f32>,
+}
+
+/// A sequence waiting to enter a slot.
+#[derive(Debug, Clone)]
+pub struct SeqInput {
+    pub id: u64,
+    pub prompt: String,
+    pub params: SeqParams,
+    pub submitted: Instant,
+}
+
+/// One slot's resident sequence: the per-sequence state machine.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub id: u64,
+    /// effective generation length (≤ compiled gen region)
+    pub gen_len: usize,
+    pub sampler: SamplerCfg,
+    /// per-sequence sampling stream, seeded from (scheduler seed,
+    /// request id): sampled decoding (temperature > 0) must not depend
+    /// on which other sequences happen to be co-resident
+    rng: SplitMix,
+    /// current block within this sequence's own gen region
+    pub block_idx: usize,
+    /// iteration within the current block (drives the refresh policy)
+    pub i_b: usize,
+    /// total iterations this sequence has been stepped
+    pub iters: usize,
+    pub n_prefill: usize,
+    pub n_dual: usize,
+    pub n_es: usize,
+    pub submitted: Instant,
+    pub admitted: Instant,
+}
+
+/// A retired sequence with its true per-request statistics (these
+/// replace the old group-level reply).
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub id: u64,
+    pub text: String,
+    /// iterations this sequence was stepped (not the group total)
+    pub iterations: usize,
+    /// positions actually decoded — answer content plus EOS fill, i.e.
+    /// the unmasked prefix of the gen region (≤ gen_len when the EOS
+    /// guard retired the sequence early; each counted position cost
+    /// decode compute, so this is the honest throughput numerator)
+    pub tokens: usize,
+    pub n_prefill: usize,
+    pub n_dual: usize,
+    pub n_es: usize,
+    /// submit → admission (queue time)
+    pub queue_s: f64,
+    /// admission → retirement (generation time)
+    pub gen_s: f64,
+}
+
+/// The executable plumbing behind one scheduler tick. Implementations
+/// must merge results for the given `slots` rows only; spectator rows'
+/// outputs are garbage by contract and must be discarded.
+pub trait StepBackend {
+    fn dims(&self) -> &Dims;
+    fn tokenizer(&self) -> &Tokenizer;
+    /// Full forward over `[B, ctx]` tokens; refresh the given slots'
+    /// caches (or, for the vanilla method, only their logits state).
+    fn run_prefill(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()>;
+    /// One block step (`DualStep` or `EsStep`) at `block_start`,
+    /// merged into the given slots' rows only.
+    fn run_step(
+        &mut self,
+        plan: StepPlan,
+        tokens: &[i32],
+        block_start: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()>;
+}
+
+/// Scheduling parameters (the method-level subset of [`EngineCfg`]).
+#[derive(Debug, Clone)]
+pub struct SchedCfg {
+    pub method: Method,
+    pub block: usize,
+    pub refresh: RefreshPolicy,
+    pub sampler: SamplerCfg,
+    pub seed: u64,
+}
+
+impl SchedCfg {
+    pub fn from_engine(cfg: &EngineCfg) -> SchedCfg {
+        SchedCfg {
+            method: cfg.method,
+            block: cfg.block,
+            refresh: cfg.refresh,
+            sampler: cfg.sampler,
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// Fixed-slot group scheduler: the continuous-batching core.
+pub struct GroupScheduler<'a> {
+    backend: Box<dyn StepBackend + 'a>,
+    cfg: SchedCfg,
+    n_slots: usize,
+    slots: Vec<Option<SeqState>>,
+    /// token layout per slot: [prompt (PAD-padded) | gen (MASK)]
+    tokens: Vec<i32>,
+    caches: GroupCaches,
+    /// group-level executable-run counters
+    pub ticks: usize,
+    pub n_prefill: usize,
+    pub n_dual: usize,
+    pub n_es: usize,
+}
+
+impl<'a> GroupScheduler<'a> {
+    pub fn new(backend: Box<dyn StepBackend + 'a>, n_slots: usize, cfg: SchedCfg) -> Result<Self> {
+        let d = backend.dims().clone();
+        if cfg.block == 0 || d.gen_len % cfg.block != 0 {
+            return Err(anyhow!(
+                "gen_len {} not divisible by block {}",
+                d.gen_len,
+                cfg.block
+            ));
+        }
+        let n_slots = n_slots.max(1);
+        let caches = GroupCaches::new(&d, n_slots);
+        Ok(GroupScheduler {
+            backend,
+            cfg,
+            n_slots,
+            slots: (0..n_slots).map(|_| None).collect(),
+            tokens: vec![0i32; n_slots * d.ctx],
+            caches,
+            ticks: 0,
+            n_prefill: 0,
+            n_dual: 0,
+            n_es: 0,
+        })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.n_slots - self.active()
+    }
+
+    /// Ids of the currently resident sequences (for error draining).
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.slots.iter().flatten().map(|s| s.id).collect()
+    }
+
+    /// Evict every resident sequence without producing results (used by
+    /// the router to fail outstanding requests after a backend error).
+    pub fn evict_all(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+    }
+
+    /// Admit a sequence into the lowest free slot. Fails with a
+    /// `bad request:` message for invalid per-request parameters, or
+    /// `no free slot` when the group is full (callers should check
+    /// [`GroupScheduler::free_slots`] first).
+    pub fn admit(&mut self, input: SeqInput) -> Result<usize> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free slot"))?;
+        let d = self.backend.dims().clone();
+        let gen_len = input.params.gen_len.unwrap_or(d.gen_len);
+        if gen_len == 0 || gen_len > d.gen_len || gen_len % self.cfg.block != 0 {
+            return Err(anyhow!(
+                "bad request: gen_len {gen_len} must be a positive multiple of \
+                 block {} and at most {}",
+                self.cfg.block,
+                d.gen_len
+            ));
+        }
+        let mut sampler = self.cfg.sampler;
+        if let Some(t) = input.params.temperature {
+            if !(0.0..=10.0).contains(&t) {
+                return Err(anyhow!("bad request: temperature {t} out of range"));
+            }
+            sampler.temperature = t;
+        }
+        if let Some(th) = input.params.parallel_threshold {
+            if !(0.0..=1.0).contains(&th) {
+                return Err(anyhow!("bad request: threshold {th} out of range"));
+            }
+            sampler.parallel_threshold = Some(th);
+        }
+        let tok = self.backend.tokenizer();
+        let ids = tok
+            .encode_prompt(&input.prompt, d.prompt_len)
+            .map_err(|e| anyhow!("bad request: {e}"))?;
+        let mask = tok.mask;
+        let row = slot * d.ctx;
+        self.tokens[row..row + d.prompt_len].copy_from_slice(&ids);
+        // the whole compiled gen region is masked regardless of the
+        // requested gen_len (matches the training distribution); blocks
+        // past gen_len are simply never scheduled
+        for g in 0..d.gen_len {
+            self.tokens[row + d.prompt_len + g] = mask;
+        }
+        self.caches.reset_slot(slot);
+        // splitmix the request id into the seed so every request gets its
+        // own deterministic sampling stream, independent of slot and of
+        // the other occupants
+        let seq_seed =
+            self.cfg.seed ^ 0xE5D1 ^ (input.id.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.slots[slot] = Some(SeqState {
+            id: input.id,
+            gen_len,
+            sampler,
+            rng: SplitMix::new(seq_seed),
+            block_idx: 0,
+            i_b: 0,
+            iters: 0,
+            n_prefill: 0,
+            n_dual: 0,
+            n_es: 0,
+            submitted: input.submitted,
+            admitted: Instant::now(),
+        });
+        Ok(slot)
+    }
+
+    fn gen_row(&self, slot: usize) -> &[i32] {
+        let d = self.backend.dims();
+        &self.tokens[slot * d.ctx + d.prompt_len..(slot + 1) * d.ctx]
+    }
+
+    /// Step every occupied slot one iteration; returns the sequences
+    /// that retired at this tick's block boundaries.
+    pub fn tick(&mut self) -> Result<Vec<FinishedSeq>> {
+        let occupied: Vec<usize> =
+            (0..self.n_slots).filter(|&s| self.slots[s].is_some()).collect();
+        if occupied.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.ticks += 1;
+
+        // 1. per-slot compute plan
+        let mut prefill_slots: Vec<usize> = Vec::new();
+        // key: (block index, plan discriminant) — BTreeMap for a
+        // deterministic execution order
+        let mut step_groups: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
+        for &s in &occupied {
+            let seq = self.slots[s].as_ref().unwrap();
+            let plan = match self.cfg.method {
+                Method::Vanilla => StepPlan::Prefill,
+                Method::DualCache => RefreshPolicy::plan_dual(seq.i_b),
+                Method::EsDllm => self.cfg.refresh.plan_es(seq.iters, seq.i_b),
+            };
+            match plan {
+                StepPlan::Prefill => prefill_slots.push(s),
+                StepPlan::DualStep => {
+                    step_groups.entry((seq.block_idx, 0)).or_default().push(s)
+                }
+                StepPlan::EsStep => {
+                    step_groups.entry((seq.block_idx, 1)).or_default().push(s)
+                }
+            }
+        }
+
+        // 2. one shared full forward for every slot that wants a prefill
+        //    (block grounding, prompt refresh, vanilla step, admission)
+        if !prefill_slots.is_empty() {
+            self.backend
+                .run_prefill(&self.tokens, &prefill_slots, &mut self.caches)?;
+            self.n_prefill += 1;
+            for &s in &prefill_slots {
+                self.slots[s].as_mut().unwrap().n_prefill += 1;
+            }
+        }
+
+        // 3. block steps, grouped by (block index, plan): sequences at
+        //    different blocks each get a step at their own window
+        let prompt_len = self.backend.dims().prompt_len;
+        let groups: Vec<((usize, u8), Vec<usize>)> = step_groups.into_iter().collect();
+        for ((blk, plan_tag), group) in groups {
+            let plan = if plan_tag == 0 { StepPlan::DualStep } else { StepPlan::EsStep };
+            let block_start = prompt_len + blk * self.cfg.block;
+            self.backend
+                .run_step(plan, &self.tokens, block_start, &group, &mut self.caches)?;
+            for &s in &group {
+                let seq = self.slots[s].as_mut().unwrap();
+                if plan == StepPlan::DualStep {
+                    seq.n_dual += 1;
+                } else {
+                    seq.n_es += 1;
+                }
+            }
+            if plan == StepPlan::DualStep {
+                self.n_dual += 1;
+            } else {
+                self.n_es += 1;
+            }
+        }
+
+        // 4. unmask decisions, per slot over its own current block
+        let d = self.backend.dims().clone();
+        let (mask, eos) = {
+            let tok = self.backend.tokenizer();
+            (tok.mask, tok.eos)
+        };
+        let block = self.cfg.block;
+        for &s in &occupied {
+            let decision = {
+                let seq = self.slots[s].as_mut().unwrap();
+                let block_lo = seq.block_idx * block;
+                let inp = UnmaskInput {
+                    logits: &self.caches.logits
+                        [s * d.gen_len * d.vocab..(s + 1) * d.gen_len * d.vocab],
+                    conf: &self.caches.conf[s * d.gen_len..(s + 1) * d.gen_len],
+                    gen_tokens: &self.tokens[s * d.ctx + d.prompt_len..(s + 1) * d.ctx],
+                    block_lo,
+                    block_hi: block_lo + block,
+                    vocab: d.vocab,
+                    mask_id: mask,
+                    eos_id: eos,
+                };
+                decide_unmask(&seq.sampler, &inp, &mut seq.rng)
+            };
+            for (p, t) in decision.positions.iter().zip(&decision.tokens) {
+                self.tokens[s * d.ctx + d.prompt_len + p] = *t;
+            }
+            let seq = self.slots[s].as_mut().unwrap();
+            seq.iters += 1;
+            seq.i_b += 1;
+        }
+
+        // 5. block advance + retirement at block boundaries
+        let mut finished = Vec::new();
+        for &s in &occupied {
+            let (block_lo, gen_len) = {
+                let seq = self.slots[s].as_ref().unwrap();
+                (seq.block_idx * self.cfg.block, seq.gen_len)
+            };
+            let block_done = {
+                let row = self.gen_row(s);
+                row[block_lo..block_lo + self.cfg.block].iter().all(|&t| t != mask)
+            };
+            if !block_done {
+                continue;
+            }
+            let done = {
+                let seq = self.slots[s].as_mut().unwrap();
+                seq.block_idx += 1;
+                seq.i_b = 0;
+                seq.block_idx * self.cfg.block >= seq.gen_len
+            } || seq_complete(&self.gen_row(s)[..gen_len], mask, eos);
+            if done {
+                let (text, tokens_out) = {
+                    let row = &self.gen_row(s)[..gen_len];
+                    let text = self.backend.tokenizer().decode(row);
+                    let tokens_out = row.iter().filter(|&&t| t != mask).count();
+                    (text, tokens_out)
+                };
+                let seq = self.slots[s].take().unwrap();
+                finished.push(FinishedSeq {
+                    id: seq.id,
+                    text,
+                    iterations: seq.iters,
+                    tokens: tokens_out,
+                    n_prefill: seq.n_prefill,
+                    n_dual: seq.n_dual,
+                    n_es: seq.n_es,
+                    queue_s: seq.admitted.duration_since(seq.submitted).as_secs_f64(),
+                    gen_s: seq.admitted.elapsed().as_secs_f64(),
+                });
+            }
+        }
+        Ok(finished)
+    }
+}
+
+/// A sequence is complete when its first EOS has nothing masked before
+/// it (the decoded text is fully determined — the EOS-guard early exit),
+/// or when every position is unmasked.
+pub fn seq_complete(gen_row: &[i32], mask: i32, eos: i32) -> bool {
+    match gen_row.iter().position(|&t| t == eos) {
+        Some(p) => gen_row[..p].iter().all(|&t| t != mask),
+        None => gen_row.iter().all(|&t| t != mask),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend: the real compiled artifacts behind a tick
+// ---------------------------------------------------------------------------
+
+/// [`StepBackend`] over the PJRT runtime and the compiled step
+/// executables (the plumbing that used to live inside
+/// `Engine::generate`).
+pub struct PjrtBackend<'rt> {
+    rt: &'rt Runtime,
+    cfg: EngineCfg,
+    arch: ArchSpec,
+    batch: usize,
+    /// mean |Δconfidence| at the last step — the adaptive-ratio signal.
+    /// Group-scoped (shared by every occupant), matching the
+    /// pre-refactor engine; see the module docs for the isolation
+    /// caveat this implies under `cfg.adaptive`.
+    pub conf_drift: f32,
+}
+
+impl<'rt> PjrtBackend<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineCfg, batch: usize) -> Result<PjrtBackend<'rt>> {
+        let arch = rt.arch(&cfg.arch)?.clone();
+        Ok(PjrtBackend { rt, cfg, arch, batch, conf_drift: 1.0 })
+    }
+
+    /// Adaptive-ratio signal: mean |Δconfidence| over the given slots'
+    /// gen positions [lo, hi). Note the drift is per backend, i.e. per
+    /// group: a fresh `Engine::generate` starts back at the conservative
+    /// default rather than inheriting the previous group's drift.
+    fn update_drift(
+        &mut self,
+        caches: &GroupCaches,
+        before: &[f32],
+        slots: &[usize],
+        lo: usize,
+        hi: usize,
+    ) {
+        let gen = self.arch.dims.gen_len;
+        let mut sum = 0f32;
+        let mut cnt = 0usize;
+        for &b in slots {
+            for j in lo..hi {
+                let i = b * gen + j;
+                sum += (caches.conf[i] - before[i]).abs();
+                cnt += 1;
+            }
+        }
+        self.conf_drift = sum / cnt.max(1) as f32;
+    }
+}
+
+impl StepBackend for PjrtBackend<'_> {
+    fn dims(&self) -> &Dims {
+        &self.arch.dims
+    }
+
+    fn tokenizer(&self) -> &Tokenizer {
+        &self.rt.tokenizer
+    }
+
+    fn run_prefill(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        let d = &self.arch.dims;
+        let toks = HostTensor::I32 { shape: vec![self.batch, d.ctx], data: tokens.to_vec() };
+        // the vanilla baseline never reads caches: logits-only executable
+        if self.cfg.method == Method::Vanilla {
+            let exe = self.arch.exe(&format!("vanilla_b{}", self.batch))?;
+            let out = self.rt.run(&self.arch, exe, &self.cfg.checkpoint, &[toks])?;
+            return caches.merge_full_logits_slots(&out[0], slots);
+        }
+        let conf_before = self.cfg.adaptive.then(|| caches.conf.clone());
+        let exe = self.arch.exe(&format!("prefill_b{}", self.batch))?;
+        let out = self.rt.run(&self.arch, exe, &self.cfg.checkpoint, &[toks])?;
+        debug_assert_eq!(exe.kind, ExeKind::Prefill);
+        caches.refresh_slots_from_prefill(&out, slots)?;
+        if self.cfg.sparse {
+            let keep = self.rt.manifest.generation.sparse_keep_prompt;
+            caches.rebuild_sparse_slots(&out[6], keep, 3, slots)?;
+        }
+        // prompt refreshes move confidence the most, so they must feed the
+        // adaptive-ratio signal too (the pre-refactor engine measured the
+        // drift on every plan); without the per-slot block window here, the
+        // whole gen region of the refreshed slots approximates it
+        let gen_len = d.gen_len;
+        if let Some(before) = conf_before {
+            self.update_drift(caches, &before, slots, 0, gen_len);
+        }
+        Ok(())
+    }
+
+    fn run_step(
+        &mut self,
+        plan: StepPlan,
+        tokens: &[i32],
+        block_start: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        let d = self.arch.dims.clone();
+        let block = self.cfg.block;
+        let exe_name = step_exe_name(&self.cfg, plan, self.batch, self.conf_drift);
+        let exe = self.arch.exe(&exe_name)?;
+
+        // current block tokens for every row (spectator rows ride along;
+        // their outputs are discarded by the row-filtered merges below)
+        let mut x_tok = Vec::with_capacity(self.batch * block);
+        for b in 0..self.batch {
+            x_tok.extend_from_slice(
+                &tokens[b * d.ctx + block_start..b * d.ctx + block_start + block],
+            );
+        }
+
+        let ind_layers: &[usize] = &exe.skip_layers;
+        let all_layers: Vec<usize> = (0..d.n_layers).collect();
+        let ind_for_exe: Vec<usize> = if exe.skip.is_empty() {
+            all_layers
+        } else {
+            ind_layers.to_vec()
+        };
+        let indicator = exe.indicator.clone().unwrap_or_else(|| "h".into());
+
+        let kv = if self.cfg.sparse {
+            caches.kv_sparse_tensor()?
+        } else {
+            caches.kv_tensor()
+        };
+        let conf_before = self.cfg.adaptive.then(|| caches.conf.clone());
+        let inputs = vec![
+            HostTensor::I32 { shape: vec![self.batch, block], data: x_tok },
+            HostTensor::scalar_i32(block_start as i32),
+            kv,
+            caches.gather_ind(&indicator, &ind_for_exe)?,
+            // occupancy mask: rows not in `slots` can never win importance
+            caches.conf_tensor_masked(slots),
+            HostTensor::scalar_f32(self.cfg.alpha),
+        ];
+        let out = self.rt.run(&self.arch, exe, &self.cfg.checkpoint, &inputs)?;
+        // outputs: logits [B,k,V], pos [B,k], kv_block, ind_block
+        caches.merge_step_logits_slots(&out[0], &out[1], slots)?;
+        if self.cfg.sparse {
+            caches.scatter_kv_block_sparse_slots(block_start, block, &out[2], slots)?;
+        } else {
+            caches.scatter_kv_block_slots(block_start, block, &out[2], slots)?;
+        }
+        caches.scatter_ind_block_slots(
+            &indicator,
+            &ind_for_exe,
+            block_start,
+            block,
+            &out[3],
+            slots,
+        )?;
+        // adaptive-ratio signal: mean |Δconf| over the stepped rows' block
+        if let Some(before) = conf_before {
+            let block_lo = block_start - d.prompt_len;
+            self.update_drift(caches, &before, slots, block_lo, block_lo + block);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sim::{SimBackend, SimCfg};
+    use super::*;
+
+    fn sched(n_slots: usize, method: Method, block: usize) -> GroupScheduler<'static> {
+        let backend = SimBackend::new(SimCfg::default());
+        let cfg = SchedCfg {
+            method,
+            block,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+        };
+        GroupScheduler::new(Box::new(backend), n_slots, cfg).unwrap()
+    }
+
+    fn input(id: u64, prompt: &str, params: SeqParams) -> SeqInput {
+        SeqInput {
+            id,
+            prompt: prompt.to_string(),
+            params,
+            submitted: Instant::now(),
+        }
+    }
+
+    fn run_to_drain(s: &mut GroupScheduler<'_>) -> Vec<FinishedSeq> {
+        let mut out = Vec::new();
+        let mut guard = 0;
+        while s.active() > 0 {
+            out.extend(s.tick().unwrap());
+            guard += 1;
+            assert!(guard < 1000, "scheduler failed to drain");
+        }
+        out
+    }
+
+    #[test]
+    fn echo_completes_with_eos_guard_early_retire() {
+        // SimBackend echoes the prompt then EOS-fills; "ab" needs only
+        // block 0 of the gen region, so the EOS guard must retire the
+        // sequence at the first block boundary, not after all 8 ticks.
+        let mut s = sched(1, Method::EsDllm, 4);
+        s.admit(input(7, "ab", SeqParams::default())).unwrap();
+        let done = run_to_drain(&mut s);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 7);
+        assert_eq!(done[0].text, "ab");
+        assert_eq!(done[0].iterations, 4, "block 0 only: 4 greedy unmasks");
+        assert_eq!(done[0].tokens, 4, "a, b, and two EOS fills");
+        assert_eq!(s.ticks, 4);
+    }
+
+    #[test]
+    fn multi_block_echo_and_plan_cadence() {
+        let mut s = sched(1, Method::EsDllm, 4);
+        // 6 content chars: block 0 full, block 1 = 2 content + 2 EOS
+        s.admit(input(1, "abcdef", SeqParams::default())).unwrap();
+        let done = run_to_drain(&mut s);
+        assert_eq!(done[0].text, "abcdef");
+        assert_eq!(done[0].iterations, 8);
+        // per block of 4 with block_period 2: prefill, es, dual, es
+        assert_eq!(done[0].n_prefill, 2);
+        assert_eq!(done[0].n_dual, 2);
+        assert_eq!(done[0].n_es, 4);
+        assert_eq!((s.n_prefill, s.n_dual, s.n_es), (2, 2, 4));
+    }
+
+    #[test]
+    fn vanilla_runs_one_full_forward_per_tick() {
+        let mut s = sched(2, Method::Vanilla, 4);
+        s.admit(input(1, "ab", SeqParams::default())).unwrap();
+        s.admit(input(2, "cd", SeqParams::default())).unwrap();
+        let done = run_to_drain(&mut s);
+        assert_eq!(done.len(), 2);
+        assert_eq!(s.n_prefill, s.ticks, "one shared vanilla forward per tick");
+        assert_eq!(s.n_dual + s.n_es, 0);
+    }
+
+    #[test]
+    fn retirement_frees_slot_for_next_admission() {
+        let mut s = sched(1, Method::EsDllm, 4);
+        s.admit(input(1, "ab", SeqParams::default())).unwrap();
+        // group full: second admission must be refused
+        assert!(s.admit(input(2, "xy", SeqParams::default())).is_err());
+        let first = run_to_drain(&mut s);
+        assert_eq!(first[0].id, 1);
+        // the retired block boundary freed the slot
+        assert_eq!(s.free_slots(), 1);
+        s.admit(input(2, "xy", SeqParams::default())).unwrap();
+        let second = run_to_drain(&mut s);
+        assert_eq!(second[0].id, 2);
+        assert_eq!(second[0].text, "xy");
+    }
+
+    #[test]
+    fn mid_flight_admission_is_trajectory_exact() {
+        // B's output when admitted into a running group mid-flight must
+        // equal B's output in a solo run: row-filtered merges make slot
+        // trajectories independent.
+        let mut solo = sched(2, Method::EsDllm, 4);
+        solo.admit(input(9, "xy", SeqParams::default())).unwrap();
+        let solo_done = run_to_drain(&mut solo);
+
+        let mut s = sched(2, Method::EsDllm, 4);
+        s.admit(input(1, "abcdefg", SeqParams::default())).unwrap();
+        // step A into the middle of its first block...
+        s.tick().unwrap();
+        s.tick().unwrap();
+        // ...then admit B into the free slot while A is running
+        s.admit(input(2, "xy", SeqParams::default())).unwrap();
+        assert_eq!(s.active(), 2);
+        let done = run_to_drain(&mut s);
+        let a = done.iter().find(|f| f.id == 1).unwrap();
+        let b = done.iter().find(|f| f.id == 2).unwrap();
+        assert_eq!(a.text, "abcdefg");
+        assert_eq!(b.text, "xy");
+        assert_eq!(b.text, solo_done[0].text);
+        assert_eq!(b.iterations, solo_done[0].iterations);
+        // B retired before A: its slot freed at an earlier boundary
+        assert!(b.iterations < a.iterations);
+    }
+
+    #[test]
+    fn per_request_gen_len_truncates() {
+        let mut s = sched(1, Method::EsDllm, 4);
+        let params = SeqParams { gen_len: Some(4), ..Default::default() };
+        s.admit(input(1, "abcdefgh", params)).unwrap();
+        let done = run_to_drain(&mut s);
+        assert_eq!(done[0].text, "abcd", "one block of 4 only");
+        assert_eq!(done[0].tokens, 4);
+        assert_eq!(done[0].iterations, 4);
+    }
+
+    #[test]
+    fn admit_validates_params() {
+        let mut s = sched(1, Method::EsDllm, 4);
+        let bad_len = SeqParams { gen_len: Some(3), ..Default::default() };
+        let err = s.admit(input(1, "ab", bad_len)).unwrap_err();
+        assert!(format!("{err}").starts_with("bad request:"), "{err}");
+        let bad_temp = SeqParams { temperature: Some(-1.0), ..Default::default() };
+        assert!(s.admit(input(1, "ab", bad_temp)).is_err());
+        let bad_th = SeqParams { parallel_threshold: Some(1.5), ..Default::default() };
+        assert!(s.admit(input(1, "ab", bad_th)).is_err());
+        let unknown_char = SeqParams::default();
+        assert!(s.admit(input(1, "Ü", unknown_char)).is_err());
+        // valid request still admits after the failures
+        s.admit(input(2, "ok", SeqParams::default())).unwrap();
+    }
+
+    #[test]
+    fn parallel_threshold_override_speeds_decode() {
+        let mut greedy = sched(1, Method::EsDllm, 4);
+        greedy.admit(input(1, "abcdef", SeqParams::default())).unwrap();
+        let g = run_to_drain(&mut greedy);
+        let mut pd = sched(1, Method::EsDllm, 4);
+        let params = SeqParams { parallel_threshold: Some(0.5), ..Default::default() };
+        pd.admit(input(1, "abcdef", params)).unwrap();
+        let p = run_to_drain(&mut pd);
+        assert_eq!(g[0].text, p[0].text);
+        assert!(
+            p[0].iterations < g[0].iterations,
+            "parallel decoding {} !< greedy {}",
+            p[0].iterations,
+            g[0].iterations
+        );
+    }
+
+    #[test]
+    fn seq_complete_rules() {
+        let mask = 1;
+        let eos = 2;
+        assert!(seq_complete(&[5, 6, 2, 1], mask, eos), "EOS with clean prefix");
+        assert!(!seq_complete(&[5, 1, 2, 1], mask, eos), "mask before EOS");
+        assert!(seq_complete(&[5, 6, 7, 8], mask, eos), "fully unmasked");
+        assert!(!seq_complete(&[5, 6, 7, 1], mask, eos), "still masked, no EOS");
+    }
+}

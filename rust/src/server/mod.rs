@@ -1,11 +1,24 @@
 //! HTTP serving front end: /generate, /healthz, /metrics on the in-tree
 //! HTTP substrate, dispatching to the router.
+//!
+//! `/generate` accepts per-request generation parameters alongside the
+//! prompt:
+//!
+//! ```json
+//! {"prompt": "1+2=", "gen_len": 8, "temperature": 0.0, "threshold": 0.9}
+//! ```
+//!
+//! and replies with true per-request statistics (iterations, queue and
+//! generation time, emitted tokens). Backpressure: a full request queue
+//! answers 503 Service Unavailable; invalid per-request parameters
+//! answer 400.
 
 use std::sync::Arc;
 
 use crate::httpd::{Handler, Request, Response, Server};
 use crate::json::{self, Json};
 use crate::router::Router;
+use crate::scheduler::SeqParams;
 
 pub struct ServeCfg {
     pub bind: String,
@@ -33,33 +46,60 @@ fn route(req: &Request, router: &Router) -> Response {
     }
 }
 
+fn error_response(status: u16, msg: impl Into<String>) -> Response {
+    Response::json(
+        status,
+        json::obj(vec![("error", json::s(msg.into()))]).to_string(),
+    )
+}
+
+/// A present-but-malformed field is a client error, not a silent
+/// fall-back to the server default; only an absent (or null) key means
+/// "use the default".
+fn opt_usize(body: &Json, key: &str) -> Result<Option<usize>, String> {
+    let v = body.get(key);
+    if v.is_null() {
+        return Ok(None);
+    }
+    v.as_usize()
+        .map(Some)
+        .ok_or_else(|| format!("'{key}' must be a non-negative integer"))
+}
+
+fn opt_f32(body: &Json, key: &str) -> Result<Option<f32>, String> {
+    let v = body.get(key);
+    if v.is_null() {
+        return Ok(None);
+    }
+    v.as_f64()
+        .map(|x| Some(x as f32))
+        .ok_or_else(|| format!("'{key}' must be a number"))
+}
+
 fn generate(req: &Request, router: &Router) -> Response {
     let body = match Json::parse(req.body_str()) {
         Ok(b) => b,
-        Err(e) => {
-            return Response::json(
-                400,
-                json::obj(vec![("error", json::s(format!("bad json: {e}")))]).to_string(),
-            )
-        }
+        Err(e) => return error_response(400, format!("bad json: {e}")),
     };
     let prompt = match body.get("prompt").as_str() {
         Some(p) => p.to_string(),
-        None => {
-            return Response::json(
-                400,
-                json::obj(vec![("error", json::s("missing 'prompt'"))]).to_string(),
-            )
-        }
+        None => return error_response(400, "missing 'prompt'"),
     };
-    let slot = match router.try_submit(prompt) {
+    let parse_params = || -> Result<SeqParams, String> {
+        Ok(SeqParams {
+            gen_len: opt_usize(&body, "gen_len")?,
+            temperature: opt_f32(&body, "temperature")?,
+            parallel_threshold: opt_f32(&body, "threshold")?,
+        })
+    };
+    let params = match parse_params() {
+        Ok(p) => p,
+        Err(e) => return error_response(400, e),
+    };
+    let slot = match router.try_submit(prompt, params) {
         Ok(s) => s,
-        Err(()) => {
-            return Response::json(
-                429,
-                json::obj(vec![("error", json::s("queue full"))]).to_string(),
-            )
-        }
+        // backpressure: the bounded queue is full
+        Err(()) => return error_response(503, "queue full"),
     };
     match slot.wait() {
         Ok(reply) => Response::json(
@@ -68,32 +108,40 @@ fn generate(req: &Request, router: &Router) -> Response {
                 ("text", json::s(reply.text)),
                 ("iterations", json::num(reply.iterations as f64)),
                 ("wall_s", json::num(reply.wall_s)),
+                ("queue_s", json::num(reply.queue_s)),
+                ("tokens", json::num(reply.tokens as f64)),
             ])
             .to_string(),
         ),
-        Err(e) => Response::json(
-            500,
-            json::obj(vec![("error", json::s(e))]).to_string(),
-        ),
+        // per-request validation failures surface as client errors
+        Err(e) if e.starts_with("bad request:") => error_response(400, e),
+        Err(e) => error_response(500, e),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::batcher::BatcherCfg;
+    use crate::engine::{EngineCfg, Method};
+    use crate::router::{RouterCfg, SchedMode, WorkerBackend};
+    use crate::scheduler::sim::SimCfg;
+
+    fn sim_router() -> Router {
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default());
+        cfg.batcher = BatcherCfg { max_batch: 2, flush_ms: 2 };
+        cfg.queue_cap = 4;
+        cfg.mode = SchedMode::Continuous;
+        Router::start(cfg)
+    }
 
     #[test]
     fn bad_json_is_400() {
-        // route() without a live worker: only /generate parse errors and
-        // static endpoints are testable here (full-stack test lives in
-        // rust/tests/integration_server.rs)
-        let router = Router::start(crate::router::RouterCfg {
-            engine: crate::engine::EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
-            batcher: Default::default(),
-            queue_cap: 2,
-            workers: 1,
-            artifacts_dir: std::path::PathBuf::from("/nonexistent"),
-        });
+        let router = sim_router();
         let req = Request {
             method: "POST".into(),
             path: "/generate".into(),
@@ -108,6 +156,53 @@ mod tests {
             body: vec![],
         };
         assert_eq!(route(&req2, &router).status, 200);
+        router.shutdown();
+    }
+
+    #[test]
+    fn generate_round_trip_with_params() {
+        let router = sim_router();
+        let req = Request {
+            method: "POST".into(),
+            path: "/generate".into(),
+            headers: vec![],
+            body: br#"{"prompt": "7*6=42", "gen_len": 8}"#.to_vec(),
+        };
+        let resp = route(&req, &router);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("text").as_str(), Some("7*6=42"));
+        assert!(j.get("iterations").as_usize().unwrap() > 0);
+        assert!(j.get("tokens").as_usize().unwrap() > 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn invalid_gen_len_is_400() {
+        let router = sim_router();
+        // integer but not a block multiple → rejected by the scheduler
+        let req = Request {
+            method: "POST".into(),
+            path: "/generate".into(),
+            headers: vec![],
+            body: br#"{"prompt": "1+1=", "gen_len": 3}"#.to_vec(),
+        };
+        assert_eq!(route(&req, &router).status, 400);
+        // present but malformed must be 400, not a silent default
+        for body in [
+            br#"{"prompt": "1+1=", "gen_len": -8}"#.as_slice(),
+            br#"{"prompt": "1+1=", "gen_len": 8.5}"#.as_slice(),
+            br#"{"prompt": "1+1=", "temperature": "hot"}"#.as_slice(),
+        ] {
+            let req = Request {
+                method: "POST".into(),
+                path: "/generate".into(),
+                headers: vec![],
+                body: body.to_vec(),
+            };
+            let resp = route(&req, &router);
+            assert_eq!(resp.status, 400, "{}", String::from_utf8_lossy(&resp.body));
+        }
         router.shutdown();
     }
 }

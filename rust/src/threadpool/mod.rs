@@ -211,6 +211,17 @@ impl<T> Channel<T> {
         }
     }
 
+    /// Non-blocking receive: None when the queue is currently empty (the
+    /// continuous scheduler uses this for mid-flight admission polls).
+    pub fn try_recv(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        let v = q.pop_front();
+        if v.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        v
+    }
+
     /// Receive with a timeout; Ok(None) on timeout.
     pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
         let deadline = std::time::Instant::now() + dur;
@@ -297,6 +308,21 @@ mod tests {
         assert_eq!(ch.recv(), Some(1));
         assert_eq!(ch.recv(), Some(2));
         assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn channel_try_recv_nonblocking() {
+        let ch: Channel<u32> = Channel::bounded(2);
+        assert_eq!(ch.try_recv(), None);
+        ch.try_send(5).unwrap();
+        assert_eq!(ch.try_recv(), Some(5));
+        assert_eq!(ch.try_recv(), None);
+        // try_recv frees capacity for blocked senders
+        ch.try_send(1).unwrap();
+        ch.try_send(2).unwrap();
+        assert!(ch.try_send(3).is_err());
+        assert_eq!(ch.try_recv(), Some(1));
+        ch.try_send(3).unwrap();
     }
 
     #[test]

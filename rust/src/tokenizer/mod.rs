@@ -73,6 +73,29 @@ impl Tokenizer {
         out
     }
 
+    /// The build-time vocabulary table, constructed without artifacts:
+    /// 4 specials then `0-9`, `a-z` and the task punctuation, exactly as
+    /// `python/compile/tasks.py` emits it into `artifacts/vocab.json`.
+    /// Used by the simulation backend and tests; the integration suite
+    /// verifies the real `vocab.json` agrees.
+    pub fn builtin() -> Tokenizer {
+        let mut tokens: Vec<String> =
+            vec!["<pad>".into(), "<mask>".into(), "<eos>".into(), "<bos>".into()];
+        for c in ('0'..='9').chain('a'..='z').chain("+-*/=()[],.:?><|&! ".chars()) {
+            tokens.push(c.to_string());
+        }
+        let arr = Json::Arr(tokens.into_iter().map(Json::Str).collect());
+        let j = crate::json::obj(vec![
+            ("tokens", arr),
+            ("vocab_size", Json::Num(64.0)),
+            ("pad", Json::Num(0.0)),
+            ("mask", Json::Num(1.0)),
+            ("eos", Json::Num(2.0)),
+            ("bos", Json::Num(3.0)),
+        ]);
+        Self::from_json(&j).expect("builtin vocabulary is well-formed")
+    }
+
     /// Prompt right-padded with PAD to `prompt_len` (build-time layout).
     pub fn encode_prompt(&self, s: &str, prompt_len: usize) -> Result<Vec<i32>> {
         let mut ids = self.encode(s)?;
@@ -89,23 +112,9 @@ mod tests {
     use super::*;
 
     fn tok() -> Tokenizer {
-        // inline copy of the build-time table (kept in sync by the
+        // the in-crate copy of the build-time table (kept in sync by the
         // integration test that loads the real artifacts/vocab.json)
-        let mut tokens: Vec<String> =
-            vec!["<pad>".into(), "<mask>".into(), "<eos>".into(), "<bos>".into()];
-        for c in ('0'..='9').chain('a'..='z').chain("+-*/=()[],.:?><|&! ".chars()) {
-            tokens.push(c.to_string());
-        }
-        let arr = Json::Arr(tokens.into_iter().map(Json::Str).collect());
-        let j = crate::json::obj(vec![
-            ("tokens", arr),
-            ("vocab_size", Json::Num(64.0)),
-            ("pad", Json::Num(0.0)),
-            ("mask", Json::Num(1.0)),
-            ("eos", Json::Num(2.0)),
-            ("bos", Json::Num(3.0)),
-        ]);
-        Tokenizer::from_json(&j).unwrap()
+        Tokenizer::builtin()
     }
 
     #[test]

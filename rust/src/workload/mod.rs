@@ -209,6 +209,22 @@ pub fn poisson_trace(rate_per_s: f64, n: usize, seed: u64) -> Vec<TraceRequest> 
         .collect()
 }
 
+/// Replay a trace open-loop against `submit`: each request is issued at
+/// its Poisson arrival offset (relative to the first call), regardless
+/// of how fast earlier requests complete — the serving-benchmark load
+/// model. `submit` should enqueue without blocking on completion (e.g.
+/// `Router::submit` returning a oneshot to wait on later).
+pub fn replay_trace<F: FnMut(&TraceRequest)>(trace: &[TraceRequest], mut submit: F) {
+    let t0 = std::time::Instant::now();
+    for req in trace {
+        let now = t0.elapsed().as_secs_f64();
+        if req.at_s > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(req.at_s - now));
+        }
+        submit(req);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,5 +278,20 @@ mod tests {
     fn score_trims() {
         assert!(score("42", " 42 "));
         assert!(!score("42", "43"));
+    }
+
+    #[test]
+    fn replay_paces_arrivals() {
+        // high-rate trace: replay must deliver every request, in order,
+        // and take at least the last arrival offset
+        let trace = poisson_trace(500.0, 20, 3);
+        let mut seen = Vec::new();
+        let t0 = std::time::Instant::now();
+        replay_trace(&trace, |r| seen.push(r.item.seed));
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert_eq!(seen.len(), 20);
+        let expect: Vec<u64> = trace.iter().map(|r| r.item.seed).collect();
+        assert_eq!(seen, expect);
+        assert!(elapsed + 0.005 >= trace.last().unwrap().at_s);
     }
 }

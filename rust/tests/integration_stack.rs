@@ -33,7 +33,11 @@ fn engine_generates_all_methods_deterministically() {
         let mut engine2 = Engine::new(&rt, EngineCfg::new("llada-nano", method));
         let r2 = engine2.generate(&prompts).unwrap();
         assert_eq!(r1.texts, r2.texts, "{method:?} must be deterministic");
-        assert_eq!(r1.iterations, 32);
+        assert_eq!(r1.iterations, r2.iterations);
+        // greedy decoding takes one iteration per emitted token; the EOS
+        // guard may retire the sequence at a block boundary before the
+        // full 32-position gen region is unmasked
+        assert!(r1.iterations > 0 && r1.iterations <= 32, "{}", r1.iterations);
         texts.push(r1.texts[0].clone());
     }
     // all methods produce non-empty text
@@ -50,10 +54,13 @@ fn es_step_counts_follow_refresh_policy() {
     cfg.block = 8;
     let mut engine = Engine::new(&rt, cfg);
     let r = engine.generate(&["2*3=".to_string()]).unwrap();
-    // 4 blocks × 8 iters: i_b=0 prefill (4), i_b=4 dual (4), rest es (24)
-    assert_eq!(r.n_prefill, 4);
-    assert_eq!(r.n_dual, 4);
-    assert_eq!(r.n_es, 24);
+    // every iteration runs exactly one executable for a single sequence
+    assert_eq!(r.n_prefill + r.n_dual + r.n_es, r.iterations);
+    // block 8 with block_period 4: per full block, i_b=0 prefills and
+    // i_b=4 dual-refreshes; the EOS guard may retire before all 4 blocks
+    let blocks = r.iterations.div_ceil(8);
+    assert!(r.n_prefill >= blocks, "{} prefills over {blocks} blocks", r.n_prefill);
+    assert!(r.n_es >= r.n_dual, "ES steps dominate the cadence");
 }
 
 #[test]
@@ -81,7 +88,7 @@ fn sparse_attention_runs_and_prunes() {
     cfg.sparse = true;
     let mut engine = Engine::new(&rt, cfg);
     let r = engine.generate(&["max(4,9,2)=".to_string()]).unwrap();
-    assert_eq!(r.iterations, 32);
+    assert!(r.iterations > 0 && r.iterations <= 32);
     assert!(!r.texts[0].is_empty());
 }
 
@@ -100,20 +107,20 @@ fn dream_arch_and_base_checkpoint_load() {
         cfg.checkpoint = ck.into();
         let mut engine = Engine::new(&rt, cfg);
         let r = engine.generate(&["7-4=".to_string()]).unwrap();
-        assert_eq!(r.iterations, 32, "{arch}/{ck}");
+        assert!(r.iterations > 0 && r.iterations <= 32, "{arch}/{ck}");
     }
 }
 
 #[test]
 fn http_server_end_to_end() {
     let Some(_rt) = runtime() else { return };
-    let router = Router::start(RouterCfg {
-        engine: EngineCfg::new("llada-nano", Method::EsDllm),
-        batcher: BatcherCfg { max_batch: 8, flush_ms: 10 },
-        queue_cap: 16,
-        workers: 1,
-        artifacts_dir: default_artifacts_dir(),
-    });
+    let mut router_cfg = RouterCfg::new(
+        EngineCfg::new("llada-nano", Method::EsDllm),
+        default_artifacts_dir(),
+    );
+    router_cfg.batcher = BatcherCfg { max_batch: 8, flush_ms: 10 };
+    router_cfg.queue_cap = 16;
+    let router = Router::start(router_cfg);
     let server = serve(&ServeCfg::default(), router.clone()).unwrap();
     let mut client = Client::new(server.addr);
 

@@ -1,0 +1,141 @@
+//! Minimal in-tree substitute for the `anyhow` crate, providing the
+//! subset this workspace uses: [`Error`], [`Result`], the [`anyhow!`]
+//! macro, and the [`Context`] extension trait. Vendored so the build
+//! needs no registry access; the API mirrors upstream so the real crate
+//! can be swapped back in without source changes.
+
+use std::fmt;
+
+/// A string-backed error with an optional context chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole context chain, like upstream
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:\n    ")?;
+            src.write_chain(f)?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // preserve the std source chain as context entries
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut source = None;
+        for msg in msgs.into_iter().rev() {
+            source = Some(Box::new(Error { msg, source }));
+        }
+        Error { msg: e.to_string(), source }
+    }
+}
+
+/// Construct an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: ctx.to_string(), source: Some(Box::new(Error::msg(e))) })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: f().to_string(), source: Some(Box::new(Error::msg(e))) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+    }
+
+    #[test]
+    fn context_chain_renders_alternate() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.with_context(|| "loading file").unwrap_err();
+        assert_eq!(format!("{e}"), "loading file");
+        assert_eq!(format!("{e:#}"), "loading file: missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+}
