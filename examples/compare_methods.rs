@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let rt = Runtime::load_default()?;
-    let dims = rt.arch(&arch)?.dims.clone();
+    let dims = rt.arch(&arch)?.dims;
 
     let mut table = Table::new(
         &format!("compare_methods: {arch} / {bench} / {n} samples"),

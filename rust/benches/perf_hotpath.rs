@@ -1,26 +1,170 @@
 //! Hot-path microbenchmarks + §7 analyses:
+//!   * resident-cache vs clone-and-reupload transfer comparison (bytes
+//!     per step and host staging ms per step), driven through the real
+//!     scheduler over the sim backend — runs on any machine, no PJRT —
+//!     and emitted machine-readably as `BENCH_transfer.json`,
 //!   * per-executable latency (prefill / dual / es, b1 / b8) with the
-//!     upload/execute/download breakdown from runtime counters,
+//!     upload/execute/download breakdown from runtime counters (needs
+//!     compiled artifacts; skipped gracefully without them),
 //!   * the paper's §7 memory-overhead table analog (cache bytes/seq),
 //!   * the §7 speedup-vs-FLOPs gap: measured speedup vs the analytic
 //!     FLOPs ratio, explained by the per-iteration byte traffic that
-//!     early-skipping does NOT reduce (this testbed's bandwidth wall).
+//!     early-skipping does NOT reduce — traffic the resident-cache layer
+//!     now keeps on the device.
+
+use std::time::Instant;
 
 use esdllm::bench::{bench, bench_n, Table};
-use esdllm::cache::GroupCaches;
+use esdllm::cache::{GroupCaches, RefreshPolicy};
+use esdllm::engine::Method;
 use esdllm::flops;
-use esdllm::manifest::ExeKind;
+use esdllm::manifest::{Dims, ExeKind};
 use esdllm::runtime::tensor::HostTensor;
 use esdllm::runtime::Runtime;
+use esdllm::sampler::SamplerCfg;
+use esdllm::scheduler::sim::{SimBackend, SimCfg};
+use esdllm::scheduler::{GroupScheduler, SchedCfg, SeqInput, SeqParams};
+
+/// The nano-arch geometry (manifest.json) at batch 8: big enough that
+/// the KV tensor dominates per-step traffic, as on the real artifacts.
+fn bench_dims() -> Dims {
+    Dims {
+        vocab: 64, d_model: 64, n_layers: 8, n_heads: 4, n_kv_heads: 4,
+        d_ff: 256, head_dim: 16, prompt_len: 48, gen_len: 32, ctx: 80,
+    }
+}
+
+/// Resident-cache vs clone-and-reupload: drive the slot scheduler over
+/// the sim backend and read the transfer ledger, plus microbenchmark the
+/// host-side staging cost (full-tensor clone vs borrowed view).
+fn transfer_section() -> anyhow::Result<()> {
+    let batch = 8;
+    let d = bench_dims();
+    let sim_cfg = SimCfg { dims: d, ..SimCfg::default() };
+    let backend = SimBackend::new(sim_cfg);
+    let cfg = SchedCfg {
+        method: Method::EsDllm,
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+        sampler: SamplerCfg::llada(),
+        seed: 0,
+    };
+    let mut sched = GroupScheduler::new(Box::new(backend), batch, cfg)?;
+    let t0 = Instant::now();
+    for i in 0..batch as u64 {
+        sched.admit(SeqInput {
+            id: i,
+            // mixed lengths so blocks diverge like real traffic
+            prompt: ["sort(9,8,7)=789", "1+2", "a|b", "0-1", "9*8", "x&y", "7*7", "3,4"]
+                [i as usize % 8]
+                .to_string(),
+            params: SeqParams::default(),
+            submitted: t0,
+        })?;
+    }
+    let mut guard = 0;
+    while sched.active() > 0 {
+        sched.tick()?;
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    let stats = sched.transfer_stats();
+    let runs = (sched.n_prefill + sched.n_dual + sched.n_es).max(1) as u64;
+    // only block steps uploaded KV in the clone-and-reupload design;
+    // prefills shipped tokens only
+    let step_runs = (sched.n_dual + sched.n_es).max(1) as u64;
+    let resident_per_step = stats.upload_bytes / runs;
+    let baseline_per_step = (stats.upload_bytes + stats.upload_bytes_saved) / runs;
+
+    // host staging cost: the old path cloned the full KV into a fresh
+    // HostTensor every step; the resident path borrows a view
+    let caches = GroupCaches::new(&d, batch);
+    let iters = 200;
+    let clone_stats = bench(3, iters, || {
+        let t = caches.kv_tensor();
+        std::hint::black_box(&t);
+    });
+    let view_stats = bench(3, iters, || {
+        let v = caches.kv_view();
+        std::hint::black_box(&v);
+    });
+
+    let mut table = Table::new(
+        "perf_hotpath: resident caches vs clone-and-reupload (sim, b8, ES)",
+        &["mode", "bytes/step up", "KV bytes total", "full KV uploads", "staging ms/step"],
+    );
+    table.row(&[
+        "clone-and-reupload".to_string(),
+        format!("{baseline_per_step}"),
+        format!("{}", (caches.kv_bytes() as u64) * step_runs),
+        format!("{step_runs}"),
+        format!("{:.4}", clone_stats.mean_s * 1e3),
+    ]);
+    table.row(&[
+        "resident (dirty-delta)".to_string(),
+        format!("{resident_per_step}"),
+        format!("{}", stats.kv_upload_bytes),
+        format!("{}", stats.full_kv_uploads),
+        format!("{:.4}", view_stats.mean_s * 1e3),
+    ]);
+    table.print();
+    table.write_csv("artifacts/results/perf_transfer.csv")?;
+    println!(
+        "resident caches ship {resident_per_step} B/step vs {baseline_per_step} B/step \
+         clone-and-reupload ({:.1}x less traffic); {} executable runs, {} full-KV \
+         upload(s) total (the residency seed)",
+        baseline_per_step as f64 / resident_per_step.max(1) as f64,
+        runs,
+        stats.full_kv_uploads,
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath_transfer\",\n  \"batch\": {batch},\n  \
+         \"block\": 8,\n  \"executable_runs\": {runs},\n  \
+         \"resident_bytes_per_step\": {resident_per_step},\n  \
+         \"baseline_bytes_per_step\": {baseline_per_step},\n  \
+         \"upload_bytes\": {},\n  \"upload_bytes_saved\": {},\n  \
+         \"kv_upload_bytes\": {},\n  \"ind_upload_bytes\": {},\n  \
+         \"conf_upload_bytes\": {},\n  \"token_upload_bytes\": {},\n  \
+         \"full_kv_uploads\": {},\n  \"resident_reuses\": {},\n  \
+         \"clone_staging_ms_per_step\": {:.6},\n  \
+         \"view_staging_ms_per_step\": {:.6}\n}}\n",
+        stats.upload_bytes,
+        stats.upload_bytes_saved,
+        stats.kv_upload_bytes,
+        stats.ind_upload_bytes,
+        stats.conf_upload_bytes,
+        stats.token_upload_bytes,
+        stats.full_kv_uploads,
+        stats.resident_reuses,
+        clone_stats.mean_s * 1e3,
+        view_stats.mean_s * 1e3,
+    );
+    std::fs::write("artifacts/results/BENCH_transfer.json", json)?;
+    println!("wrote artifacts/results/BENCH_transfer.json");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
-    let rt = Runtime::load_default()?;
+    transfer_section()?;
+
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!(
+                "\nperf_hotpath: PJRT artifacts unavailable ({e:#}); \
+                 per-executable latency section skipped."
+            );
+            return Ok(());
+        }
+    };
     let iters = bench_n(12);
 
     for arch_name in ["llada-nano", "dream-nano"] {
         let arch = rt.arch(arch_name)?.clone();
-        let d = arch.dims.clone();
+        let d = arch.dims;
 
         let mut table = Table::new(
             &format!("perf_hotpath: {arch_name} per-executable latency ({iters} iters)"),
@@ -116,10 +260,11 @@ fn main() -> anyhow::Result<()> {
             / flops::step_flops(&d, 8, &skip, d.ctx);
         let traffic = flops::step_traffic_bytes(&d, 8, 2, d.ctx);
         println!(
-            "\n§7 analog ({arch_name}): ES step FLOPs reduction {fl_ratio:.2}x, but \
-             per-iteration traffic stays {:.2} MB — the measured ES-vs-Dual speedup \
-             lands between 1x and {fl_ratio:.2}x, mirroring the paper's \
-             memory-bound gap (theirs: 2.5x FLOPs -> 1.2-1.85x measured).",
+            "\n§7 analog ({arch_name}): ES step FLOPs reduction {fl_ratio:.2}x; the \
+             clone-and-reupload design streamed {:.2} MB/iteration regardless — the \
+             memory-bound gap the paper reports (2.5x FLOPs -> 1.2-1.85x measured). \
+             The resident-cache layer removes the KV/indicator share of that traffic \
+             (see the transfer table above / BENCH_transfer.json).",
             traffic as f64 / 1e6
         );
     }

@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;
     let n = bench_n(16);
     let arch = "llada-nano";
-    let dims = rt.arch(arch)?.dims.clone();
+    let dims = rt.arch(arch)?.dims;
 
     let variants: Vec<(&str, &str, Vec<(usize, f64)>)> = vec![
         ("r1=0.7", "es_r1_only_70", vec![(1, 0.7)]),

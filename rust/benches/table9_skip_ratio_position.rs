@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;
     let n = bench_n(16);
     let arch = "llada-nano";
-    let dims = rt.arch(arch)?.dims.clone();
+    let dims = rt.arch(arch)?.dims;
     let bench = "chain";
     let block = 32;
 

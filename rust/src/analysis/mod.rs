@@ -9,7 +9,7 @@ use crate::cache::softmax_max;
 use crate::rng::SplitMix;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::Runtime;
-use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
+use crate::sampler::{decide_unmask_with, SamplerCfg, SamplerScratch, UnmaskInput};
 
 pub const PROBE_TENSORS: [&str; 4] = ["hidden", "query", "key", "value"];
 
@@ -42,6 +42,7 @@ pub fn observe_generation(rt: &Runtime, arch_name: &str, groups: usize) -> Resul
     let gen = d.gen_len;
     let sampler = SamplerCfg::llada();
     let mut rng = SplitMix::new(0x0B5E);
+    let mut scratch = SamplerScratch::default();
 
     let mut stats = ObservationStats {
         probe_layers: probe_layers.clone(),
@@ -115,7 +116,7 @@ pub fn observe_generation(rt: &Runtime, arch_name: &str, groups: usize) -> Resul
                     mask_id: tok.mask,
                     eos_id: tok.eos,
                 };
-                let dec = decide_unmask(&sampler, &inp, &mut rng);
+                let dec = decide_unmask_with(&sampler, &inp, &mut rng, &mut scratch);
                 for (p, t) in dec.positions.iter().zip(&dec.tokens) {
                     tokens[b * d.ctx + d.prompt_len + p] = *t;
                 }

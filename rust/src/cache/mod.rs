@@ -11,11 +11,167 @@
 //!
 //! The step executable returns only the *block slice* of updated KV and
 //! indicator rows; [`GroupCaches::scatter_kv_block`] folds those back in.
+//!
+//! Every mutating op additionally marks the touched rows in a per-kind
+//! [`DirtyState`] (per-slot × per-position bitmaps). The resident-cache
+//! layer ([`crate::runtime::resident::DeviceGroupCaches`]) consumes those
+//! bitmaps to decide which rows actually need re-syncing to the device
+//! before the next executable run — steady-state steps whose outputs were
+//! applied device-side re-upload nothing.
 
 use anyhow::{anyhow, Result};
 
 use crate::manifest::Dims;
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{HostTensor, ShapeVec, TensorView};
+
+/// Per-slot × per-position dirty bitmap for one cache kind. A "row" is
+/// one (slot, position) pair spanning every layer/head — exactly the
+/// granularity at which the scatter/reset/prefill-merge ops write, so a
+/// bit set here means "the host copy of this row diverged from the
+/// resident device copy".
+#[derive(Debug, Clone)]
+pub struct DirtyBitmap {
+    slots: usize,
+    positions: usize,
+    words: Vec<u64>,
+}
+
+impl DirtyBitmap {
+    /// All rows marked: the honest initial state (nothing is resident on
+    /// the device yet, so everything would need a first upload).
+    pub fn new_marked(slots: usize, positions: usize) -> DirtyBitmap {
+        let mut bm = DirtyBitmap::new_clean(slots, positions);
+        for s in 0..slots {
+            bm.mark_range(s, 0, positions);
+        }
+        bm
+    }
+
+    pub fn new_clean(slots: usize, positions: usize) -> DirtyBitmap {
+        let bits = slots * positions;
+        DirtyBitmap { slots, positions, words: vec![0u64; bits.div_ceil(64)] }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn positions(&self) -> usize {
+        self.positions
+    }
+
+    fn bit(&self, slot: usize, pos: usize) -> usize {
+        slot * self.positions + pos
+    }
+
+    /// Clamped absolute bit span of (slot, lo..hi).
+    fn span(&self, slot: usize, lo: usize, hi: usize) -> (usize, usize) {
+        let hi = hi.min(self.positions);
+        let lo = lo.min(hi);
+        (slot * self.positions + lo, slot * self.positions + hi)
+    }
+
+    /// Word-sized mask covering bits [i, i+take) within word i/64, where
+    /// `take` never crosses the word boundary.
+    fn word_mask(bit: usize, take: usize) -> u64 {
+        if take == 64 {
+            !0u64
+        } else {
+            ((1u64 << take) - 1) << bit
+        }
+    }
+
+    pub fn mark_range(&mut self, slot: usize, lo: usize, hi: usize) {
+        let (mut i, end) = self.span(slot, lo, hi);
+        while i < end {
+            let bit = i % 64;
+            let take = (64 - bit).min(end - i);
+            self.words[i / 64] |= Self::word_mask(bit, take);
+            i += take;
+        }
+    }
+
+    pub fn clear_range(&mut self, slot: usize, lo: usize, hi: usize) {
+        let (mut i, end) = self.span(slot, lo, hi);
+        while i < end {
+            let bit = i % 64;
+            let take = (64 - bit).min(end - i);
+            self.words[i / 64] &= !Self::word_mask(bit, take);
+            i += take;
+        }
+    }
+
+    /// Dirty rows within (slot, lo..hi), counted a word at a time.
+    pub fn count_range(&self, slot: usize, lo: usize, hi: usize) -> usize {
+        let (mut i, end) = self.span(slot, lo, hi);
+        let mut n = 0usize;
+        while i < end {
+            let bit = i % 64;
+            let take = (64 - bit).min(end - i);
+            n += (self.words[i / 64] & Self::word_mask(bit, take)).count_ones() as usize;
+            i += take;
+        }
+        n
+    }
+
+    pub fn mark_slot(&mut self, slot: usize) {
+        self.mark_range(slot, 0, self.positions);
+    }
+
+    pub fn clear_slot(&mut self, slot: usize) {
+        self.clear_range(slot, 0, self.positions);
+    }
+
+    pub fn clear_all(&mut self) {
+        for w in self.words.iter_mut() {
+            *w = 0;
+        }
+    }
+
+    pub fn get(&self, slot: usize, pos: usize) -> bool {
+        let i = self.bit(slot, pos);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Dirty rows of one slot.
+    pub fn count_slot(&self, slot: usize) -> usize {
+        self.count_range(slot, 0, self.positions)
+    }
+
+    /// Dirty rows across the whole bitmap.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+}
+
+/// Dirty bitmaps per cache kind. KV rows index the context positions;
+/// indicator/confidence rows index the gen-region positions; the sparse
+/// bitmap (created with the sparse cache) indexes the pruned rows.
+#[derive(Debug, Clone)]
+pub struct DirtyState {
+    pub kv: DirtyBitmap,
+    pub kv_sparse: Option<DirtyBitmap>,
+    pub ind: std::collections::BTreeMap<&'static str, DirtyBitmap>,
+    pub conf: DirtyBitmap,
+}
+
+impl DirtyState {
+    fn new(dims: &Dims, batch: usize) -> DirtyState {
+        DirtyState {
+            kv: DirtyBitmap::new_marked(batch, dims.ctx),
+            kv_sparse: None,
+            ind: INDICATORS
+                .iter()
+                .map(|i| (*i, DirtyBitmap::new_marked(batch, dims.gen_len)))
+                .collect(),
+            conf: DirtyBitmap::new_marked(batch, dims.gen_len),
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct GroupCaches {
@@ -31,6 +187,8 @@ pub struct GroupCaches {
     pub logits: Vec<f32>,
     /// latest confidence per gen position [B, gen]
     pub conf: Vec<f32>,
+    /// host-vs-resident divergence, maintained by every mutating op
+    pub dirty: DirtyState,
 }
 
 #[derive(Debug, Clone)]
@@ -50,14 +208,43 @@ impl GroupCaches {
         let kv_len = d.n_layers * 2 * batch * d.n_kv_heads * d.ctx * d.head_dim;
         let ind_len = d.n_layers * batch * d.gen_len * d.d_model;
         GroupCaches {
-            dims: d.clone(),
+            dims: *d,
             batch,
             kv: vec![0; kv_len],
             kv_sparse: None,
             ind: INDICATORS.iter().map(|i| (*i, vec![0u16; ind_len])).collect(),
             logits: vec![0.0; batch * d.gen_len * d.vocab],
             conf: vec![0.0; batch * d.gen_len],
+            dirty: DirtyState::new(d, batch),
         }
+    }
+
+    // -- transfer-size helpers ---------------------------------------------
+
+    /// Bytes of one dense-KV row (one (slot, t) pair across all layers,
+    /// both K and V, all heads).
+    pub fn kv_row_bytes(&self) -> usize {
+        self.dims.n_layers * 2 * self.dims.n_kv_heads * self.dims.head_dim * 2
+    }
+
+    /// Bytes of the whole dense KV tensor.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.len() * 2
+    }
+
+    /// Bytes of one pruned-KV row (same layout as the dense row).
+    pub fn kv_sparse_row_bytes(&self) -> usize {
+        self.kv_row_bytes()
+    }
+
+    pub fn kv_sparse_bytes(&self) -> usize {
+        self.kv_sparse.as_ref().map(|sp| sp.kv.len() * 2).unwrap_or(0)
+    }
+
+    /// Bytes of one gathered-indicator row ((slot, gen-pos) across the
+    /// `n_ind` gathered layers).
+    pub fn ind_row_bytes(&self, n_ind: usize) -> usize {
+        n_ind * self.dims.d_model * 2
     }
 
     // -- index helpers ----------------------------------------------------
@@ -92,7 +279,7 @@ impl GroupCaches {
         outputs: &[HostTensor],
         slots: &[usize],
     ) -> Result<()> {
-        let d = self.dims.clone();
+        let d = self.dims;
         self.merge_full_logits_slots(&outputs[0], slots)?;
         let kv_src = outputs[1].as_bf16()?;
         let row = d.n_kv_heads * d.ctx * d.head_dim;
@@ -115,6 +302,12 @@ impl GroupCaches {
                 }
             }
         }
+        for &b in slots {
+            self.dirty.kv.mark_slot(b);
+            for bm in self.dirty.ind.values_mut() {
+                bm.mark_slot(b);
+            }
+        }
         Ok(())
     }
 
@@ -126,7 +319,7 @@ impl GroupCaches {
         logits_full: &HostTensor,
         slots: &[usize],
     ) -> Result<()> {
-        let d = self.dims.clone();
+        let d = self.dims;
         let v = d.vocab;
         let src_all = logits_full.as_f32()?;
         for &b in slots {
@@ -155,15 +348,21 @@ impl GroupCaches {
                 let row = &self.logits[i * v..(i + 1) * v];
                 self.conf[i] = softmax_max(row);
             }
+            // confidence is host-computed from downloaded logits, so a
+            // recompute always diverges the resident copy
+            self.dirty.conf.mark_slot(b);
         }
     }
 
     // -- slot lifecycle ------------------------------------------------------
 
     /// Zero every cache row of one slot so a retiring sequence leaves no
-    /// state behind for the next occupant.
+    /// state behind for the next occupant. Host-originated: the slot's
+    /// rows are marked dirty across every kind (slot-admission
+    /// invalidation — a mid-flight admit dirties exactly the admitted
+    /// slot, which the resident layer re-syncs or regenerates).
     pub fn reset_slot(&mut self, b: usize) {
-        let d = self.dims.clone();
+        let d = self.dims;
         let kv_row = d.n_kv_heads * d.ctx * d.head_dim;
         for l in 0..d.n_layers {
             for s in 0..2 {
@@ -191,6 +390,14 @@ impl GroupCaches {
             }
             sp.keep_idx[b].clear();
         }
+        self.dirty.kv.mark_slot(b);
+        for bm in self.dirty.ind.values_mut() {
+            bm.mark_slot(b);
+        }
+        self.dirty.conf.mark_slot(b);
+        if let Some(bm) = self.dirty.kv_sparse.as_mut() {
+            bm.mark_slot(b);
+        }
     }
 
     // -- step-executable I/O ------------------------------------------------
@@ -198,23 +405,42 @@ impl GroupCaches {
     /// Gather the indicator-cache rows for `layers` into the step input
     /// tensor [n_ind, B, gen, d].
     pub fn gather_ind(&self, indicator: &str, layers: &[usize]) -> Result<HostTensor> {
+        let mut out = HostTensor::Bf16 { shape: Vec::new(), data: Vec::new() };
+        self.gather_ind_into(indicator, layers, &mut out)?;
+        Ok(out)
+    }
+
+    /// Pooled variant: gather into a reusable bf16 scratch tensor so the
+    /// step path doesn't allocate a fresh vector every iteration.
+    pub fn gather_ind_into(
+        &self,
+        indicator: &str,
+        layers: &[usize],
+        out: &mut HostTensor,
+    ) -> Result<()> {
         let d = &self.dims;
         let src = self
             .ind
             .get(indicator)
             .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
         let row = self.batch * d.gen_len * d.d_model;
-        let mut data = Vec::with_capacity(layers.len().max(1) * row);
-        if layers.is_empty() {
-            data.resize(row, 0); // n_ind >= 1 dummy slot
+        let n_ind = layers.len().max(1);
+        match out {
+            HostTensor::Bf16 { shape, data } => {
+                shape.clear();
+                shape.extend_from_slice(&[n_ind, self.batch, d.gen_len, d.d_model]);
+                data.clear();
+                data.reserve(n_ind * row);
+                if layers.is_empty() {
+                    data.resize(row, 0); // n_ind >= 1 dummy slot
+                }
+                for &l in layers {
+                    data.extend_from_slice(&src[l * row..(l + 1) * row]);
+                }
+                Ok(())
+            }
+            _ => Err(anyhow!("gather_ind_into needs a bf16 scratch tensor")),
         }
-        for &l in layers {
-            data.extend_from_slice(&src[l * row..(l + 1) * row]);
-        }
-        Ok(HostTensor::Bf16 {
-            shape: vec![layers.len().max(1), self.batch, d.gen_len, d.d_model],
-            data,
-        })
     }
 
     /// Scatter a returned indicator block [n_ind, B, block, d] at
@@ -262,6 +488,11 @@ impl GroupCaches {
                 }
             }
         }
+        if let Some(bm) = self.dirty.ind.get_mut(indicator) {
+            for &b in slots {
+                bm.mark_range(b, g0, g0 + block);
+            }
+        }
         Ok(())
     }
 
@@ -285,7 +516,7 @@ impl GroupCaches {
         t: &HostTensor,
         slots: &[usize],
     ) -> Result<()> {
-        let d = self.dims.clone();
+        let d = self.dims;
         let hd = d.head_dim;
         let data = t.as_bf16()?;
         for l in 0..d.n_layers {
@@ -300,6 +531,9 @@ impl GroupCaches {
                     }
                 }
             }
+        }
+        for &b in slots {
+            self.dirty.kv.mark_range(b, block_start, block_start + block);
         }
         Ok(())
     }
@@ -324,7 +558,7 @@ impl GroupCaches {
         t: &HostTensor,
         slots: &[usize],
     ) -> Result<()> {
-        let d = self.dims.clone();
+        let d = self.dims;
         let batch = self.batch;
         let hd = d.head_dim;
         let data = t.as_bf16()?;
@@ -345,6 +579,11 @@ impl GroupCaches {
                             .copy_from_slice(&data[src..src + block * hd]);
                     }
                 }
+            }
+        }
+        if let Some(bm) = self.dirty.kv_sparse.as_mut() {
+            for &b in slots {
+                bm.mark_range(b, row0, row0 + block);
             }
         }
         Ok(())
@@ -373,14 +612,17 @@ impl GroupCaches {
         let lg = logits.as_f32()?;
         let ps = pos.as_i32()?;
         let k = logits.shape()[1];
+        let gen_len = d.gen_len;
+        let prompt_len = d.prompt_len;
         for &b in slots {
             for j in 0..k {
                 let p = ps[b * k + j] as usize;
-                let g = p - d.prompt_len;
-                let dst = (b * d.gen_len + g) * v;
+                let g = p - prompt_len;
+                let dst = (b * gen_len + g) * v;
                 let src = (b * k + j) * v;
                 self.logits[dst..dst + v].copy_from_slice(&lg[src..src + v]);
-                self.conf[b * d.gen_len + g] = softmax_max(&lg[src..src + v]);
+                self.conf[b * gen_len + g] = softmax_max(&lg[src..src + v]);
+                self.dirty.conf.mark_range(b, g, g + 1);
             }
         }
         Ok(())
@@ -392,6 +634,35 @@ impl GroupCaches {
             shape: vec![d.n_layers, 2, self.batch, d.n_kv_heads, d.ctx, d.head_dim],
             data: self.kv.clone(),
         }
+    }
+
+    /// Zero-copy view of the dense KV cache for uploads (replaces the
+    /// full-tensor clone [`GroupCaches::kv_tensor`] on the step path).
+    pub fn kv_view(&self) -> TensorView<'_> {
+        let d = &self.dims;
+        TensorView::Bf16 {
+            shape: ShapeVec::from_slice(&[
+                d.n_layers, 2, self.batch, d.n_kv_heads, d.ctx, d.head_dim,
+            ]),
+            data: &self.kv,
+        }
+    }
+
+    /// Zero-copy view of the pruned KV cache.
+    pub fn kv_sparse_view(&self) -> Result<TensorView<'_>> {
+        let d = &self.dims;
+        let sp = self.kv_sparse.as_ref().ok_or_else(|| anyhow!("no sparse cache"))?;
+        Ok(TensorView::Bf16 {
+            shape: ShapeVec::from_slice(&[
+                d.n_layers,
+                2,
+                self.batch,
+                d.n_kv_heads,
+                sp.keep_prompt + d.gen_len,
+                d.head_dim,
+            ]),
+            data: &sp.kv,
+        })
     }
 
     pub fn kv_sparse_tensor(&self) -> Result<HostTensor> {
@@ -424,12 +695,30 @@ impl GroupCaches {
     /// (1−α)·var, Eq. 1) and the executable's compute budget goes to the
     /// occupants. -1.0 rather than -inf keeps α·conf finite for α = 0.
     pub fn conf_tensor_masked(&self, slots: &[usize]) -> HostTensor {
+        let mut out = HostTensor::F32 { shape: Vec::new(), data: Vec::new() };
+        self.conf_masked_into(slots, &mut out).expect("f32 scratch");
+        out
+    }
+
+    /// Pooled variant of [`GroupCaches::conf_tensor_masked`]: rebuild the
+    /// occupancy-masked confidence input inside a reusable f32 scratch
+    /// tensor.
+    pub fn conf_masked_into(&self, slots: &[usize], out: &mut HostTensor) -> Result<()> {
         let gen = self.dims.gen_len;
-        let mut data = vec![-1.0f32; self.batch * gen];
-        for &b in slots {
-            data[b * gen..(b + 1) * gen].copy_from_slice(&self.conf[b * gen..(b + 1) * gen]);
+        match out {
+            HostTensor::F32 { shape, data } => {
+                shape.clear();
+                shape.extend_from_slice(&[self.batch, gen]);
+                data.clear();
+                data.resize(self.batch * gen, -1.0f32);
+                for &b in slots {
+                    data[b * gen..(b + 1) * gen]
+                        .copy_from_slice(&self.conf[b * gen..(b + 1) * gen]);
+                }
+                Ok(())
+            }
+            _ => Err(anyhow!("conf_masked_into needs an f32 scratch tensor")),
         }
-        HostTensor::F32 { shape: vec![self.batch, gen], data }
     }
 
     // -- sparse-attention selection (Sparse-dLLM analog) --------------------
@@ -457,7 +746,7 @@ impl GroupCaches {
         smooth_kernel: usize,
         slots: &[usize],
     ) -> Result<()> {
-        let d = self.dims.clone();
+        let d = self.dims;
         let mass = attn_mass.as_f32()?;
         let keep_len = keep_prompt + d.gen_len;
         let hd = d.head_dim;
@@ -472,6 +761,16 @@ impl GroupCaches {
                 keep_idx: vec![Vec::new(); self.batch],
                 keep_prompt,
             });
+            // geometry changed: every slot's pruned rows must re-sync
+            self.dirty.kv_sparse = Some(DirtyBitmap::new_marked(self.batch, keep_len));
+        }
+        // the rebuild is host-side compute (top-k over downloaded
+        // attention mass against the host dense KV), so the rebuilt
+        // slots' pruned rows always diverge from the resident copy
+        if let Some(bm) = self.dirty.kv_sparse.as_mut() {
+            for &b in slots {
+                bm.mark_slot(b);
+            }
         }
         let mut keep_by_slot: Vec<(usize, Vec<usize>)> = Vec::with_capacity(slots.len());
         for &b in slots {
@@ -771,5 +1070,97 @@ mod tests {
         let s = smooth(&[0.0, 3.0, 0.0], 3);
         assert!((s[1] - 1.0).abs() < 1e-6);
         assert_eq!(smooth(&[1.0, 2.0], 1), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn dirty_bitmap_mark_clear_count() {
+        let mut bm = DirtyBitmap::new_clean(2, 70); // straddles a word
+        assert!(!bm.any());
+        bm.mark_range(1, 60, 66);
+        assert_eq!(bm.count(), 6);
+        assert_eq!(bm.count_slot(1), 6);
+        assert_eq!(bm.count_slot(0), 0);
+        assert!(bm.get(1, 60) && bm.get(1, 65) && !bm.get(1, 66));
+        bm.clear_range(1, 60, 63);
+        assert_eq!(bm.count_slot(1), 3);
+        bm.mark_slot(0);
+        assert_eq!(bm.count_slot(0), 70);
+        bm.clear_all();
+        assert!(!bm.any());
+        // out-of-range marks are clamped, not UB
+        bm.mark_range(0, 68, 999);
+        assert_eq!(bm.count(), 2);
+    }
+
+    #[test]
+    fn caches_start_fully_dirty_and_ops_mark_rows() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        assert_eq!(c.dirty.kv.count(), 2 * d.ctx, "fresh caches are unseeded");
+        c.dirty.kv.clear_all();
+        c.dirty.conf.clear_all();
+        for bm in c.dirty.ind.values_mut() {
+            bm.clear_all();
+        }
+
+        // a KV block scatter marks exactly the block rows of its slots
+        let block = 2;
+        let n = d.n_layers * 2 * 2 * d.n_kv_heads * block * d.head_dim;
+        let t = HostTensor::Bf16 {
+            shape: vec![d.n_layers, 2, 2, d.n_kv_heads, block, d.head_dim],
+            data: vec![1u16; n],
+        };
+        c.scatter_kv_block_slots(4, block, &t, &[1]).unwrap();
+        assert_eq!(c.dirty.kv.count_slot(1), block);
+        assert_eq!(c.dirty.kv.count_slot(0), 0);
+        assert!(c.dirty.kv.get(1, 4) && c.dirty.kv.get(1, 5));
+
+        // a step-logits merge marks the merged confidence rows
+        let logits = HostTensor::F32 {
+            shape: vec![2, 1, 8],
+            data: vec![0.0; 16],
+        };
+        let pos = HostTensor::I32 { shape: vec![2, 1], data: vec![5, 5] };
+        c.merge_step_logits_slots(&logits, &pos, &[0]).unwrap();
+        assert_eq!(c.dirty.conf.count_slot(0), 1);
+        assert!(c.dirty.conf.get(0, 1), "gen idx 1 = pos 5 - prompt 4");
+        assert_eq!(c.dirty.conf.count_slot(1), 0);
+
+        // reset (slot admission) marks every kind of exactly that slot
+        c.reset_slot(0);
+        assert_eq!(c.dirty.kv.count_slot(0), d.ctx);
+        assert_eq!(c.dirty.conf.count_slot(0), d.gen_len);
+        for bm in c.dirty.ind.values() {
+            assert_eq!(bm.count_slot(0), d.gen_len);
+            assert_eq!(bm.count_slot(1), 0);
+        }
+        assert_eq!(c.dirty.kv.count_slot(1), block, "spectator untouched");
+    }
+
+    #[test]
+    fn pooled_builders_match_allocating_variants() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        for (i, v) in c.ind.get_mut("h").unwrap().iter_mut().enumerate() {
+            *v = i as u16;
+        }
+        c.conf.fill(0.5);
+        let layers = vec![0usize, 1];
+        let fresh = c.gather_ind("h", &layers).unwrap();
+        let mut pooled = HostTensor::Bf16 { shape: Vec::new(), data: Vec::new() };
+        c.gather_ind_into("h", &layers, &mut pooled).unwrap();
+        assert_eq!(fresh.shape(), pooled.shape());
+        assert_eq!(fresh.as_bf16().unwrap(), pooled.as_bf16().unwrap());
+
+        let fresh_conf = c.conf_tensor_masked(&[0]);
+        let mut pooled_conf = HostTensor::F32 { shape: Vec::new(), data: Vec::new() };
+        c.conf_masked_into(&[0], &mut pooled_conf).unwrap();
+        assert_eq!(fresh_conf.as_f32().unwrap(), pooled_conf.as_f32().unwrap());
+
+        // kv_view matches the cloning kv_tensor
+        let t = c.kv_tensor();
+        let v = c.kv_view();
+        assert_eq!(t.shape(), v.shape());
+        assert_eq!(t.elements(), v.elements());
     }
 }

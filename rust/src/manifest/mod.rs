@@ -86,7 +86,9 @@ pub struct ArchSpec {
     pub executables: BTreeMap<String, ExeSpec>,
 }
 
-#[derive(Debug, Clone)]
+// ten plain usizes: `Copy` so geometry travels by value and the hot
+// paths don't accumulate `dims.clone()` noise
+#[derive(Debug, Clone, Copy)]
 pub struct Dims {
     pub vocab: usize,
     pub d_model: usize,

@@ -162,6 +162,21 @@ pub struct Metrics {
     /// ∑ over ticks of (occupied slots × tick wall time): the denominator
     /// of the occupancy-weighted throughput
     pub slot_busy_seconds: SecondsCounter,
+    // -- resident-cache transfer accounting (logical bytes from the
+    //    scheduler backends' transfer ledgers) --
+    /// bytes shipped host→device after dirty-delta planning
+    pub upload_bytes: Counter,
+    /// bytes avoided vs the clone-and-reupload baseline
+    pub upload_bytes_saved: Counter,
+    pub kv_upload_bytes: Counter,
+    pub ind_upload_bytes: Counter,
+    pub conf_upload_bytes: Counter,
+    pub token_upload_bytes: Counter,
+    /// syncs that shipped an entire KV tensor (the residency seed, plus
+    /// any full invalidation)
+    pub full_kv_uploads: Counter,
+    /// input syncs served entirely from the resident device copy
+    pub resident_reuses: Counter,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -225,6 +240,14 @@ impl Metrics {
             ("esdllm_ticks_total", self.ticks_total.get()),
             ("esdllm_active_slots", self.active_slots.get()),
             ("esdllm_slots_total", self.slots_total.get()),
+            ("esdllm_upload_bytes", self.upload_bytes.get()),
+            ("esdllm_upload_bytes_saved", self.upload_bytes_saved.get()),
+            ("esdllm_kv_upload_bytes", self.kv_upload_bytes.get()),
+            ("esdllm_ind_upload_bytes", self.ind_upload_bytes.get()),
+            ("esdllm_conf_upload_bytes", self.conf_upload_bytes.get()),
+            ("esdllm_token_upload_bytes", self.token_upload_bytes.get()),
+            ("esdllm_full_kv_uploads", self.full_kv_uploads.get()),
+            ("esdllm_resident_reuses", self.resident_reuses.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -249,6 +272,11 @@ impl Metrics {
         out.push_str(&format!(
             "esdllm_slot_busy_seconds {:.3}\n",
             self.slot_busy_seconds.get_secs()
+        ));
+        let ticks = self.ticks_total.get().max(1);
+        out.push_str(&format!(
+            "esdllm_upload_bytes_per_tick {:.1}\n",
+            self.upload_bytes.get() as f64 / ticks as f64
         ));
         out.push_str(&format!("esdllm_slot_occupancy {:.4}\n", self.slot_occupancy()));
         out.push_str(&format!(
@@ -282,11 +310,18 @@ mod tests {
         m.start_clock();
         m.requests_total.inc();
         m.tokens_generated.add(32);
+        m.upload_bytes.add(1024);
+        m.upload_bytes_saved.add(4096);
+        m.full_kv_uploads.inc();
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
         assert!(text.contains("esdllm_active_slots 0"));
         assert!(text.contains("esdllm_slot_occupancy"));
+        assert!(text.contains("esdllm_upload_bytes 1024"));
+        assert!(text.contains("esdllm_upload_bytes_saved 4096"));
+        assert!(text.contains("esdllm_full_kv_uploads 1"));
+        assert!(text.contains("esdllm_upload_bytes_per_tick"));
     }
 
     #[test]

@@ -328,8 +328,24 @@ fn tick_once(
 ) -> bool {
     let busy = sched.active();
     let before = (sched.n_prefill, sched.n_dual, sched.n_es);
+    let tr_before = sched.transfer_stats();
     let t0 = Instant::now();
-    match sched.tick() {
+    let tick_result = sched.tick();
+    // resident-cache transfer accounting: this tick's ledger delta.
+    // Pumped on both arms — a failed tick may already have synced and
+    // recorded bytes, and the next snapshot would silently swallow them.
+    let tr = sched.transfer_stats().since(&tr_before);
+    metrics.upload_bytes.add(tr.upload_bytes);
+    metrics.upload_bytes_saved.add(tr.upload_bytes_saved);
+    metrics
+        .kv_upload_bytes
+        .add(tr.kv_upload_bytes + tr.kv_sparse_upload_bytes);
+    metrics.ind_upload_bytes.add(tr.ind_upload_bytes);
+    metrics.conf_upload_bytes.add(tr.conf_upload_bytes);
+    metrics.token_upload_bytes.add(tr.token_upload_bytes);
+    metrics.full_kv_uploads.add(tr.full_kv_uploads);
+    metrics.resident_reuses.add(tr.resident_reuses);
+    match tick_result {
         Ok(finished) => {
             metrics.ticks_total.inc();
             metrics.slot_busy_seconds.add_secs(t0.elapsed().as_secs_f64() * busy as f64);
@@ -491,6 +507,12 @@ mod tests {
         assert_eq!(reply.text, "1+2=", "sim echoes the prompt");
         assert!(reply.iterations > 0);
         assert!(reply.tokens > 0);
+        // the resident-cache ledger reached the serving metrics: one
+        // residency seed, then steady-state steps reuse the device copy
+        assert!(router.metrics.upload_bytes.get() > 0);
+        assert_eq!(router.metrics.full_kv_uploads.get(), 1);
+        assert!(router.metrics.upload_bytes_saved.get() > 0);
+        assert!(router.metrics.resident_reuses.get() > 0);
         router.shutdown();
     }
 

@@ -7,6 +7,7 @@
 //! (the CPU client is cheap). The coordinator communicates with workers
 //! over channels, never sharing runtime objects.
 
+pub mod resident;
 pub mod tensor;
 
 use std::cell::RefCell;
@@ -19,7 +20,8 @@ use anyhow::{anyhow, Context, Result};
 use crate::manifest::{ArchSpec, DType, ExeSpec, Manifest};
 use crate::tokenizer::Tokenizer;
 use crate::weights::Checkpoint;
-use tensor::HostTensor;
+use resident::TransferStats;
+use tensor::{HostTensor, TensorView};
 
 pub struct Runtime {
     pub manifest: Manifest,
@@ -34,10 +36,16 @@ pub struct Runtime {
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub executions: u64,
+    /// bytes physically uploaded through this runtime (the PJRT CPU
+    /// client re-ships a whole buffer whenever any of it changed)
     pub upload_bytes: u64,
     pub download_bytes: u64,
     pub exec_seconds: f64,
     pub transfer_seconds: f64,
+    /// logical per-kind ledger from the resident-cache planner: what a
+    /// delta-capable transport ships, and what residency saved vs the
+    /// clone-and-reupload baseline (see [`resident::TransferStats`])
+    pub transfer: TransferStats,
 }
 
 impl Runtime {
@@ -135,36 +143,77 @@ impl Runtime {
         &self,
         t: &HostTensor,
     ) -> Result<(xla::PjRtBuffer, Option<xla::Literal>)> {
-        let dims = t.shape().to_vec();
-        match t {
-            HostTensor::F32 { data, .. } => self
-                .client
-                .buffer_from_host_buffer::<f32>(data, &dims, None)
-                .map(|b| (b, None))
-                .map_err(|e| anyhow!("upload: {e}")),
-            HostTensor::I32 { data, .. } => self
-                .client
-                .buffer_from_host_buffer::<i32>(data, &dims, None)
-                .map(|b| (b, None))
-                .map_err(|e| anyhow!("upload: {e}")),
-            HostTensor::Bf16 { data, .. } => {
-                let mut bytes = Vec::with_capacity(data.len() * 2);
-                for v in data {
-                    bytes.extend_from_slice(&v.to_le_bytes());
-                }
-                let lit = xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::Bf16,
-                    &dims,
-                    &bytes,
-                )
-                .map_err(|e| anyhow!("bf16 literal: {e}"))?;
+        self.upload_tensor_view(&t.view())
+    }
+
+    /// Borrowed-view upload: streams straight from the caller's storage
+    /// (a cache vector or a pooled scratch buffer) with no host-side
+    /// clone. Counts the physical bytes and time into [`RuntimeStats`].
+    pub fn upload_tensor_view(
+        &self,
+        t: &TensorView<'_>,
+    ) -> Result<(xla::PjRtBuffer, Option<xla::Literal>)> {
+        let t0 = std::time::Instant::now();
+        let dims = t.shape();
+        let out = match t {
+            TensorView::F32 { data, .. } => {
+                let buf = self
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, dims, None)
+                    .map_err(|e| anyhow!("upload: {e}"))?;
+                (buf, None)
+            }
+            TensorView::I32 { data, .. } => {
+                let buf = self
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None)
+                    .map_err(|e| anyhow!("upload: {e}"))?;
+                (buf, None)
+            }
+            TensorView::Bf16 { data, .. } => {
+                // bf16 bits travel as raw little-endian bytes. On an LE
+                // host the u16 buffer already IS that byte sequence, so
+                // reinterpret in place — re-materializing the bytes here
+                // would silently reintroduce the full-tensor copy the
+                // resident-cache layer exists to remove.
+                #[cfg(target_endian = "little")]
+                let lit = {
+                    // SAFETY: u8 has alignment 1 and no validity
+                    // invariants, so viewing a u16 slice's memory as
+                    // bytes is always sound; with an align-1 target the
+                    // prefix/suffix returned by align_to are empty.
+                    let bytes: &[u8] = unsafe { data.align_to::<u8>().1 };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::Bf16,
+                        dims,
+                        bytes,
+                    )
+                    .map_err(|e| anyhow!("bf16 literal: {e}"))?
+                };
+                #[cfg(target_endian = "big")]
+                let lit = {
+                    let mut bytes = Vec::with_capacity(data.len() * 2);
+                    for v in data.iter() {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::Bf16,
+                        dims,
+                        &bytes,
+                    )
+                    .map_err(|e| anyhow!("bf16 literal: {e}"))?
+                };
                 let buf = self
                     .client
                     .buffer_from_host_literal(None, &lit)
                     .map_err(|e| anyhow!("upload: {e}"))?;
-                Ok((buf, Some(lit)))
+                (buf, Some(lit))
             }
-        }
+        };
+        let mut st = self.stats.borrow_mut();
+        st.upload_bytes += t.byte_len() as u64;
+        st.transfer_seconds += t0.elapsed().as_secs_f64();
+        Ok(out)
     }
 
     fn literal_to_host(&self, lit: &xla::Literal, sig_dtype: DType) -> Result<HostTensor> {
@@ -203,37 +252,67 @@ impl Runtime {
         checkpoint: &str,
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
-        if inputs.len() != exe.inputs.len() {
+        let args: Vec<ExecArg<'_>> = inputs.iter().map(|t| ExecArg::Host(t.view())).collect();
+        self.run_args(arch, exe, checkpoint, &args)
+    }
+
+    /// Lower-level execution entry: each argument is either a borrowed
+    /// host view uploaded this call, or a device buffer retained from an
+    /// earlier upload by the resident-cache layer (zero host↔device
+    /// traffic). The step hot path uses this to avoid the historical
+    /// full-tensor host clones and re-uploads.
+    pub fn run_args(
+        &self,
+        arch: &ArchSpec,
+        exe: &ExeSpec,
+        checkpoint: &str,
+        args: &[ExecArg<'_>],
+    ) -> Result<Vec<HostTensor>> {
+        if args.len() != exe.inputs.len() {
             return Err(anyhow!(
                 "{}: expected {} inputs, got {}",
                 exe.name,
                 exe.inputs.len(),
-                inputs.len()
+                args.len()
             ));
         }
-        for (t, sig) in inputs.iter().zip(&exe.inputs) {
-            if t.shape() != sig.shape.as_slice() || t.dtype() != sig.dtype {
-                return Err(anyhow!(
-                    "{}: input {} shape/dtype mismatch: got {:?} {:?}, want {:?} {:?}",
-                    exe.name, sig.name, t.shape(), t.dtype(), sig.shape, sig.dtype
-                ));
+        for (a, sig) in args.iter().zip(&exe.inputs) {
+            // resident device buffers carry no host-side shape to check;
+            // the planner that retained them is responsible for key match
+            if let ExecArg::Host(v) = a {
+                if v.shape() != sig.shape.as_slice() || v.dtype() != sig.dtype {
+                    return Err(anyhow!(
+                        "{}: input {} shape/dtype mismatch: got {:?} {:?}, want {:?} {:?}",
+                        exe.name, sig.name, v.shape(), v.dtype(), sig.shape, sig.dtype
+                    ));
+                }
             }
         }
         let compiled = self.executable(arch, exe)?;
         let params = self.checkpoint_params(arch, checkpoint)?;
 
-        let t_up = std::time::Instant::now();
         // keep bf16 literals alive until after execution (async H2D copy)
-        let uploads: Vec<(xla::PjRtBuffer, Option<xla::Literal>)> =
-            inputs.iter().map(|t| self.upload_tensor(t)).collect::<Result<_>>()?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(params.len() + inputs.len());
-        args.extend(params.iter());
-        args.extend(uploads.iter().map(|(b, _)| b));
-        let upload_s = t_up.elapsed().as_secs_f64();
+        let mut fresh: Vec<Option<(xla::PjRtBuffer, Option<xla::Literal>)>> =
+            Vec::with_capacity(args.len());
+        for a in args {
+            fresh.push(match a {
+                ExecArg::Host(v) => Some(self.upload_tensor_view(v)?),
+                ExecArg::Device(_) => None,
+            });
+        }
+        let mut argrefs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(params.len() + args.len());
+        argrefs.extend(params.iter());
+        for (a, f) in args.iter().zip(&fresh) {
+            argrefs.push(match a {
+                ExecArg::Device(buf) => *buf,
+                ExecArg::Host(_) => &f.as_ref().expect("host arg uploaded").0,
+            });
+        }
 
         let t_exec = std::time::Instant::now();
         let out = compiled
-            .execute_b::<&xla::PjRtBuffer>(&args)
+            .execute_b::<&xla::PjRtBuffer>(&argrefs)
             .map_err(|e| anyhow!("execute {}: {e}", exe.name))?;
         let exec_s = t_exec.elapsed().as_secs_f64();
 
@@ -259,18 +338,30 @@ impl Runtime {
 
         let mut st = self.stats.borrow_mut();
         st.executions += 1;
-        st.upload_bytes +=
-            inputs.iter().map(|t| (t.elements() * t.dtype().bytes()) as u64).sum::<u64>();
         st.download_bytes +=
             outputs.iter().map(|t| (t.elements() * t.dtype().bytes()) as u64).sum::<u64>();
         st.exec_seconds += exec_s;
-        st.transfer_seconds += upload_s + download_s;
+        st.transfer_seconds += download_s;
         Ok(outputs)
+    }
+
+    /// Merge a resident-planner ledger delta into this runtime's stats
+    /// (so `take_stats` reports the logical transfer picture alongside
+    /// the physical byte counters).
+    pub fn note_transfer(&self, delta: &TransferStats) {
+        self.stats.borrow_mut().transfer.merge(delta);
     }
 
     pub fn take_stats(&self) -> RuntimeStats {
         std::mem::take(&mut *self.stats.borrow_mut())
     }
+}
+
+/// One executable input: a borrowed host view (uploaded this call) or a
+/// device buffer retained by the resident-cache layer.
+pub enum ExecArg<'a> {
+    Host(TensorView<'a>),
+    Device(&'a xla::PjRtBuffer),
 }
 
 /// Locate the artifacts directory: $ESDLLM_ARTIFACTS or ./artifacts.

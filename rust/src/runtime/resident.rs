@@ -1,0 +1,608 @@
+//! Device-resident group caches: the planning/accounting layer that
+//! keeps KV, indicator, and confidence state on the device between
+//! scheduler ticks instead of re-shipping it every executable run.
+//!
+//! The pre-resident step path cloned the entire group KV on the host,
+//! uploaded all of it, ran the step, downloaded the block outputs, and
+//! scattered them back into host vectors — every tick, for every
+//! co-resident slot. Early-skipping reduces FLOPs but none of that byte
+//! traffic, which is exactly the measured-speedup gap `perf_hotpath`
+//! documents. This module closes it:
+//!
+//!   * [`DeviceGroupCaches`] owns a **buffer pool** (persistent staging
+//!     tensors for step/prefill tokens, the gathered indicator input and
+//!     the occupancy-masked confidence input — allocations live for the
+//!     backend's lifetime) plus the **retained device handles** for the
+//!     big cache inputs, and a [`TransferStats`] ledger;
+//!   * every `sync_*` call consults the dirty bitmaps maintained by
+//!     [`crate::cache::GroupCaches`] and ships only the rows the host
+//!     actually mutated since the resident copy was last refreshed
+//!     (delta transfer), clearing the bits it ships;
+//!   * [`ApplyMode::Device`] models a transport that applies executable
+//!     outputs (the KV/indicator block scatters, the prefill row merges)
+//!     to the resident copy on-device — the outputs never left the
+//!     device, so `note_*_applied` clears their dirty bits and the
+//!     steady-state step uploads **zero** KV/indicator bytes. The
+//!     deterministic sim backend runs in this mode, which is how the
+//!     transfer win is measured and asserted without PJRT artifacts;
+//!   * [`ApplyMode::Host`] is today's PJRT reality: outputs land in the
+//!     host mirror only, so their rows stay dirty and re-ship as a
+//!     *delta* (block rows, not the full tensor) on the next sync. A
+//!     future device-side scatter executable upgrades the PJRT transport
+//!     to `Device` mode with no scheduler changes.
+//!
+//! Confidence is host-computed (softmax over downloaded logits) and the
+//! rebuild of the pruned sparse KV is host-side top-k, so those rows are
+//! honestly host-originated in both modes and re-ship as deltas. The
+//! occupancy mask applied to the confidence input is modelled as a
+//! device-side op (a real transport ships a `batch`-bit mask, not the
+//! tensor).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{DirtyBitmap, GroupCaches};
+use crate::manifest::Dims;
+use crate::runtime::tensor::HostTensor;
+
+/// The one copy of the sync-planning invariant: an unseeded kind ships
+/// its whole resident payload and clears everything; a seeded kind ships
+/// (and clears) exactly the dirty rows of the reading slots. Clearing a
+/// bit is a promise that the device copy now matches the host — callers
+/// that fail to deliver the shipped bytes must
+/// [`DeviceGroupCaches::invalidate`] to take the promise back.
+fn plan_sync(
+    bm: &mut DirtyBitmap,
+    seeded: &mut bool,
+    slots: &[usize],
+    row_bytes: u64,
+    seed_bytes: u64,
+) -> u64 {
+    if !*seeded {
+        *seeded = true;
+        bm.clear_all();
+        seed_bytes
+    } else {
+        let mut rows = 0usize;
+        for &b in slots {
+            rows += bm.count_slot(b);
+            bm.clear_slot(b);
+        }
+        rows as u64 * row_bytes
+    }
+}
+
+/// Which logical input a transfer belongs to (per-kind accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TransferKind {
+    Kv,
+    KvSparse,
+    Ind,
+    Conf,
+    Tokens,
+}
+
+/// Logical host→device transfer ledger. "Logical" bytes are what a
+/// delta-capable transport ships; `upload_bytes_saved` is the difference
+/// against the clone-and-reupload baseline (the full tensor every call).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TransferStats {
+    pub upload_bytes: u64,
+    pub upload_bytes_saved: u64,
+    pub kv_upload_bytes: u64,
+    pub kv_sparse_upload_bytes: u64,
+    pub ind_upload_bytes: u64,
+    pub conf_upload_bytes: u64,
+    pub token_upload_bytes: u64,
+    /// syncs that shipped an entire KV tensor (dense or sparse)
+    pub full_kv_uploads: u64,
+    /// syncs served entirely from the resident copy (zero bytes shipped)
+    pub resident_reuses: u64,
+}
+
+impl TransferStats {
+    pub fn record(&mut self, kind: TransferKind, shipped: u64, full: u64) {
+        self.upload_bytes += shipped;
+        self.upload_bytes_saved += full.saturating_sub(shipped);
+        if shipped == 0 && full > 0 {
+            self.resident_reuses += 1;
+        }
+        match kind {
+            TransferKind::Kv => {
+                self.kv_upload_bytes += shipped;
+                if full > 0 && shipped >= full {
+                    self.full_kv_uploads += 1;
+                }
+            }
+            TransferKind::KvSparse => {
+                self.kv_sparse_upload_bytes += shipped;
+                if full > 0 && shipped >= full {
+                    self.full_kv_uploads += 1;
+                }
+            }
+            TransferKind::Ind => self.ind_upload_bytes += shipped,
+            TransferKind::Conf => self.conf_upload_bytes += shipped,
+            TransferKind::Tokens => self.token_upload_bytes += shipped,
+        }
+    }
+
+    /// Field-wise accumulate of another ledger (or a ledger delta).
+    pub fn merge(&mut self, d: &TransferStats) {
+        self.upload_bytes += d.upload_bytes;
+        self.upload_bytes_saved += d.upload_bytes_saved;
+        self.kv_upload_bytes += d.kv_upload_bytes;
+        self.kv_sparse_upload_bytes += d.kv_sparse_upload_bytes;
+        self.ind_upload_bytes += d.ind_upload_bytes;
+        self.conf_upload_bytes += d.conf_upload_bytes;
+        self.token_upload_bytes += d.token_upload_bytes;
+        self.full_kv_uploads += d.full_kv_uploads;
+        self.resident_reuses += d.resident_reuses;
+    }
+
+    /// Field-wise delta against an earlier snapshot of the same ledger.
+    pub fn since(&self, earlier: &TransferStats) -> TransferStats {
+        TransferStats {
+            upload_bytes: self.upload_bytes.saturating_sub(earlier.upload_bytes),
+            upload_bytes_saved: self
+                .upload_bytes_saved
+                .saturating_sub(earlier.upload_bytes_saved),
+            kv_upload_bytes: self.kv_upload_bytes.saturating_sub(earlier.kv_upload_bytes),
+            kv_sparse_upload_bytes: self
+                .kv_sparse_upload_bytes
+                .saturating_sub(earlier.kv_sparse_upload_bytes),
+            ind_upload_bytes: self.ind_upload_bytes.saturating_sub(earlier.ind_upload_bytes),
+            conf_upload_bytes: self
+                .conf_upload_bytes
+                .saturating_sub(earlier.conf_upload_bytes),
+            token_upload_bytes: self
+                .token_upload_bytes
+                .saturating_sub(earlier.token_upload_bytes),
+            full_kv_uploads: self.full_kv_uploads.saturating_sub(earlier.full_kv_uploads),
+            resident_reuses: self.resident_reuses.saturating_sub(earlier.resident_reuses),
+        }
+    }
+}
+
+/// Outcome of one input sync: bytes shipped vs the full-tensor baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct SyncOutcome {
+    pub shipped: u64,
+    pub full: u64,
+}
+
+/// How executable outputs reach the resident device copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApplyMode {
+    /// Outputs are applied to the resident copy on-device (they were
+    /// produced there); the mirrored host scatter leaves nothing to
+    /// re-upload. Used by the sim/virtual transport; the PJRT transport
+    /// graduates to this once device-side scatter executables exist.
+    Device,
+    /// Outputs land only in the host mirror; the scattered rows stay
+    /// dirty and re-ship as a delta on the next sync (the stateless-
+    /// executable PJRT transport today).
+    Host,
+}
+
+/// A retained device-side upload: the PJRT buffer plus the backing
+/// literal that must outlive it (async H2D copy — see
+/// [`crate::runtime::Runtime::upload_tensor`]).
+pub struct UploadHandle {
+    pub buf: xla::PjRtBuffer,
+    pub lit: Option<xla::Literal>,
+}
+
+/// Per-kind retained device buffers. An entry is reusable only while the
+/// sync planner reports zero dirty rows for the reading slots *and* the
+/// derived-input key (gathered layer set, occupancy-mask slot set) still
+/// matches what the buffer was built for.
+#[derive(Default)]
+pub struct ResidentHandles {
+    pub kv: Option<UploadHandle>,
+    pub kv_sparse: Option<UploadHandle>,
+    /// keyed by (indicator name, gathered layers)
+    pub ind: Option<(String, Vec<usize>, UploadHandle)>,
+    /// keyed by the slot set the occupancy mask was built for
+    pub conf: Option<(Vec<usize>, UploadHandle)>,
+}
+
+/// The resident-cache layer for one batch group: buffer pool + dirty-
+/// delta sync planner + retained device handles + transfer ledger.
+pub struct DeviceGroupCaches {
+    dims: Dims,
+    batch: usize,
+    apply: ApplyMode,
+    kv_seeded: bool,
+    kv_sparse_seeded: bool,
+    ind_seeded: BTreeMap<String, bool>,
+    conf_seeded: bool,
+    /// pooled step-token staging [B, block] (i32); rows outside the
+    /// stepped slots keep stale contents — garbage-tolerant by the
+    /// row-filtered-merge contract
+    pub step_tokens: HostTensor,
+    /// pooled prefill-token staging [B, ctx] (i32); only the refreshed
+    /// slots' rows are copied per call
+    pub prefill_tokens: HostTensor,
+    /// pooled gathered-indicator input [n_ind, B, gen, d] (bf16)
+    pub ind_gather: HostTensor,
+    /// pooled occupancy-masked confidence input [B, gen] (f32)
+    pub conf_masked: HostTensor,
+    pub handles: ResidentHandles,
+    pub stats: TransferStats,
+}
+
+impl DeviceGroupCaches {
+    pub fn new(dims: &Dims, batch: usize, apply: ApplyMode) -> DeviceGroupCaches {
+        DeviceGroupCaches {
+            dims: *dims,
+            batch,
+            apply,
+            kv_seeded: false,
+            kv_sparse_seeded: false,
+            ind_seeded: BTreeMap::new(),
+            conf_seeded: false,
+            step_tokens: HostTensor::I32 { shape: vec![batch, 0], data: Vec::new() },
+            prefill_tokens: HostTensor::I32 {
+                shape: vec![batch, dims.ctx],
+                data: vec![0i32; batch * dims.ctx],
+            },
+            ind_gather: HostTensor::Bf16 { shape: Vec::new(), data: Vec::new() },
+            conf_masked: HostTensor::F32 {
+                shape: vec![batch, dims.gen_len],
+                data: vec![-1.0f32; batch * dims.gen_len],
+            },
+            handles: ResidentHandles::default(),
+            stats: TransferStats::default(),
+        }
+    }
+
+    pub fn apply_mode(&self) -> ApplyMode {
+        self.apply
+    }
+
+    /// Stage the prefill token upload: copy only the refreshed slots'
+    /// context rows into the persistent [B, ctx] buffer (the other rows
+    /// are garbage-tolerant — their prefill outputs are discarded by the
+    /// row-filtered merges).
+    pub fn stage_prefill_tokens(&mut self, tokens: &[i32], slots: &[usize]) -> SyncOutcome {
+        let ctx = self.dims.ctx;
+        if let HostTensor::I32 { data, .. } = &mut self.prefill_tokens {
+            for &b in slots {
+                data[b * ctx..(b + 1) * ctx]
+                    .copy_from_slice(&tokens[b * ctx..(b + 1) * ctx]);
+            }
+        }
+        let out = SyncOutcome {
+            shipped: (slots.len() * ctx * 4) as u64,
+            full: (self.batch * ctx * 4) as u64,
+        };
+        self.stats.record(TransferKind::Tokens, out.shipped, out.full);
+        out
+    }
+
+    /// Stage the step's block-token input [B, block] for the stepped
+    /// slots (reusing the pooled allocation).
+    pub fn stage_step_tokens(
+        &mut self,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+    ) -> SyncOutcome {
+        let ctx = self.dims.ctx;
+        let batch = self.batch;
+        if let HostTensor::I32 { shape, data } = &mut self.step_tokens {
+            shape.clear();
+            shape.extend_from_slice(&[batch, block]);
+            data.resize(batch * block, 0);
+            for &b in slots {
+                let src = b * ctx + block_start;
+                data[b * block..(b + 1) * block]
+                    .copy_from_slice(&tokens[src..src + block]);
+            }
+        }
+        let out = SyncOutcome {
+            shipped: (slots.len() * block * 4) as u64,
+            full: (batch * block * 4) as u64,
+        };
+        self.stats.record(TransferKind::Tokens, out.shipped, out.full);
+        out
+    }
+
+    /// Sync the dense KV input for a step reading `slots`' rows. First
+    /// touch seeds the whole tensor; afterwards only rows the host
+    /// mutated since the resident copy was refreshed are shipped (and
+    /// their dirty bits cleared). In steady state under
+    /// [`ApplyMode::Device`] nothing ships.
+    pub fn sync_kv(&mut self, caches: &mut GroupCaches, slots: &[usize]) -> SyncOutcome {
+        let full = caches.kv_bytes() as u64;
+        let row = caches.kv_row_bytes() as u64;
+        let shipped = plan_sync(&mut caches.dirty.kv, &mut self.kv_seeded, slots, row, full);
+        let out = SyncOutcome { shipped, full };
+        self.stats.record(TransferKind::Kv, shipped, full);
+        out
+    }
+
+    /// Same for the pruned sparse KV input.
+    pub fn sync_kv_sparse(
+        &mut self,
+        caches: &mut GroupCaches,
+        slots: &[usize],
+    ) -> Result<SyncOutcome> {
+        if caches.kv_sparse.is_none() {
+            return Err(anyhow!("no sparse cache"));
+        }
+        let full = caches.kv_sparse_bytes() as u64;
+        let row = caches.kv_sparse_row_bytes() as u64;
+        let bm = caches
+            .dirty
+            .kv_sparse
+            .as_mut()
+            .ok_or_else(|| anyhow!("sparse cache has no dirty bitmap"))?;
+        let shipped = plan_sync(bm, &mut self.kv_sparse_seeded, slots, row, full);
+        let out = SyncOutcome { shipped, full };
+        self.stats.record(TransferKind::KvSparse, shipped, full);
+        Ok(out)
+    }
+
+    /// Sync accounting for the indicator input of `indicator` over
+    /// `layers` (the pooled gather tensor is NOT rebuilt here — callers
+    /// stage it via [`GroupCaches::gather_ind_into`] only when they
+    /// actually upload, so a reused resident buffer costs zero host
+    /// work). The resident model keeps the full per-name cache (all
+    /// layers) on device with the layer gather as a device-side op, so:
+    /// the seed ships the whole per-name cache, a dirty row re-ships
+    /// across **all** layers (the bitmap is layer-collapsed), and the
+    /// savings baseline is the gathered tensor the clone-per-step path
+    /// used to upload.
+    pub fn sync_ind(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        layers: &[usize],
+        slots: &[usize],
+    ) -> Result<SyncOutcome> {
+        let n_ind = layers.len().max(1);
+        let per_layer = self.batch * self.dims.gen_len * self.dims.d_model * 2;
+        // what the pre-resident path shipped every step (the gather)
+        let baseline = (n_ind * per_layer) as u64;
+        // what the resident copy holds (every layer of the cache)
+        let cache_full = (self.dims.n_layers * per_layer) as u64;
+        let row = caches.ind_row_bytes(self.dims.n_layers) as u64;
+        if !self.ind_seeded.contains_key(indicator) {
+            self.ind_seeded.insert(indicator.to_string(), false);
+        }
+        let seeded = self.ind_seeded.get_mut(indicator).expect("just inserted");
+        let bm = caches
+            .dirty
+            .ind
+            .get_mut(indicator)
+            .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
+        let shipped = plan_sync(bm, seeded, slots, row, cache_full);
+        let out = SyncOutcome { shipped, full: baseline };
+        self.stats.record(TransferKind::Ind, shipped, baseline);
+        Ok(out)
+    }
+
+    /// Sync accounting for the confidence input (callers rebuild the
+    /// pooled occupancy-masked tensor via
+    /// [`GroupCaches::conf_masked_into`] only when they upload).
+    /// Confidence rows are host-computed, so the stepped slots' freshly
+    /// merged rows ship every tick — but that is `B × gen × 4` bytes,
+    /// noise next to the KV tensor this layer keeps resident.
+    pub fn sync_conf_masked(
+        &mut self,
+        caches: &mut GroupCaches,
+        slots: &[usize],
+    ) -> SyncOutcome {
+        let full = (self.batch * self.dims.gen_len * 4) as u64;
+        let shipped = plan_sync(&mut caches.dirty.conf, &mut self.conf_seeded, slots, 4, full);
+        let out = SyncOutcome { shipped, full };
+        self.stats.record(TransferKind::Conf, shipped, full);
+        out
+    }
+
+    /// Forget everything the device supposedly holds: drop every
+    /// retained handle, reset the seeded flags, and mark the entire host
+    /// state dirty. Called after a failed upload/execute — the sync
+    /// planner cleared bits (a promise that the device copy matches the
+    /// host) for a transfer that never completed, so the promise must be
+    /// taken back wholesale. The next syncs re-seed, so the ledger stays
+    /// conservative (it may double-count the failed step's bytes, never
+    /// undercount the re-sync).
+    pub fn invalidate(&mut self, caches: &mut GroupCaches) {
+        self.kv_seeded = false;
+        self.kv_sparse_seeded = false;
+        self.ind_seeded.clear();
+        self.conf_seeded = false;
+        self.handles = ResidentHandles::default();
+        for b in 0..self.batch {
+            caches.dirty.kv.mark_slot(b);
+            for bm in caches.dirty.ind.values_mut() {
+                bm.mark_slot(b);
+            }
+            caches.dirty.conf.mark_slot(b);
+            if let Some(bm) = caches.dirty.kv_sparse.as_mut() {
+                bm.mark_slot(b);
+            }
+        }
+    }
+
+    /// A step's outputs (KV block + indicator block) were scattered into
+    /// the host mirror for `slots`. Under [`ApplyMode::Device`] the same
+    /// row-filtered scatter ran on the resident copy (the outputs were
+    /// already on device), so those rows are back in sync.
+    pub fn note_step_applied(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        sparse: bool,
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+    ) {
+        if self.apply != ApplyMode::Device {
+            return;
+        }
+        let g0 = block_start - self.dims.prompt_len;
+        for &b in slots {
+            if sparse {
+                if let (Some(bm), Some(sp)) =
+                    (caches.dirty.kv_sparse.as_mut(), caches.kv_sparse.as_ref())
+                {
+                    let row0 = sp.keep_prompt + g0;
+                    bm.clear_range(b, row0, row0 + block);
+                }
+            } else {
+                caches.dirty.kv.clear_range(b, block_start, block_start + block);
+            }
+            if let Some(bm) = caches.dirty.ind.get_mut(indicator) {
+                bm.clear_range(b, g0, g0 + block);
+            }
+        }
+    }
+
+    /// A prefill's outputs (full KV + all indicator caches) were merged
+    /// into the host mirror for `slots`; under [`ApplyMode::Device`] the
+    /// resident copy received the same row-filtered merge. Confidence
+    /// stays dirty (host-computed from the downloaded logits), as does a
+    /// sparse rebuild (host-side top-k).
+    pub fn note_prefill_applied(&mut self, caches: &mut GroupCaches, slots: &[usize]) {
+        if self.apply != ApplyMode::Device {
+            return;
+        }
+        for &b in slots {
+            caches.dirty.kv.clear_slot(b);
+            for bm in caches.dirty.ind.values_mut() {
+                bm.clear_slot(b);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::HostTensor;
+
+    fn dims() -> Dims {
+        Dims {
+            vocab: 8, d_model: 4, n_layers: 2, n_heads: 2, n_kv_heads: 1,
+            d_ff: 8, head_dim: 2, prompt_len: 4, gen_len: 4, ctx: 8,
+        }
+    }
+
+    fn kv_block_tensor(d: &Dims, batch: usize, block: usize) -> HostTensor {
+        let n = d.n_layers * 2 * batch * d.n_kv_heads * block * d.head_dim;
+        HostTensor::Bf16 {
+            shape: vec![d.n_layers, 2, batch, d.n_kv_heads, block, d.head_dim],
+            data: vec![1u16; n],
+        }
+    }
+
+    #[test]
+    fn first_sync_seeds_then_device_apply_keeps_kv_clean() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let slots = [0usize, 1];
+
+        let seed = r.sync_kv(&mut c, &slots);
+        assert_eq!(seed.shipped, c.kv_bytes() as u64, "first touch ships all");
+        assert_eq!(r.stats.full_kv_uploads, 1);
+
+        // a step: scatter outputs (marks), then device-apply (clears)
+        let block = 2;
+        let t = kv_block_tensor(&d, 2, block);
+        c.scatter_kv_block_slots(4, block, &t, &slots).unwrap();
+        r.note_step_applied(&mut c, "h", false, 4, block, &slots);
+        let steady = r.sync_kv(&mut c, &slots);
+        assert_eq!(steady.shipped, 0, "steady state uploads no KV bytes");
+        assert_eq!(r.stats.full_kv_uploads, 1, "no further full uploads");
+        assert!(r.stats.upload_bytes_saved >= c.kv_bytes() as u64);
+        assert_eq!(r.stats.resident_reuses, 1);
+    }
+
+    // The Host-apply delta behavior (a step's own scatter re-ships
+    // exactly the dirty rows) is asserted end-to-end in
+    // tests/transfer_accounting.rs.
+
+    #[test]
+    fn admission_reset_dirties_one_slot_and_prefill_apply_clears_it() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        r.sync_kv(&mut c, &[0, 1]);
+        let _ = r.sync_ind(&mut c, "h", &[0, 1], &[0, 1]).unwrap();
+
+        c.reset_slot(1); // mid-flight admission
+        assert_eq!(c.dirty.kv.count_slot(1), d.ctx);
+        assert_eq!(c.dirty.kv.count_slot(0), 0, "exactly one slot dirtied");
+
+        // the admitted slot's grounding prefill regenerates its rows on
+        // device — no upload needed
+        r.note_prefill_applied(&mut c, &[1]);
+        assert_eq!(c.dirty.kv.count_slot(1), 0);
+        let after = r.sync_kv(&mut c, &[0, 1]);
+        assert_eq!(after.shipped, 0);
+    }
+
+    #[test]
+    fn pooled_staging_copies_only_requested_rows() {
+        let d = dims();
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let mut tokens = vec![0i32; 2 * d.ctx];
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = i as i32;
+        }
+        let out = r.stage_prefill_tokens(&tokens, &[1]);
+        assert_eq!(out.shipped, (d.ctx * 4) as u64);
+        assert_eq!(out.full, (2 * d.ctx * 4) as u64);
+        let data = r.prefill_tokens.as_i32().unwrap();
+        assert_eq!(data[d.ctx], d.ctx as i32, "slot 1 row copied");
+        assert_eq!(data[0], 0, "slot 0 row untouched");
+
+        let s = r.stage_step_tokens(&tokens, d.prompt_len, 2, &[0]);
+        assert_eq!(s.shipped, 8);
+        assert_eq!(r.step_tokens.shape(), &[2, 2]);
+        assert_eq!(
+            r.step_tokens.as_i32().unwrap()[0],
+            d.prompt_len as i32,
+            "block tokens staged from block_start"
+        );
+    }
+
+    #[test]
+    fn invalidate_takes_back_the_cleared_bit_promise() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Host);
+        r.sync_kv(&mut c, &[0, 1]);
+        let _ = r.sync_ind(&mut c, "h", &[0, 1], &[0, 1]).unwrap();
+        assert_eq!(c.dirty.kv.count(), 0);
+
+        // a failed upload/execute: the planner's clears must be undone
+        r.invalidate(&mut c);
+        assert_eq!(c.dirty.kv.count(), 2 * d.ctx, "everything dirty again");
+        assert!(r.handles.kv.is_none() && r.handles.ind.is_none());
+        let reseed = r.sync_kv(&mut c, &[0, 1]);
+        assert_eq!(reseed.shipped, c.kv_bytes() as u64, "next sync re-seeds");
+        assert_eq!(r.stats.full_kv_uploads, 2);
+    }
+
+    #[test]
+    fn transfer_stats_since_is_fieldwise() {
+        let mut a = TransferStats::default();
+        a.record(TransferKind::Kv, 100, 100);
+        let snap = a;
+        a.record(TransferKind::Conf, 4, 16);
+        a.record(TransferKind::Kv, 0, 100);
+        let delta = a.since(&snap);
+        assert_eq!(delta.conf_upload_bytes, 4);
+        assert_eq!(delta.upload_bytes, 4);
+        assert_eq!(delta.upload_bytes_saved, 112);
+        assert_eq!(delta.full_kv_uploads, 0);
+        assert_eq!(delta.resident_reuses, 1);
+    }
+}

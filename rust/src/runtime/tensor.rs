@@ -89,6 +89,86 @@ impl HostTensor {
     }
 }
 
+/// Inline fixed-capacity tensor shape (everything here is ≤ 6-D), so
+/// building a view never heap-allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeVec {
+    len: u8,
+    dims: [usize; 8],
+}
+
+impl ShapeVec {
+    /// Panics if the rank exceeds the inline capacity of 8.
+    pub fn from_slice(s: &[usize]) -> ShapeVec {
+        assert!(s.len() <= 8, "tensor rank {} exceeds ShapeVec capacity", s.len());
+        let mut dims = [0usize; 8];
+        dims[..s.len()].copy_from_slice(s);
+        ShapeVec { len: s.len() as u8, dims }
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.len as usize]
+    }
+}
+
+/// Borrowed view of host tensor data crossing the upload boundary.
+///
+/// The step hot path uploads multi-megabyte cache tensors every tick;
+/// building a [`HostTensor`] there would clone the whole backing vector
+/// first. A `TensorView` carries an inline shape plus a borrowed slice
+/// so the runtime can stream straight from the cache's own storage (or
+/// from a pooled scratch buffer) with zero host-side copies and zero
+/// allocations.
+#[derive(Debug, Clone)]
+pub enum TensorView<'a> {
+    F32 { shape: ShapeVec, data: &'a [f32] },
+    I32 { shape: ShapeVec, data: &'a [i32] },
+    Bf16 { shape: ShapeVec, data: &'a [u16] },
+}
+
+impl<'a> TensorView<'a> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorView::F32 { shape, .. }
+            | TensorView::I32 { shape, .. }
+            | TensorView::Bf16 { shape, .. } => shape.as_slice(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorView::F32 { .. } => DType::F32,
+            TensorView::I32 { .. } => DType::I32,
+            TensorView::Bf16 { .. } => DType::Bf16,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype().bytes()
+    }
+}
+
+impl HostTensor {
+    /// Borrow this tensor as a [`TensorView`] (no copies, no allocation).
+    pub fn view(&self) -> TensorView<'_> {
+        match self {
+            HostTensor::F32 { shape, data } => {
+                TensorView::F32 { shape: ShapeVec::from_slice(shape), data }
+            }
+            HostTensor::I32 { shape, data } => {
+                TensorView::I32 { shape: ShapeVec::from_slice(shape), data }
+            }
+            HostTensor::Bf16 { shape, data } => {
+                TensorView::Bf16 { shape: ShapeVec::from_slice(shape), data }
+            }
+        }
+    }
+}
+
 /// f32 → bf16 bits, round-to-nearest-even (exact for values that were
 /// bf16 upstream, which is the cache round-trip case).
 pub fn f32_to_bf16(x: f32) -> u16 {
@@ -144,5 +224,20 @@ mod tests {
         assert_eq!(t.elements(), 6);
         assert_eq!(t.dtype(), DType::Bf16);
         assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn view_mirrors_tensor_without_copying() {
+        let t = HostTensor::F32 { shape: vec![2, 3], data: vec![1.0; 6] };
+        let v = t.view();
+        assert_eq!(v.shape(), t.shape());
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.elements(), 6);
+        assert_eq!(v.byte_len(), 24);
+        // scalars view as rank-0
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.view().shape(), &[] as &[usize]);
+        assert_eq!(s.view().elements(), 1);
+        assert_eq!(ShapeVec::from_slice(&[4, 5]).as_slice(), &[4, 5]);
     }
 }

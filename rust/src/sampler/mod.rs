@@ -81,10 +81,34 @@ pub struct UnmaskDecision {
     pub tokens: Vec<i32>,
 }
 
+/// Reusable sampling workspace. Token sampling historically cloned the
+/// vocab-sized logits row (plus an ordering vector and a probability
+/// vector in the maskgit path) for every sampled token; threading one
+/// scratch through the decode loop keeps those allocations alive across
+/// iterations instead.
+#[derive(Debug, Clone, Default)]
+pub struct SamplerScratch {
+    row: Vec<f32>,
+    order: Vec<usize>,
+    probs: Vec<f32>,
+}
+
+/// Allocating convenience wrapper around [`decide_unmask_with`] (tests
+/// and one-shot callers); hot loops should hold a [`SamplerScratch`].
 pub fn decide_unmask(
     cfg: &SamplerCfg,
     inp: &UnmaskInput,
     rng: &mut SplitMix,
+) -> UnmaskDecision {
+    let mut scratch = SamplerScratch::default();
+    decide_unmask_with(cfg, inp, rng, &mut scratch)
+}
+
+pub fn decide_unmask_with(
+    cfg: &SamplerCfg,
+    inp: &UnmaskInput,
+    rng: &mut SplitMix,
+    scratch: &mut SamplerScratch,
 ) -> UnmaskDecision {
     let masked: Vec<usize> = (inp.block_lo..inp.block_hi)
         .filter(|&g| inp.gen_tokens[g] == inp.mask_id)
@@ -118,24 +142,22 @@ pub fn decide_unmask(
             .any(|&t| t != inp.mask_id && t != inp.eos_id)
     };
 
-    let tokens = positions
-        .iter()
-        .map(|&g| {
-            let row = &inp.logits[g * inp.vocab..(g + 1) * inp.vocab];
-            sample_token(
-                cfg,
-                row,
-                rng,
-                (cfg.eos_guard && non_eos_after(g)).then_some(inp.eos_id),
-                inp.mask_id,
-            )
-        })
-        .collect();
+    let mut tokens = Vec::with_capacity(positions.len());
+    for &g in &positions {
+        let row = &inp.logits[g * inp.vocab..(g + 1) * inp.vocab];
+        tokens.push(sample_token_with(
+            cfg,
+            row,
+            rng,
+            (cfg.eos_guard && non_eos_after(g)).then_some(inp.eos_id),
+            inp.mask_id,
+            scratch,
+        ));
+    }
     UnmaskDecision { positions, tokens }
 }
 
-/// Sample a token from a logits row, excluding `suppress` (EOS guard) and
-/// the mask id (never emit the mask token).
+/// Allocating convenience wrapper around [`sample_token_with`].
 pub fn sample_token(
     cfg: &SamplerCfg,
     logits: &[f32],
@@ -143,14 +165,31 @@ pub fn sample_token(
     suppress: Option<i32>,
     mask_id: i32,
 ) -> i32 {
-    let mut row: Vec<f32> = logits.to_vec();
+    let mut scratch = SamplerScratch::default();
+    sample_token_with(cfg, logits, rng, suppress, mask_id, &mut scratch)
+}
+
+/// Sample a token from a logits row, excluding `suppress` (EOS guard) and
+/// the mask id (never emit the mask token). All working vectors come from
+/// `scratch`, so a decode loop allocates nothing per sampled token.
+pub fn sample_token_with(
+    cfg: &SamplerCfg,
+    logits: &[f32],
+    rng: &mut SplitMix,
+    suppress: Option<i32>,
+    mask_id: i32,
+    scratch: &mut SamplerScratch,
+) -> i32 {
+    let SamplerScratch { row, order, probs } = scratch;
+    row.clear();
+    row.extend_from_slice(logits);
     row[mask_id as usize] = f32::NEG_INFINITY;
     if let Some(sup) = suppress {
         row[sup as usize] = f32::NEG_INFINITY;
     }
 
     if cfg.temperature <= 0.0 {
-        return argmax(&row) as i32;
+        return argmax(row) as i32;
     }
 
     // temperature scaling
@@ -159,7 +198,8 @@ pub fn sample_token(
     }
     // top-k / top-p filtering for maskgit-plus
     if let Strategy::MaskgitPlus { top_k, top_p } = cfg.strategy {
-        let mut order: Vec<usize> = (0..row.len()).collect();
+        order.clear();
+        order.extend(0..row.len());
         order.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
         if top_k > 0 {
             for &i in order.iter().skip(top_k) {
@@ -167,7 +207,7 @@ pub fn sample_token(
             }
         }
         if top_p < 1.0 {
-            let probs = softmax(&row);
+            softmax_into(row, probs);
             let mut cum = 0.0;
             let mut cut = row.len();
             for (rank, &i) in order.iter().enumerate() {
@@ -182,8 +222,8 @@ pub fn sample_token(
             }
         }
     }
-    let probs = softmax(&row);
-    rng.categorical(&probs) as i32
+    softmax_into(row, probs);
+    rng.categorical(probs) as i32
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -196,14 +236,18 @@ fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-fn softmax(xs: &[f32]) -> Vec<f32> {
+fn softmax_into(xs: &[f32], out: &mut Vec<f32>) {
+    out.clear();
     let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     if m == f32::NEG_INFINITY {
-        return vec![0.0; xs.len()];
+        out.resize(xs.len(), 0.0);
+        return;
     }
-    let exps: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
-    let z: f32 = exps.iter().sum();
-    exps.iter().map(|e| e / z).collect()
+    out.extend(xs.iter().map(|x| (x - m).exp()));
+    let z: f32 = out.iter().sum();
+    for e in out.iter_mut() {
+        *e /= z;
+    }
 }
 
 #[cfg(test)]
@@ -332,6 +376,29 @@ mod tests {
         let mut rng = SplitMix::new(1);
         let t = sample_token(&SamplerCfg::dream(), &row, &mut rng, None, 1);
         assert_eq!(t, 6);
+    }
+
+    #[test]
+    fn scratch_variant_matches_allocating_variant() {
+        let v = 8;
+        let mut row = vec![0.0; v];
+        row[3] = 5.0;
+        row[4] = 4.9;
+        row[6] = 4.8;
+        let cfg = SamplerCfg {
+            strategy: Strategy::MaskgitPlus { top_k: 3, top_p: 0.95 },
+            temperature: 0.7,
+            parallel_threshold: None,
+            eos_guard: false,
+        };
+        let mut scratch = SamplerScratch::default();
+        for seed in 0..20u64 {
+            let mut r1 = SplitMix::new(seed);
+            let mut r2 = SplitMix::new(seed);
+            let a = sample_token(&cfg, &row, &mut r1, Some(2), 1);
+            let b = sample_token_with(&cfg, &row, &mut r2, Some(2), 1, &mut scratch);
+            assert_eq!(a, b, "seed {seed}: scratch reuse must not change sampling");
+        }
     }
 
     #[test]

@@ -33,6 +33,16 @@
 //! confidence -1 on the step executables' confidence input (occupancy
 //! mask) so they never win the in-graph importance selection.
 //!
+//! Step I/O is mediated by the resident-cache layer
+//! ([`crate::runtime::resident::DeviceGroupCaches`]): per-kind dirty
+//! bitmaps in [`crate::cache::GroupCaches`] track which rows the host
+//! mutated since the device copy was refreshed, syncs ship only those
+//! rows (admission invalidation re-syncs exactly the admitted slot), and
+//! pooled staging buffers replace the historical per-tick host clones of
+//! the full KV/indicator/confidence tensors. The per-backend
+//! [`crate::runtime::resident::TransferStats`] ledger flows through
+//! [`GroupScheduler::transfer_stats`] into the serving metrics.
+//!
 //! One documented exception: the experimental adaptive skip-ratio mode
 //! (`EngineCfg::adaptive`) keeps a single group-scoped confidence-drift
 //! signal — as the pre-refactor engine did for its lockstep batch — so
@@ -51,9 +61,12 @@ use crate::cache::{GroupCaches, RefreshPolicy, StepPlan};
 use crate::engine::{step_exe_name, EngineCfg, Method};
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
+use crate::runtime::resident::{
+    ApplyMode, DeviceGroupCaches, SyncOutcome, TransferStats, UploadHandle,
+};
 use crate::runtime::tensor::HostTensor;
-use crate::runtime::Runtime;
-use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
+use crate::runtime::{ExecArg, Runtime};
+use crate::sampler::{decide_unmask_with, SamplerCfg, SamplerScratch, UnmaskInput};
 use crate::tokenizer::Tokenizer;
 
 /// Per-request generation parameters carried from the `/generate` JSON
@@ -139,16 +152,23 @@ pub trait StepBackend {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()>;
-    /// One block step (`DualStep` or `EsStep`) at `block_start`,
-    /// merged into the given slots' rows only.
+    /// One block step (`DualStep` or `EsStep`) over `block` positions at
+    /// `block_start`, merged into the given slots' rows only.
     fn run_step(
         &mut self,
         plan: StepPlan,
         tokens: &[i32],
         block_start: usize,
+        block: usize,
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()>;
+    /// Cumulative host→device transfer ledger for this backend (logical
+    /// bytes from the resident-cache planner; zeros for backends without
+    /// one).
+    fn transfer_stats(&self) -> TransferStats {
+        TransferStats::default()
+    }
 }
 
 /// Scheduling parameters (the method-level subset of [`EngineCfg`]).
@@ -182,6 +202,8 @@ pub struct GroupScheduler<'a> {
     /// token layout per slot: [prompt (PAD-padded) | gen (MASK)]
     tokens: Vec<i32>,
     caches: GroupCaches,
+    /// reusable sampling workspace shared by every slot's unmask decision
+    scratch: SamplerScratch,
     /// group-level executable-run counters
     pub ticks: usize,
     pub n_prefill: usize,
@@ -191,7 +213,7 @@ pub struct GroupScheduler<'a> {
 
 impl<'a> GroupScheduler<'a> {
     pub fn new(backend: Box<dyn StepBackend + 'a>, n_slots: usize, cfg: SchedCfg) -> Result<Self> {
-        let d = backend.dims().clone();
+        let d = *backend.dims();
         if cfg.block == 0 || d.gen_len % cfg.block != 0 {
             return Err(anyhow!(
                 "gen_len {} not divisible by block {}",
@@ -208,11 +230,24 @@ impl<'a> GroupScheduler<'a> {
             slots: (0..n_slots).map(|_| None).collect(),
             tokens: vec![0i32; n_slots * d.ctx],
             caches,
+            scratch: SamplerScratch::default(),
             ticks: 0,
             n_prefill: 0,
             n_dual: 0,
             n_es: 0,
         })
+    }
+
+    /// The backend's cumulative transfer ledger (resident-cache
+    /// accounting; the router diffs this per tick into serving metrics).
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.backend.transfer_stats()
+    }
+
+    /// Read access to the group caches (dirty-bitmap inspection in tests
+    /// and benches).
+    pub fn group_caches(&self) -> &GroupCaches {
+        &self.caches
     }
 
     pub fn n_slots(&self) -> usize {
@@ -250,7 +285,7 @@ impl<'a> GroupScheduler<'a> {
             .iter()
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow!("no free slot"))?;
-        let d = self.backend.dims().clone();
+        let d = *self.backend.dims();
         let gen_len = input.params.gen_len.unwrap_or(d.gen_len);
         if gen_len == 0 || gen_len > d.gen_len || gen_len % self.cfg.block != 0 {
             return Err(anyhow!(
@@ -366,7 +401,7 @@ impl<'a> GroupScheduler<'a> {
             let plan = if plan_tag == 0 { StepPlan::DualStep } else { StepPlan::EsStep };
             let block_start = prompt_len + blk * self.cfg.block;
             self.backend
-                .run_step(plan, &self.tokens, block_start, &group, &mut self.caches)?;
+                .run_step(plan, &self.tokens, block_start, self.cfg.block, &group, &mut self.caches)?;
             for &s in &group {
                 let seq = self.slots[s].as_mut().unwrap();
                 if plan == StepPlan::DualStep {
@@ -383,7 +418,7 @@ impl<'a> GroupScheduler<'a> {
         }
 
         // 4. unmask decisions, per slot over its own current block
-        let d = self.backend.dims().clone();
+        let d = *self.backend.dims();
         let (mask, eos) = {
             let tok = self.backend.tokenizer();
             (tok.mask, tok.eos)
@@ -404,7 +439,7 @@ impl<'a> GroupScheduler<'a> {
                     mask_id: mask,
                     eos_id: eos,
                 };
-                decide_unmask(&seq.sampler, &inp, &mut seq.rng)
+                decide_unmask_with(&seq.sampler, &inp, &mut seq.rng, &mut self.scratch)
             };
             for (p, t) in decision.positions.iter().zip(&decision.tokens) {
                 self.tokens[s * d.ctx + d.prompt_len + p] = *t;
@@ -476,11 +511,23 @@ pub fn seq_complete(gen_row: &[i32], mask: i32, eos: i32) -> bool {
 /// [`StepBackend`] over the PJRT runtime and the compiled step
 /// executables (the plumbing that used to live inside
 /// `Engine::generate`).
+///
+/// Step I/O goes through a [`DeviceGroupCaches`] resident layer: inputs
+/// are staged in pooled buffers or borrowed straight from the group
+/// caches (no full-tensor host clones), the big cache uploads are
+/// retained as device handles and reused whenever the dirty bitmaps say
+/// the reading slots' rows are unchanged, and every sync is accounted in
+/// the transfer ledger. The layer runs in [`ApplyMode::Host`] because
+/// the stateless executables return block outputs to the host; a future
+/// device-side scatter executable flips it to [`ApplyMode::Device`]
+/// (zero steady-state KV re-upload) with no scheduler changes.
 pub struct PjrtBackend<'rt> {
     rt: &'rt Runtime,
     cfg: EngineCfg,
     arch: ArchSpec,
     batch: usize,
+    resident: DeviceGroupCaches,
+    last_flushed: TransferStats,
     /// mean |Δconfidence| at the last step — the adaptive-ratio signal.
     /// Group-scoped (shared by every occupant), matching the
     /// pre-refactor engine; see the module docs for the isolation
@@ -491,7 +538,25 @@ pub struct PjrtBackend<'rt> {
 impl<'rt> PjrtBackend<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: EngineCfg, batch: usize) -> Result<PjrtBackend<'rt>> {
         let arch = rt.arch(&cfg.arch)?.clone();
-        Ok(PjrtBackend { rt, cfg, arch, batch, conf_drift: 1.0 })
+        let resident = DeviceGroupCaches::new(&arch.dims, batch, ApplyMode::Host);
+        Ok(PjrtBackend {
+            rt,
+            cfg,
+            arch,
+            batch,
+            resident,
+            last_flushed: TransferStats::default(),
+            conf_drift: 1.0,
+        })
+    }
+
+    /// Mirror the planner-ledger growth into the runtime's stats so
+    /// `Runtime::take_stats` reports the logical transfer picture.
+    fn flush_transfer(&mut self) {
+        let now = self.resident.stats;
+        let delta = now.since(&self.last_flushed);
+        self.rt.note_transfer(&delta);
+        self.last_flushed = now;
     }
 
     /// Adaptive-ratio signal: mean |Δconfidence| over the given slots'
@@ -535,23 +600,32 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        let d = &self.arch.dims;
-        let toks = HostTensor::I32 { shape: vec![self.batch, d.ctx], data: tokens.to_vec() };
+        let d = self.arch.dims;
+        // row-filtered staging: only the refreshed slots' rows are copied
+        // into the persistent upload buffer (no whole-group tokens clone)
+        self.resident.stage_prefill_tokens(tokens, slots);
         // the vanilla baseline never reads caches: logits-only executable
         if self.cfg.method == Method::Vanilla {
             let exe = self.arch.exe(&format!("vanilla_b{}", self.batch))?;
-            let out = self.rt.run(&self.arch, exe, &self.cfg.checkpoint, &[toks])?;
+            let args = [ExecArg::Host(self.resident.prefill_tokens.view())];
+            let out = self.rt.run_args(&self.arch, exe, &self.cfg.checkpoint, &args)?;
+            self.flush_transfer();
             return caches.merge_full_logits_slots(&out[0], slots);
         }
         let conf_before = self.cfg.adaptive.then(|| caches.conf.clone());
         let exe = self.arch.exe(&format!("prefill_b{}", self.batch))?;
-        let out = self.rt.run(&self.arch, exe, &self.cfg.checkpoint, &[toks])?;
+        let args = [ExecArg::Host(self.resident.prefill_tokens.view())];
+        let out = self.rt.run_args(&self.arch, exe, &self.cfg.checkpoint, &args)?;
         debug_assert_eq!(exe.kind, ExeKind::Prefill);
         caches.refresh_slots_from_prefill(&out, slots)?;
         if self.cfg.sparse {
             let keep = self.rt.manifest.generation.sparse_keep_prompt;
             caches.rebuild_sparse_slots(&out[6], keep, 3, slots)?;
         }
+        // under a device-apply transport the prefill outputs would refresh
+        // the resident rows in place (no-op in Host mode)
+        self.resident.note_prefill_applied(caches, slots);
+        self.flush_transfer();
         // prompt refreshes move confidence the most, so they must feed the
         // adaptive-ratio signal too (the pre-refactor engine measured the
         // drift on every plan); without the per-slot block window here, the
@@ -568,22 +642,43 @@ impl StepBackend for PjrtBackend<'_> {
         plan: StepPlan,
         tokens: &[i32],
         block_start: usize,
+        block: usize,
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        let d = self.arch.dims.clone();
-        let block = self.cfg.block;
+        let result = self.step_impl(plan, tokens, block_start, block, slots, caches);
+        if result.is_err() {
+            // the sync planner cleared dirty bits for uploads that never
+            // completed; forget the resident state so a later tick on
+            // this scheduler cannot execute against a stale device copy
+            self.resident.invalidate(caches);
+        }
+        result
+    }
+
+    fn transfer_stats(&self) -> TransferStats {
+        self.resident.stats
+    }
+}
+
+impl PjrtBackend<'_> {
+    fn step_impl(
+        &mut self,
+        plan: StepPlan,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        let d = self.arch.dims;
         let exe_name = step_exe_name(&self.cfg, plan, self.batch, self.conf_drift);
         let exe = self.arch.exe(&exe_name)?;
 
-        // current block tokens for every row (spectator rows ride along;
-        // their outputs are discarded by the row-filtered merges below)
-        let mut x_tok = Vec::with_capacity(self.batch * block);
-        for b in 0..self.batch {
-            x_tok.extend_from_slice(
-                &tokens[b * d.ctx + block_start..b * d.ctx + block_start + block],
-            );
-        }
+        // current block tokens for the stepped rows, staged in the pooled
+        // buffer (spectator rows keep stale contents; their outputs are
+        // discarded by the row-filtered merges below)
+        self.resident.stage_step_tokens(tokens, block_start, block, slots);
 
         let ind_layers: &[usize] = &exe.skip_layers;
         let all_layers: Vec<usize> = (0..d.n_layers).collect();
@@ -594,22 +689,76 @@ impl StepBackend for PjrtBackend<'_> {
         };
         let indicator = exe.indicator.clone().unwrap_or_else(|| "h".into());
 
-        let kv = if self.cfg.sparse {
-            caches.kv_sparse_tensor()?
+        // dirty-delta syncs: each returns how many bytes a delta-capable
+        // transport ships; shipped == 0 means the retained device buffer
+        // is still valid for the reading slots and is reused outright
+        let kv_sync: SyncOutcome = if self.cfg.sparse {
+            self.resident.sync_kv_sparse(caches, slots)?
         } else {
-            caches.kv_tensor()
+            self.resident.sync_kv(caches, slots)
         };
+        let ind_sync = self.resident.sync_ind(caches, &indicator, &ind_for_exe, slots)?;
+        let conf_sync = self.resident.sync_conf_masked(caches, slots);
+
         let conf_before = self.cfg.adaptive.then(|| caches.conf.clone());
-        let inputs = vec![
-            HostTensor::I32 { shape: vec![self.batch, block], data: x_tok },
-            HostTensor::scalar_i32(block_start as i32),
-            kv,
-            caches.gather_ind(&indicator, &ind_for_exe)?,
+
+        // refresh retained handles for anything that shipped (the PJRT
+        // client has no partial-buffer write, so a dirty input re-uploads
+        // whole — the delta numbers stay honest in the ledger, and clean
+        // inputs skip the upload entirely)
+        if self.cfg.sparse {
+            if kv_sync.shipped > 0 || self.resident.handles.kv_sparse.is_none() {
+                let view = caches.kv_sparse_view()?;
+                let (buf, lit) = self.rt.upload_tensor_view(&view)?;
+                self.resident.handles.kv_sparse = Some(UploadHandle { buf, lit });
+            }
+        } else if kv_sync.shipped > 0 || self.resident.handles.kv.is_none() {
+            let view = caches.kv_view();
+            let (buf, lit) = self.rt.upload_tensor_view(&view)?;
+            self.resident.handles.kv = Some(UploadHandle { buf, lit });
+        }
+        let ind_key_ok = matches!(
+            &self.resident.handles.ind,
+            Some((name, layers, _)) if name == &indicator && layers == &ind_for_exe
+        );
+        if ind_sync.shipped > 0 || !ind_key_ok {
+            // stage the gather only when it is actually uploaded — a
+            // reused resident buffer costs zero host work
+            caches.gather_ind_into(&indicator, &ind_for_exe, &mut self.resident.ind_gather)?;
+            let (buf, lit) = self.rt.upload_tensor_view(&self.resident.ind_gather.view())?;
+            self.resident.handles.ind =
+                Some((indicator.clone(), ind_for_exe.clone(), UploadHandle { buf, lit }));
+        }
+        let conf_key_ok = matches!(
+            &self.resident.handles.conf,
+            Some((for_slots, _)) if for_slots.as_slice() == slots
+        );
+        if conf_sync.shipped > 0 || !conf_key_ok {
+            caches.conf_masked_into(slots, &mut self.resident.conf_masked)?;
+            let (buf, lit) =
+                self.rt.upload_tensor_view(&self.resident.conf_masked.view())?;
+            self.resident.handles.conf = Some((slots.to_vec(), UploadHandle { buf, lit }));
+        }
+
+        let start_t = HostTensor::scalar_i32(block_start as i32);
+        let alpha_t = HostTensor::scalar_f32(self.cfg.alpha);
+        let kv_buf = if self.cfg.sparse {
+            &self.resident.handles.kv_sparse.as_ref().expect("kv handle").buf
+        } else {
+            &self.resident.handles.kv.as_ref().expect("kv handle").buf
+        };
+        let ind_buf = &self.resident.handles.ind.as_ref().expect("ind handle").2.buf;
+        let conf_buf = &self.resident.handles.conf.as_ref().expect("conf handle").1.buf;
+        let args = [
+            ExecArg::Host(self.resident.step_tokens.view()),
+            ExecArg::Host(start_t.view()),
+            ExecArg::Device(kv_buf),
+            ExecArg::Device(ind_buf),
             // occupancy mask: rows not in `slots` can never win importance
-            caches.conf_tensor_masked(slots),
-            HostTensor::scalar_f32(self.cfg.alpha),
+            ExecArg::Device(conf_buf),
+            ExecArg::Host(alpha_t.view()),
         ];
-        let out = self.rt.run(&self.arch, exe, &self.cfg.checkpoint, &inputs)?;
+        let out = self.rt.run_args(&self.arch, exe, &self.cfg.checkpoint, &args)?;
         // outputs: logits [B,k,V], pos [B,k], kv_block, ind_block
         caches.merge_step_logits_slots(&out[0], &out[1], slots)?;
         if self.cfg.sparse {
@@ -625,6 +774,9 @@ impl StepBackend for PjrtBackend<'_> {
             &out[3],
             slots,
         )?;
+        self.resident
+            .note_step_applied(caches, &indicator, self.cfg.sparse, block_start, block, slots);
+        self.flush_transfer();
         // adaptive-ratio signal: mean |Δconf| over the stepped rows' block
         if let Some(before) = conf_before {
             let block_lo = block_start - d.prompt_len;
@@ -801,6 +953,10 @@ mod tests {
             g[0].iterations
         );
     }
+
+    // Resident-cache transfer acceptance (zero steady-state KV upload,
+    // admission invalidation, ledger-vs-bitmap deltas) lives in
+    // tests/transfer_accounting.rs to avoid duplicate maintenance.
 
     #[test]
     fn seq_complete_rules() {

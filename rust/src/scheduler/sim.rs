@@ -10,6 +10,13 @@
 //! benchmarks measure realistic occupancy effects without PJRT.
 //! Everything here is exercised by `cargo test` / `cargo bench` on
 //! machines with no artifacts and no PJRT library.
+//!
+//! The sim also carries a [`DeviceGroupCaches`] resident layer in
+//! [`ApplyMode::Device`] (executable outputs update the resident copy
+//! in place), so the transfer ledger models what a device-apply-capable
+//! transport ships per tick: token rows and host-computed confidence
+//! rows only — zero steady-state KV/indicator bytes. This is how the
+//! resident-cache win is measured and asserted without PJRT artifacts.
 
 use std::time::Duration;
 
@@ -17,6 +24,7 @@ use anyhow::Result;
 
 use crate::cache::{GroupCaches, StepPlan};
 use crate::manifest::Dims;
+use crate::runtime::resident::{ApplyMode, DeviceGroupCaches, TransferStats};
 use crate::tokenizer::Tokenizer;
 
 use super::StepBackend;
@@ -68,11 +76,21 @@ impl SimCfg {
 pub struct SimBackend {
     cfg: SimCfg,
     tok: Tokenizer,
+    /// resident-cache planner, created lazily once the group's batch
+    /// size is known (first backend call)
+    resident: Option<DeviceGroupCaches>,
 }
 
 impl SimBackend {
     pub fn new(cfg: SimCfg) -> SimBackend {
-        SimBackend { cfg, tok: Tokenizer::builtin() }
+        SimBackend { cfg, tok: Tokenizer::builtin(), resident: None }
+    }
+
+    fn ensure_resident(&mut self, batch: usize) {
+        if self.resident.is_none() {
+            self.resident =
+                Some(DeviceGroupCaches::new(&self.cfg.dims, batch, ApplyMode::Device));
+        }
     }
 
     /// Intended token for gen position `j` of the row whose prompt is
@@ -130,9 +148,19 @@ impl StepBackend for SimBackend {
         if !self.cfg.prefill_cost.is_zero() {
             std::thread::sleep(self.cfg.prefill_cost);
         }
+        self.ensure_resident(caches.batch);
+        if let Some(r) = self.resident.as_mut() {
+            r.stage_prefill_tokens(tokens, slots);
+        }
         let gen = self.cfg.dims.gen_len;
         for &s in slots {
             self.write_positions(tokens, s, 0, gen, caches);
+        }
+        // prefill outputs (KV + indicators) refresh the resident rows of
+        // the requested slots in place — in particular this absorbs a
+        // slot-admission reset without any re-upload
+        if let Some(r) = self.resident.as_mut() {
+            r.note_prefill_applied(caches, slots);
         }
         Ok(())
     }
@@ -142,6 +170,7 @@ impl StepBackend for SimBackend {
         plan: StepPlan,
         tokens: &[i32],
         block_start: usize,
+        block: usize,
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
@@ -153,17 +182,34 @@ impl StepBackend for SimBackend {
         if !cost.is_zero() {
             std::thread::sleep(cost);
         }
+        self.ensure_resident(caches.batch);
+        let n_layers = self.cfg.dims.n_layers;
+        if let Some(r) = self.resident.as_mut() {
+            // model the step's input syncs against the dirty bitmaps:
+            // tokens + confidence ship, KV/indicators stay resident
+            r.stage_step_tokens(tokens, block_start, block, slots);
+            r.sync_kv(caches, slots);
+            let all_layers: Vec<usize> = (0..n_layers).collect();
+            r.sync_ind(caches, "h", &all_layers, slots)?;
+            r.sync_conf_masked(caches, slots);
+        }
         let d = &self.cfg.dims;
         let lo = block_start - d.prompt_len;
-        // the sim does not know the scheduler's block length, so it
-        // refreshes from the window start to the end of the gen region;
-        // writing past the current block is harmless — the sampler only
-        // reads the current block, and later blocks are re-written by
-        // their own steps
+        // the sim refreshes from the window start to the end of the gen
+        // region; writing past the current block is harmless — the
+        // sampler only reads the current block, and later blocks are
+        // re-written by their own steps
         for &s in slots {
             self.write_positions(tokens, s, lo, d.gen_len, caches);
         }
+        if let Some(r) = self.resident.as_mut() {
+            r.note_step_applied(caches, "h", false, block_start, block, slots);
+        }
         Ok(())
+    }
+
+    fn transfer_stats(&self) -> TransferStats {
+        self.resident.as_ref().map(|r| r.stats).unwrap_or_default()
     }
 }
 
@@ -174,7 +220,7 @@ mod tests {
     #[test]
     fn echo_targets_and_confidence_ordering() {
         let mut b = SimBackend::new(SimCfg::default());
-        let d = b.cfg.dims.clone();
+        let d = b.cfg.dims;
         let mut caches = GroupCaches::new(&d, 1);
         let mut tokens = vec![0i32; d.ctx];
         let ids = b.tok.encode_prompt("ab", d.prompt_len).unwrap();

@@ -115,6 +115,10 @@ fn mid_flight_admission_and_early_retirement() {
     assert!(m.contains("esdllm_admissions_total 2"), "{m}");
     assert!(m.contains("esdllm_retirements_total 2"), "{m}");
     assert!(m.contains("esdllm_active_slots 0"), "{m}");
+    // resident-cache accounting is exposed: exactly one full-KV upload
+    // (the residency seed) across both requests, and bytes saved
+    assert!(m.contains("esdllm_full_kv_uploads 1\n"), "{m}");
+    assert!(!m.contains("esdllm_upload_bytes_saved 0\n"), "{m}");
     stack.router.shutdown();
 }
 
