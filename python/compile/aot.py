@@ -197,15 +197,90 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             },
         )
 
+    # ---- device-apply variants: the executable scatters its own KV and
+    # indicator updates into the resident cache tensors in-graph
+    # (dynamic-update-slice), merges confidence computed from its logits,
+    # and takes the occupancy mask as a batch-bit input. The Rust runtime
+    # retains the kv/ind/conf outputs on device and feeds them back as the
+    # next call's inputs (manifest `retained_outputs`), so in steady state
+    # only block tokens go up and sampled logit rows come down. ----
+    CHAINED = [{"output": n, "input": n} for n in ("kv", "ind", "conf")]
+
+    def prefill_apply_variant(batch):
+        def fn(params, tokens, kv_prev, ind_prev, conf_prev, refresh):
+            return M.prefill_apply(cfg, params, tokens, kv_prev, ind_prev,
+                                   conf_prev, refresh, indicator="h")
+
+        b.lower(
+            f"prefill_apply_b{batch}",
+            fn,
+            [
+                sds((batch, ctx), jnp.int32),          # tokens
+                kv_s(batch, ctx),                      # kv (chained)
+                ind_s(batch, L),                       # ind "h" (chained)
+                sds((batch, gen), jnp.float32),        # conf (chained)
+                sds((batch,), jnp.int32),              # refresh mask
+            ],
+            {
+                "kind": "prefill_apply", "batch": batch, "block": None,
+                "skip": [], "indicator": "h", "kv_len": ctx,
+                "retained_outputs": CHAINED,
+                "input_names": ["tokens", "kv", "ind", "conf", "refresh"],
+                "output_names": ["logits", "kv", "ind", "conf"],
+            },
+        )
+
+    def step_apply_variant(name, batch, block, skip):
+        skip_layers = sorted(l for l, _ in skip)
+        ind_layers = skip_layers if skip else list(range(cfg.n_layers))
+
+        def fn(params, x_tok, block_start, kv, ind, conf, occ, alpha,
+               _skip=skip, _ind_layers=ind_layers, _block=block):
+            return M.step(cfg, params, x_tok, block_start, kv, ind, conf,
+                          alpha, block=_block, skip=_skip, indicator="h",
+                          ind_layers=_ind_layers, kv_len=ctx, apply=True,
+                          occ=occ)
+
+        b.lower(
+            name,
+            fn,
+            [
+                sds((batch, block), jnp.int32),        # x_tok
+                sds((), jnp.int32),                    # block_start
+                kv_s(batch, ctx),                      # kv cache (chained)
+                ind_s(batch, L),                       # full ind (chained)
+                sds((batch, gen), jnp.float32),        # conf (chained)
+                sds((batch,), jnp.int32),              # occupancy mask
+                sds((), jnp.float32),                  # alpha
+            ],
+            {
+                "kind": "step_apply", "batch": batch, "block": block,
+                "skip": [[l, r] for l, r in skip],
+                "skip_layers": skip_layers,
+                "ind_layers": ind_layers,
+                "final_keep": final_keep(block, skip),
+                "indicator": "h", "kv_len": ctx,
+                "retained_outputs": CHAINED,
+                "input_names": ["x_tok", "block_start", "kv", "ind",
+                                "conf", "occ", "alpha"],
+                "output_names": ["logits", "pos", "kv", "ind", "conf"],
+            },
+        )
+
     default_skip = SKIP_CONFIGS["default"]
     sparse_len = SPARSE_KEEP_PROMPT + gen
 
-    # DualCache baseline + ES default, dense
+    # DualCache baseline + ES default, dense (host-apply and device-apply)
     for blk in blk_cfgs:
         for batch in ((1, 8) if blk == 8 else (8,)):
             step_variant(f"dual_blk{blk}_b{batch}", batch, blk, [], None, ctx)
             step_variant(f"es_blk{blk}_b{batch}", batch, blk,
                          default_skip, "h", ctx)
+            step_apply_variant(f"dual_apply_blk{blk}_b{batch}", batch, blk, [])
+            step_apply_variant(f"es_apply_blk{blk}_b{batch}", batch, blk,
+                               default_skip)
+    for batch in (1, 8):
+        prefill_apply_variant(batch)
 
     # sparse-attention variants (pruned prompt KV)
     for blk in blk_cfgs:

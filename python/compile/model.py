@@ -215,6 +215,39 @@ def prefill(cfg: ModelCfg, params: Params, tokens, *, skip_layers=None,
     return logits, kv_cache, ind_caches, attn_mass
 
 
+def prefill_apply(cfg: ModelCfg, params: Params, tokens, kv_prev, ind_prev,
+                  conf_prev, refresh, *, indicator="h", use_pallas=True,
+                  kv_tile=64):
+    """Device-apply prefill: run the full forward and merge its outputs
+    into the resident cache tensors in-graph, refreshing only the rows
+    where ``refresh`` (i32 [B] 0/1) is set — the row-filtered merge that
+    grounds a newly admitted slot without perturbing co-resident
+    occupants, executed on device so nothing is downloaded and re-shipped.
+
+    Confidence is computed in-graph from the gen-region logits (max
+    softmax probability), replacing the host conf round-trip.
+
+    Returns (logits f32 [B, ctx, V],
+             kv_new bf16 [L, 2, B, Hkv, ctx, hd],
+             ind_new bf16 [L, B, gen, d]  (the ``indicator`` cache),
+             conf_new f32 [B, gen]).
+    The kv/ind/conf outputs are device-retained and chained back into the
+    next prefill_apply / step-apply call. No attn_mass output: the only
+    consumer is the host-side sparse rebuild, and sparse configs run the
+    stateless Host-apply path — emitting it here would download B × ctx
+    floats every grounding prefill for nothing.
+    """
+    logits, kv, ind, _attn_mass = prefill(
+        cfg, params, tokens, use_pallas=use_pallas, kv_tile=kv_tile)
+    r = refresh.astype(jnp.bool_)                             # [B]
+    kv_new = jnp.where(r[None, None, :, None, None, None], kv, kv_prev)
+    ind_new = jnp.where(r[None, :, None, None], ind[indicator], ind_prev)
+    gen_logits = logits[:, cfg.prompt_len:]                   # [B, gen, V]
+    conf_full = jax.nn.softmax(gen_logits, axis=-1).max(-1)   # [B, gen]
+    conf_new = jnp.where(r[:, None], conf_full, conf_prev)
+    return logits, kv_new, ind_new, conf_new
+
+
 def _expand_kv(cfg, t):
     """[B, S, Hkv, hd] -> [B, S, d] by repeating kv heads to Hq (so K/V
     indicator tensors have the same [.., d] shape as hidden/Q)."""
@@ -241,14 +274,18 @@ def cfg_layers(cfg, params):
 
 def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
          ind_cache, conf, alpha, *, block, skip, indicator="h",
-         ind_layers=None, kv_len=None, use_pallas=True, kv_tile=64):
+         ind_layers=None, kv_len=None, use_pallas=True, kv_tile=64,
+         apply=False, occ=None):
     """One decode iteration over the current block.
 
     x_tok       i32 [B, block]       current block tokens (incl. masks)
     block_start i32 scalar           absolute position of the block start
     kv_cache    bf16 [L, 2, B, Hkv, T, hd]   T = kv_len (ctx, or pruned)
     ind_cache   bf16 [n_ind, B, gen, d]      indicator tensor cache
+                (``apply=True``: the FULL per-name cache, n_ind = L)
     conf        f32 [B, gen]         confidence from previous iterations
+                (``apply=False``: occupancy-masked host-side;
+                ``apply=True``: raw — the mask is applied in-graph)
     alpha       f32 scalar           Eq. 1 mixing weight
     skip        [(layer, ratio)]     static skip spec; [] = DualCache
     ind_layers  layers whose indicator cache rows are maintained; defaults
@@ -259,10 +296,25 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
                 (sparse attention): retained prompt rows first, then the
                 full gen region, so cache row of absolute gen position p is
                 (kv_len - gen) + (p - prompt_len).
+    apply       device-apply mode: instead of returning the block slices
+                for a host-side scatter, scatter the updates into the full
+                cache tensors in-graph (dynamic-update-slice) and compute
+                the merged confidence from the final logits, so the caller
+                can retain the outputs on device and feed them back to the
+                next call.  Rows where ``occ`` is 0 (vacant slots, slots
+                working a different block) pass through unchanged and are
+                pinned to confidence -1 for the importance selection.
+    occ         i32 [B] 0/1 occupancy mask (required when ``apply``).
 
-    Returns (logits_sel f32 [B, k_final, V], pos_sel i32 [B, k_final],
-             kv_block bf16 [L, 2, B, Hkv, block, hd],
-             ind_block bf16 [n_ind, B, block, d]).
+    Returns (``apply=False``):
+             (logits_sel f32 [B, k_final, V], pos_sel i32 [B, k_final],
+              kv_block bf16 [L, 2, B, Hkv, block, hd],
+              ind_block bf16 [n_ind, B, block, d])
+            (``apply=True``):
+             (logits_sel, pos_sel,
+              kv_new bf16 [L, 2, B, Hkv, T, hd],
+              ind_new bf16 [L, B, gen, d],
+              conf_new f32 [B, gen]).
     """
     b = x_tok.shape[0]
     gen0 = cfg.prompt_len
@@ -271,7 +323,12 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
     if ind_layers is None:
         ind_layers = sorted(skip_map)
     assert all(l in ind_layers for l in skip_map), (skip_map, ind_layers)
-    assert len(ind_layers) == ind_cache.shape[0] or not ind_layers
+    if apply:
+        assert occ is not None, "apply mode needs the occupancy mask"
+        assert ind_cache.shape[0] == cfg.n_layers, ind_cache.shape
+        occ_row = occ.astype(jnp.bool_)                  # [B]
+    else:
+        assert len(ind_layers) == ind_cache.shape[0] or not ind_layers
     attn = attention if use_pallas else attention_ref
     vnorm = varnorm if use_pallas else varnorm_ref
 
@@ -289,9 +346,12 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
     # layer we materialize only that layer's updated K/V (one layer-sized
     # scatter) and collect the *block slices* for the outputs. Functional
     # whole-cache updates (kv.at[li].set) would make XLA copy the full
-    # multi-MB cache once per layer per iteration.
-    kv_blocks = []   # per layer: [2, B, Hkv, block, hd]
-    ind_blocks = []  # per ind layer: [B, block, d]
+    # multi-MB cache once per layer per iteration.  In apply mode the
+    # output IS the updated full cache, so the per-layer updates are
+    # collected whole (with non-occupant rows passed through) instead.
+    kv_blocks = []   # per layer: [2, B, Hkv, block, hd] (or full in apply)
+    ind_blocks = []  # per ind layer: [B, block, d] (or [B, gen, d])
+    ind_by_layer = {}
     si = 0
     for li, l in enumerate(params.layers):
         s_act = x.shape[1]
@@ -308,10 +368,20 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
                             kh.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
         v_l = _scatter_rows(v_cache.transpose(0, 2, 1, 3), cache_idx,
                             vh.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
-        kv_blocks.append(jnp.stack([
-            jax.lax.dynamic_slice_in_dim(k_l, cache_off, block, axis=2),
-            jax.lax.dynamic_slice_in_dim(v_l, cache_off, block, axis=2),
-        ]))
+        if apply:
+            # device-apply: keep the whole updated layer cache, with
+            # non-occupant rows passed through untouched (their computed
+            # values are garbage by the row-filtered-merge contract)
+            o4 = occ_row[:, None, None, None]
+            kv_blocks.append(jnp.stack([
+                jnp.where(o4, k_l, k_cache),
+                jnp.where(o4, v_l, v_cache),
+            ]))
+        else:
+            kv_blocks.append(jnp.stack([
+                jax.lax.dynamic_slice_in_dim(k_l, cache_off, block, axis=2),
+                jax.lax.dynamic_slice_in_dim(v_l, cache_off, block, axis=2),
+            ]))
 
         qh = q.transpose(0, 2, 1, 3)
         if use_pallas:
@@ -334,18 +404,31 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
                 t_now = _expand_kv(cfg, v).reshape(b, s_act, -1)
 
             gen_idx = pos - gen0                              # rows in gen
-            ind_l = ind_cache[si].astype(jnp.float32)         # [B,gen,d]
+            cache_row = li if apply else si
+            ind_l = ind_cache[cache_row].astype(jnp.float32)  # [B,gen,d]
             t_prev = _gather_rows(ind_l, gen_idx)
 
-            # partial indicator-cache update for ALL active rows (line 8),
-            # materialized as the block slice only
-            blk_prev = jax.lax.dynamic_slice_in_dim(
-                ind_l, block_start - gen0, block, axis=1)
-            ind_blocks.append(_scatter_rows(blk_prev, rel, t_now))
+            if apply:
+                # partial indicator-cache update applied to the full
+                # cache row in-graph; non-occupant rows pass through
+                upd = _scatter_rows(ind_l, gen_idx, t_now)
+                ind_by_layer[li] = jnp.where(occ_row[:, None, None],
+                                             upd, ind_l)
+            else:
+                # partial indicator-cache update for ALL active rows
+                # (line 8), materialized as the block slice only
+                blk_prev = jax.lax.dynamic_slice_in_dim(
+                    ind_l, block_start - gen0, block, axis=1)
+                ind_blocks.append(_scatter_rows(blk_prev, rel, t_now))
 
             if li in skip_map:
                 var = vnorm(t_now, t_prev)                    # [B, s_act]
                 c_prev = _gather_rows(conf[:, :, None], gen_idx)[..., 0]
+                if apply:
+                    # the occupancy mask lands in-graph: vacant rows are
+                    # pinned below any real confidence so they never win
+                    # the importance selection (host-side masking gone)
+                    c_prev = jnp.where(occ_row[:, None], c_prev, -1.0)
                 imp = alpha * c_prev + (1.0 - alpha) * var    # Eq. 1
 
                 # early skip: keep top-(1-r)|S| rows (lines 13–14)
@@ -358,6 +441,25 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
         x = h
 
     logits = rmsnorm(x, params.out_norm) @ params.head        # [B,k_f,V]
+
+    if apply:
+        # device-apply outputs: full updated caches + in-graph merged
+        # confidence, retainable on device and chained into the next call
+        kv_new = jnp.stack(kv_blocks)            # [L,2,B,Hkv,T,hd]
+        ind_new = jnp.stack([
+            ind_by_layer.get(li, ind_cache[li].astype(jnp.float32))
+            for li in range(cfg.n_layers)
+        ])                                       # [L,B,gen,d]
+        # confidence = max softmax probability of the surviving
+        # positions' logits, scattered into the confidence state (the
+        # same update the host mirror applies from the downloaded rows)
+        prob = jax.nn.softmax(logits, axis=-1).max(-1)        # [B,k_f]
+        gen_idx = pos - gen0
+        conf_upd = _scatter_rows(conf[:, :, None], gen_idx,
+                                 prob[:, :, None])[..., 0]
+        conf_new = jnp.where(occ_row[:, None], conf_upd, conf)
+        return (logits, pos.astype(jnp.int32), kv_new.astype(CACHE_DT),
+                ind_new.astype(CACHE_DT), conf_new)
 
     # outputs: block slices only (keeps the per-iteration download small)
     kv_block = jnp.stack(kv_blocks)              # [L,2,B,Hkv,block,hd]

@@ -166,3 +166,104 @@ def test_pallas_and_ref_paths_agree_on_step():
     assert bool(jnp.all(a[1] == b[1]))
     np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_step_apply_matches_block_step(setup):
+    """Device-apply step with all rows occupied must produce the same
+    logits/pos as the block-output step, and its in-graph cache updates
+    must equal the host-side scatter of the block outputs."""
+    cfg, params, toks, logits, kv, ind, mass = setup
+    B = toks.shape[0]
+    rng = np.random.RandomState(7)
+    conf = jnp.asarray(rng.rand(B, cfg.gen_len), jnp.float32)
+    skip = [(1, 0.5), (2, 0.5)]
+    sl = [1, 2]
+    blk = _step(cfg, params, toks, kv, ind["h"][jnp.asarray(sl)], conf,
+                skip=skip)
+    x_tok = toks[:, cfg.prompt_len:cfg.prompt_len + 8]
+    occ = jnp.ones((B,), jnp.int32)
+    app = M.step(cfg, params, x_tok, jnp.int32(cfg.prompt_len), kv,
+                 ind["h"], conf, jnp.float32(0.5), block=8, skip=skip,
+                 ind_layers=sl, use_pallas=False, apply=True, occ=occ)
+    # identical selection and logits
+    assert bool(jnp.all(app[1] == blk[1]))
+    np.testing.assert_allclose(np.asarray(app[0]), np.asarray(blk[0]),
+                               rtol=1e-5, atol=1e-5)
+    # the in-graph KV scatter equals the host scatter of the block slice
+    kv_host = np.asarray(kv.astype(jnp.float32)).copy()
+    kv_host[:, :, :, :, cfg.prompt_len:cfg.prompt_len + 8] = np.asarray(
+        blk[2].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(app[2].astype(jnp.float32)),
+                               kv_host)
+    # full shapes: kv/ind/conf are the resident tensors, not slices
+    assert app[2].shape == kv.shape
+    assert app[3].shape == ind["h"].shape
+    assert app[4].shape == (B, cfg.gen_len)
+    # the maintained indicator layers carry the block update; others
+    # pass through
+    ih = np.asarray(ind["h"].astype(jnp.float32))
+    ia = np.asarray(app[3].astype(jnp.float32))
+    np.testing.assert_allclose(ia[0], ih[0])  # layer 0 not maintained
+    assert not np.allclose(ia[1, :, :8], ih[1, :, :8])
+    # in-graph confidence: computed positions hold the max softmax prob
+    probs = np.asarray(jax.nn.softmax(app[0], axis=-1).max(-1))
+    pos = np.asarray(app[1]) - cfg.prompt_len
+    conf_np = np.asarray(app[4])
+    for bi in range(B):
+        for j, p in enumerate(pos[bi]):
+            np.testing.assert_allclose(conf_np[bi, p], probs[bi, j],
+                                       rtol=1e-5)
+
+
+def test_step_apply_passes_vacant_rows_through(setup):
+    """Rows with occ = 0 keep their cache and confidence unchanged."""
+    cfg, params, toks, logits, kv, ind, mass = setup
+    B = toks.shape[0]
+    conf = jnp.asarray(np.random.RandomState(8).rand(B, cfg.gen_len),
+                       jnp.float32)
+    x_tok = toks[:, cfg.prompt_len:cfg.prompt_len + 8]
+    occ = jnp.asarray([1] + [0] * (B - 1), jnp.int32)
+    app = M.step(cfg, params, x_tok, jnp.int32(cfg.prompt_len), kv,
+                 ind["h"], conf, jnp.float32(0.5), block=8,
+                 skip=[(1, 0.5), (2, 0.5)], ind_layers=[1, 2],
+                 use_pallas=False, apply=True, occ=occ)
+    kv0 = np.asarray(kv.astype(jnp.float32))
+    kva = np.asarray(app[2].astype(jnp.float32))
+    # spectator rows (batch dim 2 of kv layout) untouched, stepped row not
+    np.testing.assert_allclose(kva[:, :, 1:], kv0[:, :, 1:])
+    assert not np.allclose(kva[:, :, :1, :, cfg.prompt_len:cfg.prompt_len + 8],
+                           kv0[:, :, :1, :, cfg.prompt_len:cfg.prompt_len + 8])
+    np.testing.assert_allclose(np.asarray(app[4])[1:],
+                               np.asarray(conf)[1:])
+    ia = np.asarray(app[3].astype(jnp.float32))
+    ih = np.asarray(ind["h"].astype(jnp.float32))
+    np.testing.assert_allclose(ia[:, 1:], ih[:, 1:])
+
+
+def test_prefill_apply_refreshes_only_masked_rows(setup):
+    cfg, params, toks, logits, kv, ind, mass = setup
+    B = toks.shape[0]
+    rng = np.random.RandomState(9)
+    kv_prev = jnp.asarray(rng.standard_normal(kv.shape), jnp.bfloat16)
+    ind_prev = jnp.asarray(rng.standard_normal(ind["h"].shape), jnp.bfloat16)
+    conf_prev = jnp.asarray(rng.rand(B, cfg.gen_len), jnp.float32)
+    refresh = jnp.asarray([1] + [0] * (B - 1), jnp.int32)
+    out = M.prefill_apply(cfg, params, toks, kv_prev, ind_prev, conf_prev,
+                          refresh, use_pallas=False)
+    lg, kv_new, ind_new, conf_new = out
+    # refreshed row matches a fresh prefill; spectator rows pass through
+    np.testing.assert_allclose(
+        np.asarray(kv_new.astype(jnp.float32))[:, :, 0],
+        np.asarray(kv.astype(jnp.float32))[:, :, 0])
+    np.testing.assert_allclose(
+        np.asarray(kv_new.astype(jnp.float32))[:, :, 1:],
+        np.asarray(kv_prev.astype(jnp.float32))[:, :, 1:])
+    np.testing.assert_allclose(np.asarray(ind_new.astype(jnp.float32))[:, 1:],
+                               np.asarray(ind_prev.astype(jnp.float32))[:, 1:])
+    np.testing.assert_allclose(np.asarray(conf_new)[1:],
+                               np.asarray(conf_prev)[1:])
+    # in-graph confidence of the refreshed row = max softmax of its
+    # gen-region logits
+    want = np.asarray(jax.nn.softmax(lg[:, cfg.prompt_len:], axis=-1).max(-1))
+    np.testing.assert_allclose(np.asarray(conf_new)[0], want[0], rtol=1e-5)
+    assert lg.shape == (B, cfg.ctx, cfg.vocab)

@@ -116,3 +116,47 @@ def test_manifest_consistency():
                 k = exe["final_keep"]
                 logits = exe["outputs"][0]
                 assert logits["shape"][1] == k, exe_name
+
+
+def test_apply_variants_lower_to_parseable_hlo():
+    """The device-apply executables must obey the same interchange
+    constraints as the block-output ones (no `topk`, all params kept)."""
+    import functools
+    cfg = TINY
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    B, blk = 2, 4
+    params = [jax.ShapeDtypeStruct(s, jnp.float32)
+              for _, s in param_specs(cfg)]
+
+    def step_fn(*flat):
+        p = M.params_from_flat(cfg, flat[:len(params)])
+        x_tok, bs, kv, ind, conf, occ, alpha = flat[len(params):]
+        return M.step(cfg, p, x_tok, bs, kv, ind, conf, alpha, block=blk,
+                      skip=[(1, 0.5)], ind_layers=[1], apply=True, occ=occ)
+
+    text = lower_to_hlo_text(
+        step_fn, *params,
+        jax.ShapeDtypeStruct((B, blk), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((L, 2, B, Hkv, cfg.ctx, hd), jnp.bfloat16),
+        jax.ShapeDtypeStruct((L, B, cfg.gen_len, cfg.d_model), jnp.bfloat16),
+        jax.ShapeDtypeStruct((B, cfg.gen_len), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    assert " topk(" not in text
+
+    def prefill_fn(*flat):
+        p = M.params_from_flat(cfg, flat[:len(params)])
+        toks, kv, ind, conf, refresh = flat[len(params):]
+        return M.prefill_apply(cfg, p, toks, kv, ind, conf, refresh)
+
+    text = lower_to_hlo_text(
+        prefill_fn, *params,
+        jax.ShapeDtypeStruct((B, cfg.ctx), jnp.int32),
+        jax.ShapeDtypeStruct((L, 2, B, Hkv, cfg.ctx, hd), jnp.bfloat16),
+        jax.ShapeDtypeStruct((L, B, cfg.gen_len, cfg.d_model), jnp.bfloat16),
+        jax.ShapeDtypeStruct((B, cfg.gen_len), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    assert " topk(" not in text

@@ -3,6 +3,10 @@
 //!     per step and host staging ms per step), driven through the real
 //!     scheduler over the sim backend — runs on any machine, no PJRT —
 //!     and emitted machine-readably as `BENCH_transfer.json`,
+//!   * Host-apply vs Device-apply on the identical workload (what the
+//!     in-graph scatter/merge + retained-output chain removes from the
+//!     bus in both directions), artifact-free, emitted as
+//!     `BENCH_device_apply.json`,
 //!   * per-executable latency (prefill / dual / es, b1 / b8) with the
 //!     upload/execute/download breakdown from runtime counters (needs
 //!     compiled artifacts; skipped gracefully without them),
@@ -19,6 +23,7 @@ use esdllm::cache::{GroupCaches, RefreshPolicy};
 use esdllm::engine::Method;
 use esdllm::flops;
 use esdllm::manifest::{Dims, ExeKind};
+use esdllm::runtime::resident::{ApplyMode, TransferStats};
 use esdllm::runtime::tensor::HostTensor;
 use esdllm::runtime::Runtime;
 use esdllm::sampler::SamplerCfg;
@@ -146,9 +151,120 @@ fn transfer_section() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Drain one mixed-length workload through the slot scheduler over the
+/// sim backend in the given apply mode; returns (ledger, executable runs).
+fn run_apply_mode(apply: ApplyMode) -> anyhow::Result<(TransferStats, u64)> {
+    let batch = 8;
+    let d = bench_dims();
+    let sim_cfg = SimCfg { dims: d, ..SimCfg::default() }.with_apply(apply);
+    let cfg = SchedCfg {
+        method: Method::EsDllm,
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+        sampler: SamplerCfg::llada(),
+        seed: 0,
+    };
+    let mut sched = GroupScheduler::new(Box::new(SimBackend::new(sim_cfg)), batch, cfg)?;
+    let t0 = Instant::now();
+    for i in 0..batch as u64 {
+        sched.admit(SeqInput {
+            id: i,
+            prompt: ["sort(9,8,7)=789", "1+2", "a|b", "0-1", "9*8", "x&y", "7*7", "3,4"]
+                [i as usize % 8]
+                .to_string(),
+            params: SeqParams::default(),
+            submitted: t0,
+        })?;
+    }
+    let mut guard = 0;
+    while sched.active() > 0 {
+        sched.tick()?;
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    let runs = (sched.n_prefill + sched.n_dual + sched.n_es).max(1) as u64;
+    Ok((sched.transfer_stats(), runs))
+}
+
+/// Host-apply vs device-apply on the identical workload: what the
+/// in-graph scatter/merge + retained-output chain removes from the bus
+/// per step, in both directions. Artifact-free; emits
+/// `BENCH_device_apply.json`.
+fn device_apply_section() -> anyhow::Result<()> {
+    let (host, host_runs) = run_apply_mode(ApplyMode::Host)?;
+    let (dev, dev_runs) = run_apply_mode(ApplyMode::Device)?;
+
+    let mut table = Table::new(
+        "perf_hotpath: Host-apply vs Device-apply (sim, b8, ES)",
+        &[
+            "mode", "up B/step", "KV up B", "ind up B", "conf up B",
+            "d2h avoided B", "chain reuses", "ingraph conf",
+        ],
+    );
+    for (label, st, runs) in
+        [("host-apply (fallback)", &host, host_runs), ("device-apply (chained)", &dev, dev_runs)]
+    {
+        table.row(&[
+            label.to_string(),
+            format!("{}", st.upload_bytes / runs),
+            format!("{}", st.kv_upload_bytes),
+            format!("{}", st.ind_upload_bytes),
+            format!("{}", st.conf_upload_bytes),
+            format!("{}", st.d2h_bytes_avoided),
+            format!("{}", st.retained_out_reuses),
+            format!("{}", st.ingraph_conf_steps),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/results/perf_device_apply.csv")?;
+    println!(
+        "device-apply ships {:.1}x less H2D than host-apply on the same workload \
+         and avoids {} B of D2H cache downloads (host-apply avoids none)",
+        host.upload_bytes as f64 / dev.upload_bytes.max(1) as f64,
+        dev.d2h_bytes_avoided,
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath_device_apply\",\n  \"batch\": 8,\n  \
+         \"block\": 8,\n  \
+         \"host\": {{\n    \"executable_runs\": {},\n    \"upload_bytes\": {},\n    \
+         \"kv_upload_bytes\": {},\n    \"ind_upload_bytes\": {},\n    \
+         \"conf_upload_bytes\": {},\n    \"token_upload_bytes\": {},\n    \
+         \"full_kv_uploads\": {},\n    \"d2h_bytes_avoided\": {}\n  }},\n  \
+         \"device\": {{\n    \"executable_runs\": {},\n    \"upload_bytes\": {},\n    \
+         \"kv_upload_bytes\": {},\n    \"ind_upload_bytes\": {},\n    \
+         \"conf_upload_bytes\": {},\n    \"token_upload_bytes\": {},\n    \
+         \"full_kv_uploads\": {},\n    \"d2h_bytes_avoided\": {},\n    \
+         \"retained_out_reuses\": {},\n    \"ingraph_conf_steps\": {}\n  }}\n}}\n",
+        host_runs,
+        host.upload_bytes,
+        host.kv_upload_bytes,
+        host.ind_upload_bytes,
+        host.conf_upload_bytes,
+        host.token_upload_bytes,
+        host.full_kv_uploads,
+        host.d2h_bytes_avoided,
+        dev_runs,
+        dev.upload_bytes,
+        dev.kv_upload_bytes,
+        dev.ind_upload_bytes,
+        dev.conf_upload_bytes,
+        dev.token_upload_bytes,
+        dev.full_kv_uploads,
+        dev.d2h_bytes_avoided,
+        dev.retained_out_reuses,
+        dev.ingraph_conf_steps,
+    );
+    std::fs::write("artifacts/results/BENCH_device_apply.json", json)?;
+    println!("wrote artifacts/results/BENCH_device_apply.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     transfer_section()?;
+    device_apply_section()?;
 
     let rt = match Runtime::load_default() {
         Ok(rt) => rt,
@@ -204,6 +320,9 @@ fn main() -> anyhow::Result<()> {
                         HostTensor::scalar_f32(0.5),
                     ]
                 }
+                // the device-apply variants chain retained outputs and
+                // are measured through the scheduler, not standalone
+                ExeKind::PrefillApply | ExeKind::StepApply => continue,
             };
             // warm compile + measure
             rt.run(&arch, &exe, "instruct", &inputs)?;

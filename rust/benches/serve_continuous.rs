@@ -70,6 +70,11 @@ struct ModeResult {
     up_kb_per_tick: f64,
     saved_kb_per_tick: f64,
     full_kv_uploads: u64,
+    /// device-apply accounting: D2H KB avoided per tick, retained-output
+    /// chain reuses per tick, in-graph-confidence steps
+    d2h_avoided_kb_per_tick: f64,
+    retained_reuse_per_tick: f64,
+    ingraph_conf_steps: u64,
 }
 
 fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
@@ -118,6 +123,9 @@ fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
         up_kb_per_tick: m.upload_bytes.get() as f64 / 1e3 / ticks as f64,
         saved_kb_per_tick: m.upload_bytes_saved.get() as f64 / 1e3 / ticks as f64,
         full_kv_uploads: m.full_kv_uploads.get(),
+        d2h_avoided_kb_per_tick: m.d2h_bytes_avoided.get() as f64 / 1e3 / ticks as f64,
+        retained_reuse_per_tick: m.retained_out_reuses.get() as f64 / ticks as f64,
+        ingraph_conf_steps: m.ingraph_conf_steps.get(),
     };
     router.shutdown();
     result
@@ -139,7 +147,8 @@ fn main() -> anyhow::Result<()> {
         &[
             "mode", "done", "fail", "wall s", "tokens", "TPS", "occupancy",
             "TPS/busy-slot", "p50 s", "p90 s", "up KB/tick", "saved KB/tick",
-            "full-KV ups",
+            "full-KV ups", "d2h-avoid KB/tick", "chain reuse/tick",
+            "ingraph-conf",
         ],
     );
     for r in [&rtc, &cont] {
@@ -157,6 +166,9 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", r.up_kb_per_tick),
             format!("{:.2}", r.saved_kb_per_tick),
             format!("{}", r.full_kv_uploads),
+            format!("{:.2}", r.d2h_avoided_kb_per_tick),
+            format!("{:.2}", r.retained_reuse_per_tick),
+            format!("{}", r.ingraph_conf_steps),
         ]);
     }
     table.print();
@@ -174,6 +186,13 @@ fn main() -> anyhow::Result<()> {
          on-device ({} full-KV upload(s) = the residency seed; steady-state ES/dual \
          steps re-upload no KV bytes)",
         cont.up_kb_per_tick, cont.saved_kb_per_tick, cont.full_kv_uploads,
+    );
+    println!(
+        "device-apply: {:.2} KB/tick of cache downloads avoided, {:.2} retained-\
+         output reuses/tick, {} steps with in-graph confidence (no host conf \
+         round-trip in either direction)",
+        cont.d2h_avoided_kb_per_tick, cont.retained_reuse_per_tick,
+        cont.ingraph_conf_steps,
     );
     let ok = cont.tps > rtc.tps && cont.occupancy > rtc.occupancy;
     println!(

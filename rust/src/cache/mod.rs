@@ -648,6 +648,33 @@ impl GroupCaches {
         }
     }
 
+    /// Zero-copy view of one full per-name indicator cache
+    /// [L, B, gen, d] (the device-apply chain seed upload — the layer
+    /// gather is a device-side op in that mode).
+    pub fn ind_view(&self, indicator: &str) -> Result<TensorView<'_>> {
+        let d = &self.dims;
+        let src = self
+            .ind
+            .get(indicator)
+            .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
+        Ok(TensorView::Bf16 {
+            shape: ShapeVec::from_slice(&[
+                d.n_layers, self.batch, d.gen_len, d.d_model,
+            ]),
+            data: src,
+        })
+    }
+
+    /// Zero-copy view of the raw confidence state [B, gen] (the
+    /// device-apply chain seed upload — unmasked; the occupancy mask is
+    /// a batch-bit executable input in that mode).
+    pub fn conf_view(&self) -> TensorView<'_> {
+        TensorView::F32 {
+            shape: ShapeVec::from_slice(&[self.batch, self.dims.gen_len]),
+            data: &self.conf,
+        }
+    }
+
     /// Zero-copy view of the pruned KV cache.
     pub fn kv_sparse_view(&self) -> Result<TensorView<'_>> {
         let d = &self.dims;

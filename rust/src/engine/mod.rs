@@ -163,6 +163,35 @@ pub fn step_exe_name(cfg: &EngineCfg, plan: StepPlan, batch: usize, conf_drift: 
     }
 }
 
+/// Name of the device-apply step executable for (plan, block, batch) —
+/// the in-graph-scatter variants compiled alongside the dense dual/es
+/// steps.
+pub fn apply_step_exe_name(plan: StepPlan, block: usize, batch: usize) -> String {
+    match plan {
+        StepPlan::Prefill => unreachable!("prefill executables are not step plans"),
+        StepPlan::DualStep => format!("dual_apply_blk{block}_b{batch}"),
+        StepPlan::EsStep => format!("es_apply_blk{block}_b{batch}"),
+    }
+}
+
+/// Name of the device-apply prefill executable at `batch`.
+pub fn prefill_apply_exe_name(batch: usize) -> String {
+    format!("prefill_apply_b{batch}")
+}
+
+/// Whether this configuration can run the device-apply decode path:
+/// the default dense ES/DualCache pipeline with the "h" indicator. The
+/// fallbacks (sparse attention, indicator ablations, adaptive skip
+/// ratios, executable overrides, the cache-free vanilla baseline) have
+/// no compiled apply variants and stay on the Host-apply path.
+pub fn device_apply_eligible(cfg: &EngineCfg) -> bool {
+    cfg.method != Method::Vanilla
+        && !cfg.sparse
+        && !cfg.adaptive
+        && cfg.indicator == "h"
+        && cfg.es_exe_override.is_none()
+}
+
 pub struct Engine<'rt> {
     rt: &'rt Runtime,
     pub cfg: EngineCfg,
@@ -196,6 +225,19 @@ impl<'rt> Engine<'rt> {
         for name in names {
             let exe = arch.exe(&name)?;
             self.rt.executable(&arch, exe)?;
+        }
+        // the device-apply chain variants, when this config is eligible
+        // and the artifacts carry them (older artifact sets may not)
+        if device_apply_eligible(&self.cfg) {
+            for name in [
+                prefill_apply_exe_name(batch),
+                apply_step_exe_name(StepPlan::DualStep, self.cfg.block, batch),
+                apply_step_exe_name(StepPlan::EsStep, self.cfg.block, batch),
+            ] {
+                if let Ok(exe) = arch.exe(&name) {
+                    self.rt.executable(&arch, exe)?;
+                }
+            }
         }
         self.rt.checkpoint_params(&arch, &self.cfg.checkpoint)?;
         Ok(())

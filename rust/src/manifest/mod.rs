@@ -55,6 +55,23 @@ pub enum ExeKind {
     Prefill,
     Step,
     Observe,
+    /// device-apply prefill: merges its own outputs into the resident
+    /// cache tensors in-graph (row-filtered by the refresh mask) and
+    /// computes confidence in-graph; kv/ind/conf outputs are retained
+    PrefillApply,
+    /// device-apply decode step: dynamic-update-slice cache scatter +
+    /// in-graph confidence, occupancy mask as a batch-bit input
+    StepApply,
+}
+
+/// A device-retained output signature: the named output is produced on
+/// device, left there (never downloaded), and fed back as the named
+/// input on the next call — the KV-chaining contract between the
+/// compile pipeline and the runtime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetainedSig {
+    pub output: String,
+    pub input: String,
 }
 
 #[derive(Debug, Clone)]
@@ -75,6 +92,9 @@ pub struct ExeSpec {
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
     pub output_names: Vec<String>,
+    /// outputs retained on device and chained into the next call's
+    /// inputs (device-apply executables; empty otherwise)
+    pub retained: Vec<RetainedSig>,
 }
 
 #[derive(Debug, Clone)]
@@ -229,11 +249,55 @@ impl Manifest {
                 Some("prefill") => ExeKind::Prefill,
                 Some("step") => ExeKind::Step,
                 Some("observe") => ExeKind::Observe,
-                other => return Err(anyhow!("unknown kind {other:?}")),
+                Some("prefill_apply") => ExeKind::PrefillApply,
+                Some("step_apply") => ExeKind::StepApply,
+                other => {
+                    return Err(anyhow!(
+                        "executable {exe_name}: unknown `kind` {other:?} \
+                         (expected one of prefill | step | observe | \
+                         prefill_apply | step_apply — is this manifest \
+                         newer than the runtime?)"
+                    ))
+                }
             };
             let all_inputs = tensor_sigs(e.get("inputs"))?;
             if all_inputs.len() < n_params {
                 return Err(anyhow!("{exe_name}: fewer inputs than params"));
+            }
+            let output_names: Vec<String> = e
+                .get("output_names")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .map(|x| x.as_str().unwrap_or("").to_string())
+                        .collect()
+                })
+                .unwrap_or_default();
+            let mut retained = Vec::new();
+            if let Some(arr) = e.get("retained_outputs").as_arr() {
+                for r in arr {
+                    let sig = RetainedSig {
+                        output: r.get("output").as_str().unwrap_or("").to_string(),
+                        input: r.get("input").as_str().unwrap_or("").to_string(),
+                    };
+                    if !output_names.iter().any(|n| n == &sig.output) {
+                        return Err(anyhow!(
+                            "executable {exe_name}: `retained_outputs` names \
+                             output {:?} which is not in output_names {:?}",
+                            sig.output,
+                            output_names
+                        ));
+                    }
+                    if !all_inputs[n_params..].iter().any(|i| i.name == sig.input) {
+                        return Err(anyhow!(
+                            "executable {exe_name}: `retained_outputs` chains \
+                             into input {:?} which is not a non-parameter \
+                             input of this executable",
+                            sig.input
+                        ));
+                    }
+                    retained.push(sig);
+                }
             }
             let spec = ExeSpec {
                 name: exe_name.clone(),
@@ -265,15 +329,8 @@ impl Manifest {
                 kv_len: req_usize(e, "kv_len")?,
                 inputs: all_inputs[n_params..].to_vec(),
                 outputs: tensor_sigs(e.get("outputs"))?,
-                output_names: e
-                    .get("output_names")
-                    .as_arr()
-                    .map(|a| {
-                        a.iter()
-                            .map(|x| x.as_str().unwrap_or("").to_string())
-                            .collect()
-                    })
-                    .unwrap_or_default(),
+                output_names,
+                retained,
             };
             executables.insert(exe_name.clone(), spec);
         }
@@ -288,6 +345,28 @@ impl Manifest {
 
     pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
         self.archs.get(name).ok_or_else(|| anyhow!("unknown arch {name}"))
+    }
+}
+
+impl ExeSpec {
+    /// Per-output device-retain flags in manifest output order: `true`
+    /// means the runtime leaves this output on the device (chained into
+    /// the next call) instead of downloading it.
+    pub fn retain_flags(&self) -> Vec<bool> {
+        self.output_names
+            .iter()
+            .map(|n| self.retained.iter().any(|r| &r.output == n))
+            .collect()
+    }
+
+    /// Position of a named output in the output tuple.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.output_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| {
+                anyhow!("executable {}: no output named {name:?}", self.name)
+            })
     }
 }
 

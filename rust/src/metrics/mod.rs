@@ -177,6 +177,14 @@ pub struct Metrics {
     pub full_kv_uploads: Counter,
     /// input syncs served entirely from the resident device copy
     pub resident_reuses: Counter,
+    /// executable inputs served by chaining a retained device output
+    /// (device-apply mode: zero bytes in either direction)
+    pub retained_out_reuses: Counter,
+    /// D2H bytes avoided by retaining outputs on device instead of
+    /// downloading them for a host-side scatter
+    pub d2h_bytes_avoided: Counter,
+    /// runs whose confidence was computed in-graph (no host round-trip)
+    pub ingraph_conf_steps: Counter,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -248,6 +256,9 @@ impl Metrics {
             ("esdllm_token_upload_bytes", self.token_upload_bytes.get()),
             ("esdllm_full_kv_uploads", self.full_kv_uploads.get()),
             ("esdllm_resident_reuses", self.resident_reuses.get()),
+            ("esdllm_retained_out_reuses", self.retained_out_reuses.get()),
+            ("esdllm_d2h_bytes_avoided", self.d2h_bytes_avoided.get()),
+            ("esdllm_ingraph_conf_steps", self.ingraph_conf_steps.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -313,6 +324,9 @@ mod tests {
         m.upload_bytes.add(1024);
         m.upload_bytes_saved.add(4096);
         m.full_kv_uploads.inc();
+        m.retained_out_reuses.add(3);
+        m.d2h_bytes_avoided.add(2048);
+        m.ingraph_conf_steps.inc();
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
@@ -321,6 +335,9 @@ mod tests {
         assert!(text.contains("esdllm_upload_bytes 1024"));
         assert!(text.contains("esdllm_upload_bytes_saved 4096"));
         assert!(text.contains("esdllm_full_kv_uploads 1"));
+        assert!(text.contains("esdllm_retained_out_reuses 3"));
+        assert!(text.contains("esdllm_d2h_bytes_avoided 2048"));
+        assert!(text.contains("esdllm_ingraph_conf_steps 1"));
         assert!(text.contains("esdllm_upload_bytes_per_tick"));
     }
 

@@ -345,6 +345,9 @@ fn tick_once(
     metrics.token_upload_bytes.add(tr.token_upload_bytes);
     metrics.full_kv_uploads.add(tr.full_kv_uploads);
     metrics.resident_reuses.add(tr.resident_reuses);
+    metrics.retained_out_reuses.add(tr.retained_out_reuses);
+    metrics.d2h_bytes_avoided.add(tr.d2h_bytes_avoided);
+    metrics.ingraph_conf_steps.add(tr.ingraph_conf_steps);
     match tick_result {
         Ok(finished) => {
             metrics.ticks_total.inc();
@@ -513,6 +516,11 @@ mod tests {
         assert_eq!(router.metrics.full_kv_uploads.get(), 1);
         assert!(router.metrics.upload_bytes_saved.get() > 0);
         assert!(router.metrics.resident_reuses.get() > 0);
+        // device-apply accounting flows through per tick: steps chained
+        // the retained kv/ind/conf outputs and computed conf in-graph
+        assert!(router.metrics.retained_out_reuses.get() > 0);
+        assert!(router.metrics.d2h_bytes_avoided.get() > 0);
+        assert!(router.metrics.ingraph_conf_steps.get() > 0);
         router.shutdown();
     }
 

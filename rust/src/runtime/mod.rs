@@ -260,7 +260,8 @@ impl Runtime {
     /// host view uploaded this call, or a device buffer retained from an
     /// earlier upload by the resident-cache layer (zero host↔device
     /// traffic). The step hot path uses this to avoid the historical
-    /// full-tensor host clones and re-uploads.
+    /// full-tensor host clones and re-uploads. Every output is
+    /// downloaded — the retain-nothing case of [`Runtime::run_retained`].
     pub fn run_args(
         &self,
         arch: &ArchSpec,
@@ -268,26 +269,46 @@ impl Runtime {
         checkpoint: &str,
         args: &[ExecArg<'_>],
     ) -> Result<Vec<HostTensor>> {
-        if args.len() != exe.inputs.len() {
+        let retain = vec![false; exe.outputs.len()];
+        let out = self.run_retained(arch, exe, checkpoint, args, &retain)?;
+        Ok(out
+            .host
+            .into_iter()
+            .map(|t| t.expect("nothing retained, every output downloaded"))
+            .collect())
+    }
+
+    /// Execute with per-output retention: outputs whose `retain` flag is
+    /// set stay on the device as [`xla::PjRtBuffer`]s (never downloaded —
+    /// the device-apply cache chain feeds them back as
+    /// [`ExecArg::Device`] inputs on the next call); the rest are
+    /// downloaded as host tensors. This is the entry point that removes
+    /// the per-tick D2H/H2D cache bounce: a retained KV block never
+    /// crosses the PCIe bus mid-flight.
+    ///
+    /// Chaining doubles as donation in spirit: the caller replaces its
+    /// previous handle with the new output and drops the old buffer, so
+    /// device memory for the cache stays bounded at one live copy per
+    /// tensor (plus the transient during execution; a donation-capable
+    /// PJRT build can alias them with an input-output alias config at
+    /// compile time, with no changes here).
+    pub fn run_retained(
+        &self,
+        arch: &ArchSpec,
+        exe: &ExeSpec,
+        checkpoint: &str,
+        args: &[ExecArg<'_>],
+        retain: &[bool],
+    ) -> Result<RunOutputs> {
+        if retain.len() != exe.outputs.len() {
             return Err(anyhow!(
-                "{}: expected {} inputs, got {}",
+                "{}: retain flags for {} outputs, manifest says {}",
                 exe.name,
-                exe.inputs.len(),
-                args.len()
+                retain.len(),
+                exe.outputs.len()
             ));
         }
-        for (a, sig) in args.iter().zip(&exe.inputs) {
-            // resident device buffers carry no host-side shape to check;
-            // the planner that retained them is responsible for key match
-            if let ExecArg::Host(v) = a {
-                if v.shape() != sig.shape.as_slice() || v.dtype() != sig.dtype {
-                    return Err(anyhow!(
-                        "{}: input {} shape/dtype mismatch: got {:?} {:?}, want {:?} {:?}",
-                        exe.name, sig.name, v.shape(), v.dtype(), sig.shape, sig.dtype
-                    ));
-                }
-            }
-        }
+        self.check_args(exe, args)?;
         let compiled = self.executable(arch, exe)?;
         let params = self.checkpoint_params(arch, checkpoint)?;
 
@@ -312,37 +333,75 @@ impl Runtime {
 
         let t_exec = std::time::Instant::now();
         let out = compiled
-            .execute_b::<&xla::PjRtBuffer>(&argrefs)
+            .execute_untupled::<&xla::PjRtBuffer>(&argrefs)
             .map_err(|e| anyhow!("execute {}: {e}", exe.name))?;
         let exec_s = t_exec.elapsed().as_secs_f64();
-
-        let t_down = std::time::Instant::now();
-        let tuple = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download {}: {e}", exe.name))?;
-        let literals = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
-        if literals.len() != exe.outputs.len() {
+        let buffers = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output device", exe.name))?;
+        if buffers.len() != exe.outputs.len() {
             return Err(anyhow!(
                 "{}: got {} outputs, manifest says {}",
                 exe.name,
-                literals.len(),
+                buffers.len(),
                 exe.outputs.len()
             ));
         }
-        let outputs: Vec<HostTensor> = literals
-            .iter()
-            .zip(&exe.outputs)
-            .map(|(l, sig)| self.literal_to_host(l, sig.dtype))
-            .collect::<Result<_>>()?;
+
+        let t_down = std::time::Instant::now();
+        let mut host: Vec<Option<HostTensor>> = Vec::with_capacity(buffers.len());
+        let mut retained: Vec<Option<xla::PjRtBuffer>> =
+            Vec::with_capacity(buffers.len());
+        let mut down_bytes = 0u64;
+        for ((buf, sig), &keep) in buffers.into_iter().zip(&exe.outputs).zip(retain) {
+            if keep {
+                host.push(None);
+                retained.push(Some(buf));
+            } else {
+                let lit = buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("download {}: {e}", exe.name))?;
+                let t = self.literal_to_host(&lit, sig.dtype)?;
+                down_bytes += (t.elements() * t.dtype().bytes()) as u64;
+                host.push(Some(t));
+                retained.push(None);
+            }
+        }
         let download_s = t_down.elapsed().as_secs_f64();
 
         let mut st = self.stats.borrow_mut();
         st.executions += 1;
-        st.download_bytes +=
-            outputs.iter().map(|t| (t.elements() * t.dtype().bytes()) as u64).sum::<u64>();
+        st.download_bytes += down_bytes;
         st.exec_seconds += exec_s;
         st.transfer_seconds += download_s;
-        Ok(outputs)
+        Ok(RunOutputs { host, retained })
+    }
+
+    /// Input count + host-view shape/dtype validation shared by the
+    /// execution entry points.
+    fn check_args(&self, exe: &ExeSpec, args: &[ExecArg<'_>]) -> Result<()> {
+        if args.len() != exe.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                exe.name,
+                exe.inputs.len(),
+                args.len()
+            ));
+        }
+        for (a, sig) in args.iter().zip(&exe.inputs) {
+            // resident device buffers carry no host-side shape to check;
+            // the planner that retained them is responsible for key match
+            if let ExecArg::Host(v) = a {
+                if v.shape() != sig.shape.as_slice() || v.dtype() != sig.dtype {
+                    return Err(anyhow!(
+                        "{}: input {} shape/dtype mismatch: got {:?} {:?}, want {:?} {:?}",
+                        exe.name, sig.name, v.shape(), v.dtype(), sig.shape, sig.dtype
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Merge a resident-planner ledger delta into this runtime's stats
@@ -362,6 +421,34 @@ impl Runtime {
 pub enum ExecArg<'a> {
     Host(TensorView<'a>),
     Device(&'a xla::PjRtBuffer),
+}
+
+/// Result of [`Runtime::run_retained`]: per manifest output position,
+/// exactly one of `host` (downloaded) or `retained` (left on device for
+/// chaining into the next call) is populated.
+pub struct RunOutputs {
+    pub host: Vec<Option<HostTensor>>,
+    pub retained: Vec<Option<xla::PjRtBuffer>>,
+}
+
+impl RunOutputs {
+    /// The downloaded tensor at output position `i` (errors if that
+    /// output was retained on device — a signature/flags mismatch).
+    pub fn host_at(&self, i: usize, what: &str) -> Result<&HostTensor> {
+        self.host
+            .get(i)
+            .and_then(|t| t.as_ref())
+            .ok_or_else(|| anyhow!("output {i} ({what}) was not downloaded"))
+    }
+
+    /// Take ownership of the retained device buffer at output position
+    /// `i` (errors if that output was downloaded).
+    pub fn take_retained(&mut self, i: usize, what: &str) -> Result<xla::PjRtBuffer> {
+        self.retained
+            .get_mut(i)
+            .and_then(|b| b.take())
+            .ok_or_else(|| anyhow!("output {i} ({what}) was not retained on device"))
+    }
 }
 
 /// Locate the artifacts directory: $ESDLLM_ARTIFACTS or ./artifacts.

@@ -18,25 +18,42 @@
 //!     [`crate::cache::GroupCaches`] and ships only the rows the host
 //!     actually mutated since the resident copy was last refreshed
 //!     (delta transfer), clearing the bits it ships;
-//!   * [`ApplyMode::Device`] models a transport that applies executable
-//!     outputs (the KV/indicator block scatters, the prefill row merges)
-//!     to the resident copy on-device — the outputs never left the
-//!     device, so `note_*_applied` clears their dirty bits and the
-//!     steady-state step uploads **zero** KV/indicator bytes. The
-//!     deterministic sim backend runs in this mode, which is how the
-//!     transfer win is measured and asserted without PJRT artifacts;
-//!   * [`ApplyMode::Host`] is today's PJRT reality: outputs land in the
-//!     host mirror only, so their rows stay dirty and re-ship as a
-//!     *delta* (block rows, not the full tensor) on the next sync. A
-//!     future device-side scatter executable upgrades the PJRT transport
-//!     to `Device` mode with no scheduler changes.
+//!   * [`ApplyMode::Device`] is the device-apply decode path: the
+//!     `prefill_apply`/`step_apply` executables scatter their own KV and
+//!     indicator updates into the resident cache tensors in-graph
+//!     (dynamic-update-slice), compute confidence in-graph from their
+//!     logits, and take the occupancy mask as a `batch`-bit input. The
+//!     runtime retains those outputs on device
+//!     ([`crate::runtime::Runtime::run_retained`]) and the backend
+//!     chains them into the next call, so after the one-time seed upload
+//!     a steady-state step ships **zero** KV, indicator, and confidence
+//!     bytes in either direction — only block tokens (plus the batch-bit
+//!     masks) go up, and only the sampled logit rows come down. Both the
+//!     PJRT backend (when the apply executables are compiled) and the
+//!     deterministic sim backend run this mode through the same
+//!     [`DeviceGroupCaches::sync_prefill_device`] /
+//!     [`DeviceGroupCaches::sync_step_device`] planner, which is how the
+//!     two ledgers are kept byte-exact and asserted without artifacts;
+//!   * [`ApplyMode::Host`] is the stateless-executable fallback (sparse
+//!     attention, indicator ablations, adaptive skip ratios — variants
+//!     without compiled apply executables): outputs land in the host
+//!     mirror only, so their rows stay dirty and re-ship as a *delta*
+//!     (block rows, not the full tensor) on the next sync.
 //!
-//! Confidence is host-computed (softmax over downloaded logits) and the
-//! rebuild of the pruned sparse KV is host-side top-k, so those rows are
-//! honestly host-originated in both modes and re-ship as deltas. The
-//! occupancy mask applied to the confidence input is modelled as a
-//! device-side op (a real transport ships a `batch`-bit mask, not the
-//! tensor).
+//! In `Host` mode confidence is host-computed (softmax over downloaded
+//! logits) and re-ships as a delta; in `Device` mode the host keeps a
+//! confidence *mirror* recomputed from the downloaded logit rows (the
+//! sampler reads it) but never uploads it — the device copy is advanced
+//! in-graph by the same update. The sparse-KV rebuild is host-side top-k
+//! in both modes, which is one reason the sparse path stays on `Host`.
+//!
+//! The host KV/indicator mirrors go stale in `Device` mode (nothing
+//! downloads the cache blocks back). That is safe because nothing reads
+//! them there — admission resets are regenerated on device by the
+//! grounding `prefill_apply` (refresh mask), and
+//! [`DeviceGroupCaches::invalidate`] plus the scheduler's eviction path
+//! guarantee a failed transfer or an evicted group can never seed a new
+//! chain from the stale mirror without a full re-ground.
 
 use std::collections::BTreeMap;
 
@@ -99,6 +116,18 @@ pub struct TransferStats {
     pub full_kv_uploads: u64,
     /// syncs served entirely from the resident copy (zero bytes shipped)
     pub resident_reuses: u64,
+    /// executable inputs served by chaining a retained device *output*
+    /// (device-apply mode: the tensor never crossed the bus in either
+    /// direction — counted per chained input per run)
+    pub retained_out_reuses: u64,
+    /// D2H bytes avoided by retaining outputs on device instead of
+    /// downloading them, vs the Host-apply path's downloads for the same
+    /// plan (step: the KV/indicator block slices; prefill: the full KV +
+    /// indicator caches)
+    pub d2h_bytes_avoided: u64,
+    /// runs whose per-token confidence was computed in-graph (no host
+    /// conf round-trip in either direction)
+    pub ingraph_conf_steps: u64,
 }
 
 impl TransferStats {
@@ -138,6 +167,9 @@ impl TransferStats {
         self.token_upload_bytes += d.token_upload_bytes;
         self.full_kv_uploads += d.full_kv_uploads;
         self.resident_reuses += d.resident_reuses;
+        self.retained_out_reuses += d.retained_out_reuses;
+        self.d2h_bytes_avoided += d.d2h_bytes_avoided;
+        self.ingraph_conf_steps += d.ingraph_conf_steps;
     }
 
     /// Field-wise delta against an earlier snapshot of the same ledger.
@@ -160,6 +192,15 @@ impl TransferStats {
                 .saturating_sub(earlier.token_upload_bytes),
             full_kv_uploads: self.full_kv_uploads.saturating_sub(earlier.full_kv_uploads),
             resident_reuses: self.resident_reuses.saturating_sub(earlier.resident_reuses),
+            retained_out_reuses: self
+                .retained_out_reuses
+                .saturating_sub(earlier.retained_out_reuses),
+            d2h_bytes_avoided: self
+                .d2h_bytes_avoided
+                .saturating_sub(earlier.d2h_bytes_avoided),
+            ingraph_conf_steps: self
+                .ingraph_conf_steps
+                .saturating_sub(earlier.ingraph_conf_steps),
         }
     }
 }
@@ -174,14 +215,17 @@ pub struct SyncOutcome {
 /// How executable outputs reach the resident device copy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ApplyMode {
-    /// Outputs are applied to the resident copy on-device (they were
-    /// produced there); the mirrored host scatter leaves nothing to
-    /// re-upload. Used by the sim/virtual transport; the PJRT transport
-    /// graduates to this once device-side scatter executables exist.
+    /// The device-apply path: `prefill_apply`/`step_apply` executables
+    /// scatter their own updates into the resident cache tensors
+    /// in-graph and the runtime retains those outputs for chaining, so
+    /// nothing is downloaded and re-shipped. Used by the PJRT backend
+    /// whenever the apply executables are compiled, and by the sim
+    /// backend by default.
     Device,
     /// Outputs land only in the host mirror; the scattered rows stay
     /// dirty and re-ship as a delta on the next sync (the stateless-
-    /// executable PJRT transport today).
+    /// executable fallback: sparse attention, indicator ablations,
+    /// adaptive skip ratios).
     Host,
 }
 
@@ -193,10 +237,14 @@ pub struct UploadHandle {
     pub lit: Option<xla::Literal>,
 }
 
-/// Per-kind retained device buffers. An entry is reusable only while the
-/// sync planner reports zero dirty rows for the reading slots *and* the
-/// derived-input key (gathered layer set, occupancy-mask slot set) still
-/// matches what the buffer was built for.
+/// Per-kind retained device buffers. An upload entry is reusable only
+/// while the sync planner reports zero dirty rows for the reading slots
+/// *and* the derived-input key (gathered layer set, occupancy-mask slot
+/// set) still matches what the buffer was built for. The `*_chain`
+/// entries are the device-apply output chains: the executable's own
+/// retained outputs (or the one-time seed upload), fed straight back as
+/// the next call's inputs — replacing a chain entry drops the previous
+/// buffer, so device memory stays bounded at one live copy per tensor.
 #[derive(Default)]
 pub struct ResidentHandles {
     pub kv: Option<UploadHandle>,
@@ -205,6 +253,11 @@ pub struct ResidentHandles {
     pub ind: Option<(String, Vec<usize>, UploadHandle)>,
     /// keyed by the slot set the occupancy mask was built for
     pub conf: Option<(Vec<usize>, UploadHandle)>,
+    /// device-apply chains (ApplyMode::Device): full KV cache, the full
+    /// per-name indicator cache, and the confidence state
+    pub kv_chain: Option<UploadHandle>,
+    pub ind_chain: Option<UploadHandle>,
+    pub conf_chain: Option<UploadHandle>,
 }
 
 /// The resident-cache layer for one batch group: buffer pool + dirty-
@@ -228,6 +281,10 @@ pub struct DeviceGroupCaches {
     pub ind_gather: HostTensor,
     /// pooled occupancy-masked confidence input [B, gen] (f32)
     pub conf_masked: HostTensor,
+    /// pooled batch-bit occupancy / refresh mask [B] (i32 0/1) — the
+    /// device-apply executables take this instead of a host-masked
+    /// confidence tensor
+    pub occ_mask: HostTensor,
     pub handles: ResidentHandles,
     pub stats: TransferStats,
 }
@@ -252,6 +309,7 @@ impl DeviceGroupCaches {
                 shape: vec![batch, dims.gen_len],
                 data: vec![-1.0f32; batch * dims.gen_len],
             },
+            occ_mask: HostTensor::I32 { shape: vec![batch], data: vec![0i32; batch] },
             handles: ResidentHandles::default(),
             stats: TransferStats::default(),
         }
@@ -403,6 +461,169 @@ impl DeviceGroupCaches {
         out
     }
 
+    // -- device-apply planner (ApplyMode::Device) ---------------------------
+    //
+    // Both backends route their Device-mode ticks through the two
+    // composite syncs below, so the PJRT planner and the sim planner
+    // produce identical `TransferStats` by construction (asserted in
+    // tests/transfer_accounting.rs).
+
+    /// Bytes of the full per-name indicator cache (the device-apply
+    /// chain keeps every layer resident; the gather is in-graph).
+    fn ind_cache_bytes(&self) -> u64 {
+        (self.dims.n_layers * self.batch * self.dims.gen_len * self.dims.d_model * 2) as u64
+    }
+
+    /// Bytes of the confidence state tensor.
+    fn conf_bytes(&self) -> u64 {
+        (self.batch * self.dims.gen_len * 4) as u64
+    }
+
+    /// Stage the batch-bit occupancy / refresh mask for `slots` into the
+    /// pooled [B] i32 buffer. The mask rides up with the tokens (B × 4
+    /// bytes — this is what replaces the host-masked confidence upload).
+    pub fn stage_occ_mask(&mut self, slots: &[usize]) -> SyncOutcome {
+        if let HostTensor::I32 { data, .. } = &mut self.occ_mask {
+            data.iter_mut().for_each(|v| *v = 0);
+            for &b in slots {
+                data[b] = 1;
+            }
+        }
+        let bytes = (self.batch * 4) as u64;
+        let out = SyncOutcome { shipped: bytes, full: bytes };
+        self.stats.record(TransferKind::Tokens, bytes, bytes);
+        out
+    }
+
+    /// Input sync for one device-apply prefill refreshing `slots`:
+    /// stages the token rows and the refresh mask, then seeds or chains
+    /// the kv/ind/conf resident tensors. The first touch ships the whole
+    /// host tensors (the physical upload that opens the chain — the
+    /// residency seed); every later call feeds back the executable's own
+    /// retained outputs for zero bytes. Also accounts the D2H bytes this
+    /// plan avoids vs the Host-apply prefill's cache downloads.
+    pub fn sync_prefill_device(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        tokens: &[i32],
+        slots: &[usize],
+    ) -> Result<()> {
+        if self.apply != ApplyMode::Device {
+            return Err(anyhow!("sync_prefill_device requires ApplyMode::Device"));
+        }
+        self.stage_prefill_tokens(tokens, slots);
+        self.stage_occ_mask(slots);
+        let kv_full = caches.kv_bytes() as u64;
+        if !self.kv_seeded {
+            self.kv_seeded = true;
+            caches.dirty.kv.clear_all();
+            self.stats.record(TransferKind::Kv, kv_full, kv_full);
+        } else {
+            self.stats.record(TransferKind::Kv, 0, kv_full);
+            self.stats.retained_out_reuses += 1;
+        }
+        let ind_full = self.ind_cache_bytes();
+        if !self.ind_seeded.contains_key(indicator) {
+            self.ind_seeded.insert(indicator.to_string(), false);
+        }
+        let seeded = self.ind_seeded.get_mut(indicator).expect("just inserted");
+        if !*seeded {
+            *seeded = true;
+            caches
+                .dirty
+                .ind
+                .get_mut(indicator)
+                .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?
+                .clear_all();
+            self.stats.record(TransferKind::Ind, ind_full, ind_full);
+        } else {
+            self.stats.record(TransferKind::Ind, 0, ind_full);
+            self.stats.retained_out_reuses += 1;
+        }
+        let conf_full = self.conf_bytes();
+        if !self.conf_seeded {
+            self.conf_seeded = true;
+            self.stats.record(TransferKind::Conf, conf_full, conf_full);
+        } else {
+            self.stats.record(TransferKind::Conf, 0, conf_full);
+            self.stats.retained_out_reuses += 1;
+        }
+        // the Host-apply prefill downloads the full KV plus every
+        // indicator cache to refresh the host mirrors; this plan retains
+        // them on device instead (confidence is NOT counted: the Host
+        // path computes it from logits, which both paths download)
+        self.stats.d2h_bytes_avoided +=
+            kv_full + crate::cache::INDICATORS.len() as u64 * ind_full;
+        Ok(())
+    }
+
+    /// Input sync for one device-apply step over `block` positions at
+    /// `block_start` for `slots`: token rows and the occupancy mask ship;
+    /// the kv/ind/conf inputs chain the previous call's retained outputs
+    /// (zero bytes); confidence is computed in-graph. `n_ind` is the
+    /// number of indicator layers the equivalent Host-apply step would
+    /// have downloaded in its `ind_block` output (the exe's maintained
+    /// layers — skip layers for ES, every layer for dual), used only for
+    /// the honest `d2h_bytes_avoided` baseline. Errors if the chain has
+    /// not been seeded (a step before any grounding prefill) or if the
+    /// stepped slots' rows are host-divergent — the transport has no
+    /// partial write into a retained buffer, so such a step would
+    /// silently execute against stale cache rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sync_step_device(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        n_ind: usize,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+    ) -> Result<()> {
+        if self.apply != ApplyMode::Device {
+            return Err(anyhow!("sync_step_device requires ApplyMode::Device"));
+        }
+        if !self.kv_seeded || !self.conf_seeded {
+            return Err(anyhow!(
+                "device-apply step before the seeding prefill (cache chain missing)"
+            ));
+        }
+        let ind_bm = caches
+            .dirty
+            .ind
+            .get(indicator)
+            .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?;
+        for &b in slots {
+            let kv_dirty = caches.dirty.kv.count_slot(b);
+            let ind_dirty = ind_bm.count_slot(b);
+            if kv_dirty > 0 || ind_dirty > 0 {
+                return Err(anyhow!(
+                    "device-apply step on slot {b} with {kv_dirty} host-dirty KV \
+                     rows and {ind_dirty} indicator rows the chained transport \
+                     cannot deliver; ground the slot with a prefill first"
+                ));
+            }
+        }
+        self.stage_step_tokens(tokens, block_start, block, slots);
+        self.stage_occ_mask(slots);
+        let kv_full = caches.kv_bytes() as u64;
+        let ind_full = self.ind_cache_bytes();
+        let conf_full = self.conf_bytes();
+        self.stats.record(TransferKind::Kv, 0, kv_full);
+        self.stats.record(TransferKind::Ind, 0, ind_full);
+        self.stats.record(TransferKind::Conf, 0, conf_full);
+        self.stats.retained_out_reuses += 3;
+        self.stats.ingraph_conf_steps += 1;
+        // the Host-apply step downloads the KV block slice plus the
+        // maintained layers' indicator block slice for the host scatter;
+        // this plan retains the whole updated caches on device instead
+        let kv_block = (self.batch * block * caches.kv_row_bytes()) as u64;
+        let ind_block = (n_ind * self.batch * block * self.dims.d_model * 2) as u64;
+        self.stats.d2h_bytes_avoided += kv_block + ind_block;
+        Ok(())
+    }
+
     /// Forget everything the device supposedly holds: drop every
     /// retained handle, reset the seeded flags, and mark the entire host
     /// state dirty. Called after a failed upload/execute — the sync
@@ -460,14 +681,18 @@ impl DeviceGroupCaches {
             if let Some(bm) = caches.dirty.ind.get_mut(indicator) {
                 bm.clear_range(b, g0, g0 + block);
             }
+            // the step merged its confidence in-graph over the same
+            // block window; the host mirror applies the identical update
+            // from the downloaded logit rows
+            caches.dirty.conf.clear_range(b, g0, g0 + block);
         }
     }
 
-    /// A prefill's outputs (full KV + all indicator caches) were merged
-    /// into the host mirror for `slots`; under [`ApplyMode::Device`] the
-    /// resident copy received the same row-filtered merge. Confidence
-    /// stays dirty (host-computed from the downloaded logits), as does a
-    /// sparse rebuild (host-side top-k).
+    /// A prefill's outputs were merged into the host mirror for `slots`;
+    /// under [`ApplyMode::Device`] the resident copy received the same
+    /// row-filtered merge in-graph (including the in-graph confidence
+    /// refresh). A sparse rebuild stays dirty (host-side top-k — the
+    /// sparse path runs in `Host` mode).
     pub fn note_prefill_applied(&mut self, caches: &mut GroupCaches, slots: &[usize]) {
         if self.apply != ApplyMode::Device {
             return;
@@ -477,6 +702,7 @@ impl DeviceGroupCaches {
             for bm in caches.dirty.ind.values_mut() {
                 bm.clear_slot(b);
             }
+            caches.dirty.conf.clear_slot(b);
         }
     }
 }
@@ -589,6 +815,106 @@ mod tests {
         let reseed = r.sync_kv(&mut c, &[0, 1]);
         assert_eq!(reseed.shipped, c.kv_bytes() as u64, "next sync re-seeds");
         assert_eq!(r.stats.full_kv_uploads, 2);
+    }
+
+    #[test]
+    fn device_planner_seed_then_zero_byte_steady_state() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        let slots = [0usize, 1];
+
+        // a step before any grounding prefill must refuse to run
+        assert!(r
+            .sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &slots)
+            .is_err());
+
+        // grounding prefill: seeds all three chains (one full upload each)
+        r.sync_prefill_device(&mut c, "h", &tokens, &slots).unwrap();
+        assert_eq!(r.stats.full_kv_uploads, 1);
+        assert_eq!(r.stats.kv_upload_bytes, c.kv_bytes() as u64);
+        assert!(r.stats.ind_upload_bytes > 0);
+        assert!(r.stats.conf_upload_bytes > 0);
+        assert!(r.stats.d2h_bytes_avoided > 0);
+        r.note_prefill_applied(&mut c, &slots);
+
+        // steady-state step: only tokens + the batch-bit mask ship
+        let snap = r.stats;
+        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &slots)
+            .unwrap();
+        r.note_step_applied(&mut c, "h", false, d.prompt_len, 2, &slots);
+        let delta = r.stats.since(&snap);
+        assert_eq!(delta.kv_upload_bytes, 0);
+        assert_eq!(delta.ind_upload_bytes, 0);
+        assert_eq!(delta.conf_upload_bytes, 0);
+        assert_eq!(delta.full_kv_uploads, 0);
+        let expected_tokens = (2 * 2 * 4 + 2 * 4) as u64; // block rows + mask
+        assert_eq!(delta.token_upload_bytes, expected_tokens);
+        assert_eq!(delta.upload_bytes, expected_tokens);
+        assert_eq!(delta.retained_out_reuses, 3, "kv+ind+conf all chained");
+        assert_eq!(delta.ingraph_conf_steps, 1);
+        assert!(delta.d2h_bytes_avoided > 0, "block downloads avoided");
+        assert_eq!(delta.resident_reuses, 3);
+    }
+
+    #[test]
+    fn device_step_refuses_host_divergent_slot() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();
+        r.note_prefill_applied(&mut c, &[0, 1]);
+
+        // an admission reset dirties slot 1; stepping it without the
+        // grounding prefill must fail loudly, naming the slot
+        c.reset_slot(1);
+        let err = r
+            .sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[1])
+            .unwrap_err();
+        assert!(format!("{err}").contains("slot 1"), "{err}");
+        // the co-resident slot is unaffected and can still step
+        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[0])
+            .unwrap();
+        // after the grounding prefill the admitted slot steps again
+        r.sync_prefill_device(&mut c, "h", &tokens, &[1]).unwrap();
+        r.note_prefill_applied(&mut c, &[1]);
+        let snap = r.stats;
+        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[1])
+            .unwrap();
+        assert_eq!(r.stats.since(&snap).kv_upload_bytes, 0, "regenerated on device");
+    }
+
+    #[test]
+    fn invalidate_resets_the_device_chain_for_reseed() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();
+        r.note_prefill_applied(&mut c, &[0, 1]);
+
+        r.invalidate(&mut c);
+        assert!(r.handles.kv_chain.is_none() && r.handles.conf_chain.is_none());
+        // a step against the dropped chain is refused...
+        assert!(r
+            .sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[0])
+            .is_err());
+        // ...and the next grounding prefill re-seeds (a second full upload)
+        r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();
+        assert_eq!(r.stats.full_kv_uploads, 2);
+    }
+
+    #[test]
+    fn occ_mask_stages_requested_slots() {
+        let d = dims();
+        let mut r = DeviceGroupCaches::new(&d, 3, ApplyMode::Device);
+        let out = r.stage_occ_mask(&[1]);
+        assert_eq!(out.shipped, 12, "B x 4 bytes");
+        assert_eq!(r.occ_mask.as_i32().unwrap(), &[0, 1, 0]);
+        r.stage_occ_mask(&[0, 2]);
+        assert_eq!(r.occ_mask.as_i32().unwrap(), &[1, 0, 1]);
     }
 
     #[test]

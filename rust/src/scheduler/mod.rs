@@ -27,19 +27,28 @@
 //! Correctness of mid-flight admission rests on two facts: batch rows
 //! are independent sequences end to end (attention never crosses rows),
 //! and every cache merge here is row-filtered (`*_slots` operations in
-//! [`crate::cache`]), so a grounding prefill for a newly admitted slot —
-//! or a step applied at another slot's block window — never perturbs the
-//! other occupants' trajectories. Vacant rows are additionally pinned to
-//! confidence -1 on the step executables' confidence input (occupancy
-//! mask) so they never win the in-graph importance selection.
+//! [`crate::cache`], or the in-graph `where(occ)` passthrough of the
+//! device-apply executables), so a grounding prefill for a newly
+//! admitted slot — or a step applied at another slot's block window —
+//! never perturbs the other occupants' trajectories. Vacant rows are
+//! additionally pinned to confidence -1 for the in-graph importance
+//! selection: host-side on the masked confidence input of the stateless
+//! step executables, in-graph from the batch-bit occupancy mask on the
+//! device-apply ones.
 //!
 //! Step I/O is mediated by the resident-cache layer
-//! ([`crate::runtime::resident::DeviceGroupCaches`]): per-kind dirty
-//! bitmaps in [`crate::cache::GroupCaches`] track which rows the host
-//! mutated since the device copy was refreshed, syncs ship only those
-//! rows (admission invalidation re-syncs exactly the admitted slot), and
-//! pooled staging buffers replace the historical per-tick host clones of
-//! the full KV/indicator/confidence tensors. The per-backend
+//! ([`crate::runtime::resident::DeviceGroupCaches`]). On the device-
+//! apply path (`ApplyMode::Device` — the PJRT backend whenever the
+//! `*_apply` executables are compiled, and the sim backend by default)
+//! the executables scatter their own cache updates in-graph, the
+//! runtime retains those outputs, and the backend chains them across
+//! ticks — steady state ships block tokens and batch-bit masks up and
+//! sampled logit rows down, nothing else. On the Host-apply fallback,
+//! per-kind dirty bitmaps in [`crate::cache::GroupCaches`] track which
+//! rows the host mutated since the device copy was refreshed and syncs
+//! ship only those rows (admission invalidation re-syncs exactly the
+//! admitted slot), with pooled staging buffers replacing the historical
+//! per-tick host clones. The per-backend
 //! [`crate::runtime::resident::TransferStats`] ledger flows through
 //! [`GroupScheduler::transfer_stats`] into the serving metrics.
 //!
@@ -58,7 +67,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::cache::{GroupCaches, RefreshPolicy, StepPlan};
-use crate::engine::{step_exe_name, EngineCfg, Method};
+use crate::engine::{
+    apply_step_exe_name, device_apply_eligible, prefill_apply_exe_name, step_exe_name,
+    EngineCfg, Method,
+};
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
@@ -169,6 +181,11 @@ pub trait StepBackend {
     fn transfer_stats(&self) -> TransferStats {
         TransferStats::default()
     }
+    /// Drop all resident device state (retained handles, seeded chains)
+    /// and mark the host caches fully dirty. Called by
+    /// [`GroupScheduler::evict_all`] so a later re-admission can never
+    /// step against a stale device copy of the evicted group.
+    fn invalidate_resident(&mut self, _caches: &mut GroupCaches) {}
 }
 
 /// Scheduling parameters (the method-level subset of [`EngineCfg`]).
@@ -269,10 +286,16 @@ impl<'a> GroupScheduler<'a> {
 
     /// Evict every resident sequence without producing results (used by
     /// the router to fail outstanding requests after a backend error).
+    /// Also invalidates the backend's resident device caches: the sync
+    /// planner's cleared dirty bits promise the device copy matches the
+    /// host, and an eviction orphans that promise — a sequence admitted
+    /// later must re-seed (or re-ground on device) rather than step
+    /// against the evicted group's stale rows.
     pub fn evict_all(&mut self) {
         for s in self.slots.iter_mut() {
             *s = None;
         }
+        self.backend.invalidate_resident(&mut self.caches);
     }
 
     /// Admit a sequence into the lowest free slot. Fails with a
@@ -512,15 +535,27 @@ pub fn seq_complete(gen_row: &[i32], mask: i32, eos: i32) -> bool {
 /// executables (the plumbing that used to live inside
 /// `Engine::generate`).
 ///
-/// Step I/O goes through a [`DeviceGroupCaches`] resident layer: inputs
-/// are staged in pooled buffers or borrowed straight from the group
-/// caches (no full-tensor host clones), the big cache uploads are
-/// retained as device handles and reused whenever the dirty bitmaps say
-/// the reading slots' rows are unchanged, and every sync is accounted in
-/// the transfer ledger. The layer runs in [`ApplyMode::Host`] because
-/// the stateless executables return block outputs to the host; a future
-/// device-side scatter executable flips it to [`ApplyMode::Device`]
-/// (zero steady-state KV re-upload) with no scheduler changes.
+/// Step I/O goes through a [`DeviceGroupCaches`] resident layer in one
+/// of two modes, chosen at construction:
+///
+///   * [`ApplyMode::Device`] — when the artifacts carry the
+///     `prefill_apply`/`step_apply` executables and the configuration is
+///     eligible ([`crate::engine::device_apply_eligible`]). The
+///     executables scatter their own KV/indicator updates into the
+///     resident cache tensors in-graph and compute confidence in-graph;
+///     the runtime retains those outputs
+///     ([`crate::runtime::Runtime::run_retained`]) and this backend
+///     chains them across ticks, so in steady state only block tokens
+///     and the batch-bit occupancy mask go up and only the sampled
+///     logit rows come down — the KV block never crosses the bus
+///     mid-flight.
+///   * [`ApplyMode::Host`] — the stateless-executable fallback (sparse
+///     attention, indicator ablations, adaptive ratios, or artifact sets
+///     without the apply variants): inputs are staged in pooled buffers
+///     or borrowed straight from the group caches, uploads are retained
+///     and reused while the dirty bitmaps allow, and step outputs are
+///     downloaded and scattered host-side (their rows re-ship as
+///     deltas).
 pub struct PjrtBackend<'rt> {
     rt: &'rt Runtime,
     cfg: EngineCfg,
@@ -538,7 +573,23 @@ pub struct PjrtBackend<'rt> {
 impl<'rt> PjrtBackend<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: EngineCfg, batch: usize) -> Result<PjrtBackend<'rt>> {
         let arch = rt.arch(&cfg.arch)?.clone();
-        let resident = DeviceGroupCaches::new(&arch.dims, batch, ApplyMode::Host);
+        // device-apply needs every executable the config can reach, or a
+        // mid-generation plan would have to fall back with a cold chain
+        let apply = if device_apply_eligible(&cfg)
+            && arch.executables.contains_key(&prefill_apply_exe_name(batch))
+            && arch
+                .executables
+                .contains_key(&apply_step_exe_name(StepPlan::DualStep, cfg.block, batch))
+            && (cfg.method != Method::EsDllm
+                || arch
+                    .executables
+                    .contains_key(&apply_step_exe_name(StepPlan::EsStep, cfg.block, batch)))
+        {
+            ApplyMode::Device
+        } else {
+            ApplyMode::Host
+        };
+        let resident = DeviceGroupCaches::new(&arch.dims, batch, apply);
         Ok(PjrtBackend {
             rt,
             cfg,
@@ -548,6 +599,12 @@ impl<'rt> PjrtBackend<'rt> {
             last_flushed: TransferStats::default(),
             conf_drift: 1.0,
         })
+    }
+
+    /// Which apply mode this backend selected (visible for tests and the
+    /// perf benches).
+    pub fn apply_mode(&self) -> ApplyMode {
+        self.resident.apply_mode()
     }
 
     /// Mirror the planner-ledger growth into the runtime's stats so
@@ -600,6 +657,15 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
+        if self.resident.apply_mode() == ApplyMode::Device {
+            let result = self.prefill_device_impl(tokens, slots, caches);
+            if result.is_err() {
+                // the sync planner seeded/reused the chain for a run that
+                // never delivered; take the promise back wholesale
+                self.resident.invalidate(caches);
+            }
+            return result;
+        }
         let d = self.arch.dims;
         // row-filtered staging: only the refreshed slots' rows are copied
         // into the persistent upload buffer (no whole-group tokens clone)
@@ -646,11 +712,16 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        let result = self.step_impl(plan, tokens, block_start, block, slots, caches);
+        let result = if self.resident.apply_mode() == ApplyMode::Device {
+            self.step_device_impl(plan, tokens, block_start, block, slots, caches)
+        } else {
+            self.step_impl(plan, tokens, block_start, block, slots, caches)
+        };
         if result.is_err() {
-            // the sync planner cleared dirty bits for uploads that never
-            // completed; forget the resident state so a later tick on
-            // this scheduler cannot execute against a stale device copy
+            // the sync planner cleared dirty bits (or chained retained
+            // outputs) for a run that never completed; forget the
+            // resident state so a later tick on this scheduler cannot
+            // execute against a stale device copy
             self.resident.invalidate(caches);
         }
         result
@@ -658,6 +729,10 @@ impl StepBackend for PjrtBackend<'_> {
 
     fn transfer_stats(&self) -> TransferStats {
         self.resident.stats
+    }
+
+    fn invalidate_resident(&mut self, caches: &mut GroupCaches) {
+        self.resident.invalidate(caches);
     }
 }
 
@@ -782,6 +857,148 @@ impl PjrtBackend<'_> {
             let block_lo = block_start - d.prompt_len;
             self.update_drift(caches, &before, slots, block_lo, block_lo + block);
         }
+        Ok(())
+    }
+
+    /// Device-apply prefill: the `prefill_apply` executable regenerates
+    /// the refreshed slots' KV/indicator/confidence rows in-graph
+    /// (row-filtered by the batch-bit refresh mask) and its cache
+    /// outputs are retained on device; the host downloads only the
+    /// logits it needs for sampling. The first call of a chain seeds the
+    /// resident tensors from the host mirrors — the only whole-cache
+    /// upload of a generation.
+    fn prefill_device_impl(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        // sync accounting shared with the sim planner (byte-exact parity)
+        self.resident.sync_prefill_device(caches, "h", tokens, slots)?;
+        if self.resident.handles.kv_chain.is_none() {
+            let (buf, lit) = self.rt.upload_tensor_view(&caches.kv_view())?;
+            self.resident.handles.kv_chain = Some(UploadHandle { buf, lit });
+        }
+        if self.resident.handles.ind_chain.is_none() {
+            let (buf, lit) = self.rt.upload_tensor_view(&caches.ind_view("h")?)?;
+            self.resident.handles.ind_chain = Some(UploadHandle { buf, lit });
+        }
+        if self.resident.handles.conf_chain.is_none() {
+            let (buf, lit) = self.rt.upload_tensor_view(&caches.conf_view())?;
+            self.resident.handles.conf_chain = Some(UploadHandle { buf, lit });
+        }
+        let exe = self.arch.exe(&prefill_apply_exe_name(self.batch))?;
+        debug_assert_eq!(exe.kind, ExeKind::PrefillApply);
+        let retain = exe.retain_flags();
+        let kv_buf = &self.resident.handles.kv_chain.as_ref().expect("just seeded").buf;
+        let ind_buf = &self.resident.handles.ind_chain.as_ref().expect("just seeded").buf;
+        let conf_buf = &self.resident.handles.conf_chain.as_ref().expect("just seeded").buf;
+        let args = [
+            ExecArg::Host(self.resident.prefill_tokens.view()),
+            ExecArg::Device(kv_buf),
+            ExecArg::Device(ind_buf),
+            ExecArg::Device(conf_buf),
+            // refresh mask: which rows this prefill regenerates
+            ExecArg::Host(self.resident.occ_mask.view()),
+        ];
+        let mut out =
+            self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
+        // host mirror refresh: logits + the confidence the sampler reads
+        // (recomputed from the same logits the device conf merge used)
+        let logits_i = exe.output_index("logits")?;
+        caches.merge_full_logits_slots(out.host_at(logits_i, "logits")?, slots)?;
+        // chain the retained outputs; the previous buffers drop here, so
+        // device memory stays bounded at one live copy per tensor
+        self.resident.handles.kv_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("kv")?, "kv")?,
+            lit: None,
+        });
+        self.resident.handles.ind_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("ind")?, "ind")?,
+            lit: None,
+        });
+        self.resident.handles.conf_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("conf")?, "conf")?,
+            lit: None,
+        });
+        self.resident.note_prefill_applied(caches, slots);
+        self.flush_transfer();
+        Ok(())
+    }
+
+    /// Device-apply step: chains the retained kv/ind/conf outputs of the
+    /// previous call straight back as inputs (zero cache bytes in either
+    /// direction), ships only the block tokens + batch-bit occupancy
+    /// mask, and downloads only the sampled logit rows.
+    fn step_device_impl(
+        &mut self,
+        plan: StepPlan,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        let exe_name = apply_step_exe_name(plan, self.cfg.block, self.batch);
+        let exe = self.arch.exe(&exe_name)?;
+        debug_assert_eq!(exe.kind, ExeKind::StepApply);
+        // layers the equivalent Host-apply step would download in its
+        // ind_block output (the d2h_bytes_avoided baseline)
+        let n_ind = if exe.skip.is_empty() {
+            self.arch.dims.n_layers
+        } else {
+            exe.skip_layers.len()
+        };
+        // shared planner sync (parity with the sim ledger): refuses to
+        // run against an unseeded chain or host-divergent slot rows
+        self.resident
+            .sync_step_device(caches, "h", n_ind, tokens, block_start, block, slots)?;
+        let chain_missing = || anyhow!("device-apply chain missing despite seeded planner");
+        let kv_buf =
+            &self.resident.handles.kv_chain.as_ref().ok_or_else(chain_missing)?.buf;
+        let ind_buf =
+            &self.resident.handles.ind_chain.as_ref().ok_or_else(chain_missing)?.buf;
+        let conf_buf =
+            &self.resident.handles.conf_chain.as_ref().ok_or_else(chain_missing)?.buf;
+        let start_t = HostTensor::scalar_i32(block_start as i32);
+        let alpha_t = HostTensor::scalar_f32(self.cfg.alpha);
+        let retain = exe.retain_flags();
+        let args = [
+            ExecArg::Host(self.resident.step_tokens.view()),
+            ExecArg::Host(start_t.view()),
+            ExecArg::Device(kv_buf),
+            ExecArg::Device(ind_buf),
+            ExecArg::Device(conf_buf),
+            // batch-bit occupancy mask: vacant rows can never win the
+            // in-graph importance selection
+            ExecArg::Host(self.resident.occ_mask.view()),
+            ExecArg::Host(alpha_t.view()),
+        ];
+        let mut out =
+            self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
+        // the only D2H traffic: the sampled logit rows (+ positions)
+        let logits_i = exe.output_index("logits")?;
+        let pos_i = exe.output_index("pos")?;
+        caches.merge_step_logits_slots(
+            out.host_at(logits_i, "logits")?,
+            out.host_at(pos_i, "pos")?,
+            slots,
+        )?;
+        self.resident.handles.kv_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("kv")?, "kv")?,
+            lit: None,
+        });
+        self.resident.handles.ind_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("ind")?, "ind")?,
+            lit: None,
+        });
+        self.resident.handles.conf_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("conf")?, "conf")?,
+            lit: None,
+        });
+        self.resident
+            .note_step_applied(caches, "h", false, block_start, block, slots);
+        self.flush_transfer();
         Ok(())
     }
 }

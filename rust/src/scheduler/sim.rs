@@ -11,12 +11,19 @@
 //! Everything here is exercised by `cargo test` / `cargo bench` on
 //! machines with no artifacts and no PJRT library.
 //!
-//! The sim also carries a [`DeviceGroupCaches`] resident layer in
-//! [`ApplyMode::Device`] (executable outputs update the resident copy
-//! in place), so the transfer ledger models what a device-apply-capable
-//! transport ships per tick: token rows and host-computed confidence
-//! rows only — zero steady-state KV/indicator bytes. This is how the
-//! resident-cache win is measured and asserted without PJRT artifacts.
+//! The sim also carries a [`DeviceGroupCaches`] resident layer —
+//! by default in [`ApplyMode::Device`], routed through the **same**
+//! composite planner calls
+//! ([`DeviceGroupCaches::sync_prefill_device`] /
+//! [`DeviceGroupCaches::sync_step_device`]) as the PJRT device-apply
+//! backend, so the two transfer ledgers are byte-exact by construction
+//! (asserted in `tests/transfer_accounting.rs`): after the one-time
+//! seed, steady-state steps ship only block tokens and the batch-bit
+//! occupancy mask, with KV, indicator, and confidence all chained on
+//! device. [`SimCfg::apply`] can flip the layer to [`ApplyMode::Host`]
+//! to model the stateless-executable fallback (outputs scattered
+//! host-side, dirty rows re-shipped as deltas) — the comparison the
+//! `perf_hotpath` Host-vs-Device apply section measures.
 
 use std::time::Duration;
 
@@ -29,13 +36,16 @@ use crate::tokenizer::Tokenizer;
 
 use super::StepBackend;
 
-/// Geometry + per-plan simulated latency.
+/// Geometry + per-plan simulated latency + apply-mode selection.
 #[derive(Debug, Clone)]
 pub struct SimCfg {
     pub dims: Dims,
     pub prefill_cost: Duration,
     pub dual_cost: Duration,
     pub es_cost: Duration,
+    /// how executable outputs reach the resident copy (Device models the
+    /// device-apply PJRT path; Host models the stateless fallback)
+    pub apply: ApplyMode,
 }
 
 impl Default for SimCfg {
@@ -58,6 +68,7 @@ impl Default for SimCfg {
             prefill_cost: Duration::ZERO,
             dual_cost: Duration::ZERO,
             es_cost: Duration::ZERO,
+            apply: ApplyMode::Device,
         }
     }
 }
@@ -69,6 +80,13 @@ impl SimCfg {
         self.prefill_cost = Duration::from_micros(prefill_us);
         self.dual_cost = Duration::from_micros(dual_us);
         self.es_cost = Duration::from_micros(es_us);
+        self
+    }
+
+    /// Model the given apply mode (Host = the stateless-executable
+    /// fallback, for Host-vs-Device comparisons).
+    pub fn with_apply(mut self, apply: ApplyMode) -> SimCfg {
+        self.apply = apply;
         self
     }
 }
@@ -89,7 +107,7 @@ impl SimBackend {
     fn ensure_resident(&mut self, batch: usize) {
         if self.resident.is_none() {
             self.resident =
-                Some(DeviceGroupCaches::new(&self.cfg.dims, batch, ApplyMode::Device));
+                Some(DeviceGroupCaches::new(&self.cfg.dims, batch, self.cfg.apply));
         }
     }
 
@@ -150,17 +168,36 @@ impl StepBackend for SimBackend {
         }
         self.ensure_resident(caches.batch);
         if let Some(r) = self.resident.as_mut() {
-            r.stage_prefill_tokens(tokens, slots);
+            if r.apply_mode() == ApplyMode::Device {
+                // the same composite sync the PJRT device-apply backend
+                // runs: tokens + refresh mask ship, kv/ind/conf seed
+                // once then chain as retained outputs
+                r.sync_prefill_device(caches, "h", tokens, slots)?;
+            } else {
+                r.stage_prefill_tokens(tokens, slots);
+            }
         }
         let gen = self.cfg.dims.gen_len;
         for &s in slots {
             self.write_positions(tokens, s, 0, gen, caches);
         }
-        // prefill outputs (KV + indicators) refresh the resident rows of
-        // the requested slots in place — in particular this absorbs a
-        // slot-admission reset without any re-upload
         if let Some(r) = self.resident.as_mut() {
-            r.note_prefill_applied(caches, slots);
+            if r.apply_mode() == ApplyMode::Device {
+                // prefill outputs (KV + indicators + in-graph conf)
+                // refresh the resident rows of the requested slots in
+                // place — in particular this absorbs a slot-admission
+                // reset without any re-upload
+                r.note_prefill_applied(caches, slots);
+            } else {
+                // Host fallback: the downloaded prefill outputs refresh
+                // the host mirrors, diverging them from the device copy
+                for &b in slots {
+                    caches.dirty.kv.mark_slot(b);
+                    for bm in caches.dirty.ind.values_mut() {
+                        bm.mark_slot(b);
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -185,13 +222,20 @@ impl StepBackend for SimBackend {
         self.ensure_resident(caches.batch);
         let n_layers = self.cfg.dims.n_layers;
         if let Some(r) = self.resident.as_mut() {
-            // model the step's input syncs against the dirty bitmaps:
-            // tokens + confidence ship, KV/indicators stay resident
-            r.stage_step_tokens(tokens, block_start, block, slots);
-            r.sync_kv(caches, slots);
-            let all_layers: Vec<usize> = (0..n_layers).collect();
-            r.sync_ind(caches, "h", &all_layers, slots)?;
-            r.sync_conf_masked(caches, slots);
+            if r.apply_mode() == ApplyMode::Device {
+                // the PJRT device-apply step sync: tokens + occupancy
+                // mask ship; kv/ind/conf chain retained outputs and
+                // confidence is computed in-graph (the sim models a
+                // dual-style step maintaining every layer's indicator)
+                r.sync_step_device(caches, "h", n_layers, tokens, block_start, block, slots)?;
+            } else {
+                // Host fallback: dirty-delta uploads per input kind
+                r.stage_step_tokens(tokens, block_start, block, slots);
+                r.sync_kv(caches, slots);
+                let all_layers: Vec<usize> = (0..n_layers).collect();
+                r.sync_ind(caches, "h", &all_layers, slots)?;
+                r.sync_conf_masked(caches, slots);
+            }
         }
         let d = &self.cfg.dims;
         let lo = block_start - d.prompt_len;
@@ -203,13 +247,31 @@ impl StepBackend for SimBackend {
             self.write_positions(tokens, s, lo, d.gen_len, caches);
         }
         if let Some(r) = self.resident.as_mut() {
-            r.note_step_applied(caches, "h", false, block_start, block, slots);
+            if r.apply_mode() == ApplyMode::Device {
+                r.note_step_applied(caches, "h", false, block_start, block, slots);
+            } else {
+                // the downloaded block outputs were scattered host-side:
+                // those rows diverge and re-ship as deltas next sync
+                let g0 = block_start - d.prompt_len;
+                for &b in slots {
+                    caches.dirty.kv.mark_range(b, block_start, block_start + block);
+                    if let Some(bm) = caches.dirty.ind.get_mut("h") {
+                        bm.mark_range(b, g0, g0 + block);
+                    }
+                }
+            }
         }
         Ok(())
     }
 
     fn transfer_stats(&self) -> TransferStats {
         self.resident.as_ref().map(|r| r.stats).unwrap_or_default()
+    }
+
+    fn invalidate_resident(&mut self, caches: &mut GroupCaches) {
+        if let Some(r) = self.resident.as_mut() {
+            r.invalidate(caches);
+        }
     }
 }
 

@@ -1,0 +1,95 @@
+//! Golden-manifest parse contract for the device-apply executable kinds:
+//! a checked-in fixture (mirroring what `python/compile/aot.py` emits)
+//! pins the `prefill_apply` / `step_apply` kinds and their
+//! `retained_outputs` chaining signatures, and the error paths must name
+//! the offending executable and field instead of failing generically.
+
+use std::path::{Path, PathBuf};
+
+use esdllm::manifest::{ExeKind, Manifest, RetainedSig};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/golden_artifacts")
+}
+
+#[test]
+fn golden_manifest_parses_device_apply_kinds() {
+    let m = Manifest::load(&golden_dir()).expect("golden manifest parses");
+    let a = m.arch("llada-nano").unwrap();
+
+    let pf = a.exe("prefill_apply_b8").unwrap();
+    assert_eq!(pf.kind, ExeKind::PrefillApply);
+    assert_eq!(pf.batch, 8);
+    // non-parameter inputs only (the one param is stripped)
+    assert_eq!(pf.inputs.len(), 5);
+    assert_eq!(pf.inputs[0].name, "tokens");
+    assert_eq!(pf.inputs[4].name, "refresh");
+    assert_eq!(
+        pf.retained,
+        vec![
+            RetainedSig { output: "kv".into(), input: "kv".into() },
+            RetainedSig { output: "ind".into(), input: "ind".into() },
+            RetainedSig { output: "conf".into(), input: "conf".into() },
+        ]
+    );
+    // retain flags in output order: logits download, the cache chain
+    // stays on device
+    assert_eq!(pf.retain_flags(), vec![false, true, true, true]);
+    assert_eq!(pf.output_index("kv").unwrap(), 1);
+    assert_eq!(pf.output_index("conf").unwrap(), 3);
+    assert!(pf.output_index("nope").is_err());
+
+    let st = a.exe("es_apply_blk8_b8").unwrap();
+    assert_eq!(st.kind, ExeKind::StepApply);
+    assert_eq!(st.block, Some(8));
+    assert_eq!(st.skip_layers, vec![1, 2]);
+    assert_eq!(st.retain_flags(), vec![false, false, true, true, true]);
+
+    // plain step executables carry no retained outputs
+    let dual = a.exe("dual_blk8_b8").unwrap();
+    assert_eq!(dual.kind, ExeKind::Step);
+    assert!(dual.retained.is_empty());
+    assert_eq!(dual.retain_flags(), vec![false; 4]);
+}
+
+fn load_patched(patch: impl Fn(&str) -> String, subdir: &str) -> anyhow::Error {
+    let src = std::fs::read_to_string(golden_dir().join("manifest.json")).unwrap();
+    let dir = std::env::temp_dir().join(format!("esdllm-golden-{subdir}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), patch(&src)).unwrap();
+    Manifest::load(&dir).expect_err("patched manifest must fail to parse")
+}
+
+#[test]
+fn unknown_kind_error_names_the_executable() {
+    let err = load_patched(
+        |src| src.replace("\"kind\": \"step_apply\"", "\"kind\": \"warp_apply\""),
+        "kind",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("es_apply_blk8_b8"), "names the exe: {msg}");
+    assert!(msg.contains("warp_apply"), "names the bad value: {msg}");
+    assert!(msg.contains("`kind`"), "names the field: {msg}");
+    assert!(msg.contains("prefill_apply"), "lists the accepted kinds: {msg}");
+}
+
+#[test]
+fn retained_output_must_reference_real_output_and_input() {
+    let err = load_patched(
+        |src| src.replacen("{\"output\": \"kv\", \"input\": \"kv\"}",
+                           "{\"output\": \"kvx\", \"input\": \"kv\"}", 1),
+        "retout",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("retained_outputs"), "{msg}");
+    assert!(msg.contains("kvx"), "{msg}");
+
+    let err = load_patched(
+        |src| src.replacen("{\"output\": \"kv\", \"input\": \"kv\"}",
+                           "{\"output\": \"kv\", \"input\": \"kvx\"}", 1),
+        "retin",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("retained_outputs"), "{msg}");
+    assert!(msg.contains("kvx"), "{msg}");
+}

@@ -1,8 +1,13 @@
-//! Transfer-accounting acceptance tests for the resident-cache layer:
-//! steady-state ES steps upload no full-KV bytes, a mid-flight admission
-//! dirties exactly the admitted slot's rows, and ledger deltas match the
-//! dirty bitmaps. Everything runs over the sim backend / the planner
-//! directly — no PJRT artifacts required.
+//! Transfer-accounting acceptance tests for the resident-cache layer
+//! and the device-apply decode path: a steady-state ES/dual tick ships
+//! zero KV, indicator, and confidence bytes in either direction (only
+//! block tokens + batch-bit masks go up, sampled logit rows come down),
+//! the PJRT device planner and the sim planner produce identical
+//! `TransferStats` for the same workload, a mid-flight admission
+//! dirties exactly the admitted slot, eviction invalidates the resident
+//! chain, and Host-apply ledger deltas match the dirty bitmaps.
+//! Everything runs over the sim backend / the planner directly — no
+//! PJRT artifacts required.
 
 use std::time::Instant;
 
@@ -15,8 +20,8 @@ use esdllm::sampler::SamplerCfg;
 use esdllm::scheduler::sim::{SimBackend, SimCfg};
 use esdllm::scheduler::{GroupScheduler, SchedCfg, SeqInput, SeqParams};
 
-fn sched(n_slots: usize, block: usize) -> GroupScheduler<'static> {
-    let backend = SimBackend::new(SimCfg::default());
+fn sched_with(n_slots: usize, block: usize, sim: SimCfg) -> GroupScheduler<'static> {
+    let backend = SimBackend::new(sim);
     let cfg = SchedCfg {
         method: Method::EsDllm,
         block,
@@ -25,6 +30,10 @@ fn sched(n_slots: usize, block: usize) -> GroupScheduler<'static> {
         seed: 0,
     };
     GroupScheduler::new(Box::new(backend), n_slots, cfg).unwrap()
+}
+
+fn sched(n_slots: usize, block: usize) -> GroupScheduler<'static> {
+    sched_with(n_slots, block, SimCfg::default())
 }
 
 fn input(id: u64, prompt: &str) -> SeqInput {
@@ -68,22 +77,112 @@ fn steady_state_es_steps_upload_no_full_kv_bytes() {
         stats.upload_bytes
     );
     assert!(stats.resident_reuses > 0, "KV input reused across steps");
+    assert!(stats.retained_out_reuses > 0, "outputs chained across calls");
+    assert!(stats.ingraph_conf_steps > 0, "steps computed conf in-graph");
+    assert!(stats.d2h_bytes_avoided > 0, "cache downloads avoided");
 
-    // a whole second generation moves no further KV or indicator bytes
+    // a whole second generation moves no further KV, indicator, or
+    // confidence bytes — the chain persists across retirements
     s.admit(input(2, "xyab")).unwrap();
     drain(&mut s);
     let stats2 = s.transfer_stats();
     assert_eq!(stats2.full_kv_uploads, 1);
     assert_eq!(stats2.kv_upload_bytes, kv_full);
     assert_eq!(stats2.ind_upload_bytes, stats.ind_upload_bytes);
+    assert_eq!(stats2.conf_upload_bytes, stats.conf_upload_bytes);
+}
+
+/// The PR's acceptance criterion: with `ApplyMode::Device`, once the
+/// chain is seeded every ES/dual tick ships ONLY step tokens (plus the
+/// batch-bit occupancy mask) host→device and zero KV / indicator /
+/// confidence bytes in either direction.
+#[test]
+fn device_steady_state_ships_only_tokens_and_masks() {
+    let d = SimCfg::default().dims;
+    let mut s = sched(2, 4);
+    s.admit(input(1, "abcdefgh")).unwrap();
+    s.tick().unwrap(); // grounding prefill: seeds the chain
+    let batch = 2u64;
+
+    let mut steady_ticks = 0;
+    let mut guard = 0;
+    while s.active() > 0 {
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to drain");
+        let plans_before = s.n_prefill;
+        let before = s.transfer_stats();
+        s.tick().unwrap();
+        let delta = s.transfer_stats().since(&before);
+        if s.n_prefill > plans_before {
+            // refresh-cadence prefill ticks chain too (zero cache bytes)
+            assert_eq!(delta.kv_upload_bytes, 0);
+            continue;
+        }
+        steady_ticks += 1;
+        assert_eq!(delta.kv_upload_bytes, 0, "no KV bytes up");
+        assert_eq!(delta.kv_sparse_upload_bytes, 0);
+        assert_eq!(delta.ind_upload_bytes, 0, "no indicator bytes up");
+        assert_eq!(delta.conf_upload_bytes, 0, "no confidence bytes up");
+        assert_eq!(delta.full_kv_uploads, 0);
+        // exactly one step ran this tick: block tokens for the stepped
+        // slot + the [B] occupancy mask, nothing else
+        let expected = 4 * 4 + batch * 4;
+        assert_eq!(delta.token_upload_bytes, expected);
+        assert_eq!(delta.upload_bytes, expected, "tokens+mask are ALL traffic");
+        assert_eq!(delta.ingraph_conf_steps, 1);
+        assert_eq!(delta.retained_out_reuses, 3, "kv+ind+conf all chained");
+        assert!(delta.d2h_bytes_avoided > 0, "block downloads avoided");
+    }
+    assert!(steady_ticks >= 2, "workload exercised steady-state steps");
+    // sanity: geometry used above matches the sim dims
+    assert_eq!(d.gen_len % 4, 0);
+}
+
+/// Byte-exact parity: the call sequence `PjrtBackend` makes on the
+/// device-apply path (sync_prefill_device / sync_step_device +
+/// note_*_applied, per its plan schedule) must produce the identical
+/// `TransferStats` ledger as the sim backend run through the scheduler
+/// on the same workload — both backends route through the same
+/// composite planner, and this pins that contract.
+#[test]
+fn pjrt_device_planner_matches_sim_planner() {
+    // sim side: one 3-char prompt at block 4 retires after exactly
+    // 4 iterations of block 0 (EOS-guard) with plans [Prefill, Es,
+    // Dual, Es]
+    let mut s = sched(2, 4);
+    s.admit(input(1, "abc")).unwrap();
+    drain(&mut s);
+    assert_eq!((s.n_prefill, s.n_dual, s.n_es), (1, 1, 2), "plan schedule");
+    assert_eq!(s.ticks, 4);
+    let sim_stats = s.transfer_stats();
+
+    // PJRT planner side: replicate that schedule through the planner
+    // calls prefill_device_impl / step_device_impl make
+    let d = SimCfg::default().dims;
+    let mut c = GroupCaches::new(&d, 2);
+    let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+    let tokens = vec![0i32; 2 * d.ctx];
+    let slots = [0usize];
+    c.reset_slot(0); // admission
+    r.sync_prefill_device(&mut c, "h", &tokens, &slots).unwrap();
+    r.note_prefill_applied(&mut c, &slots);
+    for _ in 0..3 {
+        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 4, &slots)
+            .unwrap();
+        r.note_step_applied(&mut c, "h", false, d.prompt_len, 4, &slots);
+    }
+    assert_eq!(
+        r.stats, sim_stats,
+        "PJRT device planner and sim planner ledgers must be byte-exact"
+    );
 }
 
 #[test]
 fn admission_dirties_exactly_one_slot() {
     let mut s = sched(2, 4);
     s.admit(input(1, "abcdefg")).unwrap();
-    s.tick().unwrap(); // grounding prefill
-    s.tick().unwrap(); // first step: seeds residency, clears all bitmaps
+    s.tick().unwrap(); // grounding prefill seeds the chain, clears bitmaps
+    s.tick().unwrap(); // first step chains retained outputs
     let ctx = s.group_caches().dims.ctx;
     assert_eq!(s.group_caches().dirty.kv.count(), 0, "group fully in sync");
 
@@ -108,11 +207,53 @@ fn admission_dirties_exactly_one_slot() {
     drain(&mut s);
 }
 
+/// Regression (device-apply eviction): `evict_all` must invalidate the
+/// resident chain — drop retained handles, reset seeded state, mark the
+/// host mirrors dirty — so a sequence admitted after an eviction
+/// re-grounds from a fresh seed instead of stepping against the evicted
+/// group's stale device copy.
+#[test]
+fn evict_all_invalidates_resident_chain() {
+    let mut s = sched(2, 4);
+    s.admit(input(1, "abcdefgh")).unwrap();
+    s.tick().unwrap(); // seed
+    s.tick().unwrap(); // steady-state step
+    assert_eq!(s.group_caches().dirty.kv.count(), 0);
+
+    s.evict_all();
+    assert_eq!(s.active(), 0);
+    let d = s.group_caches().dims;
+    assert_eq!(
+        s.group_caches().dirty.kv.count(),
+        2 * d.ctx,
+        "eviction takes back the whole device-residency promise"
+    );
+    for bm in s.group_caches().dirty.ind.values() {
+        assert_eq!(bm.count(), 2 * d.gen_len);
+    }
+
+    // a re-admitted sequence must run exactly (a second seed, then the
+    // usual zero-byte steady state) and still decode correctly
+    s.admit(input(7, "xy")).unwrap();
+    let mut out = Vec::new();
+    let mut guard = 0;
+    while s.active() > 0 {
+        out.extend(s.tick().unwrap());
+        guard += 1;
+        assert!(guard < 1000);
+    }
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].text, "xy", "post-eviction decode is exact");
+    let stats = s.transfer_stats();
+    assert_eq!(stats.full_kv_uploads, 2, "the re-ground re-seeded the chain");
+}
+
 #[test]
 fn ledger_delta_matches_dirty_bitmap_in_host_apply_mode() {
-    // Host-apply (today's PJRT reality): a step's own output scatter
-    // leaves its rows dirty, and the next sync re-ships exactly those
-    // rows — the ledger delta must equal bitmap-rows × row-bytes.
+    // Host-apply (the stateless-executable fallback): a step's own
+    // output scatter leaves its rows dirty, and the next sync re-ships
+    // exactly those rows — the ledger delta must equal
+    // bitmap-rows × row-bytes.
     let d = Dims {
         vocab: 8, d_model: 4, n_layers: 2, n_heads: 2, n_kv_heads: 1,
         d_ff: 8, head_dim: 2, prompt_len: 4, gen_len: 4, ctx: 8,
@@ -142,6 +283,48 @@ fn ledger_delta_matches_dirty_bitmap_in_host_apply_mode() {
     assert_eq!(c.dirty.kv.count(), 0, "sync clears what it ships");
 }
 
+/// The Host-apply sim models the stateless fallback end to end: its
+/// steps re-ship their own scattered rows as deltas, so it uploads
+/// strictly more than the device-apply chain on the same workload —
+/// and still decodes identically.
+#[test]
+fn host_apply_sim_reships_deltas_and_decodes_identically() {
+    let mut dev = sched(2, 4);
+    dev.admit(input(1, "abcdef")).unwrap();
+    let mut dev_out = Vec::new();
+    let mut guard = 0;
+    while dev.active() > 0 {
+        dev_out.extend(dev.tick().unwrap());
+        guard += 1;
+        assert!(guard < 1000);
+    }
+
+    let mut host = sched_with(2, 4, SimCfg::default().with_apply(ApplyMode::Host));
+    host.admit(input(1, "abcdef")).unwrap();
+    let mut host_out = Vec::new();
+    guard = 0;
+    while host.active() > 0 {
+        host_out.extend(host.tick().unwrap());
+        guard += 1;
+        assert!(guard < 1000);
+    }
+
+    assert_eq!(dev_out[0].text, host_out[0].text, "apply mode is transparent");
+    assert_eq!(dev_out[0].iterations, host_out[0].iterations);
+
+    let ds = dev.transfer_stats();
+    let hs = host.transfer_stats();
+    assert!(
+        hs.kv_upload_bytes > ds.kv_upload_bytes,
+        "host-apply re-ships KV deltas ({} B) that device-apply chains ({} B)",
+        hs.kv_upload_bytes,
+        ds.kv_upload_bytes
+    );
+    assert!(hs.conf_upload_bytes > ds.conf_upload_bytes);
+    assert!(ds.d2h_bytes_avoided > 0);
+    assert_eq!(hs.retained_out_reuses, 0, "no chaining in host mode");
+}
+
 #[test]
 fn per_kind_counters_split_the_total() {
     let mut s = sched(1, 4);
@@ -157,9 +340,11 @@ fn per_kind_counters_split_the_total() {
             + st.token_upload_bytes,
         "per-kind counters must partition the total"
     );
-    // tokens ship every run; confidence rows ship every step
+    // tokens (and the batch-bit masks) ship every run; kv/ind/conf ship
+    // exactly once — the chain seed
     assert!(st.token_upload_bytes > 0);
-    assert!(st.conf_upload_bytes > 0);
+    let conf_seed = (s.group_caches().dims.gen_len * 4) as u64; // batch 1
+    assert_eq!(st.conf_upload_bytes, conf_seed);
 }
 
 #[test]

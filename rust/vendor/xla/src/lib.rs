@@ -89,6 +89,15 @@ impl PjRtLoadedExecutable {
     pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         Err(unavailable("execute_b"))
     }
+
+    /// Untupled execution: the real bindings run with
+    /// `ExecuteOptions.untuple_result = true`, so the inner vector holds
+    /// one `PjRtBuffer` per root-tuple element. This is what lets the
+    /// runtime retain individual outputs on device (device-apply cache
+    /// chaining) instead of downloading one fused result tuple.
+    pub fn execute_untupled<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute_untupled"))
+    }
 }
 
 pub struct HloModuleProto;
