@@ -203,8 +203,14 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
     # and takes the occupancy mask as a batch-bit input. The Rust runtime
     # retains the kv/ind/conf outputs on device and feeds them back as the
     # next call's inputs (manifest `retained_outputs`), so in steady state
-    # only block tokens go up and sampled logit rows come down. ----
-    CHAINED = [{"output": n, "input": n} for n in ("kv", "ind", "conf")]
+    # only block tokens go up and gen-region logit rows come down.
+    # `"alias": true` additionally declares the chain as a PJRT
+    # input-output alias: the runtime configures donation at compile time
+    # so the cache update is genuinely in-place on device (one live copy
+    # per chained tensor, no transient second buffer during execution). ----
+    CHAINED = [
+        {"output": n, "input": n, "alias": True} for n in ("kv", "ind", "conf")
+    ]
 
     def prefill_apply_variant(batch):
         def fn(params, tokens, kv_prev, ind_prev, conf_prev, refresh):
@@ -226,7 +232,11 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                 "skip": [], "indicator": "h", "kv_len": ctx,
                 "retained_outputs": CHAINED,
                 "input_names": ["tokens", "kv", "ind", "conf", "refresh"],
-                "output_names": ["logits", "kv", "ind", "conf"],
+                # logits_gen, not logits: the output is the [B, gen, V]
+                # gen-region slice — a new signature name so a runtime
+                # built against the full-context contract fails loudly
+                # at output_index() instead of mis-slicing rows
+                "output_names": ["logits_gen", "kv", "ind", "conf"],
             },
         )
 

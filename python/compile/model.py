@@ -227,15 +227,18 @@ def prefill_apply(cfg: ModelCfg, params: Params, tokens, kv_prev, ind_prev,
     Confidence is computed in-graph from the gen-region logits (max
     softmax probability), replacing the host conf round-trip.
 
-    Returns (logits f32 [B, ctx, V],
+    Returns (logits_gen f32 [B, gen, V]  — the gen-region slice only,
              kv_new bf16 [L, 2, B, Hkv, ctx, hd],
              ind_new bf16 [L, B, gen, d]  (the ``indicator`` cache),
              conf_new f32 [B, gen]).
     The kv/ind/conf outputs are device-retained and chained back into the
-    next prefill_apply / step-apply call. No attn_mass output: the only
-    consumer is the host-side sparse rebuild, and sparse configs run the
-    stateless Host-apply path — emitting it here would download B × ctx
-    floats every grounding prefill for nothing.
+    next prefill_apply / step-apply call, so the only download is the
+    logit output — and the host sampler and confidence mirror read
+    gen-region rows exclusively, so the prompt-region logits are sliced
+    off in-graph rather than shipped (B × prompt_len × V floats per
+    grounding prefill, 60% of the old [B, ctx, V] downlink at nano
+    scale). No attn_mass output: the only consumer is the host-side
+    sparse rebuild, and sparse configs run the stateless Host-apply path.
     """
     logits, kv, ind, _attn_mass = prefill(
         cfg, params, tokens, use_pallas=use_pallas, kv_tile=kv_tile)
@@ -245,7 +248,7 @@ def prefill_apply(cfg: ModelCfg, params: Params, tokens, kv_prev, ind_prev,
     gen_logits = logits[:, cfg.prompt_len:]                   # [B, gen, V]
     conf_full = jax.nn.softmax(gen_logits, axis=-1).max(-1)   # [B, gen]
     conf_new = jnp.where(r[:, None], conf_full, conf_prev)
-    return logits, kv_new, ind_new, conf_new
+    return gen_logits, kv_new, ind_new, conf_new
 
 
 def _expand_kv(cfg, t):

@@ -250,7 +250,7 @@ def test_prefill_apply_refreshes_only_masked_rows(setup):
     refresh = jnp.asarray([1] + [0] * (B - 1), jnp.int32)
     out = M.prefill_apply(cfg, params, toks, kv_prev, ind_prev, conf_prev,
                           refresh, use_pallas=False)
-    lg, kv_new, ind_new, conf_new = out
+    lg_gen, kv_new, ind_new, conf_new = out
     # refreshed row matches a fresh prefill; spectator rows pass through
     np.testing.assert_allclose(
         np.asarray(kv_new.astype(jnp.float32))[:, :, 0],
@@ -264,6 +264,12 @@ def test_prefill_apply_refreshes_only_masked_rows(setup):
                                np.asarray(conf_prev)[1:])
     # in-graph confidence of the refreshed row = max softmax of its
     # gen-region logits
-    want = np.asarray(jax.nn.softmax(lg[:, cfg.prompt_len:], axis=-1).max(-1))
+    want = np.asarray(jax.nn.softmax(lg_gen, axis=-1).max(-1))
     np.testing.assert_allclose(np.asarray(conf_new)[0], want[0], rtol=1e-5)
-    assert lg.shape == (B, cfg.ctx, cfg.vocab)
+    # the logit output is the gen-region slice, not the full context:
+    # the prompt rows never cross the bus
+    assert lg_gen.shape == (B, cfg.gen_len, cfg.vocab)
+    full = M.prefill(cfg, params, toks, use_pallas=False)[0]
+    np.testing.assert_allclose(np.asarray(lg_gen),
+                               np.asarray(full[:, cfg.prompt_len:]),
+                               rtol=1e-5, atol=1e-6)

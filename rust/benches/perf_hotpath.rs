@@ -7,6 +7,10 @@
 //!     in-graph scatter/merge + retained-output chain removes from the
 //!     bus in both directions), artifact-free, emitted as
 //!     `BENCH_device_apply.json`,
+//!   * full-context vs gen-region logit download per tick (the
+//!     `logits_gen` slice + selected step rows vs a `[B, ctx, V]`-every-
+//!     run downlink), artifact-free with a ≥60% reduction acceptance
+//!     gate, emitted as `BENCH_logit_slice.json`,
 //!   * per-executable latency (prefill / dual / es, b1 / b8) with the
 //!     upload/execute/download breakdown from runtime counters (needs
 //!     compiled artifacts; skipped gracefully without them),
@@ -152,8 +156,9 @@ fn transfer_section() -> anyhow::Result<()> {
 }
 
 /// Drain one mixed-length workload through the slot scheduler over the
-/// sim backend in the given apply mode; returns (ledger, executable runs).
-fn run_apply_mode(apply: ApplyMode) -> anyhow::Result<(TransferStats, u64)> {
+/// sim backend in the given apply mode; returns (ledger, executable
+/// runs, scheduler ticks).
+fn run_apply_mode(apply: ApplyMode) -> anyhow::Result<(TransferStats, u64, u64)> {
     let batch = 8;
     let d = bench_dims();
     let sim_cfg = SimCfg { dims: d, ..SimCfg::default() }.with_apply(apply);
@@ -183,16 +188,19 @@ fn run_apply_mode(apply: ApplyMode) -> anyhow::Result<(TransferStats, u64)> {
         assert!(guard < 10_000, "scheduler failed to drain");
     }
     let runs = (sched.n_prefill + sched.n_dual + sched.n_es).max(1) as u64;
-    Ok((sched.transfer_stats(), runs))
+    let ticks = sched.ticks.max(1) as u64;
+    Ok((sched.transfer_stats(), runs, ticks))
 }
 
 /// Host-apply vs device-apply on the identical workload: what the
 /// in-graph scatter/merge + retained-output chain removes from the bus
 /// per step, in both directions. Artifact-free; emits
-/// `BENCH_device_apply.json`.
-fn device_apply_section() -> anyhow::Result<()> {
-    let (host, host_runs) = run_apply_mode(ApplyMode::Host)?;
-    let (dev, dev_runs) = run_apply_mode(ApplyMode::Device)?;
+/// `BENCH_device_apply.json`. Returns the Device-mode (ledger, runs,
+/// ticks) so the logit-slice section can reuse the same deterministic
+/// drain instead of re-running it.
+fn device_apply_section() -> anyhow::Result<(TransferStats, u64, u64)> {
+    let (host, host_runs, _) = run_apply_mode(ApplyMode::Host)?;
+    let (dev, dev_runs, dev_ticks) = run_apply_mode(ApplyMode::Device)?;
 
     let mut table = Table::new(
         "perf_hotpath: Host-apply vs Device-apply (sim, b8, ES)",
@@ -258,13 +266,82 @@ fn device_apply_section() -> anyhow::Result<()> {
     );
     std::fs::write("artifacts/results/BENCH_device_apply.json", json)?;
     println!("wrote artifacts/results/BENCH_device_apply.json");
+    Ok((dev, dev_runs, dev_ticks))
+}
+
+/// Full-context vs gen-region logit downlink on the identical
+/// device-apply workload (the ledger from `device_apply_section`'s
+/// Device-mode drain — the sim is deterministic, so re-running it would
+/// only double the bench time): what slicing the `prefill_apply` logit
+/// output to `[B, gen, V]` (and downloading only the selected
+/// `[B, k, V]` step rows) removes from the per-tick D2H traffic, vs a
+/// design that ships `[B, ctx, V]` every run. Artifact-free; emits
+/// `BENCH_logit_slice.json`. Acceptance: ≥ 60% per-tick reduction at
+/// the nano geometry (gen/ctx = 32/80 alone is a 60% cut on prefill
+/// ticks; step ticks cut far deeper).
+fn logit_slice_section(dev: &TransferStats, runs: u64, ticks: u64) -> anyhow::Result<()> {
+    let shipped = dev.d2h_bytes_shipped;
+    let baseline = dev.d2h_bytes_shipped + dev.d2h_bytes_saved;
+    let shipped_per_tick = shipped as f64 / ticks as f64;
+    let baseline_per_tick = baseline as f64 / ticks as f64;
+    let reduction_pct = 100.0 * (1.0 - shipped as f64 / baseline.max(1) as f64);
+
+    let mut table = Table::new(
+        "perf_hotpath: full-context vs gen-region logit download (sim, b8, ES)",
+        &["downlink", "bytes/tick down", "bytes total", "donated execs"],
+    );
+    table.row(&[
+        "full-context [B, ctx, V]".to_string(),
+        format!("{baseline_per_tick:.0}"),
+        format!("{baseline}"),
+        "0".to_string(),
+    ]);
+    table.row(&[
+        "gen-region slice".to_string(),
+        format!("{shipped_per_tick:.0}"),
+        format!("{shipped}"),
+        format!("{}", dev.donated_execs),
+    ]);
+    table.print();
+    table.write_csv("artifacts/results/perf_logit_slice.csv")?;
+    let ok = reduction_pct >= 60.0;
+    println!(
+        "gen-region logit outputs download {shipped_per_tick:.0} B/tick vs \
+         {baseline_per_tick:.0} B/tick full-context ({reduction_pct:.1}% less \
+         D2H) over {runs} executable runs / {ticks} ticks; acceptance \
+         (>= 60% reduction at nano scale): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hotpath_logit_slice\",\n  \"batch\": 8,\n  \
+         \"block\": 8,\n  \"executable_runs\": {runs},\n  \"ticks\": {ticks},\n  \
+         \"full_context_bytes_per_tick\": {baseline_per_tick:.1},\n  \
+         \"gen_region_bytes_per_tick\": {shipped_per_tick:.1},\n  \
+         \"d2h_bytes_shipped\": {shipped},\n  \
+         \"d2h_bytes_saved\": {},\n  \
+         \"donated_execs\": {},\n  \
+         \"reduction_pct\": {reduction_pct:.2},\n  \
+         \"acceptance_min_reduction_pct\": 60.0,\n  \
+         \"acceptance_pass\": {ok}\n}}\n",
+        dev.d2h_bytes_saved, dev.donated_execs,
+    );
+    std::fs::write("artifacts/results/BENCH_logit_slice.json", json)?;
+    println!("wrote artifacts/results/BENCH_logit_slice.json");
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "logit-slice acceptance failed: {reduction_pct:.1}% < 60% reduction"
+        ));
+    }
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     transfer_section()?;
-    device_apply_section()?;
+    let (dev, dev_runs, dev_ticks) = device_apply_section()?;
+    logit_slice_section(&dev, dev_runs, dev_ticks)?;
 
     let rt = match Runtime::load_default() {
         Ok(rt) => rt,

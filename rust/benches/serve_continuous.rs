@@ -75,6 +75,12 @@ struct ModeResult {
     d2h_avoided_kb_per_tick: f64,
     retained_reuse_per_tick: f64,
     ingraph_conf_steps: u64,
+    /// sliced-downlink accounting: sampler-bound KB actually downloaded
+    /// per tick, and KB saved per tick vs the full-context [B, ctx, V]
+    /// logit download
+    down_kb_per_tick: f64,
+    down_saved_kb_per_tick: f64,
+    donated_execs: u64,
 }
 
 fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
@@ -126,6 +132,9 @@ fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
         d2h_avoided_kb_per_tick: m.d2h_bytes_avoided.get() as f64 / 1e3 / ticks as f64,
         retained_reuse_per_tick: m.retained_out_reuses.get() as f64 / ticks as f64,
         ingraph_conf_steps: m.ingraph_conf_steps.get(),
+        down_kb_per_tick: m.d2h_bytes_shipped.get() as f64 / 1e3 / ticks as f64,
+        down_saved_kb_per_tick: m.d2h_bytes_saved.get() as f64 / 1e3 / ticks as f64,
+        donated_execs: m.donated_execs.get(),
     };
     router.shutdown();
     result
@@ -148,7 +157,7 @@ fn main() -> anyhow::Result<()> {
             "mode", "done", "fail", "wall s", "tokens", "TPS", "occupancy",
             "TPS/busy-slot", "p50 s", "p90 s", "up KB/tick", "saved KB/tick",
             "full-KV ups", "d2h-avoid KB/tick", "chain reuse/tick",
-            "ingraph-conf",
+            "ingraph-conf", "down KB/tick", "down-saved KB/tick", "donated",
         ],
     );
     for r in [&rtc, &cont] {
@@ -169,6 +178,9 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", r.d2h_avoided_kb_per_tick),
             format!("{:.2}", r.retained_reuse_per_tick),
             format!("{}", r.ingraph_conf_steps),
+            format!("{:.2}", r.down_kb_per_tick),
+            format!("{:.2}", r.down_saved_kb_per_tick),
+            format!("{}", r.donated_execs),
         ]);
     }
     table.print();
@@ -193,6 +205,13 @@ fn main() -> anyhow::Result<()> {
          round-trip in either direction)",
         cont.d2h_avoided_kb_per_tick, cont.retained_reuse_per_tick,
         cont.ingraph_conf_steps,
+    );
+    println!(
+        "sliced downlink: continuous downloads {:.2} KB/tick of gen-region \
+         logit rows and keeps {:.2} KB/tick of prompt-region rows on device \
+         vs the full-context [B, ctx, V] download; {} executions donated \
+         their chained cache inputs in place",
+        cont.down_kb_per_tick, cont.down_saved_kb_per_tick, cont.donated_execs,
     );
     let ok = cont.tps > rtc.tps && cont.occupancy > rtc.occupancy;
     println!(

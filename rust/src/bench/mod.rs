@@ -21,7 +21,25 @@ pub struct Stats {
 impl Stats {
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // NaN samples used to panic the sort (partial_cmp().unwrap() —
+        // the same bug class as the Histogram::quantiles fix) and would
+        // silently poison mean/median if merely sorted last; a bench run
+        // must survive a poisoned timing AND report honest finite
+        // statistics, so NaN observations are dropped up front
+        samples.retain(|x| !x.is_nan());
+        if samples.is_empty() {
+            return Stats {
+                n: 0,
+                mean_s: f64::NAN,
+                median_s: f64::NAN,
+                p10_s: f64::NAN,
+                p90_s: f64::NAN,
+                min_s: f64::NAN,
+                max_s: f64::NAN,
+                std_s: f64::NAN,
+            };
+        }
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
@@ -147,6 +165,24 @@ mod tests {
         assert_eq!(s.max_s, 10.0);
         assert!(s.p10_s <= s.median_s && s.median_s <= s.p90_s);
         assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn from_samples_survives_nan() {
+        // regression: partial_cmp().unwrap() panicked here on any NaN
+        // sample. Poisoned timings are dropped, so the remaining
+        // statistics are finite and honest — not NaN-skewed.
+        let s = Stats::from_samples(vec![3.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 2, "the NaN observation is dropped");
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!(s.median_s.is_finite());
+
+        // all-NaN input: no panic, explicitly empty stats
+        let e = Stats::from_samples(vec![f64::NAN, f64::NAN]);
+        assert_eq!(e.n, 0);
+        assert!(e.mean_s.is_nan() && e.median_s.is_nan());
     }
 
     #[test]

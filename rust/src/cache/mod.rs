@@ -313,7 +313,11 @@ impl GroupCaches {
 
     /// Merge full-context logits [B, ctx, V] into the gen-region
     /// latest-logits state for the given slots and refresh their
-    /// confidences (the vanilla method's whole cache interaction).
+    /// confidences. Only the stateless full-forward executables
+    /// (`vanilla_b*`, `prefill_b*` — the Host-apply fallback) still
+    /// return full-context logits and pay the prompt-region offset here;
+    /// the device-apply path downloads the gen-region slice and merges
+    /// via [`GroupCaches::merge_gen_logits_slots`].
     pub fn merge_full_logits_slots(
         &mut self,
         logits_full: &HostTensor,
@@ -328,6 +332,34 @@ impl GroupCaches {
                 let dst = (b * d.gen_len + g) * v;
                 self.logits[dst..dst + v].copy_from_slice(&src_all[src..src + v]);
             }
+        }
+        self.recompute_conf_slots(slots);
+        Ok(())
+    }
+
+    /// Merge gen-region logits [B, gen, V] (the `logits_gen` output of
+    /// the device-apply prefill — same positions, no prompt rows) into
+    /// the latest-logits state for the given slots and refresh their
+    /// confidences. Row-for-row with the host state, so no full-context
+    /// offset arithmetic: the downlink shape IS the storage shape.
+    pub fn merge_gen_logits_slots(
+        &mut self,
+        logits_gen: &HostTensor,
+        slots: &[usize],
+    ) -> Result<()> {
+        let d = self.dims;
+        let row = d.gen_len * d.vocab;
+        let src_all = logits_gen.as_f32()?;
+        if src_all.len() != self.batch * row {
+            return Err(anyhow!(
+                "gen-region logits have {} elements, want {} ([B, gen, V])",
+                src_all.len(),
+                self.batch * row
+            ));
+        }
+        for &b in slots {
+            self.logits[b * row..(b + 1) * row]
+                .copy_from_slice(&src_all[b * row..(b + 1) * row]);
         }
         self.recompute_conf_slots(slots);
         Ok(())
@@ -1029,6 +1061,45 @@ mod tests {
         c.reset_slot(1);
         assert_eq!(c.logits[d.gen_len * d.vocab], 0.0);
         assert_eq!(c.conf[d.gen_len], 0.0);
+    }
+
+    #[test]
+    fn gen_logit_merge_matches_full_context_merge() {
+        let d = dims();
+        let v = d.vocab;
+        // a full-context tensor and its gen-region slice with the same
+        // peaked rows must produce identical state through either merge
+        let mut full = vec![0.0f32; 2 * d.ctx * v];
+        let mut gen = vec![0.0f32; 2 * d.gen_len * v];
+        for b in 0..2usize {
+            for g in 0..d.gen_len {
+                let peak = ((b + g) % v) as usize;
+                full[(b * d.ctx + d.prompt_len + g) * v + peak] = 6.0;
+                gen[(b * d.gen_len + g) * v + peak] = 6.0;
+            }
+        }
+        let full_t = HostTensor::F32 { shape: vec![2, d.ctx, v], data: full };
+        let gen_t = HostTensor::F32 { shape: vec![2, d.gen_len, v], data: gen };
+        let mut a = GroupCaches::new(&d, 2);
+        let mut b_ = GroupCaches::new(&d, 2);
+        a.merge_full_logits_slots(&full_t, &[0, 1]).unwrap();
+        b_.merge_gen_logits_slots(&gen_t, &[0, 1]).unwrap();
+        assert_eq!(a.logits, b_.logits);
+        assert_eq!(a.conf, b_.conf);
+
+        // slot filtering: spectator rows untouched
+        let mut c = GroupCaches::new(&d, 2);
+        c.merge_gen_logits_slots(&gen_t, &[1]).unwrap();
+        assert!(c.logits[..d.gen_len * v].iter().all(|&x| x == 0.0));
+        assert_eq!(c.logits[d.gen_len * v..], b_.logits[d.gen_len * v..]);
+
+        // a full-context tensor fed to the gen merge is a shape error,
+        // not a silent mis-slice
+        let full_t2 = HostTensor::F32 {
+            shape: vec![2, d.ctx, v],
+            data: vec![0.0; 2 * d.ctx * v],
+        };
+        assert!(c.merge_gen_logits_slots(&full_t2, &[0]).is_err());
     }
 
     #[test]

@@ -67,11 +67,16 @@ pub enum ExeKind {
 /// A device-retained output signature: the named output is produced on
 /// device, left there (never downloaded), and fed back as the named
 /// input on the next call — the KV-chaining contract between the
-/// compile pipeline and the runtime.
+/// compile pipeline and the runtime. `donate` (manifest field `alias`)
+/// additionally declares the pair as a PJRT input-output alias: the
+/// runtime configures donation at compile time so the update writes the
+/// input's device buffer in place — one live copy per chained tensor,
+/// with no transient second allocation during execution.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RetainedSig {
     pub output: String,
     pub input: String,
+    pub donate: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -276,9 +281,22 @@ impl Manifest {
             let mut retained = Vec::new();
             if let Some(arr) = e.get("retained_outputs").as_arr() {
                 for r in arr {
+                    let alias = r.get("alias");
+                    let donate = if alias.is_null() {
+                        false
+                    } else {
+                        alias.as_bool().ok_or_else(|| {
+                            anyhow!(
+                                "executable {exe_name}: `retained_outputs` \
+                                 field `alias` must be a boolean, got {}",
+                                alias.to_string()
+                            )
+                        })?
+                    };
                     let sig = RetainedSig {
                         output: r.get("output").as_str().unwrap_or("").to_string(),
                         input: r.get("input").as_str().unwrap_or("").to_string(),
+                        donate,
                     };
                     if !output_names.iter().any(|n| n == &sig.output) {
                         return Err(anyhow!(
@@ -367,6 +385,26 @@ impl ExeSpec {
             .ok_or_else(|| {
                 anyhow!("executable {}: no output named {name:?}", self.name)
             })
+    }
+
+    /// PJRT input-output alias (donation) pairs declared by the
+    /// retained-chaining signatures marked `alias` in the manifest:
+    /// `(output_index, parameter_number)`, where the parameter number is
+    /// in the executable's true argument order — the `n_params` model
+    /// parameters first, then the non-parameter inputs. The compile
+    /// pipeline guarantees shape/dtype equality for chained pairs, so an
+    /// aliased output can write its input's device buffer in place
+    /// (donation: at most one live copy per chained tensor).
+    pub fn alias_pairs(&self, n_params: usize) -> Vec<(usize, usize)> {
+        self.retained
+            .iter()
+            .filter(|r| r.donate)
+            .filter_map(|r| {
+                let out = self.output_names.iter().position(|n| n == &r.output)?;
+                let inp = self.inputs.iter().position(|i| i.name == r.input)?;
+                Some((out, n_params + inp))
+            })
+            .collect()
     }
 }
 

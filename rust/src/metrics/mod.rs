@@ -185,6 +185,15 @@ pub struct Metrics {
     pub d2h_bytes_avoided: Counter,
     /// runs whose confidence was computed in-graph (no host round-trip)
     pub ingraph_conf_steps: Counter,
+    /// sampler-bound D2H bytes actually downloaded by device-apply runs
+    /// (gen-region logit slices + selected step rows with positions)
+    pub d2h_bytes_shipped: Counter,
+    /// logit downlink bytes saved vs the full-context [B, ctx, V]
+    /// baseline download
+    pub d2h_bytes_saved: Counter,
+    /// device-apply executions whose chained inputs were donated in
+    /// place by the compile-time input-output alias config
+    pub donated_execs: Counter,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -259,6 +268,9 @@ impl Metrics {
             ("esdllm_retained_out_reuses", self.retained_out_reuses.get()),
             ("esdllm_d2h_bytes_avoided", self.d2h_bytes_avoided.get()),
             ("esdllm_ingraph_conf_steps", self.ingraph_conf_steps.get()),
+            ("esdllm_d2h_bytes_shipped", self.d2h_bytes_shipped.get()),
+            ("esdllm_d2h_bytes_saved", self.d2h_bytes_saved.get()),
+            ("esdllm_donated_execs", self.donated_execs.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -288,6 +300,10 @@ impl Metrics {
         out.push_str(&format!(
             "esdllm_upload_bytes_per_tick {:.1}\n",
             self.upload_bytes.get() as f64 / ticks as f64
+        ));
+        out.push_str(&format!(
+            "esdllm_d2h_bytes_shipped_per_tick {:.1}\n",
+            self.d2h_bytes_shipped.get() as f64 / ticks as f64
         ));
         out.push_str(&format!("esdllm_slot_occupancy {:.4}\n", self.slot_occupancy()));
         out.push_str(&format!(
@@ -327,6 +343,9 @@ mod tests {
         m.retained_out_reuses.add(3);
         m.d2h_bytes_avoided.add(2048);
         m.ingraph_conf_steps.inc();
+        m.d2h_bytes_shipped.add(512);
+        m.d2h_bytes_saved.add(768);
+        m.donated_execs.add(2);
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
@@ -338,7 +357,11 @@ mod tests {
         assert!(text.contains("esdllm_retained_out_reuses 3"));
         assert!(text.contains("esdllm_d2h_bytes_avoided 2048"));
         assert!(text.contains("esdllm_ingraph_conf_steps 1"));
+        assert!(text.contains("esdllm_d2h_bytes_shipped 512"));
+        assert!(text.contains("esdllm_d2h_bytes_saved 768"));
+        assert!(text.contains("esdllm_donated_execs 2"));
         assert!(text.contains("esdllm_upload_bytes_per_tick"));
+        assert!(text.contains("esdllm_d2h_bytes_shipped_per_tick"));
     }
 
     #[test]

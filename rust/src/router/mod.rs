@@ -348,6 +348,9 @@ fn tick_once(
     metrics.retained_out_reuses.add(tr.retained_out_reuses);
     metrics.d2h_bytes_avoided.add(tr.d2h_bytes_avoided);
     metrics.ingraph_conf_steps.add(tr.ingraph_conf_steps);
+    metrics.d2h_bytes_shipped.add(tr.d2h_bytes_shipped);
+    metrics.d2h_bytes_saved.add(tr.d2h_bytes_saved);
+    metrics.donated_execs.add(tr.donated_execs);
     match tick_result {
         Ok(finished) => {
             metrics.ticks_total.inc();
@@ -521,6 +524,12 @@ mod tests {
         assert!(router.metrics.retained_out_reuses.get() > 0);
         assert!(router.metrics.d2h_bytes_avoided.get() > 0);
         assert!(router.metrics.ingraph_conf_steps.get() > 0);
+        // the sliced downlink + donation ledger flows through too: runs
+        // downloaded gen-region logit rows (saving the prompt-region
+        // slice) with their chained inputs donated in place
+        assert!(router.metrics.d2h_bytes_shipped.get() > 0);
+        assert!(router.metrics.d2h_bytes_saved.get() > 0);
+        assert!(router.metrics.donated_execs.get() > 0);
         router.shutdown();
     }
 

@@ -2,6 +2,32 @@
 //! client, keeps model parameters resident as device buffers, and runs
 //! decode-step executables with [`HostTensor`] I/O.
 //!
+//! Transfer discipline — the two halves of the decode-loop downlink/
+//! uplink contract this layer enforces:
+//!
+//!   * **Sliced downlink.** Executions download only the outputs the
+//!     host actually reads. [`Runtime::run_retained`] leaves
+//!     device-chained outputs (KV/indicator/confidence under the
+//!     device-apply path) on the device entirely, and the compile
+//!     pipeline slices the remaining logit output to the gen region
+//!     (`logits_gen`, `[B, gen, V]`) or the selected step rows
+//!     (`[B, k, V]`) in-graph — the prompt-region rows of a grounding
+//!     prefill never cross the bus. The resident planner
+//!     ([`resident::TransferStats`]) accounts the shipped and saved
+//!     bytes (`d2h_bytes_shipped` / `d2h_bytes_saved`).
+//!   * **Donation (input-output aliasing).** For executables whose
+//!     manifest marks retained-chaining signatures with `alias`,
+//!     [`Runtime::executable`] declares a PJRT input-output alias config
+//!     at compile time ([`xla::PjRtClient::compile_with_io_aliases`]):
+//!     the chained cache update then writes its input's device buffer in
+//!     place instead of materializing a second copy, so device memory
+//!     for a chained tensor is bounded at ONE live allocation even
+//!     during execution. Donation invalidates the donated argument
+//!     buffer — callers must replace their handle with the new output
+//!     after every run, which is exactly what the chain code in
+//!     [`crate::scheduler::PjrtBackend`] does (and what
+//!     [`resident::DeviceGroupCaches::invalidate`] unwinds on failure).
+//!
 //! Threading model: PJRT wrapper types hold raw pointers and are not
 //! `Send`/`Sync`; each engine worker thread owns its own `Runtime`
 //! (the CPU client is cheap). The coordinator communicates with workers
@@ -68,7 +94,12 @@ impl Runtime {
         self.manifest.arch(name)
     }
 
-    /// Compile (and cache) an executable by `(arch, exe)` name.
+    /// Compile (and cache) an executable by `(arch, exe)` name. When the
+    /// manifest marks retained-chaining signatures with `alias`, the
+    /// input-output alias pairs are declared to PJRT here, at compile
+    /// time — execution then donates those argument buffers, updating
+    /// the chained cache tensors in place (callers must replace their
+    /// handles with the retained outputs after every run).
     pub fn executable(
         &self,
         arch: &ArchSpec,
@@ -83,13 +114,17 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let compiled = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", exe.name))?;
+        let aliases = exe.alias_pairs(arch.params.len());
+        let compiled = if aliases.is_empty() {
+            self.client.compile(&comp)
+        } else {
+            self.client.compile_with_io_aliases(&comp, &aliases)
+        }
+        .map_err(|e| anyhow!("compiling {}: {e}", exe.name))?;
         log::info!(
-            "compiled {key} in {:.2}s",
-            t0.elapsed().as_secs_f64()
+            "compiled {key} in {:.2}s ({} donated input-output aliases)",
+            t0.elapsed().as_secs_f64(),
+            aliases.len()
         );
         let rc = Rc::new(compiled);
         self.exes.borrow_mut().insert(key, rc.clone());
@@ -286,12 +321,15 @@ impl Runtime {
     /// the per-tick D2H/H2D cache bounce: a retained KV block never
     /// crosses the PCIe bus mid-flight.
     ///
-    /// Chaining doubles as donation in spirit: the caller replaces its
-    /// previous handle with the new output and drops the old buffer, so
-    /// device memory for the cache stays bounded at one live copy per
-    /// tensor (plus the transient during execution; a donation-capable
-    /// PJRT build can alias them with an input-output alias config at
-    /// compile time, with no changes here).
+    /// For executables compiled with an input-output alias config
+    /// (manifest `alias` on the retained signatures — see
+    /// [`Runtime::executable`]), execution additionally *donates* the
+    /// chained [`ExecArg::Device`] arguments: the retained output IS the
+    /// input allocation, updated in place, so there is no transient
+    /// second copy during execution and the donated argument buffer must
+    /// not be used again. The chain code replaces its handles with the
+    /// retained outputs unconditionally, which satisfies that contract
+    /// for aliased and unaliased builds alike.
     pub fn run_retained(
         &self,
         arch: &ArchSpec,

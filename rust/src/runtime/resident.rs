@@ -28,9 +28,23 @@
 //!     chains them into the next call, so after the one-time seed upload
 //!     a steady-state step ships **zero** KV, indicator, and confidence
 //!     bytes in either direction — only block tokens (plus the batch-bit
-//!     masks) go up, and only the sampled logit rows come down. Both the
-//!     PJRT backend (when the apply executables are compiled) and the
-//!     deterministic sim backend run this mode through the same
+//!     masks) go up. The **downlink is gen-region-sliced**: a grounding
+//!     prefill downloads `logits_gen` `[B, gen, V]` (the prompt-region
+//!     rows never cross the bus — 60% of the old `[B, ctx, V]` download
+//!     at nano geometry), and a step downloads only its selected rows
+//!     `[B, k, V]` plus positions. The ledger accounts both directions:
+//!     `d2h_bytes_shipped` is what actually came down,
+//!     `d2h_bytes_saved` is the reduction vs a full-context
+//!     `[B, ctx, V]`-every-run design. The chained inputs are
+//!     additionally **donated**: the manifest's alias signatures make
+//!     the runtime declare a PJRT input-output alias config at compile
+//!     time, so each cache update writes its input buffer in place —
+//!     at most one live device copy per chained tensor, with no
+//!     transient second allocation during execution (`donated_execs`
+//!     counts those runs; the vendored `xla` stub models the allocation
+//!     semantics so tests can pin the invariant). Both the PJRT backend
+//!     (when the apply executables are compiled) and the deterministic
+//!     sim backend run this mode through the same
 //!     [`DeviceGroupCaches::sync_prefill_device`] /
 //!     [`DeviceGroupCaches::sync_step_device`] planner, which is how the
 //!     two ledgers are kept byte-exact and asserted without artifacts;
@@ -38,7 +52,10 @@
 //!     attention, indicator ablations, adaptive skip ratios — variants
 //!     without compiled apply executables): outputs land in the host
 //!     mirror only, so their rows stay dirty and re-ship as a *delta*
-//!     (block rows, not the full tensor) on the next sync.
+//!     (block rows, not the full tensor) on the next sync. Host-mode
+//!     downloads are not planner-mediated, so the D2H ledger counters
+//!     stay zero there (the physical `RuntimeStats::download_bytes`
+//!     still counts them).
 //!
 //! In `Host` mode confidence is host-computed (softmax over downloaded
 //! logits) and re-ships as a delta; in `Device` mode the host keeps a
@@ -128,6 +145,20 @@ pub struct TransferStats {
     /// runs whose per-token confidence was computed in-graph (no host
     /// conf round-trip in either direction)
     pub ingraph_conf_steps: u64,
+    /// sampler-bound D2H bytes a device-apply run actually downloads:
+    /// the gen-region logit slice `[B, gen, V]` for a grounding prefill,
+    /// the selected rows `[B, k, V]` plus positions for a step
+    pub d2h_bytes_shipped: u64,
+    /// logit downlink reduction vs the full-context baseline (a design
+    /// that downloads `[B, ctx, V]` every run, as the pre-slice
+    /// `prefill_apply` and the vanilla forward do):
+    /// `B × (ctx − rows_shipped) × V` floats per run
+    pub d2h_bytes_saved: u64,
+    /// device-apply executions whose chained kv/ind/conf inputs are
+    /// donated in place by the compile-time input-output alias config
+    /// (one live device copy per chained tensor, no transient second
+    /// allocation)
+    pub donated_execs: u64,
 }
 
 impl TransferStats {
@@ -170,6 +201,9 @@ impl TransferStats {
         self.retained_out_reuses += d.retained_out_reuses;
         self.d2h_bytes_avoided += d.d2h_bytes_avoided;
         self.ingraph_conf_steps += d.ingraph_conf_steps;
+        self.d2h_bytes_shipped += d.d2h_bytes_shipped;
+        self.d2h_bytes_saved += d.d2h_bytes_saved;
+        self.donated_execs += d.donated_execs;
     }
 
     /// Field-wise delta against an earlier snapshot of the same ledger.
@@ -201,6 +235,13 @@ impl TransferStats {
             ingraph_conf_steps: self
                 .ingraph_conf_steps
                 .saturating_sub(earlier.ingraph_conf_steps),
+            d2h_bytes_shipped: self
+                .d2h_bytes_shipped
+                .saturating_sub(earlier.d2h_bytes_shipped),
+            d2h_bytes_saved: self
+                .d2h_bytes_saved
+                .saturating_sub(earlier.d2h_bytes_saved),
+            donated_execs: self.donated_execs.saturating_sub(earlier.donated_execs),
         }
     }
 }
@@ -266,6 +307,13 @@ pub struct DeviceGroupCaches {
     dims: Dims,
     batch: usize,
     apply: ApplyMode,
+    /// whether the chained inputs are donated in place by a compile-time
+    /// input-output alias config. Defaults to true under
+    /// [`ApplyMode::Device`] (the compile pipeline emits the alias
+    /// signatures); the PJRT backend overrides it from the loaded
+    /// manifest so `donated_execs` never reports donation an alias-less
+    /// artifact set cannot perform.
+    donate: bool,
     kv_seeded: bool,
     kv_sparse_seeded: bool,
     ind_seeded: BTreeMap<String, bool>,
@@ -295,6 +343,7 @@ impl DeviceGroupCaches {
             dims: *dims,
             batch,
             apply,
+            donate: apply == ApplyMode::Device,
             kv_seeded: false,
             kv_sparse_seeded: false,
             ind_seeded: BTreeMap::new(),
@@ -317,6 +366,19 @@ impl DeviceGroupCaches {
 
     pub fn apply_mode(&self) -> ApplyMode {
         self.apply
+    }
+
+    /// Override whether the ledger may count executions as donated —
+    /// the PJRT backend sets this from the loaded manifest (false when
+    /// the apply executables carry no `alias` signatures, so they were
+    /// compiled without an input-output alias config and chain by
+    /// replace-and-drop instead).
+    pub fn set_donation(&mut self, on: bool) {
+        self.donate = on;
+    }
+
+    pub fn donation(&self) -> bool {
+        self.donate
     }
 
     /// Stage the prefill token upload: copy only the refreshed slots'
@@ -479,6 +541,26 @@ impl DeviceGroupCaches {
         (self.batch * self.dims.gen_len * 4) as u64
     }
 
+    /// The one copy of the gen-region downlink accounting: a device-apply
+    /// run downloads `rows` logit rows (f32) plus, when `with_pos`, their
+    /// i32 positions; the savings baseline is the full-context
+    /// `[B, ctx, V]` logit download the pre-slice executables shipped.
+    /// Counts the run as donated only when the executables were compiled
+    /// with the input-output alias config ([`DeviceGroupCaches::set_donation`]
+    /// — an alias-less artifact set chains by replace-and-drop and must
+    /// not report in-place updates it cannot perform).
+    fn account_d2h_logits(&mut self, rows: usize, with_pos: bool) {
+        let row_bytes = (self.batch * self.dims.vocab * 4) as u64;
+        let shipped =
+            rows as u64 * row_bytes + if with_pos { (self.batch * rows * 4) as u64 } else { 0 };
+        let full_ctx = self.dims.ctx as u64 * row_bytes;
+        self.stats.d2h_bytes_shipped += shipped;
+        self.stats.d2h_bytes_saved += full_ctx.saturating_sub(rows as u64 * row_bytes);
+        if self.donate {
+            self.stats.donated_execs += 1;
+        }
+    }
+
     /// Stage the batch-bit occupancy / refresh mask for `slots` into the
     /// pooled [B] i32 buffer. The mask rides up with the tokens (B × 4
     /// bytes — this is what replaces the host-masked confidence upload).
@@ -500,8 +582,12 @@ impl DeviceGroupCaches {
     /// the kv/ind/conf resident tensors. The first touch ships the whole
     /// host tensors (the physical upload that opens the chain — the
     /// residency seed); every later call feeds back the executable's own
-    /// retained outputs for zero bytes. Also accounts the D2H bytes this
-    /// plan avoids vs the Host-apply prefill's cache downloads.
+    /// retained outputs for zero bytes. Downlink: the run downloads only
+    /// the gen-region logit slice (`logits_gen`, `B × gen × V` floats,
+    /// counted in `d2h_bytes_shipped` with the `B × prompt × V` slice
+    /// saving in `d2h_bytes_saved`), and the D2H bytes the retained
+    /// cache outputs avoid vs the Host-apply prefill's cache downloads
+    /// land in `d2h_bytes_avoided`.
     pub fn sync_prefill_device(
         &mut self,
         caches: &mut GroupCaches,
@@ -555,20 +641,28 @@ impl DeviceGroupCaches {
         // path computes it from logits, which both paths download)
         self.stats.d2h_bytes_avoided +=
             kv_full + crate::cache::INDICATORS.len() as u64 * ind_full;
+        // the downlink is the gen-region logit slice only (no positions:
+        // a prefill refreshes every gen row)
+        self.account_d2h_logits(self.dims.gen_len, false);
         Ok(())
     }
 
     /// Input sync for one device-apply step over `block` positions at
     /// `block_start` for `slots`: token rows and the occupancy mask ship;
     /// the kv/ind/conf inputs chain the previous call's retained outputs
-    /// (zero bytes); confidence is computed in-graph. `n_ind` is the
-    /// number of indicator layers the equivalent Host-apply step would
-    /// have downloaded in its `ind_block` output (the exe's maintained
-    /// layers — skip layers for ES, every layer for dual), used only for
-    /// the honest `d2h_bytes_avoided` baseline. Errors if the chain has
-    /// not been seeded (a step before any grounding prefill) or if the
-    /// stepped slots' rows are host-divergent — the transport has no
-    /// partial write into a retained buffer, so such a step would
+    /// (zero bytes, donated in place by the alias config); confidence is
+    /// computed in-graph. `n_ind` is the number of indicator layers the
+    /// equivalent Host-apply step would have downloaded in its
+    /// `ind_block` output (the exe's maintained layers — skip layers for
+    /// ES, every layer for dual), used only for the honest
+    /// `d2h_bytes_avoided` baseline. `n_sel` is the number of selected
+    /// logit rows the executable returns (`final_keep` — the full block
+    /// for a dual step, the surviving positions for an ES step): the
+    /// run's downlink is `B × n_sel × V` logit floats plus `B × n_sel`
+    /// i32 positions, counted in `d2h_bytes_shipped`. Errors if the
+    /// chain has not been seeded (a step before any grounding prefill)
+    /// or if the stepped slots' rows are host-divergent — the transport
+    /// has no partial write into a retained buffer, so such a step would
     /// silently execute against stale cache rows.
     #[allow(clippy::too_many_arguments)]
     pub fn sync_step_device(
@@ -576,6 +670,7 @@ impl DeviceGroupCaches {
         caches: &mut GroupCaches,
         indicator: &str,
         n_ind: usize,
+        n_sel: usize,
         tokens: &[i32],
         block_start: usize,
         block: usize,
@@ -621,6 +716,8 @@ impl DeviceGroupCaches {
         let kv_block = (self.batch * block * caches.kv_row_bytes()) as u64;
         let ind_block = (n_ind * self.batch * block * self.dims.d_model * 2) as u64;
         self.stats.d2h_bytes_avoided += kv_block + ind_block;
+        // the downlink is the selected logit rows + their positions
+        self.account_d2h_logits(n_sel, true);
         Ok(())
     }
 
@@ -827,7 +924,7 @@ mod tests {
 
         // a step before any grounding prefill must refuse to run
         assert!(r
-            .sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &slots)
+            .sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &slots)
             .is_err());
 
         // grounding prefill: seeds all three chains (one full upload each)
@@ -837,11 +934,17 @@ mod tests {
         assert!(r.stats.ind_upload_bytes > 0);
         assert!(r.stats.conf_upload_bytes > 0);
         assert!(r.stats.d2h_bytes_avoided > 0);
+        // downlink: the gen-region logit slice, not the full context
+        let gen_logits = (2 * d.gen_len * d.vocab * 4) as u64;
+        let ctx_logits = (2 * d.ctx * d.vocab * 4) as u64;
+        assert_eq!(r.stats.d2h_bytes_shipped, gen_logits);
+        assert_eq!(r.stats.d2h_bytes_saved, ctx_logits - gen_logits);
+        assert_eq!(r.stats.donated_execs, 1);
         r.note_prefill_applied(&mut c, &slots);
 
         // steady-state step: only tokens + the batch-bit mask ship
         let snap = r.stats;
-        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &slots)
+        r.sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &slots)
             .unwrap();
         r.note_step_applied(&mut c, "h", false, d.prompt_len, 2, &slots);
         let delta = r.stats.since(&snap);
@@ -856,6 +959,30 @@ mod tests {
         assert_eq!(delta.ingraph_conf_steps, 1);
         assert!(delta.d2h_bytes_avoided > 0, "block downloads avoided");
         assert_eq!(delta.resident_reuses, 3);
+        // downlink: n_sel = 2 selected rows' logits + their positions
+        assert_eq!(delta.d2h_bytes_shipped, (2 * 2 * d.vocab * 4 + 2 * 2 * 4) as u64);
+        assert_eq!(delta.d2h_bytes_saved, (2 * (d.ctx - 2) * d.vocab * 4) as u64);
+        assert_eq!(delta.donated_execs, 1, "the chain was donated in place");
+    }
+
+    #[test]
+    fn donation_off_keeps_d2h_ledger_but_counts_no_donated_execs() {
+        // an alias-less artifact set (no `alias` signatures in the
+        // manifest) still chains and still downloads the sliced logits,
+        // but must not report in-place donation it cannot perform
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        assert!(r.donation(), "device planner models donation by default");
+        r.set_donation(false);
+        let tokens = vec![0i32; 2 * d.ctx];
+        r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();
+        r.note_prefill_applied(&mut c, &[0, 1]);
+        r.sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &[0, 1])
+            .unwrap();
+        assert_eq!(r.stats.donated_execs, 0, "no alias config, no donation");
+        assert!(r.stats.d2h_bytes_shipped > 0, "sliced downlink still counted");
+        assert!(r.stats.d2h_bytes_saved > 0);
     }
 
     #[test]
@@ -871,17 +998,17 @@ mod tests {
         // grounding prefill must fail loudly, naming the slot
         c.reset_slot(1);
         let err = r
-            .sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[1])
+            .sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &[1])
             .unwrap_err();
         assert!(format!("{err}").contains("slot 1"), "{err}");
         // the co-resident slot is unaffected and can still step
-        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[0])
+        r.sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &[0])
             .unwrap();
         // after the grounding prefill the admitted slot steps again
         r.sync_prefill_device(&mut c, "h", &tokens, &[1]).unwrap();
         r.note_prefill_applied(&mut c, &[1]);
         let snap = r.stats;
-        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[1])
+        r.sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &[1])
             .unwrap();
         assert_eq!(r.stats.since(&snap).kv_upload_bytes, 0, "regenerated on device");
     }
@@ -899,7 +1026,7 @@ mod tests {
         assert!(r.handles.kv_chain.is_none() && r.handles.conf_chain.is_none());
         // a step against the dropped chain is refused...
         assert!(r
-            .sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 2, &[0])
+            .sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &[0])
             .is_err());
         // ...and the next grounding prefill re-seeds (a second full upload)
         r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();

@@ -41,9 +41,12 @@
 //! apply path (`ApplyMode::Device` — the PJRT backend whenever the
 //! `*_apply` executables are compiled, and the sim backend by default)
 //! the executables scatter their own cache updates in-graph, the
-//! runtime retains those outputs, and the backend chains them across
-//! ticks — steady state ships block tokens and batch-bit masks up and
-//! sampled logit rows down, nothing else. On the Host-apply fallback,
+//! runtime retains those outputs (donating the chained inputs in place
+//! under the manifest's input-output alias config), and the backend
+//! chains them across ticks — steady state ships block tokens and
+//! batch-bit masks up and gen-region logit rows down (`logits_gen`
+//! `[B, gen, V]` for a grounding prefill, the `[B, k, V]` selected rows
+//! plus positions for a step), nothing else. On the Host-apply fallback,
 //! per-kind dirty bitmaps in [`crate::cache::GroupCaches`] track which
 //! rows the host mutated since the device copy was refreshed and syncs
 //! ship only those rows (admission invalidation re-syncs exactly the
@@ -589,7 +592,26 @@ impl<'rt> PjrtBackend<'rt> {
         } else {
             ApplyMode::Host
         };
-        let resident = DeviceGroupCaches::new(&arch.dims, batch, apply);
+        let mut resident = DeviceGroupCaches::new(&arch.dims, batch, apply);
+        if apply == ApplyMode::Device {
+            // the ledger may report an execution as donated only if
+            // every apply executable this config chains was compiled
+            // with the input-output alias config (manifest `alias`
+            // signatures); an older alias-less artifact set still
+            // chains correctly, by replace-and-drop
+            let n_params = arch.params.len();
+            let donated = |name: &str| {
+                arch.executables
+                    .get(name)
+                    .map(|e| !e.alias_pairs(n_params).is_empty())
+                    .unwrap_or(false)
+            };
+            let all_donate = donated(&prefill_apply_exe_name(batch))
+                && donated(&apply_step_exe_name(StepPlan::DualStep, cfg.block, batch))
+                && (cfg.method != Method::EsDllm
+                    || donated(&apply_step_exe_name(StepPlan::EsStep, cfg.block, batch)));
+            resident.set_donation(all_donate);
+        }
         Ok(PjrtBackend {
             rt,
             cfg,
@@ -863,10 +885,12 @@ impl PjrtBackend<'_> {
     /// Device-apply prefill: the `prefill_apply` executable regenerates
     /// the refreshed slots' KV/indicator/confidence rows in-graph
     /// (row-filtered by the batch-bit refresh mask) and its cache
-    /// outputs are retained on device; the host downloads only the
-    /// logits it needs for sampling. The first call of a chain seeds the
-    /// resident tensors from the host mirrors — the only whole-cache
-    /// upload of a generation.
+    /// outputs are retained on device (donated in place when the
+    /// artifacts carry the alias config); the host downloads only the
+    /// gen-region logit slice the sampler reads — `logits_gen`
+    /// `[B, gen, V]`, never the `[B, ctx, V]` full context. The first
+    /// call of a chain seeds the resident tensors from the host mirrors
+    /// — the only whole-cache upload of a generation.
     fn prefill_device_impl(
         &mut self,
         tokens: &[i32],
@@ -903,10 +927,12 @@ impl PjrtBackend<'_> {
         ];
         let mut out =
             self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
-        // host mirror refresh: logits + the confidence the sampler reads
-        // (recomputed from the same logits the device conf merge used)
-        let logits_i = exe.output_index("logits")?;
-        caches.merge_full_logits_slots(out.host_at(logits_i, "logits")?, slots)?;
+        // host mirror refresh from the gen-region logit slice — the only
+        // download of a grounding prefill (the prompt rows stay on
+        // device); confidence is recomputed from the same rows the
+        // device conf merge used
+        let logits_i = exe.output_index("logits_gen")?;
+        caches.merge_gen_logits_slots(out.host_at(logits_i, "logits_gen")?, slots)?;
         // chain the retained outputs; the previous buffers drop here, so
         // device memory stays bounded at one live copy per tensor
         self.resident.handles.kv_chain = Some(UploadHandle {
@@ -949,10 +975,13 @@ impl PjrtBackend<'_> {
         } else {
             exe.skip_layers.len()
         };
+        // selected logit rows this executable downloads (final_keep: the
+        // whole block for a dual step, the skip survivors for ES)
+        let n_sel = exe.final_keep.unwrap_or(block);
         // shared planner sync (parity with the sim ledger): refuses to
         // run against an unseeded chain or host-divergent slot rows
         self.resident
-            .sync_step_device(caches, "h", n_ind, tokens, block_start, block, slots)?;
+            .sync_step_device(caches, "h", n_ind, n_sel, tokens, block_start, block, slots)?;
         let chain_missing = || anyhow!("device-apply chain missing despite seeded planner");
         let kv_buf =
             &self.resident.handles.kv_chain.as_ref().ok_or_else(chain_missing)?.buf;

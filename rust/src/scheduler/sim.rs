@@ -20,7 +20,11 @@
 //! (asserted in `tests/transfer_accounting.rs`): after the one-time
 //! seed, steady-state steps ship only block tokens and the batch-bit
 //! occupancy mask, with KV, indicator, and confidence all chained on
-//! device. [`SimCfg::apply`] can flip the layer to [`ApplyMode::Host`]
+//! device (donated in place under the alias config) and the downlink
+//! sliced to gen-region logit rows — `[B, gen, V]` per grounding
+//! prefill, the `final_keep` selected rows + positions per step
+//! ([`SimCfg::n_sel`]: the whole block for dual, the default-skip
+//! survivors for ES), never the `[B, ctx, V]` full context. [`SimCfg::apply`] can flip the layer to [`ApplyMode::Host`]
 //! to model the stateless-executable fallback (outputs scattered
 //! host-side, dirty rows re-shipped as deltas) — the comparison the
 //! `perf_hotpath` Host-vs-Device apply section measures.
@@ -81,6 +85,24 @@ impl SimCfg {
         self.dual_cost = Duration::from_micros(dual_us);
         self.es_cost = Duration::from_micros(es_us);
         self
+    }
+
+    /// Selected logit rows a step of `plan` downloads — the sim's model
+    /// of the compiled executables' `final_keep`: the whole block for a
+    /// dual step, and for an ES step the survivors of the default skip
+    /// chain (two layers at ratio 0.5, `modelcfg.SKIP_CONFIGS["default"]`
+    /// — the same two-stage rounding the compile pipeline applies). This
+    /// is what keeps the sim's D2H ledger byte-exact with the PJRT
+    /// planner, which accounts the real `exe.final_keep`.
+    pub fn n_sel(plan: StepPlan, block: usize) -> usize {
+        match plan {
+            StepPlan::EsStep => {
+                let after_r1 = ((block as f64 * 0.5).round() as usize).max(1);
+                ((after_r1 as f64 * 0.5).round() as usize).max(1)
+            }
+            // prefills never reach run_step; dual keeps the whole block
+            _ => block,
+        }
     }
 
     /// Model the given apply mode (Host = the stateless-executable
@@ -224,10 +246,16 @@ impl StepBackend for SimBackend {
         if let Some(r) = self.resident.as_mut() {
             if r.apply_mode() == ApplyMode::Device {
                 // the PJRT device-apply step sync: tokens + occupancy
-                // mask ship; kv/ind/conf chain retained outputs and
-                // confidence is computed in-graph (the sim models a
-                // dual-style step maintaining every layer's indicator)
-                r.sync_step_device(caches, "h", n_layers, tokens, block_start, block, slots)?;
+                // mask ship; kv/ind/conf chain retained outputs (donated
+                // in place) and confidence is computed in-graph. The
+                // indicator model is dual-style (every layer maintained);
+                // the downlink model is per-plan `final_keep`
+                // ([`SimCfg::n_sel`]) so the D2H ledger matches what the
+                // real dual/ES apply executables download.
+                let n_sel = SimCfg::n_sel(plan, block);
+                r.sync_step_device(
+                    caches, "h", n_layers, n_sel, tokens, block_start, block, slots,
+                )?;
             } else {
                 // Host fallback: dirty-delta uploads per input kind
                 r.stage_step_tokens(tokens, block_start, block, slots);

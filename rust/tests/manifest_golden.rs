@@ -1,8 +1,10 @@
 //! Golden-manifest parse contract for the device-apply executable kinds:
 //! a checked-in fixture (mirroring what `python/compile/aot.py` emits)
-//! pins the `prefill_apply` / `step_apply` kinds and their
-//! `retained_outputs` chaining signatures, and the error paths must name
-//! the offending executable and field instead of failing generically.
+//! pins the `prefill_apply` / `step_apply` kinds, their
+//! `retained_outputs` chaining signatures with the `alias` (donation)
+//! flags, and the gen-region `logits_gen` output signature, and the
+//! error paths must name the offending executable and field instead of
+//! failing generically.
 
 use std::path::{Path, PathBuf};
 
@@ -27,9 +29,9 @@ fn golden_manifest_parses_device_apply_kinds() {
     assert_eq!(
         pf.retained,
         vec![
-            RetainedSig { output: "kv".into(), input: "kv".into() },
-            RetainedSig { output: "ind".into(), input: "ind".into() },
-            RetainedSig { output: "conf".into(), input: "conf".into() },
+            RetainedSig { output: "kv".into(), input: "kv".into(), donate: true },
+            RetainedSig { output: "ind".into(), input: "ind".into(), donate: true },
+            RetainedSig { output: "conf".into(), input: "conf".into(), donate: true },
         ]
     );
     // retain flags in output order: logits download, the cache chain
@@ -38,18 +40,30 @@ fn golden_manifest_parses_device_apply_kinds() {
     assert_eq!(pf.output_index("kv").unwrap(), 1);
     assert_eq!(pf.output_index("conf").unwrap(), 3);
     assert!(pf.output_index("nope").is_err());
+    // gen-region logit output: [B, gen, V], not [B, ctx, V] — and the
+    // old full-context name is gone, so a stale runtime fails loudly
+    let lg = pf.output_index("logits_gen").unwrap();
+    assert_eq!(lg, 0);
+    assert_eq!(pf.outputs[lg].shape, vec![8, 32, 64]);
+    assert!(pf.output_index("logits").is_err());
+    // input-output alias (donation) pairs in the executable's true
+    // argument order: 1 model param, then tokens/kv/ind/conf/refresh
+    assert_eq!(pf.alias_pairs(1), vec![(1, 2), (2, 3), (3, 4)]);
 
     let st = a.exe("es_apply_blk8_b8").unwrap();
     assert_eq!(st.kind, ExeKind::StepApply);
     assert_eq!(st.block, Some(8));
     assert_eq!(st.skip_layers, vec![1, 2]);
     assert_eq!(st.retain_flags(), vec![false, false, true, true, true]);
+    // args: param, x_tok, block_start, kv, ind, conf, occ, alpha
+    assert_eq!(st.alias_pairs(1), vec![(2, 4), (3, 5), (4, 6)]);
 
-    // plain step executables carry no retained outputs
+    // plain step executables carry no retained outputs and no aliases
     let dual = a.exe("dual_blk8_b8").unwrap();
     assert_eq!(dual.kind, ExeKind::Step);
     assert!(dual.retained.is_empty());
     assert_eq!(dual.retain_flags(), vec![false; 4]);
+    assert!(dual.alias_pairs(1).is_empty());
 }
 
 fn load_patched(patch: impl Fn(&str) -> String, subdir: &str) -> anyhow::Error {
@@ -76,8 +90,8 @@ fn unknown_kind_error_names_the_executable() {
 #[test]
 fn retained_output_must_reference_real_output_and_input() {
     let err = load_patched(
-        |src| src.replacen("{\"output\": \"kv\", \"input\": \"kv\"}",
-                           "{\"output\": \"kvx\", \"input\": \"kv\"}", 1),
+        |src| src.replacen("{\"output\": \"kv\", \"input\": \"kv\", \"alias\": true}",
+                           "{\"output\": \"kvx\", \"input\": \"kv\", \"alias\": true}", 1),
         "retout",
     );
     let msg = format!("{err:#}");
@@ -85,11 +99,43 @@ fn retained_output_must_reference_real_output_and_input() {
     assert!(msg.contains("kvx"), "{msg}");
 
     let err = load_patched(
-        |src| src.replacen("{\"output\": \"kv\", \"input\": \"kv\"}",
-                           "{\"output\": \"kv\", \"input\": \"kvx\"}", 1),
+        |src| src.replacen("{\"output\": \"kv\", \"input\": \"kv\", \"alias\": true}",
+                           "{\"output\": \"kv\", \"input\": \"kvx\", \"alias\": true}", 1),
         "retin",
     );
     let msg = format!("{err:#}");
     assert!(msg.contains("retained_outputs"), "{msg}");
     assert!(msg.contains("kvx"), "{msg}");
+}
+
+#[test]
+fn alias_flag_must_be_boolean_and_error_names_the_exe() {
+    // patch the first alias flag (prefill_apply_b8's kv signature) to a
+    // string: the parse must fail naming the executable and the field
+    let err = load_patched(
+        |src| src.replacen("\"input\": \"kv\", \"alias\": true}",
+                           "\"input\": \"kv\", \"alias\": \"yes\"}", 1),
+        "aliastype",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("prefill_apply_b8"), "names the exe: {msg}");
+    assert!(msg.contains("`alias`"), "names the field: {msg}");
+    assert!(msg.contains("boolean"), "names the expected type: {msg}");
+}
+
+#[test]
+fn alias_flag_defaults_to_no_donation() {
+    // a manifest without alias flags (the pre-donation format) still
+    // parses; the chain works, donation is just not declared
+    let src = std::fs::read_to_string(golden_dir().join("manifest.json")).unwrap();
+    let patched = src.replace(", \"alias\": true}", "}");
+    let dir = std::env::temp_dir().join("esdllm-golden-noalias");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), patched).unwrap();
+    let m = Manifest::load(&dir).expect("alias-less manifest parses");
+    let pf = m.arch("llada-nano").unwrap().exe("prefill_apply_b8").unwrap();
+    assert_eq!(pf.retained.len(), 3);
+    assert!(pf.retained.iter().all(|r| !r.donate));
+    assert!(pf.alias_pairs(1).is_empty(), "no donation declared");
+    assert_eq!(pf.retain_flags(), vec![false, true, true, true], "chain intact");
 }

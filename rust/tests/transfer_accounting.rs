@@ -1,17 +1,21 @@
 //! Transfer-accounting acceptance tests for the resident-cache layer
 //! and the device-apply decode path: a steady-state ES/dual tick ships
 //! zero KV, indicator, and confidence bytes in either direction (only
-//! block tokens + batch-bit masks go up, sampled logit rows come down),
-//! the PJRT device planner and the sim planner produce identical
-//! `TransferStats` for the same workload, a mid-flight admission
-//! dirties exactly the admitted slot, eviction invalidates the resident
-//! chain, and Host-apply ledger deltas match the dirty bitmaps.
-//! Everything runs over the sim backend / the planner directly — no
-//! PJRT artifacts required.
+//! block tokens + batch-bit masks go up, and the downlink is exactly
+//! the gen-region logit rows — `B × block × V` logit bytes per step,
+//! `B × gen × V` per grounding prefill, never `B × ctx × V`), the PJRT
+//! device planner and the sim planner produce identical `TransferStats`
+//! (including the D2H ledger) for the same workload, a mid-flight
+//! admission dirties exactly the admitted slot, eviction invalidates
+//! the resident chain, Host-apply ledger deltas match the dirty
+//! bitmaps, and a donated (input-output-aliased) execution chain never
+//! holds two live copies of a chained tensor — pinned against the stub
+//! runtime's live-buffer ledger. Everything runs over the sim backend /
+//! the planner / the xla stub directly — no PJRT artifacts required.
 
 use std::time::Instant;
 
-use esdllm::cache::{GroupCaches, RefreshPolicy};
+use esdllm::cache::{GroupCaches, RefreshPolicy, StepPlan};
 use esdllm::engine::Method;
 use esdllm::manifest::Dims;
 use esdllm::runtime::resident::{ApplyMode, DeviceGroupCaches, TransferKind, TransferStats};
@@ -94,8 +98,11 @@ fn steady_state_es_steps_upload_no_full_kv_bytes() {
 
 /// The PR's acceptance criterion: with `ApplyMode::Device`, once the
 /// chain is seeded every ES/dual tick ships ONLY step tokens (plus the
-/// batch-bit occupancy mask) host→device and zero KV / indicator /
-/// confidence bytes in either direction.
+/// batch-bit occupancy mask) host→device, zero KV / indicator /
+/// confidence bytes in either direction, and downloads exactly the
+/// block's logit rows — `B × block × V` logit bytes (+ `B × block` i32
+/// positions), NOT the `B × ctx × V` full context; grounding-prefill
+/// ticks download exactly the gen-region slice `B × gen × V`.
 #[test]
 fn device_steady_state_ships_only_tokens_and_masks() {
     let d = SimCfg::default().dims;
@@ -103,19 +110,37 @@ fn device_steady_state_ships_only_tokens_and_masks() {
     s.admit(input(1, "abcdefgh")).unwrap();
     s.tick().unwrap(); // grounding prefill: seeds the chain
     let batch = 2u64;
+    let block = 4u64;
+    let vocab = d.vocab as u64;
+    // the one sequence occupies one slot, so each tick runs exactly one
+    // plan: a grounding/refresh prefill, a dual step (downloads the
+    // whole block's rows), or an ES step (downloads the final_keep
+    // survivors — 1 of 4 under the default skip chain)
+    let prefill_d2h = batch * d.gen_len as u64 * vocab * 4;
+    let ctx_logit_d2h = batch * d.ctx as u64 * vocab * 4;
+    let es_sel = SimCfg::n_sel(StepPlan::EsStep, block as usize) as u64;
+    assert_eq!(es_sel, 1, "default skip chain at block 4 keeps one row");
+    let step_d2h = |n_sel: u64| {
+        // n_sel logit rows (f32) + their i32 positions
+        (batch * n_sel * vocab * 4, batch * n_sel * 4)
+    };
 
     let mut steady_ticks = 0;
     let mut guard = 0;
     while s.active() > 0 {
         guard += 1;
         assert!(guard < 1000, "scheduler failed to drain");
-        let plans_before = s.n_prefill;
+        let (pf_before, es_before) = (s.n_prefill, s.n_es);
         let before = s.transfer_stats();
         s.tick().unwrap();
         let delta = s.transfer_stats().since(&before);
-        if s.n_prefill > plans_before {
+        assert_eq!(delta.donated_execs, 1, "every device run donates its chain");
+        if s.n_prefill > pf_before {
             // refresh-cadence prefill ticks chain too (zero cache bytes)
+            // and download only the gen-region logit slice
             assert_eq!(delta.kv_upload_bytes, 0);
+            assert_eq!(delta.d2h_bytes_shipped, prefill_d2h);
+            assert_eq!(delta.d2h_bytes_saved, ctx_logit_d2h - prefill_d2h);
             continue;
         }
         steady_ticks += 1;
@@ -132,6 +157,14 @@ fn device_steady_state_ships_only_tokens_and_masks() {
         assert_eq!(delta.ingraph_conf_steps, 1);
         assert_eq!(delta.retained_out_reuses, 3, "kv+ind+conf all chained");
         assert!(delta.d2h_bytes_avoided > 0, "block downloads avoided");
+        // the steady-state downlink: at most B × block × V logit bytes —
+        // exactly that for a dual step, the final_keep survivors for an
+        // ES step — never B × ctx × V
+        let n_sel = if s.n_es > es_before { es_sel } else { block };
+        let (logit_b, pos_b) = step_d2h(n_sel);
+        assert_eq!(delta.d2h_bytes_shipped, logit_b + pos_b);
+        assert!(logit_b <= batch * block * vocab * 4);
+        assert_eq!(delta.d2h_bytes_saved, ctx_logit_d2h - logit_b);
     }
     assert!(steady_ticks >= 2, "workload exercised steady-state steps");
     // sanity: geometry used above matches the sim dims
@@ -143,7 +176,10 @@ fn device_steady_state_ships_only_tokens_and_masks() {
 /// note_*_applied, per its plan schedule) must produce the identical
 /// `TransferStats` ledger as the sim backend run through the scheduler
 /// on the same workload — both backends route through the same
-/// composite planner, and this pins that contract.
+/// composite planner, and this pins that contract. The equality is
+/// over the WHOLE ledger struct, so the D2H counters
+/// (`d2h_bytes_shipped` / `d2h_bytes_saved` / `donated_execs`) are
+/// byte-exact between the sim and PJRT planners by the same assertion.
 #[test]
 fn pjrt_device_planner_matches_sim_planner() {
     // sim side: one 3-char prompt at block 4 retires after exactly
@@ -157,7 +193,10 @@ fn pjrt_device_planner_matches_sim_planner() {
     let sim_stats = s.transfer_stats();
 
     // PJRT planner side: replicate that schedule through the planner
-    // calls prefill_device_impl / step_device_impl make
+    // calls prefill_device_impl / step_device_impl make — n_sel per plan
+    // is the executable's final_keep (block for dual, the default-skip
+    // survivors for ES), exactly what step_device_impl reads from the
+    // manifest and what the sim models via SimCfg::n_sel
     let d = SimCfg::default().dims;
     let mut c = GroupCaches::new(&d, 2);
     let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
@@ -166,8 +205,9 @@ fn pjrt_device_planner_matches_sim_planner() {
     c.reset_slot(0); // admission
     r.sync_prefill_device(&mut c, "h", &tokens, &slots).unwrap();
     r.note_prefill_applied(&mut c, &slots);
-    for _ in 0..3 {
-        r.sync_step_device(&mut c, "h", d.n_layers, &tokens, d.prompt_len, 4, &slots)
+    for plan in [StepPlan::EsStep, StepPlan::DualStep, StepPlan::EsStep] {
+        let n_sel = SimCfg::n_sel(plan, 4);
+        r.sync_step_device(&mut c, "h", d.n_layers, n_sel, &tokens, d.prompt_len, 4, &slots)
             .unwrap();
         r.note_step_applied(&mut c, "h", false, d.prompt_len, 4, &slots);
     }
@@ -360,4 +400,66 @@ fn record_classifies_kinds() {
     assert_eq!(st.kv_upload_bytes, 10);
     assert_eq!(st.ind_upload_bytes, 0);
     assert_eq!(st.conf_upload_bytes, 2);
+}
+
+/// The donation acceptance criterion: with the input-output alias
+/// config enabled, a multi-tick device-apply chain holds AT MOST ONE
+/// live device copy of each chained KV/indicator/confidence tensor —
+/// even transiently during execution — asserted against the stub
+/// runtime's live-buffer ledger. The un-aliased build (replace-and-drop
+/// chaining) transiently holds two copies per chained tensor, which is
+/// exactly the ROADMAP gap this closes.
+#[test]
+fn donated_chain_holds_at_most_one_live_copy_per_tensor() {
+    let dev = xla::StubDevice::new();
+    // three chained tensors (kv / ind / conf) seeded once, plus a
+    // logits output that is downloaded and dropped every tick
+    let (kv_b, ind_b, conf_b, logits_b) = (4096usize, 2048, 256, 512);
+    let mut kv = dev.alloc(kv_b);
+    let mut ind = dev.alloc(ind_b);
+    let mut conf = dev.alloc(conf_b);
+    assert_eq!(dev.live_buffers(), 3, "the chain seeds");
+    dev.reset_peak();
+
+    // alias pairs in the `ExeSpec::alias_pairs` format over args
+    // [kv, ind, conf]: outputs 1/2/3 donate params 0/1/2 in place
+    // (output 0 = logits, freshly materialized)
+    let exe = dev.executable(&[logits_b, kv_b, ind_b, conf_b], &[(1, 0), (2, 1), (3, 2)]);
+    for tick in 0..5 {
+        let mut out = exe.execute(&[&kv, &ind, &conf]).unwrap();
+        let logits = out.remove(0);
+        assert_eq!(dev.live_buffers(), 4, "tick {tick}: 3 chains + logits only");
+        // the chained outputs ARE the donated inputs, updated in place
+        assert!(out[0].shares_allocation(&kv));
+        assert!(out[1].shares_allocation(&ind));
+        assert!(out[2].shares_allocation(&conf));
+        // the host downloads the logit rows and drops the buffer; the
+        // backend replaces its handles (the donated inputs are invalid)
+        drop(logits);
+        conf = out.pop().unwrap();
+        ind = out.pop().unwrap();
+        kv = out.pop().unwrap();
+        assert_eq!(dev.live_buffers(), 3);
+    }
+    assert_eq!(
+        dev.peak_live_buffers(),
+        4,
+        "at most one live copy per chained tensor across the whole chain \
+         (3 chained allocations + the transient logits download)"
+    );
+
+    // the un-donated build on the same schedule: execution materializes
+    // fresh outputs while the inputs are still live — two copies of
+    // every chained tensor at once
+    let dev2 = xla::StubDevice::new();
+    let kv2 = dev2.alloc(kv_b);
+    let ind2 = dev2.alloc(ind_b);
+    let conf2 = dev2.alloc(conf_b);
+    dev2.reset_peak();
+    let exe2 = dev2.executable(&[logits_b, kv_b, ind_b, conf_b], &[]);
+    let out = exe2.execute(&[&kv2, &ind2, &conf2]).unwrap();
+    assert_eq!(dev2.live_buffers(), 7, "3 old + 3 new + logits");
+    assert!(!out[1].shares_allocation(&kv2));
+    drop(out);
+    assert_eq!(dev2.live_buffers(), 3);
 }

@@ -8,9 +8,24 @@
 //! tests run without it. Point the `xla` path dependency in the root
 //! `Cargo.toml` at the real bindings to enable PJRT execution — no
 //! source changes are needed.
+//!
+//! One piece of behavior IS modeled rather than stubbed: device-buffer
+//! lifetime under input-output aliasing (donation). The runtime declares
+//! alias pairs at compile time
+//! ([`PjRtClient::compile_with_io_aliases`], from the manifest's
+//! retained-chaining signatures) so the device-apply cache update writes
+//! its input buffer in place. [`StubDevice`] reproduces exactly the
+//! allocation consequences of that contract — an aliased output reuses
+//! its donated input's allocation, an unaliased one materializes a fresh
+//! buffer while the input is still live — behind a live/peak allocation
+//! ledger, so tests can pin the invariant donation buys ("at most one
+//! live copy per chained tensor, even transiently during execution")
+//! without any PJRT library present.
 
+use std::cell::Cell;
 use std::fmt;
 use std::path::Path;
+use std::rc::Rc;
 
 #[derive(Debug)]
 pub struct Error(String);
@@ -57,6 +72,20 @@ impl PjRtClient {
         Err(unavailable("compile"))
     }
 
+    /// Compile with an input-output alias (donation) config: each
+    /// `(output_index, parameter_number)` pair tells the runtime that the
+    /// output may reuse — and therefore invalidates — the argument
+    /// buffer passed at that parameter position. The real bindings lower
+    /// this to `HloInputOutputAliasConfig` before `client.compile`; the
+    /// stub fails like every other compile entry point.
+    pub fn compile_with_io_aliases(
+        &self,
+        _comp: &XlaComputation,
+        _aliases: &[(usize, usize)],
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compile_with_io_aliases"))
+    }
+
     pub fn buffer_from_host_buffer<T: Copy>(
         &self,
         _data: &[T],
@@ -75,11 +104,178 @@ impl PjRtClient {
     }
 }
 
-pub struct PjRtBuffer;
+/// A device buffer. Real-path constructors all fail in the stub, so a
+/// live `PjRtBuffer` only ever exists with a [`StubDevice`] allocation
+/// behind it (the donation-model tests).
+pub struct PjRtBuffer {
+    alloc: Option<Rc<Allocation>>,
+}
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         Err(unavailable("to_literal_sync"))
+    }
+
+    /// Size of the backing stub allocation in bytes (0 when the buffer
+    /// has no stub allocation).
+    pub fn stub_bytes(&self) -> usize {
+        self.alloc.as_ref().map(|a| a.bytes).unwrap_or(0)
+    }
+
+    /// Whether this buffer shares its device allocation with `other` —
+    /// true exactly when one was produced by donating the other (or a
+    /// chain of donations) under an input-output alias config.
+    pub fn shares_allocation(&self, other: &PjRtBuffer) -> bool {
+        match (&self.alloc, &other.alloc) {
+            (Some(a), Some(b)) => Rc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Stubbed device-memory model: allocation ledger + donation semantics
+// --------------------------------------------------------------------------
+
+struct LedgerCells {
+    live: Cell<usize>,
+    peak: Cell<usize>,
+}
+
+/// One device allocation; dropping the last buffer that references it
+/// releases it from the ledger.
+struct Allocation {
+    ledger: Rc<LedgerCells>,
+    bytes: usize,
+}
+
+impl Allocation {
+    fn fresh(ledger: &Rc<LedgerCells>, bytes: usize) -> Rc<Allocation> {
+        let live = ledger.live.get() + 1;
+        ledger.live.set(live);
+        if live > ledger.peak.get() {
+            ledger.peak.set(live);
+        }
+        Rc::new(Allocation { ledger: ledger.clone(), bytes })
+    }
+}
+
+impl Drop for Allocation {
+    fn drop(&mut self) {
+        self.ledger.live.set(self.ledger.live.get() - 1);
+    }
+}
+
+/// Allocation-accurate model of a PJRT device for donation tests: counts
+/// live allocations (and the peak), hands out buffers, and builds
+/// executables whose outputs either materialize fresh allocations or —
+/// for pairs named in an input-output alias config — reuse the donated
+/// input's allocation in place, exactly as a donation-capable PJRT build
+/// does. Single-threaded by construction (`Rc`/`Cell`), matching the
+/// non-`Send` threading model of the real wrapper types.
+pub struct StubDevice {
+    ledger: Rc<LedgerCells>,
+}
+
+impl StubDevice {
+    pub fn new() -> StubDevice {
+        StubDevice {
+            ledger: Rc::new(LedgerCells { live: Cell::new(0), peak: Cell::new(0) }),
+        }
+    }
+
+    /// Currently live device allocations.
+    pub fn live_buffers(&self) -> usize {
+        self.ledger.live.get()
+    }
+
+    /// High-water mark of live allocations since construction (or the
+    /// last [`StubDevice::reset_peak`]).
+    pub fn peak_live_buffers(&self) -> usize {
+        self.ledger.peak.get()
+    }
+
+    /// Restart peak tracking from the current live count.
+    pub fn reset_peak(&self) {
+        self.ledger.peak.set(self.ledger.live.get());
+    }
+
+    /// Allocate a device buffer of `bytes` (a seed upload).
+    pub fn alloc(&self, bytes: usize) -> PjRtBuffer {
+        PjRtBuffer { alloc: Some(Allocation::fresh(&self.ledger, bytes)) }
+    }
+
+    /// Build a stub executable producing one output per `out_bytes`
+    /// entry. `aliases` holds `(output_index, parameter_number)` pairs in
+    /// the same format the runtime derives from the manifest
+    /// ([`PjRtClient::compile_with_io_aliases`]): at execution, an
+    /// aliased output donates the named argument's allocation instead of
+    /// materializing a second copy.
+    pub fn executable(&self, out_bytes: &[usize], aliases: &[(usize, usize)]) -> StubExecutable {
+        StubExecutable {
+            ledger: self.ledger.clone(),
+            out_bytes: out_bytes.to_vec(),
+            aliases: aliases.to_vec(),
+        }
+    }
+}
+
+impl Default for StubDevice {
+    fn default() -> Self {
+        StubDevice::new()
+    }
+}
+
+/// A compiled executable under the stub device model: execution
+/// allocates fresh output buffers, except for aliased outputs, which
+/// reuse (donate) their input's allocation — the device-side effect of
+/// `HloInputOutputAliasConfig`.
+pub struct StubExecutable {
+    ledger: Rc<LedgerCells>,
+    out_bytes: Vec<usize>,
+    aliases: Vec<(usize, usize)>,
+}
+
+impl StubExecutable {
+    /// Run once over `args`. Aliased outputs share their donated input's
+    /// allocation (the caller must treat that input as invalidated, as
+    /// under real donation); every other output is a fresh allocation
+    /// held live alongside the inputs for the duration of the call.
+    pub fn execute(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, Error> {
+        for &(out, param) in &self.aliases {
+            if out >= self.out_bytes.len() {
+                return Err(Error(format!(
+                    "alias names output {out}, executable has {}",
+                    self.out_bytes.len()
+                )));
+            }
+            if param >= args.len() {
+                return Err(Error(format!(
+                    "alias names parameter {param}, called with {} args",
+                    args.len()
+                )));
+            }
+            if self.aliases.iter().filter(|(_, p)| *p == param).count() > 1 {
+                return Err(Error(format!(
+                    "parameter {param} donated to more than one output"
+                )));
+            }
+        }
+        let mut out = Vec::with_capacity(self.out_bytes.len());
+        for (i, &bytes) in self.out_bytes.iter().enumerate() {
+            let donated = self.aliases.iter().find(|(o, _)| *o == i).map(|&(_, p)| p);
+            let alloc = match donated {
+                Some(p) => match &args[p].alloc {
+                    Some(a) => a.clone(),
+                    None => return Err(Error(format!(
+                        "parameter {p} has no stub allocation to donate"
+                    ))),
+                },
+                None => Allocation::fresh(&self.ledger, bytes),
+            };
+            out.push(PjRtBuffer { alloc: Some(alloc) });
+        }
+        Ok(out)
     }
 }
 
@@ -162,5 +358,42 @@ mod tests {
     fn client_reports_unavailable() {
         let err = PjRtClient::cpu().err().expect("stub must fail");
         assert!(format!("{err}").contains("PJRT backend unavailable"));
+    }
+
+    #[test]
+    fn donated_output_reuses_the_allocation() {
+        let dev = StubDevice::new();
+        let seed = dev.alloc(1024);
+        let exe = dev.executable(&[1024], &[(0, 0)]);
+        let out = exe.execute(&[&seed]).unwrap();
+        assert_eq!(dev.live_buffers(), 1, "no second copy, even transiently");
+        assert_eq!(dev.peak_live_buffers(), 1);
+        assert!(out[0].shares_allocation(&seed));
+        drop(seed);
+        assert_eq!(dev.live_buffers(), 1, "chained handle keeps it alive");
+    }
+
+    #[test]
+    fn unaliased_output_holds_two_copies_transiently() {
+        let dev = StubDevice::new();
+        let seed = dev.alloc(1024);
+        let exe = dev.executable(&[1024], &[]);
+        let out = exe.execute(&[&seed]).unwrap();
+        assert_eq!(dev.live_buffers(), 2, "replace-and-drop's transient");
+        assert!(!out[0].shares_allocation(&seed));
+        drop(seed);
+        assert_eq!(dev.live_buffers(), 1);
+    }
+
+    #[test]
+    fn invalid_alias_configs_error() {
+        let dev = StubDevice::new();
+        let a = dev.alloc(8);
+        assert!(dev.executable(&[8], &[(1, 0)]).execute(&[&a]).is_err());
+        assert!(dev.executable(&[8], &[(0, 3)]).execute(&[&a]).is_err());
+        assert!(dev
+            .executable(&[8, 8], &[(0, 0), (1, 0)])
+            .execute(&[&a])
+            .is_err());
     }
 }
