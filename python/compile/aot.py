@@ -115,25 +115,32 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
         return sds((n_ind, batch, gen, d), jnp.bfloat16)
 
     # ---- prefill (vanilla step / cache init / every refresh) ----
+    # The logit output is the gen-region slice (`logits_gen` [B, gen, V],
+    # sliced in-graph): the runtime's merges only ever read the gen rows,
+    # so the prompt-region rows of the Host-fallback full forwards stay
+    # off the bus exactly like the device-apply prefill's. The new
+    # signature name makes a stale runtime fail loudly at output lookup
+    # instead of mis-slicing rows.
     for batch in (1, 8):
         b.lower(
             f"prefill_b{batch}",
-            functools.partial(M.prefill, cfg),
+            functools.partial(M.prefill, cfg, logits_gen=True),
             [sds((batch, ctx), jnp.int32)],
             {
                 "kind": "prefill", "batch": batch, "block": None,
                 "skip": [], "indicator": None, "kv_len": ctx,
                 "input_names": ["tokens"],
-                "output_names": ["logits", "kv", "ind_h", "ind_q",
+                "output_names": ["logits_gen", "kv", "ind_h", "ind_q",
                                  "ind_k", "ind_v", "attn_mass"],
             },
         )
 
     # ---- vanilla step: full forward, logits only (the baseline never
-    # reads caches, so don't make it pay for cache downloads) ----
+    # reads caches, so don't make it pay for cache downloads — and its
+    # downlink is gen-region-sliced like every other full forward) ----
     def vanilla_fn(params, tokens):
-        logits, _, _, _ = M.prefill(cfg, params, tokens)
-        return (logits,)
+        logits_gen, _, _, _ = M.prefill(cfg, params, tokens, logits_gen=True)
+        return (logits_gen,)
 
     for batch in (1, 8):
         b.lower(
@@ -144,7 +151,7 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                 "kind": "prefill", "batch": batch, "block": None,
                 "skip": [], "indicator": None, "kv_len": ctx,
                 "input_names": ["tokens"],
-                "output_names": ["logits"],
+                "output_names": ["logits_gen"],
             },
         )
 

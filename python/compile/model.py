@@ -156,7 +156,7 @@ def _gather_rows(cache, idx):
 
 
 def prefill(cfg: ModelCfg, params: Params, tokens, *, skip_layers=None,
-            use_pallas=True, kv_tile=64):
+            use_pallas=True, kv_tile=64, logits_gen=False):
     """Full forward over [B, ctx] tokens.
 
     Serves as cache initialization, the *vanilla* per-iteration step, and
@@ -164,7 +164,13 @@ def prefill(cfg: ModelCfg, params: Params, tokens, *, skip_layers=None,
     sequence — see DESIGN.md §4).
 
     Returns (logits, kv_cache, ind_caches, attn_mass):
-      logits     f32 [B, ctx, V]
+      logits     f32 [B, ctx, V] — or the gen-region slice [B, gen, V]
+                 when ``logits_gen``: the serving runtime only ever reads
+                 the gen rows, so slicing in-graph keeps the prompt-region
+                 rows off the bus (the same 60% downlink cut the
+                 device-apply prefill already ships; the Host-fallback
+                 ``vanilla_b*`` / ``prefill_b*`` executables opt in via
+                 this flag)
       kv_cache   bf16 [L, 2, B, Hkv, ctx, hd]
       ind_caches dict ind -> bf16 [n_layers', B, gen, d]  (gen region only;
                  all layers by default so any skip config can slice)
@@ -208,6 +214,8 @@ def prefill(cfg: ModelCfg, params: Params, tokens, *, skip_layers=None,
             ind["v"].append(_expand_kv(cfg, v).reshape(b, ctx, -1)[:, gen0:])
         x = h
     logits = rmsnorm(x, params.out_norm) @ params.head
+    if logits_gen:
+        logits = logits[:, gen0:]
     kv_cache = jnp.stack(kv_all).astype(CACHE_DT)
     ind_caches = {
         key: jnp.stack(vals).astype(CACHE_DT) for key, vals in ind.items()
@@ -240,12 +248,12 @@ def prefill_apply(cfg: ModelCfg, params: Params, tokens, kv_prev, ind_prev,
     scale). No attn_mass output: the only consumer is the host-side
     sparse rebuild, and sparse configs run the stateless Host-apply path.
     """
-    logits, kv, ind, _attn_mass = prefill(
-        cfg, params, tokens, use_pallas=use_pallas, kv_tile=kv_tile)
+    gen_logits, kv, ind, _attn_mass = prefill(
+        cfg, params, tokens, use_pallas=use_pallas, kv_tile=kv_tile,
+        logits_gen=True)                                      # [B, gen, V]
     r = refresh.astype(jnp.bool_)                             # [B]
     kv_new = jnp.where(r[None, None, :, None, None, None], kv, kv_prev)
     ind_new = jnp.where(r[None, :, None, None], ind[indicator], ind_prev)
-    gen_logits = logits[:, cfg.prompt_len:]                   # [B, gen, V]
     conf_full = jax.nn.softmax(gen_logits, axis=-1).max(-1)   # [B, gen]
     conf_new = jnp.where(r[:, None], conf_full, conf_prev)
     return gen_logits, kv_new, ind_new, conf_new

@@ -28,6 +28,23 @@ def _step(cfg, params, toks, kv, ind_h, conf, *, skip, block=8, alpha=0.5,
                   use_pallas=False)
 
 
+def test_prefill_logits_gen_is_the_gen_region_slice(setup):
+    # the Host-fallback executables (`vanilla_b*` / `prefill_b*`) are
+    # lowered with logits_gen=True: the output must be exactly the
+    # gen-region rows of the full-context forward, nothing resampled
+    cfg, params, toks, logits, kv, ind, mass = setup
+    lg, kv2, ind2, mass2 = M.prefill(cfg, params, toks, use_pallas=False,
+                                     logits_gen=True)
+    assert lg.shape == (toks.shape[0], cfg.gen_len, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits[:, cfg.prompt_len:]),
+                               rtol=0, atol=0)
+    # the cache outputs are untouched by the slice
+    np.testing.assert_array_equal(np.asarray(kv2.astype(jnp.float32)),
+                                  np.asarray(kv.astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(mass2), np.asarray(mass))
+
+
 def test_prefill_shapes(setup):
     cfg, params, toks, logits, kv, ind, mass = setup
     B = toks.shape[0]

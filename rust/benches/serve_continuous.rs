@@ -15,6 +15,15 @@
 //! sustains higher slot occupancy and higher token throughput, with far
 //! lower tail latency, on the same arrival trace.
 //!
+//! A second section exercises **pooled device residency** under
+//! batch-class churn: two workers share one residency pool while a
+//! trace alternates lone requests (the scheduler downshifts to the b=1
+//! class) with Poisson bursts (upshift to the full class). Every switch
+//! parks the outgoing retained chain and resumes the incoming one, so
+//! the section's acceptance is that chains are re-used, not rebuilt:
+//! `chain_rebuilds_avoided > 0` with bounded full-KV seeds. Emits
+//! `artifacts/results/BENCH_residency.json`; runs artifact-free in CI.
+//!
 //! Run: `cargo bench --bench serve_continuous` (ESDLLM_BENCH_N overrides
 //! the request count).
 
@@ -81,6 +90,11 @@ struct ModeResult {
     down_kb_per_tick: f64,
     down_saved_kb_per_tick: f64,
     donated_execs: u64,
+    /// pooled-residency accounting (shared ResidencyPool ledger)
+    chain_switches: u64,
+    chain_rebuilds_avoided: u64,
+    reseed_kb_saved: f64,
+    resident_chains: u64,
 }
 
 fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
@@ -135,9 +149,115 @@ fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
         down_kb_per_tick: m.d2h_bytes_shipped.get() as f64 / 1e3 / ticks as f64,
         down_saved_kb_per_tick: m.d2h_bytes_saved.get() as f64 / 1e3 / ticks as f64,
         donated_execs: m.donated_execs.get(),
+        chain_switches: m.chain_switches.get(),
+        chain_rebuilds_avoided: m.chain_rebuilds_avoided.get(),
+        reseed_kb_saved: m.reseed_bytes_saved.get() as f64 / 1e3,
+        resident_chains: m.resident_chains.get(),
     };
     router.shutdown();
     result
+}
+
+/// Batch-class-churn section: `workers` workers over one shared
+/// residency pool, driven by `rounds` of (lone request → Poisson burst)
+/// so schedulers repeatedly park and resume the b=1 and full-class
+/// chains. Asserts chain reuse and emits BENCH_residency.json.
+fn residency_section(workers: usize, rounds: usize) -> anyhow::Result<()> {
+    let mut cfg = RouterCfg::new(engine_cfg(), std::path::PathBuf::from("/nonexistent"));
+    cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 600, 400));
+    cfg.batcher = BatcherCfg { max_batch: SLOTS, flush_ms: 5 };
+    cfg.queue_cap = 1024;
+    cfg.mode = SchedMode::Continuous;
+    cfg.workers = workers;
+    let router = Router::start(cfg);
+
+    let t0 = Instant::now();
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for round in 0..rounds {
+        // a lone request: demand 1 → the serving worker downshifts to
+        // the b=1 class (parking its full-class chain, if any)
+        if let Ok(h) = router.submit(prompt_for(1), SeqParams::default()) {
+            match h.wait() {
+                Ok(_) => completed += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        // a Poisson burst: demand ≫ 1 → upshift back to the full class,
+        // resuming the parked chain (zero full-KV reseed on a hit)
+        let trace = workload::poisson_trace(400.0, 2 * SLOTS, 0xD1CE + round as u64);
+        let mut handles = Vec::new();
+        let mut i = 0usize;
+        workload::replay_trace(&trace, |_req| {
+            if let Ok(h) = router.submit(prompt_for(i + 1), SeqParams::default()) {
+                handles.push(h);
+            }
+            i += 1;
+        });
+        for h in handles {
+            match h.wait() {
+                Ok(_) => completed += 1,
+                Err(_) => failed += 1,
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let m = &router.metrics;
+    let switches = m.chain_switches.get();
+    let rebuilds_avoided = m.chain_rebuilds_avoided.get();
+    let reseed_saved = m.reseed_bytes_saved.get();
+    let resident_chains = m.resident_chains.get();
+    let full_kv_uploads = m.full_kv_uploads.get();
+    router.shutdown();
+
+    println!(
+        "\n== residency: {rounds} churn rounds (lone ↔ Poisson burst) over \
+         {workers} workers sharing one pool =="
+    );
+    println!(
+        "completed {completed} (failed {failed}) in {wall_s:.2}s; \
+         {switches} class switches, {rebuilds_avoided} chain rebuilds avoided, \
+         {:.1} KB of reseed traffic saved, {resident_chains} resident chains, \
+         {full_kv_uploads} full-KV seeds total",
+        reseed_saved as f64 / 1e3,
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_continuous_residency\",\n  \
+         \"workers\": {workers},\n  \"rounds\": {rounds},\n  \
+         \"completed\": {completed},\n  \"failed\": {failed},\n  \
+         \"wall_s\": {wall_s:.3},\n  \"chain_switches\": {switches},\n  \
+         \"chain_rebuilds_avoided\": {rebuilds_avoided},\n  \
+         \"reseed_bytes_saved\": {reseed_saved},\n  \
+         \"resident_chains\": {resident_chains},\n  \
+         \"full_kv_uploads\": {full_kv_uploads}\n}}\n"
+    );
+    std::fs::write("artifacts/results/BENCH_residency.json", json)?;
+    println!("wrote artifacts/results/BENCH_residency.json");
+
+    // acceptance: batch-class churn must RE-USE parked chains — at
+    // least one resumed chain (an avoided cold rebuild with its seed
+    // bytes saved), and the seed count stays bounded by (worker, class)
+    // pairs instead of growing with the trace
+    let ok = switches >= 2
+        && rebuilds_avoided >= 1
+        && reseed_saved > 0
+        && full_kv_uploads <= (2 * workers) as u64;
+    println!(
+        "acceptance (chains reused across b1↔b{SLOTS} churn, seeds bounded \
+         by workers × classes): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "residency churn reused no chains: switches={switches} \
+             rebuilds_avoided={rebuilds_avoided} reseed_saved={reseed_saved} \
+             full_kv_uploads={full_kv_uploads}"
+        ));
+    }
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -213,6 +333,13 @@ fn main() -> anyhow::Result<()> {
          their chained cache inputs in place",
         cont.down_kb_per_tick, cont.down_saved_kb_per_tick, cont.donated_execs,
     );
+    println!(
+        "pooled residency: {} batch-class switches, {} chain rebuilds \
+         avoided, {:.1} KB of reseed traffic saved, {} resident chains at \
+         drain",
+        cont.chain_switches, cont.chain_rebuilds_avoided,
+        cont.reseed_kb_saved, cont.resident_chains,
+    );
     let ok = cont.tps > rtc.tps && cont.occupancy > rtc.occupancy;
     println!(
         "acceptance (continuous > rtc on TPS and occupancy): {}",
@@ -226,5 +353,8 @@ fn main() -> anyhow::Result<()> {
          perf_hotpath. Re-validate against the PJRT backend with real \
          artifacts before trusting absolute numbers."
     );
+
+    // pooled-residency churn section (workers=2, shared pool)
+    residency_section(2, 5)?;
     Ok(())
 }

@@ -27,6 +27,19 @@ impl Default for BatcherCfg {
     }
 }
 
+/// Batch classes a continuous worker switches between: the lone-request
+/// class (b = 1, the latency-optimal executables) plus the configured
+/// full class. The compiled artifacts exist for batch sizes {1, 8}; the
+/// sim backend accepts any geometry, so tests can run intermediate
+/// classes too.
+pub fn batch_classes(max_batch: usize) -> Vec<usize> {
+    if max_batch <= 1 {
+        vec![1]
+    } else {
+        vec![1, max_batch]
+    }
+}
+
 /// Drain the next batch from `queue`. Blocks until at least one item is
 /// available (or the channel closes → None), then collects up to
 /// `cfg.max_batch` items within the flush window.
@@ -75,6 +88,13 @@ mod tests {
         let waited = t0.elapsed();
         assert!(waited >= Duration::from_millis(10), "{waited:?}");
         assert!(waited < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn batch_classes_cover_lone_and_full() {
+        assert_eq!(batch_classes(1), vec![1]);
+        assert_eq!(batch_classes(8), vec![1, 8]);
+        assert_eq!(batch_classes(0), vec![1]);
     }
 
     #[test]

@@ -171,6 +171,22 @@ impl DirtyState {
             conf: DirtyBitmap::new_marked(batch, dims.gen_len),
         }
     }
+
+    /// Mark every row of every kind dirty: the full host-vs-device
+    /// divergence, used when a resident chain is invalidated or evicted
+    /// — the next syncs must treat nothing as already on the device.
+    pub fn mark_all(&mut self) {
+        for s in 0..self.kv.n_slots() {
+            self.kv.mark_slot(s);
+            for bm in self.ind.values_mut() {
+                bm.mark_slot(s);
+            }
+            self.conf.mark_slot(s);
+            if let Some(bm) = self.kv_sparse.as_mut() {
+                bm.mark_slot(s);
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -280,7 +296,17 @@ impl GroupCaches {
         slots: &[usize],
     ) -> Result<()> {
         let d = self.dims;
-        self.merge_full_logits_slots(&outputs[0], slots)?;
+        // `prefill_b*` now emits the gen-region slice (`logits_gen`
+        // [B, gen, V] — the host only ever read the gen rows, so the
+        // prompt-region rows stay off the bus); older artifact sets
+        // still ship the full [B, ctx, V] context. The logit output's
+        // second dimension says which contract this artifact follows.
+        let lg_shape = outputs[0].shape();
+        if lg_shape.len() == 3 && lg_shape[1] == d.gen_len {
+            self.merge_gen_logits_slots(&outputs[0], slots)?;
+        } else {
+            self.merge_full_logits_slots(&outputs[0], slots)?;
+        }
         let kv_src = outputs[1].as_bf16()?;
         let row = d.n_kv_heads * d.ctx * d.head_dim;
         for l in 0..d.n_layers {
@@ -313,11 +339,12 @@ impl GroupCaches {
 
     /// Merge full-context logits [B, ctx, V] into the gen-region
     /// latest-logits state for the given slots and refresh their
-    /// confidences. Only the stateless full-forward executables
-    /// (`vanilla_b*`, `prefill_b*` — the Host-apply fallback) still
-    /// return full-context logits and pay the prompt-region offset here;
-    /// the device-apply path downloads the gen-region slice and merges
-    /// via [`GroupCaches::merge_gen_logits_slots`].
+    /// confidences. The current compile pipeline slices every
+    /// full-forward executable (`vanilla_b*`, `prefill_b*`, and the
+    /// device-apply prefill) to the gen region in-graph and merges via
+    /// [`GroupCaches::merge_gen_logits_slots`]; this full-context path
+    /// remains for older artifact sets that predate the `logits_gen`
+    /// signature and still pay the prompt-region offset here.
     pub fn merge_full_logits_slots(
         &mut self,
         logits_full: &HostTensor,

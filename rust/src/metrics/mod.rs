@@ -194,6 +194,18 @@ pub struct Metrics {
     /// device-apply executions whose chained inputs were donated in
     /// place by the compile-time input-output alias config
     pub donated_execs: Counter,
+    // -- pooled device residency (mirrored from the shared
+    //    ResidencyPool's cumulative ledger each scheduler tick; gauges
+    //    because several workers publish the same pool-wide values) --
+    /// retained chains currently holding device state (live + parked)
+    pub resident_chains: Gauge,
+    /// batch-class switches the schedulers performed
+    pub chain_switches: Gauge,
+    /// chain checkouts that reused a parked seeded chain instead of a
+    /// cold rebuild
+    pub chain_rebuilds_avoided: Gauge,
+    /// full-seed bytes those avoided rebuilds would have re-shipped
+    pub reseed_bytes_saved: Gauge,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -271,6 +283,10 @@ impl Metrics {
             ("esdllm_d2h_bytes_shipped", self.d2h_bytes_shipped.get()),
             ("esdllm_d2h_bytes_saved", self.d2h_bytes_saved.get()),
             ("esdllm_donated_execs", self.donated_execs.get()),
+            ("esdllm_resident_chains", self.resident_chains.get()),
+            ("esdllm_chain_switches", self.chain_switches.get()),
+            ("esdllm_chain_rebuilds_avoided", self.chain_rebuilds_avoided.get()),
+            ("esdllm_reseed_bytes_saved", self.reseed_bytes_saved.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -346,6 +362,10 @@ mod tests {
         m.d2h_bytes_shipped.add(512);
         m.d2h_bytes_saved.add(768);
         m.donated_execs.add(2);
+        m.resident_chains.set(2);
+        m.chain_switches.set(3);
+        m.chain_rebuilds_avoided.set(1);
+        m.reseed_bytes_saved.set(4096);
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
@@ -360,6 +380,10 @@ mod tests {
         assert!(text.contains("esdllm_d2h_bytes_shipped 512"));
         assert!(text.contains("esdllm_d2h_bytes_saved 768"));
         assert!(text.contains("esdllm_donated_execs 2"));
+        assert!(text.contains("esdllm_resident_chains 2"));
+        assert!(text.contains("esdllm_chain_switches 3"));
+        assert!(text.contains("esdllm_chain_rebuilds_avoided 1"));
+        assert!(text.contains("esdllm_reseed_bytes_saved 4096"));
         assert!(text.contains("esdllm_upload_bytes_per_tick"));
         assert!(text.contains("esdllm_d2h_bytes_shipped_per_tick"));
     }

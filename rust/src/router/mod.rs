@@ -14,12 +14,19 @@
 //!     (drain a batch, run it to completion), kept as the baseline the
 //!     `serve_continuous` bench compares against.
 //!
-//! The scheduler's slot count is `batcher.max_batch`, fixed for the
-//! worker's lifetime because the group caches and compiled executables
-//! are shaped for one batch class ({1, 8}). That trades the old
-//! lone-request b=1 fast path for always-hot slots; serve with
-//! `max_batch = 1` to get the latency-optimal executables back on a
-//! strictly sequential workload.
+//! In continuous mode a worker owns every batch class
+//! ([`crate::batcher::batch_classes`]: the b=1 lone-request class plus
+//! the full `batcher.max_batch` class) and resizes between them from
+//! demand at block boundaries ([`GroupScheduler::maybe_switch_class`]):
+//! a lone request gets the latency-optimal b=1 executables back, a deep
+//! queue upshifts to the full batch. All workers share one
+//! [`ResidencyPool`], so a class switch — or a second worker — resumes
+//! a parked retained chain instead of re-seeding full KV over the bus
+//! (PJRT workers park under their own owner id behind the non-`Send`
+//! constraint; the sim backend models true cross-worker sharing). The
+//! pool's cumulative ledger is mirrored into the `/metrics` gauges
+//! (`resident_chains`, `chain_switches`, `chain_rebuilds_avoided`,
+//! `reseed_bytes_saved`) every tick.
 //!
 //! Requests carry per-request parameters ([`SeqParams`]: `gen_len`,
 //! temperature, parallel threshold) and replies carry true per-request
@@ -34,9 +41,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::batcher::{next_batch, BatcherCfg};
+use crate::batcher::{batch_classes, next_batch, BatcherCfg};
 use crate::engine::EngineCfg;
 use crate::metrics::Metrics;
+use crate::runtime::resident::{PoolStats, ResidencyPool};
 use crate::runtime::Runtime;
 use crate::scheduler::sim::{SimBackend, SimCfg};
 use crate::scheduler::{
@@ -159,6 +167,10 @@ impl Router {
         let queue: Channel<GenRequest> = Channel::bounded(cfg.queue_cap.max(1));
         let metrics = Arc::new(Metrics::default());
         metrics.start_clock();
+        // one residency pool for every worker: parked retained chains
+        // survive batch-class churn and are shared across workers (see
+        // the module docs for the PJRT owner-id caveat)
+        let pool = ResidencyPool::new();
         for w in 0..cfg.workers.max(1) {
             let queue = queue.clone();
             let metrics = metrics.clone();
@@ -167,9 +179,12 @@ impl Router {
             let dir = cfg.artifacts_dir.clone();
             let mode = cfg.mode;
             let backend = cfg.backend.clone();
+            let pool = pool.clone();
             std::thread::Builder::new()
                 .name(format!("engine-{w}"))
-                .spawn(move || worker_loop(queue, metrics, engine_cfg, batcher, dir, mode, backend))
+                .spawn(move || {
+                    worker_loop(queue, metrics, engine_cfg, batcher, dir, mode, backend, pool, w)
+                })
                 .expect("spawn engine worker");
         }
         Router { queue, metrics }
@@ -243,6 +258,7 @@ fn drain_with_error(queue: &Channel<GenRequest>, msg: &str) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     queue: Channel<GenRequest>,
     metrics: Arc<Metrics>,
@@ -251,8 +267,13 @@ fn worker_loop(
     artifacts_dir: std::path::PathBuf,
     mode: SchedMode,
     backend_kind: WorkerBackend,
+    pool: Arc<ResidencyPool>,
+    worker: usize,
 ) {
     let slots = batcher.max_batch.max(1);
+    // batch classes a continuous worker may switch between; the PJRT arm
+    // narrows this to what the compiled artifacts actually serve
+    let mut classes = batch_classes(slots);
     // the runtime (when used) must outlive the backend borrowing it
     let mut rt_holder: Option<Runtime> = None;
     let backend: Box<dyn StepBackend + '_> = match backend_kind {
@@ -278,8 +299,14 @@ fn worker_loop(
                 }
             };
             let rt = rt_holder.insert(rt);
-            match PjrtBackend::new(rt, engine_cfg.clone(), slots) {
-                Ok(b) => Box::new(b),
+            // PJRT chains park under this worker's unique owner id —
+            // their device buffers never leave this thread
+            match PjrtBackend::with_pool(rt, engine_cfg.clone(), slots, pool, Some(worker as u64))
+            {
+                Ok(b) => {
+                    classes = b.supported_classes(&classes);
+                    Box::new(b)
+                }
                 Err(e) => {
                     log::error!("engine worker failed to build backend: {e:#}");
                     drain_with_error(&queue, &format!("backend unavailable: {e}"));
@@ -287,9 +314,22 @@ fn worker_loop(
                 }
             }
         }
-        WorkerBackend::Sim(sim_cfg) => Box::new(SimBackend::new(sim_cfg)),
+        WorkerBackend::Sim(sim_cfg) => Box::new(SimBackend::with_pool(sim_cfg, pool)),
     };
-    let sched = match GroupScheduler::new(backend, slots, SchedCfg::from_engine(&engine_cfg)) {
+    // continuous mode gets every batch class and switches between them
+    // from demand; run-to-completion keeps the single full class (its
+    // drain-a-batch loop never sizes down mid-batch)
+    let sched = match mode {
+        SchedMode::Continuous => GroupScheduler::with_classes(
+            backend,
+            &classes,
+            SchedCfg::from_engine(&engine_cfg),
+        ),
+        SchedMode::RunToCompletion => {
+            GroupScheduler::new(backend, slots, SchedCfg::from_engine(&engine_cfg))
+        }
+    };
+    let sched = match sched {
         Ok(s) => s,
         Err(e) => {
             log::error!("engine worker failed to build scheduler: {e:#}");
@@ -305,16 +345,40 @@ fn worker_loop(
     }
 }
 
-/// Publish this worker's occupied-slot count as a delta against its
-/// previous contribution, so workers sharing the `active_slots` gauge
-/// never stomp each other.
-fn sync_active_slots(metrics: &Metrics, last: &mut usize, now: usize) {
-    if now > *last {
-        metrics.active_slots.add((now - *last) as u64);
-    } else {
-        metrics.active_slots.sub((*last - now) as u64);
+/// Publishes this worker's occupied-slot count into the shared
+/// `active_slots` gauge as deltas — and, via `Drop`, takes the whole
+/// contribution back when the worker exits or unwinds mid-flight.
+/// Without the drop-guard a worker that returned early (or panicked
+/// between a sync and its reply) left its last delta in the gauge
+/// forever, permanently inflating `esdllm_active_slots`.
+struct ActiveSlotsGuard {
+    metrics: Arc<Metrics>,
+    last: usize,
+}
+
+impl ActiveSlotsGuard {
+    fn new(metrics: Arc<Metrics>) -> ActiveSlotsGuard {
+        ActiveSlotsGuard { metrics, last: 0 }
     }
-    *last = now;
+
+    /// Publish the current occupied-slot count as a delta against the
+    /// previous contribution, so workers sharing the gauge never stomp
+    /// each other.
+    fn sync(&mut self, now: usize) {
+        if now > self.last {
+            self.metrics.active_slots.add((now - self.last) as u64);
+        } else {
+            self.metrics.active_slots.sub((self.last - now) as u64);
+        }
+        self.last = now;
+    }
+}
+
+impl Drop for ActiveSlotsGuard {
+    fn drop(&mut self) {
+        self.metrics.active_slots.sub(self.last as u64);
+        self.last = 0;
+    }
 }
 
 /// Shared per-tick bookkeeping: run one tick, update metrics, and answer
@@ -324,7 +388,7 @@ fn tick_once(
     sched: &mut GroupScheduler<'_>,
     metrics: &Metrics,
     pending: &mut HashMap<u64, OneShot<Result<GenReply, String>>>,
-    last_active: &mut usize,
+    guard: &mut ActiveSlotsGuard,
 ) -> bool {
     let busy = sched.active();
     let before = (sched.n_prefill, sched.n_dual, sched.n_es);
@@ -351,6 +415,13 @@ fn tick_once(
     metrics.d2h_bytes_shipped.add(tr.d2h_bytes_shipped);
     metrics.d2h_bytes_saved.add(tr.d2h_bytes_saved);
     metrics.donated_execs.add(tr.donated_execs);
+    // pooled-residency ledger: the pool is shared by every worker, so
+    // its cumulative values are mirrored (set), not delta-added
+    let ps: PoolStats = sched.pool_stats();
+    metrics.resident_chains.set(ps.resident_chains);
+    metrics.chain_switches.set(ps.chain_switches);
+    metrics.chain_rebuilds_avoided.set(ps.chain_rebuilds_avoided);
+    metrics.reseed_bytes_saved.set(ps.reseed_bytes_saved);
     match tick_result {
         Ok(finished) => {
             metrics.ticks_total.inc();
@@ -362,7 +433,7 @@ fn tick_once(
             // just received its reply must not observe its own sequence
             // still counted as active (retirement already freed the slot,
             // so sched.active() is final here)
-            sync_active_slots(metrics, last_active, sched.active());
+            guard.sync(sched.active());
             for f in finished {
                 metrics.retirements_total.inc();
                 metrics.tokens_generated.add(f.tokens as u64);
@@ -388,7 +459,7 @@ fn tick_once(
                 }
             }
             sched.evict_all();
-            sync_active_slots(metrics, last_active, 0);
+            guard.sync(0);
             false
         }
     }
@@ -419,7 +490,10 @@ fn admit_request(
 
 /// Continuous batching: keep the slots hot — admit from the queue into
 /// any free slot (newly admitted sequences get their grounding prefill
-/// on the next tick), retire at block boundaries, repeat.
+/// on the next tick), retire at block boundaries, repeat. Before each
+/// admission round the batch class is resized to the demand (resident +
+/// queued sequences) at block boundaries, parking/resuming retained
+/// chains through the shared residency pool.
 fn run_continuous(
     mut sched: GroupScheduler<'_>,
     queue: Channel<GenRequest>,
@@ -427,29 +501,47 @@ fn run_continuous(
 ) {
     let mut pending: HashMap<u64, OneShot<Result<GenReply, String>>> = HashMap::new();
     let mut next_id: u64 = 0;
-    let mut last_active = 0usize;
+    let mut guard = ActiveSlotsGuard::new(metrics.clone());
     loop {
-        // admission: fill free slots; block for work only when idle.
-        // (a failed admission — bad request — loops back into the
-        // blocking recv, so the loop below always exits with work)
+        // when idle, block for the first arrival and hold it so the
+        // class can be sized to it before admission (a lone request
+        // after a burst gets the b=1 executables)
+        let mut held: Option<GenRequest> = None;
+        if sched.active() == 0 {
+            match queue.recv() {
+                Some(r) => held = Some(r),
+                None => return, // closed and drained
+            }
+        }
+        // batch-class selection from demand, at block boundaries only
+        let demand_queued = usize::from(held.is_some()) + queue.len();
+        if let Err(e) = sched.maybe_switch_class(demand_queued) {
+            log::error!("batch-class switch failed: {e:#}");
+        }
+        // admission: the held request first, then fill free slots.
+        // (a failed admission — bad request — leaves the group idle, so
+        // the loop circles back into the blocking recv)
+        if let Some(req) = held.take() {
+            let id = next_id;
+            next_id += 1;
+            admit_request(&mut sched, &metrics, &mut pending, id, req);
+        }
         while sched.free_slots() > 0 {
-            let req = if sched.active() == 0 {
-                match queue.recv() {
-                    Some(r) => r,
-                    None => return, // closed and drained
-                }
-            } else {
-                match queue.try_recv() {
-                    Some(r) => r,
-                    None => break,
-                }
+            let req = match queue.try_recv() {
+                Some(r) => r,
+                None => break,
             };
             let id = next_id;
             next_id += 1;
             admit_request(&mut sched, &metrics, &mut pending, id, req);
         }
-        sync_active_slots(&metrics, &mut last_active, sched.active());
-        tick_once(&mut sched, &metrics, &mut pending, &mut last_active);
+        guard.sync(sched.active());
+        // nothing admitted (e.g. the held request was a bad request):
+        // don't charge an empty tick to the per-tick metrics — circle
+        // back into the blocking recv instead, as the pre-pool loop did
+        if sched.active() > 0 {
+            tick_once(&mut sched, &metrics, &mut pending, &mut guard);
+        }
     }
 }
 
@@ -462,7 +554,7 @@ fn run_to_completion(
     batcher: BatcherCfg,
 ) {
     let mut next_id: u64 = 0;
-    let mut last_active = 0usize;
+    let mut guard = ActiveSlotsGuard::new(metrics.clone());
     while let Some(batch) = next_batch(&queue, &batcher) {
         metrics.batches_total.inc();
         metrics.batch_occupancy_sum.add(batch.len() as u64);
@@ -472,9 +564,9 @@ fn run_to_completion(
             next_id += 1;
             admit_request(&mut sched, &metrics, &mut pending, id, req);
         }
-        sync_active_slots(&metrics, &mut last_active, sched.active());
+        guard.sync(sched.active());
         while sched.active() > 0 {
-            if !tick_once(&mut sched, &metrics, &mut pending, &mut last_active) {
+            if !tick_once(&mut sched, &metrics, &mut pending, &mut guard) {
                 break;
             }
         }
@@ -530,6 +622,70 @@ mod tests {
         assert!(router.metrics.d2h_bytes_shipped.get() > 0);
         assert!(router.metrics.d2h_bytes_saved.get() > 0);
         assert!(router.metrics.donated_execs.get() > 0);
+        // the pooled-residency gauges are pumped per tick: at least the
+        // class serving this request is a live resident chain
+        assert!(router.metrics.resident_chains.get() >= 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn active_slots_guard_publishes_final_delta_on_panic() {
+        // regression: a worker that panicked (or returned early) used to
+        // leave its last active-slot delta in the shared gauge forever;
+        // the drop-guard must take the contribution back during unwind
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut guard = ActiveSlotsGuard::new(m2);
+            guard.sync(3);
+            assert_eq!(guard.metrics.active_slots.get(), 3);
+            panic!("worker dies mid-flight with occupied slots");
+        });
+        assert!(worker.join().is_err(), "the worker must have panicked");
+        assert_eq!(
+            metrics.active_slots.get(),
+            0,
+            "a dead worker must not inflate the gauge"
+        );
+
+        // the sync path still publishes plain deltas while alive
+        let mut guard = ActiveSlotsGuard::new(metrics.clone());
+        guard.sync(2);
+        guard.sync(1);
+        assert_eq!(metrics.active_slots.get(), 1);
+        drop(guard);
+        assert_eq!(metrics.active_slots.get(), 0, "clean exit drains too");
+    }
+
+    #[test]
+    fn lone_request_downshifts_and_burst_upshifts() {
+        // continuous mode owns classes {1, 8}: a lone request is served
+        // on the b=1 class, and a burst grows the class back — all
+        // through the shared pool, with no full reseed on re-use
+        let router = sim_router(SchedMode::Continuous, 8, 64);
+        let reply = router.submit("ab".into(), SeqParams::default()).unwrap();
+        reply.wait().expect("lone request served");
+        // exactly one chain seeded so far (the b=1 class)
+        assert_eq!(router.metrics.full_kv_uploads.get(), 1);
+        // a burst: all eight in flight forces the full class
+        let handles: Vec<_> = (0..8)
+            .map(|_| router.submit("cdef".into(), SeqParams::default()).unwrap())
+            .collect();
+        for h in handles {
+            h.wait().expect("burst request served");
+        }
+        assert!(
+            router.metrics.chain_switches.get() >= 1,
+            "the burst forced at least one class switch"
+        );
+        // at most one seed per class ever (1 and 8): the parked chains
+        // were reused, not rebuilt
+        assert!(router.metrics.full_kv_uploads.get() <= 2);
+        // another lone request comes back to the parked b=1 chain
+        let reply = router.submit("xy".into(), SeqParams::default()).unwrap();
+        reply.wait().expect("second lone request served");
+        assert!(router.metrics.full_kv_uploads.get() <= 2, "no reseed on re-use");
+        assert!(router.metrics.resident_chains.get() >= 1);
         router.shutdown();
     }
 

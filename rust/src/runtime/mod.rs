@@ -31,7 +31,18 @@
 //! Threading model: PJRT wrapper types hold raw pointers and are not
 //! `Send`/`Sync`; each engine worker thread owns its own `Runtime`
 //! (the CPU client is cheap). The coordinator communicates with workers
-//! over channels, never sharing runtime objects.
+//! over channels, never sharing runtime objects. The pooled-residency
+//! layer respects the same boundary: a checked-out
+//! [`resident::ResidentChain`]'s device handles (donated buffers
+//! included) never cross threads — only the `Send` host-side
+//! [`resident::ChainPlan`] travels through the shared
+//! [`resident::ResidencyPool`], and PJRT workers key their pooled
+//! entries by a per-thread owner id so no other worker can resume a
+//! chain whose buffers it cannot touch. Note donation makes parked
+//! handles *single-owner by construction*: a donated input buffer was
+//! consumed in place by the execution that produced the retained
+//! output, so there is never a second live copy another worker could
+//! have safely aliased anyway.
 
 pub mod resident;
 pub mod tensor;

@@ -1,6 +1,8 @@
 //! Device-resident group caches: the planning/accounting layer that
 //! keeps KV, indicator, and confidence state on the device between
-//! scheduler ticks instead of re-shipping it every executable run.
+//! scheduler ticks instead of re-shipping it every executable run —
+//! and, since the pooled-residency refactor, across batch-class
+//! switches and multiple serving workers.
 //!
 //! The pre-resident step path cloned the entire group KV on the host,
 //! uploaded all of it, ran the step, downloaded the block outputs, and
@@ -71,8 +73,46 @@
 //! [`DeviceGroupCaches::invalidate`] plus the scheduler's eviction path
 //! guarantee a failed transfer or an evicted group can never seed a new
 //! chain from the stale mirror without a full re-ground.
+//!
+//! # Pooled residency
+//!
+//! Chain *ownership* is split out of [`DeviceGroupCaches`] into a
+//! [`ResidentChain`]: the host-side **plan** ([`ChainPlan`] — which
+//! chains are seeded, per kind) plus the per-worker **device handles**
+//! ([`ResidentHandles`] — PJRT buffers, which are not `Send` and
+//! therefore never leave the worker thread that uploaded them). Parked
+//! plans live in a process-wide [`ResidencyPool`] keyed by
+//! `(arch, batch)`:
+//!
+//!   * a **batch-class switch** (b1 ↔ b8 from queue depth, decided by
+//!     the scheduler at block boundaries) parks the outgoing class's
+//!     plan and checks the incoming class's plan back out — a checkout
+//!     hit means the retained device state is still valid, so the switch
+//!     costs **zero full-KV reseed**: only the slots dirtied since the
+//!     chain was parked (admission resets, Host-apply scatters) re-ship,
+//!     via the existing dirty bitmaps, and under [`ApplyMode::Device`]
+//!     even those regenerate on device through the grounding prefill;
+//!   * **multi-worker serving** shares one pool behind the non-`Send`
+//!     PJRT constraint: a PJRT worker parks under its own owner id (its
+//!     buffers are useless to any other thread, so a foreign checkout
+//!     misses and seeds its own chain), while the sim backend parks
+//!     under the shared owner `None` and so models true cross-worker
+//!     device sharing — a second worker checking out a seeded plan
+//!     uploads nothing;
+//!   * eviction ([`DeviceGroupCaches::invalidate`] via the scheduler's
+//!     `evict_all`/`invalidate_resident`) removes the **pooled** entry
+//!     too, not just the live chain — a post-eviction checkout must
+//!     re-seed, never step against evicted device state.
+//!
+//! The pool's [`PoolStats`] ledger (`resident_chains`,
+//! `chain_switches`, `chain_rebuilds_avoided`, `reseed_bytes_saved`)
+//! flows into `/metrics` per scheduler tick, and — like the transfer
+//! ledger — is byte-exact between the sim and PJRT planners because
+//! both drive the same pool API with the same [`chain_seed_bytes`]
+//! accounting.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -301,8 +341,202 @@ pub struct ResidentHandles {
     pub conf_chain: Option<UploadHandle>,
 }
 
+/// The host-side half of a retained chain: which per-kind chains are
+/// seeded on the device. This is everything a worker needs to resume a
+/// parked chain without a full reseed — it is `Send`, so it can cross
+/// threads through the [`ResidencyPool`] even though the device buffers
+/// themselves cannot.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChainPlan {
+    pub kv_seeded: bool,
+    pub kv_sparse_seeded: bool,
+    pub ind_seeded: BTreeMap<String, bool>,
+    pub conf_seeded: bool,
+}
+
+/// One retained device chain: the parkable [`ChainPlan`] plus the
+/// per-worker [`ResidentHandles`] (PJRT buffers — not `Send`, so the
+/// handles stay with the worker thread while the plan travels through
+/// the pool).
+#[derive(Default)]
+pub struct ResidentChain {
+    pub plan: ChainPlan,
+    pub handles: ResidentHandles,
+}
+
+/// Bytes a cold chain seed ships for `(dims, batch)`: the full dense KV
+/// tensor plus one per-name indicator cache plus the confidence state —
+/// what [`ResidencyPool::checkout`] credits to `reseed_bytes_saved`
+/// when a parked, seeded chain is reused instead of rebuilt. One copy of
+/// the formula, shared by the sim and PJRT backends, keeps the two pool
+/// ledgers byte-exact.
+pub fn chain_seed_bytes(dims: &Dims, batch: usize) -> u64 {
+    let kv = (dims.n_layers * 2 * batch * dims.n_kv_heads * dims.ctx * dims.head_dim * 2) as u64;
+    let ind = (dims.n_layers * batch * dims.gen_len * dims.d_model * 2) as u64;
+    let conf = (batch * dims.gen_len * 4) as u64;
+    kv + ind + conf
+}
+
+/// Cumulative pool ledger, mirrored into `/metrics` each tick.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// chains currently holding device state: checked-out + parked
+    pub resident_chains: u64,
+    /// batch-class switches the schedulers performed
+    pub chain_switches: u64,
+    /// checkouts that found a seeded parked chain (a cold rebuild that
+    /// did not happen)
+    pub chain_rebuilds_avoided: u64,
+    /// seed bytes those avoided rebuilds would have shipped
+    pub reseed_bytes_saved: u64,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    /// parked plans keyed by (arch, batch, owner). PJRT workers park
+    /// under `Some(worker)` — their device buffers are thread-local, so
+    /// only they can resume the chain; the sim backend parks under
+    /// `None`, modelling true cross-worker device sharing.
+    parked: BTreeMap<(String, usize, Option<u64>), ChainPlan>,
+    /// chains currently checked out (live in some worker)
+    active: u64,
+    switches: u64,
+    rebuilds_avoided: u64,
+    reseed_bytes_saved: u64,
+}
+
+/// Process-wide registry of retained device chains, keyed by
+/// `(arch, batch)` (+ the owner discriminant above). Workers check
+/// chains out when a batch class activates and park them when the
+/// scheduler switches away, so batch-shape churn and multi-worker
+/// serving reuse device state instead of re-seeding full KV over the
+/// bus. Plans are `Send`; the pool never touches a device buffer.
+#[derive(Default)]
+pub struct ResidencyPool {
+    inner: Mutex<PoolInner>,
+}
+
+impl ResidencyPool {
+    pub fn new() -> Arc<ResidencyPool> {
+        Arc::new(ResidencyPool::default())
+    }
+
+    /// Resume the parked plan for `(arch, batch, owner)`, if present. A
+    /// hit on a *seeded* plan is an avoided cold rebuild: `seed_bytes`
+    /// (from [`chain_seed_bytes`]) is credited to the ledger.
+    ///
+    /// Per-owner entries (`Some(worker)` — PJRT chains, resumable only
+    /// by the thread holding their buffers) are checked out exclusively:
+    /// the entry moves out of the pool until the next
+    /// [`ResidencyPool::park`]. Shared entries (`None` — the sim's
+    /// true-sharing device model) record ONE device-resident chain any
+    /// worker may use concurrently (per-slot grounding keeps every user
+    /// sound), so a shared checkout clones the plan and leaves the entry
+    /// parked — once a chain has been parked, any worker resuming that
+    /// class hits and never forces a spurious reseed. (Before the first
+    /// park there is nothing to share: workers racing to cold-activate
+    /// the same class each miss and seed their own chain.)
+    pub fn checkout(
+        &self,
+        arch: &str,
+        batch: usize,
+        owner: Option<u64>,
+        seed_bytes: u64,
+    ) -> Option<ChainPlan> {
+        let mut g = self.inner.lock().unwrap();
+        let key = (arch.to_string(), batch, owner);
+        let plan = if owner.is_none() {
+            g.parked.get(&key).cloned()?
+        } else {
+            let plan = g.parked.remove(&key)?;
+            g.active += 1;
+            plan
+        };
+        if plan.kv_seeded {
+            g.rebuilds_avoided += 1;
+            g.reseed_bytes_saved += seed_bytes;
+        }
+        Some(plan)
+    }
+
+    /// Register a chain built from scratch (a checkout miss) so the
+    /// `resident_chains` gauge counts it.
+    pub fn register_fresh(&self) {
+        self.inner.lock().unwrap().active += 1;
+    }
+
+    /// Park a live chain's plan: it stays resident (the worker keeps the
+    /// device handles) but is no longer checked out. `was_active` says
+    /// whether the caller's activation contributed to the live count —
+    /// true after [`ResidencyPool::register_fresh`] or a per-owner
+    /// checkout, false after a shared clone-checkout (the entry it
+    /// cloned is still counted in the parked registry) — so the gauge
+    /// stays balanced whatever order workers park and resume in.
+    pub fn park(
+        &self,
+        arch: &str,
+        batch: usize,
+        owner: Option<u64>,
+        plan: ChainPlan,
+        was_active: bool,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        if was_active {
+            g.active = g.active.saturating_sub(1);
+        }
+        g.parked.insert((arch.to_string(), batch, owner), plan);
+    }
+
+    /// Count one scheduler batch-class switch.
+    pub fn record_switch(&self) {
+        self.inner.lock().unwrap().switches += 1;
+    }
+
+    /// Drop a chain from the registry entirely — the parked entry if one
+    /// exists, and the live count when the caller held the chain checked
+    /// out (`was_active`). Called on backend invalidation/eviction so a
+    /// later checkout can never resume evicted device state.
+    ///
+    /// Known shared-model limitation: a sim worker concurrently live on
+    /// a clone-checkout of the same shared key does not observe the
+    /// eviction — it keeps its seeded plan (and may park it back,
+    /// re-recording the chain). That is reachable only through a
+    /// backend-error eviction racing another worker in the no-real-
+    /// buffers sim model, where "seeded" is ledger accounting rather
+    /// than device state; per-owner (PJRT) entries cannot race this way.
+    pub fn evict(&self, arch: &str, batch: usize, owner: Option<u64>, was_active: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.parked.remove(&(arch.to_string(), batch, owner));
+        if was_active {
+            g.active = g.active.saturating_sub(1);
+        }
+    }
+
+    /// Return `n` live-chain counts without touching any parked entry —
+    /// the backends' drop path: a worker that exits (or unwinds) frees
+    /// its device buffers, so its live chains leave the gauge instead of
+    /// inflating `resident_chains` forever (the same leak class the
+    /// router's `ActiveSlotsGuard` closes for occupied slots).
+    pub fn release(&self, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.active = g.active.saturating_sub(n);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = self.inner.lock().unwrap();
+        PoolStats {
+            resident_chains: g.active + g.parked.len() as u64,
+            chain_switches: g.switches,
+            chain_rebuilds_avoided: g.rebuilds_avoided,
+            reseed_bytes_saved: g.reseed_bytes_saved,
+        }
+    }
+}
+
 /// The resident-cache layer for one batch group: buffer pool + dirty-
-/// delta sync planner + retained device handles + transfer ledger.
+/// delta sync planner + the retained [`ResidentChain`] + transfer
+/// ledger. The chain's plan half is what parks in the
+/// [`ResidencyPool`] across batch-class switches.
 pub struct DeviceGroupCaches {
     dims: Dims,
     batch: usize,
@@ -314,10 +548,8 @@ pub struct DeviceGroupCaches {
     /// manifest so `donated_execs` never reports donation an alias-less
     /// artifact set cannot perform.
     donate: bool,
-    kv_seeded: bool,
-    kv_sparse_seeded: bool,
-    ind_seeded: BTreeMap<String, bool>,
-    conf_seeded: bool,
+    /// the retained chain: parkable plan + per-worker device handles
+    pub chain: ResidentChain,
     /// pooled step-token staging [B, block] (i32); rows outside the
     /// stepped slots keep stale contents — garbage-tolerant by the
     /// row-filtered-merge contract
@@ -333,21 +565,30 @@ pub struct DeviceGroupCaches {
     /// device-apply executables take this instead of a host-masked
     /// confidence tensor
     pub occ_mask: HostTensor,
-    pub handles: ResidentHandles,
     pub stats: TransferStats,
 }
 
 impl DeviceGroupCaches {
     pub fn new(dims: &Dims, batch: usize, apply: ApplyMode) -> DeviceGroupCaches {
+        Self::with_plan(dims, batch, apply, ChainPlan::default())
+    }
+
+    /// Build the resident layer around a plan checked out of the
+    /// [`ResidencyPool`]: a seeded plan means the device (shared, for
+    /// the sim's true-sharing model) already holds the chain, so the
+    /// first sync ships nothing instead of re-seeding.
+    pub fn with_plan(
+        dims: &Dims,
+        batch: usize,
+        apply: ApplyMode,
+        plan: ChainPlan,
+    ) -> DeviceGroupCaches {
         DeviceGroupCaches {
             dims: *dims,
             batch,
             apply,
             donate: apply == ApplyMode::Device,
-            kv_seeded: false,
-            kv_sparse_seeded: false,
-            ind_seeded: BTreeMap::new(),
-            conf_seeded: false,
+            chain: ResidentChain { plan, handles: ResidentHandles::default() },
             step_tokens: HostTensor::I32 { shape: vec![batch, 0], data: Vec::new() },
             prefill_tokens: HostTensor::I32 {
                 shape: vec![batch, dims.ctx],
@@ -359,13 +600,27 @@ impl DeviceGroupCaches {
                 data: vec![-1.0f32; batch * dims.gen_len],
             },
             occ_mask: HostTensor::I32 { shape: vec![batch], data: vec![0i32; batch] },
-            handles: ResidentHandles::default(),
             stats: TransferStats::default(),
         }
     }
 
     pub fn apply_mode(&self) -> ApplyMode {
         self.apply
+    }
+
+    /// Snapshot the chain's host-side plan for parking in the
+    /// [`ResidencyPool`] (the device handles stay with this worker).
+    pub fn park_plan(&self) -> ChainPlan {
+        self.chain.plan.clone()
+    }
+
+    /// Resume a plan checked back out of the pool. The handles this
+    /// worker kept across the park line up with the plan by
+    /// construction; a worker resuming a plan it never owned (the sim's
+    /// shared-device model) simply has no handles to reuse, which the
+    /// sim never reads anyway.
+    pub fn restore_plan(&mut self, plan: ChainPlan) {
+        self.chain.plan = plan;
     }
 
     /// Override whether the ledger may count executions as donated —
@@ -438,7 +693,7 @@ impl DeviceGroupCaches {
     pub fn sync_kv(&mut self, caches: &mut GroupCaches, slots: &[usize]) -> SyncOutcome {
         let full = caches.kv_bytes() as u64;
         let row = caches.kv_row_bytes() as u64;
-        let shipped = plan_sync(&mut caches.dirty.kv, &mut self.kv_seeded, slots, row, full);
+        let shipped = plan_sync(&mut caches.dirty.kv, &mut self.chain.plan.kv_seeded, slots, row, full);
         let out = SyncOutcome { shipped, full };
         self.stats.record(TransferKind::Kv, shipped, full);
         out
@@ -460,7 +715,7 @@ impl DeviceGroupCaches {
             .kv_sparse
             .as_mut()
             .ok_or_else(|| anyhow!("sparse cache has no dirty bitmap"))?;
-        let shipped = plan_sync(bm, &mut self.kv_sparse_seeded, slots, row, full);
+        let shipped = plan_sync(bm, &mut self.chain.plan.kv_sparse_seeded, slots, row, full);
         let out = SyncOutcome { shipped, full };
         self.stats.record(TransferKind::KvSparse, shipped, full);
         Ok(out)
@@ -490,10 +745,10 @@ impl DeviceGroupCaches {
         // what the resident copy holds (every layer of the cache)
         let cache_full = (self.dims.n_layers * per_layer) as u64;
         let row = caches.ind_row_bytes(self.dims.n_layers) as u64;
-        if !self.ind_seeded.contains_key(indicator) {
-            self.ind_seeded.insert(indicator.to_string(), false);
+        if !self.chain.plan.ind_seeded.contains_key(indicator) {
+            self.chain.plan.ind_seeded.insert(indicator.to_string(), false);
         }
-        let seeded = self.ind_seeded.get_mut(indicator).expect("just inserted");
+        let seeded = self.chain.plan.ind_seeded.get_mut(indicator).expect("just inserted");
         let bm = caches
             .dirty
             .ind
@@ -517,7 +772,7 @@ impl DeviceGroupCaches {
         slots: &[usize],
     ) -> SyncOutcome {
         let full = (self.batch * self.dims.gen_len * 4) as u64;
-        let shipped = plan_sync(&mut caches.dirty.conf, &mut self.conf_seeded, slots, 4, full);
+        let shipped = plan_sync(&mut caches.dirty.conf, &mut self.chain.plan.conf_seeded, slots, 4, full);
         let out = SyncOutcome { shipped, full };
         self.stats.record(TransferKind::Conf, shipped, full);
         out
@@ -601,8 +856,8 @@ impl DeviceGroupCaches {
         self.stage_prefill_tokens(tokens, slots);
         self.stage_occ_mask(slots);
         let kv_full = caches.kv_bytes() as u64;
-        if !self.kv_seeded {
-            self.kv_seeded = true;
+        if !self.chain.plan.kv_seeded {
+            self.chain.plan.kv_seeded = true;
             caches.dirty.kv.clear_all();
             self.stats.record(TransferKind::Kv, kv_full, kv_full);
         } else {
@@ -610,10 +865,10 @@ impl DeviceGroupCaches {
             self.stats.retained_out_reuses += 1;
         }
         let ind_full = self.ind_cache_bytes();
-        if !self.ind_seeded.contains_key(indicator) {
-            self.ind_seeded.insert(indicator.to_string(), false);
+        if !self.chain.plan.ind_seeded.contains_key(indicator) {
+            self.chain.plan.ind_seeded.insert(indicator.to_string(), false);
         }
-        let seeded = self.ind_seeded.get_mut(indicator).expect("just inserted");
+        let seeded = self.chain.plan.ind_seeded.get_mut(indicator).expect("just inserted");
         if !*seeded {
             *seeded = true;
             caches
@@ -628,8 +883,8 @@ impl DeviceGroupCaches {
             self.stats.retained_out_reuses += 1;
         }
         let conf_full = self.conf_bytes();
-        if !self.conf_seeded {
-            self.conf_seeded = true;
+        if !self.chain.plan.conf_seeded {
+            self.chain.plan.conf_seeded = true;
             self.stats.record(TransferKind::Conf, conf_full, conf_full);
         } else {
             self.stats.record(TransferKind::Conf, 0, conf_full);
@@ -679,7 +934,7 @@ impl DeviceGroupCaches {
         if self.apply != ApplyMode::Device {
             return Err(anyhow!("sync_step_device requires ApplyMode::Device"));
         }
-        if !self.kv_seeded || !self.conf_seeded {
+        if !self.chain.plan.kv_seeded || !self.chain.plan.conf_seeded {
             return Err(anyhow!(
                 "device-apply step before the seeding prefill (cache chain missing)"
             ));
@@ -730,21 +985,8 @@ impl DeviceGroupCaches {
     /// conservative (it may double-count the failed step's bytes, never
     /// undercount the re-sync).
     pub fn invalidate(&mut self, caches: &mut GroupCaches) {
-        self.kv_seeded = false;
-        self.kv_sparse_seeded = false;
-        self.ind_seeded.clear();
-        self.conf_seeded = false;
-        self.handles = ResidentHandles::default();
-        for b in 0..self.batch {
-            caches.dirty.kv.mark_slot(b);
-            for bm in caches.dirty.ind.values_mut() {
-                bm.mark_slot(b);
-            }
-            caches.dirty.conf.mark_slot(b);
-            if let Some(bm) = caches.dirty.kv_sparse.as_mut() {
-                bm.mark_slot(b);
-            }
-        }
+        self.chain = ResidentChain::default();
+        caches.dirty.mark_all();
     }
 
     /// A step's outputs (KV block + indicator block) were scattered into
@@ -908,7 +1150,7 @@ mod tests {
         // a failed upload/execute: the planner's clears must be undone
         r.invalidate(&mut c);
         assert_eq!(c.dirty.kv.count(), 2 * d.ctx, "everything dirty again");
-        assert!(r.handles.kv.is_none() && r.handles.ind.is_none());
+        assert!(r.chain.handles.kv.is_none() && r.chain.handles.ind.is_none());
         let reseed = r.sync_kv(&mut c, &[0, 1]);
         assert_eq!(reseed.shipped, c.kv_bytes() as u64, "next sync re-seeds");
         assert_eq!(r.stats.full_kv_uploads, 2);
@@ -1023,7 +1265,7 @@ mod tests {
         r.note_prefill_applied(&mut c, &[0, 1]);
 
         r.invalidate(&mut c);
-        assert!(r.handles.kv_chain.is_none() && r.handles.conf_chain.is_none());
+        assert!(r.chain.handles.kv_chain.is_none() && r.chain.handles.conf_chain.is_none());
         // a step against the dropped chain is refused...
         assert!(r
             .sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &[0])
@@ -1042,6 +1284,80 @@ mod tests {
         assert_eq!(r.occ_mask.as_i32().unwrap(), &[0, 1, 0]);
         r.stage_occ_mask(&[0, 2]);
         assert_eq!(r.occ_mask.as_i32().unwrap(), &[1, 0, 1]);
+    }
+
+    #[test]
+    fn pool_checkout_park_roundtrip_and_counters() {
+        let d = dims();
+        let pool = ResidencyPool::new();
+        let seed = chain_seed_bytes(&d, 2);
+
+        // cold start: miss, fresh registration
+        assert!(pool.checkout("a", 2, None, seed).is_none());
+        pool.register_fresh();
+        assert_eq!(pool.stats().resident_chains, 1);
+        assert_eq!(pool.stats().chain_rebuilds_avoided, 0);
+
+        // seed the chain, park it, check it back out: an avoided rebuild
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();
+        pool.park("a", 2, None, r.park_plan(), true);
+        assert_eq!(pool.stats().resident_chains, 1, "parked still resident");
+        let plan = pool.checkout("a", 2, None, seed).expect("parked plan");
+        assert!(plan.kv_seeded && plan.conf_seeded);
+        r.restore_plan(plan);
+        let st = pool.stats();
+        assert_eq!(st.chain_rebuilds_avoided, 1);
+        assert_eq!(st.reseed_bytes_saved, seed);
+        assert_eq!(st.resident_chains, 1);
+
+        // owner keys separate PJRT workers: worker 1's parked chain is
+        // invisible to worker 2 (its device buffers are thread-local)
+        pool.park("a", 2, Some(1), r.park_plan(), false);
+        assert!(pool.checkout("a", 2, Some(2), seed).is_none());
+        assert!(pool.checkout("a", 2, Some(1), seed).is_some());
+    }
+
+    #[test]
+    fn pool_parks_unseeded_plan_without_rebuild_credit() {
+        let d = dims();
+        let pool = ResidencyPool::new();
+        pool.register_fresh();
+        pool.park("a", 1, None, ChainPlan::default(), true);
+        // an unseeded parked plan is a hit, but saved nothing
+        let plan = pool.checkout("a", 1, None, chain_seed_bytes(&d, 1)).unwrap();
+        assert!(!plan.kv_seeded);
+        assert_eq!(pool.stats().chain_rebuilds_avoided, 0);
+        assert_eq!(pool.stats().reseed_bytes_saved, 0);
+    }
+
+    #[test]
+    fn pool_evict_removes_parked_and_live_entries() {
+        let pool = ResidencyPool::new();
+        pool.register_fresh(); // live b8 chain
+        pool.register_fresh(); // live b1 chain, about to park
+        pool.park("a", 1, None, ChainPlan { kv_seeded: true, ..Default::default() }, true);
+        assert_eq!(pool.stats().resident_chains, 2, "one live + one parked");
+        pool.evict("a", 1, None, false); // the parked entry
+        assert_eq!(pool.stats().resident_chains, 1);
+        pool.evict("a", 8, None, true); // the live chain
+        assert_eq!(pool.stats().resident_chains, 0);
+        // the evicted plan is unreachable: a later checkout must rebuild
+        assert!(pool.checkout("a", 1, None, 0).is_none());
+    }
+
+    #[test]
+    fn invalidate_resets_the_parkable_plan() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        r.sync_prefill_device(&mut c, "h", &tokens, &[0, 1]).unwrap();
+        assert!(r.park_plan().kv_seeded);
+        r.invalidate(&mut c);
+        assert_eq!(r.park_plan(), ChainPlan::default(), "nothing left to park");
     }
 
     #[test]

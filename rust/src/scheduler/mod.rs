@@ -55,6 +55,27 @@
 //! [`crate::runtime::resident::TransferStats`] ledger flows through
 //! [`GroupScheduler::transfer_stats`] into the serving metrics.
 //!
+//! # Batch classes and pooled residency
+//!
+//! A scheduler can own several **batch classes** (e.g. b=1 and b=8 —
+//! the shapes the executables are compiled for), each with its own slot
+//! array, token buffer, and [`GroupCaches`]. At block boundaries —
+//! the only points where every resident sequence's next plan is the
+//! grounding prefill anyway, so moving it is trajectory-exact —
+//! [`GroupScheduler::maybe_switch_class`] sizes the active class to the
+//! demand (resident + queued sequences): a lone request after a burst
+//! shrinks back to the latency-optimal b=1 executables, a deep queue
+//! upshifts to the full batch. A switch parks the outgoing class's
+//! retained chain in the shared
+//! [`crate::runtime::resident::ResidencyPool`] and checks the incoming
+//! class's chain back out, so batch-shape churn never pays a full KV
+//! reseed: only slots dirtied since the chain was parked re-ship (and
+//! under `ApplyMode::Device` even those regenerate on device through
+//! the migrated sequences' grounding prefill). Multiple router workers
+//! share one pool — PJRT workers park under their own owner id (PJRT
+//! buffers are not `Send`), the sim backend parks under the shared
+//! owner and models true cross-worker device sharing.
+//!
 //! One documented exception: the experimental adaptive skip-ratio mode
 //! (`EngineCfg::adaptive`) keeps a single group-scoped confidence-drift
 //! signal — as the pre-refactor engine did for its lockstep batch — so
@@ -64,7 +85,8 @@
 
 pub mod sim;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -77,7 +99,8 @@ use crate::engine::{
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
-    ApplyMode, DeviceGroupCaches, SyncOutcome, TransferStats, UploadHandle,
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, ResidencyPool, SyncOutcome,
+    TransferStats, UploadHandle,
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{ExecArg, Runtime};
@@ -184,11 +207,29 @@ pub trait StepBackend {
     fn transfer_stats(&self) -> TransferStats {
         TransferStats::default()
     }
-    /// Drop all resident device state (retained handles, seeded chains)
-    /// and mark the host caches fully dirty. Called by
-    /// [`GroupScheduler::evict_all`] so a later re-admission can never
-    /// step against a stale device copy of the evicted group.
+    /// Drop the resident device state of `caches`' batch class (retained
+    /// handles, seeded chain, and the pooled entry) and mark the host
+    /// caches fully dirty. Called by [`GroupScheduler::evict_all`] so a
+    /// later re-admission can never step against a stale device copy of
+    /// the evicted group.
     fn invalidate_resident(&mut self, _caches: &mut GroupCaches) {}
+    /// Park the resident chain of `caches`' batch class in the shared
+    /// residency pool (the scheduler is switching away from this class).
+    /// No-op for backends without a resident layer.
+    fn park_chain(&mut self, _caches: &mut GroupCaches) {}
+    /// Activate the resident chain for `caches`' batch class: check a
+    /// parked chain back out of the pool, or register a fresh one. The
+    /// backends also run this lazily on their first prefill/step for a
+    /// class, so single-class callers never need to call it.
+    fn checkout_chain(&mut self, _caches: &mut GroupCaches) -> Result<()> {
+        Ok(())
+    }
+    /// Count one batch-class switch in the pool ledger.
+    fn note_chain_switch(&self) {}
+    /// Cumulative residency-pool ledger (zeros for backends without one).
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats::default()
+    }
 }
 
 /// Scheduling parameters (the method-level subset of [`EngineCfg`]).
@@ -213,15 +254,47 @@ impl SchedCfg {
     }
 }
 
-/// Fixed-slot group scheduler: the continuous-batching core.
-pub struct GroupScheduler<'a> {
-    backend: Box<dyn StepBackend + 'a>,
-    cfg: SchedCfg,
-    n_slots: usize,
+/// One batch class's slot state: its slot array, token buffer, and
+/// group caches. The scheduler owns one per configured class; only the
+/// active class is ticked, the others hold parked state.
+struct ClassState {
+    batch: usize,
     slots: Vec<Option<SeqState>>,
     /// token layout per slot: [prompt (PAD-padded) | gen (MASK)]
     tokens: Vec<i32>,
     caches: GroupCaches,
+}
+
+impl ClassState {
+    fn new(d: &Dims, batch: usize) -> ClassState {
+        ClassState {
+            batch,
+            slots: (0..batch).map(|_| None).collect(),
+            tokens: vec![0i32; batch * d.ctx],
+            caches: GroupCaches::new(d, batch),
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn gen_row(&self, d: &Dims, slot: usize) -> &[i32] {
+        &self.tokens[slot * d.ctx + d.prompt_len..(slot + 1) * d.ctx]
+    }
+}
+
+/// Fixed-slot group scheduler: the continuous-batching core, now over a
+/// set of batch classes with pooled device residency (see the module
+/// docs).
+pub struct GroupScheduler<'a> {
+    backend: Box<dyn StepBackend + 'a>,
+    cfg: SchedCfg,
+    /// configured batch classes, ascending (e.g. [1, 8])
+    classes: Vec<usize>,
+    /// index into `classes`/`states` of the class currently ticking
+    active_class: usize,
+    states: Vec<ClassState>,
     /// reusable sampling workspace shared by every slot's unmask decision
     scratch: SamplerScratch,
     /// group-level executable-run counters
@@ -232,7 +305,20 @@ pub struct GroupScheduler<'a> {
 }
 
 impl<'a> GroupScheduler<'a> {
+    /// Single-class scheduler over `n_slots` slots (the pre-pool
+    /// behavior — no class switching).
     pub fn new(backend: Box<dyn StepBackend + 'a>, n_slots: usize, cfg: SchedCfg) -> Result<Self> {
+        Self::with_classes(backend, &[n_slots.max(1)], cfg)
+    }
+
+    /// Scheduler over several batch classes. Starts on the largest class
+    /// (full capacity); [`GroupScheduler::maybe_switch_class`] resizes
+    /// from demand at block boundaries.
+    pub fn with_classes(
+        backend: Box<dyn StepBackend + 'a>,
+        classes: &[usize],
+        cfg: SchedCfg,
+    ) -> Result<Self> {
         let d = *backend.dims();
         if cfg.block == 0 || d.gen_len % cfg.block != 0 {
             return Err(anyhow!(
@@ -241,15 +327,20 @@ impl<'a> GroupScheduler<'a> {
                 cfg.block
             ));
         }
-        let n_slots = n_slots.max(1);
-        let caches = GroupCaches::new(&d, n_slots);
+        let mut classes: Vec<usize> = classes.iter().map(|c| (*c).max(1)).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        if classes.is_empty() {
+            classes.push(1);
+        }
+        let states = classes.iter().map(|&b| ClassState::new(&d, b)).collect();
+        let active_class = classes.len() - 1;
         Ok(GroupScheduler {
             backend,
             cfg,
-            n_slots,
-            slots: (0..n_slots).map(|_| None).collect(),
-            tokens: vec![0i32; n_slots * d.ctx],
-            caches,
+            classes,
+            active_class,
+            states,
             scratch: SamplerScratch::default(),
             ticks: 0,
             n_prefill: 0,
@@ -264,49 +355,179 @@ impl<'a> GroupScheduler<'a> {
         self.backend.transfer_stats()
     }
 
-    /// Read access to the group caches (dirty-bitmap inspection in tests
-    /// and benches).
-    pub fn group_caches(&self) -> &GroupCaches {
-        &self.caches
+    /// The backend's cumulative residency-pool ledger (chain switches,
+    /// avoided rebuilds, reseed bytes saved).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.backend.pool_stats()
     }
 
+    /// Read access to the active class's group caches (dirty-bitmap
+    /// inspection in tests and benches).
+    pub fn group_caches(&self) -> &GroupCaches {
+        &self.states[self.active_class].caches
+    }
+
+    /// Slot count of the active batch class.
     pub fn n_slots(&self) -> usize {
-        self.n_slots
+        self.states[self.active_class].batch
+    }
+
+    /// The active batch class (its slot count).
+    pub fn batch_class(&self) -> usize {
+        self.states[self.active_class].batch
+    }
+
+    /// The configured batch classes, ascending.
+    pub fn classes(&self) -> &[usize] {
+        &self.classes
     }
 
     pub fn active(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.states[self.active_class].active()
     }
 
     pub fn free_slots(&self) -> usize {
-        self.n_slots - self.active()
+        self.n_slots() - self.active()
     }
 
     /// Ids of the currently resident sequences (for error draining).
     pub fn active_ids(&self) -> Vec<u64> {
-        self.slots.iter().flatten().map(|s| s.id).collect()
+        self.states[self.active_class].slots.iter().flatten().map(|s| s.id).collect()
+    }
+
+    /// True when every resident sequence sits at a block boundary
+    /// (`i_b == 0`) — the only points where a batch-class switch is
+    /// trajectory-exact, because every migrated sequence's next plan is
+    /// the grounding prefill the refresh policy schedules at a block
+    /// start anyway.
+    pub fn at_block_boundary(&self) -> bool {
+        self.states[self.active_class].slots.iter().flatten().all(|s| s.i_b == 0)
+    }
+
+    /// The batch class for `demand` concurrent sequences: the smallest
+    /// configured class that fits them all, or the largest class when
+    /// the demand exceeds every class.
+    pub fn select_class(&self, demand: usize) -> usize {
+        let demand = demand.max(1);
+        self.classes
+            .iter()
+            .copied()
+            .find(|&c| c >= demand)
+            .unwrap_or(*self.classes.last().expect("at least one class"))
+    }
+
+    /// Resize the active batch class to the demand (`active + queued`
+    /// sequences), if a switch is possible: multi-class scheduler, a
+    /// different target class that fits the resident sequences, and
+    /// every resident sequence at a block boundary. Returns whether a
+    /// switch happened. The switch parks the outgoing class's retained
+    /// chain in the residency pool and checks the incoming class's chain
+    /// back out — no full KV reseed (see the module docs).
+    pub fn maybe_switch_class(&mut self, queued: usize) -> Result<bool> {
+        if self.classes.len() < 2 {
+            return Ok(false);
+        }
+        let active = self.active();
+        let target = self.select_class(active + queued);
+        if target == self.batch_class() || active > target || !self.at_block_boundary() {
+            return Ok(false);
+        }
+        self.switch_class(target)?;
+        Ok(true)
+    }
+
+    /// Switch to batch class `target`, migrating the resident sequences.
+    /// Callers guarantee `target` is configured, fits the resident
+    /// sequences, and that every resident sequence is at a block
+    /// boundary (`i_b == 0`), so the migrated sequences' next plan — the
+    /// grounding prefill — regenerates their rows in the new class
+    /// exactly as it would have in the old one.
+    fn switch_class(&mut self, target: usize) -> Result<()> {
+        let from = self.active_class;
+        let to = self
+            .classes
+            .iter()
+            .position(|&c| c == target)
+            .ok_or_else(|| anyhow!("no batch class {target}"))?;
+        if to == from {
+            return Ok(());
+        }
+        let d = *self.backend.dims();
+        // refuse before touching anything: a failed switch must be
+        // lossless (the resident sequences stay seated in `from`)
+        let resident = self.states[from].active();
+        if resident > target {
+            return Err(anyhow!(
+                "{resident} resident sequences cannot fit batch class {target}"
+            ));
+        }
+        // park the outgoing chain, resume (or build) the incoming one —
+        // all fallible work happens while the sequences are still seated
+        // in `from`, so an error here loses nothing
+        self.backend.park_chain(&mut self.states[from].caches);
+        self.active_class = to;
+        if let Err(e) = self.backend.checkout_chain(&mut self.states[to].caches) {
+            // lossless unwind: fall back to the outgoing class (its
+            // sequences never moved; worst case its chain re-activates
+            // cold and the next prefill re-seeds)
+            self.active_class = from;
+            self.backend.checkout_chain(&mut self.states[from].caches)?;
+            return Err(e);
+        }
+        self.backend.note_chain_switch();
+        // lift the resident sequences (and their token rows — the whole
+        // decode state) out of the outgoing class...
+        let mut moved: Vec<(SeqState, Vec<i32>)> = Vec::new();
+        {
+            let st = &mut self.states[from];
+            for s in 0..st.batch {
+                if let Some(seq) = st.slots[s].take() {
+                    debug_assert_eq!(seq.i_b, 0, "class switch off a block boundary");
+                    moved.push((seq, st.tokens[s * d.ctx..(s + 1) * d.ctx].to_vec()));
+                }
+            }
+        }
+        // ...and re-seat them: the slot reset dirties their rows and the
+        // next tick's grounding prefill regenerates them in the new
+        // class (on device under ApplyMode::Device — no upload)
+        let st = &mut self.states[to];
+        for (seq, row) in moved {
+            let slot = st
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("target class fits the resident sequences");
+            st.tokens[slot * d.ctx..(slot + 1) * d.ctx].copy_from_slice(&row);
+            st.caches.reset_slot(slot);
+            st.slots[slot] = Some(seq);
+        }
+        Ok(())
     }
 
     /// Evict every resident sequence without producing results (used by
     /// the router to fail outstanding requests after a backend error).
-    /// Also invalidates the backend's resident device caches: the sync
-    /// planner's cleared dirty bits promise the device copy matches the
-    /// host, and an eviction orphans that promise — a sequence admitted
-    /// later must re-seed (or re-ground on device) rather than step
-    /// against the evicted group's stale rows.
+    /// Also invalidates the backend's resident device caches for EVERY
+    /// batch class — live and parked alike, including the pooled entries
+    /// — because the sync planner's cleared dirty bits promise the
+    /// device copy matches the host, and an eviction orphans that
+    /// promise: a sequence admitted later must re-seed (or re-ground on
+    /// device) rather than step against the evicted group's stale rows.
     pub fn evict_all(&mut self) {
-        for s in self.slots.iter_mut() {
-            *s = None;
+        for st in self.states.iter_mut() {
+            for s in st.slots.iter_mut() {
+                *s = None;
+            }
+            self.backend.invalidate_resident(&mut st.caches);
         }
-        self.backend.invalidate_resident(&mut self.caches);
     }
 
-    /// Admit a sequence into the lowest free slot. Fails with a
-    /// `bad request:` message for invalid per-request parameters, or
-    /// `no free slot` when the group is full (callers should check
-    /// [`GroupScheduler::free_slots`] first).
+    /// Admit a sequence into the lowest free slot of the active batch
+    /// class. Fails with a `bad request:` message for invalid
+    /// per-request parameters, or `no free slot` when the group is full
+    /// (callers should check [`GroupScheduler::free_slots`] first).
     pub fn admit(&mut self, input: SeqInput) -> Result<usize> {
-        let slot = self
+        let ac = self.active_class;
+        let slot = self.states[ac]
             .slots
             .iter()
             .position(|s| s.is_none())
@@ -340,20 +561,20 @@ impl<'a> GroupScheduler<'a> {
             .map_err(|e| anyhow!("bad request: {e}"))?;
         let mask = tok.mask;
         let row = slot * d.ctx;
-        self.tokens[row..row + d.prompt_len].copy_from_slice(&ids);
+        self.states[ac].tokens[row..row + d.prompt_len].copy_from_slice(&ids);
         // the whole compiled gen region is masked regardless of the
         // requested gen_len (matches the training distribution); blocks
         // past gen_len are simply never scheduled
         for g in 0..d.gen_len {
-            self.tokens[row + d.prompt_len + g] = mask;
+            self.states[ac].tokens[row + d.prompt_len + g] = mask;
         }
-        self.caches.reset_slot(slot);
+        self.states[ac].caches.reset_slot(slot);
         // splitmix the request id into the seed so every request gets its
         // own deterministic sampling stream, independent of slot and of
         // the other occupants
         let seq_seed =
             self.cfg.seed ^ 0xE5D1 ^ (input.id.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        self.slots[slot] = Some(SeqState {
+        self.states[ac].slots[slot] = Some(SeqState {
             id: input.id,
             gen_len,
             sampler,
@@ -370,16 +591,14 @@ impl<'a> GroupScheduler<'a> {
         Ok(slot)
     }
 
-    fn gen_row(&self, slot: usize) -> &[i32] {
-        let d = self.backend.dims();
-        &self.tokens[slot * d.ctx + d.prompt_len..(slot + 1) * d.ctx]
-    }
-
-    /// Step every occupied slot one iteration; returns the sequences
-    /// that retired at this tick's block boundaries.
+    /// Step every occupied slot of the active class one iteration;
+    /// returns the sequences that retired at this tick's block
+    /// boundaries.
     pub fn tick(&mut self) -> Result<Vec<FinishedSeq>> {
-        let occupied: Vec<usize> =
-            (0..self.n_slots).filter(|&s| self.slots[s].is_some()).collect();
+        let ac = self.active_class;
+        let occupied: Vec<usize> = (0..self.states[ac].batch)
+            .filter(|&s| self.states[ac].slots[s].is_some())
+            .collect();
         if occupied.is_empty() {
             return Ok(Vec::new());
         }
@@ -391,7 +610,7 @@ impl<'a> GroupScheduler<'a> {
         // deterministic execution order
         let mut step_groups: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
         for &s in &occupied {
-            let seq = self.slots[s].as_ref().unwrap();
+            let seq = self.states[ac].slots[s].as_ref().unwrap();
             let plan = match self.cfg.method {
                 Method::Vanilla => StepPlan::Prefill,
                 Method::DualCache => RefreshPolicy::plan_dual(seq.i_b),
@@ -411,11 +630,13 @@ impl<'a> GroupScheduler<'a> {
         // 2. one shared full forward for every slot that wants a prefill
         //    (block grounding, prompt refresh, vanilla step, admission)
         if !prefill_slots.is_empty() {
-            self.backend
-                .run_prefill(&self.tokens, &prefill_slots, &mut self.caches)?;
+            {
+                let st = &mut self.states[ac];
+                self.backend.run_prefill(&st.tokens, &prefill_slots, &mut st.caches)?;
+            }
             self.n_prefill += 1;
             for &s in &prefill_slots {
-                self.slots[s].as_mut().unwrap().n_prefill += 1;
+                self.states[ac].slots[s].as_mut().unwrap().n_prefill += 1;
             }
         }
 
@@ -426,10 +647,13 @@ impl<'a> GroupScheduler<'a> {
         for ((blk, plan_tag), group) in groups {
             let plan = if plan_tag == 0 { StepPlan::DualStep } else { StepPlan::EsStep };
             let block_start = prompt_len + blk * self.cfg.block;
-            self.backend
-                .run_step(plan, &self.tokens, block_start, self.cfg.block, &group, &mut self.caches)?;
+            {
+                let st = &mut self.states[ac];
+                self.backend
+                    .run_step(plan, &st.tokens, block_start, self.cfg.block, &group, &mut st.caches)?;
+            }
             for &s in &group {
-                let seq = self.slots[s].as_mut().unwrap();
+                let seq = self.states[ac].slots[s].as_mut().unwrap();
                 if plan == StepPlan::DualStep {
                     seq.n_dual += 1;
                 } else {
@@ -452,25 +676,26 @@ impl<'a> GroupScheduler<'a> {
         let block = self.cfg.block;
         for &s in &occupied {
             let decision = {
-                let seq = self.slots[s].as_mut().unwrap();
-                let block_lo = seq.block_idx * block;
+                let st = &mut self.states[ac];
+                let block_lo = st.slots[s].as_ref().unwrap().block_idx * block;
                 let inp = UnmaskInput {
-                    logits: &self.caches.logits
+                    logits: &st.caches.logits
                         [s * d.gen_len * d.vocab..(s + 1) * d.gen_len * d.vocab],
-                    conf: &self.caches.conf[s * d.gen_len..(s + 1) * d.gen_len],
-                    gen_tokens: &self.tokens[s * d.ctx + d.prompt_len..(s + 1) * d.ctx],
+                    conf: &st.caches.conf[s * d.gen_len..(s + 1) * d.gen_len],
+                    gen_tokens: &st.tokens[s * d.ctx + d.prompt_len..(s + 1) * d.ctx],
                     block_lo,
                     block_hi: block_lo + block,
                     vocab: d.vocab,
                     mask_id: mask,
                     eos_id: eos,
                 };
+                let seq = st.slots[s].as_mut().unwrap();
                 decide_unmask_with(&seq.sampler, &inp, &mut seq.rng, &mut self.scratch)
             };
             for (p, t) in decision.positions.iter().zip(&decision.tokens) {
-                self.tokens[s * d.ctx + d.prompt_len + p] = *t;
+                self.states[ac].tokens[s * d.ctx + d.prompt_len + p] = *t;
             }
-            let seq = self.slots[s].as_mut().unwrap();
+            let seq = self.states[ac].slots[s].as_mut().unwrap();
             seq.iters += 1;
             seq.i_b += 1;
         }
@@ -479,30 +704,30 @@ impl<'a> GroupScheduler<'a> {
         let mut finished = Vec::new();
         for &s in &occupied {
             let (block_lo, gen_len) = {
-                let seq = self.slots[s].as_ref().unwrap();
+                let seq = self.states[ac].slots[s].as_ref().unwrap();
                 (seq.block_idx * self.cfg.block, seq.gen_len)
             };
             let block_done = {
-                let row = self.gen_row(s);
+                let row = self.states[ac].gen_row(&d, s);
                 row[block_lo..block_lo + self.cfg.block].iter().all(|&t| t != mask)
             };
             if !block_done {
                 continue;
             }
             let done = {
-                let seq = self.slots[s].as_mut().unwrap();
+                let seq = self.states[ac].slots[s].as_mut().unwrap();
                 seq.block_idx += 1;
                 seq.i_b = 0;
                 seq.block_idx * self.cfg.block >= seq.gen_len
-            } || seq_complete(&self.gen_row(s)[..gen_len], mask, eos);
+            } || seq_complete(&self.states[ac].gen_row(&d, s)[..gen_len], mask, eos);
             if done {
                 let (text, tokens_out) = {
-                    let row = &self.gen_row(s)[..gen_len];
+                    let row = &self.states[ac].gen_row(&d, s)[..gen_len];
                     let text = self.backend.tokenizer().decode(row);
                     let tokens_out = row.iter().filter(|&&t| t != mask).count();
                     (text, tokens_out)
                 };
-                let seq = self.slots[s].take().unwrap();
+                let seq = self.states[ac].slots[s].take().unwrap();
                 finished.push(FinishedSeq {
                     id: seq.id,
                     text,
@@ -559,12 +784,33 @@ pub fn seq_complete(gen_row: &[i32], mask: i32, eos: i32) -> bool {
 ///     and reused while the dirty bitmaps allow, and step outputs are
 ///     downloaded and scattered host-side (their rows re-ship as
 ///     deltas).
+///
+/// Since the pooled-residency refactor the backend keeps one resident
+/// layer **per batch class** (keyed by `caches.batch`, with the apply
+/// mode and donation flag re-derived per class from the compiled
+/// executables), parking and resuming chains through a shared
+/// [`ResidencyPool`]. A PJRT worker parks under its own owner id: PJRT
+/// buffers are not `Send`, so the handles never leave this thread and a
+/// foreign worker's checkout deliberately misses.
 pub struct PjrtBackend<'rt> {
     rt: &'rt Runtime,
     cfg: EngineCfg,
     arch: ArchSpec,
+    /// primary batch class (what [`PjrtBackend::apply_mode`] reports)
     batch: usize,
-    resident: DeviceGroupCaches,
+    pool: Arc<ResidencyPool>,
+    owner: Option<u64>,
+    /// resident layer per batch class, created on first activation and
+    /// kept for the backend's lifetime (the ledger is cumulative)
+    residents: BTreeMap<usize, DeviceGroupCaches>,
+    /// classes whose chain is currently parked in the pool
+    parked: BTreeSet<usize>,
+    /// classes whose chain is live (activated and not parked/evicted)
+    registered: BTreeSet<usize>,
+    /// classes whose activation contributed to the pool's live-chain
+    /// count (register_fresh or a per-owner checkout) — what park/evict
+    /// must hand back so the gauge stays balanced
+    counted: BTreeSet<usize>,
     last_flushed: TransferStats,
     /// mean |Δconfidence| at the last step — the adaptive-ratio signal.
     /// Group-scoped (shared by every occupant), matching the
@@ -574,65 +820,212 @@ pub struct PjrtBackend<'rt> {
 }
 
 impl<'rt> PjrtBackend<'rt> {
+    /// Backend with a private residency pool (single-worker use: the
+    /// engine façade, benches).
     pub fn new(rt: &'rt Runtime, cfg: EngineCfg, batch: usize) -> Result<PjrtBackend<'rt>> {
+        Self::with_pool(rt, cfg, batch, ResidencyPool::new(), Some(0))
+    }
+
+    /// Backend sharing `pool` with other workers. `owner` must be unique
+    /// per worker thread: parked PJRT chains are resumable only by the
+    /// thread holding their device handles.
+    pub fn with_pool(
+        rt: &'rt Runtime,
+        cfg: EngineCfg,
+        batch: usize,
+        pool: Arc<ResidencyPool>,
+        owner: Option<u64>,
+    ) -> Result<PjrtBackend<'rt>> {
         let arch = rt.arch(&cfg.arch)?.clone();
-        // device-apply needs every executable the config can reach, or a
-        // mid-generation plan would have to fall back with a cold chain
-        let apply = if device_apply_eligible(&cfg)
-            && arch.executables.contains_key(&prefill_apply_exe_name(batch))
-            && arch
-                .executables
-                .contains_key(&apply_step_exe_name(StepPlan::DualStep, cfg.block, batch))
-            && (cfg.method != Method::EsDllm
-                || arch
-                    .executables
-                    .contains_key(&apply_step_exe_name(StepPlan::EsStep, cfg.block, batch)))
-        {
-            ApplyMode::Device
-        } else {
-            ApplyMode::Host
-        };
-        let mut resident = DeviceGroupCaches::new(&arch.dims, batch, apply);
-        if apply == ApplyMode::Device {
-            // the ledger may report an execution as donated only if
-            // every apply executable this config chains was compiled
-            // with the input-output alias config (manifest `alias`
-            // signatures); an older alias-less artifact set still
-            // chains correctly, by replace-and-drop
-            let n_params = arch.params.len();
-            let donated = |name: &str| {
-                arch.executables
-                    .get(name)
-                    .map(|e| !e.alias_pairs(n_params).is_empty())
-                    .unwrap_or(false)
-            };
-            let all_donate = donated(&prefill_apply_exe_name(batch))
-                && donated(&apply_step_exe_name(StepPlan::DualStep, cfg.block, batch))
-                && (cfg.method != Method::EsDllm
-                    || donated(&apply_step_exe_name(StepPlan::EsStep, cfg.block, batch)));
-            resident.set_donation(all_donate);
-        }
         Ok(PjrtBackend {
             rt,
             cfg,
             arch,
             batch,
-            resident,
+            pool,
+            owner,
+            residents: BTreeMap::new(),
+            parked: BTreeSet::new(),
+            registered: BTreeSet::new(),
+            counted: BTreeSet::new(),
             last_flushed: TransferStats::default(),
             conf_drift: 1.0,
         })
     }
 
-    /// Which apply mode this backend selected (visible for tests and the
-    /// perf benches).
+    /// Apply mode for one batch class: device-apply needs every
+    /// executable the config can reach at that class, or a
+    /// mid-generation plan would have to fall back with a cold chain.
+    fn apply_for(&self, batch: usize) -> ApplyMode {
+        if device_apply_eligible(&self.cfg)
+            && self.arch.executables.contains_key(&prefill_apply_exe_name(batch))
+            && self
+                .arch
+                .executables
+                .contains_key(&apply_step_exe_name(StepPlan::DualStep, self.cfg.block, batch))
+            && (self.cfg.method != Method::EsDllm
+                || self
+                    .arch
+                    .executables
+                    .contains_key(&apply_step_exe_name(StepPlan::EsStep, self.cfg.block, batch)))
+        {
+            ApplyMode::Device
+        } else {
+            ApplyMode::Host
+        }
+    }
+
+    /// Whether every apply executable this config chains at `batch` was
+    /// compiled with the input-output alias config (manifest `alias`
+    /// signatures) — the ledger may report an execution as donated only
+    /// then; an older alias-less artifact set still chains correctly, by
+    /// replace-and-drop.
+    fn donation_for(&self, batch: usize) -> bool {
+        let n_params = self.arch.params.len();
+        let donated = |name: &str| {
+            self.arch
+                .executables
+                .get(name)
+                .map(|e| !e.alias_pairs(n_params).is_empty())
+                .unwrap_or(false)
+        };
+        donated(&prefill_apply_exe_name(batch))
+            && donated(&apply_step_exe_name(StepPlan::DualStep, self.cfg.block, batch))
+            && (self.cfg.method != Method::EsDllm
+                || donated(&apply_step_exe_name(StepPlan::EsStep, self.cfg.block, batch)))
+    }
+
+    /// Activate the resident layer for `caches`' batch class: resume the
+    /// parked chain, check a pooled plan out, or build a fresh layer.
+    /// Idempotent for an already-live class.
+    fn activate(&mut self, caches: &mut GroupCaches) {
+        let batch = caches.batch;
+        let seed = chain_seed_bytes(&self.arch.dims, batch);
+        if self.parked.remove(&batch) {
+            // our own parked chain: the plan comes back out of the pool
+            // and lines up with the handles this thread kept
+            match self.pool.checkout(&self.cfg.arch, batch, self.owner, seed) {
+                Some(plan) => {
+                    self.residents
+                        .get_mut(&batch)
+                        .expect("parked implies a resident entry")
+                        .restore_plan(plan);
+                    // a per-owner checkout moved the chain back to the
+                    // live count (a shared clone would not have)
+                    if self.owner.is_some() {
+                        self.counted.insert(batch);
+                    }
+                }
+                None => {
+                    // the pooled entry was evicted while parked: the
+                    // promise is gone, re-seed from scratch
+                    if let Some(r) = self.residents.get_mut(&batch) {
+                        r.invalidate(caches);
+                    }
+                    self.pool.register_fresh();
+                    self.counted.insert(batch);
+                }
+            }
+            self.registered.insert(batch);
+            return;
+        }
+        if self.registered.contains(&batch) {
+            return; // live and counted — nothing to do
+        }
+        if self.residents.contains_key(&batch) {
+            // evicted earlier and now reactivated: it re-seeds from
+            // scratch, as a fresh chain
+            self.pool.register_fresh();
+            self.counted.insert(batch);
+        } else {
+            let apply = self.apply_for(batch);
+            // a pool checkout here can only miss for a PJRT worker (the
+            // owner key is unique per thread and parking keeps the
+            // resident entry alive), but the call keeps this activation
+            // path identical to the sim backend's — the parity the
+            // transfer-accounting tests pin
+            let mut r = match self.pool.checkout(&self.cfg.arch, batch, self.owner, seed) {
+                Some(plan) => {
+                    if self.owner.is_some() {
+                        self.counted.insert(batch);
+                    }
+                    DeviceGroupCaches::with_plan(&self.arch.dims, batch, apply, plan)
+                }
+                None => {
+                    self.pool.register_fresh();
+                    self.counted.insert(batch);
+                    DeviceGroupCaches::new(&self.arch.dims, batch, apply)
+                }
+            };
+            if apply == ApplyMode::Device {
+                r.set_donation(self.donation_for(batch));
+            }
+            self.residents.insert(batch, r);
+        }
+        self.registered.insert(batch);
+    }
+
+    /// Filter candidate batch classes to those the compiled artifacts
+    /// can serve for this configuration — e.g. the block-32 step
+    /// executables exist only at b = 8, and the ablation/adaptive
+    /// variants are single-class — so the router never offers a class
+    /// that would fail at its first step. Falls back to the primary
+    /// class when nothing else qualifies.
+    pub fn supported_classes(&self, classes: &[usize]) -> Vec<usize> {
+        let ok = |batch: usize| -> bool {
+            // variant-override and adaptive configs pick executables
+            // dynamically and are compiled for one class only
+            if self.cfg.adaptive || self.cfg.es_exe_override.is_some() {
+                return batch == self.batch;
+            }
+            if self.cfg.method == Method::Vanilla {
+                return self.arch.executables.contains_key(&format!("vanilla_b{batch}"));
+            }
+            if !self.arch.executables.contains_key(&format!("prefill_b{batch}")) {
+                return false;
+            }
+            let dual = step_exe_name(&self.cfg, StepPlan::DualStep, batch, 1.0);
+            if !self.arch.executables.contains_key(&dual) {
+                return false;
+            }
+            if self.cfg.method == Method::EsDllm {
+                let es = step_exe_name(&self.cfg, StepPlan::EsStep, batch, 1.0);
+                if !self.arch.executables.contains_key(&es) {
+                    return false;
+                }
+            }
+            true
+        };
+        let mut v: Vec<usize> = classes.iter().copied().filter(|&c| ok(c)).collect();
+        if v.is_empty() {
+            v.push(self.batch);
+        }
+        v
+    }
+
+    /// Which apply mode this backend selects for its primary batch class
+    /// (visible for tests and the perf benches).
     pub fn apply_mode(&self) -> ApplyMode {
-        self.resident.apply_mode()
+        self.residents
+            .get(&self.batch)
+            .map(|r| r.apply_mode())
+            .unwrap_or_else(|| self.apply_for(self.batch))
+    }
+
+    /// Cumulative ledger merged across every batch class's resident
+    /// layer (monotone, so per-tick `since` deltas stay valid).
+    fn merged_stats(&self) -> TransferStats {
+        let mut total = TransferStats::default();
+        for r in self.residents.values() {
+            total.merge(&r.stats);
+        }
+        total
     }
 
     /// Mirror the planner-ledger growth into the runtime's stats so
     /// `Runtime::take_stats` reports the logical transfer picture.
     fn flush_transfer(&mut self) {
-        let now = self.resident.stats;
+        let now = self.merged_stats();
         let delta = now.since(&self.last_flushed);
         self.rt.note_transfer(&delta);
         self.last_flushed = now;
@@ -664,6 +1057,19 @@ impl<'rt> PjrtBackend<'rt> {
     }
 }
 
+impl Drop for PjrtBackend<'_> {
+    fn drop(&mut self) {
+        // this worker's device buffers die with it: return the live
+        // count and drop the per-owner parked entries no thread can ever
+        // resume, so a worker that exits or panics mid-serve can never
+        // permanently inflate the shared `resident_chains` gauge
+        for &batch in &self.parked {
+            self.pool.evict(&self.cfg.arch, batch, self.owner, false);
+        }
+        self.pool.release(self.counted.len() as u64);
+    }
+}
+
 impl StepBackend for PjrtBackend<'_> {
     fn dims(&self) -> &Dims {
         &self.arch.dims
@@ -679,30 +1085,45 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        if self.resident.apply_mode() == ApplyMode::Device {
+        self.activate(caches);
+        let batch = caches.batch;
+        if self.residents[&batch].apply_mode() == ApplyMode::Device {
             let result = self.prefill_device_impl(tokens, slots, caches);
             if result.is_err() {
                 // the sync planner seeded/reused the chain for a run that
                 // never delivered; take the promise back wholesale
-                self.resident.invalidate(caches);
+                if let Some(r) = self.residents.get_mut(&batch) {
+                    r.invalidate(caches);
+                }
             }
             return result;
         }
         let d = self.arch.dims;
         // row-filtered staging: only the refreshed slots' rows are copied
         // into the persistent upload buffer (no whole-group tokens clone)
-        self.resident.stage_prefill_tokens(tokens, slots);
+        self.residents
+            .get_mut(&batch)
+            .expect("activated")
+            .stage_prefill_tokens(tokens, slots);
         // the vanilla baseline never reads caches: logits-only executable
         if self.cfg.method == Method::Vanilla {
-            let exe = self.arch.exe(&format!("vanilla_b{}", self.batch))?;
-            let args = [ExecArg::Host(self.resident.prefill_tokens.view())];
+            let exe = self.arch.exe(&format!("vanilla_b{batch}"))?;
+            // the compile pipeline slices the fallback logits to the gen
+            // region too (`logits_gen`); older artifact sets still ship
+            // the full context
+            let gen_sliced = exe.output_index("logits_gen").is_ok();
+            let args = [ExecArg::Host(self.residents[&batch].prefill_tokens.view())];
             let out = self.rt.run_args(&self.arch, exe, &self.cfg.checkpoint, &args)?;
             self.flush_transfer();
-            return caches.merge_full_logits_slots(&out[0], slots);
+            return if gen_sliced {
+                caches.merge_gen_logits_slots(&out[0], slots)
+            } else {
+                caches.merge_full_logits_slots(&out[0], slots)
+            };
         }
         let conf_before = self.cfg.adaptive.then(|| caches.conf.clone());
-        let exe = self.arch.exe(&format!("prefill_b{}", self.batch))?;
-        let args = [ExecArg::Host(self.resident.prefill_tokens.view())];
+        let exe = self.arch.exe(&format!("prefill_b{batch}"))?;
+        let args = [ExecArg::Host(self.residents[&batch].prefill_tokens.view())];
         let out = self.rt.run_args(&self.arch, exe, &self.cfg.checkpoint, &args)?;
         debug_assert_eq!(exe.kind, ExeKind::Prefill);
         caches.refresh_slots_from_prefill(&out, slots)?;
@@ -712,7 +1133,10 @@ impl StepBackend for PjrtBackend<'_> {
         }
         // under a device-apply transport the prefill outputs would refresh
         // the resident rows in place (no-op in Host mode)
-        self.resident.note_prefill_applied(caches, slots);
+        self.residents
+            .get_mut(&batch)
+            .expect("activated")
+            .note_prefill_applied(caches, slots);
         self.flush_transfer();
         // prompt refreshes move confidence the most, so they must feed the
         // adaptive-ratio signal too (the pre-refactor engine measured the
@@ -734,7 +1158,9 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        let result = if self.resident.apply_mode() == ApplyMode::Device {
+        self.activate(caches);
+        let batch = caches.batch;
+        let result = if self.residents[&batch].apply_mode() == ApplyMode::Device {
             self.step_device_impl(plan, tokens, block_start, block, slots, caches)
         } else {
             self.step_impl(plan, tokens, block_start, block, slots, caches)
@@ -744,17 +1170,52 @@ impl StepBackend for PjrtBackend<'_> {
             // outputs) for a run that never completed; forget the
             // resident state so a later tick on this scheduler cannot
             // execute against a stale device copy
-            self.resident.invalidate(caches);
+            if let Some(r) = self.residents.get_mut(&batch) {
+                r.invalidate(caches);
+            }
         }
         result
     }
 
     fn transfer_stats(&self) -> TransferStats {
-        self.resident.stats
+        self.merged_stats()
     }
 
     fn invalidate_resident(&mut self, caches: &mut GroupCaches) {
-        self.resident.invalidate(caches);
+        let batch = caches.batch;
+        if let Some(r) = self.residents.get_mut(&batch) {
+            r.invalidate(caches);
+            // the pooled entry (parked or live) dies with the chain: a
+            // later checkout must re-seed, never resume evicted state
+            self.registered.remove(&batch);
+            self.parked.remove(&batch);
+            let was_active = self.counted.remove(&batch);
+            self.pool.evict(&self.cfg.arch, batch, self.owner, was_active);
+        }
+    }
+
+    fn park_chain(&mut self, caches: &mut GroupCaches) {
+        let batch = caches.batch;
+        if let Some(r) = self.residents.get(&batch) {
+            if self.registered.remove(&batch) && self.parked.insert(batch) {
+                let was_active = self.counted.remove(&batch);
+                self.pool
+                    .park(&self.cfg.arch, batch, self.owner, r.park_plan(), was_active);
+            }
+        }
+    }
+
+    fn checkout_chain(&mut self, caches: &mut GroupCaches) -> Result<()> {
+        self.activate(caches);
+        Ok(())
+    }
+
+    fn note_chain_switch(&self) {
+        self.pool.record_switch();
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 }
 
@@ -769,13 +1230,15 @@ impl PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<()> {
         let d = self.arch.dims;
-        let exe_name = step_exe_name(&self.cfg, plan, self.batch, self.conf_drift);
+        let batch = caches.batch;
+        let exe_name = step_exe_name(&self.cfg, plan, batch, self.conf_drift);
         let exe = self.arch.exe(&exe_name)?;
+        let r = self.residents.get_mut(&batch).expect("activated");
 
         // current block tokens for the stepped rows, staged in the pooled
         // buffer (spectator rows keep stale contents; their outputs are
         // discarded by the row-filtered merges below)
-        self.resident.stage_step_tokens(tokens, block_start, block, slots);
+        r.stage_step_tokens(tokens, block_start, block, slots);
 
         let ind_layers: &[usize] = &exe.skip_layers;
         let all_layers: Vec<usize> = (0..d.n_layers).collect();
@@ -790,12 +1253,12 @@ impl PjrtBackend<'_> {
         // transport ships; shipped == 0 means the retained device buffer
         // is still valid for the reading slots and is reused outright
         let kv_sync: SyncOutcome = if self.cfg.sparse {
-            self.resident.sync_kv_sparse(caches, slots)?
+            r.sync_kv_sparse(caches, slots)?
         } else {
-            self.resident.sync_kv(caches, slots)
+            r.sync_kv(caches, slots)
         };
-        let ind_sync = self.resident.sync_ind(caches, &indicator, &ind_for_exe, slots)?;
-        let conf_sync = self.resident.sync_conf_masked(caches, slots);
+        let ind_sync = r.sync_ind(caches, &indicator, &ind_for_exe, slots)?;
+        let conf_sync = r.sync_conf_masked(caches, slots);
 
         let conf_before = self.cfg.adaptive.then(|| caches.conf.clone());
 
@@ -804,50 +1267,50 @@ impl PjrtBackend<'_> {
         // whole — the delta numbers stay honest in the ledger, and clean
         // inputs skip the upload entirely)
         if self.cfg.sparse {
-            if kv_sync.shipped > 0 || self.resident.handles.kv_sparse.is_none() {
+            if kv_sync.shipped > 0 || r.chain.handles.kv_sparse.is_none() {
                 let view = caches.kv_sparse_view()?;
                 let (buf, lit) = self.rt.upload_tensor_view(&view)?;
-                self.resident.handles.kv_sparse = Some(UploadHandle { buf, lit });
+                r.chain.handles.kv_sparse = Some(UploadHandle { buf, lit });
             }
-        } else if kv_sync.shipped > 0 || self.resident.handles.kv.is_none() {
+        } else if kv_sync.shipped > 0 || r.chain.handles.kv.is_none() {
             let view = caches.kv_view();
             let (buf, lit) = self.rt.upload_tensor_view(&view)?;
-            self.resident.handles.kv = Some(UploadHandle { buf, lit });
+            r.chain.handles.kv = Some(UploadHandle { buf, lit });
         }
         let ind_key_ok = matches!(
-            &self.resident.handles.ind,
+            &r.chain.handles.ind,
             Some((name, layers, _)) if name == &indicator && layers == &ind_for_exe
         );
         if ind_sync.shipped > 0 || !ind_key_ok {
             // stage the gather only when it is actually uploaded — a
             // reused resident buffer costs zero host work
-            caches.gather_ind_into(&indicator, &ind_for_exe, &mut self.resident.ind_gather)?;
-            let (buf, lit) = self.rt.upload_tensor_view(&self.resident.ind_gather.view())?;
-            self.resident.handles.ind =
+            caches.gather_ind_into(&indicator, &ind_for_exe, &mut r.ind_gather)?;
+            let (buf, lit) = self.rt.upload_tensor_view(&r.ind_gather.view())?;
+            r.chain.handles.ind =
                 Some((indicator.clone(), ind_for_exe.clone(), UploadHandle { buf, lit }));
         }
         let conf_key_ok = matches!(
-            &self.resident.handles.conf,
+            &r.chain.handles.conf,
             Some((for_slots, _)) if for_slots.as_slice() == slots
         );
         if conf_sync.shipped > 0 || !conf_key_ok {
-            caches.conf_masked_into(slots, &mut self.resident.conf_masked)?;
+            caches.conf_masked_into(slots, &mut r.conf_masked)?;
             let (buf, lit) =
-                self.rt.upload_tensor_view(&self.resident.conf_masked.view())?;
-            self.resident.handles.conf = Some((slots.to_vec(), UploadHandle { buf, lit }));
+                self.rt.upload_tensor_view(&r.conf_masked.view())?;
+            r.chain.handles.conf = Some((slots.to_vec(), UploadHandle { buf, lit }));
         }
 
         let start_t = HostTensor::scalar_i32(block_start as i32);
         let alpha_t = HostTensor::scalar_f32(self.cfg.alpha);
         let kv_buf = if self.cfg.sparse {
-            &self.resident.handles.kv_sparse.as_ref().expect("kv handle").buf
+            &r.chain.handles.kv_sparse.as_ref().expect("kv handle").buf
         } else {
-            &self.resident.handles.kv.as_ref().expect("kv handle").buf
+            &r.chain.handles.kv.as_ref().expect("kv handle").buf
         };
-        let ind_buf = &self.resident.handles.ind.as_ref().expect("ind handle").2.buf;
-        let conf_buf = &self.resident.handles.conf.as_ref().expect("conf handle").1.buf;
+        let ind_buf = &r.chain.handles.ind.as_ref().expect("ind handle").2.buf;
+        let conf_buf = &r.chain.handles.conf.as_ref().expect("conf handle").1.buf;
         let args = [
-            ExecArg::Host(self.resident.step_tokens.view()),
+            ExecArg::Host(r.step_tokens.view()),
             ExecArg::Host(start_t.view()),
             ExecArg::Device(kv_buf),
             ExecArg::Device(ind_buf),
@@ -871,8 +1334,7 @@ impl PjrtBackend<'_> {
             &out[3],
             slots,
         )?;
-        self.resident
-            .note_step_applied(caches, &indicator, self.cfg.sparse, block_start, block, slots);
+        r.note_step_applied(caches, &indicator, self.cfg.sparse, block_start, block, slots);
         self.flush_transfer();
         // adaptive-ratio signal: mean |Δconf| over the stepped rows' block
         if let Some(before) = conf_before {
@@ -897,33 +1359,35 @@ impl PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
+        let batch = caches.batch;
+        let r = self.residents.get_mut(&batch).expect("activated");
         // sync accounting shared with the sim planner (byte-exact parity)
-        self.resident.sync_prefill_device(caches, "h", tokens, slots)?;
-        if self.resident.handles.kv_chain.is_none() {
+        r.sync_prefill_device(caches, "h", tokens, slots)?;
+        if r.chain.handles.kv_chain.is_none() {
             let (buf, lit) = self.rt.upload_tensor_view(&caches.kv_view())?;
-            self.resident.handles.kv_chain = Some(UploadHandle { buf, lit });
+            r.chain.handles.kv_chain = Some(UploadHandle { buf, lit });
         }
-        if self.resident.handles.ind_chain.is_none() {
+        if r.chain.handles.ind_chain.is_none() {
             let (buf, lit) = self.rt.upload_tensor_view(&caches.ind_view("h")?)?;
-            self.resident.handles.ind_chain = Some(UploadHandle { buf, lit });
+            r.chain.handles.ind_chain = Some(UploadHandle { buf, lit });
         }
-        if self.resident.handles.conf_chain.is_none() {
+        if r.chain.handles.conf_chain.is_none() {
             let (buf, lit) = self.rt.upload_tensor_view(&caches.conf_view())?;
-            self.resident.handles.conf_chain = Some(UploadHandle { buf, lit });
+            r.chain.handles.conf_chain = Some(UploadHandle { buf, lit });
         }
-        let exe = self.arch.exe(&prefill_apply_exe_name(self.batch))?;
+        let exe = self.arch.exe(&prefill_apply_exe_name(batch))?;
         debug_assert_eq!(exe.kind, ExeKind::PrefillApply);
         let retain = exe.retain_flags();
-        let kv_buf = &self.resident.handles.kv_chain.as_ref().expect("just seeded").buf;
-        let ind_buf = &self.resident.handles.ind_chain.as_ref().expect("just seeded").buf;
-        let conf_buf = &self.resident.handles.conf_chain.as_ref().expect("just seeded").buf;
+        let kv_buf = &r.chain.handles.kv_chain.as_ref().expect("just seeded").buf;
+        let ind_buf = &r.chain.handles.ind_chain.as_ref().expect("just seeded").buf;
+        let conf_buf = &r.chain.handles.conf_chain.as_ref().expect("just seeded").buf;
         let args = [
-            ExecArg::Host(self.resident.prefill_tokens.view()),
+            ExecArg::Host(r.prefill_tokens.view()),
             ExecArg::Device(kv_buf),
             ExecArg::Device(ind_buf),
             ExecArg::Device(conf_buf),
             // refresh mask: which rows this prefill regenerates
-            ExecArg::Host(self.resident.occ_mask.view()),
+            ExecArg::Host(r.occ_mask.view()),
         ];
         let mut out =
             self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
@@ -935,19 +1399,19 @@ impl PjrtBackend<'_> {
         caches.merge_gen_logits_slots(out.host_at(logits_i, "logits_gen")?, slots)?;
         // chain the retained outputs; the previous buffers drop here, so
         // device memory stays bounded at one live copy per tensor
-        self.resident.handles.kv_chain = Some(UploadHandle {
+        r.chain.handles.kv_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("kv")?, "kv")?,
             lit: None,
         });
-        self.resident.handles.ind_chain = Some(UploadHandle {
+        r.chain.handles.ind_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("ind")?, "ind")?,
             lit: None,
         });
-        self.resident.handles.conf_chain = Some(UploadHandle {
+        r.chain.handles.conf_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("conf")?, "conf")?,
             lit: None,
         });
-        self.resident.note_prefill_applied(caches, slots);
+        r.note_prefill_applied(caches, slots);
         self.flush_transfer();
         Ok(())
     }
@@ -965,7 +1429,8 @@ impl PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        let exe_name = apply_step_exe_name(plan, self.cfg.block, self.batch);
+        let batch = caches.batch;
+        let exe_name = apply_step_exe_name(plan, self.cfg.block, batch);
         let exe = self.arch.exe(&exe_name)?;
         debug_assert_eq!(exe.kind, ExeKind::StepApply);
         // layers the equivalent Host-apply step would download in its
@@ -980,27 +1445,27 @@ impl PjrtBackend<'_> {
         let n_sel = exe.final_keep.unwrap_or(block);
         // shared planner sync (parity with the sim ledger): refuses to
         // run against an unseeded chain or host-divergent slot rows
-        self.resident
-            .sync_step_device(caches, "h", n_ind, n_sel, tokens, block_start, block, slots)?;
+        let r = self.residents.get_mut(&batch).expect("activated");
+        r.sync_step_device(caches, "h", n_ind, n_sel, tokens, block_start, block, slots)?;
         let chain_missing = || anyhow!("device-apply chain missing despite seeded planner");
         let kv_buf =
-            &self.resident.handles.kv_chain.as_ref().ok_or_else(chain_missing)?.buf;
+            &r.chain.handles.kv_chain.as_ref().ok_or_else(chain_missing)?.buf;
         let ind_buf =
-            &self.resident.handles.ind_chain.as_ref().ok_or_else(chain_missing)?.buf;
+            &r.chain.handles.ind_chain.as_ref().ok_or_else(chain_missing)?.buf;
         let conf_buf =
-            &self.resident.handles.conf_chain.as_ref().ok_or_else(chain_missing)?.buf;
+            &r.chain.handles.conf_chain.as_ref().ok_or_else(chain_missing)?.buf;
         let start_t = HostTensor::scalar_i32(block_start as i32);
         let alpha_t = HostTensor::scalar_f32(self.cfg.alpha);
         let retain = exe.retain_flags();
         let args = [
-            ExecArg::Host(self.resident.step_tokens.view()),
+            ExecArg::Host(r.step_tokens.view()),
             ExecArg::Host(start_t.view()),
             ExecArg::Device(kv_buf),
             ExecArg::Device(ind_buf),
             ExecArg::Device(conf_buf),
             // batch-bit occupancy mask: vacant rows can never win the
             // in-graph importance selection
-            ExecArg::Host(self.resident.occ_mask.view()),
+            ExecArg::Host(r.occ_mask.view()),
             ExecArg::Host(alpha_t.view()),
         ];
         let mut out =
@@ -1013,20 +1478,19 @@ impl PjrtBackend<'_> {
             out.host_at(pos_i, "pos")?,
             slots,
         )?;
-        self.resident.handles.kv_chain = Some(UploadHandle {
+        r.chain.handles.kv_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("kv")?, "kv")?,
             lit: None,
         });
-        self.resident.handles.ind_chain = Some(UploadHandle {
+        r.chain.handles.ind_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("ind")?, "ind")?,
             lit: None,
         });
-        self.resident.handles.conf_chain = Some(UploadHandle {
+        r.chain.handles.conf_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("conf")?, "conf")?,
             lit: None,
         });
-        self.resident
-            .note_step_applied(caches, "h", false, block_start, block, slots);
+        r.note_step_applied(caches, "h", false, block_start, block, slots);
         self.flush_transfer();
         Ok(())
     }
@@ -1203,6 +1667,91 @@ mod tests {
     // Resident-cache transfer acceptance (zero steady-state KV upload,
     // admission invalidation, ledger-vs-bitmap deltas) lives in
     // tests/transfer_accounting.rs to avoid duplicate maintenance.
+
+    fn sched_classes(classes: &[usize], block: usize) -> GroupScheduler<'static> {
+        let backend = SimBackend::new(SimCfg::default());
+        let cfg = SchedCfg {
+            method: Method::EsDllm,
+            block,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+        };
+        GroupScheduler::with_classes(Box::new(backend), classes, cfg).unwrap()
+    }
+
+    #[test]
+    fn select_class_picks_smallest_fit() {
+        let s = sched_classes(&[1, 8], 4);
+        assert_eq!(s.classes(), &[1, 8]);
+        assert_eq!(s.batch_class(), 8, "starts at full capacity");
+        assert_eq!(s.select_class(0), 1, "idle sizes down to the lone class");
+        assert_eq!(s.select_class(1), 1);
+        assert_eq!(s.select_class(2), 8);
+        assert_eq!(s.select_class(8), 8);
+        assert_eq!(s.select_class(20), 8, "overload caps at the largest class");
+    }
+
+    #[test]
+    fn switch_refused_mid_block_and_when_sequences_cannot_fit() {
+        let mut s = sched_classes(&[2, 8], 4);
+        assert!(s.maybe_switch_class(1).unwrap(), "idle switch is free");
+        assert_eq!(s.batch_class(), 2);
+        s.admit(input(1, "abcdefgh", SeqParams::default())).unwrap();
+        s.tick().unwrap();
+        // mid-block (i_b == 1): a switch would corrupt the trajectory
+        assert!(!s.at_block_boundary());
+        assert!(!s.maybe_switch_class(8).unwrap());
+        assert_eq!(s.batch_class(), 2);
+        // run to the block boundary: now the upshift goes through
+        while !s.at_block_boundary() {
+            s.tick().unwrap();
+        }
+        assert!(s.maybe_switch_class(7).unwrap());
+        assert_eq!(s.batch_class(), 8);
+        // 3 resident sequences keep the demand above the b=2 class, so
+        // no downshift can strand them
+        s.admit(input(2, "xy", SeqParams::default())).unwrap();
+        s.admit(input(3, "pq", SeqParams::default())).unwrap();
+        assert_eq!(s.active(), 3);
+        assert!(!s.maybe_switch_class(0).unwrap());
+        assert_eq!(s.batch_class(), 8);
+        let done = run_to_drain(&mut s);
+        assert_eq!(done.len(), 3);
+    }
+
+    #[test]
+    fn class_switch_mid_generation_is_trajectory_exact() {
+        // baseline: the same sequence with no switching
+        let mut solo = sched(1, Method::EsDllm, 4);
+        solo.admit(input(9, "abcdefg", SeqParams::default())).unwrap();
+        let base = run_to_drain(&mut solo);
+
+        // switched run: start on b1, upshift to b8 at the first block
+        // boundary (a grounding prefill re-grounds the migrated slot in
+        // the new class), then downshift back to b1 at the next
+        let mut s = sched_classes(&[1, 8], 4);
+        assert!(s.maybe_switch_class(1).unwrap());
+        s.admit(input(9, "abcdefg", SeqParams::default())).unwrap();
+        let mut done = Vec::new();
+        let mut flips = 0;
+        let mut guard = 0;
+        while s.active() > 0 {
+            if s.at_block_boundary() && s.active() > 0 {
+                let target_queue = if s.batch_class() == 1 { 7 } else { 0 };
+                if s.maybe_switch_class(target_queue).unwrap() {
+                    flips += 1;
+                }
+            }
+            done.extend(s.tick().unwrap());
+            guard += 1;
+            assert!(guard < 1000, "failed to drain");
+        }
+        assert!(flips >= 1, "the workload exercised a real switch");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].text, base[0].text, "switching must not change output");
+        assert_eq!(done[0].iterations, base[0].iterations);
+    }
 
     #[test]
     fn seq_complete_rules() {

@@ -28,14 +28,27 @@
 //! to model the stateless-executable fallback (outputs scattered
 //! host-side, dirty rows re-shipped as deltas) — the comparison the
 //! `perf_hotpath` Host-vs-Device apply section measures.
+//!
+//! Pooled residency: the sim keeps one resident layer per batch class
+//! and parks/resumes chain plans through a shared
+//! [`ResidencyPool`] under the shared owner `None` — no real device
+//! buffers exist, so a chain parked by one worker is genuinely
+//! resumable by any other. That makes the sim the reference model for
+//! true cross-worker device sharing (the PJRT backend, pinned by the
+//! non-`Send` constraint, shares only within a worker), while its
+//! planner calls stay byte-exact with the PJRT ledger.
 
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cache::{GroupCaches, StepPlan};
 use crate::manifest::Dims;
-use crate::runtime::resident::{ApplyMode, DeviceGroupCaches, TransferStats};
+use crate::runtime::resident::{
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, ResidencyPool, TransferStats,
+};
 use crate::tokenizer::Tokenizer;
 
 use super::StepBackend;
@@ -116,21 +129,103 @@ impl SimCfg {
 pub struct SimBackend {
     cfg: SimCfg,
     tok: Tokenizer,
-    /// resident-cache planner, created lazily once the group's batch
-    /// size is known (first backend call)
-    resident: Option<DeviceGroupCaches>,
+    /// shared residency pool. The sim parks its plans under the shared
+    /// owner `None`: there are no real device buffers, so a chain parked
+    /// by one worker is genuinely resumable by any other — the
+    /// true-sharing model the PJRT backend cannot offer behind the
+    /// non-`Send` constraint.
+    pool: Arc<ResidencyPool>,
+    /// resident-cache planner per batch class, created lazily when a
+    /// class first activates (the ledger is cumulative, so entries live
+    /// for the backend's lifetime)
+    residents: BTreeMap<usize, DeviceGroupCaches>,
+    /// classes whose chain is currently parked in the pool
+    parked: BTreeSet<usize>,
+    /// classes whose chain is live (activated and not parked/evicted)
+    registered: BTreeSet<usize>,
+    /// classes whose activation contributed to the pool's live-chain
+    /// count (register_fresh only, for the shared owner: clone-checkouts
+    /// leave the counted entry in the parked registry)
+    counted: BTreeSet<usize>,
 }
 
+/// Pool key namespace for the simulated architecture.
+const SIM_ARCH: &str = "sim";
+
 impl SimBackend {
+    /// Backend with a private residency pool (single-worker tests and
+    /// benches — behavior identical to the pre-pool sim).
     pub fn new(cfg: SimCfg) -> SimBackend {
-        SimBackend { cfg, tok: Tokenizer::builtin(), resident: None }
+        Self::with_pool(cfg, ResidencyPool::new())
     }
 
-    fn ensure_resident(&mut self, batch: usize) {
-        if self.resident.is_none() {
-            self.resident =
-                Some(DeviceGroupCaches::new(&self.cfg.dims, batch, self.cfg.apply));
+    /// Backend sharing `pool` with other workers (the router wires every
+    /// worker to one pool).
+    pub fn with_pool(cfg: SimCfg, pool: Arc<ResidencyPool>) -> SimBackend {
+        SimBackend {
+            cfg,
+            tok: Tokenizer::builtin(),
+            pool,
+            residents: BTreeMap::new(),
+            parked: BTreeSet::new(),
+            registered: BTreeSet::new(),
+            counted: BTreeSet::new(),
         }
+    }
+
+    /// Activate the resident layer for `caches`' batch class — the same
+    /// state machine as the PJRT backend's activation (resume parked /
+    /// check out shared / build fresh), against the shared owner `None`.
+    fn activate(&mut self, caches: &mut GroupCaches) {
+        let batch = caches.batch;
+        let seed = chain_seed_bytes(&self.cfg.dims, batch);
+        if self.parked.remove(&batch) {
+            match self.pool.checkout(SIM_ARCH, batch, None, seed) {
+                Some(plan) => {
+                    self.residents
+                        .get_mut(&batch)
+                        .expect("parked implies a resident entry")
+                        .restore_plan(plan);
+                }
+                None => {
+                    // the shared entry was evicted while this worker had
+                    // the class parked: the device chain is gone, so
+                    // re-seed from scratch
+                    if let Some(r) = self.residents.get_mut(&batch) {
+                        r.invalidate(caches);
+                    }
+                    self.pool.register_fresh();
+                    self.counted.insert(batch);
+                }
+            }
+            self.registered.insert(batch);
+            return;
+        }
+        if self.registered.contains(&batch) {
+            return;
+        }
+        if self.residents.contains_key(&batch) {
+            // evicted earlier and now reactivated: a fresh chain
+            self.pool.register_fresh();
+            self.counted.insert(batch);
+        } else {
+            let r = match self.pool.checkout(SIM_ARCH, batch, None, seed) {
+                // another worker parked this class: the shared device
+                // still holds the chain (the clone leaves the counted
+                // entry in the parked registry), so this worker starts
+                // seeded without adding to the live count
+                Some(plan) => {
+                    DeviceGroupCaches::with_plan(&self.cfg.dims, batch, self.cfg.apply, plan)
+                }
+                None => {
+                    self.pool.register_fresh();
+                    self.counted.insert(batch);
+                    DeviceGroupCaches::new(&self.cfg.dims, batch, self.cfg.apply)
+                }
+            };
+            self.residents.insert(batch, r);
+        }
+        self.registered.insert(batch);
     }
 
     /// Intended token for gen position `j` of the row whose prompt is
@@ -170,6 +265,16 @@ impl SimBackend {
     }
 }
 
+impl Drop for SimBackend {
+    fn drop(&mut self) {
+        // return this worker's live-chain count on exit/unwind (the
+        // shared PARKED entries stay: other workers still use the
+        // modeled device chains) so a dead worker never inflates the
+        // `resident_chains` gauge
+        self.pool.release(self.counted.len() as u64);
+    }
+}
+
 impl StepBackend for SimBackend {
     fn dims(&self) -> &Dims {
         &self.cfg.dims
@@ -188,8 +293,9 @@ impl StepBackend for SimBackend {
         if !self.cfg.prefill_cost.is_zero() {
             std::thread::sleep(self.cfg.prefill_cost);
         }
-        self.ensure_resident(caches.batch);
-        if let Some(r) = self.resident.as_mut() {
+        self.activate(caches);
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
             if r.apply_mode() == ApplyMode::Device {
                 // the same composite sync the PJRT device-apply backend
                 // runs: tokens + refresh mask ship, kv/ind/conf seed
@@ -203,7 +309,8 @@ impl StepBackend for SimBackend {
         for &s in slots {
             self.write_positions(tokens, s, 0, gen, caches);
         }
-        if let Some(r) = self.resident.as_mut() {
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
             if r.apply_mode() == ApplyMode::Device {
                 // prefill outputs (KV + indicators + in-graph conf)
                 // refresh the resident rows of the requested slots in
@@ -241,9 +348,10 @@ impl StepBackend for SimBackend {
         if !cost.is_zero() {
             std::thread::sleep(cost);
         }
-        self.ensure_resident(caches.batch);
+        self.activate(caches);
         let n_layers = self.cfg.dims.n_layers;
-        if let Some(r) = self.resident.as_mut() {
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
             if r.apply_mode() == ApplyMode::Device {
                 // the PJRT device-apply step sync: tokens + occupancy
                 // mask ship; kv/ind/conf chain retained outputs (donated
@@ -274,7 +382,8 @@ impl StepBackend for SimBackend {
         for &s in slots {
             self.write_positions(tokens, s, lo, d.gen_len, caches);
         }
-        if let Some(r) = self.resident.as_mut() {
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
             if r.apply_mode() == ApplyMode::Device {
                 r.note_step_applied(caches, "h", false, block_start, block, slots);
             } else {
@@ -293,13 +402,47 @@ impl StepBackend for SimBackend {
     }
 
     fn transfer_stats(&self) -> TransferStats {
-        self.resident.as_ref().map(|r| r.stats).unwrap_or_default()
+        let mut total = TransferStats::default();
+        for r in self.residents.values() {
+            total.merge(&r.stats);
+        }
+        total
     }
 
     fn invalidate_resident(&mut self, caches: &mut GroupCaches) {
-        if let Some(r) = self.resident.as_mut() {
+        let batch = caches.batch;
+        if let Some(r) = self.residents.get_mut(&batch) {
             r.invalidate(caches);
+            // drop the pooled entry too: eviction must be visible to
+            // every worker sharing the device, not just this one
+            self.registered.remove(&batch);
+            self.parked.remove(&batch);
+            let was_active = self.counted.remove(&batch);
+            self.pool.evict(SIM_ARCH, batch, None, was_active);
         }
+    }
+
+    fn park_chain(&mut self, caches: &mut GroupCaches) {
+        let batch = caches.batch;
+        if let Some(r) = self.residents.get(&batch) {
+            if self.registered.remove(&batch) && self.parked.insert(batch) {
+                let was_active = self.counted.remove(&batch);
+                self.pool.park(SIM_ARCH, batch, None, r.park_plan(), was_active);
+            }
+        }
+    }
+
+    fn checkout_chain(&mut self, caches: &mut GroupCaches) -> Result<()> {
+        self.activate(caches);
+        Ok(())
+    }
+
+    fn note_chain_switch(&self) {
+        self.pool.record_switch();
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 }
 

@@ -64,6 +64,33 @@ fn golden_manifest_parses_device_apply_kinds() {
     assert!(dual.retained.is_empty());
     assert_eq!(dual.retain_flags(), vec![false; 4]);
     assert!(dual.alias_pairs(1).is_empty());
+
+    // the Host-fallback full forwards are gen-sliced too: `vanilla_b*`
+    // (and `prefill_b*`) emit `logits_gen` [B, gen, V], and the old
+    // full-context `logits` name is gone so a stale runtime fails
+    // loudly at output lookup instead of mis-slicing rows
+    let vanilla = a.exe("vanilla_b8").unwrap();
+    assert_eq!(vanilla.kind, ExeKind::Prefill);
+    let lg = vanilla.output_index("logits_gen").unwrap();
+    assert_eq!(lg, 0);
+    assert_eq!(vanilla.outputs[lg].shape, vec![8, 32, 64], "[B, gen, V]");
+    assert!(vanilla.output_index("logits").is_err());
+    assert!(vanilla.retained.is_empty(), "stateless: nothing chained");
+
+    // and the cache-refreshing prefill keeps its output ORDER (logits
+    // first, then kv / ind_h..ind_v / attn_mass — what
+    // refresh_slots_from_prefill indexes positionally) with the logit
+    // output gen-sliced: [B, gen, V], distinguishable from [B, ctx, V]
+    // by its second dimension, which is the compat sniff the host merge
+    // relies on
+    let pf = a.exe("prefill_b8").unwrap();
+    assert_eq!(pf.kind, ExeKind::Prefill);
+    assert_eq!(pf.output_index("logits_gen").unwrap(), 0);
+    assert_eq!(pf.outputs[0].shape, vec![8, 32, 64], "[B, gen, V] not ctx");
+    assert_eq!(pf.output_index("kv").unwrap(), 1);
+    assert_eq!(pf.output_index("attn_mass").unwrap(), 6);
+    assert_eq!(pf.outputs.len(), 7);
+    assert!(pf.output_index("logits").is_err());
 }
 
 fn load_patched(patch: impl Fn(&str) -> String, subdir: &str) -> anyhow::Error {

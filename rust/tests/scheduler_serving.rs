@@ -18,7 +18,7 @@ struct Stack {
     server: esdllm::httpd::Server,
 }
 
-fn start(slots: usize, queue_cap: usize, sim: SimCfg) -> Stack {
+fn start_workers(slots: usize, queue_cap: usize, sim: SimCfg, workers: usize) -> Stack {
     let mut cfg = RouterCfg::new(
         EngineCfg::new("llada-nano", Method::EsDllm),
         std::path::PathBuf::from("/nonexistent"),
@@ -27,9 +27,23 @@ fn start(slots: usize, queue_cap: usize, sim: SimCfg) -> Stack {
     cfg.batcher = BatcherCfg { max_batch: slots, flush_ms: 2 };
     cfg.queue_cap = queue_cap;
     cfg.mode = SchedMode::Continuous;
+    cfg.workers = workers;
     let router = Router::start(cfg);
     let server = serve(&ServeCfg::default(), router.clone()).unwrap();
     Stack { router, server }
+}
+
+fn start(slots: usize, queue_cap: usize, sim: SimCfg) -> Stack {
+    start_workers(slots, queue_cap, sim, 1)
+}
+
+/// Value of one `name value` line in the Prometheus exposition.
+fn metric_value(m: &str, name: &str) -> u64 {
+    let prefix = format!("{name} ");
+    m.lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} missing in:\n{m}"))
 }
 
 fn post_generate(client: &mut Client, body: &str) -> (u16, Json) {
@@ -115,10 +129,80 @@ fn mid_flight_admission_and_early_retirement() {
     assert!(m.contains("esdllm_admissions_total 2"), "{m}");
     assert!(m.contains("esdllm_retirements_total 2"), "{m}");
     assert!(m.contains("esdllm_active_slots 0"), "{m}");
-    // resident-cache accounting is exposed: exactly one full-KV upload
-    // (the residency seed) across both requests, and bytes saved
-    assert!(m.contains("esdllm_full_kv_uploads 1\n"), "{m}");
+    // resident-cache accounting is exposed: at most one full-KV upload
+    // per batch class — the residency seeds — never one per request
+    // (the lone request ran on the b=1 class; the mid-flight admission
+    // upshifted to the full class at a block boundary)
+    let seeds = metric_value(&m, "esdllm_full_kv_uploads");
+    assert!((1..=2).contains(&seeds), "one seed per touched class: {m}");
     assert!(!m.contains("esdllm_upload_bytes_saved 0\n"), "{m}");
+    stack.router.shutdown();
+}
+
+#[test]
+fn two_workers_serve_mid_flight_against_the_shared_pool() {
+    // Two workers, two slots each, visible per-tick cost. A long
+    // request pins one worker; shorts submitted mid-flight are absorbed
+    // (by either worker) and retire first — and both workers publish
+    // into the one shared residency pool.
+    let sim = SimCfg::default().with_costs(4000, 2500, 2000);
+    let stack = start_workers(2, 32, sim, 2);
+    let addr = stack.server.addr;
+
+    let long_prompt = "a+b*c-d/e+f*g-h+i*j=k"; // 21 chars → 3 blocks
+    let long_handle = std::thread::spawn(move || {
+        let mut client = Client::new(addr);
+        let body = json::obj(vec![("prompt", json::s(long_prompt))]).to_string();
+        let (st, j) = post_generate(&mut client, &body);
+        (st, j, Instant::now())
+    });
+    std::thread::sleep(Duration::from_millis(25));
+
+    // a small mid-flight burst of shorts
+    let shorts: Vec<_> = ["xy", "pq", "ab"]
+        .iter()
+        .map(|p| {
+            let prompt = p.to_string();
+            std::thread::spawn(move || {
+                let mut client = Client::new(addr);
+                let body = json::obj(vec![("prompt", json::s(&prompt))]).to_string();
+                let (st, j) = post_generate(&mut client, &body);
+                (st, j, prompt, Instant::now())
+            })
+        })
+        .collect();
+    let mut first_short: Option<Instant> = None;
+    for h in shorts {
+        let (st, j, prompt, done) = h.join().unwrap();
+        assert_eq!(st, 200, "{j:?}");
+        assert_eq!(j.get("text").as_str(), Some(prompt.as_str()), "exact echo");
+        first_short = Some(first_short.map_or(done, |f| f.min(done)));
+    }
+    let (st_long, j_long, long_done) = long_handle.join().unwrap();
+    assert_eq!(st_long, 200, "{j_long:?}");
+    assert_eq!(j_long.get("text").as_str(), Some(long_prompt));
+    assert!(
+        first_short.unwrap() < long_done,
+        "mid-flight shorts must start retiring while the long request is \
+         still decoding"
+    );
+
+    let mut client = Client::new(addr);
+    let (st, m) = client.get("/metrics").unwrap();
+    assert_eq!(st, 200);
+    let m = String::from_utf8_lossy(&m);
+    // both workers registered their capacity and drained cleanly
+    assert!(m.contains("esdllm_slots_total 4"), "{m}");
+    assert!(m.contains("esdllm_admissions_total 4"), "{m}");
+    assert!(m.contains("esdllm_retirements_total 4"), "{m}");
+    assert!(m.contains("esdllm_active_slots 0"), "{m}");
+    // the shared pool: every seeded chain is registered in one ledger —
+    // bounded by workers × classes, and the seeds match the chains that
+    // actually went live (never one per request)
+    let chains = metric_value(&m, "esdllm_resident_chains");
+    assert!((1..=4).contains(&chains), "pool-registered chains: {m}");
+    let seeds = metric_value(&m, "esdllm_full_kv_uploads");
+    assert!((1..=4).contains(&seeds), "at most one seed per (worker, class): {m}");
     stack.router.shutdown();
 }
 

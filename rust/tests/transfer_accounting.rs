@@ -18,22 +18,32 @@ use std::time::Instant;
 use esdllm::cache::{GroupCaches, RefreshPolicy, StepPlan};
 use esdllm::engine::Method;
 use esdllm::manifest::Dims;
-use esdllm::runtime::resident::{ApplyMode, DeviceGroupCaches, TransferKind, TransferStats};
+use esdllm::runtime::resident::{
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, ResidencyPool, TransferKind, TransferStats,
+};
 use esdllm::runtime::tensor::HostTensor;
 use esdllm::sampler::SamplerCfg;
 use esdllm::scheduler::sim::{SimBackend, SimCfg};
 use esdllm::scheduler::{GroupScheduler, SchedCfg, SeqInput, SeqParams};
 
-fn sched_with(n_slots: usize, block: usize, sim: SimCfg) -> GroupScheduler<'static> {
-    let backend = SimBackend::new(sim);
-    let cfg = SchedCfg {
+fn sched_cfg(block: usize) -> SchedCfg {
+    SchedCfg {
         method: Method::EsDllm,
         block,
         refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
         sampler: SamplerCfg::llada(),
         seed: 0,
-    };
-    GroupScheduler::new(Box::new(backend), n_slots, cfg).unwrap()
+    }
+}
+
+fn sched_with(n_slots: usize, block: usize, sim: SimCfg) -> GroupScheduler<'static> {
+    let backend = SimBackend::new(sim);
+    GroupScheduler::new(Box::new(backend), n_slots, sched_cfg(block)).unwrap()
+}
+
+fn sched_classes(classes: &[usize], block: usize) -> GroupScheduler<'static> {
+    let backend = SimBackend::new(SimCfg::default());
+    GroupScheduler::with_classes(Box::new(backend), classes, sched_cfg(block)).unwrap()
 }
 
 fn sched(n_slots: usize, block: usize) -> GroupScheduler<'static> {
@@ -400,6 +410,218 @@ fn record_classifies_kinds() {
     assert_eq!(st.kv_upload_bytes, 10);
     assert_eq!(st.ind_upload_bytes, 0);
     assert_eq!(st.conf_upload_bytes, 2);
+}
+
+/// The pooled-residency acceptance criterion: a b1 ↔ b8 batch-class
+/// switch mid-trace reuses the parked chain with ZERO full-KV reseed —
+/// each class seeds exactly once for the scheduler's whole lifetime,
+/// re-activations are checkout hits (`chain_rebuilds_avoided > 0`,
+/// `reseed_bytes_saved` = the seed bytes a cold rebuild would have
+/// shipped), and slots dirtied by admissions after the checkout
+/// re-ground on device without uploading KV.
+#[test]
+fn batch_class_switch_reuses_parked_chain_without_full_reseed() {
+    let d = SimCfg::default().dims;
+    let mut s = sched_classes(&[1, 8], 4);
+    assert_eq!(s.batch_class(), 8, "starts at full capacity");
+
+    // a lone request sizes the class down to b=1 before admission
+    assert!(s.maybe_switch_class(1).unwrap());
+    assert_eq!(s.batch_class(), 1);
+    s.admit(input(1, "abc")).unwrap();
+    drain(&mut s);
+    assert_eq!(s.transfer_stats().full_kv_uploads, 1, "b1 chain seeds once");
+
+    // a burst upshifts to b=8: the b1 chain parks, b8 seeds cold
+    assert!(s.maybe_switch_class(8).unwrap());
+    assert_eq!(s.batch_class(), 8);
+    s.admit(input(2, "abc")).unwrap();
+    drain(&mut s);
+    assert_eq!(
+        s.transfer_stats().full_kv_uploads,
+        2,
+        "each class pays exactly one seed, ever"
+    );
+
+    // back to b=1 mid-trace: the parked chain is checked out — NO third
+    // seed, and the admission-dirtied slot re-grounds on device
+    assert!(s.maybe_switch_class(1).unwrap());
+    let slot = s.admit(input(3, "xy")).unwrap();
+    assert!(
+        s.group_caches().dirty.kv.count_slot(slot) > 0,
+        "admission dirtied the slot while the chain sat parked"
+    );
+    let before = s.transfer_stats();
+    drain(&mut s);
+    let delta = s.transfer_stats().since(&before);
+    assert_eq!(delta.full_kv_uploads, 0, "zero full-KV reseed on checkout");
+    assert_eq!(delta.kv_upload_bytes, 0, "the dirty slot re-grounds on device");
+
+    let ps = s.pool_stats();
+    assert_eq!(ps.chain_switches, 3, "initial sizing + up + down");
+    assert_eq!(ps.chain_rebuilds_avoided, 1, "the b1 re-activation was a hit");
+    assert_eq!(ps.reseed_bytes_saved, chain_seed_bytes(&d, 1));
+    assert_eq!(ps.resident_chains, 2, "both class chains stay resident");
+
+    // and the b8 chain resumes the same way
+    assert!(s.maybe_switch_class(8).unwrap());
+    s.admit(input(4, "pq")).unwrap();
+    drain(&mut s);
+    let ps = s.pool_stats();
+    assert_eq!(ps.chain_rebuilds_avoided, 2);
+    assert_eq!(ps.reseed_bytes_saved, chain_seed_bytes(&d, 1) + chain_seed_bytes(&d, 8));
+    assert_eq!(s.transfer_stats().full_kv_uploads, 2, "still two seeds total");
+}
+
+/// Byte-exact parity across a batch-class switch: replaying the exact
+/// planner + pool call sequence `PjrtBackend` makes (activate / park /
+/// checkout per class, composite syncs per plan) must produce BOTH the
+/// identical `TransferStats` ledger and the identical `PoolStats`
+/// ledger as the sim backend run through the scheduler on the same
+/// b1 → b8 → b1 workload.
+#[test]
+fn pool_ledger_parity_sim_vs_pjrt_planner_across_class_switch() {
+    // sim side: three 3-char-or-shorter prompts, one per phase; each
+    // retires after exactly 4 iterations of block 0 (EOS guard) with
+    // plans [Prefill, Es, Dual, Es] under block_period 2
+    let mut s = sched_classes(&[1, 8], 4);
+    s.maybe_switch_class(1).unwrap();
+    s.admit(input(1, "abc")).unwrap();
+    drain(&mut s);
+    s.maybe_switch_class(8).unwrap();
+    s.admit(input(2, "abc")).unwrap();
+    drain(&mut s);
+    s.maybe_switch_class(0).unwrap();
+    s.admit(input(3, "xy")).unwrap();
+    drain(&mut s);
+    assert_eq!(s.ticks, 12, "three 4-tick generations");
+    let sim_stats = s.transfer_stats();
+    let sim_pool = s.pool_stats();
+
+    // PJRT planner side: the same schedule through the planner calls
+    // prefill_device_impl / step_device_impl make, against the same
+    // pool API under a PJRT-style owner id
+    let d = SimCfg::default().dims;
+    let pool = ResidencyPool::new();
+    let owner = Some(7u64);
+    let plans = [StepPlan::EsStep, StepPlan::DualStep, StepPlan::EsStep];
+    let run_gen = |r: &mut DeviceGroupCaches, c: &mut GroupCaches, tokens: &[i32]| {
+        c.reset_slot(0); // admission
+        r.sync_prefill_device(c, "h", tokens, &[0]).unwrap();
+        r.note_prefill_applied(c, &[0]);
+        for plan in plans {
+            let n_sel = SimCfg::n_sel(plan, 4);
+            r.sync_step_device(c, "h", d.n_layers, n_sel, tokens, d.prompt_len, 4, &[0])
+                .unwrap();
+            r.note_step_applied(c, "h", false, d.prompt_len, 4, &[0]);
+        }
+    };
+
+    // switch #1: cold b1 activation
+    assert!(pool.checkout("llada-nano", 1, owner, chain_seed_bytes(&d, 1)).is_none());
+    pool.register_fresh();
+    pool.record_switch();
+    let mut c1 = GroupCaches::new(&d, 1);
+    let mut r1 = DeviceGroupCaches::new(&d, 1, ApplyMode::Device);
+    let t1 = vec![0i32; d.ctx];
+    run_gen(&mut r1, &mut c1, &t1);
+
+    // switch #2: park b1, cold b8 activation
+    pool.park("llada-nano", 1, owner, r1.park_plan(), true);
+    assert!(pool.checkout("llada-nano", 8, owner, chain_seed_bytes(&d, 8)).is_none());
+    pool.register_fresh();
+    pool.record_switch();
+    let mut c8 = GroupCaches::new(&d, 8);
+    let mut r8 = DeviceGroupCaches::new(&d, 8, ApplyMode::Device);
+    let t8 = vec![0i32; 8 * d.ctx];
+    run_gen(&mut r8, &mut c8, &t8);
+
+    // switch #3: park b8, checkout HIT on the parked b1 chain
+    pool.park("llada-nano", 8, owner, r8.park_plan(), true);
+    let plan = pool
+        .checkout("llada-nano", 1, owner, chain_seed_bytes(&d, 1))
+        .expect("parked b1 chain resumes");
+    pool.record_switch();
+    r1.restore_plan(plan);
+    run_gen(&mut r1, &mut c1, &t1);
+
+    let mut pjrt = TransferStats::default();
+    pjrt.merge(&r1.stats);
+    pjrt.merge(&r8.stats);
+    assert_eq!(pjrt, sim_stats, "transfer ledgers byte-exact across the switch");
+    assert_eq!(pool.stats(), sim_pool, "pool ledgers byte-exact too");
+}
+
+/// Pool lifecycle: `evict_all` (and `invalidate_resident` behind it)
+/// must evict the POOLED entries as well as the live chain — a
+/// post-eviction class switch finds nothing to resume and re-seeds.
+#[test]
+fn evict_all_evicts_pooled_entries_not_just_the_live_chain() {
+    let mut s = sched_classes(&[1, 8], 4);
+    s.maybe_switch_class(1).unwrap();
+    s.admit(input(1, "abc")).unwrap();
+    drain(&mut s); // b1 chain seeded
+    s.maybe_switch_class(8).unwrap(); // b1 parks in the pool, b8 live
+    assert_eq!(s.pool_stats().resident_chains, 2);
+    assert_eq!(s.transfer_stats().full_kv_uploads, 1);
+
+    s.evict_all();
+    assert_eq!(
+        s.pool_stats().resident_chains,
+        0,
+        "eviction removes live AND pooled chains"
+    );
+
+    // switching back must NOT find the evicted b1 chain
+    assert!(s.maybe_switch_class(1).unwrap());
+    s.admit(input(9, "xy")).unwrap();
+    drain(&mut s);
+    assert_eq!(
+        s.transfer_stats().full_kv_uploads,
+        2,
+        "post-eviction re-admission re-seeds"
+    );
+    assert_eq!(
+        s.pool_stats().chain_rebuilds_avoided,
+        0,
+        "no chain reuse across an eviction"
+    );
+}
+
+/// Park → dirty → checkout, at the planner level (Host-apply mode, so
+/// the re-upload is visible as bytes): only the slots dirtied while the
+/// chain sat parked re-ship on resume — a delta, never a full reseed.
+#[test]
+fn checkout_reships_only_slots_dirtied_while_parked() {
+    let d = Dims {
+        vocab: 8, d_model: 4, n_layers: 2, n_heads: 2, n_kv_heads: 1,
+        d_ff: 8, head_dim: 2, prompt_len: 4, gen_len: 4, ctx: 8,
+    };
+    let pool = ResidencyPool::new();
+    let mut c = GroupCaches::new(&d, 2);
+    let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Host);
+    pool.register_fresh();
+    r.sync_kv(&mut c, &[0, 1]); // seed
+    assert_eq!(r.stats.full_kv_uploads, 1);
+
+    pool.park("a", 2, None, r.park_plan(), true);
+    // while parked: an admission resets slot 1, dirtying its rows
+    c.reset_slot(1);
+
+    let plan = pool.checkout("a", 2, None, chain_seed_bytes(&d, 2)).unwrap();
+    r.restore_plan(plan);
+    let out = r.sync_kv(&mut c, &[0, 1]);
+    assert_eq!(
+        out.shipped,
+        (d.ctx * c.kv_row_bytes()) as u64,
+        "exactly the parked-dirty slot's rows re-ship"
+    );
+    assert!(out.shipped < out.full, "a delta, not a full reseed");
+    assert_eq!(r.stats.full_kv_uploads, 1, "no second seed");
+    assert_eq!(c.dirty.kv.count(), 0, "resume clears what it ships");
+    let ps = pool.stats();
+    assert_eq!(ps.chain_rebuilds_avoided, 1);
+    assert_eq!(ps.reseed_bytes_saved, chain_seed_bytes(&d, 2));
 }
 
 /// The donation acceptance criterion: with the input-output alias
