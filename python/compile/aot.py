@@ -284,6 +284,47 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             },
         )
 
+    def step_applyk_variant(name, batch, block, skip, k):
+        skip_layers = sorted(l for l, _ in skip)
+        ind_layers = skip_layers if skip else list(range(cfg.n_layers))
+
+        def fn(params, x_tok, block_start, kv, ind, conf, occ, alpha,
+               threshold, _skip=skip, _ind_layers=ind_layers,
+               _block=block, _k=k):
+            return M.step_k(cfg, params, x_tok, block_start, kv, ind,
+                            conf, occ, alpha, threshold, k=_k,
+                            block=_block, skip=_skip, mask_id=tasks.MASK,
+                            indicator="h", ind_layers=_ind_layers)
+
+        b.lower(
+            name,
+            fn,
+            [
+                sds((batch, block), jnp.int32),        # x_tok
+                sds((), jnp.int32),                    # block_start
+                kv_s(batch, ctx),                      # kv cache (chained)
+                ind_s(batch, L),                       # full ind (chained)
+                sds((batch, gen), jnp.float32),        # conf (chained)
+                sds((batch,), jnp.int32),              # occupancy mask
+                sds((), jnp.float32),                  # alpha
+                sds((), jnp.float32),                  # threshold
+            ],
+            {
+                "kind": "step_apply_k", "batch": batch, "block": block,
+                "k": k,
+                "skip": [[l, r] for l, r in skip],
+                "skip_layers": skip_layers,
+                "ind_layers": ind_layers,
+                "final_keep": final_keep(block, skip),
+                "indicator": "h", "kv_len": ctx,
+                "retained_outputs": CHAINED,
+                "input_names": ["x_tok", "block_start", "kv", "ind",
+                                "conf", "occ", "alpha", "threshold"],
+                "output_names": ["logits", "pos", "kv", "ind", "conf",
+                                 "committed"],
+            },
+        )
+
     default_skip = SKIP_CONFIGS["default"]
     sparse_len = SPARSE_KEEP_PROMPT + gen
 
@@ -296,6 +337,15 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             step_apply_variant(f"dual_apply_blk{blk}_b{batch}", batch, blk, [])
             step_apply_variant(f"es_apply_blk{blk}_b{batch}", batch, blk,
                                default_skip)
+    # fused k-step ES variants: k consecutive early-skip iterations
+    # unrolled in-graph, greedy/threshold unmask between inner
+    # iterations; one dispatch replaces k (the scheduler floors its
+    # fused depth to one of these compiled ks)
+    for kk in (2, 4, 8):
+        for blk in blk_cfgs:
+            for batch in ((1, 8) if blk == 8 else (8,)):
+                step_applyk_variant(f"es_applyk{kk}_blk{blk}_b{batch}",
+                                    batch, blk, default_skip, kk)
     for batch in (1, 8):
         prefill_apply_variant(batch)
 

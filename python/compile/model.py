@@ -482,6 +482,63 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
             kv_block.astype(CACHE_DT), ind_block.astype(CACHE_DT))
 
 
+def _commit_unmask(x_tok, logits, pos, block_start, occ_row, threshold,
+                   mask_id):
+    """One in-graph greedy/threshold unmask decision over the surviving
+    rows: always commit the highest-confidence masked row, plus every
+    masked row whose confidence clears ``threshold`` (so ``threshold >
+    1`` means exactly one commit per iteration — low-confidence greedy).
+    Returns ``(x_tok_new, n_committed i32 [B])``; vacant rows commit
+    nothing."""
+    _, kf, _ = logits.shape
+    prob = jax.nn.softmax(logits, axis=-1).max(-1)            # [B, kf]
+    tok_hat = jnp.argmax(logits.at[:, :, mask_id].set(-jnp.inf),
+                         axis=-1).astype(jnp.int32)           # [B, kf]
+    rel = (pos - block_start).astype(jnp.int32)               # [B, kf]
+    cur = jnp.take_along_axis(x_tok, rel, axis=1)             # [B, kf]
+    is_masked = (cur == mask_id) & occ_row[:, None]
+    cand = jnp.where(is_masked, prob, -jnp.inf)
+    best = jnp.argmax(cand, axis=1)                           # [B]
+    commit = (is_masked & (prob >= threshold)) | (
+        (jnp.arange(kf)[None] == best[:, None]) & is_masked)
+    new_tok = jnp.where(commit, tok_hat, cur)
+    x_new = _scatter_rows(x_tok[:, :, None], rel,
+                          new_tok[:, :, None])[..., 0]
+    return x_new, commit.sum(axis=1).astype(jnp.int32)
+
+
+def step_k(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
+           ind_cache, conf, occ, alpha, threshold, *, k, block, skip,
+           mask_id, indicator="h", ind_layers=None, use_pallas=True,
+           kv_tile=64):
+    """`k` diffusion iterations unrolled in-graph: each inner iteration
+    runs `step(apply=True)` over the chained kv/ind/conf state, then
+    commits tokens with [`_commit_unmask`] — greedy (highest-confidence
+    masked row) plus any row clearing `threshold` — and feeds the
+    advanced block tokens straight into the next iteration. The host
+    round-trip is paid once for the whole run: token rows and the
+    occupancy mask ship on uplink, and only the **final** iteration's
+    selected logit rows + positions come back, plus a per-slot
+    committed-token count (the host mirror replays the k decisions from
+    its own state; the count is the cross-check). Scheduling contract:
+    the caller must guarantee the block cannot complete before the final
+    inner iteration (the Rust scheduler caps k at the masked count), so
+    fused runs are trajectory-exact against k single steps."""
+    occ_row = occ.astype(jnp.bool_)
+    committed = jnp.zeros((x_tok.shape[0],), jnp.int32)
+    logits = pos = None
+    for _ in range(k):
+        logits, pos, kv_cache, ind_cache, conf = step(
+            cfg, params, x_tok, block_start, kv_cache, ind_cache, conf,
+            alpha, block=block, skip=skip, indicator=indicator,
+            ind_layers=ind_layers, kv_len=cfg.ctx, use_pallas=use_pallas,
+            kv_tile=kv_tile, apply=True, occ=occ)
+        x_tok, n = _commit_unmask(x_tok, logits, pos, block_start,
+                                  occ_row, threshold, mask_id)
+        committed = committed + n
+    return logits, pos, kv_cache, ind_cache, conf, committed
+
+
 # ---------------------------------------------------------------------------
 # observation forward (Figures 1, 2, 5–8): full forward + probe tensors
 # ---------------------------------------------------------------------------

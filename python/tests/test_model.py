@@ -257,6 +257,59 @@ def test_step_apply_passes_vacant_rows_through(setup):
     np.testing.assert_allclose(ia[:, 1:], ih[:, 1:])
 
 
+def test_step_k_chains_commits_between_inner_iterations(setup):
+    """A fused k=2 run must equal: one apply-step, a greedy commit of the
+    highest-confidence masked row (numpy replay of the in-graph rule),
+    then a second apply-step on the advanced tokens — and must report
+    exactly one committed token per inner iteration per occupied row
+    when the threshold disables parallel commits."""
+    cfg, params, toks, logits, kv, ind, mass = setup
+    B = toks.shape[0]
+    conf = jnp.asarray(np.random.RandomState(11).rand(B, cfg.gen_len),
+                       jnp.float32)
+    skip = [(1, 0.5), (2, 0.5)]
+    sl = [1, 2]
+    MASK = 1
+    x0 = jnp.full((B, 8), MASK, jnp.int32)
+    occ = jnp.asarray([1] + [0] * (B - 1), jnp.int32)
+    fused = M.step_k(cfg, params, x0, jnp.int32(cfg.prompt_len), kv,
+                     ind["h"], conf, occ, jnp.float32(0.5),
+                     jnp.float32(2.0), k=2, block=8, skip=skip,
+                     mask_id=MASK, ind_layers=sl, use_pallas=False)
+    # threshold 2.0 > any softmax prob → greedy only: one commit per
+    # inner iteration for the occupied row, none for the vacant row
+    np.testing.assert_array_equal(np.asarray(fused[5]),
+                                  [2] + [0] * (B - 1))
+    # manual replay of iteration 1 + the commit rule in numpy
+    s1 = M.step(cfg, params, x0, jnp.int32(cfg.prompt_len), kv, ind["h"],
+                conf, jnp.float32(0.5), block=8, skip=skip, ind_layers=sl,
+                use_pallas=False, apply=True, occ=occ)
+    lg, pos = np.asarray(s1[0]), np.asarray(s1[1])
+    prob = np.asarray(jax.nn.softmax(s1[0], axis=-1).max(-1))
+    lg_banned = lg.copy()
+    lg_banned[:, :, MASK] = -np.inf
+    tok_hat = lg_banned.argmax(-1)
+    x1 = np.asarray(x0).copy()
+    j = int(prob[0].argmax())            # all block rows start masked
+    x1[0, pos[0, j] - cfg.prompt_len] = tok_hat[0, j]
+    s2 = M.step(cfg, params, jnp.asarray(x1), jnp.int32(cfg.prompt_len),
+                s1[2], s1[3], s1[4], jnp.float32(0.5), block=8, skip=skip,
+                ind_layers=sl, use_pallas=False, apply=True, occ=occ)
+    # the fused downlink is the final iteration's logits/pos, and the
+    # chained caches equal the replayed second step's
+    np.testing.assert_array_equal(np.asarray(fused[1]), np.asarray(s2[1]))
+    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(s2[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(fused[2].astype(jnp.float32)),
+        np.asarray(s2[2].astype(jnp.float32)))
+    np.testing.assert_allclose(
+        np.asarray(fused[3].astype(jnp.float32)),
+        np.asarray(s2[3].astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(fused[4]), np.asarray(s2[4]),
+                               rtol=1e-5)
+
+
 def test_prefill_apply_refreshes_only_masked_rows(setup):
     cfg, params, toks, logits, kv, ind, mass = setup
     B = toks.shape[0]

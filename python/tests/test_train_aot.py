@@ -146,6 +146,26 @@ def test_apply_variants_lower_to_parseable_hlo():
     )
     assert " topk(" not in text
 
+    def step_k_fn(*flat):
+        p = M.params_from_flat(cfg, flat[:len(params)])
+        x_tok, bs, kv, ind, conf, occ, alpha, thr = flat[len(params):]
+        return M.step_k(cfg, p, x_tok, bs, kv, ind, conf, occ, alpha,
+                        thr, k=2, block=blk, skip=[(1, 0.5)],
+                        mask_id=tasks.MASK, ind_layers=[1])
+
+    text = lower_to_hlo_text(
+        step_k_fn, *params,
+        jax.ShapeDtypeStruct((B, blk), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((L, 2, B, Hkv, cfg.ctx, hd), jnp.bfloat16),
+        jax.ShapeDtypeStruct((L, B, cfg.gen_len, cfg.d_model), jnp.bfloat16),
+        jax.ShapeDtypeStruct((B, cfg.gen_len), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    assert " topk(" not in text
+
     def prefill_fn(*flat):
         p = M.params_from_flat(cfg, flat[:len(params)])
         toks, kv, ind, conf, refresh = flat[len(params):]

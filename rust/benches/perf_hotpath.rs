@@ -11,6 +11,10 @@
 //!     `logits_gen` slice + selected step rows vs a `[B, ctx, V]`-every-
 //!     run downlink), artifact-free with a ≥60% reduction acceptance
 //!     gate, emitted as `BENCH_logit_slice.json`,
+//!   * the fused k-step dispatch sweep (k ∈ {1, 2, 4, 8} on the same
+//!     workload; identical tokens, fewer device dispatches), artifact-
+//!     free with a ≥2× dispatch-reduction gate at k = 4, emitted as
+//!     `BENCH_kstep.json`,
 //!   * per-executable latency (prefill / dual / es, b1 / b8) with the
 //!     upload/execute/download breakdown from runtime counters (needs
 //!     compiled artifacts; skipped gracefully without them),
@@ -57,6 +61,8 @@ fn transfer_section() -> anyhow::Result<()> {
         refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
         sampler: SamplerCfg::llada(),
         seed: 0,
+        k: 1,
+        hysteresis: None,
     };
     let mut sched = GroupScheduler::new(Box::new(backend), batch, cfg)?;
     let t0 = Instant::now();
@@ -168,6 +174,8 @@ fn run_apply_mode(apply: ApplyMode) -> anyhow::Result<(TransferStats, u64, u64)>
         refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
         sampler: SamplerCfg::llada(),
         seed: 0,
+        k: 1,
+        hysteresis: None,
     };
     let mut sched = GroupScheduler::new(Box::new(SimBackend::new(sim_cfg)), batch, cfg)?;
     let t0 = Instant::now();
@@ -337,11 +345,130 @@ fn logit_slice_section(dev: &TransferStats, runs: u64, ticks: u64) -> anyhow::Re
     Ok(())
 }
 
+/// One fused-depth run for the kstep sweep: drain the mixed workload at
+/// fused depth `k` over the sim backend with a pure steady-state decode
+/// cadence (one grounding prefill per block, every other iteration an
+/// ES step — the loop the fused executables unroll). Returns
+/// (dispatches, fused dispatches, decoded tokens, iterations, ticks).
+fn run_fused_depth(k: usize) -> anyhow::Result<(u64, u64, u64, u64, u64)> {
+    let batch = 8;
+    let d = bench_dims();
+    let sim_cfg = SimCfg { dims: d, ..SimCfg::default() };
+    let cfg = SchedCfg {
+        method: Method::EsDllm,
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 0, block_period: 0 },
+        sampler: SamplerCfg::llada(),
+        seed: 0,
+        k,
+        hysteresis: None,
+    };
+    let mut sched = GroupScheduler::new(Box::new(SimBackend::new(sim_cfg)), batch, cfg)?;
+    let t0 = Instant::now();
+    for i in 0..batch as u64 {
+        sched.admit(SeqInput {
+            id: i,
+            prompt: ["sort(9,8,7)=789", "1+2", "a|b", "0-1", "9*8", "x&y", "7*7", "3,4"]
+                [i as usize % 8]
+                .to_string(),
+            params: SeqParams::default(),
+            submitted: t0,
+        })?;
+    }
+    let (mut tokens, mut iterations) = (0u64, 0u64);
+    let mut guard = 0;
+    while sched.active() > 0 {
+        for f in sched.tick()? {
+            tokens += f.tokens as u64;
+            iterations += f.iterations as u64;
+        }
+        guard += 1;
+        assert!(guard < 10_000, "scheduler failed to drain");
+    }
+    let dispatches = (sched.n_prefill + sched.n_dual + sched.n_es) as u64;
+    Ok((dispatches, sched.n_fused as u64, tokens, iterations, sched.ticks as u64))
+}
+
+/// Fused k-step dispatch sweep: the identical mixed workload decoded at
+/// fused depths k ∈ {1, 2, 4, 8}. Every depth must decode the same
+/// tokens over the same iteration count (the fused loop is
+/// trajectory-exact); what changes is how many device dispatches (and
+/// host round-trips) that trajectory costs. Artifact-free; emits
+/// `BENCH_kstep.json`. Acceptance: k = 4 needs at most half the
+/// dispatches of k = 1.
+fn kstep_section() -> anyhow::Result<()> {
+    let ks = [1usize, 2, 4, 8];
+    let mut rows = Vec::new();
+    for &k in &ks {
+        rows.push((k, run_fused_depth(k)?));
+    }
+    let (_, (d1, _, tok1, iter1, _)) = rows[0];
+    for &(k, (_, _, tokens, iterations, _)) in &rows[1..] {
+        anyhow::ensure!(
+            tokens == tok1 && iterations == iter1,
+            "fused depth {k} diverged from k=1: {tokens}/{iterations} tokens/iters \
+             vs {tok1}/{iter1} — the fused loop must be trajectory-exact"
+        );
+    }
+
+    let mut table = Table::new(
+        "perf_hotpath: fused k-step dispatch sweep (sim, b8, ES steady state)",
+        &["k", "dispatches", "fused", "iters/dispatch", "tokens", "iterations", "ticks"],
+    );
+    for &(k, (dispatches, fused, tokens, iterations, ticks)) in &rows {
+        table.row(&[
+            format!("{k}"),
+            format!("{dispatches}"),
+            format!("{fused}"),
+            format!("{:.2}", iterations as f64 / dispatches.max(1) as f64),
+            format!("{tokens}"),
+            format!("{iterations}"),
+            format!("{ticks}"),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/results/perf_kstep.csv")?;
+
+    let d4 = rows.iter().find(|r| r.0 == 4).unwrap().1 .0;
+    let ratio = d1 as f64 / d4.max(1) as f64;
+    let ok = ratio >= 2.0;
+    println!(
+        "fused k-step: k=4 decodes the same {tok1} tokens in {d4} dispatches vs \
+         {d1} at k=1 ({ratio:.2}x fewer host round-trips); acceptance \
+         (>= 2x dispatch reduction at k=4): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let mut json = String::from("{\n  \"bench\": \"perf_hotpath_kstep\",\n  \"batch\": 8,\n  \"block\": 8,\n  \"depths\": [\n");
+    for (i, &(k, (dispatches, fused, tokens, iterations, ticks))) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"k\": {k}, \"dispatches\": {dispatches}, \"fused_dispatches\": {fused}, \
+             \"tokens\": {tokens}, \"iterations\": {iterations}, \"ticks\": {ticks}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"dispatch_reduction_k4\": {ratio:.3},\n  \
+         \"acceptance_min_reduction\": 2.0,\n  \"acceptance_pass\": {ok}\n}}\n"
+    ));
+    std::fs::write("artifacts/results/BENCH_kstep.json", json)?;
+    println!("wrote artifacts/results/BENCH_kstep.json");
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "kstep acceptance failed: k=4 used {d4} dispatches vs {d1} at k=1 \
+             ({ratio:.2}x < 2x reduction)"
+        ));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     transfer_section()?;
     let (dev, dev_runs, dev_ticks) = device_apply_section()?;
     logit_slice_section(&dev, dev_runs, dev_ticks)?;
+    kstep_section()?;
 
     let rt = match Runtime::load_default() {
         Ok(rt) => rt,
@@ -399,7 +526,7 @@ fn main() -> anyhow::Result<()> {
                 }
                 // the device-apply variants chain retained outputs and
                 // are measured through the scheduler, not standalone
-                ExeKind::PrefillApply | ExeKind::StepApply => continue,
+                ExeKind::PrefillApply | ExeKind::StepApply | ExeKind::StepApplyK => continue,
             };
             // warm compile + measure
             rt.run(&arch, &exe, "instruct", &inputs)?;

@@ -90,6 +90,11 @@ struct ModeResult {
     down_kb_per_tick: f64,
     down_saved_kb_per_tick: f64,
     donated_execs: u64,
+    /// dispatch-cadence accounting: device executions (prefill + dual +
+    /// es) per scheduler tick, and the fused k-step amortization
+    dispatches_per_tick: f64,
+    fused_execs: u64,
+    avg_iters_per_dispatch: f64,
     /// pooled-residency accounting (shared ResidencyPool ledger)
     chain_switches: u64,
     chain_rebuilds_avoided: u64,
@@ -149,6 +154,15 @@ fn run_mode(mode: SchedMode, label: &'static str, n: usize) -> ModeResult {
         down_kb_per_tick: m.d2h_bytes_shipped.get() as f64 / 1e3 / ticks as f64,
         down_saved_kb_per_tick: m.d2h_bytes_saved.get() as f64 / 1e3 / ticks as f64,
         donated_execs: m.donated_execs.get(),
+        dispatches_per_tick: (m.prefill_steps.get() + m.dual_steps.get() + m.es_steps.get())
+            as f64
+            / ticks as f64,
+        fused_execs: m.fused_execs.get(),
+        avg_iters_per_dispatch: if m.fused_execs.get() == 0 {
+            1.0
+        } else {
+            m.inner_iters_fused.get() as f64 / m.fused_execs.get() as f64
+        },
         chain_switches: m.chain_switches.get(),
         chain_rebuilds_avoided: m.chain_rebuilds_avoided.get(),
         reseed_kb_saved: m.reseed_bytes_saved.get() as f64 / 1e3,
@@ -278,6 +292,7 @@ fn main() -> anyhow::Result<()> {
             "TPS/busy-slot", "p50 s", "p90 s", "up KB/tick", "saved KB/tick",
             "full-KV ups", "d2h-avoid KB/tick", "chain reuse/tick",
             "ingraph-conf", "down KB/tick", "down-saved KB/tick", "donated",
+            "disp/tick",
         ],
     );
     for r in [&rtc, &cont] {
@@ -301,6 +316,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", r.down_kb_per_tick),
             format!("{:.2}", r.down_saved_kb_per_tick),
             format!("{}", r.donated_execs),
+            format!("{:.2}", r.dispatches_per_tick),
         ]);
     }
     table.print();
@@ -332,6 +348,13 @@ fn main() -> anyhow::Result<()> {
          vs the full-context [B, ctx, V] download; {} executions donated \
          their chained cache inputs in place",
         cont.down_kb_per_tick, cont.down_saved_kb_per_tick, cont.donated_execs,
+    );
+    println!(
+        "dispatch cadence: continuous issues {:.2} device dispatches/tick \
+         ({} fused k-step executions, {:.2} iterations per dispatch; this \
+         trace's block-period-2 refresh leaves no consecutive-ES runs to \
+         fuse — see perf_hotpath's kstep section for the fused-depth sweep)",
+        cont.dispatches_per_tick, cont.fused_execs, cont.avg_iters_per_dispatch,
     );
     println!(
         "pooled residency: {} batch-class switches, {} chain rebuilds \

@@ -76,6 +76,15 @@ pub struct EngineCfg {
     /// when it is moving. Requires the ratio-variant executables
     /// (compiled for llada-nano at block 32).
     pub adaptive: bool,
+    /// fused k-step dispatch depth: when > 1 (and the config is
+    /// device-apply eligible with a greedy sampler), runs of consecutive
+    /// ES iterations are dispatched as one `step_apply_k` execution that
+    /// unrolls up to `fused_k` diffusion iterations in-graph. 1 = one
+    /// execution per iteration (the unfused baseline). EOS retirement
+    /// and block-boundary admission are host-side checks, so they happen
+    /// every fused run rather than every iteration — larger k amortizes
+    /// more dispatch latency but coarsens that cadence.
+    pub fused_k: usize,
     pub seed: u64,
 }
 
@@ -97,6 +106,7 @@ impl EngineCfg {
             indicator: "h".to_string(),
             es_exe_override: None,
             adaptive: false,
+            fused_k: 1,
             seed: 0,
         }
     }
@@ -179,6 +189,17 @@ pub fn prefill_apply_exe_name(batch: usize) -> String {
     format!("prefill_apply_b{batch}")
 }
 
+/// Name of the fused k-step executable (`step_apply_k` kind) that runs
+/// `k` ES iterations in one device execution. The compile pipeline
+/// emits k ∈ {2, 4, 8} alongside the single-step apply variants.
+pub fn fused_step_exe_name(k: usize, block: usize, batch: usize) -> String {
+    format!("es_applyk{k}_blk{block}_b{batch}")
+}
+
+/// The unroll depths the compile pipeline emits fused variants for,
+/// largest first (the backend picks the deepest one that fits a run).
+pub const FUSED_KS: [usize; 3] = [8, 4, 2];
+
 /// Whether this configuration can run the device-apply decode path:
 /// the default dense ES/DualCache pipeline with the "h" indicator. The
 /// fallbacks (sparse attention, indicator ablations, adaptive skip
@@ -229,11 +250,20 @@ impl<'rt> Engine<'rt> {
         // the device-apply chain variants, when this config is eligible
         // and the artifacts carry them (older artifact sets may not)
         if device_apply_eligible(&self.cfg) {
-            for name in [
+            let mut apply_names = vec![
                 prefill_apply_exe_name(batch),
                 apply_step_exe_name(StepPlan::DualStep, self.cfg.block, batch),
                 apply_step_exe_name(StepPlan::EsStep, self.cfg.block, batch),
-            ] {
+            ];
+            if self.cfg.fused_k > 1 {
+                apply_names.extend(
+                    FUSED_KS
+                        .iter()
+                        .filter(|&&k| k <= self.cfg.fused_k)
+                        .map(|&k| fused_step_exe_name(k, self.cfg.block, batch)),
+                );
+            }
+            for name in apply_names {
                 if let Ok(exe) = arch.exe(&name) {
                     self.rt.executable(&arch, exe)?;
                 }

@@ -37,6 +37,10 @@ fn usage() -> String {
        --bind <addr:port>               listen address (default 127.0.0.1:8311)\n\
        --flush-ms <n>                   batcher flush window (default 20)\n\
        --sched <continuous|rtc>         scheduling mode (default continuous)\n\
+       --fused-k <n>                    fused k-step dispatch depth (default 1;\n\
+                                        runs of ES iterations execute as one\n\
+                                        device dispatch, floored to a compiled\n\
+                                        depth in {2,4,8})\n\
      generate:\n\
        --prompt <text>                  prompt to complete\n\
      eval:\n\
@@ -65,6 +69,7 @@ fn main() -> Result<()> {
             .with_parallel(t.parse().map_err(|_| anyhow!("bad --parallel"))?);
     }
     engine_cfg.sparse = args.bool("sparse");
+    engine_cfg.fused_k = args.usize("fused-k", 1);
 
     match cmd.as_str() {
         "serve" => {

@@ -62,6 +62,12 @@ pub enum ExeKind {
     /// device-apply decode step: dynamic-update-slice cache scatter +
     /// in-graph confidence, occupancy mask as a batch-bit input
     StepApply,
+    /// fused k-step decode: k diffusion iterations unrolled in one
+    /// execution, with greedy/threshold unmasking between inner
+    /// iterations in-graph; downlinks only the final iteration's logit
+    /// rows plus a per-slot committed-count vector. Carries a required
+    /// `k` field (the unroll depth, >= 2).
+    StepApplyK,
 }
 
 /// A device-retained output signature: the named output is produced on
@@ -93,6 +99,8 @@ pub struct ExeSpec {
     pub final_keep: Option<usize>,
     pub indicator: Option<String>,
     pub kv_len: usize,
+    /// unroll depth for `step_apply_k` executables (`None` otherwise)
+    pub k: Option<usize>,
     /// non-parameter inputs, in call order after the parameter list
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
@@ -256,15 +264,38 @@ impl Manifest {
                 Some("observe") => ExeKind::Observe,
                 Some("prefill_apply") => ExeKind::PrefillApply,
                 Some("step_apply") => ExeKind::StepApply,
+                Some("step_apply_k") => ExeKind::StepApplyK,
                 other => {
                     return Err(anyhow!(
                         "executable {exe_name}: unknown `kind` {other:?} \
                          (expected one of prefill | step | observe | \
-                         prefill_apply | step_apply — is this manifest \
-                         newer than the runtime?)"
+                         prefill_apply | step_apply | step_apply_k — is \
+                         this manifest newer than the runtime?)"
                     ))
                 }
             };
+            let k = e.get("k").as_usize();
+            if kind == ExeKind::StepApplyK {
+                match k {
+                    Some(k) if k >= 2 => {}
+                    Some(k) => {
+                        return Err(anyhow!(
+                            "executable {exe_name}: `k` = {k} is not a \
+                             valid unroll depth for kind step_apply_k \
+                             (need k >= 2; a depth-1 loop is just \
+                             step_apply)"
+                        ))
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "executable {exe_name}: kind step_apply_k \
+                             requires a `k` field (the in-graph unroll \
+                             depth) — is this manifest older than the \
+                             runtime?"
+                        ))
+                    }
+                }
+            }
             let all_inputs = tensor_sigs(e.get("inputs"))?;
             if all_inputs.len() < n_params {
                 return Err(anyhow!("{exe_name}: fewer inputs than params"));
@@ -345,6 +376,7 @@ impl Manifest {
                 final_keep: e.get("final_keep").as_usize(),
                 indicator: e.get("indicator").as_str().map(|s| s.to_string()),
                 kv_len: req_usize(e, "kv_len")?,
+                k,
                 inputs: all_inputs[n_params..].to_vec(),
                 outputs: tensor_sigs(e.get("outputs"))?,
                 output_names,

@@ -194,6 +194,14 @@ pub struct Metrics {
     /// device-apply executions whose chained inputs were donated in
     /// place by the compile-time input-output alias config
     pub donated_execs: Counter,
+    // -- fused k-step dispatches --
+    /// device executions that ran a k-iteration in-graph diffusion loop
+    pub fused_execs: Counter,
+    /// total inner iterations those fused executions advanced
+    pub inner_iters_fused: Counter,
+    /// host→device dispatches (and their round-trips) the fused runs
+    /// eliminated vs issuing every iteration as its own execution
+    pub dispatches_avoided: Counter,
     // -- pooled device residency (mirrored from the shared
     //    ResidencyPool's cumulative ledger each scheduler tick; gauges
     //    because several workers publish the same pool-wide values) --
@@ -283,6 +291,9 @@ impl Metrics {
             ("esdllm_d2h_bytes_shipped", self.d2h_bytes_shipped.get()),
             ("esdllm_d2h_bytes_saved", self.d2h_bytes_saved.get()),
             ("esdllm_donated_execs", self.donated_execs.get()),
+            ("esdllm_fused_execs", self.fused_execs.get()),
+            ("esdllm_inner_iters_fused", self.inner_iters_fused.get()),
+            ("esdllm_dispatches_avoided", self.dispatches_avoided.get()),
             ("esdllm_resident_chains", self.resident_chains.get()),
             ("esdllm_chain_switches", self.chain_switches.get()),
             ("esdllm_chain_rebuilds_avoided", self.chain_rebuilds_avoided.get()),
@@ -321,6 +332,15 @@ impl Metrics {
             "esdllm_d2h_bytes_shipped_per_tick {:.1}\n",
             self.d2h_bytes_shipped.get() as f64 / ticks as f64
         ));
+        // mean iterations a fused dispatch advanced; 1.0 when nothing
+        // fused (every dispatch is a single iteration)
+        let fused = self.fused_execs.get();
+        let avg_iters = if fused == 0 {
+            1.0
+        } else {
+            self.inner_iters_fused.get() as f64 / fused as f64
+        };
+        out.push_str(&format!("esdllm_avg_iters_per_dispatch {avg_iters:.3}\n"));
         out.push_str(&format!("esdllm_slot_occupancy {:.4}\n", self.slot_occupancy()));
         out.push_str(&format!(
             "esdllm_tps_per_busy_slot {:.3}\n",
@@ -362,6 +382,9 @@ mod tests {
         m.d2h_bytes_shipped.add(512);
         m.d2h_bytes_saved.add(768);
         m.donated_execs.add(2);
+        m.fused_execs.add(2);
+        m.inner_iters_fused.add(7);
+        m.dispatches_avoided.add(5);
         m.resident_chains.set(2);
         m.chain_switches.set(3);
         m.chain_rebuilds_avoided.set(1);
@@ -380,6 +403,10 @@ mod tests {
         assert!(text.contains("esdllm_d2h_bytes_shipped 512"));
         assert!(text.contains("esdllm_d2h_bytes_saved 768"));
         assert!(text.contains("esdllm_donated_execs 2"));
+        assert!(text.contains("esdllm_fused_execs 2"));
+        assert!(text.contains("esdllm_inner_iters_fused 7"));
+        assert!(text.contains("esdllm_dispatches_avoided 5"));
+        assert!(text.contains("esdllm_avg_iters_per_dispatch 3.500"));
         assert!(text.contains("esdllm_resident_chains 2"));
         assert!(text.contains("esdllm_chain_switches 3"));
         assert!(text.contains("esdllm_chain_rebuilds_avoided 1"));

@@ -415,6 +415,9 @@ fn tick_once(
     metrics.d2h_bytes_shipped.add(tr.d2h_bytes_shipped);
     metrics.d2h_bytes_saved.add(tr.d2h_bytes_saved);
     metrics.donated_execs.add(tr.donated_execs);
+    metrics.fused_execs.add(tr.fused_execs);
+    metrics.inner_iters_fused.add(tr.inner_iters_fused);
+    metrics.dispatches_avoided.add(tr.dispatches_avoided);
     // pooled-residency ledger: the pool is shared by every worker, so
     // its cumulative values are mirrored (set), not delta-added
     let ps: PoolStats = sched.pool_stats();
@@ -625,6 +628,39 @@ mod tests {
         // the pooled-residency gauges are pumped per tick: at least the
         // class serving this request is a live resident chain
         assert!(router.metrics.resident_chains.get() >= 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn fused_dispatch_counters_reach_the_metrics() {
+        // fused_k > 1 turns runs of consecutive ES iterations into
+        // k-step dispatches; the ledger's fused counters must flow
+        // through tick_once into the serving metrics, and the decoded
+        // text must stay exactly what the unfused path produces
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.engine.fused_k = 4;
+        cfg.backend = WorkerBackend::Sim(SimCfg::default());
+        cfg.batcher = BatcherCfg { max_batch: 2, flush_ms: 2 };
+        cfg.queue_cap = 16;
+        cfg.mode = SchedMode::Continuous;
+        let router = Router::start(cfg);
+        let slot = router.submit("1+2=".into(), SeqParams::default()).unwrap();
+        let reply = slot.wait().expect("sim generation succeeds");
+        assert_eq!(reply.text, "1+2=", "fused decode is trajectory-exact");
+        let m = &router.metrics;
+        assert!(m.fused_execs.get() > 0, "fused dispatches ran");
+        assert!(
+            m.inner_iters_fused.get() >= 2 * m.fused_execs.get(),
+            "each fused dispatch advanced at least 2 iterations"
+        );
+        assert_eq!(
+            m.dispatches_avoided.get(),
+            m.inner_iters_fused.get() - m.fused_execs.get(),
+            "every fused iteration past the first avoided one dispatch"
+        );
         router.shutdown();
     }
 

@@ -48,8 +48,10 @@
 //!     (when the apply executables are compiled) and the deterministic
 //!     sim backend run this mode through the same
 //!     [`DeviceGroupCaches::sync_prefill_device`] /
-//!     [`DeviceGroupCaches::sync_step_device`] planner, which is how the
-//!     two ledgers are kept byte-exact and asserted without artifacts;
+//!     [`DeviceGroupCaches::sync_step_device`] /
+//!     [`DeviceGroupCaches::sync_step_device_k`] planner, which is how
+//!     the two ledgers are kept byte-exact and asserted without
+//!     artifacts;
 //!   * [`ApplyMode::Host`] is the stateless-executable fallback (sparse
 //!     attention, indicator ablations, adaptive skip ratios — variants
 //!     without compiled apply executables): outputs land in the host
@@ -73,6 +75,28 @@
 //! [`DeviceGroupCaches::invalidate`] plus the scheduler's eviction path
 //! guarantee a failed transfer or an evicted group can never seed a new
 //! chain from the stale mirror without a full re-ground.
+//!
+//! # Fused k-step dispatches
+//!
+//! A tick is no longer necessarily one execution. When the scheduler's
+//! `k` knob is set and the refresh plan gives a run of consecutive
+//! ES steps, the backends dispatch one `step_apply_k` executable that
+//! unrolls k diffusion iterations in-graph: greedy/threshold unmasking
+//! runs *between* inner iterations on device (occupancy-masked argmax
+//! commit, confidence recomputed in-graph each iteration), the retained
+//! kv/ind/conf chain threads straight through the unrolled body, and
+//! only the **final** iteration's selected logit rows plus a per-slot
+//! committed-count vector come down the bus. The uplink is the same as
+//! a single step — block tokens and the occupancy mask, shipped once
+//! for the whole run — so a fused dispatch amortizes k − 1 host
+//! round-trips away entirely (dInfer's loop-unrolling observation: at
+//! small batch the dispatch bubble, not FLOPs, floors TPS).
+//! [`DeviceGroupCaches::sync_step_device_k`] is the one copy of the
+//! fused accounting (`fused_execs`, `inner_iters_fused`,
+//! `dispatches_avoided`, k× `ingraph_conf_steps` and avoided block
+//! downloads), shared by the sim and PJRT backends so the fused ledgers
+//! stay byte-exact. Chain semantics are unchanged: one retained output
+//! set per dispatch, donated in place exactly like single-step.
 //!
 //! # Pooled residency
 //!
@@ -199,6 +223,16 @@ pub struct TransferStats {
     /// (one live device copy per chained tensor, no transient second
     /// allocation)
     pub donated_execs: u64,
+    /// fused k-step executions (`step_apply_k`): dispatches that ran
+    /// k > 1 diffusion iterations in one device execution, unmasking
+    /// in-graph between inner iterations
+    pub fused_execs: u64,
+    /// inner diffusion iterations performed inside those fused
+    /// executions (Σ k over fused dispatches)
+    pub inner_iters_fused: u64,
+    /// device dispatches the fused executions amortized away vs the
+    /// one-execution-per-iteration path (k − 1 per fused run)
+    pub dispatches_avoided: u64,
 }
 
 impl TransferStats {
@@ -244,6 +278,9 @@ impl TransferStats {
         self.d2h_bytes_shipped += d.d2h_bytes_shipped;
         self.d2h_bytes_saved += d.d2h_bytes_saved;
         self.donated_execs += d.donated_execs;
+        self.fused_execs += d.fused_execs;
+        self.inner_iters_fused += d.inner_iters_fused;
+        self.dispatches_avoided += d.dispatches_avoided;
     }
 
     /// Field-wise delta against an earlier snapshot of the same ledger.
@@ -282,6 +319,13 @@ impl TransferStats {
                 .d2h_bytes_saved
                 .saturating_sub(earlier.d2h_bytes_saved),
             donated_execs: self.donated_execs.saturating_sub(earlier.donated_execs),
+            fused_execs: self.fused_execs.saturating_sub(earlier.fused_execs),
+            inner_iters_fused: self
+                .inner_iters_fused
+                .saturating_sub(earlier.inner_iters_fused),
+            dispatches_avoided: self
+                .dispatches_avoided
+                .saturating_sub(earlier.dispatches_avoided),
         }
     }
 }
@@ -931,6 +975,78 @@ impl DeviceGroupCaches {
         block: usize,
         slots: &[usize],
     ) -> Result<()> {
+        self.sync_step_device_inner(
+            caches,
+            indicator,
+            n_ind,
+            n_sel,
+            1,
+            tokens,
+            block_start,
+            block,
+            slots,
+        )
+    }
+
+    /// Input sync for one **fused** device-apply step (`step_apply_k`):
+    /// one dispatch that runs `k` diffusion iterations in-graph, with
+    /// greedy/threshold unmasking between inner iterations, over the
+    /// same chained kv/ind/conf tensors. Uplink is identical to a single
+    /// step (token rows + the occupancy mask ship **once** for the whole
+    /// run — the device advances its own tokens between inner
+    /// iterations); downlink is the **final** iteration's selected logit
+    /// rows plus positions, plus the per-slot committed-count vector
+    /// (`B × 4` bytes). Confidence is computed in-graph `k` times, the
+    /// equivalent of `k` Host-apply block downloads is avoided, and the
+    /// fused ledger records one `fused_execs`, `k` `inner_iters_fused`,
+    /// and `k − 1` `dispatches_avoided`. Both backends route their fused
+    /// ticks through this one planner, which is what keeps the sim and
+    /// PJRT fused ledgers byte-exact.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sync_step_device_k(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        n_ind: usize,
+        n_sel: usize,
+        k: usize,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+    ) -> Result<()> {
+        if k < 2 {
+            return Err(anyhow!(
+                "fused device-apply step with k = {k}; a depth-1 run is \
+                 sync_step_device"
+            ));
+        }
+        self.sync_step_device_inner(
+            caches,
+            indicator,
+            n_ind,
+            n_sel,
+            k,
+            tokens,
+            block_start,
+            block,
+            slots,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn sync_step_device_inner(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        n_ind: usize,
+        n_sel: usize,
+        k: usize,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+    ) -> Result<()> {
         if self.apply != ApplyMode::Device {
             return Err(anyhow!("sync_step_device requires ApplyMode::Device"));
         }
@@ -964,15 +1080,26 @@ impl DeviceGroupCaches {
         self.stats.record(TransferKind::Ind, 0, ind_full);
         self.stats.record(TransferKind::Conf, 0, conf_full);
         self.stats.retained_out_reuses += 3;
-        self.stats.ingraph_conf_steps += 1;
+        // confidence is recomputed in-graph at every inner iteration
+        self.stats.ingraph_conf_steps += k as u64;
         // the Host-apply step downloads the KV block slice plus the
-        // maintained layers' indicator block slice for the host scatter;
-        // this plan retains the whole updated caches on device instead
+        // maintained layers' indicator block slice for the host scatter —
+        // once per iteration; this plan retains the whole updated caches
+        // on device across all k inner iterations instead
         let kv_block = (self.batch * block * caches.kv_row_bytes()) as u64;
         let ind_block = (n_ind * self.batch * block * self.dims.d_model * 2) as u64;
-        self.stats.d2h_bytes_avoided += kv_block + ind_block;
-        // the downlink is the selected logit rows + their positions
+        self.stats.d2h_bytes_avoided += k as u64 * (kv_block + ind_block);
+        // the downlink is the FINAL iteration's selected logit rows +
+        // their positions (intermediate iterations never touch the bus)
         self.account_d2h_logits(n_sel, true);
+        if k > 1 {
+            // plus the per-slot committed-count vector the fused exe
+            // returns so the host can audit its replayed commits
+            self.stats.d2h_bytes_shipped += (self.batch * 4) as u64;
+            self.stats.fused_execs += 1;
+            self.stats.inner_iters_fused += k as u64;
+            self.stats.dispatches_avoided += (k - 1) as u64;
+        }
         Ok(())
     }
 
@@ -1205,6 +1332,63 @@ mod tests {
         assert_eq!(delta.d2h_bytes_shipped, (2 * 2 * d.vocab * 4 + 2 * 2 * 4) as u64);
         assert_eq!(delta.d2h_bytes_saved, (2 * (d.ctx - 2) * d.vocab * 4) as u64);
         assert_eq!(delta.donated_execs, 1, "the chain was donated in place");
+    }
+
+    #[test]
+    fn fused_planner_accounts_k_iterations_per_dispatch() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        let slots = [0usize, 1];
+
+        // depth 1 is not a fused run, and a fused step still needs the
+        // seeded chain
+        assert!(r
+            .sync_step_device_k(&mut c, "h", d.n_layers, 2, 1, &tokens, d.prompt_len, 2, &slots)
+            .is_err());
+        assert!(r
+            .sync_step_device_k(&mut c, "h", d.n_layers, 2, 4, &tokens, d.prompt_len, 2, &slots)
+            .is_err());
+
+        r.sync_prefill_device(&mut c, "h", &tokens, &slots).unwrap();
+        r.note_prefill_applied(&mut c, &slots);
+
+        // one fused dispatch of k = 4 inner iterations
+        let snap = r.stats;
+        r.sync_step_device_k(&mut c, "h", d.n_layers, 2, 4, &tokens, d.prompt_len, 2, &slots)
+            .unwrap();
+        r.note_step_applied(&mut c, "h", false, d.prompt_len, 2, &slots);
+        let delta = r.stats.since(&snap);
+        // uplink identical to a single step: block tokens + occupancy
+        // mask ship once for the whole fused run
+        let expected_tokens = (2 * 2 * 4 + 2 * 4) as u64;
+        assert_eq!(delta.upload_bytes, expected_tokens);
+        assert_eq!(delta.retained_out_reuses, 3, "chain reused once per dispatch");
+        assert_eq!(delta.ingraph_conf_steps, 4, "conf computed at every inner iter");
+        assert_eq!(delta.fused_execs, 1);
+        assert_eq!(delta.inner_iters_fused, 4);
+        assert_eq!(delta.dispatches_avoided, 3);
+        // downlink: the FINAL iteration's selected rows + positions,
+        // plus the per-slot committed-count vector
+        assert_eq!(
+            delta.d2h_bytes_shipped,
+            (2 * 2 * d.vocab * 4 + 2 * 2 * 4 + 2 * 4) as u64
+        );
+        // k block-slice downloads avoided vs the Host-apply path
+        let single = {
+            let mut c1 = GroupCaches::new(&d, 2);
+            let mut r1 = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+            r1.sync_prefill_device(&mut c1, "h", &tokens, &slots).unwrap();
+            r1.note_prefill_applied(&mut c1, &slots);
+            let s = r1.stats;
+            r1.sync_step_device(&mut c1, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &slots)
+                .unwrap();
+            r1.stats.since(&s)
+        };
+        assert_eq!(delta.d2h_bytes_avoided, 4 * single.d2h_bytes_avoided);
+        assert_eq!(single.fused_execs, 0, "single steps never count as fused");
+        assert_eq!(single.dispatches_avoided, 0);
     }
 
     #[test]

@@ -55,6 +55,36 @@
 //! [`crate::runtime::resident::TransferStats`] ledger flows through
 //! [`GroupScheduler::transfer_stats`] into the serving metrics.
 //!
+//! # Fused k-step dispatches
+//!
+//! With `SchedCfg::k >= 2` (the `EngineCfg::fused_k` knob), runs of
+//! consecutive ES iterations dispatch as ONE device execution:
+//! [`StepBackend::run_step_fused`] runs a `step_apply_k` executable
+//! that unrolls the diffusion loop in-graph — greedy unmasking between
+//! inner iterations, confidence recomputed in-graph each time, the
+//! retained kv/ind/conf chain threaded through the unrolled body — and
+//! downlinks only the FINAL iteration's selected logit rows plus a
+//! per-slot committed-count vector. The scheduler chooses the fusible
+//! depth so trajectories stay exact vs k = 1: a slot is eligible only
+//! under greedy sampling (temperature ≤ 0, no parallel threshold —
+//! exactly one commit per inner iteration), the depth is capped at the
+//! refresh policy's consecutive-ES run length (peeked via `plan_es`)
+//! and at the block's remaining masked positions (so a block can
+//! complete only at the final inner iteration), and a step group fuses
+//! at the minimum depth over its members. The backend may fuse fewer
+//! iterations than requested — it floors to the deepest compiled
+//! `es_applyk{K}` variant ([`crate::engine::FUSED_KS`]) — or decline
+//! outright (returns 0: Host apply mode, no fused executables), in
+//! which case the tick falls back to the single-step path; the tail of
+//! a block always runs on the k = 1 executables. After a fused run the
+//! unmask loop replays the inner iterations' greedy decisions
+//! host-side, advancing the per-sequence counters by the fused depth.
+//! Host-visible early exit — EOS retirement and block-boundary
+//! admission — is checked once per fused run rather than once per
+//! iteration: that coarser cadence is what `k` trades for dispatch
+//! amortization (the remaining-masked cap keeps the trade lossless:
+//! nothing retirable can appear before the final inner iteration).
+//!
 //! # Batch classes and pooled residency
 //!
 //! A scheduler can own several **batch classes** (e.g. b=1 and b=8 —
@@ -65,7 +95,10 @@
 //! [`GroupScheduler::maybe_switch_class`] sizes the active class to the
 //! demand (resident + queued sequences): a lone request after a burst
 //! shrinks back to the latency-optimal b=1 executables, a deep queue
-//! upshifts to the full batch. A switch parks the outgoing class's
+//! upshifts to the full batch. An optional [`SwitchHysteresis`] damps
+//! the downshift side with an arrival-rate EWMA plus a post-switch
+//! hold window (upshifts stay instant — capacity must react to load),
+//! so a bursty trace stops thrashing the chain between classes. A switch parks the outgoing class's
 //! retained chain in the shared
 //! [`crate::runtime::resident::ResidencyPool`] and checks the incoming
 //! class's chain back out, so batch-shape churn never pays a full KV
@@ -93,8 +126,8 @@ use anyhow::{anyhow, Result};
 
 use crate::cache::{GroupCaches, RefreshPolicy, StepPlan};
 use crate::engine::{
-    apply_step_exe_name, device_apply_eligible, prefill_apply_exe_name, step_exe_name,
-    EngineCfg, Method,
+    apply_step_exe_name, device_apply_eligible, fused_step_exe_name, prefill_apply_exe_name,
+    step_exe_name, EngineCfg, Method, FUSED_KS,
 };
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
@@ -201,6 +234,28 @@ pub trait StepBackend {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()>;
+    /// Run `k` consecutive ES iterations over `block` positions at
+    /// `block_start` as ONE fused device execution, merging the FINAL
+    /// iteration's results into the given slots' rows. Returns how many
+    /// iterations were actually fused: a backend may floor `k` to its
+    /// deepest compiled unroll depth, and 0 means "not supported here"
+    /// (no fused executables, Host apply mode) — the scheduler then
+    /// falls back to [`StepBackend::run_step`]. The caller guarantees
+    /// every slot decodes greedily (exactly one commit per iteration)
+    /// and has at least `k` masked positions and consecutive ES plans
+    /// ahead, so replaying `k` greedy unmask decisions host-side
+    /// against the fused output is trajectory-exact.
+    fn run_step_fused(
+        &mut self,
+        _tokens: &[i32],
+        _block_start: usize,
+        _block: usize,
+        _k: usize,
+        _slots: &[usize],
+        _caches: &mut GroupCaches,
+    ) -> Result<usize> {
+        Ok(0)
+    }
     /// Cumulative host→device transfer ledger for this backend (logical
     /// bytes from the resident-cache planner; zeros for backends without
     /// one).
@@ -232,6 +287,28 @@ pub trait StepBackend {
     }
 }
 
+/// Batch-class switch damping for
+/// [`GroupScheduler::maybe_switch_class`]: an EWMA over the demand
+/// samples argues against downshifts (the smoothed signal remembers a
+/// burst after its instantaneous tail), and a hold window after each
+/// switch suppresses downshifts outright. Upshifts always pass —
+/// capacity must react to load immediately.
+#[derive(Debug, Clone, Copy)]
+pub struct SwitchHysteresis {
+    /// EWMA smoothing factor for the demand samples (0 < alpha ≤ 1;
+    /// smaller = longer memory of a burst)
+    pub alpha: f64,
+    /// demand evaluations after a switch during which downshifts are
+    /// suppressed
+    pub hold: usize,
+}
+
+impl Default for SwitchHysteresis {
+    fn default() -> SwitchHysteresis {
+        SwitchHysteresis { alpha: 0.25, hold: 8 }
+    }
+}
+
 /// Scheduling parameters (the method-level subset of [`EngineCfg`]).
 #[derive(Debug, Clone)]
 pub struct SchedCfg {
@@ -240,6 +317,13 @@ pub struct SchedCfg {
     pub refresh: RefreshPolicy,
     pub sampler: SamplerCfg,
     pub seed: u64,
+    /// fused-step unroll depth: runs of consecutive ES iterations
+    /// dispatch as one `step_apply_k` execution up to this depth
+    /// (1 = unfused; see the module docs)
+    pub k: usize,
+    /// batch-class switch damping; `None` switches on the
+    /// instantaneous demand with no memory
+    pub hysteresis: Option<SwitchHysteresis>,
 }
 
 impl SchedCfg {
@@ -250,6 +334,8 @@ impl SchedCfg {
             refresh: cfg.refresh,
             sampler: cfg.sampler,
             seed: cfg.seed,
+            k: cfg.fused_k,
+            hysteresis: None,
         }
     }
 }
@@ -297,11 +383,22 @@ pub struct GroupScheduler<'a> {
     states: Vec<ClassState>,
     /// reusable sampling workspace shared by every slot's unmask decision
     scratch: SamplerScratch,
-    /// group-level executable-run counters
+    /// group-level executable-run counters. With fusion (`cfg.k >= 2`)
+    /// `n_es` counts DISPATCHES — a fused run is one `n_es` — while the
+    /// per-sequence `SeqState::n_es` keeps counting iterations, so the
+    /// two diverge by exactly the amortization won.
     pub ticks: usize,
     pub n_prefill: usize,
     pub n_dual: usize,
     pub n_es: usize,
+    /// fused k-step dispatches issued (each covered ≥ 2 diffusion
+    /// iterations in one device execution)
+    pub n_fused: usize,
+    /// EWMA over the demand samples seen by `maybe_switch_class`
+    /// (meaningful only when `cfg.hysteresis` is set)
+    demand_ewma: f64,
+    /// demand evaluations left in the post-switch hold window
+    hold_left: usize,
 }
 
 impl<'a> GroupScheduler<'a> {
@@ -346,6 +443,9 @@ impl<'a> GroupScheduler<'a> {
             n_prefill: 0,
             n_dual: 0,
             n_es: 0,
+            n_fused: 0,
+            demand_ewma: 0.0,
+            hold_left: 0,
         })
     }
 
@@ -423,16 +523,41 @@ impl<'a> GroupScheduler<'a> {
     /// switch happened. The switch parks the outgoing class's retained
     /// chain in the residency pool and checks the incoming class's chain
     /// back out — no full KV reseed (see the module docs).
+    ///
+    /// Under [`SwitchHysteresis`] the downshift side is damped two
+    /// ways: the demand is the max of the instantaneous sample and a
+    /// rounded arrival-rate EWMA (a burst's memory keeps the class up
+    /// through short lulls), and downshifts inside the post-switch hold
+    /// window — counted in demand evaluations, i.e. calls to this
+    /// method — are refused outright. Upshifts are never delayed.
     pub fn maybe_switch_class(&mut self, queued: usize) -> Result<bool> {
         if self.classes.len() < 2 {
             return Ok(false);
         }
         let active = self.active();
-        let target = self.select_class(active + queued);
+        let instantaneous = active + queued;
+        let mut demand = instantaneous;
+        let mut downshift_held = false;
+        if let Some(h) = self.cfg.hysteresis {
+            self.demand_ewma =
+                h.alpha * instantaneous as f64 + (1.0 - h.alpha) * self.demand_ewma;
+            demand = demand.max(self.demand_ewma.round() as usize);
+            if self.hold_left > 0 {
+                self.hold_left -= 1;
+                downshift_held = true;
+            }
+        }
+        let target = self.select_class(demand);
         if target == self.batch_class() || active > target || !self.at_block_boundary() {
             return Ok(false);
         }
+        if downshift_held && target < self.batch_class() {
+            return Ok(false);
+        }
         self.switch_class(target)?;
+        if let Some(h) = self.cfg.hysteresis {
+            self.hold_left = h.hold;
+        }
         Ok(true)
     }
 
@@ -641,16 +766,85 @@ impl<'a> GroupScheduler<'a> {
         }
 
         // 3. block steps, grouped by (block index, plan): sequences at
-        //    different blocks each get a step at their own window
-        let prompt_len = self.backend.dims().prompt_len;
+        //    different blocks each get a step at their own window.
+        //    Groups of consecutive ES iterations may fuse into one
+        //    k-step dispatch (see the module docs); `reps` records how
+        //    many iterations each slot advanced so the unmask loop
+        //    below replays that many greedy decisions.
+        let d = *self.backend.dims();
+        let (mask, eos) = {
+            let tok = self.backend.tokenizer();
+            (tok.mask, tok.eos)
+        };
+        let block = self.cfg.block;
+        let mut reps = vec![1usize; self.states[ac].batch];
         let groups: Vec<((usize, u8), Vec<usize>)> = step_groups.into_iter().collect();
         for ((blk, plan_tag), group) in groups {
             let plan = if plan_tag == 0 { StepPlan::DualStep } else { StepPlan::EsStep };
-            let block_start = prompt_len + blk * self.cfg.block;
+            let block_start = d.prompt_len + blk * block;
+            // fusible depth of this group: min over members of the
+            // per-slot bound — the refresh policy's consecutive-ES run
+            // length and the block's remaining masked positions, under
+            // greedy-only eligibility (each inner iteration commits
+            // exactly one token, so the host replay is exact and a
+            // block can complete only at the final inner iteration)
+            let mut fuse = 1usize;
+            if plan == StepPlan::EsStep && self.cfg.k >= 2 && self.cfg.method == Method::EsDllm {
+                let st = &self.states[ac];
+                fuse = self.cfg.k;
+                for &s in &group {
+                    let seq = st.slots[s].as_ref().unwrap();
+                    if seq.sampler.temperature > 0.0 || seq.sampler.parallel_threshold.is_some()
+                    {
+                        fuse = 1;
+                        break;
+                    }
+                    let mut run = 0usize;
+                    while run < fuse
+                        && self.cfg.refresh.plan_es(seq.iters + run, seq.i_b + run)
+                            == StepPlan::EsStep
+                    {
+                        run += 1;
+                    }
+                    let block_lo = seq.block_idx * block;
+                    let masked = st.gen_row(&d, s)[block_lo..block_lo + block]
+                        .iter()
+                        .filter(|&&t| t == mask)
+                        .count();
+                    fuse = fuse.min(run).min(masked);
+                    if fuse <= 1 {
+                        break;
+                    }
+                }
+            }
+            let mut fused_n = 0usize;
+            if fuse >= 2 {
+                let st = &mut self.states[ac];
+                fused_n = self.backend.run_step_fused(
+                    &st.tokens,
+                    block_start,
+                    block,
+                    fuse,
+                    &group,
+                    &mut st.caches,
+                )?;
+            }
+            if fused_n >= 2 {
+                // one dispatch advanced every member fused_n iterations
+                for &s in &group {
+                    self.states[ac].slots[s].as_mut().unwrap().n_es += fused_n;
+                    reps[s] = fused_n;
+                }
+                self.n_es += 1;
+                self.n_fused += 1;
+                continue;
+            }
+            // single-step path (k = 1, ineligible slots, or the backend
+            // declined the fused dispatch)
             {
                 let st = &mut self.states[ac];
                 self.backend
-                    .run_step(plan, &st.tokens, block_start, self.cfg.block, &group, &mut st.caches)?;
+                    .run_step(plan, &st.tokens, block_start, block, &group, &mut st.caches)?;
             }
             for &s in &group {
                 let seq = self.states[ac].slots[s].as_mut().unwrap();
@@ -667,37 +861,36 @@ impl<'a> GroupScheduler<'a> {
             }
         }
 
-        // 4. unmask decisions, per slot over its own current block
-        let d = *self.backend.dims();
-        let (mask, eos) = {
-            let tok = self.backend.tokenizer();
-            (tok.mask, tok.eos)
-        };
-        let block = self.cfg.block;
+        // 4. unmask decisions, per slot over its own current block —
+        //    repeated `reps` times for slots a fused dispatch advanced,
+        //    rebuilding the input between decisions (each commit changes
+        //    the gen row the next decision reads)
         for &s in &occupied {
-            let decision = {
-                let st = &mut self.states[ac];
-                let block_lo = st.slots[s].as_ref().unwrap().block_idx * block;
-                let inp = UnmaskInput {
-                    logits: &st.caches.logits
-                        [s * d.gen_len * d.vocab..(s + 1) * d.gen_len * d.vocab],
-                    conf: &st.caches.conf[s * d.gen_len..(s + 1) * d.gen_len],
-                    gen_tokens: &st.tokens[s * d.ctx + d.prompt_len..(s + 1) * d.ctx],
-                    block_lo,
-                    block_hi: block_lo + block,
-                    vocab: d.vocab,
-                    mask_id: mask,
-                    eos_id: eos,
+            for _ in 0..reps[s] {
+                let decision = {
+                    let st = &mut self.states[ac];
+                    let block_lo = st.slots[s].as_ref().unwrap().block_idx * block;
+                    let inp = UnmaskInput {
+                        logits: &st.caches.logits
+                            [s * d.gen_len * d.vocab..(s + 1) * d.gen_len * d.vocab],
+                        conf: &st.caches.conf[s * d.gen_len..(s + 1) * d.gen_len],
+                        gen_tokens: &st.tokens[s * d.ctx + d.prompt_len..(s + 1) * d.ctx],
+                        block_lo,
+                        block_hi: block_lo + block,
+                        vocab: d.vocab,
+                        mask_id: mask,
+                        eos_id: eos,
+                    };
+                    let seq = st.slots[s].as_mut().unwrap();
+                    decide_unmask_with(&seq.sampler, &inp, &mut seq.rng, &mut self.scratch)
                 };
-                let seq = st.slots[s].as_mut().unwrap();
-                decide_unmask_with(&seq.sampler, &inp, &mut seq.rng, &mut self.scratch)
-            };
-            for (p, t) in decision.positions.iter().zip(&decision.tokens) {
-                self.states[ac].tokens[s * d.ctx + d.prompt_len + p] = *t;
+                for (p, t) in decision.positions.iter().zip(&decision.tokens) {
+                    self.states[ac].tokens[s * d.ctx + d.prompt_len + p] = *t;
+                }
+                let seq = self.states[ac].slots[s].as_mut().unwrap();
+                seq.iters += 1;
+                seq.i_b += 1;
             }
-            let seq = self.states[ac].slots[s].as_mut().unwrap();
-            seq.iters += 1;
-            seq.i_b += 1;
         }
 
         // 5. block advance + retirement at block boundaries
@@ -1177,6 +1370,44 @@ impl StepBackend for PjrtBackend<'_> {
         result
     }
 
+    fn run_step_fused(
+        &mut self,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        k: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<usize> {
+        self.activate(caches);
+        let batch = caches.batch;
+        if self.residents[&batch].apply_mode() != ApplyMode::Device {
+            return Ok(0); // fused variants exist only on the apply path
+        }
+        // floor the requested depth to the deepest compiled unroll that
+        // fits the run; decline entirely when none was compiled
+        let Some(depth) = FUSED_KS.iter().copied().find(|&kk| {
+            kk <= k
+                && self
+                    .arch
+                    .executables
+                    .get(&fused_step_exe_name(kk, self.cfg.block, batch))
+                    .map(|e| e.kind == ExeKind::StepApplyK)
+                    .unwrap_or(false)
+        }) else {
+            return Ok(0);
+        };
+        let result = self.step_device_k_impl(depth, tokens, block_start, block, slots, caches);
+        if result.is_err() {
+            // same contract as run_step: a planner sync that promised a
+            // run which never delivered invalidates the resident state
+            if let Some(r) = self.residents.get_mut(&batch) {
+                r.invalidate(caches);
+            }
+        }
+        result.map(|()| depth)
+    }
+
     fn transfer_stats(&self) -> TransferStats {
         self.merged_stats()
     }
@@ -1494,6 +1725,91 @@ impl PjrtBackend<'_> {
         self.flush_transfer();
         Ok(())
     }
+
+    /// Fused device-apply step: one `step_apply_k` execution runs `k`
+    /// ES iterations in-graph — greedy unmasking between inner
+    /// iterations (argmax commit where confidence wins, occupancy-
+    /// masked), confidence recomputed in-graph each time — chains the
+    /// retained kv/ind/conf outputs exactly like the single-step path,
+    /// and downloads only the FINAL iteration's selected logit rows
+    /// plus the per-slot committed-count vector. The scheduler replays
+    /// the `k` greedy unmask decisions host-side against that downlink
+    /// (exact under the greedy-only eligibility gate); the committed
+    /// counts are the audit channel for the in-graph commits.
+    fn step_device_k_impl(
+        &mut self,
+        k: usize,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        let batch = caches.batch;
+        let exe = self.arch.exe(&fused_step_exe_name(k, self.cfg.block, batch))?;
+        debug_assert_eq!(exe.kind, ExeKind::StepApplyK);
+        let n_ind = if exe.skip.is_empty() {
+            self.arch.dims.n_layers
+        } else {
+            exe.skip_layers.len()
+        };
+        let n_sel = exe.final_keep.unwrap_or(block);
+        // shared planner sync (parity with the sim's fused ledger):
+        // one uplink, k in-graph confidence steps, one downlink
+        let r = self.residents.get_mut(&batch).expect("activated");
+        r.sync_step_device_k(caches, "h", n_ind, n_sel, k, tokens, block_start, block, slots)?;
+        let chain_missing = || anyhow!("device-apply chain missing despite seeded planner");
+        let kv_buf =
+            &r.chain.handles.kv_chain.as_ref().ok_or_else(chain_missing)?.buf;
+        let ind_buf =
+            &r.chain.handles.ind_chain.as_ref().ok_or_else(chain_missing)?.buf;
+        let conf_buf =
+            &r.chain.handles.conf_chain.as_ref().ok_or_else(chain_missing)?.buf;
+        let start_t = HostTensor::scalar_i32(block_start as i32);
+        let alpha_t = HostTensor::scalar_f32(self.cfg.alpha);
+        // greedy-only dispatch: an impossible confidence threshold makes
+        // the in-graph unmask commit exactly the argmax winner per inner
+        // iteration, mirroring the host replay
+        let threshold_t = HostTensor::scalar_f32(2.0);
+        let retain = exe.retain_flags();
+        let args = [
+            ExecArg::Host(r.step_tokens.view()),
+            ExecArg::Host(start_t.view()),
+            ExecArg::Device(kv_buf),
+            ExecArg::Device(ind_buf),
+            ExecArg::Device(conf_buf),
+            ExecArg::Host(r.occ_mask.view()),
+            ExecArg::Host(alpha_t.view()),
+            ExecArg::Host(threshold_t.view()),
+        ];
+        let mut out =
+            self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
+        let logits_i = exe.output_index("logits")?;
+        let pos_i = exe.output_index("pos")?;
+        caches.merge_step_logits_slots(
+            out.host_at(logits_i, "logits")?,
+            out.host_at(pos_i, "pos")?,
+            slots,
+        )?;
+        // the committed-count vector rides the same downlink; touch it so
+        // a malformed artifact fails here rather than silently
+        let _ = out.host_at(exe.output_index("committed")?, "committed")?;
+        r.chain.handles.kv_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("kv")?, "kv")?,
+            lit: None,
+        });
+        r.chain.handles.ind_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("ind")?, "ind")?,
+            lit: None,
+        });
+        r.chain.handles.conf_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("conf")?, "conf")?,
+            lit: None,
+        });
+        r.note_step_applied(caches, "h", false, block_start, block, slots);
+        self.flush_transfer();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1509,6 +1825,25 @@ mod tests {
             refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
             sampler: SamplerCfg::llada(),
             seed: 0,
+            k: 1,
+            hysteresis: None,
+        };
+        GroupScheduler::new(Box::new(backend), n_slots, cfg).unwrap()
+    }
+
+    /// Fusion-friendly cadence: block 8 with block_period 4 schedules
+    /// [P, E, E, E, D, E, E, E] per block — two 3-iteration ES runs
+    /// that a k ≥ 2 config fuses.
+    fn sched_fused(n_slots: usize, k: usize) -> GroupScheduler<'static> {
+        let backend = SimBackend::new(SimCfg::default());
+        let cfg = SchedCfg {
+            method: Method::EsDllm,
+            block: 8,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 4 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+            k,
+            hysteresis: None,
         };
         GroupScheduler::new(Box::new(backend), n_slots, cfg).unwrap()
     }
@@ -1676,6 +2011,8 @@ mod tests {
             refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
             sampler: SamplerCfg::llada(),
             seed: 0,
+            k: 1,
+            hysteresis: None,
         };
         GroupScheduler::with_classes(Box::new(backend), classes, cfg).unwrap()
     }
@@ -1751,6 +2088,147 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].text, base[0].text, "switching must not change output");
         assert_eq!(done[0].iterations, base[0].iterations);
+    }
+
+    #[test]
+    fn fused_k_decode_is_token_identical_to_k1() {
+        // the acceptance criterion: sim decode at k ∈ {2, 4, 8} is
+        // token-identical to k = 1 with the same seed, with identical
+        // per-sequence counters — only the dispatch counts shrink
+        for prompt in ["abcdef", "abcdefghij", "a"] {
+            let mut base = sched_fused(2, 1);
+            base.admit(input(1, prompt, SeqParams::default())).unwrap();
+            let b = run_to_drain(&mut base);
+            assert_eq!(base.n_fused, 0, "k = 1 never fuses");
+            for k in [2usize, 4, 8] {
+                let mut s = sched_fused(2, k);
+                s.admit(input(1, prompt, SeqParams::default())).unwrap();
+                let f = run_to_drain(&mut s);
+                assert_eq!(f[0].text, b[0].text, "k = {k}, prompt {prompt:?}");
+                assert_eq!(f[0].iterations, b[0].iterations, "k = {k}");
+                assert_eq!(f[0].tokens, b[0].tokens, "k = {k}");
+                assert_eq!(f[0].n_prefill, b[0].n_prefill, "k = {k}");
+                assert_eq!(f[0].n_dual, b[0].n_dual, "k = {k}");
+                assert_eq!(f[0].n_es, b[0].n_es, "per-seq ES iterations, k = {k}");
+                assert!(s.n_fused > 0, "k = {k} fused at least one run");
+                assert!(
+                    s.n_es < base.n_es,
+                    "k = {k}: {} ES dispatches !< {} unfused",
+                    s.n_es,
+                    base.n_es
+                );
+                assert!(s.ticks < base.ticks, "fused ticks advance multiple iters");
+            }
+        }
+        // cadence sanity for the helper's config: one block of 8 under
+        // block_period 4 runs [P, E*3-fused, D, E*3-fused] at k >= 4
+        let mut s = sched_fused(1, 4);
+        s.admit(input(1, "abcdef", SeqParams::default())).unwrap();
+        run_to_drain(&mut s);
+        assert_eq!((s.n_prefill, s.n_dual, s.n_es, s.n_fused), (1, 1, 2, 2));
+        assert_eq!(s.ticks, 4, "8 iterations in 4 dispatch rounds");
+    }
+
+    #[test]
+    fn fused_mid_flight_admission_is_trajectory_exact() {
+        // the same admission script under k = 1 and k = 4: per-sequence
+        // results must match even though the fused run advances several
+        // iterations per tick, so B's admission lands on a k-boundary
+        // at a different point of A's block
+        let run = |k: usize| {
+            let mut s = sched_fused(2, k);
+            s.admit(input(1, "abcdefghij", SeqParams::default())).unwrap();
+            s.tick().unwrap();
+            s.tick().unwrap(); // A several iterations in when fused
+            s.admit(input(2, "ab", SeqParams::default())).unwrap();
+            assert_eq!(s.active(), 2);
+            let mut done = run_to_drain(&mut s);
+            done.sort_by_key(|f| f.id);
+            done
+        };
+        let base = run(1);
+        let fused = run(4);
+        assert_eq!(base.len(), 2);
+        for (b, f) in base.iter().zip(&fused) {
+            assert_eq!(f.id, b.id);
+            assert_eq!(f.text, b.text, "seq {}", b.id);
+            assert_eq!(f.iterations, b.iterations, "seq {}", b.id);
+            assert_eq!(f.tokens, b.tokens);
+            assert_eq!(
+                (f.n_prefill, f.n_dual, f.n_es),
+                (b.n_prefill, b.n_dual, b.n_es),
+                "seq {}",
+                b.id
+            );
+        }
+    }
+
+    #[test]
+    fn fused_runs_respect_sampler_eligibility() {
+        // a parallel-threshold request may commit several tokens per
+        // iteration — the fused replay would diverge, so such slots
+        // must never fuse (and still decode exactly)
+        let params = SeqParams { parallel_threshold: Some(0.5), ..Default::default() };
+        let mut base = sched_fused(1, 1);
+        base.admit(input(1, "abcdef", params)).unwrap();
+        let b = run_to_drain(&mut base);
+        let mut s = sched_fused(1, 8);
+        s.admit(input(1, "abcdef", params)).unwrap();
+        let f = run_to_drain(&mut s);
+        assert_eq!(s.n_fused, 0, "threshold slots are ineligible");
+        assert_eq!(f[0].text, b[0].text);
+        assert_eq!(f[0].iterations, b[0].iterations);
+    }
+
+    #[test]
+    fn switch_hysteresis_reduces_chain_switches_on_burst_trace() {
+        // six sequences served back to back over classes {1, 8}; the
+        // queue-depth signal the router would report oscillates — a
+        // burst is visible while each even sequence runs, gone for the
+        // odd ones. Without hysteresis every oscillation flips the
+        // class; with it, the EWMA + hold window ride out the lulls.
+        let run = |hyst: Option<SwitchHysteresis>| {
+            let backend = SimBackend::new(SimCfg::default());
+            let cfg = SchedCfg {
+                method: Method::EsDllm,
+                block: 4,
+                refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+                sampler: SamplerCfg::llada(),
+                seed: 0,
+                k: 1,
+                hysteresis: hyst,
+            };
+            let mut s = GroupScheduler::with_classes(Box::new(backend), &[1, 8], cfg).unwrap();
+            assert!(s.maybe_switch_class(0).unwrap(), "idle sizing to b1");
+            let mut tokens = 0usize;
+            let mut iters = 0usize;
+            for i in 0..6u64 {
+                s.admit(input(i + 1, "abcdef", SeqParams::default())).unwrap();
+                let mut guard = 0;
+                while s.active() > 0 {
+                    let queued = if i % 2 == 0 { 7 } else { 0 };
+                    s.maybe_switch_class(queued).unwrap();
+                    for f in s.tick().unwrap() {
+                        tokens += f.tokens;
+                        iters += f.iterations;
+                    }
+                    guard += 1;
+                    assert!(guard < 1000, "failed to drain");
+                }
+            }
+            (s.pool_stats().chain_switches, tokens, iters)
+        };
+        let (plain_switches, plain_tokens, plain_iters) = run(None);
+        let (damped_switches, damped_tokens, damped_iters) =
+            run(Some(SwitchHysteresis::default()));
+        assert_eq!(damped_tokens, plain_tokens, "equal throughput: same tokens");
+        assert_eq!(damped_iters, plain_iters, "equal throughput: same iterations");
+        assert!(
+            damped_switches < plain_switches,
+            "hysteresis must cut chain switches: {damped_switches} !< {plain_switches}"
+        );
+        // the undamped trace thrashes once per burst edge
+        assert!(plain_switches >= 5, "the trace exercised real thrash");
     }
 
     #[test]

@@ -15,8 +15,11 @@
 //! by default in [`ApplyMode::Device`], routed through the **same**
 //! composite planner calls
 //! ([`DeviceGroupCaches::sync_prefill_device`] /
-//! [`DeviceGroupCaches::sync_step_device`]) as the PJRT device-apply
-//! backend, so the two transfer ledgers are byte-exact by construction
+//! [`DeviceGroupCaches::sync_step_device`] /
+//! [`DeviceGroupCaches::sync_step_device_k`] for fused k-step
+//! dispatches, which model k inner iterations per sync) as the PJRT
+//! device-apply backend, so the two transfer ledgers are byte-exact by
+//! construction
 //! (asserted in `tests/transfer_accounting.rs`): after the one-time
 //! seed, steady-state steps ship only block tokens and the batch-bit
 //! occupancy mask, with KV, indicator, and confidence all chained on
@@ -399,6 +402,50 @@ impl StepBackend for SimBackend {
             }
         }
         Ok(())
+    }
+
+    fn run_step_fused(
+        &mut self,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        k: usize,
+        slots: &[usize],
+        caches: &mut GroupCaches,
+    ) -> Result<usize> {
+        if self.cfg.apply != ApplyMode::Device {
+            return Ok(0); // the stateless fallback has no fused variants
+        }
+        // the in-graph loop still computes k iterations of model work
+        if !self.cfg.es_cost.is_zero() {
+            std::thread::sleep(self.cfg.es_cost * k as u32);
+        }
+        self.activate(caches);
+        let n_layers = self.cfg.dims.n_layers;
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
+            // one fused planner sync models k inner iterations per
+            // dispatch — the same [`DeviceGroupCaches::sync_step_device_k`]
+            // call the PJRT fused path makes, so the two ledgers stay
+            // byte-exact on the fused path too
+            let n_sel = SimCfg::n_sel(StepPlan::EsStep, block);
+            r.sync_step_device_k(
+                caches, "h", n_layers, n_sel, k, tokens, block_start, block, slots,
+            )?;
+        }
+        let d = &self.cfg.dims;
+        let lo = block_start - d.prompt_len;
+        // the final iteration's downlink: position-targeted peaks are
+        // iteration-independent, so one refresh serves the scheduler's
+        // k-decision host replay exactly
+        for &s in slots {
+            self.write_positions(tokens, s, lo, d.gen_len, caches);
+        }
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
+            r.note_step_applied(caches, "h", false, block_start, block, slots);
+        }
+        Ok(k)
     }
 
     fn transfer_stats(&self) -> TransferStats {

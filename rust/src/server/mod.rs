@@ -12,6 +12,34 @@
 //! generation time, emitted tokens). Backpressure: a full request queue
 //! answers 503 Service Unavailable; invalid per-request parameters
 //! answer 400.
+//!
+//! Accepted `/generate` parameters:
+//!
+//!   * `prompt` (string, required) — the input text.
+//!   * `gen_len` (int) — generation length; must be a multiple of the
+//!     configured block size (else 400).
+//!   * `temperature` (float) — sampling temperature; `0.0` is greedy.
+//!   * `threshold` (float) — parallel-unmask confidence threshold;
+//!     omit for one-token-per-iteration low-confidence decoding.
+//!
+//! There is deliberately NO per-request fused-`k` parameter: the fused
+//! k-step dispatch depth is a server-level deployment knob
+//! ([`crate::engine::EngineCfg::fused_k`], CLI `--fused-k`) because it
+//! changes the *service's* latency cadence, not a request's output.
+//! With `fused_k = k`, runs of consecutive early-skip iterations
+//! execute as one device dispatch, so host-side checks — EOS
+//! retirement, block-boundary admission of queued requests, batch-class
+//! switching — happen once per fused run instead of once per
+//! iteration. Larger `k` amortizes more dispatch latency (fewer host
+//! round-trips per decoded token) but coarsens that cadence: a queued
+//! request may wait up to `k − 1` extra iterations for its admission
+//! boundary, and an EOS-retired sequence holds its slot up to `k − 1`
+//! iterations longer. Decoded text is unaffected — fused runs are
+//! trajectory-exact (greedy-eligible requests only; requests with
+//! `temperature > 0` or a `threshold` simply decode unfused). The
+//! amortization is visible in `/metrics` via `esdllm_fused_execs`,
+//! `esdllm_inner_iters_fused`, `esdllm_dispatches_avoided`, and
+//! `esdllm_avg_iters_per_dispatch`.
 
 use std::sync::Arc;
 

@@ -1,6 +1,7 @@
 //! Golden-manifest parse contract for the device-apply executable kinds:
 //! a checked-in fixture (mirroring what `python/compile/aot.py` emits)
-//! pins the `prefill_apply` / `step_apply` kinds, their
+//! pins the `prefill_apply` / `step_apply` / `step_apply_k` kinds (the
+//! last with its required `k` unroll-depth field), their
 //! `retained_outputs` chaining signatures with the `alias` (donation)
 //! flags, and the gen-region `logits_gen` output signature, and the
 //! error paths must name the offending executable and field instead of
@@ -54,9 +55,29 @@ fn golden_manifest_parses_device_apply_kinds() {
     assert_eq!(st.kind, ExeKind::StepApply);
     assert_eq!(st.block, Some(8));
     assert_eq!(st.skip_layers, vec![1, 2]);
+    assert_eq!(st.k, None, "single-step kinds carry no unroll depth");
     assert_eq!(st.retain_flags(), vec![false, false, true, true, true]);
     // args: param, x_tok, block_start, kv, ind, conf, occ, alpha
     assert_eq!(st.alias_pairs(1), vec![(2, 4), (3, 5), (4, 6)]);
+
+    // the fused k-step variant: same chain/donation contract as the
+    // single-step exe, plus the unroll depth, a threshold input for the
+    // in-graph unmask, and the per-slot committed-count downlink
+    let fk = a.exe("es_applyk4_blk8_b8").unwrap();
+    assert_eq!(fk.kind, ExeKind::StepApplyK);
+    assert_eq!(fk.k, Some(4));
+    assert_eq!(fk.block, Some(8));
+    assert_eq!(fk.skip_layers, vec![1, 2]);
+    assert_eq!(fk.inputs.last().unwrap().name, "threshold");
+    assert_eq!(
+        fk.retain_flags(),
+        vec![false, false, true, true, true, false],
+        "logits/pos/committed download, the cache chain stays on device"
+    );
+    // args: param, x_tok, block_start, kv, ind, conf, occ, alpha, threshold
+    assert_eq!(fk.alias_pairs(1), vec![(2, 4), (3, 5), (4, 6)]);
+    let cm = fk.output_index("committed").unwrap();
+    assert_eq!(fk.outputs[cm].shape, vec![8], "per-slot committed count");
 
     // plain step executables carry no retained outputs and no aliases
     let dual = a.exe("dual_blk8_b8").unwrap();
@@ -112,6 +133,32 @@ fn unknown_kind_error_names_the_executable() {
     assert!(msg.contains("warp_apply"), "names the bad value: {msg}");
     assert!(msg.contains("`kind`"), "names the field: {msg}");
     assert!(msg.contains("prefill_apply"), "lists the accepted kinds: {msg}");
+}
+
+#[test]
+fn bad_fused_k_error_names_the_executable() {
+    // an unroll depth of 1 is not a fused executable: the parse must
+    // fail naming the exe and the bad value
+    let err = load_patched(
+        |src| src.replace("\"kind\": \"step_apply_k\", \"k\": 4",
+                          "\"kind\": \"step_apply_k\", \"k\": 1"),
+        "badk",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("es_applyk4_blk8_b8"), "names the exe: {msg}");
+    assert!(msg.contains("`k`"), "names the field: {msg}");
+    assert!(msg.contains("k >= 2"), "states the constraint: {msg}");
+
+    // a step_apply_k entry without a `k` field at all (older emitter)
+    // must also fail naming the exe
+    let err = load_patched(
+        |src| src.replace("\"kind\": \"step_apply_k\", \"k\": 4",
+                          "\"kind\": \"step_apply_k\""),
+        "missingk",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("es_applyk4_blk8_b8"), "names the exe: {msg}");
+    assert!(msg.contains("requires a `k` field"), "{msg}");
 }
 
 #[test]

@@ -33,6 +33,8 @@ fn sched_cfg(block: usize) -> SchedCfg {
         refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
         sampler: SamplerCfg::llada(),
         seed: 0,
+        k: 1,
+        hysteresis: None,
     }
 }
 
@@ -224,6 +226,71 @@ fn pjrt_device_planner_matches_sim_planner() {
     assert_eq!(
         r.stats, sim_stats,
         "PJRT device planner and sim planner ledgers must be byte-exact"
+    );
+}
+
+/// Fused-path parity: a scheduler run whose consecutive ES iterations
+/// fuse into k-step dispatches must produce the identical
+/// `TransferStats` ledger as a manual replay through the planner calls
+/// the PJRT fused path makes (`sync_step_device_k` per fused run) —
+/// extending the byte-exact sim-vs-PJRT contract to the fused path,
+/// including the new `fused_execs` / `inner_iters_fused` /
+/// `dispatches_avoided` counters.
+#[test]
+fn fused_planner_parity_sim_vs_pjrt_replay() {
+    // block 8 with a block-period-4 refresh gives per-block plans
+    // [P, E, E, E, D, E, E, E]; at k = 8 each ES run fuses to depth 3
+    // (run-length capped), so "abc" decodes its 8-position block in 4
+    // dispatches: Prefill, fused-ES(3), Dual, fused-ES(3)
+    let cfg = SchedCfg {
+        method: Method::EsDllm,
+        block: 8,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: 4 },
+        sampler: SamplerCfg::llada(),
+        seed: 0,
+        k: 8,
+        hysteresis: None,
+    };
+    let backend = SimBackend::new(SimCfg::default());
+    let mut s = GroupScheduler::new(Box::new(backend), 2, cfg).unwrap();
+    s.admit(input(1, "abc")).unwrap();
+    drain(&mut s);
+    assert_eq!(
+        (s.n_prefill, s.n_dual, s.n_es, s.n_fused),
+        (1, 1, 2, 2),
+        "dispatch schedule"
+    );
+    assert_eq!(s.ticks, 4, "8 iterations in 4 dispatches");
+    let sim_stats = s.transfer_stats();
+    assert_eq!(sim_stats.fused_execs, 2);
+    assert_eq!(sim_stats.inner_iters_fused, 6);
+    assert_eq!(sim_stats.dispatches_avoided, 4);
+
+    // PJRT planner side: replicate that schedule through the calls
+    // step_device_k_impl / step_device_impl make — one
+    // sync_step_device_k per fused run at its actual fused depth
+    let d = SimCfg::default().dims;
+    let mut c = GroupCaches::new(&d, 2);
+    let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+    let tokens = vec![0i32; 2 * d.ctx];
+    let slots = [0usize];
+    c.reset_slot(0); // admission
+    r.sync_prefill_device(&mut c, "h", &tokens, &slots).unwrap();
+    r.note_prefill_applied(&mut c, &slots);
+    let es_sel = SimCfg::n_sel(StepPlan::EsStep, 8);
+    let dual_sel = SimCfg::n_sel(StepPlan::DualStep, 8);
+    r.sync_step_device_k(&mut c, "h", d.n_layers, es_sel, 3, &tokens, d.prompt_len, 8, &slots)
+        .unwrap();
+    r.note_step_applied(&mut c, "h", false, d.prompt_len, 8, &slots);
+    r.sync_step_device(&mut c, "h", d.n_layers, dual_sel, &tokens, d.prompt_len, 8, &slots)
+        .unwrap();
+    r.note_step_applied(&mut c, "h", false, d.prompt_len, 8, &slots);
+    r.sync_step_device_k(&mut c, "h", d.n_layers, es_sel, 3, &tokens, d.prompt_len, 8, &slots)
+        .unwrap();
+    r.note_step_applied(&mut c, "h", false, d.prompt_len, 8, &slots);
+    assert_eq!(
+        r.stats, sim_stats,
+        "fused-path planner ledgers must be byte-exact sim vs PJRT"
     );
 }
 
