@@ -289,12 +289,13 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
         ind_layers = skip_layers if skip else list(range(cfg.n_layers))
 
         def fn(params, x_tok, block_start, kv, ind, conf, occ, alpha,
-               threshold, _skip=skip, _ind_layers=ind_layers,
+               threshold, tok_seed, _skip=skip, _ind_layers=ind_layers,
                _block=block, _k=k):
             return M.step_k(cfg, params, x_tok, block_start, kv, ind,
-                            conf, occ, alpha, threshold, k=_k,
+                            conf, occ, alpha, threshold, tok_seed, k=_k,
                             block=_block, skip=_skip, mask_id=tasks.MASK,
-                            indicator="h", ind_layers=_ind_layers)
+                            eos_id=tasks.EOS, indicator="h",
+                            ind_layers=_ind_layers)
 
         b.lower(
             name,
@@ -308,6 +309,7 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                 sds((batch,), jnp.int32),              # occupancy mask
                 sds((), jnp.float32),                  # alpha
                 sds((), jnp.float32),                  # threshold
+                sds((2, batch, block), jnp.int32),     # tok_seed
             ],
             {
                 "kind": "step_apply_k", "batch": batch, "block": block,
@@ -319,9 +321,10 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                 "indicator": "h", "kv_len": ctx,
                 "retained_outputs": CHAINED,
                 "input_names": ["x_tok", "block_start", "kv", "ind",
-                                "conf", "occ", "alpha", "threshold"],
+                                "conf", "occ", "alpha", "threshold",
+                                "tok_seed"],
                 "output_names": ["logits", "pos", "kv", "ind", "conf",
-                                 "committed"],
+                                 "committed", "commit_pos", "commit_tok"],
             },
         )
 

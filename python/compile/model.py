@@ -482,50 +482,95 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
             kv_block.astype(CACHE_DT), ind_block.astype(CACHE_DT))
 
 
-def _commit_unmask(x_tok, logits, pos, block_start, occ_row, threshold,
-                   mask_id):
-    """One in-graph greedy/threshold unmask decision over the surviving
-    rows: always commit the highest-confidence masked row, plus every
-    masked row whose confidence clears ``threshold`` (so ``threshold >
-    1`` means exactly one commit per iteration — low-confidence greedy).
-    Returns ``(x_tok_new, n_committed i32 [B])``; vacant rows commit
-    nothing."""
-    _, kf, _ = logits.shape
-    prob = jax.nn.softmax(logits, axis=-1).max(-1)            # [B, kf]
-    tok_hat = jnp.argmax(logits.at[:, :, mask_id].set(-jnp.inf),
-                         axis=-1).astype(jnp.int32)           # [B, kf]
+def _commit_unmask(x_tok, logits, pos, block_start, conf_blk, tok_hat,
+                   tok_noeos, occ_row, threshold, mask_id, eos_id):
+    """One in-graph unmask decision over the FULL block window,
+    replicating the host sampler's rule exactly: commit the
+    highest-confidence masked position — confidence read from the
+    chained state ``conf_blk``, the same values the host conf mirror
+    holds, with the LAST maximum winning ties like Rust's ``max_by`` —
+    plus every masked position whose confidence clears ``threshold``
+    (``threshold > 1`` disables parallel commits — low-confidence
+    greedy). Token choice replays the host rule too: argmax with the
+    mask id banned, and EOS banned while non-EOS content exists to the
+    position's right (the §B.2 EOS guard; under blockwise decode every
+    later block is still fully masked, so the block window sees all the
+    content the host's gen-region scan would). ``tok_hat`` /
+    ``tok_noeos`` are chained per-position argmax caches ([B, block]
+    i32, seeded from the host logits mirror and refreshed here at this
+    iteration's surviving rows), so a position the skip chain dropped
+    this iteration still commits the token the host mirror would have
+    sampled from its stale logits row. Returns ``(x_tok_new, tok_hat,
+    tok_noeos, n_committed i32 [B], greedy_rel i32 [B], greedy_tok i32
+    [B])``; vacant rows commit nothing and their greedy pos/tok are
+    don't-cares."""
+    _, blk = x_tok.shape
     rel = (pos - block_start).astype(jnp.int32)               # [B, kf]
-    cur = jnp.take_along_axis(x_tok, rel, axis=1)             # [B, kf]
-    is_masked = (cur == mask_id) & occ_row[:, None]
-    cand = jnp.where(is_masked, prob, -jnp.inf)
-    best = jnp.argmax(cand, axis=1)                           # [B]
-    commit = (is_masked & (prob >= threshold)) | (
-        (jnp.arange(kf)[None] == best[:, None]) & is_masked)
-    new_tok = jnp.where(commit, tok_hat, cur)
-    x_new = _scatter_rows(x_tok[:, :, None], rel,
-                          new_tok[:, :, None])[..., 0]
-    return x_new, commit.sum(axis=1).astype(jnp.int32)
+    # refresh the argmax caches at the surviving rows (occupancy-gated:
+    # spectator rows' logits are garbage by the row-filter contract)
+    banned = logits.at[:, :, mask_id].set(-jnp.inf)
+    hat = jnp.argmax(banned, axis=-1).astype(jnp.int32)       # [B, kf]
+    noeos = jnp.argmax(banned.at[:, :, eos_id].set(-jnp.inf),
+                       axis=-1).astype(jnp.int32)             # [B, kf]
+    o2 = occ_row[:, None]
+    tok_hat = jnp.where(
+        o2, _scatter_rows(tok_hat[:, :, None], rel,
+                          hat[:, :, None])[..., 0], tok_hat)
+    tok_noeos = jnp.where(
+        o2, _scatter_rows(tok_noeos[:, :, None], rel,
+                          noeos[:, :, None])[..., 0], tok_noeos)
+    # selection over the whole block from the chained confidence —
+    # decide_unmask's rule; reversed argmax picks the LAST maximum
+    is_masked = (x_tok == mask_id) & o2                       # [B, blk]
+    cand = jnp.where(is_masked, conf_blk, -jnp.inf)
+    best = blk - 1 - jnp.argmax(cand[:, ::-1], axis=1)        # [B]
+    # EOS guard: strictly-right content within the block window
+    content = (x_tok != mask_id) & (x_tok != eos_id)
+    right = jnp.cumsum(content[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
+    has_after = (right - content.astype(jnp.int32)) > 0       # [B, blk]
+    choice = jnp.where(has_after, tok_noeos, tok_hat)         # [B, blk]
+    commit = is_masked & ((jnp.arange(blk)[None] == best[:, None])
+                          | (conf_blk > threshold))
+    x_new = jnp.where(commit, choice, x_tok)
+    greedy_tok = jnp.take_along_axis(choice, best[:, None], axis=1)[:, 0]
+    return (x_new, tok_hat, tok_noeos,
+            commit.sum(axis=1).astype(jnp.int32),
+            best.astype(jnp.int32), greedy_tok)
 
 
 def step_k(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
-           ind_cache, conf, occ, alpha, threshold, *, k, block, skip,
-           mask_id, indicator="h", ind_layers=None, use_pallas=True,
-           kv_tile=64):
+           ind_cache, conf, occ, alpha, threshold, tok_seed, *, k, block,
+           skip, mask_id, eos_id, indicator="h", ind_layers=None,
+           use_pallas=True, kv_tile=64):
     """`k` diffusion iterations unrolled in-graph: each inner iteration
     runs `step(apply=True)` over the chained kv/ind/conf state, then
-    commits tokens with [`_commit_unmask`] — greedy (highest-confidence
-    masked row) plus any row clearing `threshold` — and feeds the
-    advanced block tokens straight into the next iteration. The host
-    round-trip is paid once for the whole run: token rows and the
-    occupancy mask ship on uplink, and only the **final** iteration's
-    selected logit rows + positions come back, plus a per-slot
-    committed-token count (the host mirror replays the k decisions from
-    its own state; the count is the cross-check). Scheduling contract:
-    the caller must guarantee the block cannot complete before the final
-    inner iteration (the Rust scheduler caps k at the masked count), so
-    fused runs are trajectory-exact against k single steps."""
+    commits tokens with [`_commit_unmask`] — the host sampler's greedy
+    rule (highest-confidence masked block position by the chained
+    confidence, mask banned, EOS guarded) plus any position clearing
+    `threshold` — and feeds the advanced block tokens straight into the
+    next iteration. The host round-trip is paid once for the whole run.
+    Uplink: token rows, the occupancy mask, and ``tok_seed`` ([2, B,
+    block] i32 — the host logits mirror's per-position argmax with the
+    mask banned, and with mask+EOS banned), which seeds the argmax
+    caches so positions that never survive an inner iteration's skip
+    still commit what the host would have. Downlink: the **final**
+    iteration's selected logit rows + positions, the per-iteration
+    greedy commits ``commit_pos`` / ``commit_tok`` ([B, k] i32,
+    block-relative; the host applies these directly — it never replays
+    decisions from the final iteration's logits, which would diverge
+    from the per-iteration logits the in-graph commits actually used),
+    and a per-slot committed-token count auditing that each inner
+    iteration committed exactly one token. Scheduling contract: the
+    caller must guarantee the block cannot complete before the final
+    inner iteration (the Rust scheduler caps k at the masked count) and
+    that every slot decodes greedily with the EOS guard on, so fused
+    runs are trajectory-exact against k single steps."""
     occ_row = occ.astype(jnp.bool_)
+    gen0 = cfg.prompt_len
+    tok_hat = tok_seed[0]
+    tok_noeos = tok_seed[1]
     committed = jnp.zeros((x_tok.shape[0],), jnp.int32)
+    commit_pos, commit_tok = [], []
     logits = pos = None
     for _ in range(k):
         logits, pos, kv_cache, ind_cache, conf = step(
@@ -533,10 +578,16 @@ def step_k(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
             alpha, block=block, skip=skip, indicator=indicator,
             ind_layers=ind_layers, kv_len=cfg.ctx, use_pallas=use_pallas,
             kv_tile=kv_tile, apply=True, occ=occ)
-        x_tok, n = _commit_unmask(x_tok, logits, pos, block_start,
-                                  occ_row, threshold, mask_id)
+        conf_blk = jax.lax.dynamic_slice_in_dim(
+            conf, block_start - gen0, block, axis=1)
+        x_tok, tok_hat, tok_noeos, n, g_rel, g_tok = _commit_unmask(
+            x_tok, logits, pos, block_start, conf_blk, tok_hat,
+            tok_noeos, occ_row, threshold, mask_id, eos_id)
         committed = committed + n
-    return logits, pos, kv_cache, ind_cache, conf, committed
+        commit_pos.append(g_rel)
+        commit_tok.append(g_tok)
+    return (logits, pos, kv_cache, ind_cache, conf, committed,
+            jnp.stack(commit_pos, axis=1), jnp.stack(commit_tok, axis=1))
 
 
 # ---------------------------------------------------------------------------

@@ -257,57 +257,130 @@ def test_step_apply_passes_vacant_rows_through(setup):
     np.testing.assert_allclose(ia[:, 1:], ih[:, 1:])
 
 
+def _np_greedy_commit(x_row, conf_row, hat_row, noeos_row, mask, eos):
+    """The host sampler's greedy decision for one row in numpy: the
+    highest-confidence masked position wins (LAST max on ties, like
+    Rust's `max_by`); EOS is suppressed while non-EOS content sits to
+    the position's right (§B.2 guard)."""
+    masked = np.where(x_row == mask)[0]
+    vals = conf_row[masked]
+    best = int(masked[len(vals) - 1 - int(np.argmax(vals[::-1]))])
+    content = (x_row != mask) & (x_row != eos)
+    tok = noeos_row[best] if content[best + 1:].any() else hat_row[best]
+    return best, int(tok)
+
+
 def test_step_k_chains_commits_between_inner_iterations(setup):
-    """A fused k=2 run must equal: one apply-step, a greedy commit of the
-    highest-confidence masked row (numpy replay of the in-graph rule),
-    then a second apply-step on the advanced tokens — and must report
-    exactly one committed token per inner iteration per occupied row
-    when the threshold disables parallel commits."""
+    """A fused k=2 run must equal: one apply-step, the HOST greedy
+    commit rule (highest-confidence masked block position by the
+    chained confidence, argmax caches refreshed at the surviving rows),
+    then a second apply-step on the advanced tokens. The downlinked
+    `commit_pos`/`commit_tok` must name exactly the replayed commits —
+    the host applies them directly — and the committed count must be
+    one per inner iteration per occupied row when the threshold
+    disables parallel commits."""
     cfg, params, toks, logits, kv, ind, mass = setup
     B = toks.shape[0]
-    conf = jnp.asarray(np.random.RandomState(11).rand(B, cfg.gen_len),
-                       jnp.float32)
+    rs = np.random.RandomState(11)
+    conf = jnp.asarray(rs.rand(B, cfg.gen_len), jnp.float32)
     skip = [(1, 0.5), (2, 0.5)]
     sl = [1, 2]
-    MASK = 1
+    MASK, EOS = 1, 2
     x0 = jnp.full((B, 8), MASK, jnp.int32)
     occ = jnp.asarray([1] + [0] * (B - 1), jnp.int32)
+    seed = rs.randint(4, 60, (2, B, 8)).astype(np.int32)
     fused = M.step_k(cfg, params, x0, jnp.int32(cfg.prompt_len), kv,
                      ind["h"], conf, occ, jnp.float32(0.5),
-                     jnp.float32(2.0), k=2, block=8, skip=skip,
-                     mask_id=MASK, ind_layers=sl, use_pallas=False)
-    # threshold 2.0 > any softmax prob → greedy only: one commit per
+                     jnp.float32(2.0), jnp.asarray(seed), k=2, block=8,
+                     skip=skip, mask_id=MASK, eos_id=EOS, ind_layers=sl,
+                     use_pallas=False)
+    # threshold 2.0 > any confidence → greedy only: one commit per
     # inner iteration for the occupied row, none for the vacant row
     np.testing.assert_array_equal(np.asarray(fused[5]),
                                   [2] + [0] * (B - 1))
-    # manual replay of iteration 1 + the commit rule in numpy
-    s1 = M.step(cfg, params, x0, jnp.int32(cfg.prompt_len), kv, ind["h"],
-                conf, jnp.float32(0.5), block=8, skip=skip, ind_layers=sl,
-                use_pallas=False, apply=True, occ=occ)
-    lg, pos = np.asarray(s1[0]), np.asarray(s1[1])
-    prob = np.asarray(jax.nn.softmax(s1[0], axis=-1).max(-1))
-    lg_banned = lg.copy()
-    lg_banned[:, :, MASK] = -np.inf
-    tok_hat = lg_banned.argmax(-1)
-    x1 = np.asarray(x0).copy()
-    j = int(prob[0].argmax())            # all block rows start masked
-    x1[0, pos[0, j] - cfg.prompt_len] = tok_hat[0, j]
-    s2 = M.step(cfg, params, jnp.asarray(x1), jnp.int32(cfg.prompt_len),
-                s1[2], s1[3], s1[4], jnp.float32(0.5), block=8, skip=skip,
-                ind_layers=sl, use_pallas=False, apply=True, occ=occ)
+    # manual replay: k=1 apply-steps + the host commit rule in numpy
+    hat, noeos = seed[0].copy(), seed[1].copy()
+    x = np.full((B, 8), MASK, np.int32)
+    kv_c, ind_c, conf_c = kv, ind["h"], conf
+    commits = []
+    st = None
+    for _ in range(2):
+        st = M.step(cfg, params, jnp.asarray(x), jnp.int32(cfg.prompt_len),
+                    kv_c, ind_c, conf_c, jnp.float32(0.5), block=8,
+                    skip=skip, ind_layers=sl, use_pallas=False,
+                    apply=True, occ=occ)
+        kv_c, ind_c, conf_c = st[2], st[3], st[4]
+        lg, pos = np.asarray(st[0]), np.asarray(st[1])
+        lg_m = lg.copy()
+        lg_m[:, :, MASK] = -np.inf
+        lg_me = lg_m.copy()
+        lg_me[:, :, EOS] = -np.inf
+        rel = pos[0] - cfg.prompt_len
+        hat[0, rel] = lg_m[0].argmax(-1)
+        noeos[0, rel] = lg_me[0].argmax(-1)
+        conf_blk = np.asarray(conf_c)[0, :8]
+        p, t = _np_greedy_commit(x[0], conf_blk, hat[0], noeos[0],
+                                 MASK, EOS)
+        x[0, p] = t
+        commits.append((p, t))
+    # the downlinked per-iteration commits are exactly the replayed ones
+    np.testing.assert_array_equal(np.asarray(fused[6])[0],
+                                  [p for p, _ in commits])
+    np.testing.assert_array_equal(np.asarray(fused[7])[0],
+                                  [t for _, t in commits])
     # the fused downlink is the final iteration's logits/pos, and the
     # chained caches equal the replayed second step's
-    np.testing.assert_array_equal(np.asarray(fused[1]), np.asarray(s2[1]))
-    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(s2[0]),
+    np.testing.assert_array_equal(np.asarray(fused[1]), np.asarray(st[1]))
+    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(st[0]),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(
         np.asarray(fused[2].astype(jnp.float32)),
-        np.asarray(s2[2].astype(jnp.float32)))
+        np.asarray(st[2].astype(jnp.float32)))
     np.testing.assert_allclose(
         np.asarray(fused[3].astype(jnp.float32)),
-        np.asarray(s2[3].astype(jnp.float32)))
-    np.testing.assert_allclose(np.asarray(fused[4]), np.asarray(s2[4]),
+        np.asarray(st[3].astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(fused[4]), np.asarray(st[4]),
                                rtol=1e-5)
+
+
+def test_commit_unmask_eos_guard_and_argmax_caches():
+    """Pure-function check of the in-graph commit rule: EOS is banned
+    at a position while non-EOS content sits to its right (the host
+    sampler's §B.2 guard), tail EOS stays allowed, and a position the
+    skip chain dropped this iteration commits from the seeded argmax
+    caches — the host logits mirror's token, not a replayed one."""
+    B, blk, V = 1, 4, 8
+    MASK, EOS = 1, 2
+    x = jnp.asarray([[MASK, MASK, 5, MASK]], jnp.int32)  # content at 2
+    # surviving rows: block positions 0 and 3; EOS argmax, 4 second
+    logits = np.zeros((B, 2, V), np.float32)
+    logits[0, :, EOS] = 9.0
+    logits[0, :, 4] = 5.0
+    pos = jnp.asarray([[10, 13]], jnp.int32)             # block_start 10
+    seed = jnp.full((B, blk), 7, jnp.int32)
+    occ = jnp.asarray([True])
+    args = (x, jnp.asarray(logits), pos, jnp.int32(10))
+    tail = (occ, jnp.float32(2.0), MASK, EOS)
+    # position 0 wins; content at 2 is to its right → EOS suppressed
+    conf = jnp.asarray([[0.9, 0.8, 0.0, 0.1]], jnp.float32)
+    x_new, hat, noeos, n, g_rel, g_tok = M._commit_unmask(
+        *args, conf, seed, seed, *tail)
+    assert (int(g_rel[0]), int(g_tok[0]), int(n[0])) == (0, 4, 1)
+    np.testing.assert_array_equal(np.asarray(x_new), [[4, MASK, 5, MASK]])
+    # argmax caches: surviving rows refreshed, dropped rows keep seed
+    np.testing.assert_array_equal(np.asarray(hat), [[EOS, 7, 7, EOS]])
+    np.testing.assert_array_equal(np.asarray(noeos), [[4, 7, 7, 4]])
+    # tail position wins → nothing to its right → EOS fill allowed
+    conf = jnp.asarray([[0.1, 0.2, 0.0, 0.9]], jnp.float32)
+    _, _, _, _, g_rel, g_tok = M._commit_unmask(*args, conf, seed, seed,
+                                                *tail)
+    assert (int(g_rel[0]), int(g_tok[0])) == (3, EOS)
+    # a dropped masked row wins → token comes from the seeded cache
+    # (guarded: content at 2 sits to position 1's right)
+    conf = jnp.asarray([[0.1, 0.9, 0.0, 0.2]], jnp.float32)
+    _, _, _, _, g_rel, g_tok = M._commit_unmask(*args, conf, seed, seed,
+                                                *tail)
+    assert (int(g_rel[0]), int(g_tok[0])) == (1, 7)
 
 
 def test_prefill_apply_refreshes_only_masked_rows(setup):

@@ -148,10 +148,11 @@ def test_apply_variants_lower_to_parseable_hlo():
 
     def step_k_fn(*flat):
         p = M.params_from_flat(cfg, flat[:len(params)])
-        x_tok, bs, kv, ind, conf, occ, alpha, thr = flat[len(params):]
+        x_tok, bs, kv, ind, conf, occ, alpha, thr, seed = flat[len(params):]
         return M.step_k(cfg, p, x_tok, bs, kv, ind, conf, occ, alpha,
-                        thr, k=2, block=blk, skip=[(1, 0.5)],
-                        mask_id=tasks.MASK, ind_layers=[1])
+                        thr, seed, k=2, block=blk, skip=[(1, 0.5)],
+                        mask_id=tasks.MASK, eos_id=tasks.EOS,
+                        ind_layers=[1])
 
     text = lower_to_hlo_text(
         step_k_fn, *params,
@@ -163,6 +164,7 @@ def test_apply_variants_lower_to_parseable_hlo():
         jax.ShapeDtypeStruct((B,), jnp.int32),
         jax.ShapeDtypeStruct((), jnp.float32),
         jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((2, B, blk), jnp.int32),
     )
     assert " topk(" not in text
 

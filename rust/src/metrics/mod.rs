@@ -332,15 +332,20 @@ impl Metrics {
             "esdllm_d2h_bytes_shipped_per_tick {:.1}\n",
             self.d2h_bytes_shipped.get() as f64 / ticks as f64
         ));
-        // mean iterations a fused dispatch advanced; 1.0 when nothing
-        // fused (every dispatch is a single iteration)
+        // mean iterations a FUSED dispatch advanced (unfused step
+        // dispatches are excluded from both sides — the name says so, a
+        // deployment fusing 1% of its dispatches at k = 8 reports 8.0
+        // here and reads the overall rate off `dispatches_avoided` /
+        // ticks); 1.0 when nothing fused
         let fused = self.fused_execs.get();
         let avg_iters = if fused == 0 {
             1.0
         } else {
             self.inner_iters_fused.get() as f64 / fused as f64
         };
-        out.push_str(&format!("esdllm_avg_iters_per_dispatch {avg_iters:.3}\n"));
+        out.push_str(&format!(
+            "esdllm_avg_iters_per_fused_dispatch {avg_iters:.3}\n"
+        ));
         out.push_str(&format!("esdllm_slot_occupancy {:.4}\n", self.slot_occupancy()));
         out.push_str(&format!(
             "esdllm_tps_per_busy_slot {:.3}\n",
@@ -406,7 +411,7 @@ mod tests {
         assert!(text.contains("esdllm_fused_execs 2"));
         assert!(text.contains("esdllm_inner_iters_fused 7"));
         assert!(text.contains("esdllm_dispatches_avoided 5"));
-        assert!(text.contains("esdllm_avg_iters_per_dispatch 3.500"));
+        assert!(text.contains("esdllm_avg_iters_per_fused_dispatch 3.500"));
         assert!(text.contains("esdllm_resident_chains 2"));
         assert!(text.contains("esdllm_chain_switches 3"));
         assert!(text.contains("esdllm_chain_rebuilds_avoided 1"));

@@ -609,6 +609,13 @@ pub struct DeviceGroupCaches {
     /// device-apply executables take this instead of a host-masked
     /// confidence tensor
     pub occ_mask: HostTensor,
+    /// pooled fused-step argmax-cache seed [2, B, block] (i32): row 0
+    /// the host logits mirror's argmax with the mask id banned, row 1
+    /// with mask + EOS banned. The fused executable chains these caches
+    /// in-graph so block positions the skip chain drops in an inner
+    /// iteration still commit the token the host sampler would have
+    /// picked from its mirror
+    pub tok_seed: HostTensor,
     pub stats: TransferStats,
 }
 
@@ -644,6 +651,7 @@ impl DeviceGroupCaches {
                 data: vec![-1.0f32; batch * dims.gen_len],
             },
             occ_mask: HostTensor::I32 { shape: vec![batch], data: vec![0i32; batch] },
+            tok_seed: HostTensor::I32 { shape: vec![2, batch, 0], data: Vec::new() },
             stats: TransferStats::default(),
         }
     }
@@ -727,6 +735,58 @@ impl DeviceGroupCaches {
         };
         self.stats.record(TransferKind::Tokens, out.shipped, out.full);
         out
+    }
+
+    /// Stage the fused step's argmax-cache seed [2, B, block] (i32) from
+    /// the host logits mirror: for each block position of the stepped
+    /// slots, the argmax with the mask id banned (row 0) and with mask +
+    /// EOS banned (row 1) — first max on ties, the same convention as
+    /// the host sampler's `argmax` and the executable's in-graph argmax.
+    /// No ledger entry here: the fused planner (`sync_step_device_k`)
+    /// accounts this uplink, so both backends stay byte-exact without
+    /// the sim materializing a seed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_tok_seed(
+        &mut self,
+        caches: &GroupCaches,
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+        mask_id: i32,
+        eos_id: i32,
+    ) {
+        let batch = self.batch;
+        let gen = self.dims.gen_len;
+        let vocab = self.dims.vocab;
+        let g0 = block_start - self.dims.prompt_len;
+        if let HostTensor::I32 { shape, data } = &mut self.tok_seed {
+            shape.clear();
+            shape.extend_from_slice(&[2, batch, block]);
+            data.resize(2 * batch * block, 0);
+            for &b in slots {
+                for j in 0..block {
+                    let row = (b * gen + g0 + j) * vocab;
+                    let lg = &caches.logits[row..row + vocab];
+                    let (mut hat, mut hat_v) = (0usize, f32::NEG_INFINITY);
+                    let (mut noe, mut noe_v) = (0usize, f32::NEG_INFINITY);
+                    for (t, &v) in lg.iter().enumerate() {
+                        if t as i32 == mask_id {
+                            continue;
+                        }
+                        if v > hat_v {
+                            hat = t;
+                            hat_v = v;
+                        }
+                        if t as i32 != eos_id && v > noe_v {
+                            noe = t;
+                            noe_v = v;
+                        }
+                    }
+                    data[b * block + j] = hat as i32;
+                    data[(batch + b) * block + j] = noe as i32;
+                }
+            }
+        }
     }
 
     /// Sync the dense KV input for a step reading `slots`' rows. First
@@ -990,18 +1050,23 @@ impl DeviceGroupCaches {
 
     /// Input sync for one **fused** device-apply step (`step_apply_k`):
     /// one dispatch that runs `k` diffusion iterations in-graph, with
-    /// greedy/threshold unmasking between inner iterations, over the
-    /// same chained kv/ind/conf tensors. Uplink is identical to a single
-    /// step (token rows + the occupancy mask ship **once** for the whole
-    /// run — the device advances its own tokens between inner
-    /// iterations); downlink is the **final** iteration's selected logit
-    /// rows plus positions, plus the per-slot committed-count vector
-    /// (`B × 4` bytes). Confidence is computed in-graph `k` times, the
-    /// equivalent of `k` Host-apply block downloads is avoided, and the
-    /// fused ledger records one `fused_execs`, `k` `inner_iters_fused`,
-    /// and `k − 1` `dispatches_avoided`. Both backends route their fused
-    /// ticks through this one planner, which is what keeps the sim and
-    /// PJRT fused ledgers byte-exact.
+    /// greedy unmasking between inner iterations (the host sampler rule
+    /// replicated in-graph, EOS guard included), over the same chained
+    /// kv/ind/conf tensors. Uplink is a single step's (token rows + the
+    /// occupancy mask ship **once** for the whole run — the device
+    /// advances its own tokens between inner iterations) plus the
+    /// `[2, B, block]` i32 argmax-cache seed (`stage_tok_seed`);
+    /// downlink is the **final** iteration's selected logit rows plus
+    /// positions, the per-iteration committed positions and tokens
+    /// (`commit_pos`/`commit_tok`, `2 × B × k × 4` bytes — the host
+    /// applies these directly instead of replaying decisions), and the
+    /// per-slot committed-count audit vector (`B × 4` bytes).
+    /// Confidence is computed in-graph `k` times, the equivalent of `k`
+    /// Host-apply block downloads is avoided, and the fused ledger
+    /// records one `fused_execs`, `k` `inner_iters_fused`, and `k − 1`
+    /// `dispatches_avoided`. Both backends route their fused ticks
+    /// through this one planner, which is what keeps the sim and PJRT
+    /// fused ledgers byte-exact.
     #[allow(clippy::too_many_arguments)]
     pub fn sync_step_device_k(
         &mut self,
@@ -1093,8 +1158,18 @@ impl DeviceGroupCaches {
         // their positions (intermediate iterations never touch the bus)
         self.account_d2h_logits(n_sel, true);
         if k > 1 {
-            // plus the per-slot committed-count vector the fused exe
-            // returns so the host can audit its replayed commits
+            // the argmax-cache seed [2, B, block] i32 rides the uplink
+            // so rows the skip chain drops mid-run still commit the host
+            // mirror's token
+            self.stats.record(
+                TransferKind::Tokens,
+                (2 * slots.len() * block * 4) as u64,
+                (2 * self.batch * block * 4) as u64,
+            );
+            // plus, downlinked: the per-iteration committed positions
+            // and tokens [B, k] i32 each (applied directly by the host)
+            // and the per-slot committed-count audit vector
+            self.stats.d2h_bytes_shipped += (2 * self.batch * k * 4) as u64;
             self.stats.d2h_bytes_shipped += (self.batch * 4) as u64;
             self.stats.fused_execs += 1;
             self.stats.inner_iters_fused += k as u64;

@@ -60,30 +60,43 @@
 //! With `SchedCfg::k >= 2` (the `EngineCfg::fused_k` knob), runs of
 //! consecutive ES iterations dispatch as ONE device execution:
 //! [`StepBackend::run_step_fused`] runs a `step_apply_k` executable
-//! that unrolls the diffusion loop in-graph — greedy unmasking between
-//! inner iterations, confidence recomputed in-graph each time, the
-//! retained kv/ind/conf chain threaded through the unrolled body — and
-//! downlinks only the FINAL iteration's selected logit rows plus a
-//! per-slot committed-count vector. The scheduler chooses the fusible
-//! depth so trajectories stay exact vs k = 1: a slot is eligible only
-//! under greedy sampling (temperature ≤ 0, no parallel threshold —
-//! exactly one commit per inner iteration), the depth is capped at the
-//! refresh policy's consecutive-ES run length (peeked via `plan_es`)
-//! and at the block's remaining masked positions (so a block can
-//! complete only at the final inner iteration), and a step group fuses
-//! at the minimum depth over its members. The backend may fuse fewer
-//! iterations than requested — it floors to the deepest compiled
-//! `es_applyk{K}` variant ([`crate::engine::FUSED_KS`]) — or decline
-//! outright (returns 0: Host apply mode, no fused executables), in
-//! which case the tick falls back to the single-step path; the tail of
-//! a block always runs on the k = 1 executables. After a fused run the
-//! unmask loop replays the inner iterations' greedy decisions
-//! host-side, advancing the per-sequence counters by the fused depth.
-//! Host-visible early exit — EOS retirement and block-boundary
-//! admission — is checked once per fused run rather than once per
-//! iteration: that coarser cadence is what `k` trades for dispatch
-//! amortization (the remaining-masked cap keeps the trade lossless:
-//! nothing retirable can appear before the final inner iteration).
+//! that unrolls the diffusion loop in-graph — the HOST sampler rule
+//! replicated between inner iterations (highest-confidence masked
+//! block position, last max on ties, EOS guard, argmax token caches
+//! seeded from the host logits mirror so rows the skip chain drops
+//! still commit the host's token), confidence recomputed in-graph each
+//! time, the retained kv/ind/conf chain threaded through the unrolled
+//! body — and downlinks the FINAL iteration's selected logit rows plus
+//! each inner iteration's committed position and token
+//! (`commit_pos`/`commit_tok`) and a per-slot committed-count audit
+//! vector. The scheduler applies the downlinked commits to its token
+//! mirror DIRECTLY — it never re-derives them from the final
+//! iteration's logits, which would desync the mirror whenever an
+//! earlier iteration's commit changed the later ordering. The
+//! scheduler chooses the fusible depth so trajectories stay exact vs
+//! k = 1: a slot is eligible only under greedy sampling with the
+//! default EOS guard (temperature ≤ 0, no parallel threshold, guard on
+//! — the in-graph rule is exactly that sampler; exactly one commit per
+//! inner iteration), the depth is capped at the refresh policy's
+//! consecutive-ES run length (peeked via `plan_es`) and at the block's
+//! remaining masked positions (so a block can complete only at the
+//! final inner iteration), and a step group fuses at the minimum depth
+//! over its members. The backend may fuse fewer iterations than
+//! requested — it floors to the deepest compiled `es_applyk{K}`
+//! variant ([`crate::engine::FUSED_KS`]) — or decline outright
+//! (returns 0: Host apply mode, no fused executables), in which case
+//! the tick falls back to the single-step path; the tail of a block
+//! always runs on the k = 1 executables. Host-visible early exit —
+//! EOS retirement and block-boundary admission — is checked once per
+//! fused run rather than once per iteration: that coarser cadence is
+//! what `k` trades for dispatch amortization (the remaining-masked cap
+//! keeps the trade lossless: nothing retirable can appear before the
+//! final inner iteration). One honest residual of the
+//! final-iteration-only logits downlink: host logits/conf mirror rows
+//! refreshed only by inner iterations 1..k−1 lag until the next
+//! download touches them — harmless for decode (the commits themselves
+//! ride the downlink) and refreshed wholesale by the next grounding
+//! prefill.
 //!
 //! # Batch classes and pooled residency
 //!
@@ -209,6 +222,12 @@ pub struct FinishedSeq {
     pub gen_s: f64,
 }
 
+/// Per-slot commit transcript of a fused run: for each member of the
+/// dispatched `slots` (same order), the inner iterations' committed
+/// `(gen position, token)` pairs in commit order — one pair per fused
+/// iteration under the greedy eligibility gate.
+pub type FusedCommits = Vec<Vec<(usize, i32)>>;
+
 /// The executable plumbing behind one scheduler tick. Implementations
 /// must merge results for the given `slots` rows only; spectator rows'
 /// outputs are garbage by contract and must be discarded.
@@ -237,14 +256,20 @@ pub trait StepBackend {
     /// Run `k` consecutive ES iterations over `block` positions at
     /// `block_start` as ONE fused device execution, merging the FINAL
     /// iteration's results into the given slots' rows. Returns how many
-    /// iterations were actually fused: a backend may floor `k` to its
-    /// deepest compiled unroll depth, and 0 means "not supported here"
-    /// (no fused executables, Host apply mode) — the scheduler then
-    /// falls back to [`StepBackend::run_step`]. The caller guarantees
-    /// every slot decodes greedily (exactly one commit per iteration)
-    /// and has at least `k` masked positions and consecutive ES plans
-    /// ahead, so replaying `k` greedy unmask decisions host-side
-    /// against the fused output is trajectory-exact.
+    /// iterations were actually fused plus, per member of `slots` (same
+    /// order), the inner iterations' committed `(gen position, token)`
+    /// pairs in commit order — the device picked them with the host
+    /// sampler rule replicated in-graph, and the scheduler applies them
+    /// to its token mirror verbatim (replaying against the single
+    /// downlinked final-iteration logits would diverge whenever an
+    /// earlier commit reorders the later iterations). A fused count of
+    /// 0 means "not supported here" (no fused executables, Host apply
+    /// mode; a backend may also floor `k` to its deepest compiled
+    /// unroll depth) — the scheduler then falls back to
+    /// [`StepBackend::run_step`]. The caller guarantees every slot
+    /// decodes greedily with the default EOS guard (exactly one commit
+    /// per iteration, the in-graph rule) and has at least `k` masked
+    /// positions and consecutive ES plans ahead.
     fn run_step_fused(
         &mut self,
         _tokens: &[i32],
@@ -253,8 +278,8 @@ pub trait StepBackend {
         _k: usize,
         _slots: &[usize],
         _caches: &mut GroupCaches,
-    ) -> Result<usize> {
-        Ok(0)
+    ) -> Result<(usize, FusedCommits)> {
+        Ok((0, FusedCommits::new()))
     }
     /// Cumulative host→device transfer ledger for this backend (logical
     /// bytes from the resident-cache planner; zeros for backends without
@@ -768,16 +793,17 @@ impl<'a> GroupScheduler<'a> {
         // 3. block steps, grouped by (block index, plan): sequences at
         //    different blocks each get a step at their own window.
         //    Groups of consecutive ES iterations may fuse into one
-        //    k-step dispatch (see the module docs); `reps` records how
-        //    many iterations each slot advanced so the unmask loop
-        //    below replays that many greedy decisions.
+        //    k-step dispatch (see the module docs); `fused_commits`
+        //    collects each fused slot's downlinked per-iteration
+        //    commits so the unmask loop below applies them directly.
         let d = *self.backend.dims();
         let (mask, eos) = {
             let tok = self.backend.tokenizer();
             (tok.mask, tok.eos)
         };
         let block = self.cfg.block;
-        let mut reps = vec![1usize; self.states[ac].batch];
+        let mut fused_commits: Vec<Option<Vec<(usize, i32)>>> =
+            vec![None; self.states[ac].batch];
         let groups: Vec<((usize, u8), Vec<usize>)> = step_groups.into_iter().collect();
         for ((blk, plan_tag), group) in groups {
             let plan = if plan_tag == 0 { StepPlan::DualStep } else { StepPlan::EsStep };
@@ -786,15 +812,19 @@ impl<'a> GroupScheduler<'a> {
             // per-slot bound — the refresh policy's consecutive-ES run
             // length and the block's remaining masked positions, under
             // greedy-only eligibility (each inner iteration commits
-            // exactly one token, so the host replay is exact and a
-            // block can complete only at the final inner iteration)
+            // exactly one token, so a block can complete only at the
+            // final inner iteration). The in-graph rule applies the EOS
+            // guard unconditionally, so a guard-off sampler must take
+            // the single-step path to keep its trajectory exact.
             let mut fuse = 1usize;
             if plan == StepPlan::EsStep && self.cfg.k >= 2 && self.cfg.method == Method::EsDllm {
                 let st = &self.states[ac];
                 fuse = self.cfg.k;
                 for &s in &group {
                     let seq = st.slots[s].as_ref().unwrap();
-                    if seq.sampler.temperature > 0.0 || seq.sampler.parallel_threshold.is_some()
+                    if seq.sampler.temperature > 0.0
+                        || seq.sampler.parallel_threshold.is_some()
+                        || !seq.sampler.eos_guard
                     {
                         fuse = 1;
                         break;
@@ -818,9 +848,10 @@ impl<'a> GroupScheduler<'a> {
                 }
             }
             let mut fused_n = 0usize;
+            let mut commits = FusedCommits::new();
             if fuse >= 2 {
                 let st = &mut self.states[ac];
-                fused_n = self.backend.run_step_fused(
+                (fused_n, commits) = self.backend.run_step_fused(
                     &st.tokens,
                     block_start,
                     block,
@@ -830,10 +861,19 @@ impl<'a> GroupScheduler<'a> {
                 )?;
             }
             if fused_n >= 2 {
-                // one dispatch advanced every member fused_n iterations
-                for &s in &group {
+                // one dispatch advanced every member fused_n iterations;
+                // stash each member's downlinked commit transcript for
+                // the unmask loop
+                if commits.len() != group.len() {
+                    return Err(anyhow!(
+                        "fused run returned {} commit transcripts for {} slots",
+                        commits.len(),
+                        group.len()
+                    ));
+                }
+                for (&s, slot_commits) in group.iter().zip(commits) {
                     self.states[ac].slots[s].as_mut().unwrap().n_es += fused_n;
-                    reps[s] = fused_n;
+                    fused_commits[s] = Some(slot_commits);
                 }
                 self.n_es += 1;
                 self.n_fused += 1;
@@ -861,12 +901,46 @@ impl<'a> GroupScheduler<'a> {
             }
         }
 
-        // 4. unmask decisions, per slot over its own current block —
-        //    repeated `reps` times for slots a fused dispatch advanced,
-        //    rebuilding the input between decisions (each commit changes
-        //    the gen row the next decision reads)
+        // 4. unmask decisions, per slot over its own current block. A
+        //    slot a fused dispatch advanced applies the downlinked
+        //    per-iteration commits VERBATIM — the device made those
+        //    decisions with the host rule replicated in-graph, and
+        //    re-deriving them from the final iteration's logits would
+        //    desync the token mirror whenever an earlier commit changed
+        //    the later ordering. Unfused slots decide host-side as
+        //    always. Greedy fused slots never consume rng (temperature
+        //    ≤ 0 returns before any draw), so skipping their host
+        //    decisions preserves rng parity with k = 1.
         for &s in &occupied {
-            for _ in 0..reps[s] {
+            if let Some(commits) = fused_commits[s].take() {
+                let block_lo =
+                    self.states[ac].slots[s].as_ref().unwrap().block_idx * block;
+                for (p, t) in commits {
+                    let cell = s * d.ctx + d.prompt_len + p;
+                    let st = &mut self.states[ac];
+                    if p < block_lo || p >= block_lo + block || st.tokens[cell] != mask
+                    {
+                        // the device committed outside the block window
+                        // or onto an unmasked position: the in-graph
+                        // transcript contradicts the mirror, so the
+                        // chain built on it is unusable — fail loudly
+                        // rather than continue desynced
+                        self.backend.invalidate_resident(&mut st.caches);
+                        return Err(anyhow!(
+                            "fused commit for slot {s} at gen position {p} \
+                             (token {t}) falls outside block \
+                             [{block_lo}, {}) or hits an unmasked cell",
+                            block_lo + block
+                        ));
+                    }
+                    st.tokens[cell] = t;
+                    let seq = st.slots[s].as_mut().unwrap();
+                    seq.iters += 1;
+                    seq.i_b += 1;
+                }
+                continue;
+            }
+            {
                 let decision = {
                     let st = &mut self.states[ac];
                     let block_lo = st.slots[s].as_ref().unwrap().block_idx * block;
@@ -1378,11 +1452,11 @@ impl StepBackend for PjrtBackend<'_> {
         k: usize,
         slots: &[usize],
         caches: &mut GroupCaches,
-    ) -> Result<usize> {
+    ) -> Result<(usize, FusedCommits)> {
         self.activate(caches);
         let batch = caches.batch;
         if self.residents[&batch].apply_mode() != ApplyMode::Device {
-            return Ok(0); // fused variants exist only on the apply path
+            return Ok((0, FusedCommits::new())); // fused variants exist only on the apply path
         }
         // floor the requested depth to the deepest compiled unroll that
         // fits the run; decline entirely when none was compiled
@@ -1395,17 +1469,19 @@ impl StepBackend for PjrtBackend<'_> {
                     .map(|e| e.kind == ExeKind::StepApplyK)
                     .unwrap_or(false)
         }) else {
-            return Ok(0);
+            return Ok((0, FusedCommits::new()));
         };
         let result = self.step_device_k_impl(depth, tokens, block_start, block, slots, caches);
         if result.is_err() {
             // same contract as run_step: a planner sync that promised a
-            // run which never delivered invalidates the resident state
+            // run which never delivered — or a failed commit audit —
+            // invalidates the resident state (rollback is impossible:
+            // donation already consumed the previous chain buffers)
             if let Some(r) = self.residents.get_mut(&batch) {
                 r.invalidate(caches);
             }
         }
-        result.map(|()| depth)
+        result.map(|commits| (depth, commits))
     }
 
     fn transfer_stats(&self) -> TransferStats {
@@ -1727,15 +1803,20 @@ impl PjrtBackend<'_> {
     }
 
     /// Fused device-apply step: one `step_apply_k` execution runs `k`
-    /// ES iterations in-graph — greedy unmasking between inner
-    /// iterations (argmax commit where confidence wins, occupancy-
-    /// masked), confidence recomputed in-graph each time — chains the
-    /// retained kv/ind/conf outputs exactly like the single-step path,
-    /// and downloads only the FINAL iteration's selected logit rows
-    /// plus the per-slot committed-count vector. The scheduler replays
-    /// the `k` greedy unmask decisions host-side against that downlink
-    /// (exact under the greedy-only eligibility gate); the committed
-    /// counts are the audit channel for the in-graph commits.
+    /// ES iterations in-graph — the host sampler rule replicated
+    /// between inner iterations (highest-confidence masked block
+    /// position, last max on ties, EOS guard, argmax caches seeded
+    /// from the host logits mirror via the `tok_seed` uplink),
+    /// confidence recomputed in-graph each time — chains the retained
+    /// kv/ind/conf outputs exactly like the single-step path, and
+    /// downloads the FINAL iteration's selected logit rows plus each
+    /// inner iteration's committed position and token
+    /// (`commit_pos`/`commit_tok`, returned for the scheduler to apply
+    /// verbatim) and the per-slot committed-count vector, which is
+    /// audited here: a greedy fused run must commit exactly one token
+    /// per inner iteration per dispatched slot, and any other count
+    /// means the in-graph unmask diverged from the contract the chain
+    /// was built on — the caller invalidates the chain on the error.
     fn step_device_k_impl(
         &mut self,
         k: usize,
@@ -1744,7 +1825,7 @@ impl PjrtBackend<'_> {
         block: usize,
         slots: &[usize],
         caches: &mut GroupCaches,
-    ) -> Result<()> {
+    ) -> Result<FusedCommits> {
         let batch = caches.batch;
         let exe = self.arch.exe(&fused_step_exe_name(k, self.cfg.block, batch))?;
         debug_assert_eq!(exe.kind, ExeKind::StepApplyK);
@@ -1754,10 +1835,12 @@ impl PjrtBackend<'_> {
             exe.skip_layers.len()
         };
         let n_sel = exe.final_keep.unwrap_or(block);
+        let (mask, eos) = (self.rt.tokenizer.mask, self.rt.tokenizer.eos);
         // shared planner sync (parity with the sim's fused ledger):
         // one uplink, k in-graph confidence steps, one downlink
         let r = self.residents.get_mut(&batch).expect("activated");
         r.sync_step_device_k(caches, "h", n_ind, n_sel, k, tokens, block_start, block, slots)?;
+        r.stage_tok_seed(caches, block_start, block, slots, mask, eos);
         let chain_missing = || anyhow!("device-apply chain missing despite seeded planner");
         let kv_buf =
             &r.chain.handles.kv_chain.as_ref().ok_or_else(chain_missing)?.buf;
@@ -1768,8 +1851,8 @@ impl PjrtBackend<'_> {
         let start_t = HostTensor::scalar_i32(block_start as i32);
         let alpha_t = HostTensor::scalar_f32(self.cfg.alpha);
         // greedy-only dispatch: an impossible confidence threshold makes
-        // the in-graph unmask commit exactly the argmax winner per inner
-        // iteration, mirroring the host replay
+        // the in-graph unmask commit exactly the greedy winner per inner
+        // iteration, matching the host sampler under the eligibility gate
         let threshold_t = HostTensor::scalar_f32(2.0);
         let retain = exe.retain_flags();
         let args = [
@@ -1781,6 +1864,7 @@ impl PjrtBackend<'_> {
             ExecArg::Host(r.occ_mask.view()),
             ExecArg::Host(alpha_t.view()),
             ExecArg::Host(threshold_t.view()),
+            ExecArg::Host(r.tok_seed.view()),
         ];
         let mut out =
             self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
@@ -1791,9 +1875,53 @@ impl PjrtBackend<'_> {
             out.host_at(pos_i, "pos")?,
             slots,
         )?;
-        // the committed-count vector rides the same downlink; touch it so
-        // a malformed artifact fails here rather than silently
-        let _ = out.host_at(exe.output_index("committed")?, "committed")?;
+        // audit the in-graph commits: greedy fuses commit exactly one
+        // token per inner iteration per occupied slot
+        let committed = out
+            .host_at(exe.output_index("committed")?, "committed")?
+            .as_i32()?
+            .to_vec();
+        for &s in slots {
+            let got = *committed.get(s).ok_or_else(|| {
+                anyhow!("committed vector too short for slot {s} ({exe_n})",
+                        exe_n = exe.name)
+            })?;
+            if got != k as i32 {
+                return Err(anyhow!(
+                    "fused run {exe_n} committed {got} tokens for slot {s}, \
+                     expected exactly {k} (one per inner iteration); the \
+                     in-graph unmask diverged from the greedy contract",
+                    exe_n = exe.name
+                ));
+            }
+        }
+        // the per-iteration commit transcript [B, k] i32 × 2 — convert
+        // block-relative positions to gen-region positions
+        let commit_pos = out
+            .host_at(exe.output_index("commit_pos")?, "commit_pos")?
+            .as_i32()?
+            .to_vec();
+        let commit_tok = out
+            .host_at(exe.output_index("commit_tok")?, "commit_tok")?
+            .as_i32()?
+            .to_vec();
+        let g0 = block_start - self.arch.dims.prompt_len;
+        let mut fused = FusedCommits::with_capacity(slots.len());
+        for &s in slots {
+            let mut row = Vec::with_capacity(k);
+            for i in 0..k {
+                let rel = commit_pos[s * k + i];
+                if rel < 0 || rel as usize >= block {
+                    return Err(anyhow!(
+                        "fused run {exe_n} slot {s} iteration {i}: commit \
+                         position {rel} outside block of {block}",
+                        exe_n = exe.name
+                    ));
+                }
+                row.push((g0 + rel as usize, commit_tok[s * k + i]));
+            }
+            fused.push(row);
+        }
         r.chain.handles.kv_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("kv")?, "kv")?,
             lit: None,
@@ -1808,7 +1936,7 @@ impl PjrtBackend<'_> {
         });
         r.note_step_applied(caches, "h", false, block_start, block, slots);
         self.flush_transfer();
-        Ok(())
+        Ok(fused)
     }
 }
 
@@ -2176,6 +2304,34 @@ mod tests {
         s.admit(input(1, "abcdef", params)).unwrap();
         let f = run_to_drain(&mut s);
         assert_eq!(s.n_fused, 0, "threshold slots are ineligible");
+        assert_eq!(f[0].text, b[0].text);
+        assert_eq!(f[0].iterations, b[0].iterations);
+
+        // the in-graph commit rule bakes the EOS guard in, so a
+        // guard-off sampler (which may legitimately commit an early
+        // EOS the guard would veto) must also stay unfused — and still
+        // decode exactly on the single-step path
+        let guard_off = SamplerCfg { eos_guard: false, ..SamplerCfg::llada() };
+        let mk = |k: usize| {
+            let cfg = SchedCfg {
+                method: Method::EsDllm,
+                block: 8,
+                refresh: RefreshPolicy { prompt_period: 16, block_period: 4 },
+                sampler: guard_off,
+                seed: 0,
+                k,
+                hysteresis: None,
+            };
+            GroupScheduler::new(Box::new(SimBackend::new(SimCfg::default())), 1, cfg)
+                .unwrap()
+        };
+        let mut base = mk(1);
+        base.admit(input(2, "abcdef", SeqParams::default())).unwrap();
+        let b = run_to_drain(&mut base);
+        let mut s = mk(8);
+        s.admit(input(2, "abcdef", SeqParams::default())).unwrap();
+        let f = run_to_drain(&mut s);
+        assert_eq!(s.n_fused, 0, "guard-off slots are ineligible");
         assert_eq!(f[0].text, b[0].text);
         assert_eq!(f[0].iterations, b[0].iterations);
     }

@@ -45,16 +45,18 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::cache::{GroupCaches, StepPlan};
 use crate::manifest::Dims;
+use crate::rng::SplitMix;
 use crate::runtime::resident::{
     chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, ResidencyPool, TransferStats,
 };
+use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
 use crate::tokenizer::Tokenizer;
 
-use super::StepBackend;
+use super::{FusedCommits, StepBackend};
 
 /// Geometry + per-plan simulated latency + apply-mode selection.
 #[derive(Debug, Clone)]
@@ -412,16 +414,17 @@ impl StepBackend for SimBackend {
         k: usize,
         slots: &[usize],
         caches: &mut GroupCaches,
-    ) -> Result<usize> {
+    ) -> Result<(usize, FusedCommits)> {
         if self.cfg.apply != ApplyMode::Device {
-            return Ok(0); // the stateless fallback has no fused variants
+            // the stateless fallback has no fused variants
+            return Ok((0, FusedCommits::new()));
         }
         // the in-graph loop still computes k iterations of model work
         if !self.cfg.es_cost.is_zero() {
             std::thread::sleep(self.cfg.es_cost * k as u32);
         }
         self.activate(caches);
-        let n_layers = self.cfg.dims.n_layers;
+        let d = self.cfg.dims;
         {
             let r = self.residents.get_mut(&caches.batch).expect("activated");
             // one fused planner sync models k inner iterations per
@@ -430,22 +433,65 @@ impl StepBackend for SimBackend {
             // byte-exact on the fused path too
             let n_sel = SimCfg::n_sel(StepPlan::EsStep, block);
             r.sync_step_device_k(
-                caches, "h", n_layers, n_sel, k, tokens, block_start, block, slots,
+                caches, "h", d.n_layers, n_sel, k, tokens, block_start, block, slots,
             )?;
         }
-        let d = &self.cfg.dims;
         let lo = block_start - d.prompt_len;
-        // the final iteration's downlink: position-targeted peaks are
-        // iteration-independent, so one refresh serves the scheduler's
-        // k-decision host replay exactly
+        // the final iteration's downlink refresh (the sim's peaks are
+        // position-targeted and iteration-independent)
         for &s in slots {
             self.write_positions(tokens, s, lo, d.gen_len, caches);
+        }
+        // model the in-graph per-iteration commits: the device replays
+        // the HOST sampler rule between inner iterations, so run that
+        // exact sampler k times over a scratch copy of each slot's gen
+        // row — iteration-independent peaks make the downloaded mirror
+        // valid for every inner iteration
+        let sampler = SamplerCfg::llada();
+        let mut rng = SplitMix::new(0); // greedy: never consulted
+        let mut commits = FusedCommits::with_capacity(slots.len());
+        for &s in slots {
+            let mut gen: Vec<i32> =
+                tokens[s * d.ctx + d.prompt_len..(s + 1) * d.ctx].to_vec();
+            let mut row = Vec::with_capacity(k);
+            for i in 0..k {
+                let dec = decide_unmask(
+                    &sampler,
+                    &UnmaskInput {
+                        logits: &caches.logits
+                            [s * d.gen_len * d.vocab..(s + 1) * d.gen_len * d.vocab],
+                        conf: &caches.conf[s * d.gen_len..(s + 1) * d.gen_len],
+                        gen_tokens: &gen,
+                        block_lo: lo,
+                        block_hi: lo + block,
+                        vocab: d.vocab,
+                        mask_id: self.tok.mask,
+                        eos_id: self.tok.eos,
+                    },
+                    &mut rng,
+                );
+                let (Some(&p), Some(&t)) = (dec.positions.first(), dec.tokens.first())
+                else {
+                    // no masked position left mid-run: the scheduler's
+                    // remaining-masked depth cap was violated upstream —
+                    // the modeled chain is now unaccountable, fail loud
+                    let r = self.residents.get_mut(&caches.batch).expect("activated");
+                    r.invalidate(caches);
+                    return Err(anyhow!(
+                        "fused sim run: slot {s} had nothing to commit at \
+                         inner iteration {i} of {k}"
+                    ));
+                };
+                gen[p] = t;
+                row.push((p, t));
+            }
+            commits.push(row);
         }
         {
             let r = self.residents.get_mut(&caches.batch).expect("activated");
             r.note_step_applied(caches, "h", false, block_start, block, slots);
         }
-        Ok(k)
+        Ok((k, commits))
     }
 
     fn transfer_stats(&self) -> TransferStats {

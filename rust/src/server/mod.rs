@@ -39,7 +39,7 @@
 //! `temperature > 0` or a `threshold` simply decode unfused). The
 //! amortization is visible in `/metrics` via `esdllm_fused_execs`,
 //! `esdllm_inner_iters_fused`, `esdllm_dispatches_avoided`, and
-//! `esdllm_avg_iters_per_dispatch`.
+//! `esdllm_avg_iters_per_fused_dispatch`.
 
 use std::sync::Arc;
 
