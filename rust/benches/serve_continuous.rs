@@ -24,6 +24,15 @@
 //! `chain_rebuilds_avoided > 0` with bounded full-KV seeds. Emits
 //! `artifacts/results/BENCH_residency.json`; runs artifact-free in CI.
 //!
+//! A third section exercises **fault injection + recovery**: the same
+//! Poisson trace runs fault-free and with a seeded Bernoulli fault rate
+//! over every injector event (exec / transfer / alloc / fused
+//! divergence). The recovery ladder — re-ground + bounded retry, fused
+//! depth demotion, LRU eviction — must absorb every transient fault:
+//! the acceptance gate is zero failed requests AND goodput (tokens/s)
+//! ≥ 90% of the fault-free run. Emits
+//! `artifacts/results/BENCH_faults.json`; runs artifact-free in CI.
+//!
 //! Run: `cargo bench --bench serve_continuous` (ESDLLM_BENCH_N overrides
 //! the request count).
 
@@ -274,6 +283,111 @@ fn residency_section(workers: usize, rounds: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fault-trace section: the identical Poisson workload, fault-free vs
+/// a seeded per-event fault rate. Reports the FaultStats ledger and
+/// gates on full recovery (no failed requests) at ≥ 90% of the
+/// fault-free goodput. Emits BENCH_faults.json.
+fn fault_section(n: usize) -> anyhow::Result<()> {
+    let run = |plan: &str| -> anyhow::Result<(usize, usize, f64, u64, [u64; 7])> {
+        let mut cfg = RouterCfg::new(engine_cfg(), std::path::PathBuf::from("/nonexistent"));
+        cfg.engine.fault_plan = esdllm::fault::FaultPlan::parse(plan)
+            .map_err(anyhow::Error::msg)?;
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(8000, 1500, 1000));
+        cfg.batcher = BatcherCfg { max_batch: SLOTS, flush_ms: 5 };
+        cfg.queue_cap = 1024;
+        cfg.mode = SchedMode::Continuous;
+        let router = Router::start(cfg);
+        let trace = workload::poisson_trace(RATE, n, 0xC0117);
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(n);
+        let mut i = 0usize;
+        workload::replay_trace(&trace, |_req| {
+            if let Ok(h) = router.submit(prompt_for(i), SeqParams::default()) {
+                handles.push(h);
+            }
+            i += 1;
+        });
+        let mut completed = 0usize;
+        let mut failed = 0usize;
+        for h in handles {
+            match h.wait() {
+                Ok(_) => completed += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = &router.metrics;
+        let tokens = m.tokens_generated.get();
+        let ledger = [
+            m.faults_injected.get(),
+            m.ticks_retried.get(),
+            m.chains_regrounded.get(),
+            m.fused_k_demotions.get(),
+            m.host_demotions.get(),
+            m.requests_failed.get(),
+            m.timeouts_total.get(),
+        ];
+        router.shutdown();
+        Ok((completed, failed, wall_s, tokens, ledger))
+    };
+
+    let (c0, f0, w0, tok0, _) = run("")?;
+    // ~1% of injector events fault (seeded, deterministic draws): a few
+    // re-ground + retry cycles per hundred ticks at this trace length
+    let (c1, f1, w1, tok1, ledger) = run("rate=0.01,seed=7")?;
+    let goodput0 = tok0 as f64 / w0.max(1e-9);
+    let goodput1 = tok1 as f64 / w1.max(1e-9);
+    let ratio = goodput1 / goodput0.max(1e-9);
+    let [injected, retried, regrounded, demotions_k, demotions_host, req_failed, timeouts] =
+        ledger;
+
+    println!("\n== faults: same {n}-request trace, fault-free vs rate=0.01 ==");
+    println!(
+        "fault-free: {c0} done ({f0} failed) in {w0:.2}s, {goodput0:.1} tok/s; \
+         faulted: {c1} done ({f1} failed) in {w1:.2}s, {goodput1:.1} tok/s \
+         (goodput ×{ratio:.3})"
+    );
+    println!(
+        "recovery ledger: {injected} faults injected, {retried} ticks retried, \
+         {regrounded} chains re-grounded, {demotions_k} fused-k demotions, \
+         {demotions_host} host demotions, {req_failed} requests failed, \
+         {timeouts} timeouts"
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_continuous_faults\",\n  \
+         \"requests\": {n},\n  \"fault_rate\": 0.01,\n  \
+         \"clean_completed\": {c0},\n  \"clean_goodput_tps\": {goodput0:.3},\n  \
+         \"faulted_completed\": {c1},\n  \"faulted_failed\": {f1},\n  \
+         \"faulted_goodput_tps\": {goodput1:.3},\n  \
+         \"goodput_ratio\": {ratio:.4},\n  \
+         \"faults_injected\": {injected},\n  \"ticks_retried\": {retried},\n  \
+         \"chains_regrounded\": {regrounded},\n  \
+         \"fused_k_demotions\": {demotions_k},\n  \
+         \"host_demotions\": {demotions_host},\n  \
+         \"requests_failed\": {req_failed},\n  \"timeouts_total\": {timeouts}\n}}\n"
+    );
+    std::fs::write("artifacts/results/BENCH_faults.json", json)?;
+    println!("wrote artifacts/results/BENCH_faults.json");
+
+    // acceptance: every transient fault recovered (nobody failed) and
+    // the retry overhead cost at most 10% goodput
+    let ok = injected >= 1 && f1 == 0 && req_failed == 0 && ratio >= 0.9;
+    println!(
+        "acceptance (faults fired, zero unrecovered, goodput ≥ 0.9× \
+         fault-free): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "fault recovery degraded service: injected={injected} failed={f1} \
+             requests_failed={req_failed} goodput_ratio={ratio:.4}"
+        ));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     let n = bench_n(330);
@@ -379,5 +493,7 @@ fn main() -> anyhow::Result<()> {
 
     // pooled-residency churn section (workers=2, shared pool)
     residency_section(2, 5)?;
+    // fault-injection recovery section (same trace, seeded fault rate)
+    fault_section(n.min(120))?;
     Ok(())
 }

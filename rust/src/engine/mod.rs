@@ -30,6 +30,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::cache::{RefreshPolicy, StepPlan};
+use crate::fault::FaultPlan;
 use crate::runtime::Runtime;
 use crate::sampler::SamplerCfg;
 use crate::scheduler::{FinishedSeq, GroupScheduler, PjrtBackend, SchedCfg, SeqInput, SeqParams};
@@ -86,6 +87,11 @@ pub struct EngineCfg {
     /// more dispatch latency but coarsens that cadence.
     pub fused_k: usize,
     pub seed: u64,
+    /// deterministic fault-injection schedule (`--fault-plan`; empty =
+    /// no faults). Drives the backend's [`crate::fault::FaultInjector`]
+    /// so every recovery path is testable offline — see
+    /// [`crate::fault`].
+    pub fault_plan: FaultPlan,
 }
 
 impl EngineCfg {
@@ -108,6 +114,7 @@ impl EngineCfg {
             adaptive: false,
             fused_k: 1,
             seed: 0,
+            fault_plan: FaultPlan::default(),
         }
     }
 }

@@ -1,0 +1,442 @@
+//! Deterministic fault injection and the fault/recovery ledger.
+//!
+//! A production serving stack has to keep answering requests when a
+//! device dispatch fails. This module provides the three pieces the
+//! fault-tolerant serving path is built from:
+//!
+//!   * [`FaultPlan`] — a seeded, deterministic schedule of injected
+//!     faults, configurable via [`crate::engine::EngineCfg::fault_plan`]
+//!     and the `--fault-plan` CLI knob. Faults are addressed by
+//!     **per-kind event ordinals** (`exec@3` = the third executable run
+//!     faults), optionally combined with a seeded Bernoulli rate
+//!     (`rate=0.02,seed=7`) for Poisson-style soak traces. The same plan
+//!     drives the sim backend's injector and converts to the vendored
+//!     xla stub's [`xla::FaultSchedule`] via
+//!     [`FaultPlan::stub_schedule`], so an ordinal faults at the same
+//!     event on both layers.
+//!   * [`FaultInjector`] — the shared per-backend injector: each
+//!     injection site calls [`FaultInjector::check`] with its
+//!     [`FaultKind`]; the injector counts the event, consults the plan,
+//!     and returns a typed [`FaultError`] when the event is scheduled to
+//!     fault. The injector also owns the [`FaultStats`] ledger the
+//!     router's recovery loop feeds (`ticks_retried`,
+//!     `chains_regrounded`, demotions, `requests_failed`), mirrored into
+//!     `/metrics` exactly like the transfer ledger.
+//!   * [`classify`] — the error taxonomy: a tick error is **transient**
+//!     (an injected exec/transfer/alloc fault — invalidate the chain,
+//!     re-ground, retry), **poisoned** (a fused committed-count
+//!     divergence or an explicit [`PoisonedChain`] audit failure — the
+//!     retained device state can no longer be trusted at the current
+//!     fused depth; demote `k` before retrying), or a
+//!     **misconfiguration** (anything else — retrying cannot help, fail
+//!     fast).
+//!
+//! Determinism: ordinal faults are a pure function of the per-kind event
+//! count; rate faults hash `(seed, kind, event)` through SplitMix64, so
+//! a replayed trace faults at identical events. Nothing here consults a
+//! clock or an RNG stream shared with decoding.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Which failure mode an injected fault models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// An executable run fails (device-side compute error).
+    Exec,
+    /// A device→host transfer fails after the run (downlink error).
+    Transfer,
+    /// An allocation fails on chain seed / checkout (device OOM).
+    Alloc,
+    /// A fused k-step run's committed-count audit diverges: the chain is
+    /// poisoned at the current fused depth.
+    FusedDivergence,
+}
+
+impl FaultKind {
+    fn index(self) -> usize {
+        match self {
+            FaultKind::Exec => 0,
+            FaultKind::Transfer => 1,
+            FaultKind::Alloc => 2,
+            FaultKind::FusedDivergence => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Exec => "exec",
+            FaultKind::Transfer => "transfer",
+            FaultKind::Alloc => "alloc",
+            FaultKind::FusedDivergence => "diverge",
+        }
+    }
+}
+
+/// A typed injected fault, carried through `anyhow` chains so the
+/// router's recovery loop can [`classify`] a tick error without string
+/// matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultError {
+    pub kind: FaultKind,
+    /// 1-based per-kind event ordinal at which the fault fired.
+    pub event: u64,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected {} fault at event {}", self.kind.name(), self.event)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Marker for audit failures that mean the retained device chain can no
+/// longer be trusted (e.g. a fused run committed a different number of
+/// tokens than the host replay expected). Distinct from a transient
+/// fault: retrying at the same fused depth would re-poison the chain,
+/// so the recovery loop demotes `k` first.
+#[derive(Debug, Clone)]
+pub struct PoisonedChain(pub String);
+
+impl fmt::Display for PoisonedChain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "poisoned chain: {}", self.0)
+    }
+}
+
+impl std::error::Error for PoisonedChain {}
+
+/// The recovery loop's error taxonomy (see the module doc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickErrorClass {
+    /// Invalidate the affected chain, re-ground, retry within budget.
+    Transient,
+    /// As transient, but demote the fused depth before retrying.
+    Poisoned,
+    /// Retrying cannot help; fail the affected sequences immediately.
+    Misconfig,
+}
+
+/// Classify a tick error by walking its cause chain for the typed
+/// markers. Anything without a marker is a misconfiguration — the
+/// conservative default, so a genuine bug never spins the retry loop.
+pub fn classify(e: &anyhow::Error) -> TickErrorClass {
+    for cause in e.chain() {
+        if let Some(f) = cause.downcast_ref::<FaultError>() {
+            return match f.kind {
+                FaultKind::FusedDivergence => TickErrorClass::Poisoned,
+                _ => TickErrorClass::Transient,
+            };
+        }
+        if cause.downcast_ref::<PoisonedChain>().is_some() {
+            return TickErrorClass::Poisoned;
+        }
+    }
+    TickErrorClass::Misconfig
+}
+
+/// A deterministic fault schedule. Per-kind lists hold 1-based event
+/// ordinals that fault; `rate`/`seed` add a seeded Bernoulli draw per
+/// event on top (0.0 disables it).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub exec_at: Vec<u64>,
+    pub transfer_at: Vec<u64>,
+    pub alloc_at: Vec<u64>,
+    pub diverge_at: Vec<u64>,
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.exec_at.is_empty()
+            && self.transfer_at.is_empty()
+            && self.alloc_at.is_empty()
+            && self.diverge_at.is_empty()
+            && self.rate <= 0.0
+    }
+
+    fn at(&self, kind: FaultKind) -> &[u64] {
+        match kind {
+            FaultKind::Exec => &self.exec_at,
+            FaultKind::Transfer => &self.transfer_at,
+            FaultKind::Alloc => &self.alloc_at,
+            FaultKind::FusedDivergence => &self.diverge_at,
+        }
+    }
+
+    /// Parse the CLI grammar: comma-separated `kind@ordinal` tokens
+    /// (kinds: `exec`, `transfer`, `alloc`, `diverge`; repeatable) plus
+    /// optional `rate=F` and `seed=N`. Empty input is the empty plan.
+    ///
+    /// Example: `exec@3,exec@7,alloc@1,rate=0.02,seed=42`
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some((kind, ord)) = tok.split_once('@') {
+                let n: u64 = ord
+                    .parse()
+                    .map_err(|_| format!("bad fault ordinal in '{tok}'"))?;
+                if n == 0 {
+                    return Err(format!("fault ordinals are 1-based: '{tok}'"));
+                }
+                match kind {
+                    "exec" => plan.exec_at.push(n),
+                    "transfer" => plan.transfer_at.push(n),
+                    "alloc" => plan.alloc_at.push(n),
+                    "diverge" => plan.diverge_at.push(n),
+                    _ => return Err(format!("unknown fault kind '{kind}' in '{tok}'")),
+                }
+            } else if let Some((key, val)) = tok.split_once('=') {
+                match key {
+                    "rate" => {
+                        plan.rate = val
+                            .parse()
+                            .map_err(|_| format!("bad fault rate '{val}'"))?;
+                        if !(0.0..=1.0).contains(&plan.rate) {
+                            return Err(format!("fault rate out of [0,1]: '{val}'"));
+                        }
+                    }
+                    "seed" => {
+                        plan.seed = val
+                            .parse()
+                            .map_err(|_| format!("bad fault seed '{val}'"))?;
+                    }
+                    _ => return Err(format!("unknown fault-plan key '{key}'")),
+                }
+            } else {
+                return Err(format!("bad fault-plan token '{tok}'"));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Convert to the vendored xla stub's self-contained schedule so the
+    /// same exec/alloc ordinals fault at the same modeled events on the
+    /// device layer (the stub cannot depend on this crate).
+    pub fn stub_schedule(&self) -> xla::FaultSchedule {
+        xla::FaultSchedule {
+            exec_at: self.exec_at.clone(),
+            alloc_at: self.alloc_at.clone(),
+        }
+    }
+}
+
+/// Cumulative fault/recovery ledger, mirrored into `/metrics` each
+/// scheduler tick — and, like [`crate::runtime::resident::TransferStats`],
+/// kept count-exact between the sim and PJRT planners because both
+/// drive the same injector API from the same sites.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// faults the plan actually fired
+    pub faults_injected: u64,
+    /// scheduler ticks re-run after a transient fault
+    pub ticks_retried: u64,
+    /// resident chains invalidated + re-grounded by the recovery loop
+    pub chains_regrounded: u64,
+    /// fused-depth demotions (k → k/2) after a poisoned-chain error
+    pub fused_k_demotions: u64,
+    /// Device-apply → Host quarantines after repeated device faults
+    pub host_demotions: u64,
+    /// sequences failed after the retry budget was exhausted (or on a
+    /// misconfiguration)
+    pub requests_failed: u64,
+}
+
+impl FaultStats {
+    /// Field-wise accumulate of another ledger (or a ledger delta).
+    pub fn merge(&mut self, d: &FaultStats) {
+        self.faults_injected += d.faults_injected;
+        self.ticks_retried += d.ticks_retried;
+        self.chains_regrounded += d.chains_regrounded;
+        self.fused_k_demotions += d.fused_k_demotions;
+        self.host_demotions += d.host_demotions;
+        self.requests_failed += d.requests_failed;
+    }
+
+    /// Field-wise delta against an earlier snapshot of the same ledger.
+    pub fn since(&self, earlier: &FaultStats) -> FaultStats {
+        FaultStats {
+            faults_injected: self.faults_injected.saturating_sub(earlier.faults_injected),
+            ticks_retried: self.ticks_retried.saturating_sub(earlier.ticks_retried),
+            chains_regrounded: self
+                .chains_regrounded
+                .saturating_sub(earlier.chains_regrounded),
+            fused_k_demotions: self
+                .fused_k_demotions
+                .saturating_sub(earlier.fused_k_demotions),
+            host_demotions: self.host_demotions.saturating_sub(earlier.host_demotions),
+            requests_failed: self.requests_failed.saturating_sub(earlier.requests_failed),
+        }
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+struct InjectorInner {
+    plan: FaultPlan,
+    /// per-kind events seen, indexed by [`FaultKind::index`]
+    seen: [u64; 4],
+    stats: FaultStats,
+}
+
+/// The shared injector a backend consults at each injection site. Also
+/// the home of the [`FaultStats`] ledger: the backend credits
+/// `faults_injected`, the router's recovery loop credits the rest.
+pub struct FaultInjector {
+    inner: Mutex<InjectorInner>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            inner: Mutex::new(InjectorInner {
+                plan,
+                seen: [0; 4],
+                stats: FaultStats::default(),
+            }),
+        })
+    }
+
+    /// Count one `kind` event and fault it if the plan says so.
+    pub fn check(&self, kind: FaultKind) -> Result<(), FaultError> {
+        let mut g = self.inner.lock().unwrap();
+        let i = kind.index();
+        g.seen[i] += 1;
+        let n = g.seen[i];
+        let ordinal_hit = g.plan.at(kind).contains(&n);
+        let rate_hit = g.plan.rate > 0.0 && {
+            let h = splitmix64(
+                g.plan.seed ^ (i as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F) ^ n,
+            );
+            (h as f64 / u64::MAX as f64) < g.plan.rate
+        };
+        if ordinal_hit || rate_hit {
+            g.stats.faults_injected += 1;
+            return Err(FaultError { kind, event: n });
+        }
+        Ok(())
+    }
+
+    /// Whether any fault can ever fire (cheap gate for hot paths).
+    pub fn armed(&self) -> bool {
+        !self.inner.lock().unwrap().plan.is_empty()
+    }
+
+    pub fn note_tick_retried(&self) {
+        self.inner.lock().unwrap().stats.ticks_retried += 1;
+    }
+
+    pub fn note_chain_regrounded(&self) {
+        self.inner.lock().unwrap().stats.chains_regrounded += 1;
+    }
+
+    pub fn note_fused_k_demotion(&self) {
+        self.inner.lock().unwrap().stats.fused_k_demotions += 1;
+    }
+
+    pub fn note_host_demotion(&self) {
+        self.inner.lock().unwrap().stats.host_demotions += 1;
+    }
+
+    pub fn note_requests_failed(&self, n: u64) {
+        self.inner.lock().unwrap().stats.requests_failed += n;
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        let p = FaultPlan::parse("exec@3,exec@7,transfer@1,alloc@2,diverge@5,rate=0.25,seed=42")
+            .unwrap();
+        assert_eq!(p.exec_at, vec![3, 7]);
+        assert_eq!(p.transfer_at, vec![1]);
+        assert_eq!(p.alloc_at, vec![2]);
+        assert_eq!(p.diverge_at, vec![5]);
+        assert!((p.rate - 0.25).abs() < 1e-12);
+        assert_eq!(p.seed, 42);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("bogus@1").is_err());
+        assert!(FaultPlan::parse("exec@0").is_err());
+        assert!(FaultPlan::parse("rate=1.5").is_err());
+        assert!(FaultPlan::parse("exec-3").is_err());
+    }
+
+    #[test]
+    fn ordinal_faults_fire_deterministically() {
+        let inj = FaultInjector::new(FaultPlan::parse("exec@2,alloc@1").unwrap());
+        assert!(inj.check(FaultKind::Exec).is_ok(), "event 1 clean");
+        let e = inj.check(FaultKind::Exec).unwrap_err();
+        assert_eq!(e.kind, FaultKind::Exec);
+        assert_eq!(e.event, 2);
+        assert!(inj.check(FaultKind::Exec).is_ok(), "event 3 clean");
+        // kinds count independently
+        assert!(inj.check(FaultKind::Transfer).is_ok());
+        assert!(inj.check(FaultKind::Alloc).is_err());
+        assert_eq!(inj.stats().faults_injected, 2);
+    }
+
+    #[test]
+    fn rate_faults_are_seed_deterministic() {
+        let plan = FaultPlan::parse("rate=0.3,seed=7").unwrap();
+        let run = |plan: FaultPlan| -> Vec<bool> {
+            let inj = FaultInjector::new(plan);
+            (0..64).map(|_| inj.check(FaultKind::Exec).is_err()).collect()
+        };
+        let a = run(plan.clone());
+        let b = run(plan);
+        assert_eq!(a, b, "same seed, same fault pattern");
+        let n = a.iter().filter(|&&f| f).count();
+        assert!(n > 0 && n < 64, "rate 0.3 faults some but not all: {n}");
+    }
+
+    #[test]
+    fn classify_walks_the_cause_chain() {
+        let t = anyhow::Error::from(FaultError { kind: FaultKind::Exec, event: 1 })
+            .context("run_step failed");
+        assert_eq!(classify(&t), TickErrorClass::Transient);
+        let p = anyhow::Error::from(FaultError {
+            kind: FaultKind::FusedDivergence,
+            event: 1,
+        });
+        assert_eq!(classify(&p), TickErrorClass::Poisoned);
+        let p2 = anyhow::Error::from(PoisonedChain("audit".into()));
+        assert_eq!(classify(&p2), TickErrorClass::Poisoned);
+        let m = anyhow::anyhow!("unknown indicator q");
+        assert_eq!(classify(&m), TickErrorClass::Misconfig);
+    }
+
+    #[test]
+    fn stats_merge_and_since_are_fieldwise() {
+        let mut a = FaultStats { faults_injected: 2, ticks_retried: 1, ..Default::default() };
+        let snap = a;
+        a.merge(&FaultStats { chains_regrounded: 3, requests_failed: 1, ..Default::default() });
+        let d = a.since(&snap);
+        assert_eq!(d.chains_regrounded, 3);
+        assert_eq!(d.requests_failed, 1);
+        assert_eq!(d.faults_injected, 0);
+    }
+
+    #[test]
+    fn stub_schedule_carries_the_same_ordinals() {
+        let p = FaultPlan::parse("exec@4,alloc@2,transfer@9").unwrap();
+        let s = p.stub_schedule();
+        assert_eq!(s.exec_at, vec![4]);
+        assert_eq!(s.alloc_at, vec![2]);
+    }
+}

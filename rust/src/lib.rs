@@ -33,6 +33,7 @@ pub mod cache;
 pub mod cli;
 pub mod engine;
 pub mod eval;
+pub mod fault;
 pub mod flops;
 pub mod manifest;
 pub mod metrics;

@@ -41,6 +41,10 @@ fn usage() -> String {
                                         runs of ES iterations execute as one\n\
                                         device dispatch, floored to a compiled\n\
                                         depth in {2,4,8})\n\
+       --fault-plan <spec>              deterministic fault injection, e.g.\n\
+                                        exec@3,alloc@1,rate=0.02,seed=7\n\
+                                        (kinds: exec|transfer|alloc|diverge;\n\
+                                        default: no faults)\n\
      generate:\n\
        --prompt <text>                  prompt to complete\n\
      eval:\n\
@@ -70,6 +74,10 @@ fn main() -> Result<()> {
     }
     engine_cfg.sparse = args.bool("sparse");
     engine_cfg.fused_k = args.usize("fused-k", 1);
+    if let Some(plan) = args.opt("fault-plan") {
+        engine_cfg.fault_plan = esdllm::fault::FaultPlan::parse(plan)
+            .map_err(|e| anyhow!("bad --fault-plan: {e}"))?;
+    }
 
     match cmd.as_str() {
         "serve" => {

@@ -214,6 +214,22 @@ pub struct Metrics {
     pub chain_rebuilds_avoided: Gauge,
     /// full-seed bytes those avoided rebuilds would have re-shipped
     pub reseed_bytes_saved: Gauge,
+    // -- fault injection + recovery (mirrored from the backends'
+    //    FaultStats ledgers each scheduler tick) --
+    /// faults the deterministic injector actually fired
+    pub faults_injected: Counter,
+    /// ticks re-run after a recoverable fault
+    pub ticks_retried: Counter,
+    /// grounding prefills issued to rebuild device state after a fault
+    pub chains_regrounded: Counter,
+    /// fused-depth ladder steps (k → k/2) after divergent dispatches
+    pub fused_k_demotions: Counter,
+    /// device-apply quarantines to ApplyMode::Host
+    pub host_demotions: Counter,
+    /// requests failed after the retry budget (or on misconfiguration)
+    pub requests_failed: Counter,
+    /// sequences retired overdue with a structured timeout error
+    pub timeouts_total: Counter,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
@@ -298,6 +314,13 @@ impl Metrics {
             ("esdllm_chain_switches", self.chain_switches.get()),
             ("esdllm_chain_rebuilds_avoided", self.chain_rebuilds_avoided.get()),
             ("esdllm_reseed_bytes_saved", self.reseed_bytes_saved.get()),
+            ("esdllm_faults_injected", self.faults_injected.get()),
+            ("esdllm_ticks_retried", self.ticks_retried.get()),
+            ("esdllm_chains_regrounded", self.chains_regrounded.get()),
+            ("esdllm_fused_k_demotions", self.fused_k_demotions.get()),
+            ("esdllm_host_demotions", self.host_demotions.get()),
+            ("esdllm_requests_failed", self.requests_failed.get()),
+            ("esdllm_timeouts_total", self.timeouts_total.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -394,6 +417,13 @@ mod tests {
         m.chain_switches.set(3);
         m.chain_rebuilds_avoided.set(1);
         m.reseed_bytes_saved.set(4096);
+        m.faults_injected.add(4);
+        m.ticks_retried.add(3);
+        m.chains_regrounded.add(3);
+        m.fused_k_demotions.inc();
+        m.host_demotions.inc();
+        m.requests_failed.inc();
+        m.timeouts_total.inc();
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
@@ -416,6 +446,13 @@ mod tests {
         assert!(text.contains("esdllm_chain_switches 3"));
         assert!(text.contains("esdllm_chain_rebuilds_avoided 1"));
         assert!(text.contains("esdllm_reseed_bytes_saved 4096"));
+        assert!(text.contains("esdllm_faults_injected 4"));
+        assert!(text.contains("esdllm_ticks_retried 3"));
+        assert!(text.contains("esdllm_chains_regrounded 3"));
+        assert!(text.contains("esdllm_fused_k_demotions 1"));
+        assert!(text.contains("esdllm_host_demotions 1"));
+        assert!(text.contains("esdllm_requests_failed 1"));
+        assert!(text.contains("esdllm_timeouts_total 1"));
         assert!(text.contains("esdllm_upload_bytes_per_tick"));
         assert!(text.contains("esdllm_d2h_bytes_shipped_per_tick"));
     }

@@ -29,28 +29,67 @@
 //! `reseed_bytes_saved`) every tick.
 //!
 //! Requests carry per-request parameters ([`SeqParams`]: `gen_len`,
-//! temperature, parallel threshold) and replies carry true per-request
-//! statistics ([`GenReply`]), not group-level aggregates. The shared
-//! bounded queue provides backpressure: `try_submit` fails when the
-//! queue is full → HTTP 503. Responses travel back through per-request
-//! oneshot slots.
+//! temperature, parallel threshold, `timeout_ms`) and replies carry
+//! true per-request statistics ([`GenReply`]), not group-level
+//! aggregates. The shared bounded queue provides backpressure:
+//! `try_submit` fails when the queue is full → HTTP 503. Responses
+//! travel back through per-request oneshot slots, protected by a
+//! [`PendingRepliesGuard`]: a worker that panics mid-flight answers
+//! every outstanding oneshot with an error during unwind instead of
+//! leaving clients blocked forever.
+//!
+//! # Fault recovery
+//!
+//! [`tick_once`] is the recovery loop. A failed tick is classified
+//! ([`crate::fault::classify`]) and handled by class:
+//!
+//!   * **transient** (injected exec/transfer/alloc fault) — invalidate
+//!     the active class, re-ground it
+//!     ([`GroupScheduler::reground_active`]), back off exponentially,
+//!     and re-tick within a bounded per-tick retry budget. The failed
+//!     tick never mutated the trajectory, so recovered sequences
+//!     produce token-identical output and unaffected sequences never
+//!     see an error;
+//!   * **poisoned** (fused committed-count divergence) — as transient,
+//!     but the fused dispatch depth steps down one rung first
+//!     (k → k/2 → 1, [`GroupScheduler::demote_fused_k`]);
+//!   * **misconfiguration** (anything untyped) — retrying cannot help:
+//!     fail exactly the resident sequences and evict, keeping the
+//!     worker alive for the next request.
+//!
+//! Repeated consecutive faults escalate the degradation ladder: the
+//! backend is quarantined to `ApplyMode::Host`
+//! ([`GroupScheduler::set_apply_override`]) and re-probed back to
+//! device apply after a clean-tick cool-down. Every action lands in
+//! the backend's [`crate::fault::FaultStats`] ledger, pumped into the
+//! `/metrics` fault counters each tick alongside the transfer ledger.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::batcher::{batch_classes, next_batch, BatcherCfg};
 use crate::engine::EngineCfg;
+use crate::fault::{classify, FaultStats, TickErrorClass};
 use crate::metrics::Metrics;
-use crate::runtime::resident::{PoolStats, ResidencyPool};
+use crate::runtime::resident::{ApplyMode, PoolStats, ResidencyPool};
 use crate::runtime::Runtime;
 use crate::scheduler::sim::{SimBackend, SimCfg};
 use crate::scheduler::{
     GroupScheduler, PjrtBackend, SchedCfg, SeqInput, SeqParams, StepBackend,
 };
 use crate::threadpool::Channel;
+
+/// Re-ticks after a failed (and re-grounded) tick before the resident
+/// sequences are failed: the bounded per-tick retry budget.
+const TICK_RETRY_BUDGET: u32 = 3;
+/// Consecutive faulted ticks before the device-apply path is
+/// quarantined to `ApplyMode::Host`.
+const QUARANTINE_AFTER: u32 = 3;
+/// Clean ticks under quarantine before re-probing device apply.
+const REPROBE_AFTER: u64 = 64;
 
 pub struct GenRequest {
     pub prompt: String,
@@ -314,7 +353,14 @@ fn worker_loop(
                 }
             }
         }
-        WorkerBackend::Sim(sim_cfg) => Box::new(SimBackend::with_pool(sim_cfg, pool)),
+        WorkerBackend::Sim(mut sim_cfg) => {
+            // the CLI's --fault-plan lands in EngineCfg; flow it into sim
+            // workers unless the sim config carries its own plan already
+            if sim_cfg.fault_plan.is_empty() {
+                sim_cfg.fault_plan = engine_cfg.fault_plan.clone();
+            }
+            Box::new(SimBackend::with_pool(sim_cfg, pool))
+        }
     };
     // continuous mode gets every batch class and switches between them
     // from demand; run-to-completion keeps the single full class (its
@@ -381,91 +427,285 @@ impl Drop for ActiveSlotsGuard {
     }
 }
 
-/// Shared per-tick bookkeeping: run one tick, update metrics, and answer
-/// the retired sequences. Returns false after a backend error (all
+/// Owns the in-flight reply slots. If the worker unwinds — panic in the
+/// backend, in metrics plumbing, anywhere between admission and reply —
+/// `Drop` answers every outstanding oneshot with an error instead of
+/// leaving those clients blocked on `wait()` forever. On a clean exit
+/// the map is empty and the drop is a no-op.
+struct PendingRepliesGuard {
+    pending: HashMap<u64, OneShot<Result<GenReply, String>>>,
+}
+
+impl PendingRepliesGuard {
+    fn new() -> PendingRepliesGuard {
+        PendingRepliesGuard { pending: HashMap::new() }
+    }
+}
+
+impl std::ops::Deref for PendingRepliesGuard {
+    type Target = HashMap<u64, OneShot<Result<GenReply, String>>>;
+    fn deref(&self) -> &Self::Target {
+        &self.pending
+    }
+}
+
+impl std::ops::DerefMut for PendingRepliesGuard {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.pending
+    }
+}
+
+impl Drop for PendingRepliesGuard {
+    fn drop(&mut self) {
+        for (_, reply) in self.pending.drain() {
+            reply.put(Err("engine worker terminated mid-flight".to_string()));
+        }
+    }
+}
+
+/// Per-worker degradation-ladder state: tracks the consecutive-fault
+/// streak that triggers Host quarantine, the clean-tick cool-down that
+/// re-probes device apply, and the last [`FaultStats`] snapshot so the
+/// ledger can be pumped into the metrics as deltas.
+struct RecoveryState {
+    consecutive_faults: u32,
+    quarantined: bool,
+    clean_since_quarantine: u64,
+    last_fault_stats: FaultStats,
+}
+
+impl RecoveryState {
+    fn new() -> RecoveryState {
+        RecoveryState {
+            consecutive_faults: 0,
+            quarantined: false,
+            clean_since_quarantine: 0,
+            last_fault_stats: FaultStats::default(),
+        }
+    }
+}
+
+/// Mirror the backend's cumulative [`FaultStats`] ledger into the
+/// serving counters as deltas against the last snapshot.
+fn pump_fault_stats(sched: &GroupScheduler<'_>, metrics: &Metrics, recovery: &mut RecoveryState) {
+    if let Some(inj) = sched.fault_injector() {
+        let now = inj.stats();
+        let d = now.since(&recovery.last_fault_stats);
+        metrics.faults_injected.add(d.faults_injected);
+        metrics.ticks_retried.add(d.ticks_retried);
+        metrics.chains_regrounded.add(d.chains_regrounded);
+        metrics.fused_k_demotions.add(d.fused_k_demotions);
+        metrics.host_demotions.add(d.host_demotions);
+        metrics.requests_failed.add(d.requests_failed);
+        recovery.last_fault_stats = now;
+    }
+}
+
+/// Terminal arm of the recovery ladder: answer every resident sequence
+/// with the error, evict the group, and zero this worker's slot gauge.
+/// The worker itself stays alive for the next request.
+fn fail_active(
+    sched: &mut GroupScheduler<'_>,
+    pending: &mut PendingRepliesGuard,
+    guard: &mut ActiveSlotsGuard,
+    msg: &str,
+) {
+    let ids = sched.active_ids();
+    if let Some(inj) = sched.fault_injector() {
+        inj.note_requests_failed(ids.len() as u64);
+    }
+    for id in ids {
+        if let Some(reply) = pending.remove(&id) {
+            reply.put(Err(msg.to_string()));
+        }
+    }
+    sched.evict_all();
+    guard.sync(0);
+}
+
+/// Shared per-tick bookkeeping: run one tick (retrying recoverable
+/// faults within [`TICK_RETRY_BUDGET`]), update metrics, and answer the
+/// retired sequences. Returns false after an unrecoverable error (all
 /// resident sequences were failed and evicted).
 fn tick_once(
     sched: &mut GroupScheduler<'_>,
     metrics: &Metrics,
-    pending: &mut HashMap<u64, OneShot<Result<GenReply, String>>>,
+    pending: &mut PendingRepliesGuard,
     guard: &mut ActiveSlotsGuard,
+    recovery: &mut RecoveryState,
 ) -> bool {
-    let busy = sched.active();
-    let before = (sched.n_prefill, sched.n_dual, sched.n_es);
-    let tr_before = sched.transfer_stats();
-    let t0 = Instant::now();
-    let tick_result = sched.tick();
-    // resident-cache transfer accounting: this tick's ledger delta.
-    // Pumped on both arms — a failed tick may already have synced and
-    // recorded bytes, and the next snapshot would silently swallow them.
-    let tr = sched.transfer_stats().since(&tr_before);
-    metrics.upload_bytes.add(tr.upload_bytes);
-    metrics.upload_bytes_saved.add(tr.upload_bytes_saved);
-    metrics
-        .kv_upload_bytes
-        .add(tr.kv_upload_bytes + tr.kv_sparse_upload_bytes);
-    metrics.ind_upload_bytes.add(tr.ind_upload_bytes);
-    metrics.conf_upload_bytes.add(tr.conf_upload_bytes);
-    metrics.token_upload_bytes.add(tr.token_upload_bytes);
-    metrics.full_kv_uploads.add(tr.full_kv_uploads);
-    metrics.resident_reuses.add(tr.resident_reuses);
-    metrics.retained_out_reuses.add(tr.retained_out_reuses);
-    metrics.d2h_bytes_avoided.add(tr.d2h_bytes_avoided);
-    metrics.ingraph_conf_steps.add(tr.ingraph_conf_steps);
-    metrics.d2h_bytes_shipped.add(tr.d2h_bytes_shipped);
-    metrics.d2h_bytes_saved.add(tr.d2h_bytes_saved);
-    metrics.donated_execs.add(tr.donated_execs);
-    metrics.fused_execs.add(tr.fused_execs);
-    metrics.inner_iters_fused.add(tr.inner_iters_fused);
-    metrics.dispatches_avoided.add(tr.dispatches_avoided);
-    // pooled-residency ledger: the pool is shared by every worker, so
-    // its cumulative values are mirrored (set), not delta-added
-    let ps: PoolStats = sched.pool_stats();
-    metrics.resident_chains.set(ps.resident_chains);
-    metrics.chain_switches.set(ps.chain_switches);
-    metrics.chain_rebuilds_avoided.set(ps.chain_rebuilds_avoided);
-    metrics.reseed_bytes_saved.set(ps.reseed_bytes_saved);
-    match tick_result {
-        Ok(finished) => {
-            metrics.ticks_total.inc();
-            metrics.slot_busy_seconds.add_secs(t0.elapsed().as_secs_f64() * busy as f64);
-            metrics.prefill_steps.add((sched.n_prefill - before.0) as u64);
-            metrics.dual_steps.add((sched.n_dual - before.1) as u64);
-            metrics.es_steps.add((sched.n_es - before.2) as u64);
-            // publish the gauge before answering clients: a client that
-            // just received its reply must not observe its own sequence
-            // still counted as active (retirement already freed the slot,
-            // so sched.active() is final here)
-            guard.sync(sched.active());
-            for f in finished {
-                metrics.retirements_total.inc();
-                metrics.tokens_generated.add(f.tokens as u64);
-                metrics.iterations_total.add(f.iterations as u64);
-                metrics.request_latency.observe_secs(f.queue_s + f.gen_s);
-                if let Some(reply) = pending.remove(&f.id) {
-                    reply.put(Ok(GenReply {
-                        text: f.text,
-                        iterations: f.iterations,
-                        wall_s: f.gen_s,
-                        queue_s: f.queue_s,
-                        tokens: f.tokens,
-                    }));
+    let mut attempt: u32 = 0;
+    let outcome = loop {
+        let busy = sched.active();
+        let before = (sched.n_prefill, sched.n_dual, sched.n_es);
+        let tr_before = sched.transfer_stats();
+        let t0 = Instant::now();
+        let tick_result = sched.tick();
+        // resident-cache transfer accounting: this tick's ledger delta.
+        // Pumped on both arms — a failed tick may already have synced and
+        // recorded bytes, and the next snapshot would silently swallow them.
+        let tr = sched.transfer_stats().since(&tr_before);
+        metrics.upload_bytes.add(tr.upload_bytes);
+        metrics.upload_bytes_saved.add(tr.upload_bytes_saved);
+        metrics
+            .kv_upload_bytes
+            .add(tr.kv_upload_bytes + tr.kv_sparse_upload_bytes);
+        metrics.ind_upload_bytes.add(tr.ind_upload_bytes);
+        metrics.conf_upload_bytes.add(tr.conf_upload_bytes);
+        metrics.token_upload_bytes.add(tr.token_upload_bytes);
+        metrics.full_kv_uploads.add(tr.full_kv_uploads);
+        metrics.resident_reuses.add(tr.resident_reuses);
+        metrics.retained_out_reuses.add(tr.retained_out_reuses);
+        metrics.d2h_bytes_avoided.add(tr.d2h_bytes_avoided);
+        metrics.ingraph_conf_steps.add(tr.ingraph_conf_steps);
+        metrics.d2h_bytes_shipped.add(tr.d2h_bytes_shipped);
+        metrics.d2h_bytes_saved.add(tr.d2h_bytes_saved);
+        metrics.donated_execs.add(tr.donated_execs);
+        metrics.fused_execs.add(tr.fused_execs);
+        metrics.inner_iters_fused.add(tr.inner_iters_fused);
+        metrics.dispatches_avoided.add(tr.dispatches_avoided);
+        // pooled-residency ledger: the pool is shared by every worker, so
+        // its cumulative values are mirrored (set), not delta-added
+        let ps: PoolStats = sched.pool_stats();
+        metrics.resident_chains.set(ps.resident_chains);
+        metrics.chain_switches.set(ps.chain_switches);
+        metrics.chain_rebuilds_avoided.set(ps.chain_rebuilds_avoided);
+        metrics.reseed_bytes_saved.set(ps.reseed_bytes_saved);
+        match tick_result {
+            Ok(finished) => {
+                metrics.ticks_total.inc();
+                metrics.slot_busy_seconds.add_secs(t0.elapsed().as_secs_f64() * busy as f64);
+                metrics.prefill_steps.add((sched.n_prefill - before.0) as u64);
+                metrics.dual_steps.add((sched.n_dual - before.1) as u64);
+                metrics.es_steps.add((sched.n_es - before.2) as u64);
+                // publish the gauge before answering clients: a client that
+                // just received its reply must not observe its own sequence
+                // still counted as active (retirement already freed the slot,
+                // so sched.active() is final here)
+                guard.sync(sched.active());
+                for f in finished {
+                    metrics.retirements_total.inc();
+                    metrics.tokens_generated.add(f.tokens as u64);
+                    metrics.iterations_total.add(f.iterations as u64);
+                    metrics.request_latency.observe_secs(f.queue_s + f.gen_s);
+                    let reply = pending.remove(&f.id);
+                    if let Some(err) = f.error {
+                        // structured per-sequence failure (deadline
+                        // overrun) — the rest of the group is untouched
+                        if err.starts_with("timeout:") {
+                            metrics.timeouts_total.inc();
+                        }
+                        if let Some(reply) = reply {
+                            reply.put(Err(err));
+                        }
+                    } else if let Some(reply) = reply {
+                        reply.put(Ok(GenReply {
+                            text: f.text,
+                            iterations: f.iterations,
+                            wall_s: f.gen_s,
+                            queue_s: f.queue_s,
+                            tokens: f.tokens,
+                        }));
+                    }
                 }
-            }
-            true
-        }
-        Err(e) => {
-            log::error!("scheduler tick failed: {e:#}");
-            for id in sched.active_ids() {
-                if let Some(reply) = pending.remove(&id) {
-                    reply.put(Err(format!("{e}")));
+                recovery.consecutive_faults = 0;
+                if recovery.quarantined {
+                    recovery.clean_since_quarantine += 1;
+                    if recovery.clean_since_quarantine >= REPROBE_AFTER {
+                        // cool-down elapsed: re-probe the device-apply
+                        // path; chains rebuild in the probed mode on the
+                        // re-ground prefill
+                        recovery.clean_since_quarantine = 0;
+                        sched.set_apply_override(None);
+                        match sched.reground_active() {
+                            Ok(_) => {
+                                recovery.quarantined = false;
+                                if let Some(inj) = sched.fault_injector() {
+                                    inj.note_chain_regrounded();
+                                }
+                                log::info!("re-probing device apply after quarantine cool-down");
+                            }
+                            Err(e) => {
+                                // the probe itself faulted: stay in Host
+                                // quarantine for another cool-down
+                                log::warn!("device-apply re-probe failed: {e:#}");
+                                sched.set_apply_override(Some(ApplyMode::Host));
+                                if sched.reground_active().is_err() {
+                                    fail_active(sched, pending, guard, &format!("{e}"));
+                                    break false;
+                                }
+                            }
+                        }
+                    }
                 }
+                break true;
             }
-            sched.evict_all();
-            guard.sync(0);
-            false
+            Err(e) => {
+                let class = classify(&e);
+                log::warn!("scheduler tick failed ({class:?}, attempt {attempt}): {e:#}");
+                if class == TickErrorClass::Misconfig || attempt >= TICK_RETRY_BUDGET {
+                    fail_active(sched, pending, guard, &format!("{e}"));
+                    break false;
+                }
+                if class == TickErrorClass::Poisoned {
+                    // a divergent fused dispatch cannot be trusted at this
+                    // depth: step the ladder down before re-grounding
+                    if let Some(k) = sched.demote_fused_k() {
+                        if let Some(inj) = sched.fault_injector() {
+                            inj.note_fused_k_demotion();
+                        }
+                        log::warn!("demoted fused dispatch depth to k={k}");
+                    }
+                }
+                recovery.consecutive_faults += 1;
+                if !recovery.quarantined && recovery.consecutive_faults >= QUARANTINE_AFTER {
+                    sched.set_apply_override(Some(ApplyMode::Host));
+                    recovery.quarantined = true;
+                    recovery.clean_since_quarantine = 0;
+                    if let Some(inj) = sched.fault_injector() {
+                        inj.note_host_demotion();
+                    }
+                    log::warn!("quarantining device apply to Host after repeated faults");
+                }
+                // re-ground: one prefill over the occupied slots rebuilds
+                // the device state from the (untouched) host trajectory,
+                // so the retried tick is token-identical. The re-ground
+                // itself may hit another injected fault — burn an attempt
+                // and try again within the same budget.
+                let mut grounded = false;
+                while attempt <= TICK_RETRY_BUDGET {
+                    match sched.reground_active() {
+                        Ok(_) => {
+                            if let Some(inj) = sched.fault_injector() {
+                                inj.note_tick_retried();
+                                inj.note_chain_regrounded();
+                            }
+                            grounded = true;
+                            break;
+                        }
+                        Err(e2) if classify(&e2) != TickErrorClass::Misconfig => {
+                            log::warn!("re-ground faulted (attempt {attempt}): {e2:#}");
+                            attempt += 1;
+                            recovery.consecutive_faults += 1;
+                            std::thread::sleep(Duration::from_millis(1u64 << attempt.min(6)));
+                        }
+                        Err(e2) => {
+                            log::error!("re-ground failed: {e2:#}");
+                            break;
+                        }
+                    }
+                }
+                if !grounded {
+                    fail_active(sched, pending, guard, &format!("{e}"));
+                    break false;
+                }
+                std::thread::sleep(Duration::from_millis(1u64 << attempt.min(6)));
+                attempt += 1;
+            }
         }
-    }
+    };
+    pump_fault_stats(sched, metrics, recovery);
+    outcome
 }
 
 fn admit_request(
@@ -502,9 +742,10 @@ fn run_continuous(
     queue: Channel<GenRequest>,
     metrics: Arc<Metrics>,
 ) {
-    let mut pending: HashMap<u64, OneShot<Result<GenReply, String>>> = HashMap::new();
+    let mut pending = PendingRepliesGuard::new();
     let mut next_id: u64 = 0;
     let mut guard = ActiveSlotsGuard::new(metrics.clone());
+    let mut recovery = RecoveryState::new();
     loop {
         // when idle, block for the first arrival and hold it so the
         // class can be sized to it before admission (a lone request
@@ -519,7 +760,24 @@ fn run_continuous(
         // batch-class selection from demand, at block boundaries only
         let demand_queued = usize::from(held.is_some()) + queue.len();
         if let Err(e) = sched.maybe_switch_class(demand_queued) {
-            log::error!("batch-class switch failed: {e:#}");
+            // the switch unwound to the outgoing class, but its chain may
+            // have been lost mid-checkout: evict and re-ground explicitly
+            // so resident sequences keep decoding instead of hitting an
+            // unseeded chain on the next tick
+            log::error!("batch-class switch failed: {e:#} — re-grounding the active class");
+            match sched.reground_active() {
+                Ok(n) => {
+                    if let Some(inj) = sched.fault_injector() {
+                        inj.note_chain_regrounded();
+                    }
+                    log::warn!("re-grounded {n} resident sequences after failed class switch");
+                }
+                Err(e2) => {
+                    log::error!("re-ground after failed class switch also failed: {e2:#}");
+                    fail_active(&mut sched, &mut pending, &mut guard, &format!("{e2}"));
+                }
+            }
+            pump_fault_stats(&sched, &metrics, &mut recovery);
         }
         // admission: the held request first, then fill free slots.
         // (a failed admission — bad request — leaves the group idle, so
@@ -543,7 +801,7 @@ fn run_continuous(
         // don't charge an empty tick to the per-tick metrics — circle
         // back into the blocking recv instead, as the pre-pool loop did
         if sched.active() > 0 {
-            tick_once(&mut sched, &metrics, &mut pending, &mut guard);
+            tick_once(&mut sched, &metrics, &mut pending, &mut guard, &mut recovery);
         }
     }
 }
@@ -558,10 +816,11 @@ fn run_to_completion(
 ) {
     let mut next_id: u64 = 0;
     let mut guard = ActiveSlotsGuard::new(metrics.clone());
+    let mut recovery = RecoveryState::new();
     while let Some(batch) = next_batch(&queue, &batcher) {
         metrics.batches_total.inc();
         metrics.batch_occupancy_sum.add(batch.len() as u64);
-        let mut pending: HashMap<u64, OneShot<Result<GenReply, String>>> = HashMap::new();
+        let mut pending = PendingRepliesGuard::new();
         for req in batch {
             let id = next_id;
             next_id += 1;
@@ -569,7 +828,7 @@ fn run_to_completion(
         }
         guard.sync(sched.active());
         while sched.active() > 0 {
-            if !tick_once(&mut sched, &metrics, &mut pending, &mut guard) {
+            if !tick_once(&mut sched, &metrics, &mut pending, &mut guard, &mut recovery) {
                 break;
             }
         }
@@ -691,6 +950,139 @@ mod tests {
         assert_eq!(metrics.active_slots.get(), 1);
         drop(guard);
         assert_eq!(metrics.active_slots.get(), 0, "clean exit drains too");
+    }
+
+    #[test]
+    fn pending_replies_guard_answers_outstanding_oneshots_on_panic() {
+        // regression: a worker that panicked between admission and reply
+        // used to leave the client blocked on wait() forever; the
+        // drop-guard must answer every outstanding oneshot during unwind
+        let slot: OneShot<Result<GenReply, String>> = OneShot::new();
+        let s2 = slot.clone();
+        let worker = std::thread::spawn(move || {
+            let mut pending = PendingRepliesGuard::new();
+            pending.insert(7, s2);
+            panic!("worker dies with replies in flight");
+        });
+        assert!(worker.join().is_err(), "the worker must have panicked");
+        let err = slot.wait().unwrap_err();
+        assert!(err.contains("worker terminated"), "{err}");
+
+        // a reply delivered before the unwind is not overwritten
+        let answered: OneShot<Result<GenReply, String>> = OneShot::new();
+        {
+            let mut pending = PendingRepliesGuard::new();
+            pending.insert(1, answered.clone());
+            let reply = pending.remove(&1).unwrap();
+            reply.put(Err("bad request: x".into()));
+        }
+        assert_eq!(answered.wait().unwrap_err(), "bad request: x");
+    }
+
+    fn faulted_sim_router(plan: &str, slots: usize) -> Router {
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.engine.fault_plan = crate::fault::FaultPlan::parse(plan).unwrap();
+        cfg.backend = WorkerBackend::Sim(SimCfg::default());
+        cfg.batcher = BatcherCfg { max_batch: slots, flush_ms: 2 };
+        cfg.queue_cap = 16;
+        cfg.mode = SchedMode::Continuous;
+        Router::start(cfg)
+    }
+
+    #[test]
+    fn transient_exec_fault_recovers_token_identical_through_the_router() {
+        // fault-free baseline
+        let clean = sim_router(SchedMode::Continuous, 2, 16);
+        let want = clean.submit("1+2=".into(), SeqParams::default()).unwrap();
+        let want = want.wait().expect("fault-free run");
+        clean.shutdown();
+
+        // event 1 is the grounding prefill run; event 2 is the first step
+        // run — fault it, and the recovery loop must re-ground and retry
+        // to a token-identical completion (the --fault-plan path through
+        // EngineCfg also covers the plan hand-off to sim workers)
+        let router = faulted_sim_router("exec@2", 2);
+        let slot = router.submit("1+2=".into(), SeqParams::default()).unwrap();
+        let reply = slot.wait().expect("faulted run recovers");
+        assert_eq!(reply.text, want.text, "recovery is token-identical");
+        assert_eq!(reply.tokens, want.tokens);
+        let m = &router.metrics;
+        assert_eq!(m.faults_injected.get(), 1);
+        assert_eq!(m.ticks_retried.get(), 1);
+        assert!(m.chains_regrounded.get() >= 1);
+        assert_eq!(m.requests_failed.get(), 0, "nobody saw the fault");
+        router.shutdown();
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_only_the_affected_sequence() {
+        // five consecutive exec faults: the faulted tick (event 2) plus
+        // every re-ground prefill (events 3-6) — the retry budget (3)
+        // exhausts and the resident sequence fails with the typed fault
+        let router = faulted_sim_router("exec@2,exec@3,exec@4,exec@5,exec@6", 1);
+        let doomed = router.submit("ab".into(), SeqParams::default()).unwrap();
+        let ok = router.submit("cdef".into(), SeqParams::default()).unwrap();
+        let err = doomed.wait().unwrap_err();
+        assert!(err.contains("injected exec fault"), "{err}");
+        // the queued request was never touched by the fault: the worker
+        // stays alive and serves it cleanly after the eviction
+        assert_eq!(ok.wait().expect("unaffected request").text, "cdef");
+        let m = &router.metrics;
+        assert_eq!(m.requests_failed.get(), 1, "exactly the doomed sequence");
+        assert_eq!(m.faults_injected.get(), 5);
+        assert!(m.host_demotions.get() >= 1, "the fault streak quarantined to Host");
+        router.shutdown();
+    }
+
+    #[test]
+    fn failed_class_switch_regrounds_instead_of_limping_on() {
+        // regression: an alloc fault during the very first downshift
+        // (8 → 1, empty pool, nothing evictable) fails
+        // maybe_switch_class; the old code only logged the error and
+        // limped on. The worker must recover explicitly — re-ground the
+        // unwound class — and still serve the request.
+        let router = faulted_sim_router("alloc@1", 8);
+        let slot = router.submit("1+2=".into(), SeqParams::default()).unwrap();
+        let reply = slot.wait().expect("request survives the failed switch");
+        assert_eq!(reply.text, "1+2=");
+        let m = &router.metrics;
+        assert_eq!(m.faults_injected.get(), 1);
+        assert!(m.chains_regrounded.get() >= 1, "explicit recovery ran");
+        assert_eq!(m.requests_failed.get(), 0);
+        // the worker is healthy for the next request
+        let again = router.submit("xy".into(), SeqParams::default()).unwrap();
+        assert_eq!(again.wait().unwrap().text, "xy");
+        router.shutdown();
+    }
+
+    #[test]
+    fn overdue_request_gets_a_structured_timeout_reply() {
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        // slow enough that the first block boundary lands past 1 ms
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 1000, 1000));
+        cfg.batcher = BatcherCfg { max_batch: 1, flush_ms: 2 };
+        cfg.queue_cap = 8;
+        cfg.mode = SchedMode::Continuous;
+        let router = Router::start(cfg);
+        let params = SeqParams { timeout_ms: Some(1), ..Default::default() };
+        let err = router
+            .submit("abcdefgh".into(), params)
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(err.starts_with("timeout:"), "{err}");
+        assert_eq!(router.metrics.timeouts_total.get(), 1);
+        assert_eq!(router.metrics.requests_failed.get(), 0, "a timeout is not a fault");
+        // the slot was freed: the worker serves the next request
+        let ok = router.submit("ab".into(), SeqParams::default()).unwrap();
+        assert_eq!(ok.wait().unwrap().text, "ab");
+        router.shutdown();
     }
 
     #[test]

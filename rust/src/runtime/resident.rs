@@ -134,6 +134,31 @@
 //! ledger — is byte-exact between the sim and PJRT planners because
 //! both drive the same pool API with the same [`chain_seed_bytes`]
 //! accounting.
+//!
+//! # Faults and the eviction ladder
+//!
+//! Residency is also where device faults land, and the recovery
+//! contract (see [`crate::fault`] and [`crate::router`]) leans on two
+//! properties of this module:
+//!
+//!   * **A faulted run invalidates, never limps.** When an execution or
+//!     transfer fails mid-tick, the scheduler calls
+//!     `invalidate_resident`, which drops the live chain *and* its
+//!     pooled entry. The retained device state may be arbitrarily
+//!     corrupt after a failed dispatch; because the host trajectory is
+//!     only mutated after a successful downlink, the chain can always
+//!     be rebuilt from host truth by a grounding prefill — that
+//!     re-ground is what makes transient-fault recovery
+//!     token-identical.
+//!   * **Allocation pressure degrades before it fails.** An allocation
+//!     fault during chain seed/checkout first walks the ladder's
+//!     cheapest rung: [`ResidencyPool::evict_lru`] frees the
+//!     least-recently-used *parked* plans (live chains are never
+//!     victims) and the activation retries. Only an empty pool lets the
+//!     error surface to the router, whose ladder continues with fused-k
+//!     demotion and, ultimately, `ApplyMode::Host` quarantine. An
+//!     evicted chain's next checkout misses and re-seeds exactly the
+//!     evicted keys — untouched parked chains still resume for free.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -437,11 +462,15 @@ pub struct PoolStats {
 
 #[derive(Default)]
 struct PoolInner {
-    /// parked plans keyed by (arch, batch, owner). PJRT workers park
+    /// parked plans keyed by (arch, batch, owner), each stamped with the
+    /// monotonic use counter below for LRU eviction. PJRT workers park
     /// under `Some(worker)` — their device buffers are thread-local, so
     /// only they can resume the chain; the sim backend parks under
     /// `None`, modelling true cross-worker device sharing.
-    parked: BTreeMap<(String, usize, Option<u64>), ChainPlan>,
+    parked: BTreeMap<(String, usize, Option<u64>), (ChainPlan, u64)>,
+    /// monotonic use counter: bumped on every park and checkout hit, so
+    /// the smallest stamp in `parked` is the least-recently-used entry
+    use_clock: u64,
     /// chains currently checked out (live in some worker)
     active: u64,
     switches: u64,
@@ -489,10 +518,14 @@ impl ResidencyPool {
     ) -> Option<ChainPlan> {
         let mut g = self.inner.lock().unwrap();
         let key = (arch.to_string(), batch, owner);
+        g.use_clock += 1;
+        let now = g.use_clock;
         let plan = if owner.is_none() {
-            g.parked.get(&key).cloned()?
+            let (plan, stamp) = g.parked.get_mut(&key)?;
+            *stamp = now;
+            plan.clone()
         } else {
-            let plan = g.parked.remove(&key)?;
+            let (plan, _) = g.parked.remove(&key)?;
             g.active += 1;
             plan
         };
@@ -528,7 +561,9 @@ impl ResidencyPool {
         if was_active {
             g.active = g.active.saturating_sub(1);
         }
-        g.parked.insert((arch.to_string(), batch, owner), plan);
+        g.use_clock += 1;
+        let now = g.use_clock;
+        g.parked.insert((arch.to_string(), batch, owner), (plan, now));
     }
 
     /// Count one scheduler batch-class switch.
@@ -554,6 +589,32 @@ impl ResidencyPool {
         if was_active {
             g.active = g.active.saturating_sub(1);
         }
+    }
+
+    /// Evict up to `n` least-recently-used parked entries (live chains
+    /// are never touched — a worker is executing against them) and
+    /// return the evicted keys. The degradation ladder's response to an
+    /// allocation failure on chain seed/checkout: free parked device
+    /// state first, fall back to surfacing the error only when there is
+    /// nothing left to free. An evicted chain's next checkout misses and
+    /// re-seeds — exactly the evicted keys, nothing else.
+    pub fn evict_lru(&self, n: usize) -> Vec<(String, usize, Option<u64>)> {
+        let mut g = self.inner.lock().unwrap();
+        let mut evicted = Vec::new();
+        for _ in 0..n {
+            let key = match g
+                .parked
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                Some(k) => k,
+                None => break,
+            };
+            g.parked.remove(&key);
+            evicted.push(key);
+        }
+        evicted
     }
 
     /// Return `n` live-chain counts without touching any parked entry —
@@ -1605,6 +1666,27 @@ mod tests {
         assert_eq!(pool.stats().resident_chains, 0);
         // the evicted plan is unreachable: a later checkout must rebuild
         assert!(pool.checkout("a", 1, None, 0).is_none());
+    }
+
+    #[test]
+    fn pool_evict_lru_frees_oldest_parked_entries_first() {
+        let pool = ResidencyPool::new();
+        let seeded = ChainPlan { kv_seeded: true, ..Default::default() };
+        pool.park("a", 1, None, seeded.clone(), false); // oldest
+        pool.park("a", 8, None, seeded.clone(), false);
+        pool.park("b", 8, None, seeded.clone(), false); // newest
+        // touching b1 via a shared checkout makes it most-recently-used
+        assert!(pool.checkout("a", 1, None, 0).is_some());
+
+        let evicted = pool.evict_lru(1);
+        assert_eq!(evicted, vec![("a".to_string(), 8, None)], "LRU is a/b8");
+        assert!(pool.checkout("a", 8, None, 0).is_none(), "evicted: must re-seed");
+        assert!(pool.checkout("a", 1, None, 0).is_some(), "recently used survives");
+
+        // draining past the registry is safe and reports what it freed
+        let rest = pool.evict_lru(5);
+        assert_eq!(rest.len(), 2);
+        assert!(pool.evict_lru(1).is_empty(), "nothing left to evict");
     }
 
     #[test]

@@ -122,6 +122,35 @@
 //! buffers are not `Send`), the sim backend parks under the shared
 //! owner and models true cross-worker device sharing.
 //!
+//! # Fault tolerance
+//!
+//! A tick's backend work (phases 2–3: shared prefill, step groups)
+//! surfaces errors with `?` BEFORE the unmask phase — the only place
+//! the host trajectory mutates — so a failed tick leaves every
+//! sequence's tokens exactly as they were and the next [`tick`]
+//! re-plans it from scratch. That retry-safety invariant is what the
+//! router's recovery loop builds on: it classifies the error with
+//! [`crate::fault::classify`] (transient injected fault / poisoned
+//! chain / misconfiguration), calls
+//! [`GroupScheduler::reground_active`] — invalidate the active class's
+//! resident device state, then one grounding prefill over every
+//! occupied slot regenerates chain and logits/conf mirrors from the
+//! host token mirror — and re-ticks within a bounded retry budget.
+//! Recovered sequences produce token-identical output; unaffected
+//! classes never notice. Poisoned-chain errors (the fused
+//! committed-count audits here and in the backends, typed
+//! [`crate::fault::PoisonedChain`]) additionally step the fused depth
+//! down one rung ([`GroupScheduler::demote_fused_k`]) before the
+//! retry, and repeated device faults quarantine the backend to
+//! `ApplyMode::Host` via [`GroupScheduler::set_apply_override`] — both
+//! rungs of the device→host degradation ladder, recorded in the
+//! backend's [`crate::fault::FaultStats`] ledger. Sequences carrying a
+//! [`SeqParams::timeout_ms`] deadline retire at their next block
+//! boundary with a structured `timeout:` error once overdue
+//! ([`FinishedSeq::error`]), never holding a slot past the cut point.
+//!
+//! [`tick`]: GroupScheduler::tick
+//!
 //! One documented exception: the experimental adaptive skip-ratio mode
 //! (`EngineCfg::adaptive`) keeps a single group-scoped confidence-drift
 //! signal — as the pre-refactor engine did for its lockstep batch — so
@@ -142,6 +171,7 @@ use crate::engine::{
     apply_step_exe_name, device_apply_eligible, fused_step_exe_name, prefill_apply_exe_name,
     step_exe_name, EngineCfg, Method, FUSED_KS,
 };
+use crate::fault::{FaultInjector, FaultKind, PoisonedChain};
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
@@ -165,6 +195,11 @@ pub struct SeqParams {
     pub temperature: Option<f32>,
     /// confidence-aware parallel-decoding threshold override
     pub parallel_threshold: Option<f32>,
+    /// per-request deadline, measured from submission. An overdue
+    /// sequence retires at its next block boundary with a structured
+    /// `timeout:` error instead of its text (the server maps it to 504,
+    /// never a blanket 500).
+    pub timeout_ms: Option<u64>,
 }
 
 /// A sequence waiting to enter a slot.
@@ -198,6 +233,9 @@ pub struct SeqState {
     pub n_es: usize,
     pub submitted: Instant,
     pub admitted: Instant,
+    /// per-request deadline measured from `submitted` (see
+    /// [`SeqParams::timeout_ms`])
+    pub timeout_ms: Option<u64>,
 }
 
 /// A retired sequence with its true per-request statistics (these
@@ -220,6 +258,10 @@ pub struct FinishedSeq {
     pub queue_s: f64,
     /// admission → retirement (generation time)
     pub gen_s: f64,
+    /// structured retirement error (e.g. `timeout: …`): the sequence
+    /// retired without a usable completion and the router must deliver
+    /// this message instead of `text`
+    pub error: Option<String>,
 }
 
 /// Per-slot commit transcript of a fused run: for each member of the
@@ -310,6 +352,18 @@ pub trait StepBackend {
     fn pool_stats(&self) -> PoolStats {
         PoolStats::default()
     }
+    /// The backend's fault injector — the home of its
+    /// [`crate::fault::FaultStats`] ledger. `None` for backends without
+    /// fault modeling.
+    fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        None
+    }
+    /// Recovery-ladder override of the backend's apply mode: `Some(Host)`
+    /// quarantines the device-apply path after repeated device faults,
+    /// `None` re-probes back. Implementations retire their resident
+    /// layers so chains rebuild in the new mode; the caller re-grounds
+    /// afterwards. No-op for backends without a resident layer.
+    fn set_apply_override(&mut self, _mode: Option<ApplyMode>) {}
 }
 
 /// Batch-class switch damping for
@@ -705,6 +759,9 @@ impl<'a> GroupScheduler<'a> {
             }
             sampler.parallel_threshold = Some(th);
         }
+        if input.params.timeout_ms == Some(0) {
+            return Err(anyhow!("bad request: timeout_ms must be positive"));
+        }
         let tok = self.backend.tokenizer();
         let ids = tok
             .encode_prompt(&input.prompt, d.prompt_len)
@@ -737,8 +794,58 @@ impl<'a> GroupScheduler<'a> {
             n_es: 0,
             submitted: input.submitted,
             admitted: Instant::now(),
+            timeout_ms: input.params.timeout_ms,
         });
         Ok(slot)
+    }
+
+    /// Re-ground the active class after a failed tick: invalidate its
+    /// resident device state and run one grounding prefill over every
+    /// occupied slot, regenerating chain + logits/conf mirrors from the
+    /// host token mirror. The failed tick never mutated the trajectory
+    /// (backend errors surface before the unmask phase), so the next
+    /// [`GroupScheduler::tick`] re-plans and the recovered sequences
+    /// produce token-identical output. Not counted as a decode
+    /// iteration. Returns how many sequences were re-grounded.
+    pub fn reground_active(&mut self) -> Result<usize> {
+        let ac = self.active_class;
+        let occupied: Vec<usize> = (0..self.states[ac].batch)
+            .filter(|&s| self.states[ac].slots[s].is_some())
+            .collect();
+        let st = &mut self.states[ac];
+        self.backend.invalidate_resident(&mut st.caches);
+        if occupied.is_empty() {
+            return Ok(0);
+        }
+        self.backend.run_prefill(&st.tokens, &occupied, &mut st.caches)?;
+        Ok(occupied.len())
+    }
+
+    /// Step the fused dispatch depth down one rung (k → k/2, floored at
+    /// 1 = unfused) after a poisoned-chain error. Returns the new depth,
+    /// or `None` when already unfused.
+    pub fn demote_fused_k(&mut self) -> Option<usize> {
+        if self.cfg.k <= 1 {
+            return None;
+        }
+        self.cfg.k = (self.cfg.k / 2).max(1);
+        Some(self.cfg.k)
+    }
+
+    /// The current fused dispatch depth (1 = unfused).
+    pub fn fused_k(&self) -> usize {
+        self.cfg.k
+    }
+
+    /// The backend's fault injector, if it models faults.
+    pub fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        self.backend.fault_injector()
+    }
+
+    /// Forward a recovery-ladder apply-mode override to the backend (see
+    /// [`StepBackend::set_apply_override`]). Callers re-ground after.
+    pub fn set_apply_override(&mut self, mode: Option<ApplyMode>) {
+        self.backend.set_apply_override(mode);
     }
 
     /// Step every occupied slot of the active class one iteration;
@@ -865,11 +972,11 @@ impl<'a> GroupScheduler<'a> {
                 // stash each member's downlinked commit transcript for
                 // the unmask loop
                 if commits.len() != group.len() {
-                    return Err(anyhow!(
+                    return Err(anyhow::Error::new(PoisonedChain(format!(
                         "fused run returned {} commit transcripts for {} slots",
                         commits.len(),
                         group.len()
-                    ));
+                    ))));
                 }
                 for (&s, slot_commits) in group.iter().zip(commits) {
                     self.states[ac].slots[s].as_mut().unwrap().n_es += fused_n;
@@ -926,12 +1033,12 @@ impl<'a> GroupScheduler<'a> {
                         // chain built on it is unusable — fail loudly
                         // rather than continue desynced
                         self.backend.invalidate_resident(&mut st.caches);
-                        return Err(anyhow!(
+                        return Err(anyhow::Error::new(PoisonedChain(format!(
                             "fused commit for slot {s} at gen position {p} \
                              (token {t}) falls outside block \
                              [{block_lo}, {}) or hits an unmasked cell",
                             block_lo + block
-                        ));
+                        ))));
                     }
                     st.tokens[cell] = t;
                     let seq = st.slots[s].as_mut().unwrap();
@@ -967,7 +1074,11 @@ impl<'a> GroupScheduler<'a> {
             }
         }
 
-        // 5. block advance + retirement at block boundaries
+        // 5. block advance + retirement at block boundaries. A sequence
+        //    whose per-request deadline has passed retires HERE — the
+        //    block boundary is the only trajectory-safe cut point — with
+        //    a structured `timeout:` error instead of its (partial)
+        //    text, freeing the slot for the queue.
         let mut finished = Vec::new();
         for &s in &occupied {
             let (block_lo, gen_len) = {
@@ -987,7 +1098,15 @@ impl<'a> GroupScheduler<'a> {
                 seq.i_b = 0;
                 seq.block_idx * self.cfg.block >= seq.gen_len
             } || seq_complete(&self.states[ac].gen_row(&d, s)[..gen_len], mask, eos);
-            if done {
+            // a completed sequence always delivers its result, deadline
+            // or not (the work is already paid for); only an unfinished
+            // overdue sequence is cut
+            let timed_out = !done && {
+                let seq = self.states[ac].slots[s].as_ref().unwrap();
+                seq.timeout_ms
+                    .is_some_and(|ms| seq.submitted.elapsed().as_millis() as u64 >= ms)
+            };
+            if done || timed_out {
                 let (text, tokens_out) = {
                     let row = &self.states[ac].gen_row(&d, s)[..gen_len];
                     let text = self.backend.tokenizer().decode(row);
@@ -995,6 +1114,14 @@ impl<'a> GroupScheduler<'a> {
                     (text, tokens_out)
                 };
                 let seq = self.states[ac].slots[s].take().unwrap();
+                let error = timed_out.then(|| {
+                    format!(
+                        "timeout: exceeded {} ms after {} of {} positions",
+                        seq.timeout_ms.unwrap_or(0),
+                        tokens_out,
+                        gen_len
+                    )
+                });
                 finished.push(FinishedSeq {
                     id: seq.id,
                     text,
@@ -1005,6 +1132,7 @@ impl<'a> GroupScheduler<'a> {
                     n_es: seq.n_es,
                     queue_s: seq.admitted.duration_since(seq.submitted).as_secs_f64(),
                     gen_s: seq.admitted.elapsed().as_secs_f64(),
+                    error,
                 });
             }
         }
@@ -1079,6 +1207,19 @@ pub struct PjrtBackend<'rt> {
     /// must hand back so the gauge stays balanced
     counted: BTreeSet<usize>,
     last_flushed: TransferStats,
+    /// deterministic fault injector built from
+    /// [`EngineCfg::fault_plan`] (empty plan = never faults). Consulted
+    /// at the same per-run event cadence as the sim backend's, so a
+    /// fault ordinal fires at the same event on both backends and the
+    /// [`crate::fault::FaultStats`] ledgers stay count-exact.
+    injector: Arc<FaultInjector>,
+    /// recovery-ladder quarantine: `Some(Host)` forces the stateless
+    /// fallback for every class (a `Some(Device)` override is ignored —
+    /// device-apply still requires the compiled executables)
+    apply_override: Option<ApplyMode>,
+    /// banked transfer ledger of resident layers retired by an
+    /// apply-mode change (keeps `transfer_stats` monotone)
+    retired_stats: TransferStats,
     /// mean |Δconfidence| at the last step — the adaptive-ratio signal.
     /// Group-scoped (shared by every occupant), matching the
     /// pre-refactor engine; see the module docs for the isolation
@@ -1104,6 +1245,7 @@ impl<'rt> PjrtBackend<'rt> {
         owner: Option<u64>,
     ) -> Result<PjrtBackend<'rt>> {
         let arch = rt.arch(&cfg.arch)?.clone();
+        let injector = FaultInjector::new(cfg.fault_plan.clone());
         Ok(PjrtBackend {
             rt,
             cfg,
@@ -1116,6 +1258,9 @@ impl<'rt> PjrtBackend<'rt> {
             registered: BTreeSet::new(),
             counted: BTreeSet::new(),
             last_flushed: TransferStats::default(),
+            injector,
+            apply_override: None,
+            retired_stats: TransferStats::default(),
             conf_drift: 1.0,
         })
     }
@@ -1124,6 +1269,11 @@ impl<'rt> PjrtBackend<'rt> {
     /// executable the config can reach at that class, or a
     /// mid-generation plan would have to fall back with a cold chain.
     fn apply_for(&self, batch: usize) -> ApplyMode {
+        // a Host quarantine overrides eligibility wholesale; a Device
+        // override is meaningless (the compiled executables still gate)
+        if self.apply_override == Some(ApplyMode::Host) {
+            return ApplyMode::Host;
+        }
         if device_apply_eligible(&self.cfg)
             && self.arch.executables.contains_key(&prefill_apply_exe_name(batch))
             && self
@@ -1165,8 +1315,23 @@ impl<'rt> PjrtBackend<'rt> {
     /// Activate the resident layer for `caches`' batch class: resume the
     /// parked chain, check a pooled plan out, or build a fresh layer.
     /// Idempotent for an already-live class.
-    fn activate(&mut self, caches: &mut GroupCaches) {
+    ///
+    /// Chain seed/checkout is an allocation event: an injected
+    /// allocation fault first evicts the pool's LRU parked entry (the
+    /// free-device-memory ladder rung) and only surfaces as an error
+    /// when the pool has nothing left to evict.
+    fn activate(&mut self, caches: &mut GroupCaches) -> Result<()> {
         let batch = caches.batch;
+        if self.registered.contains(&batch) && !self.parked.contains(&batch) {
+            return Ok(()); // live and counted — nothing to do
+        }
+        if let Err(f) = self.injector.check(FaultKind::Alloc) {
+            if self.pool.evict_lru(1).is_empty() {
+                return Err(anyhow::Error::from(f)
+                    .context(format!("chain seed/checkout for class {batch}")));
+            }
+            // absorbed: an LRU parked chain was evicted to make room
+        }
         let seed = chain_seed_bytes(&self.arch.dims, batch);
         if self.parked.remove(&batch) {
             // our own parked chain: the plan comes back out of the pool
@@ -1194,10 +1359,7 @@ impl<'rt> PjrtBackend<'rt> {
                 }
             }
             self.registered.insert(batch);
-            return;
-        }
-        if self.registered.contains(&batch) {
-            return; // live and counted — nothing to do
+            return Ok(());
         }
         if self.residents.contains_key(&batch) {
             // evicted earlier and now reactivated: it re-seeds from
@@ -1230,6 +1392,7 @@ impl<'rt> PjrtBackend<'rt> {
             self.residents.insert(batch, r);
         }
         self.registered.insert(batch);
+        Ok(())
     }
 
     /// Filter candidate batch classes to those the compiled artifacts
@@ -1282,11 +1445,27 @@ impl<'rt> PjrtBackend<'rt> {
     /// Cumulative ledger merged across every batch class's resident
     /// layer (monotone, so per-tick `since` deltas stay valid).
     fn merged_stats(&self) -> TransferStats {
-        let mut total = TransferStats::default();
+        let mut total = self.retired_stats;
         for r in self.residents.values() {
             total.merge(&r.stats);
         }
         total
+    }
+
+    /// Consult the injector for the modeled run + downlink fault events
+    /// of one dispatch (same cadence as the sim backend); on a fault,
+    /// invalidate this class's resident state — the real run never
+    /// delivered — and return the typed error for the recovery loop.
+    fn check_run_faults(&mut self, caches: &mut GroupCaches, what: &str) -> Result<()> {
+        if let Err(f) = self.injector.check(FaultKind::Exec) {
+            self.invalidate_resident(caches);
+            return Err(anyhow::Error::from(f).context(format!("{what} run")));
+        }
+        if let Err(f) = self.injector.check(FaultKind::Transfer) {
+            self.invalidate_resident(caches);
+            return Err(anyhow::Error::from(f).context(format!("{what} downlink")));
+        }
+        Ok(())
     }
 
     /// Mirror the planner-ledger growth into the runtime's stats so
@@ -1352,7 +1531,8 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        self.activate(caches);
+        self.activate(caches)?;
+        self.check_run_faults(caches, "prefill")?;
         let batch = caches.batch;
         if self.residents[&batch].apply_mode() == ApplyMode::Device {
             let result = self.prefill_device_impl(tokens, slots, caches);
@@ -1425,7 +1605,8 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<()> {
-        self.activate(caches);
+        self.activate(caches)?;
+        self.check_run_faults(caches, "step")?;
         let batch = caches.batch;
         let result = if self.residents[&batch].apply_mode() == ApplyMode::Device {
             self.step_device_impl(plan, tokens, block_start, block, slots, caches)
@@ -1453,7 +1634,7 @@ impl StepBackend for PjrtBackend<'_> {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<(usize, FusedCommits)> {
-        self.activate(caches);
+        self.activate(caches)?;
         let batch = caches.batch;
         if self.residents[&batch].apply_mode() != ApplyMode::Device {
             return Ok((0, FusedCommits::new())); // fused variants exist only on the apply path
@@ -1471,6 +1652,15 @@ impl StepBackend for PjrtBackend<'_> {
         }) else {
             return Ok((0, FusedCommits::new()));
         };
+        // modeled fault events of an accepted fused dispatch: run,
+        // downlink, and the committed-count audit (diverge)
+        self.check_run_faults(caches, "fused step")?;
+        if let Err(f) = self.injector.check(FaultKind::FusedDivergence) {
+            self.invalidate_resident(caches);
+            return Err(
+                anyhow::Error::from(f).context("fused committed-count audit")
+            );
+        }
         let result = self.step_device_k_impl(depth, tokens, block_start, block, slots, caches);
         if result.is_err() {
             // same contract as run_step: a planner sync that promised a
@@ -1513,8 +1703,7 @@ impl StepBackend for PjrtBackend<'_> {
     }
 
     fn checkout_chain(&mut self, caches: &mut GroupCaches) -> Result<()> {
-        self.activate(caches);
-        Ok(())
+        self.activate(caches)
     }
 
     fn note_chain_switch(&self) {
@@ -1523,6 +1712,32 @@ impl StepBackend for PjrtBackend<'_> {
 
     fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        Some(self.injector.clone())
+    }
+
+    fn set_apply_override(&mut self, mode: Option<ApplyMode>) {
+        if self.apply_override == mode {
+            return;
+        }
+        self.apply_override = mode;
+        // resident layers are built for one apply mode, so a quarantine
+        // (or a re-probe back) retires them all: ledgers bank so
+        // `transfer_stats` stays monotone, pooled entries are evicted
+        // (their device handles die with the layers), and the next
+        // activation re-derives each class's mode — the caller
+        // re-grounds afterwards
+        for (&batch, r) in self.residents.iter() {
+            self.retired_stats.merge(&r.stats);
+            let was_active = self.counted.contains(&batch);
+            self.pool.evict(&self.cfg.arch, batch, self.owner, was_active);
+        }
+        self.residents.clear();
+        self.registered.clear();
+        self.parked.clear();
+        self.counted.clear();
     }
 }
 
@@ -1887,12 +2102,12 @@ impl PjrtBackend<'_> {
                         exe_n = exe.name)
             })?;
             if got != k as i32 {
-                return Err(anyhow!(
+                return Err(anyhow::Error::new(PoisonedChain(format!(
                     "fused run {exe_n} committed {got} tokens for slot {s}, \
                      expected exactly {k} (one per inner iteration); the \
                      in-graph unmask diverged from the greedy contract",
                     exe_n = exe.name
-                ));
+                ))));
             }
         }
         // the per-iteration commit transcript [B, k] i32 × 2 — convert
@@ -2010,6 +2225,132 @@ mod tests {
         assert_eq!(done[0].iterations, 4, "block 0 only: 4 greedy unmasks");
         assert_eq!(done[0].tokens, 4, "a, b, and two EOS fills");
         assert_eq!(s.ticks, 4);
+    }
+
+    #[test]
+    fn overdue_sequence_retires_at_block_boundary_with_timeout_error() {
+        // per-tick sleeps guarantee the 1 ms deadline passes long before
+        // the 8-content-char prompt's two blocks complete; the sequence
+        // must retire at the FIRST block boundary with a structured
+        // timeout error, freeing the slot
+        let backend = SimBackend::new(SimCfg::default().with_costs(2000, 1000, 1000));
+        let cfg = SchedCfg {
+            method: Method::EsDllm,
+            block: 4,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+            k: 1,
+            hysteresis: None,
+        };
+        let mut s = GroupScheduler::new(Box::new(backend), 1, cfg).unwrap();
+        let params = SeqParams { timeout_ms: Some(1), ..Default::default() };
+        s.admit(input(9, "abcdefgh", params)).unwrap();
+        let mut done = Vec::new();
+        for _ in 0..4 {
+            done.extend(s.tick().unwrap());
+        }
+        assert_eq!(done.len(), 1, "retired at the first block boundary");
+        let err = done[0].error.as_deref().expect("structured timeout error");
+        assert!(err.starts_with("timeout:"), "unexpected error: {err}");
+        assert_eq!(done[0].iterations, 4, "block 0 only");
+        assert_eq!(s.active(), 0, "slot freed for the queue");
+        // a zero deadline is a bad request, not a served timeout
+        let zero = SeqParams { timeout_ms: Some(0), ..Default::default() };
+        let e = s.admit(input(10, "ab", zero)).unwrap_err().to_string();
+        assert!(e.starts_with("bad request:"), "{e}");
+    }
+
+    #[test]
+    fn completed_sequence_beats_its_deadline_at_the_same_boundary() {
+        // "ab" finishes via the EOS guard at block 0's boundary; even
+        // with the deadline long expired the finished result is
+        // delivered — completed work is never converted to a timeout
+        let backend = SimBackend::new(SimCfg::default().with_costs(2000, 1000, 1000));
+        let cfg = SchedCfg {
+            method: Method::EsDllm,
+            block: 4,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+            k: 1,
+            hysteresis: None,
+        };
+        let mut s = GroupScheduler::new(Box::new(backend), 1, cfg).unwrap();
+        let params = SeqParams { timeout_ms: Some(1), ..Default::default() };
+        s.admit(input(11, "ab", params)).unwrap();
+        let done = run_to_drain(&mut s);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].error.is_none(), "finished result delivered");
+        assert_eq!(done[0].text, "ab");
+    }
+
+    #[test]
+    fn demote_fused_k_steps_down_to_unfused() {
+        let mut s = sched_fused(1, 8);
+        assert_eq!(s.fused_k(), 8);
+        assert_eq!(s.demote_fused_k(), Some(4));
+        assert_eq!(s.demote_fused_k(), Some(2));
+        assert_eq!(s.demote_fused_k(), Some(1));
+        assert_eq!(s.demote_fused_k(), None, "already unfused");
+        assert_eq!(s.fused_k(), 1);
+    }
+
+    #[test]
+    fn reground_after_failed_tick_is_token_identical() {
+        // baseline: fault-free run
+        let mut clean = sched(2, Method::EsDllm, 4);
+        clean.admit(input(1, "abcdef", SeqParams::default())).unwrap();
+        clean.admit(input(2, "wxyz", SeqParams::default())).unwrap();
+        let mut want = run_to_drain(&mut clean);
+        want.sort_by_key(|f| f.id);
+
+        // faulted: the 3rd executable run fails mid-generation; the
+        // recovery protocol (re-ground + re-tick) must reproduce the
+        // fault-free outputs exactly
+        let backend = SimBackend::new(
+            SimCfg::default()
+                .with_faults(crate::fault::FaultPlan::parse("exec@3").unwrap()),
+        );
+        let cfg = SchedCfg {
+            method: Method::EsDllm,
+            block: 4,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 2 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+            k: 1,
+            hysteresis: None,
+        };
+        let mut s = GroupScheduler::new(Box::new(backend), 2, cfg).unwrap();
+        s.admit(input(1, "abcdef", SeqParams::default())).unwrap();
+        s.admit(input(2, "wxyz", SeqParams::default())).unwrap();
+        let mut got = Vec::new();
+        let mut guard = 0;
+        let mut retried = 0;
+        while s.active() > 0 {
+            match s.tick() {
+                Ok(f) => got.extend(f),
+                Err(e) => {
+                    assert_eq!(
+                        crate::fault::classify(&e),
+                        crate::fault::TickErrorClass::Transient
+                    );
+                    s.reground_active().unwrap();
+                    retried += 1;
+                }
+            }
+            guard += 1;
+            assert!(guard < 1000, "failed to drain");
+        }
+        assert_eq!(retried, 1, "exactly one faulted tick");
+        got.sort_by_key(|f| f.id);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.text, w.text, "recovered output must be token-identical");
+            assert_eq!(g.tokens, w.tokens);
+            assert!(g.error.is_none());
+        }
     }
 
     #[test]

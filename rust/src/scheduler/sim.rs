@@ -40,6 +40,16 @@
 //! true cross-worker device sharing (the PJRT backend, pinned by the
 //! non-`Send` constraint, shares only within a worker), while its
 //! planner calls stay byte-exact with the PJRT ledger.
+//!
+//! Fault model: [`SimCfg::fault_plan`] arms a deterministic
+//! [`FaultInjector`]. Every run consumes one `exec` and one `transfer`
+//! event *after* the planner sync and *before* any host logits are
+//! written, every chain seed/checkout consumes one `alloc` event, and
+//! every fused dispatch additionally consumes one `diverge` event — so
+//! a faulted tick never mutates the host trajectory and is safely
+//! re-plannable after a re-ground. An injected allocation fault first
+//! evicts the pool's LRU parked entry (the modeled free-device-memory
+//! rung) and only surfaces when the pool is empty.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -48,6 +58,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::cache::{GroupCaches, StepPlan};
+use crate::fault::{FaultInjector, FaultKind, FaultPlan};
 use crate::manifest::Dims;
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
@@ -68,6 +79,13 @@ pub struct SimCfg {
     /// how executable outputs reach the resident copy (Device models the
     /// device-apply PJRT path; Host models the stateless fallback)
     pub apply: ApplyMode,
+    /// deterministic fault-injection schedule (empty = no faults). The
+    /// sim consumes one `exec` and one `transfer` event per executable
+    /// run, one `alloc` event per chain seed/checkout, and one
+    /// `diverge` event per fused dispatch — the same event cadence the
+    /// stub device models, so an ordinal faults at the same point on
+    /// both layers.
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for SimCfg {
@@ -91,6 +109,7 @@ impl Default for SimCfg {
             dual_cost: Duration::ZERO,
             es_cost: Duration::ZERO,
             apply: ApplyMode::Device,
+            fault_plan: FaultPlan::default(),
         }
     }
 }
@@ -129,6 +148,12 @@ impl SimCfg {
         self.apply = apply;
         self
     }
+
+    /// Inject the given deterministic fault schedule.
+    pub fn with_faults(mut self, plan: FaultPlan) -> SimCfg {
+        self.fault_plan = plan;
+        self
+    }
 }
 
 pub struct SimBackend {
@@ -152,6 +177,19 @@ pub struct SimBackend {
     /// count (register_fresh only, for the shared owner: clone-checkouts
     /// leave the counted entry in the parked registry)
     counted: BTreeSet<usize>,
+    /// deterministic fault injector built from [`SimCfg::fault_plan`]
+    /// (empty plan = never faults); also the home of this backend's
+    /// [`crate::fault::FaultStats`] ledger
+    injector: Arc<FaultInjector>,
+    /// recovery-ladder override of the configured apply mode: `Some`
+    /// when the router has quarantined the device-apply path to Host
+    /// (or re-probed it back). Changing it retires every resident layer
+    /// so chains rebuild in the new mode.
+    apply_override: Option<ApplyMode>,
+    /// cumulative transfer ledger of resident layers retired by an
+    /// apply-mode change, so `transfer_stats` stays monotone across a
+    /// Host quarantine
+    retired_stats: TransferStats,
 }
 
 /// Pool key namespace for the simulated architecture.
@@ -167,6 +205,7 @@ impl SimBackend {
     /// Backend sharing `pool` with other workers (the router wires every
     /// worker to one pool).
     pub fn with_pool(cfg: SimCfg, pool: Arc<ResidencyPool>) -> SimBackend {
+        let injector = FaultInjector::new(cfg.fault_plan.clone());
         SimBackend {
             cfg,
             tok: Tokenizer::builtin(),
@@ -175,14 +214,53 @@ impl SimBackend {
             parked: BTreeSet::new(),
             registered: BTreeSet::new(),
             counted: BTreeSet::new(),
+            injector,
+            apply_override: None,
+            retired_stats: TransferStats::default(),
         }
+    }
+
+    /// The apply mode new resident layers are built in: the recovery
+    /// ladder's override when set, the configured mode otherwise.
+    fn effective_apply(&self) -> ApplyMode {
+        self.apply_override.unwrap_or(self.cfg.apply)
+    }
+
+    /// Invalidate the active resident layer and return `f` as the tick
+    /// error — the shared exit of every injection site, so a faulted run
+    /// leaves the chain in the same state a real failed dispatch would
+    /// (untrusted, pending a re-ground).
+    fn faulted(
+        &mut self,
+        caches: &mut GroupCaches,
+        f: crate::fault::FaultError,
+        what: &str,
+    ) -> anyhow::Error {
+        self.invalidate_resident(caches);
+        anyhow::Error::from(f).context(format!("sim {what}"))
     }
 
     /// Activate the resident layer for `caches`' batch class — the same
     /// state machine as the PJRT backend's activation (resume parked /
     /// check out shared / build fresh), against the shared owner `None`.
-    fn activate(&mut self, caches: &mut GroupCaches) {
+    ///
+    /// Chain seed/checkout is an allocation event: on an injected
+    /// allocation fault the first ladder rung evicts the pool's LRU
+    /// parked entry to model freeing device memory — the fault only
+    /// surfaces as an error when the pool has nothing left to evict.
+    fn activate(&mut self, caches: &mut GroupCaches) -> Result<()> {
         let batch = caches.batch;
+        if self.registered.contains(&batch) && !self.parked.contains(&batch) {
+            return Ok(());
+        }
+        // this call will seed or check out a chain: one allocation event
+        if let Err(f) = self.injector.check(FaultKind::Alloc) {
+            if self.pool.evict_lru(1).is_empty() {
+                return Err(anyhow::Error::from(f)
+                    .context(format!("sim chain seed/checkout for class {batch}")));
+            }
+            // absorbed: an LRU parked chain was evicted to make room
+        }
         let seed = chain_seed_bytes(&self.cfg.dims, batch);
         if self.parked.remove(&batch) {
             match self.pool.checkout(SIM_ARCH, batch, None, seed) {
@@ -204,33 +282,32 @@ impl SimBackend {
                 }
             }
             self.registered.insert(batch);
-            return;
-        }
-        if self.registered.contains(&batch) {
-            return;
+            return Ok(());
         }
         if self.residents.contains_key(&batch) {
             // evicted earlier and now reactivated: a fresh chain
             self.pool.register_fresh();
             self.counted.insert(batch);
         } else {
+            let apply = self.effective_apply();
             let r = match self.pool.checkout(SIM_ARCH, batch, None, seed) {
                 // another worker parked this class: the shared device
                 // still holds the chain (the clone leaves the counted
                 // entry in the parked registry), so this worker starts
                 // seeded without adding to the live count
                 Some(plan) => {
-                    DeviceGroupCaches::with_plan(&self.cfg.dims, batch, self.cfg.apply, plan)
+                    DeviceGroupCaches::with_plan(&self.cfg.dims, batch, apply, plan)
                 }
                 None => {
                     self.pool.register_fresh();
                     self.counted.insert(batch);
-                    DeviceGroupCaches::new(&self.cfg.dims, batch, self.cfg.apply)
+                    DeviceGroupCaches::new(&self.cfg.dims, batch, apply)
                 }
             };
             self.residents.insert(batch, r);
         }
         self.registered.insert(batch);
+        Ok(())
     }
 
     /// Intended token for gen position `j` of the row whose prompt is
@@ -298,7 +375,7 @@ impl StepBackend for SimBackend {
         if !self.cfg.prefill_cost.is_zero() {
             std::thread::sleep(self.cfg.prefill_cost);
         }
-        self.activate(caches);
+        self.activate(caches)?;
         {
             let r = self.residents.get_mut(&caches.batch).expect("activated");
             if r.apply_mode() == ApplyMode::Device {
@@ -309,6 +386,13 @@ impl StepBackend for SimBackend {
             } else {
                 r.stage_prefill_tokens(tokens, slots);
             }
+        }
+        // the modeled executable run + its downlink, each one fault event
+        if let Err(f) = self.injector.check(FaultKind::Exec) {
+            return Err(self.faulted(caches, f, "prefill run"));
+        }
+        if let Err(f) = self.injector.check(FaultKind::Transfer) {
+            return Err(self.faulted(caches, f, "prefill downlink"));
         }
         let gen = self.cfg.dims.gen_len;
         for &s in slots {
@@ -353,7 +437,7 @@ impl StepBackend for SimBackend {
         if !cost.is_zero() {
             std::thread::sleep(cost);
         }
-        self.activate(caches);
+        self.activate(caches)?;
         let n_layers = self.cfg.dims.n_layers;
         {
             let r = self.residents.get_mut(&caches.batch).expect("activated");
@@ -377,6 +461,13 @@ impl StepBackend for SimBackend {
                 r.sync_ind(caches, "h", &all_layers, slots)?;
                 r.sync_conf_masked(caches, slots);
             }
+        }
+        // the modeled executable run + its downlink, each one fault event
+        if let Err(f) = self.injector.check(FaultKind::Exec) {
+            return Err(self.faulted(caches, f, "step run"));
+        }
+        if let Err(f) = self.injector.check(FaultKind::Transfer) {
+            return Err(self.faulted(caches, f, "step downlink"));
         }
         let d = &self.cfg.dims;
         let lo = block_start - d.prompt_len;
@@ -415,7 +506,7 @@ impl StepBackend for SimBackend {
         slots: &[usize],
         caches: &mut GroupCaches,
     ) -> Result<(usize, FusedCommits)> {
-        if self.cfg.apply != ApplyMode::Device {
+        if self.effective_apply() != ApplyMode::Device {
             // the stateless fallback has no fused variants
             return Ok((0, FusedCommits::new()));
         }
@@ -423,7 +514,7 @@ impl StepBackend for SimBackend {
         if !self.cfg.es_cost.is_zero() {
             std::thread::sleep(self.cfg.es_cost * k as u32);
         }
-        self.activate(caches);
+        self.activate(caches)?;
         let d = self.cfg.dims;
         {
             let r = self.residents.get_mut(&caches.batch).expect("activated");
@@ -435,6 +526,19 @@ impl StepBackend for SimBackend {
             r.sync_step_device_k(
                 caches, "h", d.n_layers, n_sel, k, tokens, block_start, block, slots,
             )?;
+        }
+        // the modeled fused run + its commit-transcript downlink, plus
+        // one divergence event per dispatch: an injected divergence
+        // models the committed-count audit failing — the chain is
+        // poisoned at this fused depth
+        if let Err(f) = self.injector.check(FaultKind::Exec) {
+            return Err(self.faulted(caches, f, "fused run"));
+        }
+        if let Err(f) = self.injector.check(FaultKind::Transfer) {
+            return Err(self.faulted(caches, f, "fused downlink"));
+        }
+        if let Err(f) = self.injector.check(FaultKind::FusedDivergence) {
+            return Err(self.faulted(caches, f, "fused committed-count audit"));
         }
         let lo = block_start - d.prompt_len;
         // the final iteration's downlink refresh (the sim's peaks are
@@ -495,11 +599,36 @@ impl StepBackend for SimBackend {
     }
 
     fn transfer_stats(&self) -> TransferStats {
-        let mut total = TransferStats::default();
+        let mut total = self.retired_stats;
         for r in self.residents.values() {
             total.merge(&r.stats);
         }
         total
+    }
+
+    fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        Some(self.injector.clone())
+    }
+
+    fn set_apply_override(&mut self, mode: Option<ApplyMode>) {
+        if self.apply_override == mode {
+            return;
+        }
+        self.apply_override = mode;
+        // resident layers are built for one apply mode, so a quarantine
+        // (or a re-probe back) retires them all: banked ledgers keep
+        // `transfer_stats` monotone, pooled entries are evicted so no
+        // worker resumes a chain in the wrong mode, and the next
+        // activation rebuilds fresh — the caller re-grounds afterwards
+        for (&batch, r) in self.residents.iter() {
+            self.retired_stats.merge(&r.stats);
+            let was_active = self.counted.contains(&batch);
+            self.pool.evict(SIM_ARCH, batch, None, was_active);
+        }
+        self.residents.clear();
+        self.registered.clear();
+        self.parked.clear();
+        self.counted.clear();
     }
 
     fn invalidate_resident(&mut self, caches: &mut GroupCaches) {
@@ -526,8 +655,7 @@ impl StepBackend for SimBackend {
     }
 
     fn checkout_chain(&mut self, caches: &mut GroupCaches) -> Result<()> {
-        self.activate(caches);
-        Ok(())
+        self.activate(caches)
     }
 
     fn note_chain_switch(&self) {
@@ -564,5 +692,57 @@ mod tests {
         for j in 1..d.gen_len {
             assert!(caches.conf[j] < caches.conf[j - 1], "position {j}");
         }
+    }
+
+    #[test]
+    fn injected_exec_fault_is_transient_and_a_rerun_recovers() {
+        let cfg = SimCfg::default()
+            .with_faults(FaultPlan::parse("exec@1").unwrap());
+        let mut b = SimBackend::new(cfg);
+        let d = b.cfg.dims;
+        let mut caches = GroupCaches::new(&d, 1);
+        let mut tokens = vec![0i32; d.ctx];
+        let ids = b.tok.encode_prompt("ab", d.prompt_len).unwrap();
+        tokens[..d.prompt_len].copy_from_slice(&ids);
+        let err = b.run_prefill(&tokens, &[0], &mut caches).unwrap_err();
+        assert_eq!(
+            crate::fault::classify(&err),
+            crate::fault::TickErrorClass::Transient
+        );
+        assert_eq!(b.injector.stats().faults_injected, 1);
+        // no logits were written by the faulted run
+        assert!(caches.logits.iter().all(|&x| x == 0.0));
+        // the re-run (exec event 2, clean) seeds a fresh chain and
+        // produces the exact state a fault-free run would
+        b.run_prefill(&tokens, &[0], &mut caches).unwrap();
+        let row = &caches.logits[..d.vocab];
+        assert_eq!(
+            (0..d.vocab).max_by(|&x, &y| row[x].total_cmp(&row[y])).unwrap() as i32,
+            ids[0]
+        );
+    }
+
+    #[test]
+    fn apply_override_quarantines_to_host_and_reprobes_back() {
+        let mut b = SimBackend::new(SimCfg::default());
+        let d = b.cfg.dims;
+        let mut caches = GroupCaches::new(&d, 1);
+        let tokens = vec![0i32; d.ctx];
+        b.run_prefill(&tokens, &[0], &mut caches).unwrap();
+        let banked = b.transfer_stats();
+        b.set_apply_override(Some(ApplyMode::Host));
+        // the ledger stays monotone across the retirement
+        assert_eq!(b.transfer_stats(), banked);
+        b.run_prefill(&tokens, &[0], &mut caches).unwrap();
+        assert_eq!(
+            b.residents.get(&1).unwrap().apply_mode(),
+            ApplyMode::Host
+        );
+        b.set_apply_override(None);
+        b.run_prefill(&tokens, &[0], &mut caches).unwrap();
+        assert_eq!(
+            b.residents.get(&1).unwrap().apply_mode(),
+            ApplyMode::Device
+        );
     }
 }

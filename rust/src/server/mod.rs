@@ -21,6 +21,21 @@
 //!   * `temperature` (float) — sampling temperature; `0.0` is greedy.
 //!   * `threshold` (float) — parallel-unmask confidence threshold;
 //!     omit for one-token-per-iteration low-confidence decoding.
+//!   * `timeout_ms` (int, ≥ 1) — per-request deadline. An overdue
+//!     sequence is retired at its next block boundary with a structured
+//!     timeout error (HTTP 504, counted in `esdllm_timeouts_total`) —
+//!     never a 500, and never mid-block. A sequence that *completes* at
+//!     the same boundary delivers its result even if overdue.
+//!
+//! # Error taxonomy
+//!
+//! Worker-side failures map onto distinct statuses so clients can tell
+//! what to do next: 400 for invalid parameters (fix the request), 503
+//! for backpressure (retry later), 504 for a deadline overrun (the
+//! request was valid but slow), and 500 only for engine faults that
+//! exhausted the router's recovery ladder — transient injected or
+//! device faults are retried and re-grounded transparently (see
+//! [`crate::router`]) and never surface here.
 //!
 //! There is deliberately NO per-request fused-`k` parameter: the fused
 //! k-step dispatch depth is a server-level deployment knob
@@ -104,6 +119,16 @@ fn opt_f32(body: &Json, key: &str) -> Result<Option<f32>, String> {
         .ok_or_else(|| format!("'{key}' must be a number"))
 }
 
+fn opt_u64(body: &Json, key: &str) -> Result<Option<u64>, String> {
+    let v = body.get(key);
+    if v.is_null() {
+        return Ok(None);
+    }
+    v.as_usize()
+        .map(|x| Some(x as u64))
+        .ok_or_else(|| format!("'{key}' must be a non-negative integer"))
+}
+
 fn generate(req: &Request, router: &Router) -> Response {
     let body = match Json::parse(req.body_str()) {
         Ok(b) => b,
@@ -118,6 +143,7 @@ fn generate(req: &Request, router: &Router) -> Response {
             gen_len: opt_usize(&body, "gen_len")?,
             temperature: opt_f32(&body, "temperature")?,
             parallel_threshold: opt_f32(&body, "threshold")?,
+            timeout_ms: opt_u64(&body, "timeout_ms")?,
         })
     };
     let params = match parse_params() {
@@ -143,6 +169,8 @@ fn generate(req: &Request, router: &Router) -> Response {
         ),
         // per-request validation failures surface as client errors
         Err(e) if e.starts_with("bad request:") => error_response(400, e),
+        // deadline overruns are a structured gateway-timeout, not a 500
+        Err(e) if e.starts_with("timeout:") => error_response(504, e),
         Err(e) => error_response(500, e),
     }
 }
@@ -202,6 +230,41 @@ mod tests {
         assert_eq!(j.get("text").as_str(), Some("7*6=42"));
         assert!(j.get("iterations").as_usize().unwrap() > 0);
         assert!(j.get("tokens").as_usize().unwrap() > 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn overdue_request_is_a_504_gateway_timeout() {
+        // slow sim: the first block boundary lands well past the 1 ms
+        // deadline, so the sequence retires with the structured timeout
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 1000, 1000));
+        cfg.batcher = BatcherCfg { max_batch: 1, flush_ms: 2 };
+        cfg.queue_cap = 4;
+        cfg.mode = SchedMode::Continuous;
+        let router = Router::start(cfg);
+        let req = Request {
+            method: "POST".into(),
+            path: "/generate".into(),
+            headers: vec![],
+            body: br#"{"prompt": "abcdefgh", "timeout_ms": 1}"#.to_vec(),
+        };
+        let resp = route(&req, &router);
+        assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("error").as_str().unwrap().starts_with("timeout:"));
+        assert_eq!(router.metrics.timeouts_total.get(), 1);
+        // timeout_ms = 0 can never be met: a client error, not a 504
+        let req = Request {
+            method: "POST".into(),
+            path: "/generate".into(),
+            headers: vec![],
+            body: br#"{"prompt": "ab", "timeout_ms": 0}"#.to_vec(),
+        };
+        assert_eq!(route(&req, &router).status, 400);
         router.shutdown();
     }
 

@@ -1,0 +1,244 @@
+//! Fault-injection + recovery acceptance tests: a transient injected
+//! fault (exec / transfer) never changes decoded output — the failed
+//! tick leaves the host trajectory untouched, so a re-ground + retry is
+//! token-identical to the fault-free run; a divergent fused dispatch
+//! steps the fused depth down one ladder rung and recovers the same
+//! way; an allocation fault on chain seed/checkout evicts the pool's
+//! LRU parked chain and re-seeds exactly that chain; and the
+//! [`esdllm::fault::FaultStats`] ledger is count-exact between the sim
+//! backend and a replay of the call cadence the PJRT backend's fault
+//! wrappers make (one exec + one transfer event per run, one alloc
+//! event per chain seed/checkout, one divergence event per accepted
+//! fused dispatch). Everything runs over the sim backend — no PJRT
+//! artifacts required.
+
+use std::time::Instant;
+
+use esdllm::cache::RefreshPolicy;
+use esdllm::engine::Method;
+use esdllm::fault::{classify, FaultInjector, FaultKind, FaultPlan, TickErrorClass};
+use esdllm::sampler::SamplerCfg;
+use esdllm::scheduler::sim::{SimBackend, SimCfg};
+use esdllm::scheduler::{FinishedSeq, GroupScheduler, SchedCfg, SeqInput, SeqParams};
+
+fn sched_cfg(block: usize, k: usize) -> SchedCfg {
+    SchedCfg {
+        method: Method::EsDllm,
+        block,
+        refresh: RefreshPolicy { prompt_period: 16, block_period: if block == 8 { 4 } else { 2 } },
+        sampler: SamplerCfg::llada(),
+        seed: 0,
+        k,
+        hysteresis: None,
+    }
+}
+
+fn sched_with_plan(n_slots: usize, block: usize, k: usize, plan: &str) -> GroupScheduler<'static> {
+    let plan = FaultPlan::parse(plan).expect("valid fault plan");
+    let backend = SimBackend::new(SimCfg::default().with_faults(plan));
+    GroupScheduler::new(Box::new(backend), n_slots, sched_cfg(block, k)).unwrap()
+}
+
+fn input(id: u64, prompt: &str) -> SeqInput {
+    SeqInput {
+        id,
+        prompt: prompt.to_string(),
+        params: SeqParams::default(),
+        submitted: Instant::now(),
+    }
+}
+
+fn drain(s: &mut GroupScheduler<'_>) -> Vec<FinishedSeq> {
+    let mut finished = Vec::new();
+    let mut guard = 0;
+    while s.active() > 0 {
+        finished.append(&mut s.tick().unwrap());
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to drain");
+    }
+    finished
+}
+
+/// The router's recovery loop, distilled: classify a failed tick,
+/// demote the fused depth on a poisoned chain, re-ground, retry.
+/// Returns the retirements plus the number of retried ticks.
+fn drain_recovering(s: &mut GroupScheduler<'_>) -> (Vec<FinishedSeq>, u32) {
+    let inj = s.fault_injector().expect("sim backend carries an injector");
+    let mut finished = Vec::new();
+    let mut retries = 0u32;
+    let mut guard = 0;
+    while s.active() > 0 {
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to drain under faults");
+        match s.tick() {
+            Ok(mut f) => finished.append(&mut f),
+            Err(e) => match classify(&e) {
+                TickErrorClass::Misconfig => panic!("unexpected misconfiguration: {e:#}"),
+                class => {
+                    if class == TickErrorClass::Poisoned && s.demote_fused_k().is_some() {
+                        inj.note_fused_k_demotion();
+                    }
+                    s.reground_active().expect("re-ground after transient fault");
+                    inj.note_tick_retried();
+                    inj.note_chain_regrounded();
+                    retries += 1;
+                }
+            },
+        }
+    }
+    (finished, retries)
+}
+
+fn texts_by_id(mut finished: Vec<FinishedSeq>) -> Vec<(u64, String, usize)> {
+    finished.sort_by_key(|f| f.id);
+    finished
+        .into_iter()
+        .map(|f| {
+            assert!(f.error.is_none(), "recovered sequence must not carry an error");
+            (f.id, f.text, f.tokens)
+        })
+        .collect()
+}
+
+/// Acceptance: under injected exec and transfer faults, every sequence
+/// — the one whose tick faulted and its groupmates — completes with
+/// output token-identical to the fault-free run, and nobody sees an
+/// error.
+#[test]
+fn exec_and_transfer_faults_recover_token_identical() {
+    let mut clean = sched_with_plan(2, 4, 1, "");
+    clean.admit(input(1, "abc")).unwrap();
+    clean.admit(input(2, "defg")).unwrap();
+    let want = texts_by_id(drain(&mut clean));
+
+    // exec event 3 faults a step run; transfer event 6 faults a later
+    // downlink — both strictly after the grounding prefill, mid-decode
+    let mut s = sched_with_plan(2, 4, 1, "exec@3,transfer@6");
+    s.admit(input(1, "abc")).unwrap();
+    s.admit(input(2, "defg")).unwrap();
+    let (finished, retries) = drain_recovering(&mut s);
+    let got = texts_by_id(finished);
+    assert_eq!(got, want, "recovery must be token-identical");
+    assert_eq!(retries, 2, "each injected fault cost exactly one retry");
+    let stats = s.fault_injector().unwrap().stats();
+    assert_eq!(stats.faults_injected, 2);
+    assert_eq!(stats.ticks_retried, 2);
+    assert_eq!(stats.chains_regrounded, 2);
+    assert_eq!(stats.requests_failed, 0, "no sequence saw the faults");
+}
+
+/// Acceptance: a fused committed-count divergence classifies as a
+/// poisoned chain, demotes the fused dispatch depth one rung
+/// (k → k/2), and the re-grounded retry still produces the fault-free
+/// output.
+#[test]
+fn fused_divergence_demotes_depth_and_recovers_token_identical() {
+    let mut clean = sched_with_plan(2, 8, 8, "");
+    clean.admit(input(1, "abc")).unwrap();
+    let want = texts_by_id(drain(&mut clean));
+    assert_eq!(clean.fused_k(), 8, "fault-free run keeps its depth");
+
+    let mut s = sched_with_plan(2, 8, 8, "diverge@1");
+    s.admit(input(1, "abc")).unwrap();
+    let (finished, retries) = drain_recovering(&mut s);
+    assert_eq!(texts_by_id(finished), want);
+    assert_eq!(retries, 1);
+    assert_eq!(s.fused_k(), 4, "one ladder rung down");
+    let stats = s.fault_injector().unwrap().stats();
+    assert_eq!(stats.faults_injected, 1);
+    assert_eq!(stats.fused_k_demotions, 1);
+    assert_eq!(stats.requests_failed, 0);
+}
+
+/// Acceptance: an allocation fault during chain checkout evicts the
+/// pool's LRU parked chain (the degradation ladder's first rung) —
+/// the switch itself succeeds, and exactly the evicted chain pays a
+/// fresh full-KV seed while untouched parked chains resume free.
+#[test]
+fn alloc_fault_evicts_lru_and_reseeds_exactly_the_evicted_chain() {
+    // alloc events: 1 = class-2 seed, 2 = class-1 seed at the first
+    // downshift, 3 = the class-2 checkout on the way back (faulted),
+    // 4 = the final class-1 resume
+    let plan = FaultPlan::parse("alloc@3").unwrap();
+    let backend = SimBackend::new(SimCfg::default().with_faults(plan));
+    let mut s =
+        GroupScheduler::with_classes(Box::new(backend), &[1, 2], sched_cfg(4, 1)).unwrap();
+
+    // seed the full class (the initial active class is the largest)
+    s.admit(input(1, "ab")).unwrap();
+    drain(&mut s);
+    assert_eq!(s.transfer_stats().full_kv_uploads, 1);
+
+    // downshift parks the class-2 chain and seeds class 1
+    s.maybe_switch_class(1).unwrap();
+    s.admit(input(2, "cd")).unwrap();
+    drain(&mut s);
+    assert_eq!(s.transfer_stats().full_kv_uploads, 2);
+
+    // upshift: the checkout's allocation event faults; the ladder
+    // evicts the LRU parked chain — which is class 2's own, parked
+    // first — and the switch still succeeds
+    s.maybe_switch_class(2).unwrap();
+    let stats = s.fault_injector().unwrap().stats();
+    assert_eq!(stats.faults_injected, 1, "the alloc fault fired");
+    s.admit(input(3, "ef")).unwrap();
+    drain(&mut s);
+    assert_eq!(
+        s.transfer_stats().full_kv_uploads,
+        3,
+        "exactly the evicted chain re-seeded"
+    );
+
+    // the class-1 chain was NOT evicted: coming back resumes it with
+    // zero reseed traffic
+    s.maybe_switch_class(1).unwrap();
+    s.admit(input(4, "gh")).unwrap();
+    drain(&mut s);
+    assert_eq!(s.transfer_stats().full_kv_uploads, 3, "no reseed on resume");
+    assert!(s.pool_stats().chain_rebuilds_avoided >= 1);
+}
+
+/// Count-exact FaultStats parity: the sim backend's injector, driven
+/// through a faulted scheduler run, must land on the identical ledger
+/// as a replay of the event cadence the PJRT backend's fault wrappers
+/// make for the same workload — one alloc event per chain
+/// seed/checkout (skipped while registered), one exec + one transfer
+/// event per run wrapper (transfer unreached when exec faults), plus
+/// the recovery notes the router credits.
+#[test]
+fn fault_stats_parity_sim_vs_pjrt_wrapper_cadence() {
+    // sim side: "abc" at block 4 runs [Prefill, Es, Dual, Es]; exec
+    // event 2 faults the first step run, recovery re-grounds + retries
+    let mut s = sched_with_plan(2, 4, 1, "exec@2");
+    s.admit(input(1, "abc")).unwrap();
+    let (_, retries) = drain_recovering(&mut s);
+    assert_eq!(retries, 1);
+    let sim_stats = s.fault_injector().unwrap().stats();
+
+    // PJRT wrapper replay with the same plan:
+    let inj = FaultInjector::new(FaultPlan::parse("exec@2").unwrap());
+    // grounding prefill: fresh activation (alloc), then run wrapper
+    inj.check(FaultKind::Alloc).unwrap();
+    inj.check(FaultKind::Exec).unwrap();
+    inj.check(FaultKind::Transfer).unwrap();
+    // first ES step: class already registered (no alloc event); the
+    // exec check faults before the transfer check is reached
+    assert!(inj.check(FaultKind::Exec).is_err());
+    // recovery: the faulted run invalidated the chain, so the
+    // re-ground prefill re-activates (alloc) and runs clean
+    inj.check(FaultKind::Alloc).unwrap();
+    inj.check(FaultKind::Exec).unwrap();
+    inj.check(FaultKind::Transfer).unwrap();
+    inj.note_tick_retried();
+    inj.note_chain_regrounded();
+    // retried ES step, dual step, final ES step
+    for _ in 0..3 {
+        inj.check(FaultKind::Exec).unwrap();
+        inj.check(FaultKind::Transfer).unwrap();
+    }
+    assert_eq!(
+        inj.stats(),
+        sim_stats,
+        "sim and PJRT-cadence ledgers must be count-exact"
+    );
+}

@@ -22,7 +22,7 @@
 //! live copy per chained tensor, even transiently during execution")
 //! without any PJRT library present.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::fmt;
 use std::path::Path;
 use std::rc::Rc;
@@ -142,6 +142,36 @@ struct LedgerCells {
     peak: Cell<usize>,
 }
 
+/// A deterministic device-fault schedule: 1-based event ordinals at
+/// which an executable run ([`StubExecutable::execute`]) or an
+/// allocation ([`StubDevice::try_alloc`]) fails. Self-contained here —
+/// the stub cannot depend on the serving crate — and populated from the
+/// serving layer's fault plan so the same ordinal faults at the same
+/// modeled event on both sides.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    pub exec_at: Vec<u64>,
+    pub alloc_at: Vec<u64>,
+}
+
+/// Shared fault state: the schedule plus per-kind event counters, shared
+/// by a [`StubDevice`] and every executable it builds.
+struct FaultState {
+    schedule: RefCell<FaultSchedule>,
+    exec_seen: Cell<u64>,
+    alloc_seen: Cell<u64>,
+}
+
+impl FaultState {
+    fn new() -> Rc<FaultState> {
+        Rc::new(FaultState {
+            schedule: RefCell::new(FaultSchedule::default()),
+            exec_seen: Cell::new(0),
+            alloc_seen: Cell::new(0),
+        })
+    }
+}
+
 /// One device allocation; dropping the last buffer that references it
 /// releases it from the ledger.
 struct Allocation {
@@ -175,13 +205,35 @@ impl Drop for Allocation {
 /// non-`Send` threading model of the real wrapper types.
 pub struct StubDevice {
     ledger: Rc<LedgerCells>,
+    faults: Rc<FaultState>,
 }
 
 impl StubDevice {
     pub fn new() -> StubDevice {
         StubDevice {
             ledger: Rc::new(LedgerCells { live: Cell::new(0), peak: Cell::new(0) }),
+            faults: FaultState::new(),
         }
+    }
+
+    /// Install (or replace) the deterministic fault schedule. Event
+    /// counters keep running — the schedule addresses ordinals from
+    /// device construction, not from installation.
+    pub fn set_fault_schedule(&self, s: FaultSchedule) {
+        *self.faults.schedule.borrow_mut() = s;
+    }
+
+    /// Executable-run events seen so far (faulted runs included).
+    pub fn exec_events(&self) -> u64 {
+        self.faults.exec_seen.get()
+    }
+
+    /// Fallible-allocation events seen so far (faulted attempts
+    /// included). The legacy infallible [`StubDevice::alloc`] does not
+    /// count here — only [`StubDevice::try_alloc`] participates in the
+    /// fault model.
+    pub fn alloc_events(&self) -> u64 {
+        self.faults.alloc_seen.get()
     }
 
     /// Currently live device allocations.
@@ -205,6 +257,19 @@ impl StubDevice {
         PjRtBuffer { alloc: Some(Allocation::fresh(&self.ledger, bytes)) }
     }
 
+    /// Fault-aware allocation: counts one allocation event and fails it
+    /// when the installed [`FaultSchedule`] names its ordinal (modeling
+    /// device OOM on a chain seed/checkout). Clean events allocate
+    /// exactly like [`StubDevice::alloc`].
+    pub fn try_alloc(&self, bytes: usize) -> Result<PjRtBuffer, Error> {
+        let n = self.faults.alloc_seen.get() + 1;
+        self.faults.alloc_seen.set(n);
+        if self.faults.schedule.borrow().alloc_at.contains(&n) {
+            return Err(Error(format!("injected alloc fault at device event {n}")));
+        }
+        Ok(self.alloc(bytes))
+    }
+
     /// Build a stub executable producing one output per `out_bytes`
     /// entry. `aliases` holds `(output_index, parameter_number)` pairs in
     /// the same format the runtime derives from the manifest
@@ -214,6 +279,7 @@ impl StubDevice {
     pub fn executable(&self, out_bytes: &[usize], aliases: &[(usize, usize)]) -> StubExecutable {
         StubExecutable {
             ledger: self.ledger.clone(),
+            faults: self.faults.clone(),
             out_bytes: out_bytes.to_vec(),
             aliases: aliases.to_vec(),
         }
@@ -232,6 +298,7 @@ impl Default for StubDevice {
 /// `HloInputOutputAliasConfig`.
 pub struct StubExecutable {
     ledger: Rc<LedgerCells>,
+    faults: Rc<FaultState>,
     out_bytes: Vec<usize>,
     aliases: Vec<(usize, usize)>,
 }
@@ -241,7 +308,16 @@ impl StubExecutable {
     /// allocation (the caller must treat that input as invalidated, as
     /// under real donation); every other output is a fresh allocation
     /// held live alongside the inputs for the duration of the call.
+    /// Each call counts one exec event against the device's
+    /// [`FaultSchedule`]; a scheduled event fails before allocating any
+    /// output (no partial result, inputs untouched — the caller must
+    /// treat the chain as invalid, exactly as after a real device error).
     pub fn execute(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>, Error> {
+        let n = self.faults.exec_seen.get() + 1;
+        self.faults.exec_seen.set(n);
+        if self.faults.schedule.borrow().exec_at.contains(&n) {
+            return Err(Error(format!("injected exec fault at device event {n}")));
+        }
         for &(out, param) in &self.aliases {
             if out >= self.out_bytes.len() {
                 return Err(Error(format!(
@@ -383,6 +459,31 @@ mod tests {
         assert!(!out[0].shares_allocation(&seed));
         drop(seed);
         assert_eq!(dev.live_buffers(), 1);
+    }
+
+    #[test]
+    fn fault_schedule_fails_the_named_exec_event() {
+        let dev = StubDevice::new();
+        dev.set_fault_schedule(FaultSchedule { exec_at: vec![2], alloc_at: vec![] });
+        let seed = dev.alloc(64);
+        let exe = dev.executable(&[64], &[(0, 0)]);
+        assert!(exe.execute(&[&seed]).is_ok(), "event 1 clean");
+        let err = exe.execute(&[&seed]).expect_err("event 2 scheduled");
+        assert!(format!("{err}").contains("injected exec fault"), "{err}");
+        assert_eq!(dev.live_buffers(), 1, "faulted run allocated nothing");
+        assert!(exe.execute(&[&seed]).is_ok(), "event 3 clean again");
+        assert_eq!(dev.exec_events(), 3);
+    }
+
+    #[test]
+    fn fault_schedule_fails_the_named_alloc_event() {
+        let dev = StubDevice::new();
+        dev.set_fault_schedule(FaultSchedule { exec_at: vec![], alloc_at: vec![1, 3] });
+        assert!(dev.try_alloc(8).is_err(), "event 1 scheduled");
+        assert_eq!(dev.live_buffers(), 0);
+        assert!(dev.try_alloc(8).is_ok(), "event 2 clean");
+        assert!(dev.try_alloc(8).is_err(), "event 3 scheduled");
+        assert_eq!(dev.alloc_events(), 3);
     }
 
     #[test]
