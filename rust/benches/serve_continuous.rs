@@ -33,6 +33,17 @@
 //! ≥ 90% of the fault-free run. Emits
 //! `artifacts/results/BENCH_faults.json`; runs artifact-free in CI.
 //!
+//! A fourth section exercises the **cross-request prefix cache** on a
+//! deterministic multi-turn chat trace: every turn re-submits its
+//! conversation's full prior context plus a fresh message, so each
+//! retirement inserts a block-aligned prefix that the next turn's
+//! admission probes. The trace runs twice — with and without a shared
+//! `PrefixCache` — and the section gates on token-identical outputs
+//! (prefix seeding is trajectory-exact), `prefix_hits > 0`, and
+//! `prefill_bytes_saved` ≥ 50% of the block-aligned baseline prefill
+//! bytes. Emits `artifacts/results/BENCH_prefix.json`; runs
+//! artifact-free in CI.
+//!
 //! Run: `cargo bench --bench serve_continuous` (ESDLLM_BENCH_N overrides
 //! the request count).
 
@@ -42,9 +53,10 @@ use esdllm::batcher::BatcherCfg;
 use esdllm::bench::{bench_n, Table};
 use esdllm::cache::RefreshPolicy;
 use esdllm::engine::{EngineCfg, Method};
-use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend};
-use esdllm::scheduler::sim::SimCfg;
-use esdllm::scheduler::SeqParams;
+use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend, PREFIX_CACHE_BUDGET};
+use esdllm::runtime::resident::{PrefixCache, PrefixStats};
+use esdllm::scheduler::sim::{SimBackend, SimCfg};
+use esdllm::scheduler::{GroupScheduler, SchedCfg, SeqInput, SeqParams};
 use esdllm::workload;
 
 const SLOTS: usize = 8;
@@ -388,6 +400,129 @@ fn fault_section(n: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Replay the chat trace turn-by-turn (each turn driven to retirement
+/// before the next is admitted — the sequencing under which turn i's
+/// retirement inserts the prefix that turn i+1's admission probes)
+/// through the slot scheduler over the sim backend. Returns the decoded
+/// texts, the prefix ledger, and the block-aligned baseline prefill
+/// bytes a cacheless server grounds over the same admissions.
+fn run_chat_trace(
+    trace: &[workload::TraceRequest],
+    cached: bool,
+) -> anyhow::Result<(Vec<String>, PrefixStats, u64)> {
+    let mut backend = SimBackend::new(SimCfg::default());
+    if cached {
+        backend.set_prefix_cache(PrefixCache::new(PREFIX_CACHE_BUDGET));
+    }
+    let scfg = SchedCfg::from_engine(&engine_cfg());
+    let block = scfg.block;
+    let mut s = GroupScheduler::new(Box::new(backend), 2, scfg)?;
+    let row_bytes = s.group_caches().kv_row_bytes() as u64;
+    let plen = s.group_caches().dims.prompt_len;
+    let mut texts = Vec::with_capacity(trace.len());
+    let mut baseline = 0u64;
+    for (i, req) in trace.iter().enumerate() {
+        let clen = req.item.prompt.len().min(plen);
+        baseline += ((clen / block) * block) as u64 * row_bytes;
+        s.admit(SeqInput {
+            id: i as u64,
+            prompt: req.item.prompt.clone(),
+            params: SeqParams::default(),
+            submitted: Instant::now(),
+        })?;
+        let mut guard = 0;
+        while s.active() > 0 {
+            for f in s.tick()? {
+                texts.push(f.text);
+            }
+            guard += 1;
+            anyhow::ensure!(guard < 10_000, "chat scheduler failed to drain");
+        }
+    }
+    Ok((texts, s.prefix_stats(), baseline))
+}
+
+/// Multi-turn chat section: the cross-request prefix cache. Runs the
+/// identical deterministic chat trace with and without a shared
+/// `PrefixCache`, asserts the decoded outputs are token-identical
+/// (prefix-seeded admission is trajectory-exact), and gates on a warm
+/// hit rate > 0 with ≥ 50% of the baseline grounding-prefill bytes
+/// credited as saved. Emits BENCH_prefix.json.
+fn prefix_section(conversations: usize, turns: usize) -> anyhow::Result<()> {
+    let plen = SimCfg::default().dims.prompt_len;
+    let trace = workload::chat_trace(conversations, turns, 200.0, plen, 0xCAFE);
+    let requests = trace.len();
+
+    let t0 = Instant::now();
+    let (cached_texts, xs, baseline) = run_chat_trace(&trace, true)?;
+    let (plain_texts, no_cache_xs, _) = run_chat_trace(&trace, false)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let identical = cached_texts == plain_texts;
+    let ratio = xs.prefill_bytes_saved as f64 / (baseline as f64).max(1.0);
+
+    println!(
+        "\n== prefix: {conversations} conversations × {turns} turns \
+         ({requests} requests), cached vs cacheless =="
+    );
+    println!(
+        "{} hits / {} misses in {wall_s:.2}s; {} B of grounding-prefill \
+         traffic saved of a {baseline} B block-aligned baseline \
+         ({:.1}%); {} B resident, {} evictions; outputs token-identical: \
+         {identical}",
+        xs.prefix_hits,
+        xs.prefix_misses,
+        xs.prefill_bytes_saved,
+        100.0 * ratio,
+        xs.prefix_cache_bytes,
+        xs.prefix_evictions,
+    );
+    assert_eq!(
+        no_cache_xs,
+        PrefixStats::default(),
+        "the cacheless run must touch no prefix ledger"
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_continuous_prefix\",\n  \
+         \"conversations\": {conversations},\n  \"turns\": {turns},\n  \
+         \"requests\": {requests},\n  \"wall_s\": {wall_s:.3},\n  \
+         \"prefix_hits\": {},\n  \"prefix_misses\": {},\n  \
+         \"prefill_bytes_saved\": {},\n  \
+         \"baseline_prefill_bytes\": {baseline},\n  \
+         \"saved_ratio\": {ratio:.4},\n  \"prefix_cache_bytes\": {},\n  \
+         \"prefix_evictions\": {},\n  \"token_identical\": {identical}\n}}\n",
+        xs.prefix_hits,
+        xs.prefix_misses,
+        xs.prefill_bytes_saved,
+        xs.prefix_cache_bytes,
+        xs.prefix_evictions,
+    );
+    std::fs::write("artifacts/results/BENCH_prefix.json", json)?;
+    println!("wrote artifacts/results/BENCH_prefix.json");
+
+    // acceptance: warm turns must HIT (every turn past a conversation's
+    // first re-submits a cached block-aligned prefix), the credited
+    // savings must cover at least half the baseline grounding-prefill
+    // bytes, and caching must not perturb a single decoded token
+    let ok = xs.prefix_hits > 0 && ratio >= 0.5 && identical;
+    println!(
+        "acceptance (warm hits, ≥ 50% prefill bytes saved, \
+         trajectory-exact): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "prefix cache underperformed: hits={} saved={} baseline={baseline} \
+             ratio={ratio:.4} identical={identical}",
+            xs.prefix_hits,
+            xs.prefill_bytes_saved,
+        ));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     let n = bench_n(330);
@@ -495,5 +630,7 @@ fn main() -> anyhow::Result<()> {
     residency_section(2, 5)?;
     // fault-injection recovery section (same trace, seeded fault rate)
     fault_section(n.min(120))?;
+    // cross-request prefix-cache section (multi-turn chat trace)
+    prefix_section(6, 4)?;
     Ok(())
 }

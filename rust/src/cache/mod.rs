@@ -17,7 +17,27 @@
 //! layer ([`crate::runtime::resident::DeviceGroupCaches`]) consumes those
 //! bitmaps to decide which rows actually need re-syncing to the device
 //! before the next executable run — steady-state steps whose outputs were
-//! applied device-side re-upload nothing.
+//! applied device-side re-upload nothing. The `tok` bitmap tracks the
+//! context-token rows the same way for the fused path's fourth chained
+//! tensor (`x_tok` stays device-resident across fused dispatches;
+//! admissions and host-applied commits re-dirty exactly the rows they
+//! rewrote).
+//!
+//! # Cross-request prefix reuse
+//!
+//! The prompt-region KV rows of a slot are a pure function of its prompt
+//! tokens under the deterministic grounding prefill, which makes them
+//! *relocatable*: [`GroupCaches::extract_prefix_rows`] copies the first
+//! `p` context rows (all layers, K and V, all heads) of a retiring slot
+//! out into a flat payload keyed by the prompt prefix, and
+//! [`GroupCaches::merge_prefix_rows`] copies such a payload into a newly
+//! admitted slot, marking (never clearing) the seeded rows' dirty bits —
+//! the prefix seed is host-originated state the resident layer has not
+//! seen. Prefix lengths are block-aligned by the callers so the
+//! suffix-only prefill composes with the per-slot prefill-merge above.
+//! The cross-request cache itself (keying, LRU-by-bytes eviction, hit
+//! ledger) lives in [`crate::runtime::resident::PrefixCache`]; the
+//! admission probe sits in the scheduler.
 
 use anyhow::{anyhow, Result};
 
@@ -148,15 +168,22 @@ impl DirtyBitmap {
     }
 }
 
-/// Dirty bitmaps per cache kind. KV rows index the context positions;
-/// indicator/confidence rows index the gen-region positions; the sparse
-/// bitmap (created with the sparse cache) indexes the pruned rows.
+/// Dirty bitmaps per cache kind. KV and token rows index the context
+/// positions; indicator/confidence rows index the gen-region positions;
+/// the sparse bitmap (created with the sparse cache) indexes the pruned
+/// rows.
 #[derive(Debug, Clone)]
 pub struct DirtyState {
     pub kv: DirtyBitmap,
     pub kv_sparse: Option<DirtyBitmap>,
     pub ind: std::collections::BTreeMap<&'static str, DirtyBitmap>,
     pub conf: DirtyBitmap,
+    /// host-vs-device divergence of the context-token rows — the fused
+    /// path's fourth chained tensor. Admission resets and host-applied
+    /// unmask commits mark; the fused sync planner ships-and-clears
+    /// (fused device commits advance the chained copy in-graph, so they
+    /// never mark)
+    pub tok: DirtyBitmap,
 }
 
 impl DirtyState {
@@ -169,6 +196,7 @@ impl DirtyState {
                 .map(|i| (*i, DirtyBitmap::new_marked(batch, dims.gen_len)))
                 .collect(),
             conf: DirtyBitmap::new_marked(batch, dims.gen_len),
+            tok: DirtyBitmap::new_marked(batch, dims.ctx),
         }
     }
 
@@ -182,6 +210,7 @@ impl DirtyState {
                 bm.mark_slot(s);
             }
             self.conf.mark_slot(s);
+            self.tok.mark_slot(s);
             if let Some(bm) = self.kv_sparse.as_mut() {
                 bm.mark_slot(s);
             }
@@ -454,9 +483,70 @@ impl GroupCaches {
             bm.mark_slot(b);
         }
         self.dirty.conf.mark_slot(b);
+        self.dirty.tok.mark_slot(b);
         if let Some(bm) = self.dirty.kv_sparse.as_mut() {
             bm.mark_slot(b);
         }
+    }
+
+    // -- cross-request prefix reuse -----------------------------------------
+
+    /// Copy out the first `p` context rows of `slot`'s dense KV across
+    /// every (layer, K/V, head): the relocatable prefix payload a
+    /// retiring slot donates to the cross-request prefix cache. Layout is
+    /// row-major over (layer, k_or_v, head, t) with `head_dim` elements
+    /// per row — whatever `merge_prefix_rows` expects, and nothing else
+    /// reads it. `p` must not exceed the prompt region (prefix KV is only
+    /// a pure function of the prompt tokens there).
+    pub fn extract_prefix_rows(&self, slot: usize, p: usize) -> Result<Vec<u16>> {
+        let d = self.dims;
+        if p > d.prompt_len {
+            return Err(anyhow!(
+                "prefix of {p} rows exceeds the {}-row prompt region",
+                d.prompt_len
+            ));
+        }
+        let hd = d.head_dim;
+        let mut out = Vec::with_capacity(d.n_layers * 2 * d.n_kv_heads * p * hd);
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for h in 0..d.n_kv_heads {
+                    let off = self.kv_off(d.ctx, l, s, slot, h, 0);
+                    out.extend_from_slice(&self.kv[off..off + p * hd]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Seed `slot`'s first `p` dense-KV context rows from a cached prefix
+    /// payload (the inverse of [`GroupCaches::extract_prefix_rows`]) and
+    /// mark them dirty — the seed is host-originated state the resident
+    /// device copy has not seen, so the bits are marked, never cleared;
+    /// the grounding prefill's suffix pass then only regenerates the
+    /// unshared tail.
+    pub fn merge_prefix_rows(&mut self, slot: usize, p: usize, rows: &[u16]) -> Result<()> {
+        let d = self.dims;
+        let hd = d.head_dim;
+        let want = d.n_layers * 2 * d.n_kv_heads * p * hd;
+        if p > d.prompt_len || rows.len() != want {
+            return Err(anyhow!(
+                "prefix payload has {} elements, want {want} for {p} prompt rows",
+                rows.len()
+            ));
+        }
+        let mut src = 0usize;
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for h in 0..d.n_kv_heads {
+                    let off = self.kv_off(d.ctx, l, s, slot, h, 0);
+                    self.kv[off..off + p * hd].copy_from_slice(&rows[src..src + p * hd]);
+                    src += p * hd;
+                }
+            }
+        }
+        self.dirty.kv.mark_range(slot, 0, p);
+        Ok(())
     }
 
     // -- step-executable I/O ------------------------------------------------
@@ -1252,14 +1342,53 @@ mod tests {
         assert_eq!(c.dirty.conf.count_slot(1), 0);
 
         // reset (slot admission) marks every kind of exactly that slot
+        c.dirty.tok.clear_all();
         c.reset_slot(0);
         assert_eq!(c.dirty.kv.count_slot(0), d.ctx);
         assert_eq!(c.dirty.conf.count_slot(0), d.gen_len);
+        assert_eq!(c.dirty.tok.count_slot(0), d.ctx, "token row dirtied too");
+        assert_eq!(c.dirty.tok.count_slot(1), 0);
         for bm in c.dirty.ind.values() {
             assert_eq!(bm.count_slot(0), d.gen_len);
             assert_eq!(bm.count_slot(1), 0);
         }
         assert_eq!(c.dirty.kv.count_slot(1), block, "spectator untouched");
+    }
+
+    #[test]
+    fn prefix_rows_roundtrip_and_mark_not_clear() {
+        let d = dims();
+        let mut a = GroupCaches::new(&d, 2);
+        for (i, v) in a.kv.iter_mut().enumerate() {
+            *v = i as u16;
+        }
+        let p = 2;
+        let rows = a.extract_prefix_rows(1, p).unwrap();
+        assert_eq!(rows.len(), d.n_layers * 2 * d.n_kv_heads * p * d.head_dim);
+
+        let mut b = GroupCaches::new(&d, 2);
+        b.dirty.kv.clear_all();
+        b.merge_prefix_rows(0, p, &rows).unwrap();
+        // slot 0 of `b` now holds slot 1 of `a`'s prefix rows exactly
+        for l in 0..d.n_layers {
+            for s in 0..2 {
+                for h in 0..d.n_kv_heads {
+                    let src = a.kv_off(d.ctx, l, s, 1, h, 0);
+                    let dst = b.kv_off(d.ctx, l, s, 0, h, 0);
+                    assert_eq!(
+                        &b.kv[dst..dst + p * d.head_dim],
+                        &a.kv[src..src + p * d.head_dim]
+                    );
+                }
+            }
+        }
+        // the seed is host-originated: bits marked, never cleared
+        assert_eq!(b.dirty.kv.count_slot(0), p);
+        assert_eq!(b.dirty.kv.count_slot(1), 0, "spectator untouched");
+        // oversize prefixes and mismatched payloads fail loudly
+        assert!(a.extract_prefix_rows(0, d.prompt_len + 1).is_err());
+        assert!(b.merge_prefix_rows(0, p, &rows[1..]).is_err());
+        assert!(b.merge_prefix_rows(0, d.prompt_len + 1, &rows).is_err());
     }
 
     #[test]

@@ -214,6 +214,19 @@ pub struct Metrics {
     pub chain_rebuilds_avoided: Gauge,
     /// full-seed bytes those avoided rebuilds would have re-shipped
     pub reseed_bytes_saved: Gauge,
+    // -- cross-request prefix KV cache (mirrored from the shared
+    //    PrefixCache's cumulative ledger each scheduler tick; gauges for
+    //    the same reason as the pool counters) --
+    /// admissions that seeded prompt-region KV rows from a cached prefix
+    pub prefix_hits: Gauge,
+    /// admissions that probed the prefix cache and found nothing
+    pub prefix_misses: Gauge,
+    /// grounding-prefill KV bytes those hits did not regenerate
+    pub prefill_bytes_saved: Gauge,
+    /// bytes of prefix payloads currently cached
+    pub prefix_cache_bytes: Gauge,
+    /// prefix entries evicted to hold the cache's byte budget
+    pub prefix_evictions: Gauge,
     // -- fault injection + recovery (mirrored from the backends'
     //    FaultStats ledgers each scheduler tick) --
     /// faults the deterministic injector actually fired
@@ -314,6 +327,11 @@ impl Metrics {
             ("esdllm_chain_switches", self.chain_switches.get()),
             ("esdllm_chain_rebuilds_avoided", self.chain_rebuilds_avoided.get()),
             ("esdllm_reseed_bytes_saved", self.reseed_bytes_saved.get()),
+            ("esdllm_prefix_hits", self.prefix_hits.get()),
+            ("esdllm_prefix_misses", self.prefix_misses.get()),
+            ("esdllm_prefill_bytes_saved", self.prefill_bytes_saved.get()),
+            ("esdllm_prefix_cache_bytes", self.prefix_cache_bytes.get()),
+            ("esdllm_prefix_evictions", self.prefix_evictions.get()),
             ("esdllm_faults_injected", self.faults_injected.get()),
             ("esdllm_ticks_retried", self.ticks_retried.get()),
             ("esdllm_chains_regrounded", self.chains_regrounded.get()),
@@ -417,6 +435,11 @@ mod tests {
         m.chain_switches.set(3);
         m.chain_rebuilds_avoided.set(1);
         m.reseed_bytes_saved.set(4096);
+        m.prefix_hits.set(5);
+        m.prefix_misses.set(6);
+        m.prefill_bytes_saved.set(8192);
+        m.prefix_cache_bytes.set(2049);
+        m.prefix_evictions.set(2);
         m.faults_injected.add(4);
         m.ticks_retried.add(3);
         m.chains_regrounded.add(3);
@@ -446,6 +469,11 @@ mod tests {
         assert!(text.contains("esdllm_chain_switches 3"));
         assert!(text.contains("esdllm_chain_rebuilds_avoided 1"));
         assert!(text.contains("esdllm_reseed_bytes_saved 4096"));
+        assert!(text.contains("esdllm_prefix_hits 5"));
+        assert!(text.contains("esdllm_prefix_misses 6"));
+        assert!(text.contains("esdllm_prefill_bytes_saved 8192"));
+        assert!(text.contains("esdllm_prefix_cache_bytes 2049"));
+        assert!(text.contains("esdllm_prefix_evictions 2"));
         assert!(text.contains("esdllm_faults_injected 4"));
         assert!(text.contains("esdllm_ticks_retried 3"));
         assert!(text.contains("esdllm_chains_regrounded 3"));

@@ -28,6 +28,15 @@
 //! (`resident_chains`, `chain_switches`, `chain_rebuilds_avoided`,
 //! `reseed_bytes_saved`) every tick.
 //!
+//! All workers also share one cross-request [`PrefixCache`]
+//! ([`PREFIX_CACHE_BUDGET`] bytes, LRU): a retiring sequence offers its
+//! block-aligned prompt prefix, and a later admission sharing it
+//! (multi-turn chat, common system prompts) seeds its prompt-region KV
+//! rows from the cache instead of re-running the grounding prefill over
+//! the shared prefix. Its cumulative ledger is mirrored into
+//! `/metrics` the same way (`prefix_hits`, `prefix_misses`,
+//! `prefill_bytes_saved`, `prefix_cache_bytes`, `prefix_evictions`).
+//!
 //! Requests carry per-request parameters ([`SeqParams`]: `gen_len`,
 //! temperature, parallel threshold, `timeout_ms`) and replies carry
 //! true per-request statistics ([`GenReply`]), not group-level
@@ -74,7 +83,7 @@ use crate::batcher::{batch_classes, next_batch, BatcherCfg};
 use crate::engine::EngineCfg;
 use crate::fault::{classify, FaultStats, TickErrorClass};
 use crate::metrics::Metrics;
-use crate::runtime::resident::{ApplyMode, PoolStats, ResidencyPool};
+use crate::runtime::resident::{ApplyMode, PoolStats, PrefixCache, PrefixStats, ResidencyPool};
 use crate::runtime::Runtime;
 use crate::scheduler::sim::{SimBackend, SimCfg};
 use crate::scheduler::{
@@ -90,6 +99,11 @@ const TICK_RETRY_BUDGET: u32 = 3;
 const QUARANTINE_AFTER: u32 = 3;
 /// Clean ticks under quarantine before re-probing device apply.
 const REPROBE_AFTER: u64 = 64;
+/// Byte budget of the shared cross-request prefix KV cache (host
+/// memory; LRU past this). Generous against the nano artifact geometry
+/// — a prompt-region payload there is a few KiB — while still bounding
+/// a long-running server's footprint.
+pub const PREFIX_CACHE_BUDGET: u64 = 64 << 20;
 
 pub struct GenRequest {
     pub prompt: String,
@@ -210,6 +224,10 @@ impl Router {
         // survive batch-class churn and are shared across workers (see
         // the module docs for the PJRT owner-id caveat)
         let pool = ResidencyPool::new();
+        // and one cross-request prefix cache: retiring prompts' KV
+        // prefixes outlive their slots here, so later admissions with a
+        // shared prefix skip that much grounding prefill
+        let prefix = PrefixCache::new(PREFIX_CACHE_BUDGET);
         for w in 0..cfg.workers.max(1) {
             let queue = queue.clone();
             let metrics = metrics.clone();
@@ -219,10 +237,13 @@ impl Router {
             let mode = cfg.mode;
             let backend = cfg.backend.clone();
             let pool = pool.clone();
+            let prefix = prefix.clone();
             std::thread::Builder::new()
                 .name(format!("engine-{w}"))
                 .spawn(move || {
-                    worker_loop(queue, metrics, engine_cfg, batcher, dir, mode, backend, pool, w)
+                    worker_loop(
+                        queue, metrics, engine_cfg, batcher, dir, mode, backend, pool, prefix, w,
+                    )
                 })
                 .expect("spawn engine worker");
         }
@@ -307,6 +328,7 @@ fn worker_loop(
     mode: SchedMode,
     backend_kind: WorkerBackend,
     pool: Arc<ResidencyPool>,
+    prefix: Arc<PrefixCache>,
     worker: usize,
 ) {
     let slots = batcher.max_batch.max(1);
@@ -342,8 +364,9 @@ fn worker_loop(
             // their device buffers never leave this thread
             match PjrtBackend::with_pool(rt, engine_cfg.clone(), slots, pool, Some(worker as u64))
             {
-                Ok(b) => {
+                Ok(mut b) => {
                     classes = b.supported_classes(&classes);
+                    b.set_prefix_cache(prefix);
                     Box::new(b)
                 }
                 Err(e) => {
@@ -359,7 +382,9 @@ fn worker_loop(
             if sim_cfg.fault_plan.is_empty() {
                 sim_cfg.fault_plan = engine_cfg.fault_plan.clone();
             }
-            Box::new(SimBackend::with_pool(sim_cfg, pool))
+            let mut b = SimBackend::with_pool(sim_cfg, pool);
+            b.set_prefix_cache(prefix);
+            Box::new(b)
         }
     };
     // continuous mode gets every batch class and switches between them
@@ -571,6 +596,14 @@ fn tick_once(
         metrics.chain_switches.set(ps.chain_switches);
         metrics.chain_rebuilds_avoided.set(ps.chain_rebuilds_avoided);
         metrics.reseed_bytes_saved.set(ps.reseed_bytes_saved);
+        // prefix-cache ledger: shared by every worker like the pool's,
+        // so mirrored (set), not delta-added
+        let xs: PrefixStats = sched.prefix_stats();
+        metrics.prefix_hits.set(xs.prefix_hits);
+        metrics.prefix_misses.set(xs.prefix_misses);
+        metrics.prefill_bytes_saved.set(xs.prefill_bytes_saved);
+        metrics.prefix_cache_bytes.set(xs.prefix_cache_bytes);
+        metrics.prefix_evictions.set(xs.prefix_evictions);
         match tick_result {
             Ok(finished) => {
                 metrics.ticks_total.inc();

@@ -87,10 +87,14 @@
 //! kv/ind/conf chain threads straight through the unrolled body, and
 //! only the **final** iteration's selected logit rows plus a per-slot
 //! committed-count vector come down the bus. The uplink is the same as
-//! a single step — block tokens and the occupancy mask, shipped once
-//! for the whole run — so a fused dispatch amortizes k − 1 host
-//! round-trips away entirely (dInfer's loop-unrolling observation: at
-//! small batch the dispatch bubble, not FLOPs, floors TPS).
+//! a single step — in steady state just the occupancy mask, because
+//! `x_tok` rides a **fourth retained chain**: the grounding prefill's
+//! token staging doubles as its seed, the unrolled body advances the
+//! device copy in-graph, and the `tok` dirty bitmap re-dirties exactly
+//! the rows admissions and host-applied commits touch — so a fused
+//! dispatch amortizes k − 1 host round-trips away entirely (dInfer's
+//! loop-unrolling observation: at small batch the dispatch bubble, not
+//! FLOPs, floors TPS).
 //! [`DeviceGroupCaches::sync_step_device_k`] is the one copy of the
 //! fused accounting (`fused_execs`, `inner_iters_fused`,
 //! `dispatches_avoided`, k× `ingraph_conf_steps` and avoided block
@@ -134,6 +138,27 @@
 //! ledger — is byte-exact between the sim and PJRT planners because
 //! both drive the same pool API with the same [`chain_seed_bytes`]
 //! accounting.
+//!
+//! # Cross-request prefix reuse
+//!
+//! The pool reuses chains across batch-class switches; the
+//! [`PrefixCache`] — its process-wide sibling — reuses **prompt-region
+//! KV rows across requests**. Admission probes it with the prompt's
+//! content tokens before planning the grounding prefill: a hit on the
+//! longest block-aligned cached prefix seeds the slot's rows via
+//! [`crate::cache::GroupCaches::merge_prefix_rows`] (clone-on-hit, the
+//! entry stays cached), leaving only the unshared suffix for the
+//! prefill to pay for; retirement offers the slot's own prefix back
+//! (insert-on-retire). Keys are `(arch, owner, prefix-token hash)` with
+//! the same sim/PJRT owner split as the pool, eviction is LRU against a
+//! byte budget, and the [`PrefixStats`] ledger (`prefix_hits`,
+//! `prefix_misses`, `prefill_bytes_saved`, `prefix_cache_bytes`,
+//! `prefix_evictions`) flows into `/metrics` next to the pool's.
+//! Because the payloads are *host* memory — a pure function of the
+//! prompt tokens under the deterministic prefill — `evict_all` and
+//! fault recovery drop device state without touching this cache, and a
+//! prefix-seeded admission decodes token-identically to a full-prefill
+//! one.
 //!
 //! # Faults and the eviction ladder
 //!
@@ -408,6 +433,9 @@ pub struct ResidentHandles {
     pub kv_chain: Option<UploadHandle>,
     pub ind_chain: Option<UploadHandle>,
     pub conf_chain: Option<UploadHandle>,
+    /// the fused path's fourth chain: the context-token tensor `x_tok`
+    /// (the device advances its own tokens between fused dispatches)
+    pub tok_chain: Option<UploadHandle>,
 }
 
 /// The host-side half of a retained chain: which per-kind chains are
@@ -421,6 +449,10 @@ pub struct ChainPlan {
     pub kv_sparse_seeded: bool,
     pub ind_seeded: BTreeMap<String, bool>,
     pub conf_seeded: bool,
+    /// the fused token chain: seeded by the grounding prefill's token
+    /// staging (its full context rows ship there anyway), re-dirtied per
+    /// row by admissions and host-applied commits
+    pub tok_seeded: bool,
 }
 
 /// One retained device chain: the parkable [`ChainPlan`] plus the
@@ -638,6 +670,175 @@ impl ResidencyPool {
     }
 }
 
+/// Cumulative cross-request prefix-cache ledger, mirrored into
+/// `/metrics` each tick and shared (like the [`PoolStats`] ledger) by
+/// every worker driving the same [`PrefixCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// admission probes that found a cached block-aligned prefix
+    pub prefix_hits: u64,
+    /// admission probes that found nothing reusable
+    pub prefix_misses: u64,
+    /// grounding-prefill KV bytes the hits did not regenerate (prefix
+    /// rows × per-row KV bytes, credited at probe time — the one copy of
+    /// the formula, so the sim and PJRT ledgers agree byte-exactly)
+    pub prefill_bytes_saved: u64,
+    /// bytes of prefix payloads currently held (gauge, not a counter)
+    pub prefix_cache_bytes: u64,
+    /// entries evicted to keep the cache under its byte budget
+    pub prefix_evictions: u64,
+}
+
+/// FNV-1a over the little-endian bytes of the prefix tokens — the
+/// token-hash half of the cache key. Deterministic across runs, workers
+/// and processes (no seeded `RandomState`), which the sim-vs-PJRT
+/// ledger-parity tests lean on.
+fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One cached prefix payload: the prompt-region KV rows
+/// ([`crate::cache::GroupCaches::extract_prefix_rows`] layout) plus its
+/// byte size and LRU stamp.
+struct PrefixEntry {
+    rows: Vec<u16>,
+    bytes: u64,
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct PrefixInner {
+    /// payloads keyed by (arch, owner, prefix length, token hash). The
+    /// owner discriminant mirrors the pool's sim/PJRT split: the sim
+    /// backend inserts under the shared owner `None` (host payloads are
+    /// `Send`, so true cross-worker sharing), a PJRT worker under its
+    /// own id — its merged rows must re-sync through that worker's
+    /// chain, so foreign hits would mis-credit the ledger (cross-worker
+    /// PJRT prefix sharing is a follow-up for real bindings).
+    entries: BTreeMap<(String, Option<u64>, usize, u64), PrefixEntry>,
+    /// monotonic probe/insert counter; the smallest stamp is the LRU
+    use_clock: u64,
+    stats: PrefixStats,
+}
+
+/// Process-wide cross-request prefix KV cache, the [`ResidencyPool`]'s
+/// sibling: where the pool reuses *chains* across batch-class switches,
+/// this cache reuses *prompt-region KV rows* across requests. A
+/// retiring slot offers its longest block-aligned prompt prefix
+/// (insert-on-retire); an admission probes for the longest cached
+/// prefix of its own prompt and seeds the slot's rows from the payload
+/// (clone-on-hit — the entry stays cached for the next admission)
+/// instead of regenerating them in the grounding prefill, which then
+/// only has the unshared suffix left to pay for. Trajectory-exactness
+/// holds because prefix KV is a pure function of the prompt tokens
+/// under the deterministic prefill — seeding equals regenerating.
+///
+/// Eviction is LRU-by-bytes against a fixed byte budget
+/// (`prefix_evictions` counts the victims). Unlike pooled chains, the
+/// payloads are host memory: `evict_all`/fault recovery drop device
+/// state and re-ground, but never invalidate this cache — the cached
+/// rows were never wrong, only the device copies were.
+pub struct PrefixCache {
+    inner: Mutex<PrefixInner>,
+    /// byte budget for cached payloads; inserts past it evict LRU
+    budget: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget: u64) -> Arc<PrefixCache> {
+        Arc::new(PrefixCache { inner: Mutex::new(PrefixInner::default()), budget })
+    }
+
+    /// Probe for the longest block-aligned cached prefix of `content`
+    /// (the admitted prompt's tokens, padding stripped). A hit stamps
+    /// the entry most-recently-used, credits `p × row_bytes` to
+    /// `prefill_bytes_saved` (the prompt-region KV regeneration the
+    /// suffix-only prefill skips) and returns the prefix length plus a
+    /// clone of the payload; a miss — including a sub-block prompt —
+    /// counts `prefix_misses`.
+    pub fn probe(
+        &self,
+        arch: &str,
+        owner: Option<u64>,
+        content: &[i32],
+        block: usize,
+        row_bytes: u64,
+    ) -> Option<(usize, Vec<u16>)> {
+        let mut g = self.inner.lock().unwrap();
+        g.use_clock += 1;
+        let now = g.use_clock;
+        if block > 0 {
+            let mut p = (content.len() / block) * block;
+            while p >= block {
+                let key = (arch.to_string(), owner, p, hash_tokens(&content[..p]));
+                if let Some(e) = g.entries.get_mut(&key) {
+                    e.stamp = now;
+                    let rows = e.rows.clone();
+                    g.stats.prefix_hits += 1;
+                    g.stats.prefill_bytes_saved += p as u64 * row_bytes;
+                    return Some((p, rows));
+                }
+                p -= block;
+            }
+        }
+        g.stats.prefix_misses += 1;
+        None
+    }
+
+    /// Insert a retiring slot's prefix payload under
+    /// `(arch, owner, prefix)`. Re-inserting an existing key replaces
+    /// the payload (same prompt prefix ⇒ same rows under the
+    /// deterministic prefill, so this is a refresh, not a conflict).
+    /// The byte budget is enforced here: least-recently-used entries
+    /// are evicted until the cache fits, and a payload no budget could
+    /// hold is dropped on the floor rather than evicting everything.
+    pub fn insert(&self, arch: &str, owner: Option<u64>, prefix: &[i32], rows: Vec<u16>) {
+        let bytes = (rows.len() * 2) as u64;
+        if prefix.is_empty() || bytes == 0 || bytes > self.budget {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.use_clock += 1;
+        let now = g.use_clock;
+        let key = (arch.to_string(), owner, prefix.len(), hash_tokens(prefix));
+        if let Some(old) = g.entries.insert(key, PrefixEntry { rows, bytes, stamp: now }) {
+            g.stats.prefix_cache_bytes =
+                g.stats.prefix_cache_bytes.saturating_sub(old.bytes);
+        }
+        g.stats.prefix_cache_bytes += bytes;
+        // LRU-by-bytes: the just-inserted entry is most-recently-used,
+        // so it is never its own victim (oversize payloads are rejected
+        // above)
+        while g.stats.prefix_cache_bytes > self.budget {
+            let victim = match g
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+            {
+                Some(k) => k,
+                None => break,
+            };
+            if let Some(e) = g.entries.remove(&victim) {
+                g.stats.prefix_cache_bytes =
+                    g.stats.prefix_cache_bytes.saturating_sub(e.bytes);
+                g.stats.prefix_evictions += 1;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
 /// The resident-cache layer for one batch group: buffer pool + dirty-
 /// delta sync planner + the retained [`ResidentChain`] + transfer
 /// ledger. The chain's plan half is what parks in the
@@ -769,15 +970,17 @@ impl DeviceGroupCaches {
         out
     }
 
-    /// Stage the step's block-token input [B, block] for the stepped
-    /// slots (reusing the pooled allocation).
-    pub fn stage_step_tokens(
+    /// Copy the stepped slots' block-token rows into the pooled
+    /// [B, block] staging buffer without touching the ledger — the fused
+    /// planner accounts its token traffic through the chained-tok bitmap
+    /// instead of a per-dispatch upload.
+    fn copy_step_tokens(
         &mut self,
         tokens: &[i32],
         block_start: usize,
         block: usize,
         slots: &[usize],
-    ) -> SyncOutcome {
+    ) {
         let ctx = self.dims.ctx;
         let batch = self.batch;
         if let HostTensor::I32 { shape, data } = &mut self.step_tokens {
@@ -790,9 +993,21 @@ impl DeviceGroupCaches {
                     .copy_from_slice(&tokens[src..src + block]);
             }
         }
+    }
+
+    /// Stage the step's block-token input [B, block] for the stepped
+    /// slots (reusing the pooled allocation).
+    pub fn stage_step_tokens(
+        &mut self,
+        tokens: &[i32],
+        block_start: usize,
+        block: usize,
+        slots: &[usize],
+    ) -> SyncOutcome {
+        self.copy_step_tokens(tokens, block_start, block, slots);
         let out = SyncOutcome {
             shipped: (slots.len() * block * 4) as u64,
-            full: (batch * block * 4) as u64,
+            full: (self.batch * block * 4) as u64,
         };
         self.stats.record(TransferKind::Tokens, out.shipped, out.full);
         out
@@ -803,9 +1018,11 @@ impl DeviceGroupCaches {
     /// slots, the argmax with the mask id banned (row 0) and with mask +
     /// EOS banned (row 1) — first max on ties, the same convention as
     /// the host sampler's `argmax` and the executable's in-graph argmax.
-    /// No ledger entry here: the fused planner (`sync_step_device_k`)
-    /// accounts this uplink, so both backends stay byte-exact without
-    /// the sim materializing a seed.
+    /// No ledger entry here: under the chained-token transport the
+    /// planner (`sync_step_device_k`) models the argmax caches as
+    /// device-derived from resident state, so the seed costs no logical
+    /// bytes — this staging only feeds the current executable
+    /// generation's `tok_seed` input, and the sim never materializes it.
     #[allow(clippy::too_many_arguments)]
     pub fn stage_tok_seed(
         &mut self,
@@ -1020,6 +1237,14 @@ impl DeviceGroupCaches {
         }
         self.stage_prefill_tokens(tokens, slots);
         self.stage_occ_mask(slots);
+        // the prefill's token rows double as the x_tok chain seed: the
+        // refreshed slots' full context rows just shipped (accounted by
+        // the staging above), so their chained device tokens match the
+        // host again and a following fused run chains them for free
+        self.chain.plan.tok_seeded = true;
+        for &b in slots {
+            caches.dirty.tok.clear_slot(b);
+        }
         let kv_full = caches.kv_bytes() as u64;
         if !self.chain.plan.kv_seeded {
             self.chain.plan.kv_seeded = true;
@@ -1112,16 +1337,17 @@ impl DeviceGroupCaches {
     /// Input sync for one **fused** device-apply step (`step_apply_k`):
     /// one dispatch that runs `k` diffusion iterations in-graph, with
     /// greedy unmasking between inner iterations (the host sampler rule
-    /// replicated in-graph, EOS guard included), over the same chained
-    /// kv/ind/conf tensors. Uplink is a single step's (token rows + the
-    /// occupancy mask ship **once** for the whole run — the device
-    /// advances its own tokens between inner iterations) plus the
-    /// `[2, B, block]` i32 argmax-cache seed (`stage_tok_seed`);
-    /// downlink is the **final** iteration's selected logit rows plus
-    /// positions, the per-iteration committed positions and tokens
-    /// (`commit_pos`/`commit_tok`, `2 × B × k × 4` bytes — the host
-    /// applies these directly instead of replaying decisions), and the
-    /// per-slot committed-count audit vector (`B × 4` bytes).
+    /// replicated in-graph, EOS guard included), over the chained
+    /// kv/ind/conf tensors **plus the fourth chain, `x_tok`**: the token
+    /// tensor stays device-resident across fused dispatches, so the
+    /// steady-state uplink is the batch-bit occupancy mask alone — token
+    /// rows ship only when the host diverged them (an admission reset,
+    /// or a host-applied commit from an unfused step), via the `tok`
+    /// dirty bitmap. Downlink is the **final** iteration's selected
+    /// logit rows plus positions, the per-iteration committed positions
+    /// and tokens (`commit_pos`/`commit_tok`, `2 × B × k × 4` bytes —
+    /// the host applies these directly instead of replaying decisions),
+    /// and the per-slot committed-count audit vector (`B × 4` bytes).
     /// Confidence is computed in-graph `k` times, the equivalent of `k`
     /// Host-apply block downloads is avoided, and the fused ledger
     /// records one `fused_execs`, `k` `inner_iters_fused`, and `k − 1`
@@ -1197,7 +1423,40 @@ impl DeviceGroupCaches {
                 ));
             }
         }
-        self.stage_step_tokens(tokens, block_start, block, slots);
+        if k > 1 {
+            // x_tok rides the fourth retained chain: the grounding
+            // prefill's token staging seeded it, admissions and
+            // host-applied commits re-dirty exactly the rows they
+            // rewrote, and the device advances its own tokens (and
+            // argmax caches) in-graph between and across fused
+            // dispatches — so a steady-state fused run ships ZERO token
+            // bytes and only the batch-bit occupancy mask rides up. The
+            // pooled staging below still feeds the current executable
+            // generation's x_tok/tok_seed inputs; the planner models the
+            // chained transport.
+            self.copy_step_tokens(tokens, block_start, block, slots);
+            let tok_full = (self.batch * self.dims.ctx * 4) as u64;
+            let shipped = plan_sync(
+                &mut caches.dirty.tok,
+                &mut self.chain.plan.tok_seeded,
+                slots,
+                4,
+                tok_full,
+            );
+            self.stats
+                .record(TransferKind::Tokens, shipped, (self.batch * block * 4) as u64);
+            if shipped == 0 {
+                self.stats.retained_out_reuses += 1;
+            }
+        } else {
+            self.stage_step_tokens(tokens, block_start, block, slots);
+            // the host sampler will commit this step's unmask decisions
+            // into the token rows, diverging them from the chained
+            // device copy the next fused dispatch would read
+            for &b in slots {
+                caches.dirty.tok.mark_range(b, block_start, block_start + block);
+            }
+        }
         self.stage_occ_mask(slots);
         let kv_full = caches.kv_bytes() as u64;
         let ind_full = self.ind_cache_bytes();
@@ -1219,17 +1478,13 @@ impl DeviceGroupCaches {
         // their positions (intermediate iterations never touch the bus)
         self.account_d2h_logits(n_sel, true);
         if k > 1 {
-            // the argmax-cache seed [2, B, block] i32 rides the uplink
-            // so rows the skip chain drops mid-run still commit the host
-            // mirror's token
-            self.stats.record(
-                TransferKind::Tokens,
-                (2 * slots.len() * block * 4) as u64,
-                (2 * self.batch * block * 4) as u64,
-            );
-            // plus, downlinked: the per-iteration committed positions
-            // and tokens [B, k] i32 each (applied directly by the host)
-            // and the per-slot committed-count audit vector
+            // downlinked: the per-iteration committed positions and
+            // tokens [B, k] i32 each (applied directly by the host) and
+            // the per-slot committed-count audit vector. The argmax-
+            // cache seed no longer ships: with the token tensor chained
+            // the device derives its argmax caches from its own resident
+            // logits, so rows the skip chain drops mid-run still commit
+            // the token the host mirror would have picked
             self.stats.d2h_bytes_shipped += (2 * self.batch * k * 4) as u64;
             self.stats.d2h_bytes_shipped += (self.batch * 4) as u64;
             self.stats.fused_execs += 1;
@@ -1496,11 +1751,12 @@ mod tests {
             .unwrap();
         r.note_step_applied(&mut c, "h", false, d.prompt_len, 2, &slots);
         let delta = r.stats.since(&snap);
-        // uplink identical to a single step: block tokens + occupancy
-        // mask ship once for the whole fused run
-        let expected_tokens = (2 * 2 * 4 + 2 * 4) as u64;
+        // uplink: the occupancy mask alone — x_tok rides the fourth
+        // retained chain, and the grounding prefill's token staging
+        // already seeded it (the slots' tok bits are clean)
+        let expected_tokens = (2 * 4) as u64;
         assert_eq!(delta.upload_bytes, expected_tokens);
-        assert_eq!(delta.retained_out_reuses, 3, "chain reused once per dispatch");
+        assert_eq!(delta.retained_out_reuses, 4, "kv+ind+conf+tok all chained");
         assert_eq!(delta.ingraph_conf_steps, 4, "conf computed at every inner iter");
         assert_eq!(delta.fused_execs, 1);
         assert_eq!(delta.inner_iters_fused, 4);
@@ -1714,5 +1970,131 @@ mod tests {
         assert_eq!(delta.upload_bytes_saved, 112);
         assert_eq!(delta.full_kv_uploads, 0);
         assert_eq!(delta.resident_reuses, 1);
+    }
+
+    #[test]
+    fn fused_tok_chain_reseeds_after_admission_and_k1_commit_marks() {
+        let d = dims();
+        let mut c = GroupCaches::new(&d, 2);
+        let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+        let tokens = vec![0i32; 2 * d.ctx];
+        let slots = [0usize, 1];
+        r.sync_prefill_device(&mut c, "h", &tokens, &slots).unwrap();
+        r.note_prefill_applied(&mut c, &slots);
+        assert!(r.chain.plan.tok_seeded, "prefill staging seeds the tok chain");
+        assert_eq!(c.dirty.tok.count(), 0);
+
+        // a k=1 device step stages its block rows and marks them dirty:
+        // the HOST sampler will commit this step's unmask decisions, so
+        // the device's chained tokens diverge over the block window
+        r.sync_step_device(&mut c, "h", d.n_layers, 2, &tokens, d.prompt_len, 2, &slots)
+            .unwrap();
+        r.note_step_applied(&mut c, "h", false, d.prompt_len, 2, &slots);
+        assert_eq!(c.dirty.tok.count(), 2 * 2, "block window dirty per slot");
+
+        // the next fused dispatch re-ships exactly those dirty rows (the
+        // device commits its own unmasking in-graph, so no re-marking)
+        let snap = r.stats;
+        r.sync_step_device_k(&mut c, "h", d.n_layers, 2, 4, &tokens, d.prompt_len, 2, &slots)
+            .unwrap();
+        r.note_step_applied(&mut c, "h", false, d.prompt_len, 2, &slots);
+        let delta = r.stats.since(&snap);
+        // dirty tok rows re-ship (2 rows × 2 slots × 4B) plus the mask
+        assert_eq!(delta.token_upload_bytes, (2 * 2 * 4 + 2 * 4) as u64);
+        assert_eq!(c.dirty.tok.count(), 0);
+
+        // steady fused state: uplink is the occupancy mask alone
+        let snap2 = r.stats;
+        r.sync_step_device_k(&mut c, "h", d.n_layers, 2, 4, &tokens, d.prompt_len, 2, &slots)
+            .unwrap();
+        let d2 = r.stats.since(&snap2);
+        assert_eq!(d2.token_upload_bytes, (2 * 4) as u64, "mask only");
+        assert_eq!(d2.upload_bytes, (2 * 4) as u64);
+
+        // an admission reset dirties the slot's whole context row, and
+        // invalidate takes the seeding promise back entirely
+        c.reset_slot(1);
+        assert_eq!(c.dirty.tok.count_slot(1), d.ctx);
+        r.invalidate(&mut c);
+        assert!(!r.chain.plan.tok_seeded);
+        assert_eq!(c.dirty.tok.count(), 2 * d.ctx);
+    }
+
+    #[test]
+    fn prefix_cache_probe_hits_longest_aligned_prefix_and_credits_saved_bytes() {
+        let cache = PrefixCache::new(1 << 20);
+        let row_bytes = 16u64;
+        let toks: Vec<i32> = (0..12).collect();
+        // cold probe: a miss, nothing credited
+        assert!(cache.probe("h", None, &toks, 4, row_bytes).is_none());
+        let s = cache.stats();
+        assert_eq!((s.prefix_hits, s.prefix_misses, s.prefill_bytes_saved), (0, 1, 0));
+
+        cache.insert("h", None, &toks[..4], vec![1u16; 8]);
+        cache.insert("h", None, &toks[..8], vec![2u16; 16]);
+        // the longest block-aligned cached prefix wins: content len 11
+        // aligns to 8, which is cached
+        let (p, rows) = cache.probe("h", None, &toks[..11], 4, row_bytes).unwrap();
+        assert_eq!(p, 8);
+        assert_eq!(rows, vec![2u16; 16]);
+        // a shorter prompt steps down to the 4-row entry
+        let (p2, rows2) = cache.probe("h", None, &toks[..6], 4, row_bytes).unwrap();
+        assert_eq!((p2, rows2), (4, vec![1u16; 8]));
+        // diverging tokens miss even at a cached length
+        let other = [9i32, 9, 9, 9];
+        assert!(cache.probe("h", None, &other, 4, row_bytes).is_none());
+        // sub-block prompts never probe a key
+        assert!(cache.probe("h", None, &toks[..3], 4, row_bytes).is_none());
+
+        let s = cache.stats();
+        assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.prefix_misses, 3);
+        assert_eq!(s.prefill_bytes_saved, (8 + 4) * row_bytes);
+        assert_eq!(s.prefix_cache_bytes, (8 + 16) * 2);
+
+        // owner keys split the PJRT workers from the shared sim space
+        assert!(cache.probe("h", Some(7), &toks[..11], 4, row_bytes).is_none());
+        // and arch is part of the key too
+        assert!(cache.probe("g", None, &toks[..11], 4, row_bytes).is_none());
+    }
+
+    #[test]
+    fn prefix_cache_evicts_lru_by_bytes_and_enforces_the_budget() {
+        // budget holds two 16-element payloads (32 bytes each)
+        let cache = PrefixCache::new(64);
+        let a: Vec<i32> = (0..4).collect();
+        let b: Vec<i32> = (10..14).collect();
+        let c: Vec<i32> = (20..24).collect();
+        cache.insert("h", None, &a, vec![1u16; 16]); // oldest
+        cache.insert("h", None, &b, vec![2u16; 16]);
+        assert_eq!(cache.stats().prefix_cache_bytes, 64);
+        // touching `a` makes `b` the LRU victim of the next insert
+        assert!(cache.probe("h", None, &a, 4, 1).is_some());
+        cache.insert("h", None, &c, vec![3u16; 16]);
+        let s = cache.stats();
+        assert_eq!(s.prefix_evictions, 1);
+        assert_eq!(s.prefix_cache_bytes, 64, "budget holds after eviction");
+        assert!(cache.probe("h", None, &b, 4, 1).is_none(), "LRU entry evicted");
+        assert!(cache.probe("h", None, &a, 4, 1).is_some(), "touched entry survives");
+        assert!(cache.probe("h", None, &c, 4, 1).is_some(), "new entry resident");
+
+        // re-inserting an existing key refreshes in place: no eviction,
+        // byte accounting replaces rather than accumulates
+        cache.insert("h", None, &a, vec![4u16; 16]);
+        let s = cache.stats();
+        assert_eq!(s.prefix_evictions, 1);
+        assert_eq!(s.prefix_cache_bytes, 64);
+        let (_, rows) = cache.probe("h", None, &a, 4, 1).unwrap();
+        assert_eq!(rows, vec![4u16; 16], "payload refreshed");
+
+        // a payload no budget can hold is dropped, not cached at any cost
+        cache.insert("h", None, &b, vec![5u16; 64]);
+        let s = cache.stats();
+        assert_eq!(s.prefix_cache_bytes, 64, "oversize insert rejected");
+        assert!(cache.probe("h", None, &b, 4, 1).is_none());
+        // an empty offer is ignored outright
+        cache.insert("h", None, &[], vec![6u16; 4]);
+        cache.insert("h", None, &a[..1], vec![]);
+        assert_eq!(cache.stats().prefix_cache_bytes, 64);
     }
 }

@@ -175,8 +175,8 @@ use crate::fault::{FaultInjector, FaultKind, PoisonedChain};
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
-    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, ResidencyPool, SyncOutcome,
-    TransferStats, UploadHandle,
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, PrefixCache, PrefixStats,
+    ResidencyPool, SyncOutcome, TransferStats, UploadHandle,
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{ExecArg, Runtime};
@@ -351,6 +351,37 @@ pub trait StepBackend {
     /// Cumulative residency-pool ledger (zeros for backends without one).
     fn pool_stats(&self) -> PoolStats {
         PoolStats::default()
+    }
+    /// Probe the shared cross-request prefix cache for the longest
+    /// block-aligned cached prefix of `content` (an admitted prompt's
+    /// tokens, padding stripped). A hit returns the prefix length and a
+    /// clone of the cached prompt-region KV rows
+    /// ([`GroupCaches::merge_prefix_rows`] layout) and credits the
+    /// skipped prefill bytes to the [`PrefixStats`] ledger. `None` for
+    /// backends without a cache (every admission then pays the full
+    /// grounding prefill, exactly as before).
+    fn prefix_probe(
+        &mut self,
+        _content: &[i32],
+        _block: usize,
+        _caches: &GroupCaches,
+    ) -> Option<(usize, Vec<u16>)> {
+        None
+    }
+    /// Offer a retiring slot's longest block-aligned prompt prefix to
+    /// the shared cross-request cache (insert-on-retire). No-op for
+    /// backends without a cache.
+    fn prefix_offer(
+        &mut self,
+        _content: &[i32],
+        _block: usize,
+        _caches: &GroupCaches,
+        _slot: usize,
+    ) {
+    }
+    /// Cumulative prefix-cache ledger (zeros for backends without one).
+    fn prefix_stats(&self) -> PrefixStats {
+        PrefixStats::default()
     }
     /// The backend's fault injector — the home of its
     /// [`crate::fault::FaultStats`] ledger. `None` for backends without
@@ -538,6 +569,12 @@ impl<'a> GroupScheduler<'a> {
     /// avoided rebuilds, reseed bytes saved).
     pub fn pool_stats(&self) -> PoolStats {
         self.backend.pool_stats()
+    }
+
+    /// The backend's cumulative cross-request prefix-cache ledger
+    /// (hits, misses, prefill bytes saved, cached bytes, evictions).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.backend.prefix_stats()
     }
 
     /// Read access to the active class's group caches (dirty-bitmap
@@ -767,6 +804,7 @@ impl<'a> GroupScheduler<'a> {
             .encode_prompt(&input.prompt, d.prompt_len)
             .map_err(|e| anyhow!("bad request: {e}"))?;
         let mask = tok.mask;
+        let pad = tok.pad;
         let row = slot * d.ctx;
         self.states[ac].tokens[row..row + d.prompt_len].copy_from_slice(&ids);
         // the whole compiled gen region is masked regardless of the
@@ -776,6 +814,21 @@ impl<'a> GroupScheduler<'a> {
             self.states[ac].tokens[row + d.prompt_len + g] = mask;
         }
         self.states[ac].caches.reset_slot(slot);
+        // cross-request prefix reuse: probe the shared cache for the
+        // longest block-aligned cached prefix of this prompt's content
+        // tokens (padding stripped) and seed the slot's prompt-region KV
+        // rows from the payload, so the grounding prefill only pays for
+        // the unshared suffix. Prefix KV is a pure function of the
+        // prompt tokens under the deterministic prefill, so a seeded
+        // admission decodes exactly like a full-prefill one.
+        let content_len = ids.iter().position(|&t| t == pad).unwrap_or(d.prompt_len);
+        if let Some((p, rows)) = self.backend.prefix_probe(
+            &ids[..content_len],
+            self.cfg.block,
+            &self.states[ac].caches,
+        ) {
+            self.states[ac].caches.merge_prefix_rows(slot, p, &rows)?;
+        }
         // splitmix the request id into the seed so every request gets its
         // own deterministic sampling stream, independent of slot and of
         // the other occupants
@@ -904,9 +957,9 @@ impl<'a> GroupScheduler<'a> {
         //    collects each fused slot's downlinked per-iteration
         //    commits so the unmask loop below applies them directly.
         let d = *self.backend.dims();
-        let (mask, eos) = {
+        let (mask, eos, pad) = {
             let tok = self.backend.tokenizer();
-            (tok.mask, tok.eos)
+            (tok.mask, tok.eos, tok.pad)
         };
         let block = self.cfg.block;
         let mut fused_commits: Vec<Option<Vec<(usize, i32)>>> =
@@ -1113,6 +1166,23 @@ impl<'a> GroupScheduler<'a> {
                     let tokens_out = row.iter().filter(|&&t| t != mask).count();
                     (text, tokens_out)
                 };
+                // insert-on-retire: offer the retiring prompt's longest
+                // block-aligned prefix to the shared cross-request
+                // cache, so the next admission sharing it (multi-turn
+                // chat, shared system prompts) seeds instead of
+                // re-prefilling
+                {
+                    let prow = &self.states[ac].tokens
+                        [s * d.ctx..s * d.ctx + d.prompt_len];
+                    let clen =
+                        prow.iter().position(|&t| t == pad).unwrap_or(d.prompt_len);
+                    self.backend.prefix_offer(
+                        &self.states[ac].tokens[s * d.ctx..s * d.ctx + clen],
+                        self.cfg.block,
+                        &self.states[ac].caches,
+                        s,
+                    );
+                }
                 let seq = self.states[ac].slots[s].take().unwrap();
                 let error = timed_out.then(|| {
                     format!(
@@ -1195,6 +1265,13 @@ pub struct PjrtBackend<'rt> {
     batch: usize,
     pool: Arc<ResidencyPool>,
     owner: Option<u64>,
+    /// shared cross-request prefix cache (`None` = prefix reuse off:
+    /// every admission pays the full grounding prefill). A PJRT worker
+    /// probes and inserts under its own owner id — merged prefix rows
+    /// re-sync through this worker's chain, so a foreign worker's
+    /// entries would mis-credit the ledger (cross-worker PJRT prefix
+    /// sharing is a follow-up for real bindings).
+    prefix: Option<Arc<PrefixCache>>,
     /// resident layer per batch class, created on first activation and
     /// kept for the backend's lifetime (the ledger is cumulative)
     residents: BTreeMap<usize, DeviceGroupCaches>,
@@ -1253,6 +1330,7 @@ impl<'rt> PjrtBackend<'rt> {
             batch,
             pool,
             owner,
+            prefix: None,
             residents: BTreeMap::new(),
             parked: BTreeSet::new(),
             registered: BTreeSet::new(),
@@ -1263,6 +1341,12 @@ impl<'rt> PjrtBackend<'rt> {
             retired_stats: TransferStats::default(),
             conf_drift: 1.0,
         })
+    }
+
+    /// Wire the shared cross-request prefix cache (the router does this
+    /// for every worker before serving). Prefix reuse is off until set.
+    pub fn set_prefix_cache(&mut self, cache: Arc<PrefixCache>) {
+        self.prefix = Some(cache);
     }
 
     /// Apply mode for one batch class: device-apply needs every
@@ -1712,6 +1796,45 @@ impl StepBackend for PjrtBackend<'_> {
 
     fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    fn prefix_probe(
+        &mut self,
+        content: &[i32],
+        block: usize,
+        caches: &GroupCaches,
+    ) -> Option<(usize, Vec<u16>)> {
+        // probe under this worker's owner id: the merged rows re-sync
+        // through this worker's chain (same split as the pool)
+        let cache = self.prefix.as_ref()?;
+        cache.probe(&self.cfg.arch, self.owner, content, block, caches.kv_row_bytes() as u64)
+    }
+
+    fn prefix_offer(
+        &mut self,
+        content: &[i32],
+        block: usize,
+        caches: &GroupCaches,
+        slot: usize,
+    ) {
+        let Some(cache) = self.prefix.as_ref() else {
+            return;
+        };
+        if block == 0 {
+            return;
+        }
+        let p = (content.len() / block) * block;
+        if p == 0 {
+            return;
+        }
+        let Ok(rows) = caches.extract_prefix_rows(slot, p) else {
+            return;
+        };
+        cache.insert(&self.cfg.arch, self.owner, &content[..p], rows);
+    }
+
+    fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
     fn fault_injector(&self) -> Option<Arc<FaultInjector>> {

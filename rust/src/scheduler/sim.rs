@@ -62,7 +62,8 @@ use crate::fault::{FaultInjector, FaultKind, FaultPlan};
 use crate::manifest::Dims;
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
-    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, ResidencyPool, TransferStats,
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, PrefixCache, PrefixStats,
+    ResidencyPool, TransferStats,
 };
 use crate::sampler::{decide_unmask, SamplerCfg, UnmaskInput};
 use crate::tokenizer::Tokenizer;
@@ -165,6 +166,13 @@ pub struct SimBackend {
     /// true-sharing model the PJRT backend cannot offer behind the
     /// non-`Send` constraint.
     pool: Arc<ResidencyPool>,
+    /// shared cross-request prefix cache (`None` = prefix reuse off).
+    /// The sim probes and inserts under the shared owner `None`: its
+    /// payloads are plain host memory, so — like its pooled chains — a
+    /// prefix cached by one worker is genuinely reusable by any other,
+    /// which makes the sim the reference model for cross-worker prefix
+    /// sharing.
+    prefix: Option<Arc<PrefixCache>>,
     /// resident-cache planner per batch class, created lazily when a
     /// class first activates (the ledger is cumulative, so entries live
     /// for the backend's lifetime)
@@ -210,6 +218,7 @@ impl SimBackend {
             cfg,
             tok: Tokenizer::builtin(),
             pool,
+            prefix: None,
             residents: BTreeMap::new(),
             parked: BTreeSet::new(),
             registered: BTreeSet::new(),
@@ -218,6 +227,12 @@ impl SimBackend {
             apply_override: None,
             retired_stats: TransferStats::default(),
         }
+    }
+
+    /// Wire the shared cross-request prefix cache (the router does this
+    /// for every worker before serving). Prefix reuse is off until set.
+    pub fn set_prefix_cache(&mut self, cache: Arc<PrefixCache>) {
+        self.prefix = Some(cache);
     }
 
     /// The apply mode new resident layers are built in: the recovery
@@ -664,6 +679,43 @@ impl StepBackend for SimBackend {
 
     fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    fn prefix_probe(
+        &mut self,
+        content: &[i32],
+        block: usize,
+        caches: &GroupCaches,
+    ) -> Option<(usize, Vec<u16>)> {
+        let cache = self.prefix.as_ref()?;
+        cache.probe(SIM_ARCH, None, content, block, caches.kv_row_bytes() as u64)
+    }
+
+    fn prefix_offer(
+        &mut self,
+        content: &[i32],
+        block: usize,
+        caches: &GroupCaches,
+        slot: usize,
+    ) {
+        let Some(cache) = self.prefix.as_ref() else {
+            return;
+        };
+        if block == 0 {
+            return;
+        }
+        let p = (content.len() / block) * block;
+        if p == 0 {
+            return;
+        }
+        let Ok(rows) = caches.extract_prefix_rows(slot, p) else {
+            return;
+        };
+        cache.insert(SIM_ARCH, None, &content[..p], rows);
+    }
+
+    fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 }
 

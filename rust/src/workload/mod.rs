@@ -209,6 +209,64 @@ pub fn poisson_trace(rate_per_s: f64, n: usize, seed: u64) -> Vec<TraceRequest> 
         .collect()
 }
 
+/// Characters chat messages draw from (all encodable by the builtin
+/// tokenizer).
+const CHAT_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+
+fn chat_word(rng: &mut SplitMix, n: usize) -> String {
+    (0..n)
+        .map(|_| CHAT_CHARS[rng.below(CHAT_CHARS.len() as u64) as usize] as char)
+        .collect()
+}
+
+/// Deterministic multi-turn chat trace: every conversation opens with
+/// the SAME seeded system prompt, and each turn re-submits the full
+/// prior context plus a fresh 7-char user message (`sys|m1|m2|…|mi`) —
+/// so turn i's prompt is a strict string prefix of turn i+1's, the
+/// serving pattern the cross-request prefix cache exists for. Turns
+/// whose context would exceed `prompt_len` are dropped (the
+/// conversation ends early), arrivals are Poisson at `rate_per_s`, and
+/// the whole trace is a pure function of `seed`. Conversations are
+/// emitted sequentially, so replaying turn-by-turn (each turn retired
+/// before the next is admitted) warms the prefix cache exactly once
+/// per turn.
+pub fn chat_trace(
+    conversations: usize,
+    turns: usize,
+    rate_per_s: f64,
+    prompt_len: usize,
+    seed: u64,
+) -> Vec<TraceRequest> {
+    let mut rng = SplitMix::new(seed);
+    // 15-char system prompt: with 8 chars per turn ("|" + message) a
+    // 4-turn conversation tops out at 47 chars — inside the sim's
+    // 48-token prompt region
+    let sys = chat_word(&mut rng, 15);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    for c in 0..conversations {
+        let mut ctx = sys.clone();
+        for turn in 0..turns {
+            let msg = chat_word(&mut rng, 7);
+            ctx = format!("{ctx}|{msg}");
+            if ctx.len() > prompt_len {
+                break;
+            }
+            t += rng.exp(rate_per_s);
+            out.push(TraceRequest {
+                at_s: t,
+                item: EvalItem {
+                    bench: "chat",
+                    seed: seed ^ ((c as u64) << 16) ^ turn as u64,
+                    prompt: ctx.clone(),
+                    answer: String::new(),
+                },
+            });
+        }
+    }
+    out
+}
+
 /// Replay a trace open-loop against `submit`: each request is issued at
 /// its Poisson arrival offset (relative to the first call), regardless
 /// of how fast earlier requests complete — the serving-benchmark load
@@ -278,6 +336,35 @@ mod tests {
     fn score_trims() {
         assert!(score("42", " 42 "));
         assert!(!score("42", "43"));
+    }
+
+    #[test]
+    fn chat_trace_turns_grow_by_prefix() {
+        let trace = chat_trace(3, 4, 100.0, 48, 11);
+        assert_eq!(trace.len(), 12);
+        // deterministic
+        let again = chat_trace(3, 4, 100.0, 48, 11);
+        let p: Vec<&str> = trace.iter().map(|r| r.item.prompt.as_str()).collect();
+        let q: Vec<&str> = again.iter().map(|r| r.item.prompt.as_str()).collect();
+        assert_eq!(p, q);
+        for (i, r) in trace.iter().enumerate() {
+            assert!(r.item.prompt.len() <= 48);
+            // every conversation opens with the shared system prompt
+            assert_eq!(r.item.prompt.as_bytes()[..15], trace[0].item.prompt.as_bytes()[..15]);
+            // within a conversation each turn extends the previous one
+            if i % 4 != 0 {
+                assert!(
+                    r.item.prompt.starts_with(&trace[i - 1].item.prompt),
+                    "turn {i} does not extend its predecessor"
+                );
+            }
+        }
+        // distinct conversations diverge after the system prompt
+        assert_ne!(trace[0].item.prompt, trace[4].item.prompt);
+        // arrivals are nondecreasing
+        for w in trace.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
     }
 
     #[test]

@@ -10,8 +10,13 @@
 //! the resident chain, Host-apply ledger deltas match the dirty
 //! bitmaps, and a donated (input-output-aliased) execution chain never
 //! holds two live copies of a chained tensor — pinned against the stub
-//! runtime's live-buffer ledger. Everything runs over the sim backend /
-//! the planner / the xla stub directly — no PJRT artifacts required.
+//! runtime's live-buffer ledger. The cross-request prefix cache gets
+//! the same treatment: prefix-seeded admission decodes token-identical
+//! to a cacheless run, the `PrefixStats` ledger is byte-exact between
+//! the sim identity and a PJRT-style `(arch, owner)` identity across
+//! hit / miss / evict, and prefix entries (host payloads) survive a
+//! full device eviction. Everything runs over the sim backend / the
+//! planner / the xla stub directly — no PJRT artifacts required.
 
 use std::time::Instant;
 
@@ -19,7 +24,8 @@ use esdllm::cache::{GroupCaches, RefreshPolicy, StepPlan};
 use esdllm::engine::Method;
 use esdllm::manifest::Dims;
 use esdllm::runtime::resident::{
-    chain_seed_bytes, ApplyMode, DeviceGroupCaches, ResidencyPool, TransferKind, TransferStats,
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PrefixCache, PrefixStats, ResidencyPool,
+    TransferKind, TransferStats,
 };
 use esdllm::runtime::tensor::HostTensor;
 use esdllm::sampler::SamplerCfg;
@@ -689,6 +695,155 @@ fn checkout_reships_only_slots_dirtied_while_parked() {
     let ps = pool.stats();
     assert_eq!(ps.chain_rebuilds_avoided, 1);
     assert_eq!(ps.reseed_bytes_saved, chain_seed_bytes(&d, 2));
+}
+
+/// The prefix-cache acceptance criterion: admitting a prompt whose
+/// block-aligned prefix sits in the cache must decode TOKEN-IDENTICAL
+/// to a cacheless full-prefill admission — prefix KV is a pure function
+/// of the prompt tokens under the deterministic grounding prefill, so
+/// seeding from the cache changes which bytes move, never which tokens
+/// come out. The savings are credited on the prefix ledger while the
+/// transfer ledger itself stays byte-identical (suffix-only prefill is
+/// realized as accounting over the device-resident grounding prefill).
+#[test]
+fn prefix_seeded_admission_is_trajectory_exact() {
+    // a two-turn chat pair: turn 2 re-submits turn 1's whole prompt
+    // plus a 4-char tail, the pattern the cache exists for
+    let turns = ["abcdefgh", "abcdefghijkl"];
+    let run = |cached: bool| {
+        let mut backend = SimBackend::new(SimCfg::default());
+        if cached {
+            backend.set_prefix_cache(PrefixCache::new(1 << 20));
+        }
+        let mut s = GroupScheduler::new(Box::new(backend), 2, sched_cfg(4)).unwrap();
+        let mut texts = Vec::new();
+        for (i, p) in turns.iter().enumerate() {
+            s.admit(input(i as u64 + 1, p)).unwrap();
+            let mut guard = 0;
+            while s.active() > 0 {
+                texts.extend(s.tick().unwrap().into_iter().map(|f| f.text));
+                guard += 1;
+                assert!(guard < 1000);
+            }
+        }
+        (texts, s.prefix_stats(), s.transfer_stats())
+    };
+    let (cached_texts, xs, cached_stats) = run(true);
+    let (plain_texts, plain_xs, plain_stats) = run(false);
+
+    assert_eq!(cached_texts, plain_texts, "prefix seeding must not move a token");
+    assert_eq!(plain_xs, PrefixStats::default(), "no cache, no ledger");
+    // turn 1 probes cold (miss); its retirement inserts the 8-char
+    // aligned prefix; turn 2 probes 12 → miss, 8 → hit
+    assert_eq!((xs.prefix_hits, xs.prefix_misses), (1, 1));
+    let d = SimCfg::default().dims;
+    let row_bytes = GroupCaches::new(&d, 2).kv_row_bytes() as u64;
+    assert_eq!(xs.prefill_bytes_saved, 8 * row_bytes);
+    assert_eq!(xs.prefix_cache_bytes, (8 + 12) * row_bytes);
+    assert_eq!(xs.prefix_evictions, 0);
+    assert_eq!(
+        cached_stats, plain_stats,
+        "savings are credited on the prefix ledger; the transfer ledger is untouched"
+    );
+}
+
+/// Byte-exact parity of the `PrefixStats` ledger between the two
+/// planner identities: the sim backend drives the cache through the
+/// scheduler's probe/offer hooks (arch "sim", shared owner `None`),
+/// and the identical call sequence replayed under a PJRT-style
+/// `(arch, owner)` identity — the calls `PjrtBackend::prefix_probe` /
+/// `prefix_offer` make — must land on the identical ledger across a
+/// miss, a hit, and two budget evictions. All credit accounting lives
+/// inside the shared `PrefixCache`, so equal call sequences MUST mean
+/// equal ledgers; this pins that contract.
+#[test]
+fn prefix_ledger_parity_sim_vs_pjrt_identity_across_hit_miss_evict() {
+    let d = SimCfg::default().dims;
+    let row_bytes = GroupCaches::new(&d, 2).kv_row_bytes() as u64;
+    // budget fits turn 1's 8-row payload OR turn 2's 12-row payload,
+    // not both — every insert past the first evicts the LRU entry
+    let budget = 16 * row_bytes;
+
+    // sim side: three admissions through the scheduler — turn 1 (cold
+    // miss, insert 8 rows), turn 2 (hit at 8, insert 12 rows → evicts
+    // the just-hit turn-1 entry: its MRU stamp still predates the
+    // insert), turn 1 again (miss — its entry was evicted — re-insert
+    // → evicts turn 2's entry)
+    let mut backend = SimBackend::new(SimCfg::default());
+    backend.set_prefix_cache(PrefixCache::new(budget));
+    let mut s = GroupScheduler::new(Box::new(backend), 2, sched_cfg(4)).unwrap();
+    for (i, p) in ["abcdefgh", "abcdefghijkl", "abcdefgh"].iter().enumerate() {
+        s.admit(input(i as u64 + 1, p)).unwrap();
+        drain(&mut s);
+    }
+    let sim_xs = s.prefix_stats();
+
+    // PJRT-identity side: the same probe/insert sequence, verbatim,
+    // under a worker-owned identity. Ledger parity is a function of the
+    // call sequence alone, so representative token ids suffice.
+    let cache = PrefixCache::new(budget);
+    let (arch, owner) = ("llada-nano", Some(7u64));
+    let rows_per = |p: usize| d.n_layers * 2 * d.n_kv_heads * p * d.head_dim;
+    let t1: Vec<i32> = (0..8).collect();
+    let t2: Vec<i32> = (0..12).collect();
+    assert!(cache.probe(arch, owner, &t1, 4, row_bytes).is_none());
+    cache.insert(arch, owner, &t1, vec![0u16; rows_per(8)]);
+    let (p, rows) = cache.probe(arch, owner, &t2, 4, row_bytes).expect("warm hit");
+    assert_eq!((p, rows.len()), (8, rows_per(8)));
+    cache.insert(arch, owner, &t2, vec![0u16; rows_per(12)]);
+    assert!(cache.probe(arch, owner, &t1, 4, row_bytes).is_none());
+    cache.insert(arch, owner, &t1, vec![0u16; rows_per(8)]);
+    let pjrt_xs = cache.stats();
+
+    assert_eq!(sim_xs, pjrt_xs, "prefix ledgers byte-exact across identities");
+    assert_eq!((sim_xs.prefix_hits, sim_xs.prefix_misses), (1, 2));
+    assert_eq!(sim_xs.prefill_bytes_saved, 8 * row_bytes);
+    assert_eq!(sim_xs.prefix_evictions, 2);
+    assert_eq!(sim_xs.prefix_cache_bytes, 8 * row_bytes, "only turn 1 resident");
+}
+
+/// Prefix entries are HOST payloads — pure functions of the prompt
+/// tokens — so the fault ladder's `evict_all` (which drops every
+/// device-resident chain and takes back the residency promise) must
+/// NOT touch them: the next admission still hits the cache, decodes
+/// exactly, and re-seeds its device chain from scratch. Prefix reuse
+/// never substitutes for the device re-ground.
+#[test]
+fn prefix_entries_survive_evict_all_and_reground() {
+    let mut backend = SimBackend::new(SimCfg::default());
+    backend.set_prefix_cache(PrefixCache::new(1 << 20));
+    let mut s = GroupScheduler::new(Box::new(backend), 2, sched_cfg(4)).unwrap();
+    s.admit(input(1, "abcdefgh")).unwrap();
+    drain(&mut s);
+    let warm = s.prefix_stats();
+    assert_eq!((warm.prefix_hits, warm.prefix_misses), (0, 1));
+    assert!(warm.prefix_cache_bytes > 0, "retirement inserted the prefix");
+    assert_eq!(s.transfer_stats().full_kv_uploads, 1);
+
+    s.evict_all();
+    assert_eq!(
+        s.prefix_stats().prefix_cache_bytes,
+        warm.prefix_cache_bytes,
+        "device eviction leaves host prefix entries resident"
+    );
+
+    s.admit(input(2, "abcdefghijkl")).unwrap();
+    let mut out = Vec::new();
+    let mut guard = 0;
+    while s.active() > 0 {
+        out.extend(s.tick().unwrap());
+        guard += 1;
+        assert!(guard < 1000);
+    }
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].text, "abcdefghijkl", "post-eviction decode is exact");
+    let xs = s.prefix_stats();
+    assert_eq!(xs.prefix_hits, 1, "the cache still hits across the eviction");
+    assert_eq!(
+        s.transfer_stats().full_kv_uploads,
+        2,
+        "the evicted chain re-seeded — prefix reuse is not a re-ground"
+    );
 }
 
 /// The donation acceptance criterion: with the input-output alias
