@@ -44,19 +44,31 @@
 //! bytes. Emits `artifacts/results/BENCH_prefix.json`; runs
 //! artifact-free in CI.
 //!
+//! A fifth section exercises **SLO-aware serving under overload**: the
+//! identical bursty trace (square-wave arrival rate, ~20% of requests
+//! latency-sensitive) runs under the plain FIFO policy and under the
+//! SLO-aware policy (priority lanes + block-boundary preemption +
+//! lowest-class shedding). The acceptance gate is that every request
+//! gets SOME reply (completion or structured shed — never a hang), the
+//! SLO-aware run exercised preemption or shedding, and the
+//! latency-sensitive p99 TTFT drops to ≤ 0.5× the FIFO baseline. Emits
+//! `artifacts/results/BENCH_slo.json`; runs artifact-free in CI.
+//!
 //! Run: `cargo bench --bench serve_continuous` (ESDLLM_BENCH_N overrides
 //! the request count).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use esdllm::batcher::BatcherCfg;
 use esdllm::bench::{bench_n, Table};
 use esdllm::cache::RefreshPolicy;
 use esdllm::engine::{EngineCfg, Method};
-use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend, PREFIX_CACHE_BUDGET};
+use esdllm::router::{
+    Router, RouterCfg, SchedMode, SloPolicy, WorkerBackend, PREFIX_CACHE_BUDGET,
+};
 use esdllm::runtime::resident::{PrefixCache, PrefixStats};
 use esdllm::scheduler::sim::{SimBackend, SimCfg};
-use esdllm::scheduler::{GroupScheduler, SchedCfg, SeqInput, SeqParams};
+use esdllm::scheduler::{GroupScheduler, SchedCfg, SeqInput, SeqParams, SloClass};
 use esdllm::workload;
 
 const SLOTS: usize = 8;
@@ -523,6 +535,136 @@ fn prefix_section(conversations: usize, turns: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+struct SloRun {
+    completed: usize,
+    shed: usize,
+    unreplied: usize,
+    ls_count: u64,
+    ls_p50_ttft: f64,
+    ls_p99_ttft: f64,
+    preemptions: u64,
+    resumed: u64,
+    shed_total: u64,
+}
+
+/// One pass of the bursty mixed-SLO trace through a small (2-slot)
+/// router under `policy`. Every handle is waited with a generous bound
+/// so a wedged worker shows up as `unreplied` instead of hanging the
+/// bench.
+fn slo_run(policy: SloPolicy, trace: &[workload::TraceRequest]) -> SloRun {
+    let mut cfg = RouterCfg::new(engine_cfg(), std::path::PathBuf::from("/nonexistent"));
+    cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(8000, 1500, 1000));
+    // 2 slots: bursts saturate the device, so latency-sensitive arrivals
+    // must either jump the queue (priority lanes) or take a slot
+    // (block-boundary preemption) to meet their SLO
+    cfg.batcher = BatcherCfg { max_batch: 2, flush_ms: 5 };
+    cfg.queue_cap = 32;
+    cfg.mode = SchedMode::Continuous;
+    cfg.policy = policy;
+    let router = Router::start(cfg);
+
+    let mut handles = Vec::with_capacity(trace.len());
+    workload::replay_trace(trace, |req| {
+        let params = SeqParams { slo: req.slo, ..Default::default() };
+        if let Ok(h) = router.submit(req.item.prompt.clone(), params) {
+            handles.push(h);
+        }
+    });
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut unreplied = 0usize;
+    for h in &handles {
+        match h.wait_timeout(Duration::from_secs(120)) {
+            Some(Ok(_)) => completed += 1,
+            Some(Err(_)) => shed += 1,
+            None => unreplied += 1,
+        }
+    }
+    let m = &router.metrics;
+    let ls = SloClass::LatencySensitive.index();
+    let run = SloRun {
+        completed,
+        shed,
+        unreplied,
+        ls_count: m.class_ttft[ls].count(),
+        ls_p50_ttft: m.class_ttft[ls].quantile(0.5),
+        ls_p99_ttft: m.class_ttft[ls].quantile(0.99),
+        preemptions: m.preemptions_total.get(),
+        resumed: m.resumed_total.get(),
+        shed_total: m.shed_total.get(),
+    };
+    router.shutdown();
+    run
+}
+
+/// SLO section: FIFO vs SLO-aware on the identical overload burst
+/// trace. Gates on zero un-replied requests under both policies, on the
+/// SLO-aware run actually exercising its machinery (preemptions or
+/// sheds), and on the latency-sensitive p99 TTFT dropping to ≤ 0.5× the
+/// FIFO baseline. Emits BENCH_slo.json.
+fn slo_section(n: usize) -> anyhow::Result<()> {
+    // square-wave overload: 30% of each second runs at 10× the base
+    // rate — ~2× the 2-slot capacity on average, far above it in-burst —
+    // with the ~20/70/10 latency-sensitive/throughput/batch mix
+    let trace = workload::burst_trace(40.0, 400.0, 1.0, 0.3, n, 0x510);
+    let fifo = slo_run(SloPolicy::Fifo, &trace);
+    let slo = slo_run(SloPolicy::SloAware, &trace);
+
+    println!("\n== slo: {n}-request overload burst, FIFO vs SLO-aware ==");
+    for (label, r) in [("fifo", &fifo), ("slo-aware", &slo)] {
+        println!(
+            "{label:>9}: {} completed, {} shed, {} unreplied; \
+             LS TTFT p50 {:.3}s p99 {:.3}s ({} obs); \
+             {} preemptions, {} resumes, {} sheds",
+            r.completed, r.shed, r.unreplied, r.ls_p50_ttft, r.ls_p99_ttft,
+            r.ls_count, r.preemptions, r.resumed, r.shed_total,
+        );
+    }
+    let ratio = slo.ls_p99_ttft / fifo.ls_p99_ttft.max(1e-9);
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_continuous_slo\",\n  \"requests\": {n},\n  \
+         \"fifo_completed\": {},\n  \"fifo_unreplied\": {},\n  \
+         \"fifo_ls_p99_ttft_s\": {:.4},\n  \
+         \"slo_completed\": {},\n  \"slo_shed\": {},\n  \
+         \"slo_unreplied\": {},\n  \"slo_ls_p99_ttft_s\": {:.4},\n  \
+         \"ls_p99_ratio\": {ratio:.4},\n  \"preemptions\": {},\n  \
+         \"victim_resumes\": {},\n  \"shed_total\": {}\n}}\n",
+        fifo.completed, fifo.unreplied, fifo.ls_p99_ttft,
+        slo.completed, slo.shed, slo.unreplied, slo.ls_p99_ttft,
+        slo.preemptions, slo.resumed, slo.shed_total,
+    );
+    std::fs::write("artifacts/results/BENCH_slo.json", json)?;
+    println!("wrote artifacts/results/BENCH_slo.json");
+
+    // acceptance: overload is answered, never absorbed silently — every
+    // request gets a completion or a structured shed under BOTH
+    // policies, the SLO-aware machinery actually fired, and the
+    // latency-sensitive tail collapses vs FIFO
+    let ok = fifo.unreplied == 0
+        && slo.unreplied == 0
+        && fifo.ls_count > 0
+        && slo.ls_count > 0
+        && (slo.preemptions >= 1 || slo.shed_total >= 1)
+        && slo.ls_p99_ttft <= 0.5 * fifo.ls_p99_ttft;
+    println!(
+        "acceptance (zero unreplied, slo machinery fired, LS p99 TTFT \
+         ≤ 0.5× FIFO — measured ×{ratio:.3}): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "slo policy underperformed: fifo_unreplied={} slo_unreplied={} \
+             fifo_ls_p99={:.4} slo_ls_p99={:.4} ratio={ratio:.4} \
+             preemptions={} shed_total={}",
+            fifo.unreplied, slo.unreplied, fifo.ls_p99_ttft, slo.ls_p99_ttft,
+            slo.preemptions, slo.shed_total,
+        ));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     let n = bench_n(330);
@@ -632,5 +774,7 @@ fn main() -> anyhow::Result<()> {
     fault_section(n.min(120))?;
     // cross-request prefix-cache section (multi-turn chat trace)
     prefix_section(6, 4)?;
+    // SLO-aware overload section (bursty mixed-SLO trace, FIFO vs SLO)
+    slo_section(n.min(120))?;
     Ok(())
 }

@@ -12,7 +12,7 @@ use esdllm::batcher::BatcherCfg;
 use esdllm::cli::Args;
 use esdllm::engine::{Engine, EngineCfg, Method};
 use esdllm::eval::{self, EvalOpts};
-use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend};
+use esdllm::router::{Router, RouterCfg, SchedMode, SloPolicy, WorkerBackend};
 use esdllm::runtime::{default_artifacts_dir, Runtime};
 use esdllm::server::{serve, ServeCfg};
 
@@ -88,6 +88,11 @@ fn main() -> Result<()> {
                     return Err(anyhow!("unknown --sched {other} (continuous|rtc)"))
                 }
             };
+            let policy = match args.str("slo-policy", "slo").as_str() {
+                "fifo" => SloPolicy::Fifo,
+                "slo" | "slo-aware" => SloPolicy::SloAware,
+                other => return Err(anyhow!("unknown --slo-policy {other} (slo|fifo)")),
+            };
             let router = Router::start(RouterCfg {
                 engine: engine_cfg,
                 batcher: BatcherCfg {
@@ -99,10 +104,12 @@ fn main() -> Result<()> {
                 artifacts_dir: artifacts,
                 mode,
                 backend: WorkerBackend::Pjrt,
+                policy,
             });
             let cfg = ServeCfg {
                 bind: args.str("bind", "127.0.0.1:8311"),
                 http_threads: args.usize("http-threads", 4),
+                reply_timeout_ms: args.u64("reply-timeout-ms", 600_000),
             };
             let server = serve(&cfg, router.clone())?;
             println!("esdllm serving on http://{} (arch={arch})", server.addr);

@@ -243,10 +243,37 @@ pub struct Metrics {
     pub requests_failed: Counter,
     /// sequences retired overdue with a structured timeout error
     pub timeouts_total: Counter,
+    // -- SLO-aware serving (per-class latency, shed/preempt ledger) --
+    /// time-to-first-token per service class (submission → first
+    /// committed token), indexed in SloClass priority order:
+    /// latency_sensitive, throughput, batch
+    pub class_ttft: [Histogram; SLO_CLASSES],
+    /// time-per-output-token per service class (generation time over
+    /// decoded positions), same indexing
+    pub class_tpot: [Histogram; SLO_CLASSES],
+    /// requests answered with a structured shed instead of served:
+    /// overload (`overloaded:` 429s) plus deadline sheds at admission
+    /// and of parked victims (`timeout:` 504s)
+    pub shed_total: Counter,
+    /// sequences preempted off their slots at block boundaries
+    /// (mirrored from the shared pool ledger, like the chain gauges)
+    pub preemptions_total: Gauge,
+    /// preempted sequences reseated after pressure dropped
+    pub resumed_total: Gauge,
+    /// victims currently parked off their slots
+    pub victims_parked: Gauge,
     pub request_latency: Histogram,
     pub queue_latency: Histogram,
     started: Mutex<Option<std::time::Instant>>,
 }
+
+/// Number of service classes (`scheduler::SloClass` priority order:
+/// latency_sensitive, throughput, batch). Kept as a local constant so
+/// the metrics registry stays dependency-free.
+pub const SLO_CLASSES: usize = 3;
+
+/// Metric-label names of the service classes, in index order.
+pub const SLO_CLASS_NAMES: [&str; SLO_CLASSES] = ["latency_sensitive", "throughput", "batch"];
 
 impl Metrics {
     pub fn start_clock(&self) {
@@ -339,6 +366,10 @@ impl Metrics {
             ("esdllm_host_demotions", self.host_demotions.get()),
             ("esdllm_requests_failed", self.requests_failed.get()),
             ("esdllm_timeouts_total", self.timeouts_total.get()),
+            ("esdllm_shed_total", self.shed_total.get()),
+            ("esdllm_preemptions_total", self.preemptions_total.get()),
+            ("esdllm_resumed_total", self.resumed_total.get()),
+            ("esdllm_victims_parked", self.victims_parked.get()),
         ];
         for (k, v) in kv {
             out.push_str(&format!("{k} {v}\n"));
@@ -354,6 +385,27 @@ impl Metrics {
                 (q * 100.0) as u32,
                 self.request_latency.quantile(q)
             ));
+        }
+        // per-class serving quality: TTFT and TPOT p50/p99 for every
+        // service class (labels are plain text here — the exposition is
+        // hand-rendered, no client library involved)
+        for (i, name) in SLO_CLASS_NAMES.iter().enumerate() {
+            out.push_str(&format!(
+                "esdllm_ttft_seconds_count{{class=\"{name}\"}} {}\n",
+                self.class_ttft[i].count()
+            ));
+            for q in [0.5, 0.99] {
+                out.push_str(&format!(
+                    "esdllm_ttft_seconds_p{}{{class=\"{name}\"}} {:.6}\n",
+                    (q * 100.0) as u32,
+                    self.class_ttft[i].quantile(q)
+                ));
+                out.push_str(&format!(
+                    "esdllm_tpot_seconds_p{}{{class=\"{name}\"}} {:.6}\n",
+                    (q * 100.0) as u32,
+                    self.class_tpot[i].quantile(q)
+                ));
+            }
         }
         let batches = self.batches_total.get().max(1);
         out.push_str(&format!(
@@ -447,6 +499,12 @@ mod tests {
         m.host_demotions.inc();
         m.requests_failed.inc();
         m.timeouts_total.inc();
+        m.shed_total.add(4);
+        m.preemptions_total.set(3);
+        m.resumed_total.set(2);
+        m.victims_parked.set(1);
+        m.class_ttft[0].observe_secs(0.010);
+        m.class_tpot[0].observe_secs(0.002);
         let text = m.render();
         assert!(text.contains("esdllm_requests_total 1"));
         assert!(text.contains("esdllm_tokens_generated 32"));
@@ -481,6 +539,13 @@ mod tests {
         assert!(text.contains("esdllm_host_demotions 1"));
         assert!(text.contains("esdllm_requests_failed 1"));
         assert!(text.contains("esdllm_timeouts_total 1"));
+        assert!(text.contains("esdllm_shed_total 4"));
+        assert!(text.contains("esdllm_preemptions_total 3"));
+        assert!(text.contains("esdllm_resumed_total 2"));
+        assert!(text.contains("esdllm_victims_parked 1"));
+        assert!(text.contains("esdllm_ttft_seconds_count{class=\"latency_sensitive\"} 1"));
+        assert!(text.contains("esdllm_ttft_seconds_p99{class=\"latency_sensitive\"}"));
+        assert!(text.contains("esdllm_tpot_seconds_p50{class=\"throughput\"}"));
         assert!(text.contains("esdllm_upload_bytes_per_tick"));
         assert!(text.contains("esdllm_d2h_bytes_shipped_per_tick"));
     }

@@ -38,14 +38,49 @@
 //! `prefill_bytes_saved`, `prefix_cache_bytes`, `prefix_evictions`).
 //!
 //! Requests carry per-request parameters ([`SeqParams`]: `gen_len`,
-//! temperature, parallel threshold, `timeout_ms`) and replies carry
-//! true per-request statistics ([`GenReply`]), not group-level
-//! aggregates. The shared bounded queue provides backpressure:
-//! `try_submit` fails when the queue is full → HTTP 503. Responses
-//! travel back through per-request oneshot slots, protected by a
-//! [`PendingRepliesGuard`]: a worker that panics mid-flight answers
-//! every outstanding oneshot with an error during unwind instead of
-//! leaving clients blocked forever.
+//! temperature, parallel threshold, `timeout_ms`, and an [`SloClass`])
+//! and replies carry true per-request statistics ([`GenReply`]), not
+//! group-level aggregates. Responses travel back through per-request
+//! oneshot slots, protected by a [`PendingRepliesGuard`]: a worker that
+//! panics mid-flight answers every outstanding oneshot with an error
+//! during unwind instead of leaving clients blocked forever.
+//!
+//! # SLO-aware admission, shedding, and preemption
+//!
+//! The shared queue is a set of per-class priority lanes
+//! ([`SloQueues`]: one [`VecDeque`] per [`SloClass`]) behind one
+//! bounded capacity. Under the default [`SloPolicy::SloAware`] policy
+//! workers drain the highest-priority non-empty lane first; under
+//! [`SloPolicy::Fifo`] (the baseline the SLO bench compares against)
+//! arrival stamps restore global FIFO order and queue-full `try_submit`
+//! fails plainly → HTTP 503.
+//!
+//! Overload never hangs and never fails silently — the error taxonomy
+//! is explicit:
+//!
+//!   * `overloaded:` (→ HTTP 429) — the queue is at capacity. Under
+//!     `SloAware` an arrival outranking a queued lower-class request
+//!     sheds that victim's oneshot and takes its place; an arrival that
+//!     outranks nobody is shed itself. Either way a structured reply is
+//!     delivered, never a silent drop ([`Metrics::shed_total`]).
+//!   * `timeout:` (→ HTTP 504) — deadline-aware admission: a request
+//!     whose `timeout_ms` budget already burned away while queued is
+//!     shed at admission, before a grounding prefill is wasted on it.
+//!     The same prefix covers in-flight deadline overruns detected at
+//!     block boundaries and parked victims whose deadline expires.
+//!   * fault errors (→ HTTP 500) — the recovery ladder below.
+//!
+//! When a request arrives whose class outranks a resident sequence and
+//! no slot is free, the worker **preempts at a block boundary**:
+//! [`GroupScheduler::preempt_victim`] parks the victim's host state and
+//! token rows (block boundaries are where the next plan is a grounding
+//! prefill, so park/resume is trajectory-exact — token-identical to an
+//! unpreempted run), the waiter is admitted into the freed slot, and
+//! [`GroupScheduler::resume_victim`] re-seats the victim when pressure
+//! drops. Preempt/resume/shed events land in the shared pool ledger and
+//! are mirrored to `/metrics` (`esdllm_preemptions_total`,
+//! `esdllm_resumed_total`, `esdllm_victims_parked`, `esdllm_shed_total`)
+//! alongside per-class TTFT/TPOT histograms.
 //!
 //! # Fault recovery
 //!
@@ -73,13 +108,13 @@
 //! the backend's [`crate::fault::FaultStats`] ledger, pumped into the
 //! `/metrics` fault counters each tick alongside the transfer ledger.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::batcher::{batch_classes, next_batch, BatcherCfg};
+use crate::batcher::{batch_classes, BatcherCfg};
 use crate::engine::EngineCfg;
 use crate::fault::{classify, FaultStats, TickErrorClass};
 use crate::metrics::Metrics;
@@ -87,9 +122,9 @@ use crate::runtime::resident::{ApplyMode, PoolStats, PrefixCache, PrefixStats, R
 use crate::runtime::Runtime;
 use crate::scheduler::sim::{SimBackend, SimCfg};
 use crate::scheduler::{
-    GroupScheduler, PjrtBackend, SchedCfg, SeqInput, SeqParams, StepBackend,
+    GroupScheduler, PjrtBackend, ResumeOutcome, SchedCfg, SeqInput, SeqParams, SloClass,
+    StepBackend,
 };
-use crate::threadpool::Channel;
 
 /// Re-ticks after a failed (and re-grounded) tick before the resident
 /// sequences are failed: the bounded per-tick retry budget.
@@ -155,6 +190,24 @@ impl<T> OneShot<T> {
             g = self.0 .1.wait(g).unwrap();
         }
     }
+
+    /// Wait up to `dur` for the value; `None` on timeout. The HTTP
+    /// handler bounds its wait with this so a wedged worker can never
+    /// hang a client connection forever.
+    pub fn wait_timeout(&self, dur: Duration) -> Option<T> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.0 .0.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return Some(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self.0 .1.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
 }
 
 impl<T> Default for OneShot<T> {
@@ -180,9 +233,185 @@ pub enum WorkerBackend {
     Sim(SimCfg),
 }
 
+/// Admission/dispatch policy of the shared request queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloPolicy {
+    /// global arrival order; queue-full `try_submit` → Err (HTTP 503).
+    /// The no-shed, no-preempt baseline the SLO bench compares against.
+    Fifo,
+    /// per-class priority dispatch, lowest-class load shedding under
+    /// overload, and block-boundary preemption (see the module docs)
+    #[default]
+    SloAware,
+}
+
+/// Outcome of pushing a request into [`SloQueues`].
+enum Pushed {
+    Ok,
+    /// the queue was full of equal-or-higher classes: the incoming
+    /// request itself is the shed victim (non-blocking push only)
+    Overloaded(GenRequest),
+    /// the incoming request outranked a queued lower-class request:
+    /// that victim was popped to make room and must be answered with a
+    /// structured `overloaded:` error
+    Shed(GenRequest),
+    /// the router is shutting down
+    Closed,
+}
+
+struct SloQueuesInner {
+    /// one lane per [`SloClass`], indexed by `SloClass::index()`;
+    /// entries carry a global arrival stamp so the FIFO policy can
+    /// restore arrival order across lanes
+    lanes: [VecDeque<(u64, GenRequest)>; SloClass::COUNT],
+    arrivals: u64,
+    closed: bool,
+}
+
+/// The router's bounded multi-lane request queue: one FIFO lane per
+/// [`SloClass`] behind a single shared capacity, replacing the old
+/// single [`crate::threadpool::Channel`].
+struct SloQueues {
+    inner: Mutex<SloQueuesInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: SloPolicy,
+}
+
+impl SloQueues {
+    fn new(cap: usize, policy: SloPolicy) -> SloQueues {
+        SloQueues {
+            inner: Mutex::new(SloQueuesInner {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                arrivals: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+            policy,
+        }
+    }
+
+    fn push(&self, req: GenRequest, blocking: bool) -> Pushed {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                drop(req);
+                return Pushed::Closed;
+            }
+            let total: usize = g.lanes.iter().map(|l| l.len()).sum();
+            if total < self.cap {
+                let stamp = g.arrivals;
+                g.arrivals += 1;
+                g.lanes[req.params.slo.index()].push_back((stamp, req));
+                self.not_empty.notify_one();
+                return Pushed::Ok;
+            }
+            if self.policy == SloPolicy::SloAware {
+                // full: shed the newest queued request of the lowest
+                // class strictly below the incoming one, if any — the
+                // explicit overload controller
+                let victim_lane = (req.params.slo.index() + 1..SloClass::COUNT)
+                    .rev()
+                    .find(|&i| !g.lanes[i].is_empty());
+                if let Some(i) = victim_lane {
+                    let (_, victim) = g.lanes[i].pop_back().unwrap();
+                    let stamp = g.arrivals;
+                    g.arrivals += 1;
+                    g.lanes[req.params.slo.index()].push_back((stamp, req));
+                    self.not_empty.notify_one();
+                    return Pushed::Shed(victim);
+                }
+            }
+            if !blocking {
+                return Pushed::Overloaded(req);
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Pop under the policy: SLO-aware takes the highest-priority
+    /// non-empty lane's head; FIFO takes the globally oldest arrival.
+    fn pop_locked(policy: SloPolicy, g: &mut SloQueuesInner) -> Option<GenRequest> {
+        let lane = match policy {
+            SloPolicy::SloAware => (0..SloClass::COUNT).find(|&i| !g.lanes[i].is_empty()),
+            SloPolicy::Fifo => g
+                .lanes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| l.front().map(|(stamp, _)| (*stamp, i)))
+                .min()
+                .map(|(_, i)| i),
+        }?;
+        let (_, req) = g.lanes[lane].pop_front().unwrap();
+        Some(req)
+    }
+
+    fn recv(&self) -> Option<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = Self::pop_locked(self.policy, &mut g) {
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    fn try_recv(&self) -> Option<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let r = Self::pop_locked(self.policy, &mut g);
+        if r.is_some() {
+            self.not_full.notify_one();
+        }
+        r
+    }
+
+    fn recv_timeout(&self, dur: Duration) -> Option<GenRequest> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = Self::pop_locked(self.policy, &mut g) {
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self.not_empty.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().lanes.iter().map(|l| l.len()).sum()
+    }
+
+    /// Class of the best queued request (the one a worker would pop
+    /// next under SLO-aware dispatch), `None` when empty.
+    fn peek_class(&self) -> Option<SloClass> {
+        let g = self.inner.lock().unwrap();
+        SloClass::ALL.into_iter().find(|c| !g.lanes[c.index()].is_empty())
+    }
+}
+
 #[derive(Clone)]
 pub struct Router {
-    queue: Channel<GenRequest>,
+    queue: Arc<SloQueues>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -194,6 +423,7 @@ pub struct RouterCfg {
     pub artifacts_dir: std::path::PathBuf,
     pub mode: SchedMode,
     pub backend: WorkerBackend,
+    pub policy: SloPolicy,
 }
 
 impl RouterCfg {
@@ -208,6 +438,7 @@ impl RouterCfg {
             artifacts_dir,
             mode: SchedMode::Continuous,
             backend: WorkerBackend::Pjrt,
+            policy: SloPolicy::SloAware,
         }
     }
 }
@@ -217,7 +448,7 @@ impl Router {
     /// a full backend (PJRT client + compiled executables + params, or the
     /// simulation model) plus one slot scheduler.
     pub fn start(cfg: RouterCfg) -> Router {
-        let queue: Channel<GenRequest> = Channel::bounded(cfg.queue_cap.max(1));
+        let queue = Arc::new(SloQueues::new(cfg.queue_cap.max(1), cfg.policy));
         let metrics = Arc::new(Metrics::default());
         metrics.start_clock();
         // one residency pool for every worker: parked retained chains
@@ -256,6 +487,7 @@ impl Router {
         params: SeqParams,
         blocking: bool,
     ) -> Result<OneShot<Result<GenReply, String>>, ()> {
+        let class = params.slo;
         let reply = OneShot::new();
         let req = GenRequest {
             prompt,
@@ -263,27 +495,51 @@ impl Router {
             submitted: Instant::now(),
             reply: reply.clone(),
         };
-        let sent = if blocking {
-            self.queue.send(req).map_err(|_| ())
-        } else {
-            self.queue.try_send(req).map_err(|_| ())
-        };
-        match sent {
-            Ok(()) => {
+        match self.queue.push(req, blocking) {
+            Pushed::Ok => {
                 self.metrics.requests_total.inc();
                 Ok(reply)
             }
-            Err(()) => {
-                if !blocking {
-                    self.metrics.requests_rejected.inc();
-                }
-                Err(())
+            Pushed::Shed(victim) => {
+                // the newcomer outranked a queued lower-class request:
+                // that victim gets a structured overload reply and the
+                // newcomer takes its place
+                self.metrics.requests_total.inc();
+                self.metrics.shed_total.inc();
+                victim.reply.put(Err(format!(
+                    "overloaded: queue full (cap {}); shed for a {} arrival",
+                    self.queue.cap,
+                    class.name()
+                )));
+                Ok(reply)
             }
+            Pushed::Overloaded(req) => {
+                self.metrics.requests_rejected.inc();
+                if self.queue.policy == SloPolicy::Fifo {
+                    // baseline backpressure: plain queue-full → 503
+                    Err(())
+                } else {
+                    // SLO-aware overload is always a structured reply,
+                    // never a silent drop: the request outranked nothing
+                    // queued, so it is the shed victim itself
+                    self.metrics.requests_total.inc();
+                    self.metrics.shed_total.inc();
+                    req.reply.put(Err(format!(
+                        "overloaded: queue full (cap {}) of equal-or-higher classes",
+                        self.queue.cap
+                    )));
+                    Ok(reply)
+                }
+            }
+            Pushed::Closed => Err(()),
         }
     }
 
-    /// Enqueue a request; returns a oneshot to wait on, or Err when the
-    /// queue is full (backpressure → HTTP 503).
+    /// Enqueue a request; returns a oneshot to wait on. Err means the
+    /// router is shut down — or, under [`SloPolicy::Fifo`], that the
+    /// queue is full (backpressure → HTTP 503). Under the default
+    /// SLO-aware policy overload is answered through the oneshot with a
+    /// structured `overloaded:` error (→ HTTP 429) instead.
     #[allow(clippy::result_unit_err)]
     pub fn try_submit(
         &self,
@@ -312,7 +568,7 @@ impl Router {
     }
 }
 
-fn drain_with_error(queue: &Channel<GenRequest>, msg: &str) {
+fn drain_with_error(queue: &SloQueues, msg: &str) {
     while let Some(req) = queue.recv() {
         req.reply.put(Err(msg.to_string()));
     }
@@ -320,7 +576,7 @@ fn drain_with_error(queue: &Channel<GenRequest>, msg: &str) {
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    queue: Channel<GenRequest>,
+    queue: Arc<SloQueues>,
     metrics: Arc<Metrics>,
     engine_cfg: EngineCfg,
     batcher: BatcherCfg,
@@ -535,7 +791,10 @@ fn fail_active(
     guard: &mut ActiveSlotsGuard,
     msg: &str,
 ) {
-    let ids = sched.active_ids();
+    // parked preemption victims are in flight too — their clients are
+    // waiting on the same oneshots, so an eviction must answer them
+    let mut ids = sched.active_ids();
+    ids.extend(sched.parked_ids());
     if let Some(inj) = sched.fault_injector() {
         inj.note_requests_failed(ids.len() as u64);
     }
@@ -596,6 +855,11 @@ fn tick_once(
         metrics.chain_switches.set(ps.chain_switches);
         metrics.chain_rebuilds_avoided.set(ps.chain_rebuilds_avoided);
         metrics.reseed_bytes_saved.set(ps.reseed_bytes_saved);
+        // preemption ledger: parked/resumed/dropped victims flow into
+        // the pool from every worker, mirrored like the rest
+        metrics.preemptions_total.set(ps.preemptions);
+        metrics.resumed_total.set(ps.victim_resumes);
+        metrics.victims_parked.set(ps.victims_parked);
         // prefix-cache ledger: shared by every worker like the pool's,
         // so mirrored (set), not delta-added
         let xs: PrefixStats = sched.prefix_stats();
@@ -621,6 +885,15 @@ fn tick_once(
                     metrics.tokens_generated.add(f.tokens as u64);
                     metrics.iterations_total.add(f.iterations as u64);
                     metrics.request_latency.observe_secs(f.queue_s + f.gen_s);
+                    // per-class SLO attainment: TTFT from submit to the
+                    // first committed block, TPOT over decoded positions
+                    let ci = f.slo.index();
+                    if let Some(ttft) = f.ttft_s {
+                        metrics.class_ttft[ci].observe_secs(ttft);
+                    }
+                    if f.tokens > 0 && f.error.is_none() {
+                        metrics.class_tpot[ci].observe_secs(f.gen_s / f.tokens as f64);
+                    }
                     let reply = pending.remove(&f.id);
                     if let Some(err) = f.error {
                         // structured per-sequence failure (deadline
@@ -748,6 +1021,22 @@ fn admit_request(
     id: u64,
     req: GenRequest,
 ) {
+    // deadline-aware admission: a request whose timeout_ms budget burned
+    // away while it sat queued is shed right here, before a grounding
+    // prefill is wasted on work nobody is waiting for anymore
+    // (`timeout_ms: 0` falls through: the scheduler rejects it as a
+    // bad request — an unmeetable deadline is a client error, not a shed)
+    if let Some(ms) = req.params.timeout_ms {
+        let waited_ms = req.submitted.elapsed().as_millis() as u64;
+        if ms > 0 && waited_ms >= ms {
+            metrics.timeouts_total.inc();
+            metrics.shed_total.inc();
+            req.reply.put(Err(format!(
+                "timeout: exceeded {ms} ms after {waited_ms} ms queued (shed before prefill)"
+            )));
+            return;
+        }
+    }
     metrics.queue_latency.observe_secs(req.submitted.elapsed().as_secs_f64());
     let input = SeqInput {
         id,
@@ -772,7 +1061,7 @@ fn admit_request(
 /// chains through the shared residency pool.
 fn run_continuous(
     mut sched: GroupScheduler<'_>,
-    queue: Channel<GenRequest>,
+    queue: Arc<SloQueues>,
     metrics: Arc<Metrics>,
 ) {
     let mut pending = PendingRepliesGuard::new();
@@ -782,16 +1071,18 @@ fn run_continuous(
     loop {
         // when idle, block for the first arrival and hold it so the
         // class can be sized to it before admission (a lone request
-        // after a burst gets the b=1 executables)
+        // after a burst gets the b=1 executables). Parked victims count
+        // as demand: with nothing active they resume below instead of
+        // blocking here.
         let mut held: Option<GenRequest> = None;
-        if sched.active() == 0 {
+        if sched.active() == 0 && sched.parked() == 0 {
             match queue.recv() {
                 Some(r) => held = Some(r),
                 None => return, // closed and drained
             }
         }
         // batch-class selection from demand, at block boundaries only
-        let demand_queued = usize::from(held.is_some()) + queue.len();
+        let demand_queued = usize::from(held.is_some()) + queue.len() + sched.parked();
         if let Err(e) = sched.maybe_switch_class(demand_queued) {
             // the switch unwound to the outgoing class, but its chain may
             // have been lost mid-checkout: evict and re-ground explicitly
@@ -812,6 +1103,38 @@ fn run_continuous(
             }
             pump_fault_stats(&sched, &metrics, &mut recovery);
         }
+        // resume parked preemption victims into free slots while no
+        // waiting request outranks them (pressure dropped). Their next
+        // plan is a grounding prefill off the preserved host trajectory,
+        // so the resumed decode is token-identical.
+        while sched.free_slots() > 0 {
+            let Some(best) = sched.best_parked_class() else { break };
+            let waiting = held
+                .as_ref()
+                .map(|r| r.params.slo)
+                .into_iter()
+                .chain(queue.peek_class())
+                .min();
+            if waiting.is_some_and(|qc| qc < best) {
+                break;
+            }
+            match sched.resume_victim() {
+                ResumeOutcome::Seated(_) => {}
+                ResumeOutcome::Shed(f) => {
+                    // the victim's deadline expired while parked: shed it
+                    // with the structured timeout instead of re-seating
+                    metrics.retirements_total.inc();
+                    metrics.timeouts_total.inc();
+                    metrics.shed_total.inc();
+                    if let Some(reply) = pending.remove(&f.id) {
+                        reply.put(Err(f
+                            .error
+                            .unwrap_or_else(|| "timeout: parked past deadline".to_string())));
+                    }
+                }
+                ResumeOutcome::None => break,
+            }
+        }
         // admission: the held request first, then fill free slots.
         // (a failed admission — bad request — leaves the group idle, so
         // the loop circles back into the blocking recv)
@@ -829,6 +1152,23 @@ fn run_continuous(
             next_id += 1;
             admit_request(&mut sched, &metrics, &mut pending, id, req);
         }
+        // preemption: a queued arrival that outranks a resident sequence
+        // and finds no free slot claims a victim's slot at the block
+        // boundary (SLO-aware policy only; FIFO is the no-preemption
+        // baseline). The victim parks trajectory-exact and resumes above
+        // once pressure drops.
+        if queue.policy == SloPolicy::SloAware {
+            while sched.free_slots() == 0 {
+                let Some(waiter) = queue.peek_class() else { break };
+                if sched.preempt_victim(waiter).is_none() {
+                    break;
+                }
+                let Some(req) = queue.try_recv() else { break };
+                let id = next_id;
+                next_id += 1;
+                admit_request(&mut sched, &metrics, &mut pending, id, req);
+            }
+        }
         guard.sync(sched.active());
         // nothing admitted (e.g. the held request was a bad request):
         // don't charge an empty tick to the per-tick metrics — circle
@@ -839,18 +1179,37 @@ fn run_continuous(
     }
 }
 
+/// [`crate::batcher::next_batch`] over the multi-lane queue: block for
+/// the first request, then fill the batch within the flush window.
+fn next_batch_slo(queue: &SloQueues, cfg: &BatcherCfg) -> Option<Vec<GenRequest>> {
+    let first = queue.recv()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + Duration::from_millis(cfg.flush_ms);
+    while batch.len() < cfg.max_batch.max(1) {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match queue.recv_timeout(deadline - now) {
+            Some(r) => batch.push(r),
+            None => break,
+        }
+    }
+    Some(batch)
+}
+
 /// Legacy baseline: drain a batch from the queue, run the whole group to
 /// completion with no mid-flight admission, reply, repeat.
 fn run_to_completion(
     mut sched: GroupScheduler<'_>,
-    queue: Channel<GenRequest>,
+    queue: Arc<SloQueues>,
     metrics: Arc<Metrics>,
     batcher: BatcherCfg,
 ) {
     let mut next_id: u64 = 0;
     let mut guard = ActiveSlotsGuard::new(metrics.clone());
     let mut recovery = RecoveryState::new();
-    while let Some(batch) = next_batch(&queue, &batcher) {
+    while let Some(batch) = next_batch_slo(&queue, &batcher) {
         metrics.batches_total.inc();
         metrics.batch_occupancy_sum.add(batch.len() as u64);
         let mut pending = PendingRepliesGuard::new();
@@ -878,6 +1237,22 @@ mod tests {
         let s2 = s.clone();
         std::thread::spawn(move || s2.put(7));
         assert_eq!(s.wait(), 7);
+    }
+
+    #[test]
+    fn oneshot_wait_timeout_times_out_then_delivers() {
+        // an unanswered oneshot times out instead of hanging forever …
+        let s: OneShot<u32> = OneShot::new();
+        let t0 = Instant::now();
+        assert_eq!(s.wait_timeout(Duration::from_millis(10)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        // … and a delivered value still comes through within the bound
+        let s2 = s.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            s2.put(9);
+        });
+        assert_eq!(s.wait_timeout(Duration::from_secs(5)), Some(9));
     }
 
     fn sim_router(mode: SchedMode, slots: usize, queue_cap: usize) -> Router {
@@ -1169,6 +1544,115 @@ mod tests {
         // the worker must still be alive for the next request
         let ok = router.submit("ok".into(), SeqParams::default()).unwrap();
         assert_eq!(ok.wait().unwrap().text, "ok");
+        router.shutdown();
+    }
+
+    /// Slow sim router: every step costs real microseconds, so a first
+    /// request holds its slot long enough for queue pressure to build.
+    fn slow_sim_router(slots: usize, queue_cap: usize, policy: SloPolicy) -> Router {
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 1000, 1000));
+        cfg.batcher = BatcherCfg { max_batch: slots, flush_ms: 2 };
+        cfg.queue_cap = queue_cap;
+        cfg.mode = SchedMode::Continuous;
+        cfg.policy = policy;
+        Router::start(cfg)
+    }
+
+    #[test]
+    fn request_expired_in_queue_is_shed_before_prefill() {
+        // satellite: timeout_ms is enforced against total age at
+        // admission — a request whose budget burned away while queued is
+        // shed as `timeout:` without consuming a grounding prefill
+        let router = slow_sim_router(1, 8, SloPolicy::SloAware);
+        let long = router.submit("abcdefgh".into(), SeqParams::default()).unwrap();
+        let doomed = SeqParams { timeout_ms: Some(1), ..Default::default() };
+        let doomed = router.submit("cdef".into(), doomed).unwrap();
+        let err = doomed.wait().unwrap_err();
+        assert!(err.starts_with("timeout:"), "{err}");
+        assert!(err.contains("shed before prefill"), "{err}");
+        long.wait().expect("the resident request is untouched");
+        let m = &router.metrics;
+        assert_eq!(m.timeouts_total.get(), 1);
+        assert_eq!(m.shed_total.get(), 1);
+        // only the long request ever occupied a slot
+        assert_eq!(m.admissions_total.get(), 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_lowest_class_with_structured_errors() {
+        // one slot, queue capacity two: a long throughput request holds
+        // the slot while the queue fills with batch-class work
+        let router = slow_sim_router(1, 2, SloPolicy::SloAware);
+        let batch_params = SeqParams { slo: SloClass::Batch, ..Default::default() };
+        let long = router.submit("abcdefgh".into(), SeqParams::default()).unwrap();
+        let b1 = router.submit("ab".into(), batch_params).unwrap();
+        let b2 = router.submit("cd".into(), batch_params).unwrap();
+        // queue is now full of batch work: a latency-sensitive arrival
+        // sheds the newest batch victim and takes its place
+        let ls_params = SeqParams { slo: SloClass::LatencySensitive, ..Default::default() };
+        let ls = router.try_submit("1+2=".into(), ls_params).unwrap();
+        let err = b2.wait().unwrap_err();
+        assert!(err.starts_with("overloaded:"), "{err}");
+        // a batch arrival outranks nothing queued: it is shed itself,
+        // through the oneshot (never a silent drop, never a hang)
+        let b3 = router.try_submit("ef".into(), batch_params).unwrap();
+        let err = b3.wait().unwrap_err();
+        assert!(err.starts_with("overloaded:"), "{err}");
+        // the survivors are all served
+        long.wait().expect("resident request served");
+        ls.wait().expect("latency-sensitive request served");
+        b1.wait().expect("first batch request served");
+        let m = &router.metrics;
+        assert_eq!(m.shed_total.get(), 2, "exactly the two sheds above");
+        router.shutdown();
+    }
+
+    #[test]
+    fn fifo_policy_keeps_plain_queue_full_backpressure() {
+        // the FIFO baseline: no shedding — a full queue fails try_submit
+        // with Err (HTTP 503), exactly the pre-SLO behavior
+        let router = slow_sim_router(1, 1, SloPolicy::Fifo);
+        let a = router.submit("abcdefgh".into(), SeqParams::default()).unwrap();
+        let b = router.submit("ab".into(), SeqParams::default()).unwrap();
+        // the worker holds `a`, the queue holds `b`: full
+        assert!(router.try_submit("cd".into(), SeqParams::default()).is_err());
+        assert_eq!(router.metrics.requests_rejected.get(), 1);
+        assert_eq!(router.metrics.shed_total.get(), 0, "FIFO never sheds");
+        a.wait().expect("first served");
+        b.wait().expect("second served");
+        router.shutdown();
+    }
+
+    #[test]
+    fn latency_sensitive_preempts_and_victim_resumes_token_identical() {
+        // baseline: the victim prompt alone, unpreempted
+        let clean = sim_router(SchedMode::Continuous, 1, 16);
+        let want = clean.submit("cdef".into(), SeqParams::default()).unwrap();
+        let want = want.wait().expect("unpreempted run");
+        clean.shutdown();
+
+        // one slot: a throughput victim is mid-decode when a
+        // latency-sensitive request arrives → block-boundary preemption
+        let router = slow_sim_router(1, 8, SloPolicy::SloAware);
+        let victim = router.submit("cdef".into(), SeqParams::default()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let ls_params = SeqParams { slo: SloClass::LatencySensitive, ..Default::default() };
+        let ls = router.submit("1+2=".into(), ls_params).unwrap();
+        let ls_reply = ls.wait().expect("latency-sensitive request served");
+        assert_eq!(ls_reply.text, "1+2=");
+        let victim_reply = victim.wait().expect("victim resumes and completes");
+        assert_eq!(victim_reply.text, want.text, "park/resume is trajectory-exact");
+        assert_eq!(victim_reply.tokens, want.tokens);
+        let m = &router.metrics;
+        assert!(m.preemptions_total.get() >= 1, "the victim was parked");
+        assert!(m.resumed_total.get() >= 1, "and later resumed");
+        assert_eq!(m.victims_parked.get(), 0, "nobody left parked at the end");
+        assert_eq!(m.requests_failed.get(), 0);
         router.shutdown();
     }
 }

@@ -478,6 +478,24 @@ pub fn chain_seed_bytes(dims: &Dims, batch: usize) -> u64 {
     kv + ind + conf
 }
 
+/// A preemption-ledger event: what happened to a victim sequence's
+/// parked slot state. The scheduler reports these through
+/// `StepBackend::note_preempt`; the pool keeps the shared ledger so
+/// every worker's preemptions land in one place, beside the pooled
+/// chains whose park/checkout mechanics make the preemption
+/// trajectory-exact in the first place.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptEvent {
+    /// a seated sequence was preempted at a block boundary and its
+    /// decode state parked
+    Parked,
+    /// a parked victim was reseated into a free slot
+    Resumed,
+    /// a parked victim left without resuming (deadline expired while
+    /// parked, or an eviction drained it)
+    Dropped,
+}
+
 /// Cumulative pool ledger, mirrored into `/metrics` each tick.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
@@ -490,6 +508,12 @@ pub struct PoolStats {
     pub chain_rebuilds_avoided: u64,
     /// seed bytes those avoided rebuilds would have shipped
     pub reseed_bytes_saved: u64,
+    /// sequences preempted off their slots at block boundaries (total)
+    pub preemptions: u64,
+    /// preempted sequences reseated after pressure dropped (total)
+    pub victim_resumes: u64,
+    /// victims currently parked (a gauge: parked − resumed − dropped)
+    pub victims_parked: u64,
 }
 
 #[derive(Default)]
@@ -508,6 +532,10 @@ struct PoolInner {
     switches: u64,
     rebuilds_avoided: u64,
     reseed_bytes_saved: u64,
+    /// preemption ledger (see [`PreemptEvent`])
+    preemptions: u64,
+    victim_resumes: u64,
+    victims_parked: u64,
 }
 
 /// Process-wide registry of retained device chains, keyed by
@@ -603,6 +631,25 @@ impl ResidencyPool {
         self.inner.lock().unwrap().switches += 1;
     }
 
+    /// Record a preemption-ledger event (the scheduler parked, resumed,
+    /// or dropped a victim's slot state).
+    pub fn note_victim(&self, ev: PreemptEvent) {
+        let mut g = self.inner.lock().unwrap();
+        match ev {
+            PreemptEvent::Parked => {
+                g.preemptions += 1;
+                g.victims_parked += 1;
+            }
+            PreemptEvent::Resumed => {
+                g.victim_resumes += 1;
+                g.victims_parked = g.victims_parked.saturating_sub(1);
+            }
+            PreemptEvent::Dropped => {
+                g.victims_parked = g.victims_parked.saturating_sub(1);
+            }
+        }
+    }
+
     /// Drop a chain from the registry entirely — the parked entry if one
     /// exists, and the live count when the caller held the chain checked
     /// out (`was_active`). Called on backend invalidation/eviction so a
@@ -666,6 +713,9 @@ impl ResidencyPool {
             chain_switches: g.switches,
             chain_rebuilds_avoided: g.rebuilds_avoided,
             reseed_bytes_saved: g.reseed_bytes_saved,
+            preemptions: g.preemptions,
+            victim_resumes: g.victim_resumes,
+            victims_parked: g.victims_parked,
         }
     }
 }

@@ -149,6 +149,39 @@
 //! boundary with a structured `timeout:` error once overdue
 //! ([`FinishedSeq::error`]), never holding a slot past the cut point.
 //!
+//! # SLO classes and block-boundary preemption
+//!
+//! Every request carries a service class ([`SloClass`]:
+//! `LatencySensitive`, `Throughput`, `Batch` — lower discriminant =
+//! higher priority) from the `/generate` JSON body through
+//! [`SeqParams::slo`] into its [`SeqState`]. The router's per-class
+//! priority queues and load-shedding live in `router/`; what this
+//! module contributes is **preemption at block boundaries**: when a
+//! higher-class request is waiting and no slot is free,
+//! [`GroupScheduler::preempt_victim`] lifts the lowest-priority seated
+//! sequence whose class is strictly below the waiter's — provided that
+//! victim sits at a block boundary (`i_b == 0`) — out of its slot,
+//! parking its complete decode state (the [`SeqState`], including its
+//! private sampling stream, plus its token row) beside the pooled
+//! chains, and resets the slot for the preemptor.
+//! [`GroupScheduler::resume_victim`] reseats the highest-priority
+//! parked victim into a free slot when pressure drops. Both moves are
+//! trajectory-exact for the same reason a batch-class switch is: at a
+//! block boundary the sequence's next plan is the grounding prefill,
+//! which regenerates its device rows and logits/conf mirrors from the
+//! host token mirror, and every cache merge is row-filtered, so
+//! neither the preemptor's arrival nor the victim's departure and
+//! return perturbs any trajectory — a preempted-then-resumed sequence
+//! decodes token-identically to an unpreempted run (asserted in the
+//! scheduler tests and `tests/slo_serving.rs`, over the sim and the
+//! PJRT-planner call sequence alike). A parked victim whose
+//! `timeout_ms` deadline expires before a slot frees is shed at
+//! resume time with the same structured `timeout:` error a seated
+//! overdue sequence gets — parked state never strands a client.
+//! Preemption events land in the shared pool ledger
+//! ([`crate::runtime::resident::PoolStats`]) via
+//! [`StepBackend::note_preempt`].
+//!
 //! [`tick`]: GroupScheduler::tick
 //!
 //! One documented exception: the experimental adaptive skip-ratio mode
@@ -175,13 +208,64 @@ use crate::fault::{FaultInjector, FaultKind, PoisonedChain};
 use crate::manifest::{ArchSpec, Dims, ExeKind};
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
-    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, PrefixCache, PrefixStats,
-    ResidencyPool, SyncOutcome, TransferStats, UploadHandle,
+    chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, PreemptEvent, PrefixCache,
+    PrefixStats, ResidencyPool, SyncOutcome, TransferStats, UploadHandle,
 };
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{ExecArg, Runtime};
 use crate::sampler::{decide_unmask_with, SamplerCfg, SamplerScratch, UnmaskInput};
 use crate::tokenizer::Tokenizer;
+
+/// Service-level class of a request, carried from the `/generate` JSON
+/// body (`"slo"`) through [`SeqParams`] into the router's priority
+/// queues and the scheduler's preemption decisions. Lower discriminant
+/// = higher priority, so the derived `Ord` ranks classes directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SloClass {
+    /// interactive traffic: jumps every queue, may preempt a seated
+    /// lower-class sequence at a block boundary
+    LatencySensitive = 0,
+    /// the default class: ordinary traffic, preemptible by
+    /// latency-sensitive arrivals
+    #[default]
+    Throughput = 1,
+    /// offline/bulk traffic: first to be load-shed under overload,
+    /// first to be preempted
+    Batch = 2,
+}
+
+impl SloClass {
+    /// Number of classes (sizes the per-class metric arrays).
+    pub const COUNT: usize = 3;
+    /// Every class, in priority order.
+    pub const ALL: [SloClass; SloClass::COUNT] =
+        [SloClass::LatencySensitive, SloClass::Throughput, SloClass::Batch];
+
+    /// Parse the `/generate` JSON field. Accepts the canonical names
+    /// plus the common short form for the interactive class.
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "latency_sensitive" | "latency" => Some(SloClass::LatencySensitive),
+            "throughput" => Some(SloClass::Throughput),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (metric labels, error messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::LatencySensitive => "latency_sensitive",
+            SloClass::Throughput => "throughput",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Index into per-class arrays (priority order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
 
 /// Per-request generation parameters carried from the `/generate` JSON
 /// body into the sequence state machine. `None` means "use the server
@@ -198,8 +282,12 @@ pub struct SeqParams {
     /// per-request deadline, measured from submission. An overdue
     /// sequence retires at its next block boundary with a structured
     /// `timeout:` error instead of its text (the server maps it to 504,
-    /// never a blanket 500).
+    /// never a blanket 500); a request already overdue at admission is
+    /// shed before its grounding prefill is ever scheduled.
     pub timeout_ms: Option<u64>,
+    /// service class (priority-queue lane, shed order, preemption
+    /// rank); defaults to [`SloClass::Throughput`]
+    pub slo: SloClass,
 }
 
 /// A sequence waiting to enter a slot.
@@ -236,6 +324,12 @@ pub struct SeqState {
     /// per-request deadline measured from `submitted` (see
     /// [`SeqParams::timeout_ms`])
     pub timeout_ms: Option<u64>,
+    /// service class (drives preemption eligibility: a seated sequence
+    /// is preemptible by any strictly-higher-class waiter)
+    pub slo: SloClass,
+    /// when the first token committed to this sequence's mirror (TTFT
+    /// numerator; `None` until the first unmask decision lands)
+    pub first_commit: Option<Instant>,
 }
 
 /// A retired sequence with its true per-request statistics (these
@@ -262,6 +356,12 @@ pub struct FinishedSeq {
     /// retired without a usable completion and the router must deliver
     /// this message instead of `text`
     pub error: Option<String>,
+    /// service class (routes the latency observations into the
+    /// per-class TTFT/TPOT histograms)
+    pub slo: SloClass,
+    /// submission → first committed token (time-to-first-token; `None`
+    /// when the sequence retired before any commit)
+    pub ttft_s: Option<f64>,
 }
 
 /// Per-slot commit transcript of a fused run: for each member of the
@@ -348,6 +448,11 @@ pub trait StepBackend {
     }
     /// Count one batch-class switch in the pool ledger.
     fn note_chain_switch(&self) {}
+    /// Record a preemption-ledger event (victim parked / resumed /
+    /// dropped) in the shared residency pool — the parked-victim slot
+    /// state lives beside the pooled chains in that ledger. No-op for
+    /// backends without a pool.
+    fn note_preempt(&self, _ev: PreemptEvent) {}
     /// Cumulative residency-pool ledger (zeros for backends without one).
     fn pool_stats(&self) -> PoolStats {
         PoolStats::default()
@@ -480,6 +585,28 @@ impl ClassState {
     }
 }
 
+/// A preempted sequence parked off its slot: the complete decode state
+/// — [`SeqState`] (including the private sampling stream) plus the
+/// token row. Parked only at a block boundary, so reseating the row
+/// and letting the grounding prefill regenerate the device state is
+/// trajectory-exact (see the module docs).
+struct ParkedVictim {
+    seq: SeqState,
+    row: Vec<i32>,
+}
+
+/// Outcome of a [`GroupScheduler::resume_victim`] attempt.
+#[derive(Debug)]
+pub enum ResumeOutcome {
+    /// the victim was reseated into a free slot (its id)
+    Seated(u64),
+    /// the victim's deadline expired while parked: it retires here with
+    /// a structured `timeout:` error instead of ever re-occupying a slot
+    Shed(FinishedSeq),
+    /// nothing parked, or no free slot
+    None,
+}
+
 /// Fixed-slot group scheduler: the continuous-batching core, now over a
 /// set of batch classes with pooled device residency (see the module
 /// docs).
@@ -509,6 +636,10 @@ pub struct GroupScheduler<'a> {
     demand_ewma: f64,
     /// demand evaluations left in the post-switch hold window
     hold_left: usize,
+    /// sequences preempted off their slots at block boundaries, waiting
+    /// for pressure to drop (highest-priority, then oldest, resumes
+    /// first)
+    parked_victims: Vec<ParkedVictim>,
 }
 
 impl<'a> GroupScheduler<'a> {
@@ -556,6 +687,7 @@ impl<'a> GroupScheduler<'a> {
             n_fused: 0,
             demand_ewma: 0.0,
             hold_left: 0,
+            parked_victims: Vec::new(),
         })
     }
 
@@ -609,6 +741,128 @@ impl<'a> GroupScheduler<'a> {
     /// Ids of the currently resident sequences (for error draining).
     pub fn active_ids(&self) -> Vec<u64> {
         self.states[self.active_class].slots.iter().flatten().map(|s| s.id).collect()
+    }
+
+    /// Number of preempted sequences parked off their slots.
+    pub fn parked(&self) -> usize {
+        self.parked_victims.len()
+    }
+
+    /// Ids of the parked victims (error draining must cover them too —
+    /// a parked sequence still has a client waiting on its reply).
+    pub fn parked_ids(&self) -> Vec<u64> {
+        self.parked_victims.iter().map(|v| v.seq.id).collect()
+    }
+
+    /// Service class of the best (highest-priority) parked victim.
+    pub fn best_parked_class(&self) -> Option<SloClass> {
+        self.parked_victims.iter().map(|v| v.seq.slo).min()
+    }
+
+    /// Preempt one seated sequence on behalf of a waiter of class
+    /// `waiter`: the victim must be of a strictly lower class and must
+    /// sit at a block boundary (`i_b == 0` — the only trajectory-exact
+    /// cut point; a mid-block victim is simply not eligible this tick).
+    /// Among eligible victims the lowest class goes first, oldest last
+    /// (LIFO within a class: the youngest did the least work). The
+    /// victim's complete decode state parks beside the pooled chains
+    /// and its slot is reset for the preemptor; resuming later replays
+    /// nothing — the grounding prefill regenerates its device rows from
+    /// the parked token mirror. Returns the victim's id, or `None` when
+    /// no seated sequence is eligible.
+    pub fn preempt_victim(&mut self, waiter: SloClass) -> Option<u64> {
+        let ac = self.active_class;
+        let d = *self.backend.dims();
+        let slot = {
+            let st = &self.states[ac];
+            (0..st.batch)
+                .filter(|&s| {
+                    st.slots[s]
+                        .as_ref()
+                        .is_some_and(|seq| seq.slo > waiter && seq.i_b == 0)
+                })
+                .max_by_key(|&s| {
+                    let seq = st.slots[s].as_ref().unwrap();
+                    (seq.slo, seq.admitted)
+                })?
+        };
+        let st = &mut self.states[ac];
+        let seq = st.slots[slot].take().unwrap();
+        debug_assert_eq!(seq.i_b, 0, "preemption off a block boundary");
+        let row = st.tokens[slot * d.ctx..(slot + 1) * d.ctx].to_vec();
+        st.caches.reset_slot(slot);
+        let id = seq.id;
+        self.parked_victims.push(ParkedVictim { seq, row });
+        self.backend.note_preempt(PreemptEvent::Parked);
+        Some(id)
+    }
+
+    /// Reseat the best parked victim (highest class, then oldest) into
+    /// a free slot of the active class. A victim whose deadline expired
+    /// while parked is shed instead — returned as
+    /// [`ResumeOutcome::Shed`] with the structured `timeout:` error a
+    /// seated overdue sequence would get, so parked state never
+    /// strands a client. The reseated sequence's next plan is its
+    /// grounding prefill (`i_b == 0`), regenerating device state from
+    /// the parked token mirror — trajectory-exact by the same argument
+    /// as a batch-class switch.
+    pub fn resume_victim(&mut self) -> ResumeOutcome {
+        if self.parked_victims.is_empty() {
+            return ResumeOutcome::None;
+        }
+        let best = self
+            .parked_victims
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, v)| (v.seq.slo, v.seq.admitted))
+            .map(|(i, _)| i)
+            .unwrap();
+        // shed an expired victim without consuming a slot
+        let expired = {
+            let seq = &self.parked_victims[best].seq;
+            seq.timeout_ms
+                .is_some_and(|ms| seq.submitted.elapsed().as_millis() as u64 >= ms)
+        };
+        let d = *self.backend.dims();
+        if expired {
+            let ParkedVictim { seq, row } = self.parked_victims.remove(best);
+            self.backend.note_preempt(PreemptEvent::Dropped);
+            let gen_row = &row[d.prompt_len..];
+            let mask = self.backend.tokenizer().mask;
+            let tokens_out = gen_row[..seq.gen_len].iter().filter(|&&t| t != mask).count();
+            let text = self.backend.tokenizer().decode(&gen_row[..seq.gen_len]);
+            return ResumeOutcome::Shed(FinishedSeq {
+                id: seq.id,
+                text,
+                iterations: seq.iters,
+                tokens: tokens_out,
+                n_prefill: seq.n_prefill,
+                n_dual: seq.n_dual,
+                n_es: seq.n_es,
+                queue_s: seq.admitted.duration_since(seq.submitted).as_secs_f64(),
+                gen_s: seq.admitted.elapsed().as_secs_f64(),
+                error: Some(format!(
+                    "timeout: exceeded {} ms after {} of {} positions (preempted)",
+                    seq.timeout_ms.unwrap_or(0),
+                    tokens_out,
+                    seq.gen_len
+                )),
+                slo: seq.slo,
+                ttft_s: seq.first_commit.map(|t| t.duration_since(seq.submitted).as_secs_f64()),
+            });
+        }
+        let ac = self.active_class;
+        let Some(slot) = self.states[ac].slots.iter().position(|s| s.is_none()) else {
+            return ResumeOutcome::None;
+        };
+        let ParkedVictim { seq, row } = self.parked_victims.remove(best);
+        let st = &mut self.states[ac];
+        st.tokens[slot * d.ctx..(slot + 1) * d.ctx].copy_from_slice(&row);
+        st.caches.reset_slot(slot);
+        let id = seq.id;
+        st.slots[slot] = Some(seq);
+        self.backend.note_preempt(PreemptEvent::Resumed);
+        ResumeOutcome::Seated(id)
     }
 
     /// True when every resident sequence sits at a block boundary
@@ -754,6 +1008,10 @@ impl<'a> GroupScheduler<'a> {
     /// promise: a sequence admitted later must re-seed (or re-ground on
     /// device) rather than step against the evicted group's stale rows.
     pub fn evict_all(&mut self) {
+        for _ in 0..self.parked_victims.len() {
+            self.backend.note_preempt(PreemptEvent::Dropped);
+        }
+        self.parked_victims.clear();
         for st in self.states.iter_mut() {
             for s in st.slots.iter_mut() {
                 *s = None;
@@ -848,6 +1106,8 @@ impl<'a> GroupScheduler<'a> {
             submitted: input.submitted,
             admitted: Instant::now(),
             timeout_ms: input.params.timeout_ms,
+            slo: input.params.slo,
+            first_commit: None,
         });
         Ok(slot)
     }
@@ -1097,6 +1357,9 @@ impl<'a> GroupScheduler<'a> {
                     let seq = st.slots[s].as_mut().unwrap();
                     seq.iters += 1;
                     seq.i_b += 1;
+                    if seq.first_commit.is_none() {
+                        seq.first_commit = Some(Instant::now());
+                    }
                 }
                 continue;
             }
@@ -1118,12 +1381,16 @@ impl<'a> GroupScheduler<'a> {
                     let seq = st.slots[s].as_mut().unwrap();
                     decide_unmask_with(&seq.sampler, &inp, &mut seq.rng, &mut self.scratch)
                 };
+                let committed = !decision.positions.is_empty();
                 for (p, t) in decision.positions.iter().zip(&decision.tokens) {
                     self.states[ac].tokens[s * d.ctx + d.prompt_len + p] = *t;
                 }
                 let seq = self.states[ac].slots[s].as_mut().unwrap();
                 seq.iters += 1;
                 seq.i_b += 1;
+                if committed && seq.first_commit.is_none() {
+                    seq.first_commit = Some(Instant::now());
+                }
             }
         }
 
@@ -1203,6 +1470,10 @@ impl<'a> GroupScheduler<'a> {
                     queue_s: seq.admitted.duration_since(seq.submitted).as_secs_f64(),
                     gen_s: seq.admitted.elapsed().as_secs_f64(),
                     error,
+                    slo: seq.slo,
+                    ttft_s: seq
+                        .first_commit
+                        .map(|t| t.duration_since(seq.submitted).as_secs_f64()),
                 });
             }
         }
@@ -1792,6 +2063,10 @@ impl StepBackend for PjrtBackend<'_> {
 
     fn note_chain_switch(&self) {
         self.pool.record_switch();
+    }
+
+    fn note_preempt(&self, ev: PreemptEvent) {
+        self.pool.note_victim(ev);
     }
 
     fn pool_stats(&self) -> PoolStats {
@@ -2859,5 +3134,95 @@ mod tests {
         assert!(!seq_complete(&[5, 1, 2, 1], mask, eos), "mask before EOS");
         assert!(seq_complete(&[5, 6, 7, 8], mask, eos), "fully unmasked");
         assert!(!seq_complete(&[5, 6, 7, 1], mask, eos), "still masked, no EOS");
+    }
+
+    #[test]
+    fn preempted_then_resumed_sequence_is_trajectory_exact() {
+        // baseline: the victim alone, never preempted
+        let mut solo = sched(1, Method::EsDllm, 4);
+        solo.admit(input(1, "abcdefgh", SeqParams::default())).unwrap();
+        let base = run_to_drain(&mut solo);
+        assert_eq!(base.len(), 1);
+
+        // preempted run: decode to the first block boundary, park the
+        // victim for a latency-sensitive request, serve that to
+        // completion in the freed slot, resume, drain
+        let mut s = sched(1, Method::EsDllm, 4);
+        s.admit(input(1, "abcdefgh", SeqParams::default())).unwrap();
+        for _ in 0..4 {
+            assert!(s.tick().unwrap().is_empty(), "two blocks of work remain");
+        }
+        assert!(s.at_block_boundary());
+        // an equal- or lower-class waiter preempts nobody
+        assert!(s.preempt_victim(SloClass::Throughput).is_none());
+        assert!(s.preempt_victim(SloClass::Batch).is_none());
+        assert_eq!(s.preempt_victim(SloClass::LatencySensitive), Some(1));
+        assert_eq!(s.active(), 0);
+        assert_eq!(s.parked(), 1);
+        assert_eq!(s.parked_ids(), vec![1]);
+        assert_eq!(s.best_parked_class(), Some(SloClass::Throughput));
+
+        let ls = SeqParams { slo: SloClass::LatencySensitive, ..Default::default() };
+        s.admit(input(2, "xy", ls)).unwrap();
+        let served = run_to_drain(&mut s);
+        assert_eq!(served.len(), 1);
+        assert_eq!(served[0].id, 2);
+        assert_eq!(served[0].text, "xy");
+
+        match s.resume_victim() {
+            ResumeOutcome::Seated(id) => assert_eq!(id, 1),
+            other => panic!("expected Seated, got {other:?}"),
+        }
+        assert_eq!(s.parked(), 0);
+        let done = run_to_drain(&mut s);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].text, base[0].text, "park/resume must not change output");
+        assert_eq!(done[0].tokens, base[0].tokens);
+        assert_eq!(done[0].iterations, base[0].iterations);
+    }
+
+    #[test]
+    fn preemption_refuses_a_mid_block_victim() {
+        let mut s = sched(1, Method::EsDllm, 4);
+        s.admit(input(1, "abcdefgh", SeqParams::default())).unwrap();
+        s.tick().unwrap();
+        assert!(!s.at_block_boundary(), "one tick in = mid-block");
+        assert!(
+            s.preempt_victim(SloClass::LatencySensitive).is_none(),
+            "a mid-block victim is not a trajectory-exact cut point"
+        );
+        // at the boundary the same victim becomes eligible
+        for _ in 0..3 {
+            s.tick().unwrap();
+        }
+        assert!(s.at_block_boundary());
+        assert_eq!(s.preempt_victim(SloClass::LatencySensitive), Some(1));
+        s.evict_all();
+        assert_eq!(s.parked(), 0, "eviction covers the parked victim");
+    }
+
+    #[test]
+    fn parked_victim_past_deadline_is_shed_on_resume() {
+        let mut s = sched(1, Method::EsDllm, 4);
+        let params = SeqParams { timeout_ms: Some(30), ..Default::default() };
+        s.admit(input(5, "abcdefgh", params)).unwrap();
+        for _ in 0..4 {
+            s.tick().unwrap();
+        }
+        assert_eq!(s.preempt_victim(SloClass::LatencySensitive), Some(5));
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        match s.resume_victim() {
+            ResumeOutcome::Shed(f) => {
+                assert_eq!(f.id, 5);
+                let err = f.error.expect("structured error");
+                assert!(err.starts_with("timeout:"), "{err}");
+                assert!(err.contains("(preempted)"), "{err}");
+                assert_eq!(f.slo, SloClass::Throughput);
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(s.parked(), 0);
+        assert!(matches!(s.resume_victim(), ResumeOutcome::None));
     }
 }

@@ -677,6 +677,10 @@ impl StepBackend for SimBackend {
         self.pool.record_switch();
     }
 
+    fn note_preempt(&self, ev: crate::runtime::resident::PreemptEvent) {
+        self.pool.note_victim(ev);
+    }
+
     fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
     }

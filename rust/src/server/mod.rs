@@ -9,9 +9,7 @@
 //! ```
 //!
 //! and replies with true per-request statistics (iterations, queue and
-//! generation time, emitted tokens). Backpressure: a full request queue
-//! answers 503 Service Unavailable; invalid per-request parameters
-//! answer 400.
+//! generation time, emitted tokens).
 //!
 //! Accepted `/generate` parameters:
 //!
@@ -21,21 +19,46 @@
 //!   * `temperature` (float) — sampling temperature; `0.0` is greedy.
 //!   * `threshold` (float) — parallel-unmask confidence threshold;
 //!     omit for one-token-per-iteration low-confidence decoding.
-//!   * `timeout_ms` (int, ≥ 1) — per-request deadline. An overdue
-//!     sequence is retired at its next block boundary with a structured
-//!     timeout error (HTTP 504, counted in `esdllm_timeouts_total`) —
-//!     never a 500, and never mid-block. A sequence that *completes* at
-//!     the same boundary delivers its result even if overdue.
+//!   * `timeout_ms` (int, ≥ 1) — per-request deadline, measured from
+//!     submission (queue time included). A request whose budget already
+//!     burned away while queued is shed at admission, before any
+//!     prefill; an overdue in-flight sequence is retired at its next
+//!     block boundary. Both answer the structured timeout error (HTTP
+//!     504, counted in `esdllm_timeouts_total`) — never a 500, and
+//!     never mid-block. A sequence that *completes* at the same
+//!     boundary delivers its result even if overdue.
+//!   * `slo` (string) — service class: `"latency_sensitive"` (or
+//!     `"latency"`), `"throughput"` (the default), or `"batch"`. The
+//!     class picks the priority-queue lane, the load-shed order under
+//!     overload (lowest class first), and preemption rank: a
+//!     latency-sensitive arrival may preempt a seated lower-class
+//!     sequence at a block boundary — the victim parks trajectory-exact
+//!     and resumes when pressure drops (see [`crate::router`]).
+//!     A present-but-unknown class is a 400, not a silent default.
 //!
 //! # Error taxonomy
 //!
 //! Worker-side failures map onto distinct statuses so clients can tell
-//! what to do next: 400 for invalid parameters (fix the request), 503
-//! for backpressure (retry later), 504 for a deadline overrun (the
-//! request was valid but slow), and 500 only for engine faults that
-//! exhausted the router's recovery ladder — transient injected or
-//! device faults are retried and re-grounded transparently (see
-//! [`crate::router`]) and never surface here.
+//! what to do next:
+//!
+//!   * **400** — invalid parameters (`bad request:`): fix the request.
+//!   * **429** — `overloaded:`: the bounded queue is full and the
+//!     SLO-aware overload controller shed this request (it outranked
+//!     nothing queued) or a queued lower-class victim. Back off and
+//!     retry; counted in `esdllm_shed_total`.
+//!   * **503** — plain queue-full backpressure under the FIFO baseline
+//!     policy (no shedding there), or router shutdown.
+//!   * **504** — `timeout:`: the deadline passed, either while queued
+//!     (shed at admission), in flight (retired at a block boundary), or
+//!     parked as a preemption victim.
+//!   * **500** — engine faults that exhausted the router's recovery
+//!     ladder — transient injected or device faults are retried and
+//!     re-grounded transparently (see [`crate::router`]) and never
+//!     surface here — and the handler's own reply bound:
+//!     [`ServeCfg::reply_timeout_ms`] caps how long a connection waits
+//!     on its oneshot ([`crate::router::OneShot::wait_timeout`]), so a
+//!     wedged worker yields a structured `engine worker unresponsive`
+//!     error instead of hanging the client forever.
 //!
 //! There is deliberately NO per-request fused-`k` parameter: the fused
 //! k-step dispatch depth is a server-level deployment knob
@@ -57,34 +80,46 @@
 //! `esdllm_avg_iters_per_fused_dispatch`.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::httpd::{Handler, Request, Response, Server};
 use crate::json::{self, Json};
 use crate::router::Router;
-use crate::scheduler::SeqParams;
+use crate::scheduler::{SeqParams, SloClass};
 
 pub struct ServeCfg {
     pub bind: String,
     pub http_threads: usize,
+    /// Upper bound on how long a `/generate` connection waits for its
+    /// reply oneshot. A wedged worker (deadlocked backend, dead thread)
+    /// then yields a structured 500 instead of hanging the client
+    /// forever. Generous by default — ten minutes — because a legitimate
+    /// batch-class request can sit parked or queued for a long time.
+    pub reply_timeout_ms: u64,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { bind: "127.0.0.1:0".into(), http_threads: 4 }
+        ServeCfg {
+            bind: "127.0.0.1:0".into(),
+            http_threads: 4,
+            reply_timeout_ms: 600_000,
+        }
     }
 }
 
 /// Start the HTTP server over an already-running router.
 pub fn serve(cfg: &ServeCfg, router: Router) -> std::io::Result<Server> {
-    let handler: Handler = Arc::new(move |req: &Request| route(req, &router));
+    let reply_timeout = Duration::from_millis(cfg.reply_timeout_ms.max(1));
+    let handler: Handler = Arc::new(move |req: &Request| route(req, &router, reply_timeout));
     Server::start(&cfg.bind, cfg.http_threads, handler)
 }
 
-fn route(req: &Request, router: &Router) -> Response {
+fn route(req: &Request, router: &Router, reply_timeout: Duration) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::text(200, "ok"),
         ("GET", "/metrics") => Response::text(200, router.metrics.render()),
-        ("POST", "/generate") => generate(req, router),
+        ("POST", "/generate") => generate(req, router, reply_timeout),
         _ => Response::not_found(),
     }
 }
@@ -129,7 +164,17 @@ fn opt_u64(body: &Json, key: &str) -> Result<Option<u64>, String> {
         .ok_or_else(|| format!("'{key}' must be a non-negative integer"))
 }
 
-fn generate(req: &Request, router: &Router) -> Response {
+fn opt_slo(body: &Json) -> Result<SloClass, String> {
+    let v = body.get("slo");
+    if v.is_null() {
+        return Ok(SloClass::default());
+    }
+    v.as_str().and_then(SloClass::parse).ok_or_else(|| {
+        "'slo' must be \"latency_sensitive\", \"throughput\", or \"batch\"".to_string()
+    })
+}
+
+fn generate(req: &Request, router: &Router, reply_timeout: Duration) -> Response {
     let body = match Json::parse(req.body_str()) {
         Ok(b) => b,
         Err(e) => return error_response(400, format!("bad json: {e}")),
@@ -144,6 +189,7 @@ fn generate(req: &Request, router: &Router) -> Response {
             temperature: opt_f32(&body, "temperature")?,
             parallel_threshold: opt_f32(&body, "threshold")?,
             timeout_ms: opt_u64(&body, "timeout_ms")?,
+            slo: opt_slo(&body)?,
         })
     };
     let params = match parse_params() {
@@ -152,10 +198,16 @@ fn generate(req: &Request, router: &Router) -> Response {
     };
     let slot = match router.try_submit(prompt, params) {
         Ok(s) => s,
-        // backpressure: the bounded queue is full
+        // plain queue-full backpressure (FIFO policy) or shutdown; the
+        // SLO-aware policy answers overload through the oneshot instead
         Err(()) => return error_response(503, "queue full"),
     };
-    match slot.wait() {
+    // bounded wait: a wedged worker yields a structured error, never a
+    // hung connection (replies normally arrive long before this bound)
+    let Some(outcome) = slot.wait_timeout(reply_timeout) else {
+        return error_response(500, "engine worker unresponsive: reply timed out");
+    };
+    match outcome {
         Ok(reply) => Response::json(
             200,
             json::obj(vec![
@@ -171,6 +223,8 @@ fn generate(req: &Request, router: &Router) -> Response {
         Err(e) if e.starts_with("bad request:") => error_response(400, e),
         // deadline overruns are a structured gateway-timeout, not a 500
         Err(e) if e.starts_with("timeout:") => error_response(504, e),
+        // SLO-aware load shedding: explicit too-many-requests
+        Err(e) if e.starts_with("overloaded:") => error_response(429, e),
         Err(e) => error_response(500, e),
     }
 }
@@ -195,36 +249,34 @@ mod tests {
         Router::start(cfg)
     }
 
-    #[test]
-    fn bad_json_is_400() {
-        let router = sim_router();
+    fn post(router: &Router, body: &[u8]) -> Response {
         let req = Request {
             method: "POST".into(),
             path: "/generate".into(),
             headers: vec![],
-            body: b"not-json".to_vec(),
+            body: body.to_vec(),
         };
-        assert_eq!(route(&req, &router).status, 400);
+        route(&req, router, Duration::from_secs(60))
+    }
+
+    #[test]
+    fn bad_json_is_400() {
+        let router = sim_router();
+        assert_eq!(post(&router, b"not-json").status, 400);
         let req2 = Request {
             method: "GET".into(),
             path: "/healthz".into(),
             headers: vec![],
             body: vec![],
         };
-        assert_eq!(route(&req2, &router).status, 200);
+        assert_eq!(route(&req2, &router, Duration::from_secs(60)).status, 200);
         router.shutdown();
     }
 
     #[test]
     fn generate_round_trip_with_params() {
         let router = sim_router();
-        let req = Request {
-            method: "POST".into(),
-            path: "/generate".into(),
-            headers: vec![],
-            body: br#"{"prompt": "7*6=42", "gen_len": 8}"#.to_vec(),
-        };
-        let resp = route(&req, &router);
+        let resp = post(&router, br#"{"prompt": "7*6=42", "gen_len": 8}"#);
         assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("text").as_str(), Some("7*6=42"));
@@ -246,25 +298,13 @@ mod tests {
         cfg.queue_cap = 4;
         cfg.mode = SchedMode::Continuous;
         let router = Router::start(cfg);
-        let req = Request {
-            method: "POST".into(),
-            path: "/generate".into(),
-            headers: vec![],
-            body: br#"{"prompt": "abcdefgh", "timeout_ms": 1}"#.to_vec(),
-        };
-        let resp = route(&req, &router);
+        let resp = post(&router, br#"{"prompt": "abcdefgh", "timeout_ms": 1}"#);
         assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert!(j.get("error").as_str().unwrap().starts_with("timeout:"));
         assert_eq!(router.metrics.timeouts_total.get(), 1);
         // timeout_ms = 0 can never be met: a client error, not a 504
-        let req = Request {
-            method: "POST".into(),
-            path: "/generate".into(),
-            headers: vec![],
-            body: br#"{"prompt": "ab", "timeout_ms": 0}"#.to_vec(),
-        };
-        assert_eq!(route(&req, &router).status, 400);
+        assert_eq!(post(&router, br#"{"prompt": "ab", "timeout_ms": 0}"#).status, 400);
         router.shutdown();
     }
 
@@ -272,28 +312,101 @@ mod tests {
     fn invalid_gen_len_is_400() {
         let router = sim_router();
         // integer but not a block multiple → rejected by the scheduler
-        let req = Request {
-            method: "POST".into(),
-            path: "/generate".into(),
-            headers: vec![],
-            body: br#"{"prompt": "1+1=", "gen_len": 3}"#.to_vec(),
-        };
-        assert_eq!(route(&req, &router).status, 400);
+        assert_eq!(post(&router, br#"{"prompt": "1+1=", "gen_len": 3}"#).status, 400);
         // present but malformed must be 400, not a silent default
         for body in [
             br#"{"prompt": "1+1=", "gen_len": -8}"#.as_slice(),
             br#"{"prompt": "1+1=", "gen_len": 8.5}"#.as_slice(),
             br#"{"prompt": "1+1=", "temperature": "hot"}"#.as_slice(),
         ] {
-            let req = Request {
-                method: "POST".into(),
-                path: "/generate".into(),
-                headers: vec![],
-                body: body.to_vec(),
-            };
-            let resp = route(&req, &router);
+            let resp = post(&router, body);
             assert_eq!(resp.status, 400, "{}", String::from_utf8_lossy(&resp.body));
         }
+        router.shutdown();
+    }
+
+    #[test]
+    fn slo_class_field_round_trips_and_validates() {
+        let router = sim_router();
+        // every accepted spelling serves normally
+        for body in [
+            br#"{"prompt": "ab", "slo": "latency_sensitive"}"#.as_slice(),
+            br#"{"prompt": "ab", "slo": "latency"}"#.as_slice(),
+            br#"{"prompt": "ab", "slo": "throughput"}"#.as_slice(),
+            br#"{"prompt": "ab", "slo": "batch"}"#.as_slice(),
+        ] {
+            let resp = post(&router, body);
+            assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        }
+        // present-but-unknown is a client error, not a silent default
+        for body in [
+            br#"{"prompt": "ab", "slo": "urgent"}"#.as_slice(),
+            br#"{"prompt": "ab", "slo": 3}"#.as_slice(),
+        ] {
+            let resp = post(&router, body);
+            assert_eq!(resp.status, 400, "{}", String::from_utf8_lossy(&resp.body));
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn overload_shed_is_a_structured_429() {
+        // one slot + queue capacity one, slow sim: the first request
+        // holds the slot, the second fills the queue, and a third of the
+        // same class outranks nothing → the overload controller sheds it
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 1000, 1000));
+        cfg.batcher = BatcherCfg { max_batch: 1, flush_ms: 2 };
+        cfg.queue_cap = 1;
+        cfg.mode = SchedMode::Continuous;
+        let router = Router::start(cfg);
+        let r1 = router.clone();
+        let t1 = std::thread::spawn(move || post(&r1, br#"{"prompt": "abcdefgh"}"#));
+        std::thread::sleep(Duration::from_millis(10));
+        let r2 = router.clone();
+        let t2 = std::thread::spawn(move || post(&r2, br#"{"prompt": "cdef"}"#));
+        std::thread::sleep(Duration::from_millis(10));
+        let resp = post(&router, br#"{"prompt": "xy"}"#);
+        assert_eq!(resp.status, 429, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("error").as_str().unwrap().starts_with("overloaded:"));
+        assert!(router.metrics.shed_total.get() >= 1);
+        // the in-flight requests are unaffected by the shed
+        assert_eq!(t1.join().unwrap().status, 200);
+        assert_eq!(t2.join().unwrap().status, 200);
+        router.shutdown();
+    }
+
+    #[test]
+    fn wedged_worker_yields_a_structured_error_not_a_hang() {
+        // regression for OneShot::wait_timeout: with a reply bound far
+        // below the (slow) generation time, the handler must answer with
+        // a structured 500 instead of blocking the connection until the
+        // worker gets around to replying
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 1000, 1000));
+        cfg.batcher = BatcherCfg { max_batch: 1, flush_ms: 2 };
+        cfg.queue_cap = 4;
+        cfg.mode = SchedMode::Continuous;
+        let router = Router::start(cfg);
+        let req = Request {
+            method: "POST".into(),
+            path: "/generate".into(),
+            headers: vec![],
+            body: br#"{"prompt": "abcdefgh"}"#.to_vec(),
+        };
+        let t0 = std::time::Instant::now();
+        let resp = route(&req, &router, Duration::from_millis(5));
+        assert!(t0.elapsed() < Duration::from_secs(5), "bounded, not a hang");
+        assert_eq!(resp.status, 500, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(j.get("error").as_str().unwrap().contains("unresponsive"));
         router.shutdown();
     }
 }

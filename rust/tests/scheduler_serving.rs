@@ -9,7 +9,7 @@ use esdllm::batcher::BatcherCfg;
 use esdllm::engine::{EngineCfg, Method};
 use esdllm::httpd::Client;
 use esdllm::json::{self, Json};
-use esdllm::router::{Router, RouterCfg, SchedMode, WorkerBackend};
+use esdllm::router::{Router, RouterCfg, SchedMode, SloPolicy, WorkerBackend};
 use esdllm::scheduler::sim::SimCfg;
 use esdllm::server::{serve, ServeCfg};
 
@@ -18,7 +18,13 @@ struct Stack {
     server: esdllm::httpd::Server,
 }
 
-fn start_workers(slots: usize, queue_cap: usize, sim: SimCfg, workers: usize) -> Stack {
+fn start_policy(
+    slots: usize,
+    queue_cap: usize,
+    sim: SimCfg,
+    workers: usize,
+    policy: SloPolicy,
+) -> Stack {
     let mut cfg = RouterCfg::new(
         EngineCfg::new("llada-nano", Method::EsDllm),
         std::path::PathBuf::from("/nonexistent"),
@@ -28,9 +34,14 @@ fn start_workers(slots: usize, queue_cap: usize, sim: SimCfg, workers: usize) ->
     cfg.queue_cap = queue_cap;
     cfg.mode = SchedMode::Continuous;
     cfg.workers = workers;
+    cfg.policy = policy;
     let router = Router::start(cfg);
     let server = serve(&ServeCfg::default(), router.clone()).unwrap();
     Stack { router, server }
+}
+
+fn start_workers(slots: usize, queue_cap: usize, sim: SimCfg, workers: usize) -> Stack {
+    start_policy(slots, queue_cap, sim, workers, SloPolicy::SloAware)
 }
 
 fn start(slots: usize, queue_cap: usize, sim: SimCfg) -> Stack {
@@ -208,11 +219,12 @@ fn two_workers_serve_mid_flight_against_the_shared_pool() {
 
 #[test]
 fn queue_full_returns_503_backpressure() {
-    // One slot, one queue position, slow ticks: a burst must overflow
-    // the bounded queue and be answered 503 without stalling the
-    // requests that were accepted.
+    // One slot, one queue position, slow ticks: under the FIFO baseline
+    // policy a burst must overflow the bounded queue and be answered 503
+    // without stalling the requests that were accepted. (The default
+    // SLO-aware policy answers overload 429 instead — next test.)
     let sim = SimCfg::default().with_costs(20_000, 15_000, 10_000);
-    let stack = start(1, 1, sim);
+    let stack = start_policy(1, 1, sim, 1, SloPolicy::Fifo);
     let addr = stack.server.addr;
 
     let burst = 6;
@@ -238,5 +250,46 @@ fn queue_full_returns_503_backpressure() {
     let (_, m) = Client::new(addr).get("/metrics").unwrap();
     let m = String::from_utf8_lossy(&m);
     assert!(m.contains("esdllm_requests_rejected"), "{m}");
+    stack.router.shutdown();
+}
+
+#[test]
+fn slo_policy_answers_overload_with_structured_429() {
+    // Same overload geometry under the default SLO-aware policy: the
+    // overflow is shed with a structured `overloaded:` 429 through the
+    // oneshot — every submission gets a reply, nothing hangs, nothing
+    // silently drops.
+    let sim = SimCfg::default().with_costs(20_000, 15_000, 10_000);
+    let stack = start(1, 1, sim);
+    let addr = stack.server.addr;
+
+    let burst = 6;
+    let handles: Vec<_> = (0..burst)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut client = Client::new(addr);
+                post_generate(&mut client, r#"{"prompt": "0123456789+0123456789"}"#)
+            })
+        })
+        .collect();
+    let results: Vec<(u16, Json)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let statuses: Vec<u16> = results.iter().map(|(s, _)| *s).collect();
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let shed = statuses.iter().filter(|&&s| s == 429).count();
+    assert_eq!(ok + shed, burst, "only 200s and 429s expected: {statuses:?}");
+    assert!(ok >= 1, "at least the admitted request completes: {statuses:?}");
+    assert!(shed >= 1, "the overload controller shed part of the burst: {statuses:?}");
+    for (status, j) in &results {
+        if *status == 429 {
+            assert!(
+                j.get("error").as_str().unwrap_or("").starts_with("overloaded:"),
+                "shed replies carry the structured overload error"
+            );
+        }
+    }
+
+    let (_, m) = Client::new(addr).get("/metrics").unwrap();
+    let m = String::from_utf8_lossy(&m);
+    assert!(metric_value(&m, "esdllm_shed_total") >= 1, "{m}");
     stack.router.shutdown();
 }
