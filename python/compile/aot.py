@@ -32,6 +32,12 @@ from .xlc import lower_to_hlo_text
 CACHE_DT = "bf16"
 OBSERVE_PROBES = [2, 5, 7]   # paper layers 10/20/30 of 32 → nano 8-layer map
 SPARSE_KEEP_PROMPT = 24     # retention ratio 0.5 over the prompt region
+# live-context tiers (absolute kv lengths, prompt + live gen blocks):
+# the scheduler steps the batch class down these as the group's live
+# frontier shrinks, so attention/KV-scatter/confidence only cover live
+# rows. Every tier is a block-8 multiple past the prompt; the last tier
+# is the full compiled context (the untiered executables).
+CTX_TIER_GEN = (8, 16, 24)   # live gen lengths with dedicated variants
 
 
 def sds(shape, dt):
@@ -111,8 +117,8 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
     def kv_s(batch, t):
         return sds((L, 2, batch, Hkv, t, hd), jnp.bfloat16)
 
-    def ind_s(batch, n_ind):
-        return sds((n_ind, batch, gen, d), jnp.bfloat16)
+    def ind_s(batch, n_ind, g=gen):
+        return sds((n_ind, batch, g, d), jnp.bfloat16)
 
     # ---- prefill (vanilla step / cache init / every refresh) ----
     # The logit output is the gen-region slice (`logits_gen` [B, gen, V],
@@ -219,24 +225,37 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
         {"output": n, "input": n, "alias": True} for n in ("kv", "ind", "conf")
     ]
 
-    def prefill_apply_variant(batch):
+    def tier_meta(gen_live):
+        """Manifest fields of a live-context tier variant: gen_live < gen
+        marks a suffix-pruned executable whose chained state covers only
+        prompt + gen_live rows (kv_len = prompt + gen_live)."""
+        if gen_live == gen:
+            return {"kv_len": ctx}
+        return {"kv_len": cfg.prompt_len + gen_live, "gen_live": gen_live}
+
+    def tier_suffix(gen_live):
+        return "" if gen_live == gen else f"_ctx{cfg.prompt_len + gen_live}"
+
+    def prefill_apply_variant(batch, gen_live=gen):
+        t = cfg.prompt_len + gen_live
+
         def fn(params, tokens, kv_prev, ind_prev, conf_prev, refresh):
             return M.prefill_apply(cfg, params, tokens, kv_prev, ind_prev,
                                    conf_prev, refresh, indicator="h")
 
         b.lower(
-            f"prefill_apply_b{batch}",
+            f"prefill_apply_b{batch}{tier_suffix(gen_live)}",
             fn,
             [
-                sds((batch, ctx), jnp.int32),          # tokens
-                kv_s(batch, ctx),                      # kv (chained)
-                ind_s(batch, L),                       # ind "h" (chained)
-                sds((batch, gen), jnp.float32),        # conf (chained)
+                sds((batch, t), jnp.int32),            # tokens (live rows)
+                kv_s(batch, t),                        # kv (chained)
+                ind_s(batch, L, gen_live),             # ind "h" (chained)
+                sds((batch, gen_live), jnp.float32),   # conf (chained)
                 sds((batch,), jnp.int32),              # refresh mask
             ],
             {
                 "kind": "prefill_apply", "batch": batch, "block": None,
-                "skip": [], "indicator": "h", "kv_len": ctx,
+                "skip": [], "indicator": "h", **tier_meta(gen_live),
                 "retained_outputs": CHAINED,
                 "input_names": ["tokens", "kv", "ind", "conf", "refresh"],
                 # logits_gen, not logits: the output is the [B, gen, V]
@@ -247,15 +266,51 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             },
         )
 
-    def step_apply_variant(name, batch, block, skip):
+    def prefill_apply_blk_variant(batch, block, gen_live=gen):
+        t = cfg.prompt_len + gen_live
+
+        def fn(params, tokens, kv_prev, ind_prev, conf_prev, refresh,
+               blk_start, _block=block):
+            return M.prefill_apply_blk(cfg, params, tokens, kv_prev,
+                                       ind_prev, conf_prev, refresh,
+                                       blk_start, block=_block,
+                                       indicator="h")
+
+        b.lower(
+            f"prefill_apply_blk{block}_b{batch}{tier_suffix(gen_live)}",
+            fn,
+            [
+                sds((batch, t), jnp.int32),            # tokens (live rows)
+                kv_s(batch, t),                        # kv (chained)
+                ind_s(batch, L, gen_live),             # ind "h" (chained)
+                sds((batch, gen_live), jnp.float32),   # conf (chained)
+                sds((batch,), jnp.int32),              # refresh mask
+                sds((batch,), jnp.int32),              # per-slot blk start
+            ],
+            {
+                "kind": "prefill_apply", "batch": batch, "block": block,
+                "skip": [], "indicator": "h", **tier_meta(gen_live),
+                "retained_outputs": CHAINED,
+                "input_names": ["tokens", "kv", "ind", "conf", "refresh",
+                                "blk_start"],
+                # logits_blk: each slot's current [block, V] window only
+                # (gathered in-graph from the per-slot blk_start input) —
+                # block/gen of the logits_gen downlink per grounding
+                # prefill
+                "output_names": ["logits_blk", "kv", "ind", "conf"],
+            },
+        )
+
+    def step_apply_variant(name, batch, block, skip, gen_live=gen):
         skip_layers = sorted(l for l, _ in skip)
         ind_layers = skip_layers if skip else list(range(cfg.n_layers))
+        t = cfg.prompt_len + gen_live
 
         def fn(params, x_tok, block_start, kv, ind, conf, occ, alpha,
-               _skip=skip, _ind_layers=ind_layers, _block=block):
+               _skip=skip, _ind_layers=ind_layers, _block=block, _t=t):
             return M.step(cfg, params, x_tok, block_start, kv, ind, conf,
                           alpha, block=_block, skip=_skip, indicator="h",
-                          ind_layers=_ind_layers, kv_len=ctx, apply=True,
+                          ind_layers=_ind_layers, kv_len=_t, apply=True,
                           occ=occ)
 
         b.lower(
@@ -264,9 +319,9 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             [
                 sds((batch, block), jnp.int32),        # x_tok
                 sds((), jnp.int32),                    # block_start
-                kv_s(batch, ctx),                      # kv cache (chained)
-                ind_s(batch, L),                       # full ind (chained)
-                sds((batch, gen), jnp.float32),        # conf (chained)
+                kv_s(batch, t),                        # kv cache (chained)
+                ind_s(batch, L, gen_live),             # full ind (chained)
+                sds((batch, gen_live), jnp.float32),   # conf (chained)
                 sds((batch,), jnp.int32),              # occupancy mask
                 sds((), jnp.float32),                  # alpha
             ],
@@ -276,7 +331,7 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                 "skip_layers": skip_layers,
                 "ind_layers": ind_layers,
                 "final_keep": final_keep(block, skip),
-                "indicator": "h", "kv_len": ctx,
+                "indicator": "h", **tier_meta(gen_live),
                 "retained_outputs": CHAINED,
                 "input_names": ["x_tok", "block_start", "kv", "ind",
                                 "conf", "occ", "alpha"],
@@ -284,9 +339,10 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             },
         )
 
-    def step_applyk_variant(name, batch, block, skip, k):
+    def step_applyk_variant(name, batch, block, skip, k, gen_live=gen):
         skip_layers = sorted(l for l, _ in skip)
         ind_layers = skip_layers if skip else list(range(cfg.n_layers))
+        t = cfg.prompt_len + gen_live
 
         def fn(params, x_tok, block_start, kv, ind, conf, occ, alpha,
                threshold, tok_seed, _skip=skip, _ind_layers=ind_layers,
@@ -303,9 +359,9 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
             [
                 sds((batch, block), jnp.int32),        # x_tok
                 sds((), jnp.int32),                    # block_start
-                kv_s(batch, ctx),                      # kv cache (chained)
-                ind_s(batch, L),                       # full ind (chained)
-                sds((batch, gen), jnp.float32),        # conf (chained)
+                kv_s(batch, t),                        # kv cache (chained)
+                ind_s(batch, L, gen_live),             # full ind (chained)
+                sds((batch, gen_live), jnp.float32),   # conf (chained)
                 sds((batch,), jnp.int32),              # occupancy mask
                 sds((), jnp.float32),                  # alpha
                 sds((), jnp.float32),                  # threshold
@@ -318,7 +374,7 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                 "skip_layers": skip_layers,
                 "ind_layers": ind_layers,
                 "final_keep": final_keep(block, skip),
-                "indicator": "h", "kv_len": ctx,
+                "indicator": "h", **tier_meta(gen_live),
                 "retained_outputs": CHAINED,
                 "input_names": ["x_tok", "block_start", "kv", "ind",
                                 "conf", "occ", "alpha", "threshold",
@@ -351,6 +407,25 @@ def build_arch(cfg: ModelCfg, out_dir: str, force: bool, full: bool):
                                     batch, blk, default_skip, kk)
     for batch in (1, 8):
         prefill_apply_variant(batch)
+        prefill_apply_blk_variant(batch, 8)
+
+    # ---- live-context tier family: the same device-apply executables
+    # lowered at kv_len = prompt + gen_live for each tier, so a batch
+    # class whose live frontier has shrunk runs attention/scatter/conf
+    # over live rows only. Block-8 only (the live frontier moves in
+    # block-8 steps); fused variants at the serving batch. ----
+    for gl in CTX_TIER_GEN:
+        for batch in (1, 8):
+            prefill_apply_variant(batch, gen_live=gl)
+            prefill_apply_blk_variant(batch, 8, gen_live=gl)
+            sfx = tier_suffix(gl)
+            step_apply_variant(f"dual_apply_blk8_b{batch}{sfx}", batch, 8,
+                               [], gen_live=gl)
+            step_apply_variant(f"es_apply_blk8_b{batch}{sfx}", batch, 8,
+                               default_skip, gen_live=gl)
+        for kk in (2, 4, 8):
+            step_applyk_variant(f"es_applyk{kk}_blk8_b8{tier_suffix(gl)}",
+                                8, 8, default_skip, kk, gen_live=gl)
 
     # sparse-attention variants (pruned prompt KV)
     for blk in blk_cfgs:
@@ -406,6 +481,10 @@ def main():
             "eos": tasks.EOS, "bos": tasks.BOS,
             "sparse_keep_prompt": SPARSE_KEEP_PROMPT,
             "observe_probe_layers": OBSERVE_PROBES,
+            # live-context tiers (absolute kv lengths, ascending; the
+            # last tier is the full compiled context). The scheduler
+            # picks the smallest tier covering the group's live frontier.
+            "ctx_tiers": sorted(48 + g for g in CTX_TIER_GEN) + [80],
         },
         "archs": {},
     }

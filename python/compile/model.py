@@ -259,6 +259,32 @@ def prefill_apply(cfg: ModelCfg, params: Params, tokens, kv_prev, ind_prev,
     return gen_logits, kv_new, ind_new, conf_new
 
 
+def prefill_apply_blk(cfg: ModelCfg, params: Params, tokens, kv_prev,
+                      ind_prev, conf_prev, refresh, blk_start, *, block,
+                      indicator="h", use_pallas=True, kv_tile=64):
+    """Block-sliced device-apply prefill: identical cache/conf merge to
+    [`prefill_apply`], but the logit downlink is each slot's CURRENT
+    block window only — ``blk_start`` (i32 [B], gen-relative block start
+    per slot) gathers ``[B, block, V]`` rows in-graph instead of
+    shipping the whole gen region. The host sampler only ever reads the
+    refreshed slot's current block, so a grounding prefill pays
+    block/gen of the old logit downlink (4–8× at nano scale). Vacant
+    rows' blk_start are don't-cares (clamped in-graph).
+
+    Returns (logits_blk f32 [B, block, V], kv_new, ind_new, conf_new) —
+    the cache outputs are device-retained and chained exactly like
+    [`prefill_apply`]'s.
+    """
+    gen_logits, kv_new, ind_new, conf_new = prefill_apply(
+        cfg, params, tokens, kv_prev, ind_prev, conf_prev, refresh,
+        indicator=indicator, use_pallas=use_pallas, kv_tile=kv_tile)
+    gen_live = gen_logits.shape[1]
+    base = jnp.clip(blk_start, 0, gen_live - block)           # [B]
+    idx = base[:, None] + jnp.arange(block, dtype=jnp.int32)[None]
+    logits_blk = _gather_rows(gen_logits, idx)                # [B, blk, V]
+    return logits_blk, kv_new, ind_new, conf_new
+
+
 def _expand_kv(cfg, t):
     """[B, S, Hkv, hd] -> [B, S, d] by repeating kv heads to Hq (so K/V
     indicator tensors have the same [.., d] shape as hidden/Q)."""
@@ -294,19 +320,27 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
     kv_cache    bf16 [L, 2, B, Hkv, T, hd]   T = kv_len (ctx, or pruned)
     ind_cache   bf16 [n_ind, B, gen, d]      indicator tensor cache
                 (``apply=True``: the FULL per-name cache, n_ind = L)
-    conf        f32 [B, gen]         confidence from previous iterations
+    conf        f32 [B, gen_live]    confidence from previous iterations
                 (``apply=False``: occupancy-masked host-side;
-                ``apply=True``: raw — the mask is applied in-graph)
+                ``apply=True``: raw — the mask is applied in-graph).
+                The live gen length is read off this tensor's shape, so
+                the same code lowers the full-context executables
+                (gen_live = gen) and the suffix-pruned context tiers
+                (gen_live < gen: converged trailing blocks dropped from
+                the attention context, see ``kv_len`` below).
     alpha       f32 scalar           Eq. 1 mixing weight
     skip        [(layer, ratio)]     static skip spec; [] = DualCache
     ind_layers  layers whose indicator cache rows are maintained; defaults
                 to the skip layers. The DualCache/refresh variant passes
                 all layers (so any ES config sees fresh indicators after a
                 block refresh); skip layers must be a subset.
-    kv_len      cache length; when < ctx the cache is prompt-pruned
-                (sparse attention): retained prompt rows first, then the
-                full gen region, so cache row of absolute gen position p is
-                (kv_len - gen) + (p - prompt_len).
+    kv_len      cache length; when < prompt_len + gen_live the cache is
+                prompt-pruned (sparse attention): retained prompt rows
+                first, then the live gen region, so cache row of absolute
+                gen position p is (kv_len - gen_live) + (p - prompt_len).
+                A suffix-pruned context tier passes
+                kv_len = prompt_len + gen_live with the full prompt
+                retained — the same formula then maps gen rows 1:1.
     apply       device-apply mode: instead of returning the block slices
                 for a host-side scatter, scatter the updates into the full
                 cache tensors in-graph (dynamic-update-slice) and compute
@@ -329,7 +363,13 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
     """
     b = x_tok.shape[0]
     gen0 = cfg.prompt_len
-    kv_len = kv_len or cfg.ctx
+    # live gen length: the gen-region state arrays (conf, ind) are sized
+    # to the live context tier, not the compiled maximum — everything
+    # downstream indexes gen rows relative to gen0, so shrinking the
+    # arrays is all a tier variant needs
+    gen_live = conf.shape[1]
+    kv_len = kv_len or (gen0 + gen_live if gen_live < cfg.gen_len
+                        else cfg.ctx)
     skip_map = dict(skip)
     if ind_layers is None:
         ind_layers = sorted(skip_map)
@@ -343,8 +383,10 @@ def step(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
     attn = attention if use_pallas else attention_ref
     vnorm = varnorm if use_pallas else varnorm_ref
 
-    # cache row offset of the block inside the (possibly pruned) KV cache
-    cache_off = (kv_len - cfg.gen_len) - gen0 + block_start
+    # cache row offset of the block inside the (possibly pruned) KV
+    # cache: prompt-pruned sparse rows and suffix-pruned tiers both
+    # reduce to "non-gen rows first, then the live gen region"
+    cache_off = (kv_len - gen_live) - gen0 + block_start
 
     x = params.embed[x_tok]                                  # [B, blk, d]
     pos = block_start + jnp.arange(block, dtype=jnp.int32)
@@ -576,8 +618,8 @@ def step_k(cfg: ModelCfg, params: Params, x_tok, block_start, kv_cache,
         logits, pos, kv_cache, ind_cache, conf = step(
             cfg, params, x_tok, block_start, kv_cache, ind_cache, conf,
             alpha, block=block, skip=skip, indicator=indicator,
-            ind_layers=ind_layers, kv_len=cfg.ctx, use_pallas=use_pallas,
-            kv_tile=kv_tile, apply=True, occ=occ)
+            ind_layers=ind_layers, kv_len=kv_cache.shape[4],
+            use_pallas=use_pallas, kv_tile=kv_tile, apply=True, occ=occ)
         conf_blk = jax.lax.dynamic_slice_in_dim(
             conf, block_start - gen0, block, axis=1)
         x_tok, tok_hat, tok_noeos, n, g_rel, g_tok = _commit_unmask(

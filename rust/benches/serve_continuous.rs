@@ -54,6 +54,18 @@
 //! latency-sensitive p99 TTFT drops to ≤ 0.5× the FIFO baseline. Emits
 //! `artifacts/results/BENCH_slo.json`; runs artifact-free in CI.
 //!
+//! A sixth section exercises **live-context decoding** on a mixed
+//! gen-length trace (the workload generator draws a short / medium /
+//! unbounded `gen_len` tier per request): the identical trace runs with
+//! suffix pruning off and on. With pruning on, the scheduler sizes each
+//! dispatch to the group's live frontier (per-request `gen_len` caps
+//! it), prunes fully-decoded suffix blocks from the attention context
+//! at block boundaries, and retires trailing blocks early on the EOS
+//! guard. The acceptance gate is token-identical outputs, a non-zero
+//! pruning ledger, and ≥ 30% reduction in per-token attention FLOPs or
+//! uplink+downlink bytes. Emits `artifacts/results/BENCH_suffix.json`;
+//! runs artifact-free in CI.
+//!
 //! Run: `cargo bench --bench serve_continuous` (ESDLLM_BENCH_N overrides
 //! the request count).
 
@@ -665,6 +677,193 @@ fn slo_section(n: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+struct SuffixRun {
+    texts: Vec<String>,
+    completed: usize,
+    failed: usize,
+    wall_s: f64,
+    tokens: u64,
+    ticks: u64,
+    up_bytes: u64,
+    down_bytes: u64,
+    flops: u64,
+    live_rows: u64,
+    full_rows: u64,
+    pruned_blocks: u64,
+    retired_blocks: u64,
+    switches: u64,
+}
+
+/// One pass of the mixed gen-length trace through the continuous
+/// router, with live-context decoding on or off. The per-request
+/// `gen_len` tier drawn by the trace generator rides in on `SeqParams`,
+/// so short requests compile down to a 2-block frontier while the rare
+/// long pole walks the whole tier ladder.
+fn suffix_run(live: bool, trace: &[workload::TraceRequest]) -> SuffixRun {
+    let mut cfg = RouterCfg::new(engine_cfg(), std::path::PathBuf::from("/nonexistent"));
+    let sim = SimCfg::default();
+    let tiers = SimCfg::default_ctx_tiers(&sim.dims);
+    cfg.backend = WorkerBackend::Sim(sim.with_ctx_tiers(&tiers).with_costs(8000, 1500, 1000));
+    cfg.batcher = BatcherCfg { max_batch: SLOTS, flush_ms: 5 };
+    cfg.queue_cap = 1024;
+    cfg.mode = SchedMode::Continuous;
+    cfg.live_ctx = live;
+    let router = Router::start(cfg);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(trace.len());
+    let mut i = 0usize;
+    workload::replay_trace(trace, |req| {
+        let params = SeqParams { gen_len: req.gen_len, ..Default::default() };
+        if let Ok(h) = router.submit(prompt_for(i), params) {
+            handles.push(h);
+        }
+        i += 1;
+    });
+    let mut texts = Vec::with_capacity(handles.len());
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        match h.wait() {
+            Ok(r) => {
+                completed += 1;
+                texts.push(r.text);
+            }
+            Err(e) => {
+                failed += 1;
+                texts.push(format!("<error: {e}>"));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = &router.metrics;
+    let run = SuffixRun {
+        texts,
+        completed,
+        failed,
+        wall_s,
+        tokens: m.tokens_generated.get(),
+        ticks: m.ticks_total.get(),
+        up_bytes: m.upload_bytes.get(),
+        down_bytes: m.d2h_bytes_shipped.get(),
+        flops: m.flops_units.get(),
+        live_rows: m.live_ctx_rows.get(),
+        full_rows: m.full_ctx_rows.get(),
+        pruned_blocks: m.suffix_blocks_pruned.get(),
+        retired_blocks: m.early_retired_blocks.get(),
+        switches: m.tier_switches.get(),
+    };
+    router.shutdown();
+    run
+}
+
+/// Suffix-pruning section: the identical mixed gen-length Poisson trace
+/// (short / medium / unbounded tiers drawn by the workload generator)
+/// runs with live-context decoding off and on. Gates on token-identical
+/// outputs (tier switching, suffix pruning, and early retirement are
+/// trajectory-exact), on the pruning machinery actually firing, and on
+/// a ≥ 30% reduction in per-token attention FLOPs OR per-token
+/// uplink+downlink bytes. Emits BENCH_suffix.json.
+fn suffix_section(n: usize) -> anyhow::Result<()> {
+    let trace = workload::poisson_trace(RATE, n, 0x5F17);
+    let full = suffix_run(false, &trace);
+    let pruned = suffix_run(true, &trace);
+
+    let identical = full.texts == pruned.texts;
+    let per_tok = |bytes: u64, toks: u64| bytes as f64 / (toks as f64).max(1.0);
+    let full_bpt = per_tok(full.up_bytes + full.down_bytes, full.tokens);
+    let pruned_bpt = per_tok(pruned.up_bytes + pruned.down_bytes, pruned.tokens);
+    let byte_red = 1.0 - pruned_bpt / full_bpt.max(1e-9);
+    let full_fpt = per_tok(full.flops, full.tokens);
+    let pruned_fpt = per_tok(pruned.flops, pruned.tokens);
+    let flops_red = 1.0 - pruned_fpt / full_fpt.max(1e-9);
+    let best_red = byte_red.max(flops_red);
+    let live_ratio = pruned.live_rows as f64 / (pruned.full_rows as f64).max(1.0);
+
+    println!(
+        "\n== suffix: {n}-request mixed gen-length trace \
+         (short/medium/unbounded tiers), full-context vs live-context =="
+    );
+    for (label, r) in [("full", &full), ("pruned", &pruned)] {
+        println!(
+            "{label:>7}: {} completed ({} failed) in {:.2}s; {} tokens over \
+             {} ticks; {:.1} flops-units/tok, {:.1} B/tok up+down; \
+             {} suffix blocks pruned, {} blocks retired early, \
+             {} tier switches",
+            r.completed,
+            r.failed,
+            r.wall_s,
+            r.tokens,
+            r.ticks,
+            per_tok(r.flops, r.tokens),
+            per_tok(r.up_bytes + r.down_bytes, r.tokens),
+            r.pruned_blocks,
+            r.retired_blocks,
+            r.switches,
+        );
+    }
+    println!(
+        "live-context decode attends {:.1}% of the compiled-maximum rows; \
+         outputs token-identical: {identical}; FLOPs −{:.1}%, \
+         uplink+downlink bytes −{:.1}%",
+        100.0 * live_ratio,
+        100.0 * flops_red,
+        100.0 * byte_red,
+    );
+
+    std::fs::create_dir_all("artifacts/results")?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_continuous_suffix\",\n  \
+         \"requests\": {n},\n  \"full_completed\": {},\n  \
+         \"pruned_completed\": {},\n  \"pruned_failed\": {},\n  \
+         \"token_identical\": {identical},\n  \
+         \"full_flops_per_tok\": {full_fpt:.3},\n  \
+         \"pruned_flops_per_tok\": {pruned_fpt:.3},\n  \
+         \"flops_reduction\": {flops_red:.4},\n  \
+         \"full_bytes_per_tok\": {full_bpt:.3},\n  \
+         \"pruned_bytes_per_tok\": {pruned_bpt:.3},\n  \
+         \"byte_reduction\": {byte_red:.4},\n  \
+         \"live_row_ratio\": {live_ratio:.4},\n  \
+         \"suffix_blocks_pruned\": {},\n  \
+         \"early_retired_blocks\": {},\n  \"tier_switches\": {}\n}}\n",
+        full.completed,
+        pruned.completed,
+        pruned.failed,
+        pruned.pruned_blocks,
+        pruned.retired_blocks,
+        pruned.switches,
+    );
+    std::fs::write("artifacts/results/BENCH_suffix.json", json)?;
+    println!("wrote artifacts/results/BENCH_suffix.json");
+
+    // acceptance: pruning must be invisible in the outputs (every token
+    // identical to the full-context run), must actually fire (suffix
+    // blocks pruned and trailing blocks retired, while the full run's
+    // ledger stays untouched), and must buy ≥ 30% of either steady-state
+    // attention FLOPs or uplink+downlink transfer per generated token
+    let ok = identical
+        && pruned.pruned_blocks > 0
+        && pruned.retired_blocks > 0
+        && full.pruned_blocks == 0
+        && full.retired_blocks == 0
+        && best_red >= 0.30;
+    println!(
+        "acceptance (token-identical, pruning fired, ≥ 30% FLOPs or byte \
+         reduction — measured {:.1}%): {}",
+        100.0 * best_red,
+        if ok { "PASS" } else { "FAIL" }
+    );
+    if !ok {
+        return Err(anyhow::anyhow!(
+            "suffix pruning underperformed: identical={identical} \
+             pruned_blocks={} retired_blocks={} flops_red={flops_red:.4} \
+             byte_red={byte_red:.4}",
+            pruned.pruned_blocks,
+            pruned.retired_blocks,
+        ));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     esdllm::logging::init();
     let n = bench_n(330);
@@ -776,5 +975,7 @@ fn main() -> anyhow::Result<()> {
     prefix_section(6, 4)?;
     // SLO-aware overload section (bursty mixed-SLO trace, FIFO vs SLO)
     slo_section(n.min(120))?;
+    // live-context suffix-pruning section (mixed gen-length trace)
+    suffix_section(n.min(120))?;
     Ok(())
 }

@@ -421,6 +421,90 @@ impl GroupCaches {
         Ok(())
     }
 
+    /// Merge a tier-sliced gen-region logit downlink (`[B, g, V]` with
+    /// `g <= gen_len` — the live gen rows of a narrowed context tier)
+    /// into the FIRST `g` positions of the refreshed slots' logit state
+    /// and refresh those rows' confidences. Positions past the live
+    /// region keep their previous state: at that tier they are outside
+    /// every scheduled block, so the sampler never reads them.
+    pub fn merge_gen_logits_prefix_slots(
+        &mut self,
+        logits_gen: &HostTensor,
+        g: usize,
+        slots: &[usize],
+    ) -> Result<()> {
+        let d = self.dims;
+        let v = d.vocab;
+        if g > d.gen_len {
+            return Err(anyhow!("live gen rows {g} exceed gen_len {}", d.gen_len));
+        }
+        let src_all = logits_gen.as_f32()?;
+        if src_all.len() != self.batch * g * v {
+            return Err(anyhow!(
+                "tier-sliced logits have {} elements, want {} ([B, {g}, V])",
+                src_all.len(),
+                self.batch * g * v
+            ));
+        }
+        for &b in slots {
+            for j in 0..g {
+                let src = (b * g + j) * v;
+                let dst = (b * d.gen_len + j) * v;
+                self.logits[dst..dst + v].copy_from_slice(&src_all[src..src + v]);
+                self.conf[b * d.gen_len + j] = softmax_max(&self.logits[dst..dst + v]);
+            }
+            self.dirty.conf.mark_slot(b);
+        }
+        Ok(())
+    }
+
+    /// Merge a **block-sliced** logit downlink (`logits_blk`
+    /// [B, block, V] — each slot's current block window, gathered
+    /// in-graph by the `prefill_apply_blk*` executables from its
+    /// per-slot `blk_start`) into the latest-logits state and refresh
+    /// only those rows' confidences. `starts[b]` is slot `b`'s
+    /// gen-relative block start (don't-care for non-merged slots). The
+    /// gen rows outside the window keep their previous logits/conf —
+    /// exactly what the sampler reads, since it only ever decides within
+    /// the current block.
+    pub fn merge_gen_logits_block_slots(
+        &mut self,
+        logits_blk: &HostTensor,
+        starts: &[usize],
+        block: usize,
+        slots: &[usize],
+    ) -> Result<()> {
+        let d = self.dims;
+        let v = d.vocab;
+        let src_all = logits_blk.as_f32()?;
+        if src_all.len() != self.batch * block * v {
+            return Err(anyhow!(
+                "block-sliced logits have {} elements, want {} ([B, block, V])",
+                src_all.len(),
+                self.batch * block * v
+            ));
+        }
+        for &b in slots {
+            let g0 = starts[b];
+            if g0 + block > d.gen_len {
+                return Err(anyhow!(
+                    "slot {b}: block window [{g0}, {}) exceeds gen_len {}",
+                    g0 + block,
+                    d.gen_len
+                ));
+            }
+            for j in 0..block {
+                let src = (b * block + j) * v;
+                let dst = (b * d.gen_len + g0 + j) * v;
+                self.logits[dst..dst + v].copy_from_slice(&src_all[src..src + v]);
+                self.conf[b * d.gen_len + g0 + j] =
+                    softmax_max(&self.logits[dst..dst + v]);
+            }
+            self.dirty.conf.mark_slot(b);
+        }
+        Ok(())
+    }
+
     /// Confidence = max softmax probability per gen position.
     pub fn recompute_conf(&mut self) {
         let slots = self.all_slots();

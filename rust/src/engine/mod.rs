@@ -196,6 +196,13 @@ pub fn prefill_apply_exe_name(batch: usize) -> String {
     format!("prefill_apply_b{batch}")
 }
 
+/// Name of the block-sliced device-apply prefill executable: takes a
+/// per-slot block-index input and downloads `[B, block, V]` logit
+/// windows instead of the whole gen region.
+pub fn prefill_apply_blk_exe_name(block: usize, batch: usize) -> String {
+    format!("prefill_apply_blk{block}_b{batch}")
+}
+
 /// Name of the fused k-step executable (`step_apply_k` kind) that runs
 /// `k` ES iterations in one device execution. The compile pipeline
 /// emits k ∈ {2, 4, 8} alongside the single-step apply variants.

@@ -105,6 +105,8 @@ fn main() -> Result<()> {
                 mode,
                 backend: WorkerBackend::Pjrt,
                 policy,
+                live_ctx: args.bool("live-ctx"),
+                park_promote_ms: None,
             });
             let cfg = ServeCfg {
                 bind: args.str("bind", "127.0.0.1:8311"),

@@ -101,6 +101,11 @@ pub struct ExeSpec {
     pub kv_len: usize,
     /// unroll depth for `step_apply_k` executables (`None` otherwise)
     pub k: Option<usize>,
+    /// live gen length for a suffix-pruned context-tier variant: the
+    /// chained gen-region state (ind/conf) covers only this many rows
+    /// and `kv_len == prompt_len + gen_live`. `None` for full-context
+    /// executables (gen_live == gen_len).
+    pub gen_live: Option<usize>,
     /// non-parameter inputs, in call order after the parameter list
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
@@ -147,6 +152,11 @@ pub struct GenCfg {
     pub bos: i32,
     pub sparse_keep_prompt: usize,
     pub observe_probe_layers: Vec<usize>,
+    /// live-context tiers: absolute kv lengths (prompt + live gen rows)
+    /// for which the compile pipeline lowered dedicated executables,
+    /// ascending, ending at the full compiled context. Manifests from
+    /// older pipelines omit the field and get the single full tier.
+    pub ctx_tiers: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -203,6 +213,42 @@ impl Manifest {
                 .as_arr()
                 .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
                 .unwrap_or_default(),
+            ctx_tiers: match g.get("ctx_tiers").as_arr() {
+                None => vec![req_usize(g, "ctx")?],
+                Some(a) => {
+                    let tiers: Vec<usize> =
+                        a.iter().filter_map(|x| x.as_usize()).collect();
+                    if tiers.len() != a.len() {
+                        return Err(anyhow!(
+                            "generation.ctx_tiers must be an array of \
+                             positive integers"
+                        ));
+                    }
+                    let (prompt, ctx) =
+                        (req_usize(g, "prompt_len")?, req_usize(g, "ctx")?);
+                    if !tiers.windows(2).all(|w| w[0] < w[1]) {
+                        return Err(anyhow!(
+                            "generation.ctx_tiers must be strictly \
+                             ascending, got {tiers:?}"
+                        ));
+                    }
+                    if tiers.iter().any(|&t| t <= prompt || t > ctx) {
+                        return Err(anyhow!(
+                            "generation.ctx_tiers entries must lie in \
+                             (prompt_len, ctx] = ({prompt}, {ctx}], got \
+                             {tiers:?}"
+                        ));
+                    }
+                    if tiers.last() != Some(&ctx) {
+                        return Err(anyhow!(
+                            "generation.ctx_tiers must end at the full \
+                             compiled context {ctx}, got {tiers:?} — the \
+                             untiered executables ARE the last tier"
+                        ));
+                    }
+                    tiers
+                }
+            },
         };
 
         let mut archs = BTreeMap::new();
@@ -348,6 +394,26 @@ impl Manifest {
                     retained.push(sig);
                 }
             }
+            let kv_len = req_usize(e, "kv_len")?;
+            let gen_live = e.get("gen_live").as_usize();
+            if let Some(gl) = gen_live {
+                if gl == 0 || gl >= dims.gen_len {
+                    return Err(anyhow!(
+                        "executable {exe_name}: `gen_live` = {gl} must lie \
+                         in (0, gen_len) = (0, {}) — a full-length variant \
+                         omits the field",
+                        dims.gen_len
+                    ));
+                }
+                if kv_len != dims.prompt_len + gl {
+                    return Err(anyhow!(
+                        "executable {exe_name}: a context-tier variant must \
+                         satisfy kv_len == prompt_len + gen_live \
+                         ({} + {gl}), got kv_len = {kv_len}",
+                        dims.prompt_len
+                    ));
+                }
+            }
             let spec = ExeSpec {
                 name: exe_name.clone(),
                 kind,
@@ -375,8 +441,9 @@ impl Manifest {
                     .unwrap_or_default(),
                 final_keep: e.get("final_keep").as_usize(),
                 indicator: e.get("indicator").as_str().map(|s| s.to_string()),
-                kv_len: req_usize(e, "kv_len")?,
+                kv_len,
                 k,
+                gen_live,
                 inputs: all_inputs[n_params..].to_vec(),
                 outputs: tensor_sigs(e.get("outputs"))?,
                 output_names,
@@ -468,6 +535,17 @@ impl ArchSpec {
             format!("{base}_blk{block}_b{batch}")
         }
     }
+
+    /// Name of the live-context tier variant of a device-apply
+    /// executable: the base name at the full context, `{base}_ctx{T}`
+    /// for a suffix-pruned tier T (absolute kv length).
+    pub fn tier_exe_name(&self, base: &str, live_ctx: usize) -> String {
+        if live_ctx >= self.dims.ctx {
+            base.to_string()
+        } else {
+            format!("{base}_ctx{live_ctx}")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -513,13 +591,109 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), src).unwrap();
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.generation.ctx, 80);
+        // older manifests omit ctx_tiers: single full tier
+        assert_eq!(m.generation.ctx_tiers, vec![80]);
         let a = m.arch("a").unwrap();
         assert_eq!(a.dims.n_layers, 8);
         let e = a.exe("prefill_b1").unwrap();
         assert_eq!(e.kind, ExeKind::Prefill);
+        assert_eq!(e.gen_live, None);
         // non-param inputs only
         assert_eq!(e.inputs.len(), 1);
         assert_eq!(e.inputs[0].name, "tokens");
+    }
+
+    fn load_src(src: &str, subdir: &str) -> Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("esdllm-mf-{subdir}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        Manifest::load(&dir)
+    }
+
+    const TIER_SRC: &str = r#"{
+      "version": 1,
+      "generation": {"prompt_len":48,"gen_len":32,"ctx":80,"vocab":64,
+        "pad":0,"mask":1,"eos":2,"bos":3,"sparse_keep_prompt":24,
+        "observe_probe_layers":[2,5,7],"ctx_tiers":CTX_TIERS},
+      "archs": {"a": {
+        "dims": {"vocab":64,"d_model":64,"n_layers":8,"n_heads":4,
+          "n_kv_heads":4,"d_ff":256,"head_dim":16,"prompt_len":48,
+          "gen_len":32,"ctx":80,"name":"a","rope_base":10000.0,"d_kv":64},
+        "checkpoints": {"instruct":"w.bin"},
+        "params": [{"name":"embed","shape":[64,64]}],
+        "executables": {"es_apply_blk8_b8_ctx64": {
+           "kind":"step_apply","batch":8,"block":8,"skip":[[2,0.5]],
+           "indicator":"h","kv_len":KV_LEN,"gen_live":GEN_LIVE,
+           "file":"a/es_apply_blk8_b8_ctx64.hlo.txt",
+           "inputs":[{"name":"embed","shape":[64,64],"dtype":"f32"},
+                     {"name":"x_tok","shape":[8,8],"dtype":"i32"}],
+           "outputs":[{"name":"out0","shape":[8,8,64],"dtype":"f32"}],
+           "output_names":["logits"]}}}}}"#;
+
+    fn tier_src(tiers: &str, kv_len: &str, gen_live: &str) -> String {
+        TIER_SRC
+            .replace("CTX_TIERS", tiers)
+            .replace("KV_LEN", kv_len)
+            .replace("GEN_LIVE", gen_live)
+    }
+
+    #[test]
+    fn ctx_tiers_parse_and_validate() {
+        let m =
+            load_src(&tier_src("[56,64,72,80]", "64", "16"), "tiers-ok").unwrap();
+        assert_eq!(m.generation.ctx_tiers, vec![56, 64, 72, 80]);
+        let e = m.arch("a").unwrap().exe("es_apply_blk8_b8_ctx64").unwrap();
+        assert_eq!(e.gen_live, Some(16));
+        assert_eq!(e.kv_len, 64);
+
+        // not ascending
+        let err = load_src(&tier_src("[64,56,80]", "64", "16"), "tiers-ord")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly ascending"), "{err}");
+        // below the prompt
+        let err = load_src(&tier_src("[40,80]", "64", "16"), "tiers-lo")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("(prompt_len, ctx]"), "{err}");
+        // missing the full-context terminal tier
+        let err = load_src(&tier_src("[56,64]", "64", "16"), "tiers-end")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must end at the full compiled context"), "{err}");
+    }
+
+    #[test]
+    fn gen_live_must_match_kv_len() {
+        // kv_len != prompt + gen_live
+        let err = load_src(&tier_src("[56,64,72,80]", "72", "16"), "gl-kv")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kv_len == prompt_len + gen_live"), "{err}");
+        // gen_live out of range
+        let err = load_src(&tier_src("[56,64,72,80]", "80", "32"), "gl-rng")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must lie in (0, gen_len)"), "{err}");
+    }
+
+    #[test]
+    fn tier_exe_name_suffix() {
+        let a = ArchSpec {
+            name: "x".into(),
+            dims: Dims {
+                vocab: 64, d_model: 64, n_layers: 8, n_heads: 4, n_kv_heads: 4,
+                d_ff: 256, head_dim: 16, prompt_len: 48, gen_len: 32, ctx: 80,
+            },
+            checkpoints: BTreeMap::new(),
+            params: vec![],
+            executables: BTreeMap::new(),
+        };
+        assert_eq!(a.tier_exe_name("es_apply_blk8_b8", 80), "es_apply_blk8_b8");
+        assert_eq!(
+            a.tier_exe_name("es_apply_blk8_b8", 64),
+            "es_apply_blk8_b8_ctx64"
+        );
     }
 
     #[test]

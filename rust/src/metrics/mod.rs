@@ -227,6 +227,27 @@ pub struct Metrics {
     pub prefix_cache_bytes: Gauge,
     /// prefix entries evicted to hold the cache's byte budget
     pub prefix_evictions: Gauge,
+    // -- live-context decoding (mirrored from the backends' transfer
+    //    ledgers each scheduler tick; gauges because the pumped values
+    //    are cumulative ledger snapshots, not per-tick deltas) --
+    /// ∑ over device execs of batch × live-context rows actually
+    /// attended over (the tiered executables' working set)
+    pub live_ctx_rows: Gauge,
+    /// ∑ over device execs of batch × compiled-maximum context rows —
+    /// the denominator `live_ctx_rows` is measured against
+    pub full_ctx_rows: Gauge,
+    /// fully-converged suffix blocks a pruned dispatch did not attend
+    /// over (vs the compiled-maximum context)
+    pub suffix_blocks_pruned: Gauge,
+    /// trailing never-decoded blocks retired early on the EOS guard
+    pub early_retired_blocks: Gauge,
+    /// context-tier switches the schedulers performed (each one a
+    /// forced grounding prefill at the new live length)
+    pub tier_switches: Gauge,
+    /// abstract attention-FLOPs units (batch × query rows × live keys)
+    /// accumulated by device execs — the numerator of the per-tick
+    /// FLOPs estimate
+    pub flops_units: Gauge,
     // -- fault injection + recovery (mirrored from the backends'
     //    FaultStats ledgers each scheduler tick) --
     /// faults the deterministic injector actually fired
@@ -359,6 +380,11 @@ impl Metrics {
             ("esdllm_prefill_bytes_saved", self.prefill_bytes_saved.get()),
             ("esdllm_prefix_cache_bytes", self.prefix_cache_bytes.get()),
             ("esdllm_prefix_evictions", self.prefix_evictions.get()),
+            ("esdllm_live_ctx_rows", self.live_ctx_rows.get()),
+            ("esdllm_full_ctx_rows", self.full_ctx_rows.get()),
+            ("esdllm_suffix_blocks_pruned", self.suffix_blocks_pruned.get()),
+            ("esdllm_early_retired_blocks", self.early_retired_blocks.get()),
+            ("esdllm_tier_switches", self.tier_switches.get()),
             ("esdllm_faults_injected", self.faults_injected.get()),
             ("esdllm_ticks_retried", self.ticks_retried.get()),
             ("esdllm_chains_regrounded", self.chains_regrounded.get()),
@@ -439,6 +465,22 @@ impl Metrics {
         out.push_str(&format!(
             "esdllm_avg_iters_per_fused_dispatch {avg_iters:.3}\n"
         ));
+        // mean abstract attention-FLOPs per tick (batch × query rows ×
+        // live keys, summed over device execs); with live-context
+        // decoding off this tracks the full-context cost exactly
+        out.push_str(&format!(
+            "esdllm_flops_per_tick_est {:.1}\n",
+            self.flops_units.get() as f64 / ticks as f64
+        ));
+        // fraction of the compiled-maximum context rows the tiered
+        // executables actually attended over (1.0 = no pruning)
+        let full_rows = self.full_ctx_rows.get();
+        let live_frac = if full_rows == 0 {
+            1.0
+        } else {
+            self.live_ctx_rows.get() as f64 / full_rows as f64
+        };
+        out.push_str(&format!("esdllm_live_ctx_fraction {live_frac:.4}\n"));
         out.push_str(&format!("esdllm_slot_occupancy {:.4}\n", self.slot_occupancy()));
         out.push_str(&format!(
             "esdllm_tps_per_busy_slot {:.3}\n",
@@ -492,6 +534,12 @@ mod tests {
         m.prefill_bytes_saved.set(8192);
         m.prefix_cache_bytes.set(2049);
         m.prefix_evictions.set(2);
+        m.live_ctx_rows.set(640);
+        m.full_ctx_rows.set(1280);
+        m.suffix_blocks_pruned.set(12);
+        m.early_retired_blocks.set(2);
+        m.tier_switches.set(5);
+        m.flops_units.set(4096);
         m.faults_injected.add(4);
         m.ticks_retried.add(3);
         m.chains_regrounded.add(3);
@@ -532,6 +580,13 @@ mod tests {
         assert!(text.contains("esdllm_prefill_bytes_saved 8192"));
         assert!(text.contains("esdllm_prefix_cache_bytes 2049"));
         assert!(text.contains("esdllm_prefix_evictions 2"));
+        assert!(text.contains("esdllm_live_ctx_rows 640"));
+        assert!(text.contains("esdllm_full_ctx_rows 1280"));
+        assert!(text.contains("esdllm_suffix_blocks_pruned 12"));
+        assert!(text.contains("esdllm_early_retired_blocks 2"));
+        assert!(text.contains("esdllm_tier_switches 5"));
+        assert!(text.contains("esdllm_live_ctx_fraction 0.5000"));
+        assert!(text.contains("esdllm_flops_per_tick_est"));
         assert!(text.contains("esdllm_faults_injected 4"));
         assert!(text.contains("esdllm_ticks_retried 3"));
         assert!(text.contains("esdllm_chains_regrounded 3"));

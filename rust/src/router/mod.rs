@@ -424,6 +424,15 @@ pub struct RouterCfg {
     pub mode: SchedMode,
     pub backend: WorkerBackend,
     pub policy: SloPolicy,
+    /// opt into live-context decoding: every worker's scheduler tiers
+    /// the compiled context to the live decode frontier (see
+    /// [`GroupScheduler::enable_live_ctx`]). Off by default — the
+    /// untiered dispatch/ledger behavior stays bit-identical.
+    pub live_ctx: bool,
+    /// override of the parked-victim aging interval in milliseconds
+    /// (`None` keeps the scheduler default; `Some(0)` promotes
+    /// immediately — tests)
+    pub park_promote_ms: Option<u64>,
 }
 
 impl RouterCfg {
@@ -439,6 +448,8 @@ impl RouterCfg {
             mode: SchedMode::Continuous,
             backend: WorkerBackend::Pjrt,
             policy: SloPolicy::SloAware,
+            live_ctx: false,
+            park_promote_ms: None,
         }
     }
 }
@@ -469,11 +480,16 @@ impl Router {
             let backend = cfg.backend.clone();
             let pool = pool.clone();
             let prefix = prefix.clone();
+            let tuning = WorkerTuning {
+                live_ctx: cfg.live_ctx,
+                park_promote_ms: cfg.park_promote_ms,
+            };
             std::thread::Builder::new()
                 .name(format!("engine-{w}"))
                 .spawn(move || {
                     worker_loop(
-                        queue, metrics, engine_cfg, batcher, dir, mode, backend, pool, prefix, w,
+                        queue, metrics, engine_cfg, batcher, dir, mode, backend, pool, prefix,
+                        tuning, w,
                     )
                 })
                 .expect("spawn engine worker");
@@ -574,6 +590,14 @@ fn drain_with_error(queue: &SloQueues, msg: &str) {
     }
 }
 
+/// Scheduler knobs each worker applies after construction (the
+/// [`RouterCfg`] subset that isn't engine or batcher config).
+#[derive(Clone, Copy)]
+struct WorkerTuning {
+    live_ctx: bool,
+    park_promote_ms: Option<u64>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     queue: Arc<SloQueues>,
@@ -585,6 +609,7 @@ fn worker_loop(
     backend_kind: WorkerBackend,
     pool: Arc<ResidencyPool>,
     prefix: Arc<PrefixCache>,
+    tuning: WorkerTuning,
     worker: usize,
 ) {
     let slots = batcher.max_batch.max(1);
@@ -656,7 +681,7 @@ fn worker_loop(
             GroupScheduler::new(backend, slots, SchedCfg::from_engine(&engine_cfg))
         }
     };
-    let sched = match sched {
+    let mut sched = match sched {
         Ok(s) => s,
         Err(e) => {
             log::error!("engine worker failed to build scheduler: {e:#}");
@@ -664,6 +689,10 @@ fn worker_loop(
             return;
         }
     };
+    sched.enable_live_ctx(tuning.live_ctx);
+    if let Some(ms) = tuning.park_promote_ms {
+        sched.set_park_promote(Some(Duration::from_millis(ms)));
+    }
     // additive: several workers contribute to one capacity gauge
     metrics.slots_total.add(slots as u64);
     match mode {
@@ -822,6 +851,7 @@ fn tick_once(
     let outcome = loop {
         let busy = sched.active();
         let before = (sched.n_prefill, sched.n_dual, sched.n_es);
+        let tiers_before = sched.tier_switches;
         let tr_before = sched.transfer_stats();
         let t0 = Instant::now();
         let tick_result = sched.tick();
@@ -848,6 +878,18 @@ fn tick_once(
         metrics.fused_execs.add(tr.fused_execs);
         metrics.inner_iters_fused.add(tr.inner_iters_fused);
         metrics.dispatches_avoided.add(tr.dispatches_avoided);
+        // live-context decoding ledger: per-worker deltas into shared
+        // gauges (`Gauge::add` composes across workers like the
+        // counters do; with tiering off every delta is zero except the
+        // row ticks, which then track the full context exactly)
+        metrics.live_ctx_rows.add(tr.live_row_ticks);
+        metrics.full_ctx_rows.add(tr.full_row_ticks);
+        metrics.suffix_blocks_pruned.add(tr.suffix_blocks_pruned);
+        metrics.early_retired_blocks.add(tr.early_retired_blocks);
+        metrics.flops_units.add(tr.flops_units);
+        metrics
+            .tier_switches
+            .add((sched.tier_switches - tiers_before) as u64);
         // pooled-residency ledger: the pool is shared by every worker, so
         // its cumulative values are mirrored (set), not delta-added
         let ps: PoolStats = sched.pool_stats();
@@ -1653,6 +1695,57 @@ mod tests {
         assert!(m.resumed_total.get() >= 1, "and later resumed");
         assert_eq!(m.victims_parked.get(), 0, "nobody left parked at the end");
         assert_eq!(m.requests_failed.get(), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn aged_victim_outranks_sustained_ls_burst() {
+        // starvation bound: under a sustained latency-sensitive burst a
+        // parked throughput victim ages into the LS class, so it (a)
+        // resumes ahead of the queued fresh LS arrivals at the first
+        // free slot and (b) cannot be re-preempted by the rest of the
+        // burst — parked exactly once, end to end token-identical
+        let clean = sim_router(SchedMode::Continuous, 1, 16);
+        let want = clean.submit("cdef".into(), SeqParams::default()).unwrap();
+        let want = want.wait().expect("unpreempted run");
+        clean.shutdown();
+
+        let mut cfg = RouterCfg::new(
+            EngineCfg::new("llada-nano", crate::engine::Method::EsDllm),
+            std::path::PathBuf::from("/nonexistent"),
+        );
+        cfg.backend = WorkerBackend::Sim(SimCfg::default().with_costs(2000, 1000, 1000));
+        cfg.batcher = BatcherCfg { max_batch: 1, flush_ms: 2 };
+        cfg.queue_cap = 16;
+        cfg.mode = SchedMode::Continuous;
+        cfg.policy = SloPolicy::SloAware;
+        // immediate promotion: one parked tick is enough to age to LS
+        cfg.park_promote_ms = Some(0);
+        let router = Router::start(cfg);
+
+        let victim = router.submit("cdef".into(), SeqParams::default()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let ls_params = SeqParams { slo: SloClass::LatencySensitive, ..Default::default() };
+        let burst: Vec<_> = (0..4)
+            .map(|_| router.submit("1+2=".into(), ls_params).unwrap())
+            .collect();
+        let victim_reply = victim.wait().expect("victim resumes and completes");
+        assert_eq!(victim_reply.text, want.text, "aged resume is trajectory-exact");
+        assert_eq!(victim_reply.tokens, want.tokens);
+        for ls in burst {
+            let r = ls.wait().expect("every burst request served");
+            assert_eq!(r.text, "1+2=");
+        }
+        let m = &router.metrics;
+        assert_eq!(
+            m.preemptions_total.get(),
+            1,
+            "the aged victim was parked once and shielded thereafter"
+        );
+        assert_eq!(m.resumed_total.get(), 1);
+        assert_eq!(m.victims_parked.get(), 0);
+        assert_eq!(m.requests_failed.get(), 0);
+        assert_eq!(m.timeouts_total.get(), 0);
         router.shutdown();
     }
 }

@@ -27,6 +27,21 @@
 //!     after every run, which is exactly what the chain code in
 //!     [`crate::scheduler::PjrtBackend`] does (and what
 //!     [`resident::DeviceGroupCaches::invalidate`] unwinds on failure).
+//!   * **Context-tier executables.** The manifest's
+//!     `generation.ctx_tiers` ladder names a family of step variants
+//!     compiled at shorter key lengths (`es_apply_b8` →
+//!     `es_apply_b8_ctx64`, resolved per dispatch via
+//!     [`crate::manifest::Manifest::tier_exe_name`]): same program,
+//!     `kv_len`-/`gen_live`-shaped cache and confidence operands, so a
+//!     decode step whose live context fits a lower tier runs — and
+//!     transfers — at that tier's shapes instead of the compiled
+//!     maximum. The scheduler picks the tier from the group's live
+//!     frontier; this layer just compiles, caches, and runs whichever
+//!     family member the dispatch names (block-sliced prefill variants
+//!     with their `blk_start` operand and `logits_blk` output
+//!     included). Tier switches reuse nothing across shapes: the
+//!     grounding prefill at the new tier reseeds the chain, exactly
+//!     like a batch-class switch.
 //!
 //! Threading model: PJRT wrapper types hold raw pointers and are not
 //! `Send`/`Sync`; each engine worker thread owns its own `Runtime`

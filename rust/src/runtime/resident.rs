@@ -184,6 +184,33 @@
 //!     demotion and, ultimately, `ApplyMode::Host` quarantine. An
 //!     evicted chain's next checkout misses and re-seeds exactly the
 //!     evicted keys — untouched parked chains still resume for free.
+//!
+//! # Live-context planning
+//!
+//! With the scheduler's live-context decoding on (tiered executables
+//! compiled at the manifest's `generation.ctx_tiers` key lengths), this
+//! layer is also where the **tiered transfer plan** lives.
+//! [`DeviceGroupCaches::set_live_ctx`] pins the current tier; every
+//! device-apply planner call then prices its uplink against the live
+//! row count, not the compiled maximum — `stage_prefill_tokens` ships
+//! `live_ctx` token columns per slot, cold chain seeds allocate the
+//! tier-shaped kv/ind/conf tensors, and the per-exec ledger charges
+//! `batch × live_ctx` live row·ticks against a `batch × ctx` full-row
+//! denominator plus an abstract `batch × rows × live-keys` FLOPs
+//! estimate ([`TransferStats`]: `live_row_ticks`, `full_row_ticks`,
+//! `flops_units`). A step dispatched below the compiled maximum also
+//! credits `suffix_blocks_pruned` with the converged suffix blocks it
+//! did not attend over, and the scheduler's EOS-guard early exit
+//! credits `early_retired_blocks` for trailing blocks that were never
+//! dispatched at all. The **block-sliced prefill downlink**
+//! ([`DeviceGroupCaches::sync_prefill_device`] with a block window,
+//! driven by the backends' `run_prefill_blk`) uplinks one per-slot
+//! `blk_start` index vector and downloads `logits_blk` `[B, block, V]`
+//! — the active block's rows only, instead of the whole gen region —
+//! with the saving credited to `d2h_bytes_saved`. Because the sim and
+//! PJRT backends route through these same planner calls, the tiered
+//! counters stay byte-exact between them and the ledger-parity tests
+//! extend to pruned ticks.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -283,6 +310,26 @@ pub struct TransferStats {
     /// device dispatches the fused executions amortized away vs the
     /// one-execution-per-iteration path (k − 1 per fused run)
     pub dispatches_avoided: u64,
+    /// live context rows actually computed by device-apply executions:
+    /// Σ batch × live_ctx per exec (live_ctx = the context tier the call
+    /// ran at; == ctx when untiered)
+    pub live_row_ticks: u64,
+    /// the full-context baseline for the same executions: Σ batch × ctx
+    /// per exec — `live_row_ticks / full_row_ticks` is the steady-state
+    /// row (≈ attention-FLOPs) fraction the live-context tiering left
+    /// running
+    pub full_row_ticks: u64,
+    /// attention-FLOPs estimate in abstract units: Σ batch × live_ctx²
+    /// per prefill exec, Σ k × batch × block × live_ctx per step exec —
+    /// the quadratic/bilinear row products that actually scale with the
+    /// live context (weight FLOPs scale with the same row counts)
+    pub flops_units: u64,
+    /// converged suffix blocks a tiered device-apply step did NOT attend
+    /// over: (ctx − live_ctx) / block per step exec
+    pub suffix_blocks_pruned: u64,
+    /// trailing blocks never decoded because the EOS guard completed the
+    /// sequence early (per-request gen_len headroom retired at once)
+    pub early_retired_blocks: u64,
 }
 
 impl TransferStats {
@@ -331,6 +378,11 @@ impl TransferStats {
         self.fused_execs += d.fused_execs;
         self.inner_iters_fused += d.inner_iters_fused;
         self.dispatches_avoided += d.dispatches_avoided;
+        self.live_row_ticks += d.live_row_ticks;
+        self.full_row_ticks += d.full_row_ticks;
+        self.flops_units += d.flops_units;
+        self.suffix_blocks_pruned += d.suffix_blocks_pruned;
+        self.early_retired_blocks += d.early_retired_blocks;
     }
 
     /// Field-wise delta against an earlier snapshot of the same ledger.
@@ -376,6 +428,15 @@ impl TransferStats {
             dispatches_avoided: self
                 .dispatches_avoided
                 .saturating_sub(earlier.dispatches_avoided),
+            live_row_ticks: self.live_row_ticks.saturating_sub(earlier.live_row_ticks),
+            full_row_ticks: self.full_row_ticks.saturating_sub(earlier.full_row_ticks),
+            flops_units: self.flops_units.saturating_sub(earlier.flops_units),
+            suffix_blocks_pruned: self
+                .suffix_blocks_pruned
+                .saturating_sub(earlier.suffix_blocks_pruned),
+            early_retired_blocks: self
+                .early_retired_blocks
+                .saturating_sub(earlier.early_retired_blocks),
         }
     }
 }
@@ -904,6 +965,15 @@ pub struct DeviceGroupCaches {
     /// manifest so `donated_execs` never reports donation an alias-less
     /// artifact set cannot perform.
     donate: bool,
+    /// the live context tier this group currently runs at: the absolute
+    /// kv length (prompt + live gen rows) the device-apply executables
+    /// cover. `dims.ctx` when untiered — every byte formula below
+    /// reduces to the pre-tier value then, which is what keeps the
+    /// default-off ledger identical. The scheduler steps this down (and
+    /// back up) through [`DeviceGroupCaches::set_live_ctx`] as the
+    /// group's live frontier moves, re-grounding the group in the same
+    /// tick so the chained state is regenerated at the new shape.
+    live_ctx: usize,
     /// the retained chain: parkable plan + per-worker device handles
     pub chain: ResidentChain,
     /// pooled step-token staging [B, block] (i32); rows outside the
@@ -951,6 +1021,7 @@ impl DeviceGroupCaches {
             batch,
             apply,
             donate: apply == ApplyMode::Device,
+            live_ctx: dims.ctx,
             chain: ResidentChain { plan, handles: ResidentHandles::default() },
             step_tokens: HostTensor::I32 { shape: vec![batch, 0], data: Vec::new() },
             prefill_tokens: HostTensor::I32 {
@@ -1000,6 +1071,42 @@ impl DeviceGroupCaches {
         self.donate
     }
 
+    /// Switch the group to a live-context tier (absolute kv length,
+    /// clamped to `[prompt_len + 1, ctx]`). Pure planner state: the
+    /// caller owns the re-ground that rebuilds the chained device state
+    /// at the new shape (the scheduler forces a full-group grounding
+    /// prefill on the tier-change tick, so no stale-shape buffer is ever
+    /// executed against).
+    pub fn set_live_ctx(&mut self, live_ctx: usize) {
+        self.live_ctx = live_ctx.clamp(self.dims.prompt_len + 1, self.dims.ctx);
+    }
+
+    pub fn live_ctx(&self) -> usize {
+        self.live_ctx
+    }
+
+    /// live gen rows at the current tier
+    fn gen_live(&self) -> usize {
+        self.live_ctx - self.dims.prompt_len
+    }
+
+    /// Trailing blocks of a retiring sequence that were never decoded
+    /// (EOS-guard completion before its `gen_len`): pure ledger.
+    pub fn note_early_retired(&mut self, blocks: u64) {
+        self.stats.early_retired_blocks += blocks;
+    }
+
+    /// Per-exec live/full row bookkeeping shared by the prefill and step
+    /// planners, plus the abstract attention-FLOPs estimate:
+    /// `rows_active` is how many query rows the exec computes per batch
+    /// row (live context for a prefill, k × block for a step), each
+    /// attending over `live_ctx` keys.
+    fn account_live_rows(&mut self, rows_active: usize) {
+        self.stats.live_row_ticks += (self.batch * self.live_ctx) as u64;
+        self.stats.full_row_ticks += (self.batch * self.dims.ctx) as u64;
+        self.stats.flops_units += (self.batch * rows_active * self.live_ctx) as u64;
+    }
+
     /// Stage the prefill token upload: copy only the refreshed slots'
     /// context rows into the persistent [B, ctx] buffer (the other rows
     /// are garbage-tolerant — their prefill outputs are discarded by the
@@ -1012,9 +1119,11 @@ impl DeviceGroupCaches {
                     .copy_from_slice(&tokens[b * ctx..(b + 1) * ctx]);
             }
         }
+        // a tiered executable's token input covers live rows only (the
+        // pooled staging keeps full rows; the upload slices)
         let out = SyncOutcome {
-            shipped: (slots.len() * ctx * 4) as u64,
-            full: (self.batch * ctx * 4) as u64,
+            shipped: (slots.len() * self.live_ctx * 4) as u64,
+            full: (self.batch * self.live_ctx * 4) as u64,
         };
         self.stats.record(TransferKind::Tokens, out.shipped, out.full);
         out
@@ -1228,6 +1337,22 @@ impl DeviceGroupCaches {
         (self.batch * self.dims.gen_len * 4) as u64
     }
 
+    // Live-tier byte sizes of the chained tensors: what a cold seed (or
+    // an avoided download) physically measures at the current context
+    // tier. Equal to the full sizes when untiered.
+    fn kv_live_bytes(&self) -> u64 {
+        (self.dims.n_layers * 2 * self.batch * self.dims.n_kv_heads
+            * self.live_ctx * self.dims.head_dim * 2) as u64
+    }
+
+    fn ind_live_bytes(&self) -> u64 {
+        (self.dims.n_layers * self.batch * self.gen_live() * self.dims.d_model * 2) as u64
+    }
+
+    fn conf_live_bytes(&self) -> u64 {
+        (self.batch * self.gen_live() * 4) as u64
+    }
+
     /// The one copy of the gen-region downlink accounting: a device-apply
     /// run downloads `rows` logit rows (f32) plus, when `with_pos`, their
     /// i32 positions; the savings baseline is the full-context
@@ -1282,11 +1407,45 @@ impl DeviceGroupCaches {
         tokens: &[i32],
         slots: &[usize],
     ) -> Result<()> {
+        self.sync_prefill_device_inner(caches, indicator, tokens, slots, None)
+    }
+
+    /// Input sync for one **block-sliced** device-apply prefill
+    /// (`prefill_apply_blk*`): identical chaining to
+    /// [`DeviceGroupCaches::sync_prefill_device`], but the executable
+    /// takes a per-slot block-index input (`blk_start`, `B × 4` bytes of
+    /// extra uplink) and downloads only each slot's current `[B, block,
+    /// V]` logit window instead of the whole gen region — `block /
+    /// gen_live` of the grounding-prefill downlink.
+    pub fn sync_prefill_device_blk(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        tokens: &[i32],
+        slots: &[usize],
+        block: usize,
+    ) -> Result<()> {
+        self.sync_prefill_device_inner(caches, indicator, tokens, slots, Some(block))
+    }
+
+    fn sync_prefill_device_inner(
+        &mut self,
+        caches: &mut GroupCaches,
+        indicator: &str,
+        tokens: &[i32],
+        slots: &[usize],
+        blk: Option<usize>,
+    ) -> Result<()> {
         if self.apply != ApplyMode::Device {
             return Err(anyhow!("sync_prefill_device requires ApplyMode::Device"));
         }
         self.stage_prefill_tokens(tokens, slots);
         self.stage_occ_mask(slots);
+        if blk.is_some() {
+            // the per-slot block-start vector rides up with the mask
+            let bytes = (self.batch * 4) as u64;
+            self.stats.record(TransferKind::Tokens, bytes, bytes);
+        }
         // the prefill's token rows double as the x_tok chain seed: the
         // refreshed slots' full context rows just shipped (accounted by
         // the staging above), so their chained device tokens match the
@@ -1299,7 +1458,9 @@ impl DeviceGroupCaches {
         if !self.chain.plan.kv_seeded {
             self.chain.plan.kv_seeded = true;
             caches.dirty.kv.clear_all();
-            self.stats.record(TransferKind::Kv, kv_full, kv_full);
+            // a cold seed ships the chained tensor at its LIVE shape —
+            // a tiered group's device KV simply has no pruned rows
+            self.stats.record(TransferKind::Kv, self.kv_live_bytes(), kv_full);
         } else {
             self.stats.record(TransferKind::Kv, 0, kv_full);
             self.stats.retained_out_reuses += 1;
@@ -1317,7 +1478,7 @@ impl DeviceGroupCaches {
                 .get_mut(indicator)
                 .ok_or_else(|| anyhow!("unknown indicator {indicator}"))?
                 .clear_all();
-            self.stats.record(TransferKind::Ind, ind_full, ind_full);
+            self.stats.record(TransferKind::Ind, self.ind_live_bytes(), ind_full);
         } else {
             self.stats.record(TransferKind::Ind, 0, ind_full);
             self.stats.retained_out_reuses += 1;
@@ -1325,7 +1486,7 @@ impl DeviceGroupCaches {
         let conf_full = self.conf_bytes();
         if !self.chain.plan.conf_seeded {
             self.chain.plan.conf_seeded = true;
-            self.stats.record(TransferKind::Conf, conf_full, conf_full);
+            self.stats.record(TransferKind::Conf, self.conf_live_bytes(), conf_full);
         } else {
             self.stats.record(TransferKind::Conf, 0, conf_full);
             self.stats.retained_out_reuses += 1;
@@ -1333,12 +1494,17 @@ impl DeviceGroupCaches {
         // the Host-apply prefill downloads the full KV plus every
         // indicator cache to refresh the host mirrors; this plan retains
         // them on device instead (confidence is NOT counted: the Host
-        // path computes it from logits, which both paths download)
-        self.stats.d2h_bytes_avoided +=
-            kv_full + crate::cache::INDICATORS.len() as u64 * ind_full;
-        // the downlink is the gen-region logit slice only (no positions:
-        // a prefill refreshes every gen row)
-        self.account_d2h_logits(self.dims.gen_len, false);
+        // path computes it from logits, which both paths download) —
+        // measured at the live tier, since that is the shape the Host
+        // path would have downloaded for the same executables
+        self.stats.d2h_bytes_avoided += self.kv_live_bytes()
+            + crate::cache::INDICATORS.len() as u64 * self.ind_live_bytes();
+        // the downlink is the live gen-region logit slice (no positions:
+        // a prefill refreshes every live gen row) — or, block-sliced,
+        // each slot's current block window only
+        self.account_d2h_logits(blk.unwrap_or_else(|| self.gen_live()), false);
+        // a prefill computes every live context row once
+        self.account_live_rows(self.live_ctx);
         Ok(())
     }
 
@@ -1485,7 +1651,7 @@ impl DeviceGroupCaches {
             // generation's x_tok/tok_seed inputs; the planner models the
             // chained transport.
             self.copy_step_tokens(tokens, block_start, block, slots);
-            let tok_full = (self.batch * self.dims.ctx * 4) as u64;
+            let tok_full = (self.batch * self.live_ctx * 4) as u64;
             let shipped = plan_sync(
                 &mut caches.dirty.tok,
                 &mut self.chain.plan.tok_seeded,
@@ -1527,6 +1693,14 @@ impl DeviceGroupCaches {
         // the downlink is the FINAL iteration's selected logit rows +
         // their positions (intermediate iterations never touch the bus)
         self.account_d2h_logits(n_sel, true);
+        // each of the k inner iterations computes `block` query rows
+        // over the live context; the converged suffix blocks past the
+        // tier are the rows a full-context step would have attended over
+        self.account_live_rows(k * block);
+        if self.live_ctx < self.dims.ctx {
+            self.stats.suffix_blocks_pruned +=
+                ((self.dims.ctx - self.live_ctx) / block) as u64;
+        }
         if k > 1 {
             // downlinked: the per-iteration committed positions and
             // tokens [B, k] i32 each (applied directly by the host) and

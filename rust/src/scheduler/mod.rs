@@ -182,6 +182,40 @@
 //! ([`crate::runtime::resident::PoolStats`]) via
 //! [`StepBackend::note_preempt`].
 //!
+//! # Live-context decoding
+//!
+//! With [`GroupScheduler::enable_live_ctx`] on, the decode hot path
+//! scales with the **live** context instead of the compiled maximum.
+//! The backend advertises a ladder of compiled context tiers
+//! ([`StepBackend::ctx_tiers`] — the manifest's `generation.ctx_tiers`
+//! family on PJRT, `SimCfg::ctx_tiers` on the sim), each a strictly
+//! shorter key length the `step_apply` / `es_applyk*` executables were
+//! also compiled at. At the top of every tick the scheduler computes
+//! the group's **frontier** — the max over occupied slots of
+//! `min(seq gen_len, (block_idx + 1) · block)` — and selects the
+//! smallest tier ≥ `prompt_len + frontier`. Everything past that tier
+//! is either a fully-decoded suffix block (every position committed;
+//! attention over it cannot change any remaining commit under the
+//! row-independent cache layout) or a block the per-request
+//! [`SeqParams::gen_len`] guarantees will never be touched, so pruning
+//! it from the attention context at a block boundary is
+//! trajectory-exact: the pruned run decodes token-identically to the
+//! full-context run (asserted for greedy, fused k ≥ 2, mid-flight
+//! admission, and preempt/resume across a tier switch). A tier
+//! *switch* forces one full-group grounding prefill at the new live
+//! length — the same regrounding a batch-class switch pays, and legal
+//! at the same points — so the effective batch class becomes
+//! (batch, max-live-context). Sequences whose EOS guard fires before
+//! their final block **retire early**: the trailing never-decoded
+//! blocks are credited to the ledger via
+//! [`StepBackend::note_early_retire`] without ever being dispatched.
+//! The per-exec ledger (live vs full row·ticks, suffix blocks pruned,
+//! early-retired blocks, tier switches, and an abstract
+//! batch × rows × live-keys FLOPs estimate) flows through
+//! [`crate::runtime::resident::TransferStats`] into the `/metrics`
+//! gauges; the sim backend models the tiered planner byte-exactly, so
+//! the sim-vs-PJRT ledger parity tests extend to pruned ticks.
+//!
 //! [`tick`]: GroupScheduler::tick
 //!
 //! One documented exception: the experimental adaptive skip-ratio mode
@@ -195,17 +229,17 @@ pub mod sim;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::cache::{GroupCaches, RefreshPolicy, StepPlan};
 use crate::engine::{
-    apply_step_exe_name, device_apply_eligible, fused_step_exe_name, prefill_apply_exe_name,
-    step_exe_name, EngineCfg, Method, FUSED_KS,
+    apply_step_exe_name, device_apply_eligible, fused_step_exe_name, prefill_apply_blk_exe_name,
+    prefill_apply_exe_name, step_exe_name, EngineCfg, Method, FUSED_KS,
 };
 use crate::fault::{FaultInjector, FaultKind, PoisonedChain};
-use crate::manifest::{ArchSpec, Dims, ExeKind};
+use crate::manifest::{ArchSpec, Dims, DType, ExeKind};
 use crate::rng::SplitMix;
 use crate::runtime::resident::{
     chain_seed_bytes, ApplyMode, DeviceGroupCaches, PoolStats, PreemptEvent, PrefixCache,
@@ -264,6 +298,32 @@ impl SloClass {
     /// Index into per-class arrays (priority order).
     pub fn index(self) -> usize {
         self as usize
+    }
+
+    /// This class promoted `levels` priority levels (saturating at
+    /// [`SloClass::LatencySensitive`]) — the starvation bound's aging
+    /// ladder for long-parked preemption victims.
+    pub fn promote(self, levels: usize) -> SloClass {
+        SloClass::ALL[self.index().saturating_sub(levels)]
+    }
+}
+
+/// Effective service class of a sequence that has spent `credit` time
+/// parked off its slot: one priority level per elapsed `promote`
+/// interval. `None` disables aging (the effective class is the base
+/// class forever — the unbounded-starvation baseline).
+fn aged_class(base: SloClass, credit: Duration, promote: Option<Duration>) -> SloClass {
+    let Some(p) = promote else { return base };
+    if credit.is_zero() {
+        // a sequence that was never parked keeps its base class no
+        // matter the interval (a zero interval must not make every
+        // seated sequence unpreemptable)
+        return base;
+    }
+    if p.is_zero() {
+        base.promote(SloClass::COUNT)
+    } else {
+        base.promote((credit.as_nanos() / p.as_nanos()) as usize)
     }
 }
 
@@ -330,6 +390,12 @@ pub struct SeqState {
     /// when the first token committed to this sequence's mirror (TTFT
     /// numerator; `None` until the first unmask decision lands)
     pub first_commit: Option<Instant>,
+    /// total time this sequence has spent parked off its slot as a
+    /// preemption victim. Feeds the aging ladder: the effective class
+    /// rises one level per [`GroupScheduler::set_park_promote`]
+    /// interval, so a reseated long-parked victim cannot be re-preempted
+    /// by the same burst that parked it (the starvation bound).
+    pub park_credit: Duration,
 }
 
 /// A retired sequence with its true per-request statistics (these
@@ -500,6 +566,40 @@ pub trait StepBackend {
     /// layers so chains rebuild in the new mode; the caller re-grounds
     /// afterwards. No-op for backends without a resident layer.
     fn set_apply_override(&mut self, _mode: Option<ApplyMode>) {}
+    /// Live-context tiers this backend can execute at, ascending and
+    /// ending at the full compiled context (`manifest.ctx_tiers`). The
+    /// default — just the full context — makes tiering a no-op for
+    /// backends without tiered executables.
+    fn ctx_tiers(&self) -> Vec<usize> {
+        vec![self.dims().ctx]
+    }
+    /// Target live-context rows for subsequent dispatches (a value from
+    /// [`StepBackend::ctx_tiers`]). Backends apply it to their resident
+    /// planner at the next run; the scheduler forces a grounding prefill
+    /// on every tier change, which rebuilds the retained chain at the
+    /// new shapes in-graph. No-op for backends without a resident layer.
+    fn set_live_ctx(&mut self, _rows: usize) {}
+    /// Ledger-only: count `blocks` trailing gen blocks a retiring
+    /// sequence never decoded (EOS-guard completion before its
+    /// `gen_len`). No-op for backends without a transfer ledger.
+    fn note_early_retire(&mut self, _caches: &mut GroupCaches, _blocks: u64) {}
+    /// Block-sliced grounding prefill: like [`StepBackend::run_prefill`],
+    /// but the host downlink is each refreshed slot's CURRENT block
+    /// window — `[B, block, V]` instead of the whole gen region —
+    /// selected in-graph by the `block_starts` uplink (batch-indexed,
+    /// gen-relative; don't-care for slots outside the refresh set). The
+    /// default delegates to the full-region prefill, so the sliced
+    /// downlink is purely an optimization backends opt into.
+    fn run_prefill_blk(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        _block_starts: &[usize],
+        _block: usize,
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        self.run_prefill(tokens, slots, caches)
+    }
 }
 
 /// Batch-class switch damping for
@@ -593,6 +693,22 @@ impl ClassState {
 struct ParkedVictim {
     seq: SeqState,
     row: Vec<i32>,
+    /// when this victim was parked — its aging clock (see
+    /// [`GroupScheduler::set_park_promote`])
+    parked_at: Instant,
+}
+
+impl ParkedVictim {
+    /// Effective class under the aging ladder: base class promoted one
+    /// level per `promote` interval of total parked time (this park plus
+    /// any earlier ones banked in `park_credit`).
+    fn effective_slo(&self, promote: Option<Duration>) -> SloClass {
+        aged_class(
+            self.seq.slo,
+            self.seq.park_credit + self.parked_at.elapsed(),
+            promote,
+        )
+    }
 }
 
 /// Outcome of a [`GroupScheduler::resume_victim`] attempt.
@@ -640,7 +756,25 @@ pub struct GroupScheduler<'a> {
     /// for pressure to drop (highest-priority, then oldest, resumes
     /// first)
     parked_victims: Vec<ParkedVictim>,
+    /// live-context tiering: when on, every tick sizes the dispatched
+    /// context to the live decode frontier (see
+    /// [`GroupScheduler::enable_live_ctx`]); off by default so the
+    /// pre-tier ledger stays bit-identical
+    live_ctx_enabled: bool,
+    /// the tier currently applied to the backend (0 = not yet set)
+    live_tier: usize,
+    /// tier changes applied after the initial selection (each forces a
+    /// full-group grounding prefill at the new shapes)
+    pub tier_switches: usize,
+    /// aging interval of the preemption starvation bound: a parked
+    /// victim's effective class rises one priority level per interval
+    /// of total parked time (see [`GroupScheduler::set_park_promote`])
+    park_promote: Option<Duration>,
 }
+
+/// Default aging interval for parked preemption victims: long against a
+/// tick, short against any client-visible deadline.
+const DEFAULT_PARK_PROMOTE: Duration = Duration::from_millis(200);
 
 impl<'a> GroupScheduler<'a> {
     /// Single-class scheduler over `n_slots` slots (the pre-pool
@@ -688,7 +822,61 @@ impl<'a> GroupScheduler<'a> {
             demand_ewma: 0.0,
             hold_left: 0,
             parked_victims: Vec::new(),
+            live_ctx_enabled: false,
+            live_tier: 0,
+            tier_switches: 0,
+            park_promote: Some(DEFAULT_PARK_PROMOTE),
         })
+    }
+
+    /// Set (or disable, with `None`) the aging interval of the
+    /// preemption starvation bound. A parked victim's effective class
+    /// rises one priority level per interval of total parked time, so a
+    /// sustained burst of higher-class arrivals can delay it by at most
+    /// `interval × (its class distance to latency_sensitive)` before it
+    /// outranks fresh arrivals — which both resumes it ahead of them and
+    /// (the credit survives reseating) shields it from being immediately
+    /// re-preempted by the same burst.
+    pub fn set_park_promote(&mut self, interval: Option<Duration>) {
+        self.park_promote = interval;
+    }
+
+    /// Opt into live-context decoding: each tick the scheduler computes
+    /// the group's live decode frontier — per occupied slot, `prompt +
+    /// min(gen_len, (block_idx + 1) · block)` rows, maximized over the
+    /// group — and dispatches at the smallest backend context tier that
+    /// covers it ([`StepBackend::ctx_tiers`]). Fully-decoded suffix
+    /// blocks beyond the frontier are pruned from the attention context
+    /// (their committed tokens stay in the host mirror for the final
+    /// downlink), and grounding prefills downlink only the current block
+    /// window ([`StepBackend::run_prefill_blk`]). Every tier change —
+    /// up when a sequence enters a block past the frontier, down when
+    /// retirement shrinks it — forces a full-group grounding prefill,
+    /// which regenerates every live row in-graph at the new shapes, so
+    /// a pruned run is trajectory-exact with the full-context run (same
+    /// unmask decisions from the same block-window logits). Off by
+    /// default: with tiering off every dispatch and every ledger byte is
+    /// identical to the pre-tier scheduler.
+    pub fn enable_live_ctx(&mut self, on: bool) {
+        self.live_ctx_enabled = on;
+        if !on {
+            let ctx = self.backend.dims().ctx;
+            if self.live_tier != 0 && self.live_tier != ctx {
+                self.backend.set_live_ctx(ctx);
+            }
+            self.live_tier = 0;
+        }
+    }
+
+    /// Whether live-context tiering is on.
+    pub fn live_ctx_enabled(&self) -> bool {
+        self.live_ctx_enabled
+    }
+
+    /// The context tier currently applied to the backend (`None` before
+    /// the first tiered tick or with tiering off).
+    pub fn live_tier(&self) -> Option<usize> {
+        (self.live_ctx_enabled && self.live_tier != 0).then_some(self.live_tier)
     }
 
     /// The backend's cumulative transfer ledger (resident-cache
@@ -754,9 +942,14 @@ impl<'a> GroupScheduler<'a> {
         self.parked_victims.iter().map(|v| v.seq.id).collect()
     }
 
-    /// Service class of the best (highest-priority) parked victim.
+    /// Effective service class of the best (highest-priority) parked
+    /// victim, under the aging ladder: a long-parked victim reports a
+    /// promoted class here, so the router's resume gate lets it beat
+    /// fresh arrivals of the class it has aged into (the starvation
+    /// bound — resume wins class ties against the queue).
     pub fn best_parked_class(&self) -> Option<SloClass> {
-        self.parked_victims.iter().map(|v| v.seq.slo).min()
+        let p = self.park_promote;
+        self.parked_victims.iter().map(|v| v.effective_slo(p)).min()
     }
 
     /// Preempt one seated sequence on behalf of a waiter of class
@@ -773,13 +966,18 @@ impl<'a> GroupScheduler<'a> {
     pub fn preempt_victim(&mut self, waiter: SloClass) -> Option<u64> {
         let ac = self.active_class;
         let d = *self.backend.dims();
+        let promote = self.park_promote;
         let slot = {
             let st = &self.states[ac];
             (0..st.batch)
                 .filter(|&s| {
-                    st.slots[s]
-                        .as_ref()
-                        .is_some_and(|seq| seq.slo > waiter && seq.i_b == 0)
+                    st.slots[s].as_ref().is_some_and(|seq| {
+                        // eligibility is judged at the AGED class: a
+                        // reseated victim keeps its banked park credit,
+                        // so the burst that parked it once cannot park
+                        // it again (the starvation bound's other half)
+                        aged_class(seq.slo, seq.park_credit, promote) > waiter && seq.i_b == 0
+                    })
                 })
                 .max_by_key(|&s| {
                     let seq = st.slots[s].as_ref().unwrap();
@@ -792,7 +990,7 @@ impl<'a> GroupScheduler<'a> {
         let row = st.tokens[slot * d.ctx..(slot + 1) * d.ctx].to_vec();
         st.caches.reset_slot(slot);
         let id = seq.id;
-        self.parked_victims.push(ParkedVictim { seq, row });
+        self.parked_victims.push(ParkedVictim { seq, row, parked_at: Instant::now() });
         self.backend.note_preempt(PreemptEvent::Parked);
         Some(id)
     }
@@ -810,11 +1008,12 @@ impl<'a> GroupScheduler<'a> {
         if self.parked_victims.is_empty() {
             return ResumeOutcome::None;
         }
+        let promote = self.park_promote;
         let best = self
             .parked_victims
             .iter()
             .enumerate()
-            .min_by_key(|(_, v)| (v.seq.slo, v.seq.admitted))
+            .min_by_key(|(_, v)| (v.effective_slo(promote), v.seq.admitted))
             .map(|(i, _)| i)
             .unwrap();
         // shed an expired victim without consuming a slot
@@ -825,7 +1024,7 @@ impl<'a> GroupScheduler<'a> {
         };
         let d = *self.backend.dims();
         if expired {
-            let ParkedVictim { seq, row } = self.parked_victims.remove(best);
+            let ParkedVictim { seq, row, .. } = self.parked_victims.remove(best);
             self.backend.note_preempt(PreemptEvent::Dropped);
             let gen_row = &row[d.prompt_len..];
             let mask = self.backend.tokenizer().mask;
@@ -855,7 +1054,11 @@ impl<'a> GroupScheduler<'a> {
         let Some(slot) = self.states[ac].slots.iter().position(|s| s.is_none()) else {
             return ResumeOutcome::None;
         };
-        let ParkedVictim { seq, row } = self.parked_victims.remove(best);
+        let ParkedVictim { mut seq, row, parked_at } = self.parked_victims.remove(best);
+        // bank this park's age: the credit keeps the victim's effective
+        // class promoted after reseating, so the burst that parked it
+        // cannot immediately re-preempt it
+        seq.park_credit += parked_at.elapsed();
         let st = &mut self.states[ac];
         st.tokens[slot * d.ctx..(slot + 1) * d.ctx].copy_from_slice(&row);
         st.caches.reset_slot(slot);
@@ -1108,6 +1311,7 @@ impl<'a> GroupScheduler<'a> {
             timeout_ms: input.params.timeout_ms,
             slo: input.params.slo,
             first_commit: None,
+            park_credit: Duration::ZERO,
         });
         Ok(slot)
     }
@@ -1174,6 +1378,49 @@ impl<'a> GroupScheduler<'a> {
         }
         self.ticks += 1;
 
+        // 0. live-context tier selection (opt-in). The live frontier is
+        //    the furthest context row any occupied slot's CURRENT block
+        //    reaches; the tier is the smallest compiled context that
+        //    covers it. Both directions apply immediately — a sequence
+        //    entering a block past the frontier must widen the context
+        //    before its step, and a retirement shrinks it the very next
+        //    tick. Every change forces a full-group grounding prefill:
+        //    the retained chain's shapes change with the tier, and the
+        //    prefill regenerates every live row in-graph at the new
+        //    shapes (the same grounding a class switch relies on).
+        let mut force_ground = false;
+        if self.live_ctx_enabled {
+            let d = *self.backend.dims();
+            let frontier = occupied
+                .iter()
+                .map(|&s| {
+                    let seq = self.states[ac].slots[s].as_ref().unwrap();
+                    seq.gen_len.min((seq.block_idx + 1) * self.cfg.block)
+                })
+                .max()
+                .unwrap_or(self.cfg.block);
+            let need = d.prompt_len + frontier;
+            let tier = self
+                .backend
+                .ctx_tiers()
+                .into_iter()
+                .filter(|&t| t >= need)
+                .min()
+                .unwrap_or(d.ctx);
+            if self.live_tier == 0 && tier == d.ctx {
+                // first selection already at the compiled maximum: the
+                // backend starts there, so nothing changes shape
+                self.live_tier = tier;
+            } else if tier != self.live_tier {
+                self.backend.set_live_ctx(tier);
+                if self.live_tier != 0 {
+                    self.tier_switches += 1;
+                }
+                self.live_tier = tier;
+                force_ground = true;
+            }
+        }
+
         // 1. per-slot compute plan
         let mut prefill_slots: Vec<usize> = Vec::new();
         // key: (block index, plan discriminant) — BTreeMap for a
@@ -1181,10 +1428,16 @@ impl<'a> GroupScheduler<'a> {
         let mut step_groups: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
         for &s in &occupied {
             let seq = self.states[ac].slots[s].as_ref().unwrap();
-            let plan = match self.cfg.method {
-                Method::Vanilla => StepPlan::Prefill,
-                Method::DualCache => RefreshPolicy::plan_dual(seq.i_b),
-                Method::EsDllm => self.cfg.refresh.plan_es(seq.iters, seq.i_b),
+            let plan = if force_ground {
+                // tier-change tick: every occupant re-grounds at the new
+                // context shapes before any step can chain
+                StepPlan::Prefill
+            } else {
+                match self.cfg.method {
+                    Method::Vanilla => StepPlan::Prefill,
+                    Method::DualCache => RefreshPolicy::plan_dual(seq.i_b),
+                    Method::EsDllm => self.cfg.refresh.plan_es(seq.iters, seq.i_b),
+                }
             };
             match plan {
                 StepPlan::Prefill => prefill_slots.push(s),
@@ -1202,7 +1455,30 @@ impl<'a> GroupScheduler<'a> {
         if !prefill_slots.is_empty() {
             {
                 let st = &mut self.states[ac];
-                self.backend.run_prefill(&st.tokens, &prefill_slots, &mut st.caches)?;
+                if self.live_ctx_enabled {
+                    // block-sliced downlink: each refreshed slot only
+                    // needs its current block's logit rows re-merged —
+                    // the unmask decision never reads outside the block.
+                    // `starts` is batch-indexed (don't-care for slots
+                    // outside the refresh set)
+                    let mut starts = vec![0usize; st.batch];
+                    for &s in &prefill_slots {
+                        let seq = st.slots[s].as_ref().unwrap();
+                        starts[s] = seq
+                            .gen_len
+                            .saturating_sub(self.cfg.block)
+                            .min(seq.block_idx * self.cfg.block);
+                    }
+                    self.backend.run_prefill_blk(
+                        &st.tokens,
+                        &prefill_slots,
+                        &starts,
+                        self.cfg.block,
+                        &mut st.caches,
+                    )?;
+                } else {
+                    self.backend.run_prefill(&st.tokens, &prefill_slots, &mut st.caches)?;
+                }
             }
             self.n_prefill += 1;
             for &s in &prefill_slots {
@@ -1427,6 +1703,19 @@ impl<'a> GroupScheduler<'a> {
                     .is_some_and(|ms| seq.submitted.elapsed().as_millis() as u64 >= ms)
             };
             if done || timed_out {
+                // live-context ledger: trailing blocks of this request's
+                // gen budget that the EOS guard completed without ever
+                // decoding (they were never scheduled, so they never
+                // widened the live frontier)
+                if done && self.live_ctx_enabled {
+                    let decoded = self.states[ac].slots[s].as_ref().unwrap().block_idx;
+                    let total = gen_len / self.cfg.block;
+                    if decoded < total {
+                        let st = &mut self.states[ac];
+                        self.backend
+                            .note_early_retire(&mut st.caches, (total - decoded) as u64);
+                    }
+                }
                 let (text, tokens_out) = {
                     let row = &self.states[ac].gen_row(&d, s)[..gen_len];
                     let text = self.backend.tokenizer().decode(row);
@@ -1568,6 +1857,10 @@ pub struct PjrtBackend<'rt> {
     /// banked transfer ledger of resident layers retired by an
     /// apply-mode change (keeps `transfer_stats` monotone)
     retired_stats: TransferStats,
+    /// scheduler-selected live-context tier (rows), applied to each
+    /// class's resident planner at the next dispatch; the full context
+    /// until [`StepBackend::set_live_ctx`] narrows it
+    live_ctx_target: usize,
     /// mean |Δconfidence| at the last step — the adaptive-ratio signal.
     /// Group-scoped (shared by every occupant), matching the
     /// pre-refactor engine; see the module docs for the isolation
@@ -1593,6 +1886,7 @@ impl<'rt> PjrtBackend<'rt> {
         owner: Option<u64>,
     ) -> Result<PjrtBackend<'rt>> {
         let arch = rt.arch(&cfg.arch)?.clone();
+        let arch_ctx = arch.dims.ctx;
         let injector = FaultInjector::new(cfg.fault_plan.clone());
         Ok(PjrtBackend {
             rt,
@@ -1610,6 +1904,7 @@ impl<'rt> PjrtBackend<'rt> {
             injector,
             apply_override: None,
             retired_stats: TransferStats::default(),
+            live_ctx_target: arch_ctx,
             conf_drift: 1.0,
         })
     }
@@ -1665,6 +1960,120 @@ impl<'rt> PjrtBackend<'rt> {
             && donated(&apply_step_exe_name(StepPlan::DualStep, self.cfg.block, batch))
             && (self.cfg.method != Method::EsDllm
                 || donated(&apply_step_exe_name(StepPlan::EsStep, self.cfg.block, batch)))
+    }
+
+    /// The live-context tier dispatches actually run at for `batch`: the
+    /// scheduler's target, floored back to the full context unless the
+    /// artifacts carry the COMPLETE tier family this config can reach at
+    /// that class — a mid-generation plan must never discover its tier
+    /// executable missing with the chain already shaped for the tier.
+    fn effective_live(&self, batch: usize) -> usize {
+        let ctx = self.arch.dims.ctx;
+        let live = self.live_ctx_target;
+        if live == 0 || live >= ctx {
+            return ctx;
+        }
+        let has = |base: &str| {
+            self.arch.executables.contains_key(&self.arch.tier_exe_name(base, live))
+        };
+        if has(&prefill_apply_exe_name(batch))
+            && has(&apply_step_exe_name(StepPlan::DualStep, self.cfg.block, batch))
+            && (self.cfg.method != Method::EsDllm
+                || has(&apply_step_exe_name(StepPlan::EsStep, self.cfg.block, batch)))
+        {
+            live
+        } else {
+            ctx
+        }
+    }
+
+    /// Apply the scheduler's live-context target to this class's
+    /// resident planner before a dispatch. A tier change drops the
+    /// retained chain handles — their device shapes belong to the old
+    /// tier — and the grounding prefill the scheduler forces on the
+    /// same tick re-seeds them at the new shapes and regenerates every
+    /// live row in-graph. The planner's seeded state carries over (the
+    /// reshape is modeled as an in-place device realloc, not a host
+    /// reseed), so no reseed bytes are charged — matching the sim
+    /// planner byte-for-byte.
+    fn apply_live_ctx(&mut self, batch: usize) {
+        let live = self.effective_live(batch);
+        let r = self.residents.get_mut(&batch).expect("activated");
+        if r.apply_mode() == ApplyMode::Device && r.live_ctx() != live {
+            r.chain.handles.kv_chain = None;
+            r.chain.handles.ind_chain = None;
+            r.chain.handles.conf_chain = None;
+            r.set_live_ctx(live);
+        }
+    }
+
+    /// Zero chain-seed tensors (kv, ind, conf) at a narrowed context
+    /// tier of `live` rows. Contents are irrelevant: the tier seed only
+    /// exists so the first tiered execution has chain inputs of the
+    /// right shape, and the full-group grounding prefill the scheduler
+    /// forces on the tier-change tick regenerates every occupied row
+    /// in-graph (vacant rows are garbage by the spectator contract).
+    fn tier_seed_zeros(d: &Dims, batch: usize, live: usize) -> (HostTensor, HostTensor, HostTensor) {
+        let g = live - d.prompt_len;
+        (
+            HostTensor::zeros(
+                DType::Bf16,
+                &[d.n_layers, 2, batch, d.n_kv_heads, live, d.head_dim],
+            ),
+            HostTensor::zeros(DType::Bf16, &[d.n_layers, batch, g, d.d_model]),
+            HostTensor::zeros(DType::F32, &[batch, g]),
+        )
+    }
+
+    /// The prefill token uplink view at the current tier: the pooled
+    /// `[B, ctx]` staging buffer as-is at the full context, or a
+    /// `[B, live]` row-sliced copy at a narrower tier (the tiered
+    /// executables take `prompt + gen_live` token columns).
+    fn tier_tokens(&self, batch: usize, live: usize) -> Result<Option<HostTensor>> {
+        if live >= self.arch.dims.ctx {
+            return Ok(None);
+        }
+        let r = &self.residents[&batch];
+        let full = r.prefill_tokens.as_i32()?;
+        let ctx = self.arch.dims.ctx;
+        let mut data = Vec::with_capacity(batch * live);
+        for b in 0..batch {
+            data.extend_from_slice(&full[b * ctx..b * ctx + live]);
+        }
+        Ok(Some(HostTensor::I32 { shape: vec![batch, live], data }))
+    }
+
+    /// Seed any cold retained chain handles (first call of a chain,
+    /// post-invalidation, or a tier change dropped them): the host cache
+    /// views at the full context — the one whole-cache upload of a
+    /// generation — or zero tensors of the tier shapes at a narrower
+    /// tier ([`PjrtBackend::tier_seed_zeros`]).
+    fn seed_chain(&mut self, batch: usize, live: usize, caches: &GroupCaches) -> Result<()> {
+        let d = self.arch.dims;
+        let tier = (live < d.ctx).then(|| Self::tier_seed_zeros(&d, batch, live));
+        let r = self.residents.get_mut(&batch).expect("activated");
+        if r.chain.handles.kv_chain.is_none() {
+            let (buf, lit) = match &tier {
+                Some((kv, _, _)) => self.rt.upload_tensor_view(&kv.view())?,
+                None => self.rt.upload_tensor_view(&caches.kv_view())?,
+            };
+            r.chain.handles.kv_chain = Some(UploadHandle { buf, lit });
+        }
+        if r.chain.handles.ind_chain.is_none() {
+            let (buf, lit) = match &tier {
+                Some((_, ind, _)) => self.rt.upload_tensor_view(&ind.view())?,
+                None => self.rt.upload_tensor_view(&caches.ind_view("h")?)?,
+            };
+            r.chain.handles.ind_chain = Some(UploadHandle { buf, lit });
+        }
+        if r.chain.handles.conf_chain.is_none() {
+            let (buf, lit) = match &tier {
+                Some((_, _, conf)) => self.rt.upload_tensor_view(&conf.view())?,
+                None => self.rt.upload_tensor_view(&caches.conf_view())?,
+            };
+            r.chain.handles.conf_chain = Some(UploadHandle { buf, lit });
+        }
+        Ok(())
     }
 
     /// Activate the resident layer for `caches`' batch class: resume the
@@ -1887,6 +2296,7 @@ impl StepBackend for PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<()> {
         self.activate(caches)?;
+        self.apply_live_ctx(caches.batch);
         self.check_run_faults(caches, "prefill")?;
         let batch = caches.batch;
         if self.residents[&batch].apply_mode() == ApplyMode::Device {
@@ -1961,6 +2371,7 @@ impl StepBackend for PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<()> {
         self.activate(caches)?;
+        self.apply_live_ctx(caches.batch);
         self.check_run_faults(caches, "step")?;
         let batch = caches.batch;
         let result = if self.residents[&batch].apply_mode() == ApplyMode::Device {
@@ -1990,18 +2401,25 @@ impl StepBackend for PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<(usize, FusedCommits)> {
         self.activate(caches)?;
+        self.apply_live_ctx(caches.batch);
         let batch = caches.batch;
         if self.residents[&batch].apply_mode() != ApplyMode::Device {
             return Ok((0, FusedCommits::new())); // fused variants exist only on the apply path
         }
         // floor the requested depth to the deepest compiled unroll that
-        // fits the run; decline entirely when none was compiled
+        // fits the run — at the CURRENT context tier (a fused depth
+        // compiled only at the full context cannot serve a narrowed
+        // chain); decline entirely when none was compiled
+        let live = self.residents[&batch].live_ctx();
         let Some(depth) = FUSED_KS.iter().copied().find(|&kk| {
             kk <= k
                 && self
                     .arch
                     .executables
-                    .get(&fused_step_exe_name(kk, self.cfg.block, batch))
+                    .get(&self.arch.tier_exe_name(
+                        &fused_step_exe_name(kk, self.cfg.block, batch),
+                        live,
+                    ))
                     .map(|e| e.kind == ExeKind::StepApplyK)
                     .unwrap_or(false)
         }) else {
@@ -2031,6 +2449,53 @@ impl StepBackend for PjrtBackend<'_> {
 
     fn transfer_stats(&self) -> TransferStats {
         self.merged_stats()
+    }
+
+    fn ctx_tiers(&self) -> Vec<usize> {
+        self.rt.manifest.generation.ctx_tiers.clone()
+    }
+
+    fn set_live_ctx(&mut self, rows: usize) {
+        self.live_ctx_target = rows;
+    }
+
+    fn note_early_retire(&mut self, caches: &mut GroupCaches, blocks: u64) {
+        if let Some(r) = self.residents.get_mut(&caches.batch) {
+            r.note_early_retired(blocks);
+        }
+    }
+
+    fn run_prefill_blk(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        block_starts: &[usize],
+        block: usize,
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        self.activate(caches)?;
+        let batch = caches.batch;
+        self.apply_live_ctx(batch);
+        // the sliced downlink needs the blk executable (at the current
+        // tier) and the device-apply transport; otherwise the full
+        // gen-region prefill serves the same request
+        let blk_ok = self.residents[&batch].apply_mode() == ApplyMode::Device && {
+            let live = self.residents[&batch].live_ctx();
+            self.arch
+                .executables
+                .contains_key(&self.arch.tier_exe_name(&prefill_apply_blk_exe_name(block, batch), live))
+        };
+        if !blk_ok {
+            return self.run_prefill(tokens, slots, caches);
+        }
+        self.check_run_faults(caches, "prefill")?;
+        let result = self.prefill_device_blk_impl(tokens, slots, block_starts, block, caches);
+        if result.is_err() {
+            if let Some(r) = self.residents.get_mut(&batch) {
+                r.invalidate(caches);
+            }
+        }
+        result
     }
 
     fn invalidate_resident(&mut self, caches: &mut GroupCaches) {
@@ -2280,29 +2745,29 @@ impl PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<()> {
         let batch = caches.batch;
-        let r = self.residents.get_mut(&batch).expect("activated");
+        let live = self.residents[&batch].live_ctx();
         // sync accounting shared with the sim planner (byte-exact parity)
-        r.sync_prefill_device(caches, "h", tokens, slots)?;
-        if r.chain.handles.kv_chain.is_none() {
-            let (buf, lit) = self.rt.upload_tensor_view(&caches.kv_view())?;
-            r.chain.handles.kv_chain = Some(UploadHandle { buf, lit });
-        }
-        if r.chain.handles.ind_chain.is_none() {
-            let (buf, lit) = self.rt.upload_tensor_view(&caches.ind_view("h")?)?;
-            r.chain.handles.ind_chain = Some(UploadHandle { buf, lit });
-        }
-        if r.chain.handles.conf_chain.is_none() {
-            let (buf, lit) = self.rt.upload_tensor_view(&caches.conf_view())?;
-            r.chain.handles.conf_chain = Some(UploadHandle { buf, lit });
-        }
-        let exe = self.arch.exe(&prefill_apply_exe_name(batch))?;
+        self.residents
+            .get_mut(&batch)
+            .expect("activated")
+            .sync_prefill_device(caches, "h", tokens, slots)?;
+        // tiered uplink slice ([B, live] token columns), then (re)seed
+        // any cold chain handles at the dispatch shapes
+        let tok_tier = self.tier_tokens(batch, live)?;
+        self.seed_chain(batch, live, caches)?;
+        let exe =
+            self.arch.exe(&self.arch.tier_exe_name(&prefill_apply_exe_name(batch), live))?;
         debug_assert_eq!(exe.kind, ExeKind::PrefillApply);
         let retain = exe.retain_flags();
+        let r = self.residents.get_mut(&batch).expect("activated");
         let kv_buf = &r.chain.handles.kv_chain.as_ref().expect("just seeded").buf;
         let ind_buf = &r.chain.handles.ind_chain.as_ref().expect("just seeded").buf;
         let conf_buf = &r.chain.handles.conf_chain.as_ref().expect("just seeded").buf;
         let args = [
-            ExecArg::Host(r.prefill_tokens.view()),
+            ExecArg::Host(match &tok_tier {
+                Some(t) => t.view(),
+                None => r.prefill_tokens.view(),
+            }),
             ExecArg::Device(kv_buf),
             ExecArg::Device(ind_buf),
             ExecArg::Device(conf_buf),
@@ -2316,9 +2781,90 @@ impl PjrtBackend<'_> {
         // device); confidence is recomputed from the same rows the
         // device conf merge used
         let logits_i = exe.output_index("logits_gen")?;
-        caches.merge_gen_logits_slots(out.host_at(logits_i, "logits_gen")?, slots)?;
+        let lg = out.host_at(logits_i, "logits_gen")?;
+        if live < self.arch.dims.ctx {
+            caches.merge_gen_logits_prefix_slots(lg, live - self.arch.dims.prompt_len, slots)?;
+        } else {
+            caches.merge_gen_logits_slots(lg, slots)?;
+        }
         // chain the retained outputs; the previous buffers drop here, so
         // device memory stays bounded at one live copy per tensor
+        r.chain.handles.kv_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("kv")?, "kv")?,
+            lit: None,
+        });
+        r.chain.handles.ind_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("ind")?, "ind")?,
+            lit: None,
+        });
+        r.chain.handles.conf_chain = Some(UploadHandle {
+            buf: out.take_retained(exe.output_index("conf")?, "conf")?,
+            lit: None,
+        });
+        r.note_prefill_applied(caches, slots);
+        self.flush_transfer();
+        Ok(())
+    }
+
+    /// Block-sliced device-apply prefill (`prefill_apply_blk*`): like
+    /// [`PjrtBackend::prefill_device_impl`], but the executable gathers
+    /// each row's CURRENT block window of gen logits in-graph from the
+    /// per-row `blk_start` uplink and downloads `logits_blk`
+    /// `[B, block, V]` instead of the whole gen region — the only rows
+    /// the unmask decision can read. Cache outputs chain identically.
+    fn prefill_device_blk_impl(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        block_starts: &[usize],
+        block: usize,
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        let batch = caches.batch;
+        let live = self.residents[&batch].live_ctx();
+        // planner parity with the sim: the blk variant additionally
+        // uplinks the [B] blk_start vector and downlinks block-sized
+        // logit rows
+        self.residents
+            .get_mut(&batch)
+            .expect("activated")
+            .sync_prefill_device_blk(caches, "h", tokens, slots, block)?;
+        let tok_tier = self.tier_tokens(batch, live)?;
+        self.seed_chain(batch, live, caches)?;
+        let exe = self
+            .arch
+            .exe(&self.arch.tier_exe_name(&prefill_apply_blk_exe_name(block, batch), live))?;
+        debug_assert_eq!(exe.kind, ExeKind::PrefillApply);
+        let retain = exe.retain_flags();
+        let starts_t = HostTensor::I32 {
+            shape: vec![batch],
+            data: block_starts.iter().map(|&g0| g0 as i32).collect(),
+        };
+        let r = self.residents.get_mut(&batch).expect("activated");
+        let kv_buf = &r.chain.handles.kv_chain.as_ref().expect("just seeded").buf;
+        let ind_buf = &r.chain.handles.ind_chain.as_ref().expect("just seeded").buf;
+        let conf_buf = &r.chain.handles.conf_chain.as_ref().expect("just seeded").buf;
+        let args = [
+            ExecArg::Host(match &tok_tier {
+                Some(t) => t.view(),
+                None => r.prefill_tokens.view(),
+            }),
+            ExecArg::Device(kv_buf),
+            ExecArg::Device(ind_buf),
+            ExecArg::Device(conf_buf),
+            // refresh mask: which rows this prefill regenerates
+            ExecArg::Host(r.occ_mask.view()),
+            ExecArg::Host(starts_t.view()),
+        ];
+        let mut out =
+            self.rt.run_retained(&self.arch, exe, &self.cfg.checkpoint, &args, &retain)?;
+        let logits_i = exe.output_index("logits_blk")?;
+        caches.merge_gen_logits_block_slots(
+            out.host_at(logits_i, "logits_blk")?,
+            block_starts,
+            block,
+            slots,
+        )?;
         r.chain.handles.kv_chain = Some(UploadHandle {
             buf: out.take_retained(exe.output_index("kv")?, "kv")?,
             lit: None,
@@ -2350,7 +2896,9 @@ impl PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<()> {
         let batch = caches.batch;
-        let exe_name = apply_step_exe_name(plan, self.cfg.block, batch);
+        let live = self.residents[&batch].live_ctx();
+        let exe_name =
+            self.arch.tier_exe_name(&apply_step_exe_name(plan, self.cfg.block, batch), live);
         let exe = self.arch.exe(&exe_name)?;
         debug_assert_eq!(exe.kind, ExeKind::StepApply);
         // layers the equivalent Host-apply step would download in its
@@ -2440,7 +2988,10 @@ impl PjrtBackend<'_> {
         caches: &mut GroupCaches,
     ) -> Result<FusedCommits> {
         let batch = caches.batch;
-        let exe = self.arch.exe(&fused_step_exe_name(k, self.cfg.block, batch))?;
+        let live = self.residents[&batch].live_ctx();
+        let exe = self
+            .arch
+            .exe(&self.arch.tier_exe_name(&fused_step_exe_name(k, self.cfg.block, batch), live))?;
         debug_assert_eq!(exe.kind, ExeKind::StepApplyK);
         let n_ind = if exe.skip.is_empty() {
             self.arch.dims.n_layers
@@ -3224,5 +3775,205 @@ mod tests {
         }
         assert_eq!(s.parked(), 0);
         assert!(matches!(s.resume_victim(), ResumeOutcome::None));
+    }
+
+    /// Tiered sim backend + fusion-friendly cadence (block 8, period 4);
+    /// `live` toggles the scheduler's live-context opt-in.
+    fn sched_live(n_slots: usize, k: usize, live: bool) -> GroupScheduler<'static> {
+        let base = SimCfg::default();
+        let tiers = SimCfg::default_ctx_tiers(&base.dims);
+        let backend = SimBackend::new(base.with_ctx_tiers(&tiers));
+        let cfg = SchedCfg {
+            method: Method::EsDllm,
+            block: 8,
+            refresh: RefreshPolicy { prompt_period: 16, block_period: 4 },
+            sampler: SamplerCfg::llada(),
+            seed: 0,
+            k,
+            hysteresis: None,
+        };
+        let mut s = GroupScheduler::new(Box::new(backend), n_slots, cfg).unwrap();
+        s.enable_live_ctx(live);
+        s
+    }
+
+    #[test]
+    fn live_ctx_pruned_decode_is_token_identical() {
+        // the tentpole acceptance: a pruned run (dispatches sized to the
+        // live frontier, suffix blocks dropped from the attention
+        // context) decodes the exact tokens of the full-context run,
+        // while every live-row counter shows the saved work
+        for prompt in ["abcdef", "abcdefghij", "a"] {
+            let mut full = sched_live(2, 1, false);
+            full.admit(input(1, prompt, SeqParams::default())).unwrap();
+            let f = run_to_drain(&mut full);
+            let mut live = sched_live(2, 1, true);
+            live.admit(input(1, prompt, SeqParams::default())).unwrap();
+            let l = run_to_drain(&mut live);
+            assert_eq!(l[0].text, f[0].text, "prompt {prompt:?}");
+            assert_eq!(l[0].iterations, f[0].iterations, "prompt {prompt:?}");
+            assert_eq!(l[0].tokens, f[0].tokens, "prompt {prompt:?}");
+            assert_eq!(
+                (l[0].n_prefill, l[0].n_dual, l[0].n_es),
+                (f[0].n_prefill, f[0].n_dual, f[0].n_es),
+                "prompt {prompt:?}"
+            );
+            let ls = live.transfer_stats();
+            let fs = full.transfer_stats();
+            assert!(
+                ls.live_row_ticks < ls.full_row_ticks,
+                "prompt {prompt:?}: every tick ran below the compiled ctx"
+            );
+            assert_eq!(
+                fs.live_row_ticks, fs.full_row_ticks,
+                "tiering off: live rows degenerate to the full context"
+            );
+            assert!(ls.suffix_blocks_pruned > 0, "prompt {prompt:?}");
+            assert_eq!(fs.suffix_blocks_pruned, 0);
+            assert!(
+                ls.flops_units < fs.flops_units,
+                "prompt {prompt:?}: pruned FLOPs {} !< full {}",
+                ls.flops_units,
+                fs.flops_units
+            );
+        }
+    }
+
+    #[test]
+    fn live_ctx_tier_widens_with_the_frontier() {
+        // 10 content chars span blocks 0 and 1: the run starts at the
+        // smallest tier and widens when block 1 opens. The widening is
+        // a counted switch; the initial selection is not.
+        let mut s = sched_live(1, 1, true);
+        s.admit(input(1, "abcdefghij", SeqParams::default())).unwrap();
+        s.tick().unwrap();
+        let d = SimCfg::default().dims;
+        assert_eq!(s.live_tier(), Some(d.prompt_len + 8), "block 0 tier");
+        assert_eq!(s.tier_switches, 0, "first selection is not a switch");
+        let done = run_to_drain(&mut s);
+        assert_eq!(done[0].text, "abcdefghij");
+        assert!(s.tier_switches >= 1, "block 1 widened the tier");
+        assert!(s.transfer_stats().early_retired_blocks >= 2, "blocks 2..4 never ran");
+    }
+
+    #[test]
+    fn live_ctx_early_retirement_prunes_trailing_blocks() {
+        // "ab" completes via the EOS guard at block 0's boundary with
+        // default gen_len 32 (4 blocks of 8): the 3 trailing blocks are
+        // retired wholesale and the tier never moves off the smallest
+        let mut s = sched_live(1, 1, true);
+        s.admit(input(3, "ab", SeqParams::default())).unwrap();
+        let done = run_to_drain(&mut s);
+        assert_eq!(done[0].text, "ab");
+        assert_eq!(s.tier_switches, 0, "one block of work: no tier motion");
+        assert_eq!(s.transfer_stats().early_retired_blocks, 3);
+    }
+
+    #[test]
+    fn live_ctx_fused_k_pruned_decode_is_token_identical() {
+        // fused k > 1 composes with tiering: the fused dispatch runs at
+        // the tier's executable and the pruned trajectory still matches
+        // the unpruned k = 1 baseline token for token
+        let mut base = sched_live(2, 1, false);
+        base.admit(input(1, "abcdefghij", SeqParams::default())).unwrap();
+        let b = run_to_drain(&mut base);
+        for k in [2usize, 4, 8] {
+            let mut s = sched_live(2, k, true);
+            s.admit(input(1, "abcdefghij", SeqParams::default())).unwrap();
+            let f = run_to_drain(&mut s);
+            assert_eq!(f[0].text, b[0].text, "k = {k}");
+            assert_eq!(f[0].iterations, b[0].iterations, "k = {k}");
+            assert_eq!(f[0].tokens, b[0].tokens, "k = {k}");
+            assert!(s.n_fused > 0, "k = {k} fused at least one run");
+            let ts = s.transfer_stats();
+            assert!(ts.suffix_blocks_pruned > 0, "k = {k}");
+            assert!(
+                ts.flops_units < base.transfer_stats().flops_units,
+                "k = {k}: fused + pruned saves FLOPs"
+            );
+        }
+    }
+
+    #[test]
+    fn live_ctx_mid_flight_admission_is_trajectory_exact() {
+        // the admission script of mid_flight_admission under tiering:
+        // A's block-1 frontier holds the tier up while B decodes its
+        // block 0, and both outputs match the untier run exactly
+        let run = |live: bool| {
+            let mut s = sched_live(2, 1, live);
+            s.admit(input(1, "abcdefghij", SeqParams::default())).unwrap();
+            s.tick().unwrap();
+            s.tick().unwrap();
+            s.admit(input(2, "ab", SeqParams::default())).unwrap();
+            assert_eq!(s.active(), 2);
+            let mut done = run_to_drain(&mut s);
+            done.sort_by_key(|f| f.id);
+            let switches = s.tier_switches;
+            (done, switches)
+        };
+        let (base, _) = run(false);
+        let (tiered, switches) = run(true);
+        assert_eq!(base.len(), 2);
+        for (b, t) in base.iter().zip(&tiered) {
+            assert_eq!(t.id, b.id);
+            assert_eq!(t.text, b.text, "seq {}", b.id);
+            assert_eq!(t.iterations, b.iterations, "seq {}", b.id);
+            assert_eq!(t.tokens, b.tokens, "seq {}", b.id);
+        }
+        assert!(switches >= 1, "A widening to block 1 switched the tier");
+    }
+
+    #[test]
+    fn live_ctx_preempt_resume_across_tier_switch_is_trajectory_exact() {
+        // park the victim at its block-0 boundary, serve an LS request
+        // at the narrow tier, then resume: the victim's block 1 widens
+        // the tier (a counted switch + grounding prefill) and its output
+        // still matches the identical script with tiering off
+        let run = |live: bool| {
+            let mut s = sched_live(1, 1, live);
+            s.admit(input(1, "abcdefghij", SeqParams::default())).unwrap();
+            s.tick().unwrap();
+            while !s.at_block_boundary() {
+                s.tick().unwrap();
+            }
+            assert_eq!(s.preempt_victim(SloClass::LatencySensitive), Some(1));
+            let ls = SeqParams { slo: SloClass::LatencySensitive, ..Default::default() };
+            s.admit(input(2, "xy", ls)).unwrap();
+            let mut done = run_to_drain(&mut s);
+            match s.resume_victim() {
+                ResumeOutcome::Seated(id) => assert_eq!(id, 1),
+                other => panic!("expected Seated, got {other:?}"),
+            }
+            done.extend(run_to_drain(&mut s));
+            done.sort_by_key(|f| f.id);
+            let switches = s.tier_switches;
+            (done, switches)
+        };
+        let (base, _) = run(false);
+        let (tiered, switches) = run(true);
+        assert_eq!(base.len(), 2);
+        for (b, t) in base.iter().zip(&tiered) {
+            assert_eq!(t.id, b.id);
+            assert_eq!(t.text, b.text, "seq {}", b.id);
+            assert_eq!(t.iterations, b.iterations, "seq {}", b.id);
+            assert_eq!(t.tokens, b.tokens, "seq {}", b.id);
+        }
+        assert!(switches >= 1, "the resumed block 1 widened the tier");
+    }
+
+    #[test]
+    fn live_ctx_per_request_gen_len_caps_the_frontier() {
+        // a gen_len-8 request never opens block 1, so its frontier (and
+        // the dispatched tier) stays at the smallest rung even though
+        // the compiled maximum is 4 blocks wider
+        let mut s = sched_live(1, 1, true);
+        let params = SeqParams { gen_len: Some(8), ..Default::default() };
+        s.admit(input(1, "abcdefghijkl", params)).unwrap();
+        s.tick().unwrap();
+        let d = SimCfg::default().dims;
+        assert_eq!(s.live_tier(), Some(d.prompt_len + 8));
+        let done = run_to_drain(&mut s);
+        assert_eq!(done[0].text, "abcdefgh", "truncated at gen_len");
+        assert_eq!(s.tier_switches, 0, "the cap pinned the tier");
     }
 }

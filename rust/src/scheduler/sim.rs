@@ -87,6 +87,12 @@ pub struct SimCfg {
     /// stub device models, so an ordinal faults at the same point on
     /// both layers.
     pub fault_plan: FaultPlan,
+    /// modeled context-tier family (ascending live-context lengths the
+    /// compiled executables exist at; empty = untiered, the full `ctx`
+    /// only). Mirrors the manifest's `generation.ctx_tiers` so the sim
+    /// planner prices pruned ticks byte-exactly against the PJRT
+    /// ledger.
+    pub ctx_tiers: Vec<usize>,
 }
 
 impl Default for SimCfg {
@@ -111,6 +117,7 @@ impl Default for SimCfg {
             es_cost: Duration::ZERO,
             apply: ApplyMode::Device,
             fault_plan: FaultPlan::default(),
+            ctx_tiers: Vec::new(),
         }
     }
 }
@@ -155,6 +162,27 @@ impl SimCfg {
         self.fault_plan = plan;
         self
     }
+
+    /// Model a compiled context-tier family (the default tier ladder the
+    /// compile pipeline emits: gen-region sublengths plus the full
+    /// context). Enables live-context pricing when the scheduler opts
+    /// in via [`super::GroupScheduler::enable_live_ctx`].
+    pub fn with_ctx_tiers(mut self, tiers: &[usize]) -> SimCfg {
+        self.ctx_tiers = tiers.to_vec();
+        self
+    }
+
+    /// The default tier ladder matching the compile pipeline's
+    /// `CTX_TIER_GEN` sublengths for this geometry: one tier per
+    /// gen-region multiple of 8 plus the full context.
+    pub fn default_ctx_tiers(dims: &Dims) -> Vec<usize> {
+        let mut tiers: Vec<usize> = (8..dims.gen_len)
+            .step_by(8)
+            .map(|g| dims.prompt_len + g)
+            .collect();
+        tiers.push(dims.ctx);
+        tiers
+    }
 }
 
 pub struct SimBackend {
@@ -198,6 +226,10 @@ pub struct SimBackend {
     /// apply-mode change, so `transfer_stats` stays monotone across a
     /// Host quarantine
     retired_stats: TransferStats,
+    /// live-context rows the scheduler last selected via `set_live_ctx`
+    /// (the tier every Device dispatch prices at); `dims.ctx` until the
+    /// scheduler opts in, which keeps the untiered ledger bit-identical
+    live_ctx_target: usize,
 }
 
 /// Pool key namespace for the simulated architecture.
@@ -214,6 +246,7 @@ impl SimBackend {
     /// worker to one pool).
     pub fn with_pool(cfg: SimCfg, pool: Arc<ResidencyPool>) -> SimBackend {
         let injector = FaultInjector::new(cfg.fault_plan.clone());
+        let live_ctx_target = cfg.dims.ctx;
         SimBackend {
             cfg,
             tok: Tokenizer::builtin(),
@@ -226,6 +259,7 @@ impl SimBackend {
             injector,
             apply_override: None,
             retired_stats: TransferStats::default(),
+            live_ctx_target,
         }
     }
 
@@ -397,6 +431,7 @@ impl StepBackend for SimBackend {
                 // the same composite sync the PJRT device-apply backend
                 // runs: tokens + refresh mask ship, kv/ind/conf seed
                 // once then chain as retained outputs
+                r.set_live_ctx(self.live_ctx_target);
                 r.sync_prefill_device(caches, "h", tokens, slots)?;
             } else {
                 r.stage_prefill_tokens(tokens, slots);
@@ -435,6 +470,73 @@ impl StepBackend for SimBackend {
         Ok(())
     }
 
+    fn ctx_tiers(&self) -> Vec<usize> {
+        if self.cfg.ctx_tiers.is_empty() {
+            vec![self.cfg.dims.ctx]
+        } else {
+            self.cfg.ctx_tiers.clone()
+        }
+    }
+
+    fn set_live_ctx(&mut self, rows: usize) {
+        self.live_ctx_target = rows;
+    }
+
+    fn note_early_retire(&mut self, caches: &mut GroupCaches, blocks: u64) {
+        if let Some(r) = self.residents.get_mut(&caches.batch) {
+            r.note_early_retired(blocks);
+        }
+    }
+
+    fn run_prefill_blk(
+        &mut self,
+        tokens: &[i32],
+        slots: &[usize],
+        block_starts: &[usize],
+        block: usize,
+        caches: &mut GroupCaches,
+    ) -> Result<()> {
+        if self.effective_apply() != ApplyMode::Device {
+            // the stateless fallback has no blk variants — same
+            // delegation (and fault cadence) as the PJRT backend
+            return self.run_prefill(tokens, slots, caches);
+        }
+        if !self.cfg.prefill_cost.is_zero() {
+            std::thread::sleep(self.cfg.prefill_cost);
+        }
+        self.activate(caches)?;
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
+            // the blk planner sync: same uplink as a grounding prefill
+            // plus the [B] blk_start vector, but the downlink priced at
+            // `[B, block, V]` — the only rows the unmask decision reads
+            r.set_live_ctx(self.live_ctx_target);
+            r.sync_prefill_device_blk(caches, "h", tokens, slots, block)?;
+        }
+        // the modeled executable run + its downlink, each one fault event
+        // (identical cadence to the full-gen prefill, so fault ordinals
+        // land on the same dispatch either way)
+        if let Err(f) = self.injector.check(FaultKind::Exec) {
+            return Err(self.faulted(caches, f, "prefill_blk run"));
+        }
+        if let Err(f) = self.injector.check(FaultKind::Transfer) {
+            return Err(self.faulted(caches, f, "prefill_blk downlink"));
+        }
+        // host-mirror refresh covers each slot's CURRENT block window
+        // only — the slice the executable downloads. The sampler never
+        // reads outside the window, so the trajectory is identical to a
+        // full-gen refresh (the sim's peaks are position-targeted).
+        for &s in slots {
+            let g0 = block_starts[s];
+            self.write_positions(tokens, s, g0, g0 + block, caches);
+        }
+        {
+            let r = self.residents.get_mut(&caches.batch).expect("activated");
+            r.note_prefill_applied(caches, slots);
+        }
+        Ok(())
+    }
+
     fn run_step(
         &mut self,
         plan: StepPlan,
@@ -464,6 +566,7 @@ impl StepBackend for SimBackend {
                 // the downlink model is per-plan `final_keep`
                 // ([`SimCfg::n_sel`]) so the D2H ledger matches what the
                 // real dual/ES apply executables download.
+                r.set_live_ctx(self.live_ctx_target);
                 let n_sel = SimCfg::n_sel(plan, block);
                 r.sync_step_device(
                     caches, "h", n_layers, n_sel, tokens, block_start, block, slots,
@@ -537,6 +640,7 @@ impl StepBackend for SimBackend {
             // dispatch — the same [`DeviceGroupCaches::sync_step_device_k`]
             // call the PJRT fused path makes, so the two ledgers stay
             // byte-exact on the fused path too
+            r.set_live_ctx(self.live_ctx_target);
             let n_sel = SimCfg::n_sel(StepPlan::EsStep, block);
             r.sync_step_device_k(
                 caches, "h", d.n_layers, n_sel, k, tokens, block_start, block, slots,

@@ -5,7 +5,12 @@
 //! `retained_outputs` chaining signatures with the `alias` (donation)
 //! flags, and the gen-region `logits_gen` output signature, and the
 //! error paths must name the offending executable and field instead of
-//! failing generically.
+//! failing generically. The live-context family is pinned too:
+//! `generation.ctx_tiers` (validated ascending, in range, ending at the
+//! full context), the block-sliced `prefill_apply_blk*` variant with
+//! its `blk_start` input and `[B, block, V]` `logits_blk` downlink, and
+//! a `_ctx*` tier variant whose chained tensors carry the reduced
+//! live-context shapes, resolvable through `ArchSpec::tier_exe_name`.
 
 use std::path::{Path, PathBuf};
 
@@ -112,6 +117,79 @@ fn golden_manifest_parses_device_apply_kinds() {
     assert_eq!(pf.output_index("attn_mass").unwrap(), 6);
     assert_eq!(pf.outputs.len(), 7);
     assert!(pf.output_index("logits").is_err());
+}
+
+#[test]
+fn golden_manifest_parses_live_context_family() {
+    let m = Manifest::load(&golden_dir()).expect("golden manifest parses");
+    assert_eq!(m.generation.ctx_tiers, vec![56, 64, 72, 80]);
+    let a = m.arch("llada-nano").unwrap();
+
+    // the block-sliced grounding prefill: prefill_apply chaining plus a
+    // per-slot [B] blk_start input and a [B, block, V] window downlink
+    let blk = a.exe("prefill_apply_blk8_b8").unwrap();
+    assert_eq!(blk.kind, ExeKind::PrefillApply);
+    assert_eq!(blk.block, Some(8));
+    assert_eq!(blk.inputs.last().unwrap().name, "blk_start");
+    assert_eq!(blk.inputs.last().unwrap().shape, vec![8], "per-slot starts");
+    let lb = blk.output_index("logits_blk").unwrap();
+    assert_eq!(lb, 0);
+    assert_eq!(blk.outputs[lb].shape, vec![8, 8, 64], "[B, block, V]");
+    assert!(blk.output_index("logits_gen").is_err(), "window, not gen slice");
+    // same chain/donation contract as the full-region prefill
+    assert_eq!(blk.retain_flags(), vec![false, true, true, true]);
+    assert_eq!(blk.alias_pairs(1), vec![(1, 2), (2, 3), (3, 4)]);
+
+    // a context-tier variant: kv_len at the tier, gen_live < gen, and
+    // every chained tensor at the reduced live-context shapes
+    let t = a.exe("es_apply_blk8_b8_ctx64").unwrap();
+    assert_eq!(t.kind, ExeKind::StepApply);
+    assert_eq!(t.kv_len, 64);
+    assert_eq!(t.gen_live, Some(16));
+    let kv_in = t.inputs.iter().find(|i| i.name == "kv").unwrap();
+    assert_eq!(kv_in.shape[4], 64, "chained KV covers live rows only");
+    let conf_in = t.inputs.iter().find(|i| i.name == "conf").unwrap();
+    assert_eq!(conf_in.shape, vec![8, 16], "[B, gen_live]");
+    // the untiered sibling stays the full-context executable
+    assert_eq!(a.exe("es_apply_blk8_b8").unwrap().gen_live, None);
+
+    // tier-name resolution: live_ctx below the full context maps the
+    // base name onto the _ctx* variant; at (or past) the full context
+    // the base name IS the tier
+    assert_eq!(a.tier_exe_name("es_apply_blk8_b8", 64), "es_apply_blk8_b8_ctx64");
+    assert_eq!(a.tier_exe_name("es_apply_blk8_b8", 80), "es_apply_blk8_b8");
+    assert!(a.exe(&a.tier_exe_name("es_apply_blk8_b8", 64)).is_ok());
+}
+
+#[test]
+fn bad_ctx_tiers_error_states_the_constraint() {
+    // not strictly ascending
+    let err = load_patched(
+        |src| src.replace("\"ctx_tiers\": [56, 64, 72, 80]",
+                          "\"ctx_tiers\": [64, 56, 72, 80]"),
+        "tiers-order",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("strictly"), "states the ordering rule: {msg}");
+    assert!(msg.contains("ctx_tiers"), "names the field: {msg}");
+
+    // not ending at the full compiled context
+    let err = load_patched(
+        |src| src.replace("\"ctx_tiers\": [56, 64, 72, 80]",
+                          "\"ctx_tiers\": [56, 64, 72]"),
+        "tiers-end",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("full"), "states the last-tier rule: {msg}");
+
+    // a tier at or below the prompt region
+    let err = load_patched(
+        |src| src.replace("\"ctx_tiers\": [56, 64, 72, 80]",
+                          "\"ctx_tiers\": [48, 64, 80]"),
+        "tiers-lo",
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("prompt_len"), "states the range rule: {msg}");
 }
 
 fn load_patched(patch: impl Fn(&str) -> String, subdir: &str) -> anyhow::Error {

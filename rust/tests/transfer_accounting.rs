@@ -300,6 +300,128 @@ fn fused_planner_parity_sim_vs_pjrt_replay() {
     );
 }
 
+/// Tiered sim scheduler at `block`, live-context decoding enabled.
+fn sched_tiered(n_slots: usize, block: usize) -> GroupScheduler<'static> {
+    let base = SimCfg::default();
+    let tiers = SimCfg::default_ctx_tiers(&base.dims);
+    let mut s = sched_with(n_slots, block, base.with_ctx_tiers(&tiers));
+    s.enable_live_ctx(true);
+    s
+}
+
+/// Tiered-planner parity: a live-context scheduler run (block-sliced
+/// grounding prefill + steps dispatched at the live tier + early block
+/// retirement) must produce the identical `TransferStats` ledger as a
+/// manual replay through the planner calls the PJRT tiered path makes —
+/// `set_live_ctx` before each dispatch, `sync_prefill_device_blk` for
+/// the grounding, `sync_step_device` per step, `note_early_retired` at
+/// the EOS-guard retirement. The whole-struct equality extends the
+/// byte-exact sim-vs-PJRT contract to every pruned-tick counter
+/// (`live_row_ticks` / `full_row_ticks` / `flops_units` /
+/// `suffix_blocks_pruned` / `early_retired_blocks`).
+#[test]
+fn tiered_planner_parity_sim_vs_pjrt_replay() {
+    // "abc" at block 4 decodes block 0 in plans [P, E, D, E] and
+    // retires on the EOS guard; the live frontier never leaves the
+    // smallest tier (prompt + 8) and the remaining 7 gen blocks retire
+    // early
+    let mut s = sched_tiered(2, 4);
+    s.admit(input(1, "abc")).unwrap();
+    drain(&mut s);
+    assert_eq!((s.n_prefill, s.n_dual, s.n_es), (1, 1, 2), "plan schedule");
+    assert_eq!(s.tier_switches, 0, "one block of work: no tier motion");
+    let sim_stats = s.transfer_stats();
+    let d = SimCfg::default().dims;
+    let tier = d.prompt_len + 8;
+    let batch = 2u64;
+    assert_eq!(
+        sim_stats.live_row_ticks,
+        4 * batch * tier as u64,
+        "4 dispatches at the smallest tier"
+    );
+    assert_eq!(sim_stats.full_row_ticks, 4 * batch * d.ctx as u64);
+    assert_eq!(
+        sim_stats.suffix_blocks_pruned,
+        3 * ((d.ctx - tier) / 4) as u64,
+        "each of the 3 steps skipped the converged suffix blocks"
+    );
+    assert_eq!(sim_stats.early_retired_blocks, (d.gen_len / 4 - 1) as u64);
+
+    // PJRT planner side: the identical call sequence the tiered
+    // prefill_device_blk_impl / step_device_impl path makes
+    let mut c = GroupCaches::new(&d, 2);
+    let mut r = DeviceGroupCaches::new(&d, 2, ApplyMode::Device);
+    let tokens = vec![0i32; 2 * d.ctx];
+    let slots = [0usize];
+    c.reset_slot(0); // admission
+    r.set_live_ctx(tier);
+    r.sync_prefill_device_blk(&mut c, "h", &tokens, &slots, 4).unwrap();
+    r.note_prefill_applied(&mut c, &slots);
+    for plan in [StepPlan::EsStep, StepPlan::DualStep, StepPlan::EsStep] {
+        let n_sel = SimCfg::n_sel(plan, 4);
+        r.sync_step_device(&mut c, "h", d.n_layers, n_sel, &tokens, d.prompt_len, 4, &slots)
+            .unwrap();
+        r.note_step_applied(&mut c, "h", false, d.prompt_len, 4, &slots);
+    }
+    r.note_early_retired((d.gen_len / 4 - 1) as u64);
+    assert_eq!(
+        r.stats, sim_stats,
+        "tiered planner ledgers must be byte-exact sim vs PJRT"
+    );
+
+    // and the untier run prices strictly more modeled FLOPs for the
+    // same trajectory
+    let mut full = sched(2, 4);
+    full.admit(input(1, "abc")).unwrap();
+    drain(&mut full);
+    let fs = full.transfer_stats();
+    assert!(sim_stats.flops_units < fs.flops_units);
+    assert_eq!(fs.suffix_blocks_pruned, 0);
+    assert_eq!(fs.early_retired_blocks, 0, "ledger-silent with tiering off");
+}
+
+/// Block-sliced grounding prefill downlink: under live-context decoding
+/// every prefill tick downloads exactly each refreshed slot's current
+/// `[B, block, V]` logit window — never the gen-region slice — and the
+/// `blk_start` vector rides up as `B × 4` extra token bytes.
+#[test]
+fn block_sliced_prefill_downloads_one_block_window() {
+    let d = SimCfg::default().dims;
+    let batch = 2u64;
+    let vocab = d.vocab as u64;
+    let window = batch * 4 * vocab * 4;
+    let gen_slice = batch * 8 * vocab * 4; // smallest tier's gen-live slice
+    assert!(window < gen_slice);
+    let mut s = sched_tiered(2, 4);
+    s.admit(input(1, "abcdefgh")).unwrap();
+    let mut prefill_ticks = 0;
+    let mut guard = 0;
+    while s.active() > 0 {
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to drain");
+        let pf_before = s.n_prefill;
+        let before = s.transfer_stats();
+        s.tick().unwrap();
+        let delta = s.transfer_stats().since(&before);
+        if s.n_prefill > pf_before {
+            prefill_ticks += 1;
+            assert_eq!(
+                delta.d2h_bytes_shipped, window,
+                "prefill downlink is the block window, not the gen slice"
+            );
+            // uplink: the refreshed slot's live token rows, the [B]
+            // occupancy mask, and the [B] blk_start vector
+            assert_eq!(
+                delta.token_upload_bytes,
+                s.live_tier().unwrap() as u64 * 4 + batch * 4 + batch * 4
+            );
+        }
+    }
+    assert!(prefill_ticks >= 2, "both blocks grounded through the blk path");
+    // the second block's grounding rode a tier switch
+    assert!(s.tier_switches >= 1);
+}
+
 #[test]
 fn admission_dirties_exactly_one_slot() {
     let mut s = sched(2, 4);
